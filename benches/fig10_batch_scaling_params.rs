@@ -1,0 +1,31 @@
+//! Fig. 10 — initial batch size (a) and batch-size scaling factor β (b).
+//!
+//! Shape to reproduce: starting from b_max gives the fastest early accuracy
+//! (smaller starts pay pure overhead); β variants differ only slightly with
+//! a small edge to larger values.
+
+use heterosparse::config::DataProfile;
+use heterosparse::harness::{experiments, Backend};
+
+fn main() {
+    for profile in [DataProfile::Amazon, DataProfile::Delicious] {
+        let a = experiments::fig10a(profile, Backend::Auto).expect("fig10a failed");
+        // Early accuracy (first third of the run) should favor b0 = b_max.
+        let early = |name: &str| {
+            a.iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, l)| {
+                    let k = (l.rows.len() / 3).max(1);
+                    l.rows[..k].iter().map(|r| r.accuracy).fold(0.0, f64::max)
+                })
+                .unwrap_or(0.0)
+        };
+        let (small, large) = (early("b0=16"), early("b0=128"));
+        println!("\n[{}] early-phase best P@1: b0=16 {:.4} vs b0=128 {:.4}", profile.name(), small, large);
+        if large < small {
+            eprintln!("WARN[{}]: large initial batch should lead early", profile.name());
+        }
+
+        experiments::fig10b(profile, Backend::Auto).expect("fig10b failed");
+    }
+}

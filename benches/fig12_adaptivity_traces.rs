@@ -1,0 +1,27 @@
+//! Fig. 12 — do batch-size scaling (a) and merge perturbation (b) actually
+//! activate during training?
+//!
+//! Shape to reproduce: batch sizes start at b_max, fan out per device speed,
+//! then stabilize; perturbation activates at a very high frequency once the
+//! replicas are regularized.
+
+use heterosparse::config::DataProfile;
+use heterosparse::harness::{experiments, Backend};
+
+fn main() {
+    let log = experiments::fig12(DataProfile::Amazon, Backend::Auto).expect("fig12 failed");
+
+    // (a) batch sizes must have differentiated at some point.
+    let differentiated = log
+        .rows
+        .iter()
+        .any(|r| r.batch_sizes.iter().any(|&b| b != r.batch_sizes[0]));
+    assert!(differentiated, "batch size scaling never activated");
+
+    // (b) perturbation fires frequently.
+    let freq = log.perturbation_frequency();
+    println!("\nbatch scaling activated: {differentiated}; perturbation frequency: {freq:.2}");
+    if freq < 0.5 {
+        eprintln!("WARN: perturbation frequency {freq:.2} lower than the paper's 'very high'");
+    }
+}

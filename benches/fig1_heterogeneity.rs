@@ -1,0 +1,17 @@
+//! Fig. 1 — heterogeneity across devices on an identical batch.
+//!
+//! Paper: up to 32% gap between fastest and slowest of four identical V100s
+//! on the same training batch. The simulated fleet is calibrated to that
+//! gap; this bench verifies the epoch-time spread lands in the same range.
+
+fn main() {
+    let times = heterosparse::harness::experiments::fig1().expect("fig1 failed");
+    let fastest = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let slowest = times.iter().copied().fold(0.0f64, f64::max);
+    let gap = slowest / fastest - 1.0;
+    println!("\nfastest↔slowest gap: {:.1}% (paper: ~32%)", gap * 100.0);
+    assert!(
+        (0.20..0.45).contains(&gap),
+        "heterogeneity gap {gap} outside the paper's observed range"
+    );
+}

@@ -1,0 +1,33 @@
+//! Fig. 7 — statistical efficiency: accuracy vs number of mega-batches.
+//!
+//! Shape to reproduce: Adaptive needs the fewest mega-batches to its best
+//! accuracy; the TF analog completes far fewer mega-batches in equal time
+//! (here visible through its much larger clock per mega-batch).
+
+use heterosparse::config::DataProfile;
+use heterosparse::harness::{experiments, Backend};
+
+fn main() {
+    for profile in [DataProfile::Amazon, DataProfile::Delicious] {
+        let logs = experiments::fig7(profile, Backend::Auto).expect("fig7 failed");
+        // TF-analog hardware inefficiency: clock per mega-batch must exceed
+        // adaptive's (it merges every round + framework overhead).
+        let per_mb = |name: &str| {
+            logs.iter()
+                .find(|(n, _)| n == name)
+                .and_then(|(_, l)| l.rows.last().map(|r| r.clock / l.rows.len() as f64))
+        };
+        if let (Some(sync), Some(adaptive)) = (per_mb("sync-4gpu"), per_mb("adaptive-4gpu")) {
+            println!(
+                "\nclock per mega-batch (4gpu, {}): sync {:.3}s vs adaptive {:.3}s",
+                profile.name(),
+                sync,
+                adaptive
+            );
+            assert!(
+                sync > adaptive,
+                "sync gradient aggregation should cost more clock per mega-batch"
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Fig. 8 — Adaptive SGD scalability (1/2/4 devices) vs the SLIDE CPU
+//! baseline.
+//!
+//! Shape to reproduce: more devices → faster time-to-accuracy and at least
+//! as good accuracy; SLIDE performs many more model updates (superior
+//! statistical efficiency) yet its wall-clock accuracy stays behind the
+//! accelerator runs.
+
+use heterosparse::config::DataProfile;
+use heterosparse::harness::{experiments, Backend};
+
+fn main() {
+    let out = experiments::fig8(DataProfile::Amazon, Backend::Auto).expect("fig8 failed");
+    let target = experiments::common_target(&out.gpu_logs);
+    let tta = |name: &str| {
+        out.gpu_logs
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, l)| l.time_to_accuracy(target))
+    };
+    if let (Some(t1), Some(t4)) = (tta("adaptive-1gpu"), tta("adaptive-4gpu")) {
+        println!("\nTTA 1gpu {t1:.3}s vs 4gpu {t4:.3}s");
+        if t4 > t1 {
+            eprintln!("WARN: 4 devices did not beat 1 device on TTA");
+        }
+    }
+    // SLIDE's statistical efficiency: far more updates than the GPU runs.
+    let gpu_updates: u64 = out
+        .gpu_logs
+        .iter()
+        .find(|(n, _)| n == "adaptive-4gpu")
+        .map(|(_, l)| l.rows.iter().map(|r| r.updates.iter().sum::<u64>()).sum())
+        .unwrap_or(0);
+    println!("SLIDE updates {} vs adaptive-4gpu updates {}", out.slide_updates, gpu_updates);
+    assert!(
+        out.slide_updates > gpu_updates,
+        "SLIDE (per-sample SGD) must perform more model updates"
+    );
+}

@@ -1,0 +1,55 @@
+//! Fig. 9 — effect of the mega-batch size (model-merging frequency).
+//!
+//! Shape to reproduce: merging after only 4 batches (≈ gradient aggregation)
+//! underperforms; 20+ works well; large mega-batches (100) still reach the
+//! best accuracy while merging far less often.
+
+use heterosparse::config::DataProfile;
+use heterosparse::harness::{experiments, Backend};
+use heterosparse::metrics::RunLog;
+
+/// Fraction of total clock spent inside model merges.
+fn merge_overhead(log: &RunLog) -> f64 {
+    let merge: f64 = log.rows.iter().map(|r| r.merge_time).sum();
+    let clock = log.rows.last().map(|r| r.clock).unwrap_or(1.0);
+    merge / clock
+}
+
+fn main() {
+    for profile in [DataProfile::Amazon, DataProfile::Delicious] {
+        let logs = experiments::fig9(profile, Backend::Auto).expect("fig9 failed");
+        let get = |name: &str| logs.iter().find(|(n, _)| n == name).map(|(_, l)| l).unwrap();
+        let (m4, m20, m100) = (get("mega=4"), get("mega=20"), get("mega=100"));
+
+        // Reproduced claim: merging overhead is inversely proportional to the
+        // mega-batch size — frequent merging (≈ gradient aggregation) burns a
+        // large share of the clock at the barrier.
+        let (o4, o20, o100) = (merge_overhead(m4), merge_overhead(m20), merge_overhead(m100));
+        println!(
+            "\n[{}] merge-overhead share of clock: mega=4 {:.1}%, mega=20 {:.1}%, mega=100 {:.1}%",
+            profile.name(),
+            o4 * 100.0,
+            o20 * 100.0,
+            o100 * 100.0
+        );
+        assert!(o4 > o20 && o20 > o100, "merge overhead must fall with mega-batch size");
+
+        // Known deviation (EXPERIMENTS.md): at our reduced scale the
+        // statistical benefit of frequent averaging outweighs the exploration
+        // effect that makes mega=4 lose accuracy in the paper; we report the
+        // accuracies and flag if the paper's ordering is not met.
+        println!(
+            "[{}] best P@1: mega=4 {:.4}, mega=20 {:.4}, mega=100 {:.4}",
+            profile.name(),
+            m4.best_accuracy(),
+            m20.best_accuracy(),
+            m100.best_accuracy()
+        );
+        if m20.best_accuracy().max(m100.best_accuracy()) < m4.best_accuracy() {
+            eprintln!(
+                "WARN[{}]: accuracy ordering deviates from the paper (documented in EXPERIMENTS.md §F9)",
+                profile.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! §Perf — hot-path micro-benchmarks (EXPERIMENTS.md §Perf feeds from here).
+//!
+//! Measures, on the real PJRT path when artifacts exist:
+//!   * per-bucket step latency (upload + execute + download),
+//!   * eval latency,
+//!   * merge arithmetic (weighted all-reduce) across model sizes,
+//!   * batcher assembly,
+//!   * Algorithm 1 + Algorithm 2 overhead (must be negligible vs a step).
+
+use heterosparse::config::{Config, MergeConfig};
+use heterosparse::coordinator::{merge, scaling};
+use heterosparse::data::batcher::Batcher;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::model::ModelState;
+use heterosparse::runtime::{CostModel, Runtime};
+use heterosparse::util::bench::{bench_fn, fmt_ns};
+
+fn main() {
+    let cfg = Config::default();
+    let (train, _) = {
+        let gen = Generator::new(&cfg.model, &cfg.data);
+        (gen.generate(4_000, 1), ())
+    };
+    let mut batcher = Batcher::new(&train, &cfg.model, 1);
+
+    // ---- batcher ----------------------------------------------------------
+    let r = bench_fn("batcher/next_batch(b=128)", 10, 200, || batcher.next_batch(128, 128));
+    println!("{r}");
+
+    // ---- coordinator algorithms -------------------------------------------
+    let mut b = vec![128usize, 96, 72, 48];
+    let mut lrs = vec![0.05f32; 4];
+    let r = bench_fn("alg1/rescale(4 devices)", 10, 1000, || {
+        scaling::rescale(&mut b, &mut lrs, &[12, 10, 9, 8], &cfg.sgd)
+    });
+    println!("{r}");
+
+    let l2s = vec![0.01f64; 4];
+    let r = bench_fn("alg2/compute_weights(4 devices)", 10, 1000, || {
+        merge::compute_weights(&[12, 10, 9, 8], &[128, 96, 72, 48], &l2s, &MergeConfig::default())
+    });
+    println!("{r}");
+
+    // ---- merge arithmetic ---------------------------------------------------
+    let models: Vec<ModelState> = (0..4).map(|i| ModelState::init(&cfg.model, i)).collect();
+    let refs: Vec<&ModelState> = models.iter().collect();
+    let weights = [0.3, 0.3, 0.2, 0.2];
+    let mut out = ModelState::zeros(&cfg.model);
+    let cost = CostModel::default();
+    let params = out.param_count();
+    let r = bench_fn("allreduce/ring-merge(4 models)", 3, 50, || {
+        heterosparse::allreduce::allreduce_merge(
+            &mut out,
+            &refs,
+            &weights,
+            heterosparse::allreduce::Algo::Ring,
+            4,
+            &cost,
+        )
+    });
+    println!("{r}  ({:.1} Mparam/s)", r.throughput(params as f64) / 1e6);
+
+    // ---- PJRT step/eval (needs artifacts) -----------------------------------
+    match Runtime::load(std::path::Path::new(&cfg.runtime.artifacts_dir)) {
+        Ok(rt) if rt.manifest.check_config(&cfg).is_ok() => {
+            let mut model = ModelState::init(&cfg.model, 7);
+            for bucket in [16usize, 64, 128] {
+                let batch = batcher.next_batch(bucket, bucket);
+                // Warm compile + caches.
+                rt.step(&mut model, &batch, 0.01).unwrap();
+                let r = bench_fn(&format!("pjrt/step(b={bucket})"), 3, 30, || {
+                    rt.step(&mut model, &batch, 0.01).unwrap()
+                });
+                println!(
+                    "{r}  ({:.1} ksamples/s)",
+                    r.throughput(bucket as f64) / 1e3
+                );
+            }
+            let eval_b = rt.manifest.eval_batch;
+            let test = Generator::new(&cfg.model, &cfg.data).generate(eval_b, 2);
+            let eb = heterosparse::data::batcher::EvalBatches::new(&test, &cfg.model, eval_b);
+            rt.eval(&model, &eb.batches[0]).unwrap();
+            let r = bench_fn(&format!("pjrt/eval(b={eval_b})"), 3, 30, || {
+                rt.eval(&model, &eb.batches[0]).unwrap()
+            });
+            println!("{r}");
+            println!(
+                "\ncumulative PJRT exec time {} over {} calls",
+                fmt_ns(rt.exec_time.borrow().as_nanos() as f64),
+                rt.exec_count.borrow()
+            );
+        }
+        _ => println!("\n(pjrt step/eval skipped: artifacts missing or mismatched — run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,65 @@
+//! Distributed-setting extension (paper §3: "the proposed algorithm can be
+//! also applied in a distributed environment as long as training batches
+//! are dynamically scheduled across computing nodes").
+//!
+//! We simulate moving the 4-device fleet from one server (NVLink/PCIe-class
+//! interconnect) to a cluster (network-class interconnect) by scaling the
+//! all-reduce transfer cost, and sweep the mega-batch size. The expectation
+//! from the paper's own analysis (§2.3: in a distributed PS the model
+//! traffic must be amortized with elastic averaging) is that the optimal
+//! merging frequency *drops* as the interconnect slows: on a single server
+//! mega=20 is fine, over a network large mega-batches win because every
+//! merge costs hundreds of ms.
+
+use heterosparse::config::{Config, DataProfile, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Engine, Trainer, TrainerOptions};
+use heterosparse::harness::{bench_config, make_data};
+use heterosparse::runtime::{CostModel, SimDevice};
+use heterosparse::util::bench::Table;
+
+fn run(cfg: &Config, xfer_scale: f64) -> anyhow::Result<(f64, f64, f64)> {
+    let (train, test) = make_data(cfg);
+    let backend = RefBackend;
+    let mut cost = CostModel::default();
+    cost.t_per_param_xfer *= xfer_scale;
+    cost.t_merge_fixed *= xfer_scale.sqrt(); // latency grows slower than bw shrinks
+    let engine = Engine::Sim(SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), cost));
+    let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+    let log = trainer.run(&train, &test)?;
+    let merge_total: f64 = log.rows.iter().map(|r| r.merge_time).sum();
+    let clock = log.rows.last().map(|r| r.clock).unwrap_or(0.0);
+    Ok((log.best_accuracy(), clock, merge_total / clock.max(1e-9)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "interconnect",
+        "mega-batch",
+        "best P@1",
+        "clock (s)",
+        "merge share",
+    ]);
+    for (label, scale) in [("single-server (1x)", 1.0), ("rack network (30x)", 30.0), ("WAN-ish (300x)", 300.0)] {
+        for mega in [4usize, 20, 100] {
+            let mut cfg = bench_config(DataProfile::Amazon, 4, Strategy::Adaptive);
+            cfg.sgd.mega_batches = mega;
+            cfg.sgd.num_mega_batches = (240 / mega).max(2);
+            let (acc, clock, share) = run(&cfg, scale)?;
+            table.row(&[
+                label.to_string(),
+                format!("{mega}"),
+                format!("{acc:.4}"),
+                format!("{clock:.2}"),
+                format!("{:.1}%", share * 100.0),
+            ]);
+        }
+    }
+    table.print("Adaptive SGD beyond one server: merging frequency vs interconnect cost");
+    println!(
+        "\n(The optimal mega-batch size grows with interconnect cost — the paper's\n\
+         premise for why distributed deployments must amortize model traffic.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Heterogeneity sweep: how much does Adaptive SGD buy as the device fleet
+//! gets more skewed? (The workload the paper's introduction motivates.)
+//!
+//! Sweeps the fastest↔slowest speed gap from 0% to 60% and compares
+//! Adaptive vs Elastic time-to-accuracy on each fleet. Expectation: the two
+//! coincide on a homogeneous fleet and Adaptive pulls ahead as skew grows.
+
+use heterosparse::config::{Config, Strategy};
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::util::bench::Table;
+
+fn config(gap: f64, strategy: Strategy) -> Config {
+    let mut cfg = Config::default();
+    cfg.data.train_samples = 10_000;
+    cfg.data.test_samples = 1_200;
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 10;
+    cfg.devices.count = 4;
+    cfg.devices.speed_factors = (0..4).map(|i| 1.0 + gap * i as f64 / 3.0).collect();
+    cfg.strategy.kind = strategy;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "speed gap",
+        "adaptive best P@1",
+        "elastic best P@1",
+        "adaptive clock (s)",
+        "elastic clock (s)",
+        "clock ratio",
+    ]);
+    for gap in [0.0, 0.15, 0.32, 0.60] {
+        let a = run_single(&config(gap, Strategy::Adaptive), Backend::Auto, TrainerOptions::default())?;
+        let e = run_single(&config(gap, Strategy::Elastic), Backend::Auto, TrainerOptions::default())?;
+        let a_clock = a.rows.last().unwrap().clock;
+        let e_clock = e.rows.last().unwrap().clock;
+        table.row(&[
+            format!("{:.0}%", gap * 100.0),
+            format!("{:.4}", a.best_accuracy()),
+            format!("{:.4}", e.best_accuracy()),
+            format!("{a_clock:.2}"),
+            format!("{e_clock:.2}"),
+            format!("{:.2}x", e_clock / a_clock),
+        ]);
+    }
+    table.print("Adaptive vs Elastic under increasing heterogeneity (same sample budget)");
+    println!("\n(clock ratio > 1 means Elastic burned more time on the same budget — straggler cost)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Ablation of Algorithm 2's design choices (DESIGN.md calls these out):
+//! perturbation on/off, momentum on/off, batch scaling on/off — all on the
+//! same 4-device heterogeneous fleet and sample budget.
+
+use heterosparse::config::Config;
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::util::bench::Table;
+
+fn base() -> Config {
+    let mut cfg = Config::default();
+    cfg.data.train_samples = 10_000;
+    cfg.data.test_samples = 1_200;
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 12;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let variants: Vec<(&str, Config)> = vec![
+        ("full adaptive", base()),
+        ("no perturbation", {
+            let mut c = base();
+            c.merge.perturbation = false;
+            c
+        }),
+        ("no momentum", {
+            let mut c = base();
+            c.merge.momentum = 0.0;
+            c
+        }),
+        ("no batch scaling", {
+            let mut c = base();
+            c.strategy.batch_scaling = false;
+            c
+        }),
+        ("no scaling, no pert", {
+            let mut c = base();
+            c.strategy.batch_scaling = false;
+            c.merge.perturbation = false;
+            c
+        }),
+    ];
+
+    let mut table = Table::new(&["variant", "best P@1", "final P@1", "clock (s)", "pert freq"]);
+    for (name, cfg) in variants {
+        let log = run_single(&cfg, Backend::Auto, TrainerOptions::default())?;
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            format!("{:.2}", log.rows.last().unwrap().clock),
+            format!("{:.2}", log.perturbation_frequency()),
+        ]);
+    }
+    table.print("Algorithm 1 + 2 ablation (adaptive SGD components)");
+    Ok(())
+}

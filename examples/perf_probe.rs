@@ -1,0 +1,46 @@
+//! §Perf breakdown probe (EXPERIMENTS.md §Perf): isolates literal-creation
+//! cost from PJRT execute cost on the step hot path. Requires `make
+//! artifacts`. The `vec1+reshape` row is kept as the before-measurement of
+//! optimization #1.
+
+use heterosparse::config::Config;
+use heterosparse::data::batcher::Batcher;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::model::ModelState;
+use heterosparse::runtime::Runtime;
+use std::time::Instant;
+
+fn main() {
+    let cfg = Config::default();
+    let rt = Runtime::load(std::path::Path::new("artifacts")).unwrap();
+    let train = Generator::new(&cfg.model, &cfg.data).generate(2000, 1);
+    let mut b = Batcher::new(&train, &cfg.model, 1);
+    let batch = b.next_batch(128, 128);
+    let mut m = ModelState::init(&cfg.model, 7);
+    rt.step(&mut m, &batch, 0.01).unwrap();
+
+    // Breakdown: literal creation cost
+    let t0 = Instant::now();
+    let n = 200;
+    for _ in 0..n {
+        let l = xla::Literal::vec1(&m.w1).reshape(&[8192, 64]).unwrap();
+        std::hint::black_box(l);
+    }
+    println!("w1 literal vec1+reshape: {:.3} ms", t0.elapsed().as_secs_f64()*1e3/n as f64);
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let l = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32, &[8192, 64],
+            unsafe { std::slice::from_raw_parts(m.w1.as_ptr() as *const u8, m.w1.len()*4) }).unwrap();
+        std::hint::black_box(l);
+    }
+    println!("w1 literal untyped_data:  {:.3} ms", t0.elapsed().as_secs_f64()*1e3/n as f64);
+
+    // Full step timing
+    let t0 = Instant::now();
+    for _ in 0..n { rt.step(&mut m, &batch, 0.01).unwrap(); }
+    let full = t0.elapsed().as_secs_f64()*1e3/n as f64;
+    println!("full step:               {:.3} ms (exec {:.3} ms)", full,
+        rt.exec_time.borrow().as_secs_f64()*1e3 / *rt.exec_count.borrow() as f64);
+}

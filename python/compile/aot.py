@@ -1,0 +1,163 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+HLO text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO text — NOT ``.serialize()`` — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids),
+while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Adaptive batch sizes vs static AOT shapes: Algorithm 1's batch sizes are
+quantized to the grid {b_min, b_min+beta, ..., b_max} and one step executable
+is emitted per grid point ("bucket"). Partial batches are padded up to the
+nearest bucket with smask=0 rows. manifest.json records dims, buckets and
+file names; the Rust runtime validates its config against it.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--features F ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def bucket_grid(b_min: int, b_max: int, beta: int) -> list[int]:
+    """The batch-size grid Algorithm 1 quantizes to."""
+    assert b_min >= 1 and b_max >= b_min and beta >= 1
+    assert (b_max - b_min) % beta == 0, "b_max - b_min must be a multiple of beta"
+    return list(range(b_min, b_max + 1, beta))
+
+
+def lower_step(dims: dict, batch: int):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    F, H, C = dims["features"], dims["hidden"], dims["classes"]
+    K, L = dims["max_nnz"], dims["max_labels"]
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.sgd_step).lower(
+        spec((F, H), f32),   # w1
+        spec((H,), f32),     # b1
+        spec((H, C), f32),   # w2
+        spec((C,), f32),     # b2
+        spec((batch, K), i32),  # idx
+        spec((batch, K), f32),  # val
+        spec((batch, L), i32),  # lab
+        spec((batch, L), f32),  # lab_w
+        spec((batch,), f32),    # smask
+        spec((), f32),          # lr
+    )
+
+
+def lower_eval(dims: dict, batch: int):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    F, H, C = dims["features"], dims["hidden"], dims["classes"]
+    K = dims["max_nnz"]
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.eval_batch).lower(
+        spec((F, H), f32),
+        spec((H,), f32),
+        spec((H, C), f32),
+        spec((C,), f32),
+        spec((batch, K), i32),
+        spec((batch, K), f32),
+    )
+
+
+def build(args: argparse.Namespace) -> dict:
+    dims = {
+        "features": args.features,
+        "hidden": args.hidden,
+        "classes": args.classes,
+        "max_nnz": args.max_nnz,
+        "max_labels": args.max_labels,
+    }
+    buckets = bucket_grid(args.b_min, args.b_max, args.beta)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    files: dict = {"step": {}, "eval": "eval.hlo.txt"}
+    for b in buckets:
+        name = f"step_b{b}.hlo.txt"
+        text = to_hlo_text(lower_step(dims, b))
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        files["step"][str(b)] = name
+        print(f"  step bucket b={b:<5d} -> {name} ({len(text)} chars)", flush=True)
+
+    text = to_hlo_text(lower_eval(dims, args.eval_batch))
+    with open(os.path.join(args.out_dir, files["eval"]), "w") as f:
+        f.write(text)
+    print(f"  eval batch  b={args.eval_batch:<5d} -> {files['eval']} ({len(text)} chars)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "dims": dims,
+        "buckets": buckets,
+        "b_min": args.b_min,
+        "b_max": args.b_max,
+        "beta": args.beta,
+        "eval_batch": args.eval_batch,
+        "files": files,
+        # Step executable I/O contract, in order. The Rust runtime asserts
+        # this layout at load time.
+        "step_inputs": ["w1", "b1", "w2", "b2", "idx", "val", "lab", "lab_w", "smask", "lr"],
+        "step_outputs": ["w1", "b1", "w2", "b2", "loss"],
+        "eval_inputs": ["w1", "b1", "w2", "b2", "idx", "val"],
+        "eval_outputs": ["preds"],
+        "jax_version": jax.__version__,
+    }
+    manifest["config_hash"] = hashlib.sha256(
+        json.dumps({k: manifest[k] for k in ("dims", "buckets", "eval_batch")}, sort_keys=True).encode()
+    ).hexdigest()[:16]
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    # Default ("small") profile — must match rust/src/config defaults.
+    p.add_argument("--features", type=int, default=8192)
+    p.add_argument("--hidden", type=int, default=64)
+    p.add_argument("--classes", type=int, default=1024)
+    p.add_argument("--max-nnz", type=int, default=32)
+    p.add_argument("--max-labels", type=int, default=8)
+    p.add_argument("--b-min", type=int, default=16)
+    p.add_argument("--b-max", type=int, default=128)
+    p.add_argument("--beta", type=int, default=8)
+    p.add_argument("--eval-batch", type=int, default=256)
+    return p
+
+
+def main(argv=None) -> None:
+    args = parser().parse_args(argv)
+    print(f"[aot] lowering model to {args.out_dir} (jax {jax.__version__})")
+    manifest = build(args)
+    print(f"[aot] wrote manifest config_hash={manifest['config_hash']} "
+          f"buckets={len(manifest['buckets'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis sweeps in ``python/tests/``). They are also the executable
+specification of the math the Rust reference MLP (``rust/src/model/reference.rs``)
+must match at f32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_embed_ref(idx: jnp.ndarray, val: jnp.ndarray, w1: jnp.ndarray) -> jnp.ndarray:
+    """Sparse gather-SpMM: ``out[i] = sum_k val[i,k] * w1[idx[i,k], :]``.
+
+    Args:
+      idx: int32[B, K] padded per-sample feature indices (pad rows -> index 0).
+      val: f32[B, K] feature values; padding entries MUST be 0.0 so they
+        contribute nothing regardless of the pad index.
+      w1:  f32[F, H] input embedding / first-layer weight matrix.
+
+    Returns:
+      f32[B, H] — the sparse input-layer pre-activation (before bias).
+    """
+    rows = w1[idx]  # (B, K, H)
+    return jnp.einsum("bk,bkh->bh", val, rows)
+
+
+def logsumexp_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable row-wise logsumexp over the class dimension.
+
+    Args:
+      logits: f32[B, C].
+    Returns:
+      f32[B] — ``log(sum_c exp(logits[b, c]))``.
+    """
+    m = jnp.max(logits, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))

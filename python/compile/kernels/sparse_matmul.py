@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: sparse gather-SpMM for the MLP input layer.
+
+The paper's hot spot is the sparse input layer computed with cuSPARSE SpMM on
+V100s. On TPU-shaped Pallas the same insight — the input layer is *gather
+bound*, not FLOP bound — maps to: one grid program per batch tile, the padded
+(index, value) lists resident in VMEM, rows of W1 streamed from HBM with
+scalar dynamic slices, and a VMEM accumulator tile. ``interpret=True`` is
+mandatory here: it lowers the kernel to plain HLO ops the CPU PJRT client can
+run (real TPU lowering emits a Mosaic custom-call). See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sparse_embed_kernel(idx_ref, val_ref, w1_ref, out_ref, *, max_nnz: int):
+    """One grid program computes the input-layer activation for one sample.
+
+    idx_ref: int32[1, K] VMEM — padded feature indices for this sample.
+    val_ref: f32[1, K]  VMEM — matching values (0.0 on padding).
+    w1_ref:  f32[F, H]       — full first-layer weights (streamed by row).
+    out_ref: f32[1, H]  VMEM — accumulator / output tile.
+    """
+    hidden = out_ref.shape[1]
+
+    def body(k, acc):
+        i = idx_ref[0, k]
+        v = val_ref[0, k]
+        # Dynamic single-row gather: the HBM->VMEM stream. On real TPU this
+        # is the analogue of the paper's coalesced row loads.
+        row = w1_ref[pl.dslice(i, 1), :]  # (1, H)
+        return acc + v * row.reshape((hidden,))
+
+    acc = jax.lax.fori_loop(0, max_nnz, body, jnp.zeros((hidden,), jnp.float32))
+    out_ref[0, :] = acc
+
+
+def sparse_embed(idx: jnp.ndarray, val: jnp.ndarray, w1: jnp.ndarray) -> jnp.ndarray:
+    """Pallas sparse gather-SpMM: ``out[i] = sum_k val[i,k] * w1[idx[i,k], :]``.
+
+    Shapes: idx int32[B, K], val f32[B, K], w1 f32[F, H] -> f32[B, H].
+    Matches ``ref.sparse_embed_ref`` (tested in python/tests/test_kernels.py).
+    """
+    batch, max_nnz = idx.shape
+    features, hidden = w1.shape
+    kernel = functools.partial(_sparse_embed_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, max_nnz), lambda b: (b, 0)),
+            pl.BlockSpec((1, max_nnz), lambda b: (b, 0)),
+            # W1 is not blocked: every program may touch any row. interpret
+            # mode holds it in host memory; the TPU schedule would pin it in
+            # HBM (memory_space=ANY) and rely on the row gathers above.
+            pl.BlockSpec((features, hidden), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hidden), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        interpret=True,
+    )(idx, val, w1)

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: tiled online-softmax logsumexp over the class dim.
+
+The output layer of the XML MLP spans up to hundreds of thousands of classes;
+the paper fuses the softmax/cross-entropy element-wise kernels to avoid
+materializing intermediates (HeteroGPU "kernel fusion"). The TPU-shaped
+equivalent is a single-pass *online softmax*: the class dimension is tiled
+into VMEM-sized blocks and a running (max, scaled-sum) pair is carried across
+tiles, so the full logits row never needs to be resident more than one tile
+at a time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logsumexp_kernel(logits_ref, out_ref, *, classes: int, tile: int):
+    """Row-block online logsumexp.
+
+    logits_ref: f32[Bt, C] — logits for a tile of samples.
+    out_ref:    f32[Bt]    — per-sample logsumexp.
+    """
+    bt = logits_ref.shape[0]
+    n_tiles = classes // tile
+
+    def body(j, carry):
+        m, s = carry  # running max (Bt,), running sum of exp(x - m) (Bt,)
+        blk = logits_ref[:, pl.dslice(j * tile, tile)]  # (Bt, tile)
+        bm = jnp.max(blk, axis=1)
+        new_m = jnp.maximum(m, bm)
+        # Rescale the old sum to the new max, then add this tile's mass.
+        s = s * jnp.exp(m - new_m) + jnp.sum(jnp.exp(blk - new_m[:, None]), axis=1)
+        return new_m, s
+
+    init = (jnp.full((bt,), -jnp.inf, jnp.float32), jnp.zeros((bt,), jnp.float32))
+    m, s = jax.lax.fori_loop(0, n_tiles, body, init)
+    out_ref[...] = m + jnp.log(s)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def tiled_logsumexp(logits: jnp.ndarray, *, class_tile: int = 512, batch_tile: int = 8) -> jnp.ndarray:
+    """Pallas online-softmax logsumexp: f32[B, C] -> f32[B].
+
+    ``class_tile``/``batch_tile`` are upper bounds; they are snapped down to
+    the largest divisor of C/B so any shape is accepted. Matches
+    ``ref.logsumexp_ref``.
+    """
+    batch, classes = logits.shape
+    class_tile = _largest_divisor_leq(classes, class_tile)
+    batch_tile = _largest_divisor_leq(batch, batch_tile)
+    kernel = functools.partial(_logsumexp_kernel, classes=classes, tile=class_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // batch_tile,),
+        in_specs=[pl.BlockSpec((batch_tile, classes), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((batch_tile,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(logits)

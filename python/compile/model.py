@@ -1,0 +1,106 @@
+"""Layer-2: the paper's model — a 3-layer sparse MLP for XML classification.
+
+This is the SLIDE testbed architecture the paper trains (Section 5.1):
+sparse input features -> H-unit ReLU hidden layer -> C-way softmax with
+multi-label cross-entropy. The forward pass calls the Layer-1 Pallas kernels
+(``kernels.sparse_matmul.sparse_embed`` and ``kernels.xent.tiled_logsumexp``);
+the backward pass is written out *manually* so that
+
+  1. the exact same math is mirrored in the Rust reference implementation
+     (``rust/src/model/reference.rs``) used to cross-check the AOT artifacts,
+  2. the W1 update stays *sparse*: the gradient only touches the rows gathered
+     in the forward pass, so the SGD update is a scatter-add rather than a
+     dense (F, H) materialization — the same optimization the paper gets from
+     cuSPARSE.
+
+Batch encoding (all shapes static; see DESIGN.md on batch-size buckets):
+  idx    int32[B, K]  padded per-sample feature indices (pad -> 0)
+  val    f32[B, K]    feature values, 0.0 on padding
+  lab    int32[B, L]  padded per-sample label indices (pad -> 0)
+  lab_w  f32[B, L]    label weights, sum to 1 per valid sample, 0.0 on padding
+  smask  f32[B]       1.0 for real samples, 0.0 for bucket padding
+Multi-hot labels are normalized (y / |y|) exactly as in SLIDE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sparse_matmul import sparse_embed
+from .kernels.xent import tiled_logsumexp
+
+
+def forward(w1, b1, w2, b2, idx, val):
+    """Forward pass to logits. Returns (pre_act, hidden, logits)."""
+    a = sparse_embed(idx, val, w1) + b1[None, :]  # (B, H) Pallas gather-SpMM
+    h = jax.nn.relu(a)
+    logits = h @ w2 + b2[None, :]  # (B, C) — the MXU-shaped dense layer
+    return a, h, logits
+
+
+def loss_from_logits(logits, lab, lab_w, smask):
+    """Mean multi-label softmax cross-entropy over valid samples.
+
+    loss_i = logsumexp(logits_i) - sum_l lab_w[i,l] * logits[i, lab[i,l]]
+    """
+    lse = tiled_logsumexp(logits)  # (B,) Pallas online softmax
+    picked = jnp.take_along_axis(logits, lab, axis=1)  # (B, L)
+    pos = jnp.sum(lab_w * picked, axis=1)  # (B,)
+    per_sample = lse - pos
+    denom = jnp.maximum(jnp.sum(smask), 1.0)
+    return jnp.sum(smask * per_sample) / denom, lse
+
+
+def sgd_step(w1, b1, w2, b2, idx, val, lab, lab_w, smask, lr):
+    """One SGD step: returns (w1', b1', w2', b2', loss).
+
+    Manual backprop (see module docstring). The W1 update is a sparse
+    scatter-add over only the gathered rows.
+    """
+    w1, b1, w2, b2 = map(jnp.asarray, (w1, b1, w2, b2))
+    idx, val, lab, lab_w, smask = map(jnp.asarray, (idx, val, lab, lab_w, smask))
+    batch = idx.shape[0]
+
+    a, h, logits = forward(w1, b1, w2, b2, idx, val)
+    loss, lse = loss_from_logits(logits, lab, lab_w, smask)
+
+    denom = jnp.maximum(jnp.sum(smask), 1.0)
+    scale = (smask / denom)[:, None]  # (B, 1)
+
+    # dL/dlogits = (softmax(logits) - y) * smask / n, with y the normalized
+    # multi-hot label distribution — applied sparsely at the label positions.
+    probs = jnp.exp(logits - lse[:, None])  # (B, C)
+    dlogits = probs * scale
+    rows = jnp.repeat(jnp.arange(batch)[:, None], lab.shape[1], axis=1)  # (B, L)
+    dlogits = dlogits.at[rows, lab].add(-lab_w * scale)
+
+    # Output layer.
+    dw2 = h.T @ dlogits  # (H, C)
+    db2 = jnp.sum(dlogits, axis=0)  # (C,)
+    dh = dlogits @ w2.T  # (B, H)
+
+    # Hidden layer (ReLU).
+    da = dh * (a > 0.0)  # (B, H)
+    db1 = jnp.sum(da, axis=0)  # (H,)
+
+    # Sparse input layer: dW1[idx[i,k]] += val[i,k] * da[i]; fold the SGD
+    # update into a single scatter so no dense (F, H) gradient exists.
+    flat_idx = idx.reshape(-1)  # (B*K,)
+    contrib = (val[:, :, None] * da[:, None, :]).reshape(-1, da.shape[1])  # (B*K, H)
+    new_w1 = w1.at[flat_idx].add(-lr * contrib)
+
+    new_b1 = b1 - lr * db1
+    new_w2 = w2 - lr * dw2
+    new_b2 = b2 - lr * db2
+    return new_w1, new_b1, new_w2, new_b2, loss
+
+
+def eval_batch(w1, b1, w2, b2, idx, val):
+    """Inference for test-set evaluation: top-1 class per sample.
+
+    Returns int32[B] predicted class ids; the Rust side checks membership in
+    each sample's label set (P@1, the paper's top-1 accuracy).
+    """
+    _, _, logits = forward(w1, b1, w2, b2, idx, val)
+    return jnp.argmax(logits, axis=1).astype(jnp.int32)

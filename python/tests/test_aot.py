@@ -1,0 +1,58 @@
+"""AOT pipeline tests: bucket grid, HLO-text lowering, manifest round-trip."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_bucket_grid_default_paper_geometry():
+    # Paper: b_min = b_max/8, beta = b_min/2 -> 15 grid points.
+    grid = aot.bucket_grid(16, 128, 8)
+    assert grid[0] == 16 and grid[-1] == 128 and len(grid) == 15
+    assert all(b - a == 8 for a, b in zip(grid, grid[1:]))
+
+
+def test_bucket_grid_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        aot.bucket_grid(16, 100, 8)
+
+
+SMALL = dict(features=256, hidden=16, classes=64, max_nnz=8, max_labels=4)
+
+
+def test_step_lowering_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_step(SMALL, 8))
+    assert text.startswith("HloModule"), text[:80]
+    # Tuple-return convention the Rust loader depends on.
+    assert "ROOT" in text
+
+
+def test_eval_lowering_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_eval(SMALL, 16))
+    assert text.startswith("HloModule")
+
+
+def test_build_writes_consistent_manifest(tmp_path):
+    args = aot.parser().parse_args(
+        [
+            "--out-dir", str(tmp_path),
+            "--features", "256", "--hidden", "16", "--classes", "64",
+            "--max-nnz", "8", "--max-labels", "4",
+            "--b-min", "8", "--b-max", "16", "--beta", "8",
+            "--eval-batch", "16",
+        ]
+    )
+    manifest = aot.build(args)
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["config_hash"] == manifest["config_hash"]
+    assert on_disk["buckets"] == [8, 16]
+    assert on_disk["step_inputs"][0] == "w1" and on_disk["step_inputs"][-1] == "lr"
+    for name in on_disk["files"]["step"].values():
+        assert (tmp_path / name).exists()
+    assert (tmp_path / on_disk["files"]["eval"]).exists()
+    # Every HLO file parses as text-format HLO (spot check header).
+    for f in tmp_path.glob("*.hlo.txt"):
+        assert f.read_text().startswith("HloModule")

@@ -1,0 +1,310 @@
+//! Command-line interface (in-tree arg parsing; clap is unavailable
+//! offline). Subcommands:
+//!
+//! ```text
+//! heterosparse train       [--config FILE] [--set k=v]... [--out DIR] [--verbose]
+//! heterosparse gen-data    --out FILE [--set k=v]...
+//! heterosparse experiment  NAME [--profile amazon|delicious] [--backend auto|pjrt|ref]
+//! heterosparse calibrate   [--set k=v]...
+//! heterosparse info        [--set k=v]...
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::config::{Config, DataProfile};
+use crate::coordinator::trainer::TrainerOptions;
+use crate::harness::{self, experiments, Backend};
+use crate::Result;
+
+pub fn main_with_args(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "experiment" => cmd_experiment(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'heterosparse help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "heterosparse — adaptive elastic SGD for sparse deep learning on \
+         heterogeneous multi-accelerator servers\n\n\
+         USAGE:\n  heterosparse <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n\
+         \x20 train        run one training session (strategy from config)\n\
+         \x20 gen-data     write a synthetic XML dataset in libSVM format\n\
+         \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
+         \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12)\n\
+         \x20 calibrate    fit the cost model against live PJRT measurements\n\
+         \x20 info         print resolved config + artifact status\n\n\
+         OPTIONS:\n\
+         \x20 --config FILE      TOML config file\n\
+         \x20 --set key=value    override any config key (repeatable)\n\
+         \x20 --out PATH         output file/directory\n\
+         \x20 --backend KIND     auto | pjrt | ref\n\
+         \x20 --profile NAME     amazon | delicious\n\
+         \x20 --checkpoint PATH  save the global model after every mega-batch\n\
+         \x20 --resume PATH      initialize from a saved checkpoint\n\
+         \x20 --verbose          progress output"
+    );
+}
+
+/// Shared flag parsing: returns (config, out, backend, profile, verbose).
+struct Parsed {
+    cfg: Config,
+    out: Option<PathBuf>,
+    backend: Backend,
+    profile: DataProfile,
+    verbose: bool,
+    checkpoint: Option<PathBuf>,
+    resume: Option<PathBuf>,
+    positional: Vec<String>,
+}
+
+fn parse_flags(args: &[String]) -> Result<Parsed> {
+    let mut config_path: Option<PathBuf> = None;
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    let mut out = None;
+    let mut backend = Backend::Auto;
+    let mut profile = DataProfile::Amazon;
+    let mut verbose = false;
+    let mut checkpoint = None;
+    let mut resume = None;
+    let mut positional = Vec::new();
+
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--config" => {
+                config_path =
+                    Some(PathBuf::from(it.next().context("--config needs a value")?))
+            }
+            "--set" => {
+                let kv = it.next().context("--set needs key=value")?;
+                let (k, v) = kv.split_once('=').context("--set expects key=value")?;
+                overrides.push((k.to_string(), v.to_string()));
+            }
+            "--out" => out = Some(PathBuf::from(it.next().context("--out needs a value")?)),
+            "--backend" => {
+                backend = match it.next().context("--backend needs a value")?.as_str() {
+                    "auto" => Backend::Auto,
+                    "pjrt" => Backend::Pjrt,
+                    "ref" | "reference" => Backend::Reference,
+                    other => bail!("unknown backend '{other}'"),
+                }
+            }
+            "--profile" => {
+                profile = DataProfile::parse(it.next().context("--profile needs a value")?)?
+            }
+            "--checkpoint" => {
+                checkpoint = Some(PathBuf::from(it.next().context("--checkpoint needs a value")?))
+            }
+            "--resume" => {
+                resume = Some(PathBuf::from(it.next().context("--resume needs a value")?))
+            }
+            "--verbose" | "-v" => verbose = true,
+            other if other.starts_with("--") => bail!("unknown flag '{other}'"),
+            other => positional.push(other.to_string()),
+        }
+    }
+    let cfg = match config_path {
+        Some(p) => Config::load(&p, &overrides)?,
+        None => Config::from_overrides(&overrides)?,
+    };
+    Ok(Parsed { cfg, out, backend, profile, verbose, checkpoint, resume, positional })
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let init_model = match &p.resume {
+        Some(path) => Some(crate::model::checkpoint::load(path)?),
+        None => None,
+    };
+    let opts = TrainerOptions {
+        verbose: p.verbose,
+        checkpoint: p.checkpoint.clone(),
+        init_model,
+        ..Default::default()
+    };
+    println!(
+        "training: strategy={} devices={} mode={:?} model={}param",
+        p.cfg.strategy.kind.name(),
+        p.cfg.devices.count,
+        p.cfg.runtime.mode,
+        p.cfg.model.param_count()
+    );
+    let log = harness::run_single(&p.cfg, p.backend, opts)?;
+    println!(
+        "done: {} mega-batches, best P@1 {:.4}, final clock {:.2}s",
+        log.rows.len(),
+        log.best_accuracy(),
+        log.rows.last().map(|r| r.clock).unwrap_or(0.0)
+    );
+    if let Some(out) = p.out {
+        std::fs::create_dir_all(&out)?;
+        log.write_csv(&out.join(format!("{}.csv", log.name)))?;
+        log.write_json(&out.join(format!("{}.json", log.name)))?;
+        println!("wrote {}/{}.csv", out.display(), log.name);
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let out = p.out.context("gen-data requires --out FILE")?;
+    let (train, test) = harness::make_data(&p.cfg);
+    crate::data::libsvm::write(&out, &train)?;
+    let test_path = out.with_extension("test.txt");
+    crate::data::libsvm::write(&test_path, &test)?;
+    println!(
+        "wrote {} ({} samples, avg nnz {:.1}) and {} ({} samples)",
+        out.display(),
+        train.len(),
+        train.avg_nnz(),
+        test_path.display(),
+        test.len()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let name = p.positional.first().context(
+        "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a fig11b fig12",
+    )?;
+    match name.as_str() {
+        "table1" => {
+            experiments::table1()?;
+        }
+        "fig1" => {
+            experiments::fig1()?;
+        }
+        "fig6" => {
+            experiments::fig6(p.profile, p.backend)?;
+        }
+        "fig7" => {
+            experiments::fig7(p.profile, p.backend)?;
+        }
+        "fig8" => {
+            experiments::fig8(p.profile, p.backend)?;
+        }
+        "fig9" => {
+            experiments::fig9(p.profile, p.backend)?;
+        }
+        "fig10a" => {
+            experiments::fig10a(p.profile, p.backend)?;
+        }
+        "fig10b" => {
+            experiments::fig10b(p.profile, p.backend)?;
+        }
+        "fig11a" => {
+            experiments::fig11a(p.profile, p.backend)?;
+        }
+        "fig11b" => {
+            experiments::fig11b(p.profile, p.backend)?;
+        }
+        "fig12" => {
+            experiments::fig12(p.profile, p.backend)?;
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let dir = Path::new(&p.cfg.runtime.artifacts_dir);
+    let runtime = crate::runtime::Runtime::load(dir)?;
+    runtime.manifest.check_config(&p.cfg)?;
+    let buckets = p.cfg.bucket_grid();
+    let probe: Vec<usize> = vec![buckets[0], buckets[buckets.len() / 2], buckets[buckets.len() - 1]];
+    println!("calibrating cost model on buckets {probe:?}…");
+    let model = crate::runtime::CostModel::calibrate(&runtime, &probe, 5)?;
+    println!(
+        "t_fixed = {:.1} µs\nt_per_nnz = {:.1} ns\nt_per_sample = {:.1} µs",
+        model.t_fixed * 1e6,
+        model.t_per_nnz * 1e9,
+        model.t_per_sample * 1e6
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let cfg = &p.cfg;
+    println!("model: {:?} ({} parameters)", cfg.model, cfg.model.param_count());
+    println!("sgd: {:?}", cfg.sgd);
+    println!("bucket grid: {:?}", cfg.bucket_grid());
+    println!("merge: {:?}", cfg.merge);
+    println!("devices: {:?}", cfg.devices);
+    println!("strategy: {:?}", cfg.strategy);
+    let dir = Path::new(&cfg.runtime.artifacts_dir);
+    match crate::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            let ok = m.check_config(cfg).is_ok();
+            println!(
+                "artifacts: {} buckets at {} (config match: {})",
+                m.buckets.len(),
+                dir.display(),
+                if ok { "yes" } else { "NO — rerun make artifacts" }
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_roundtrip() {
+        let p = parse_flags(&s(&[
+            "--set",
+            "devices.count=2",
+            "--backend",
+            "ref",
+            "--profile",
+            "delicious",
+            "--verbose",
+            "fig6",
+        ]))
+        .unwrap();
+        assert_eq!(p.cfg.devices.count, 2);
+        assert_eq!(p.backend, Backend::Reference);
+        assert_eq!(p.profile, DataProfile::Delicious);
+        assert!(p.verbose);
+        assert_eq!(p.positional, vec!["fig6"]);
+    }
+
+    #[test]
+    fn rejects_unknown_flag_and_bad_set() {
+        assert!(parse_flags(&s(&["--bogus"])).is_err());
+        assert!(parse_flags(&s(&["--set", "novalue"])).is_err());
+        assert!(main_with_args(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        main_with_args(&s(&["help"])).unwrap();
+        main_with_args(&[]).unwrap();
+    }
+}

@@ -1,0 +1,585 @@
+//! Configuration system: typed config structs parsed from a TOML-subset
+//! file ([`toml_mini`]) with CLI `--key=value` overrides, validation, and
+//! defaults that match `python/compile/aot.py`.
+
+pub mod toml_mini;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+use toml_mini::TomlValue;
+
+/// Model dimensions — must agree with the AOT artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDims {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub max_nnz: usize,
+    pub max_labels: usize,
+}
+
+impl Default for ModelDims {
+    fn default() -> Self {
+        // Must match the aot.py defaults ("small" profile).
+        ModelDims { features: 8192, hidden: 64, classes: 1024, max_nnz: 32, max_labels: 8 }
+    }
+}
+
+impl ModelDims {
+    /// Total trainable parameters (w1 + b1 + w2 + b2).
+    pub fn param_count(&self) -> usize {
+        self.features * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+}
+
+/// Which synthetic dataset profile to generate (Table 1 substitutes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataProfile {
+    /// Amazon-670k-like: few features/labels per sample, huge label space.
+    Amazon,
+    /// Delicious-200k-like: denser samples, many labels per sample.
+    Delicious,
+}
+
+impl DataProfile {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "amazon" | "amazon-670k" => Ok(DataProfile::Amazon),
+            "delicious" | "delicious-200k" => Ok(DataProfile::Delicious),
+            other => bail!("unknown data profile '{other}' (amazon|delicious)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataProfile::Amazon => "amazon",
+            DataProfile::Delicious => "delicious",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub profile: DataProfile,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    /// Mean/sigma of the log-normal nnz-per-sample distribution (clamped to
+    /// [1, max_nnz]); Amazon ≈ 12, Delicious ≈ 24 at the default scale.
+    pub avg_nnz: f64,
+    pub nnz_sigma: f64,
+    /// Mean labels per sample (>=1).
+    pub avg_labels: f64,
+    /// Zipf exponent for feature popularity.
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            profile: DataProfile::Amazon,
+            train_samples: 20_000,
+            test_samples: 2_000,
+            avg_nnz: 12.0,
+            nnz_sigma: 0.5,
+            avg_labels: 2.0,
+            zipf_s: 1.1,
+            seed: 42,
+        }
+    }
+}
+
+/// SGD hyperparameters (paper §5.1 methodology).
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    /// Minimum / maximum batch size — the batch-size grid endpoints.
+    pub b_min: usize,
+    pub b_max: usize,
+    /// Batch-size scaling step (Algorithm 1's β); paper default b_min/2.
+    pub beta: usize,
+    /// Learning rate *at b_max*; other batch sizes follow linear scaling.
+    pub lr_bmax: f32,
+    /// Samples per mega-batch, expressed in batches of b_max
+    /// (paper default: 100 batches).
+    pub mega_batches: usize,
+    /// How many mega-batches to train for.
+    pub num_mega_batches: usize,
+    /// Initial batch size (paper: b_max).
+    pub initial_batch: usize,
+    /// Learning-rate warmup horizon in mega-batches (0 disables; the paper
+    /// cites Goyal et al.'s warmup as the fix for large-batch instability).
+    pub warmup_mega_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig {
+            b_min: 16,
+            b_max: 128,
+            beta: 8,
+            lr_bmax: 0.05,
+            mega_batches: 20,
+            num_mega_batches: 10,
+            initial_batch: 128,
+            warmup_mega_batches: 0,
+            seed: 7,
+        }
+    }
+}
+
+impl SgdConfig {
+    pub fn mega_batch_samples(&self) -> usize {
+        self.mega_batches * self.b_max
+    }
+}
+
+/// How merge weights are normalized when update counts differ (paper §3.3
+/// discusses both; update-count-only is adopted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalization {
+    /// `α_i ∝ u_i` — the paper's choice.
+    Updates,
+    /// `α_i ∝ u_i · b_i` — the alternative the paper evaluates and rejects
+    /// ("no discernible improvement"); kept for the ablation benches.
+    UpdatesTimesBatch,
+}
+
+impl Normalization {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "updates" => Ok(Normalization::Updates),
+            "updates_x_batch" | "updatesxbatch" => Ok(Normalization::UpdatesTimesBatch),
+            other => bail!("unknown normalization '{other}' (updates|updates_x_batch)"),
+        }
+    }
+}
+
+/// Algorithm 2 parameters.
+#[derive(Clone, Debug)]
+pub struct MergeConfig {
+    /// Perturbation regularization threshold on L2-norm / |w| (default 0.1).
+    pub pert_thr: f64,
+    /// Perturbation factor δ (default 0.1).
+    pub delta: f64,
+    /// Momentum γ on the global model (default 0.9).
+    pub momentum: f64,
+    /// Disable perturbation entirely (ablations).
+    pub perturbation: bool,
+    /// Weight normalization for unequal update counts.
+    pub normalization: Normalization,
+}
+
+impl Default for MergeConfig {
+    fn default() -> Self {
+        MergeConfig {
+            pert_thr: 0.1,
+            delta: 0.1,
+            momentum: 0.9,
+            perturbation: true,
+            normalization: Normalization::Updates,
+        }
+    }
+}
+
+/// Simulated heterogeneous device fleet (substitutes the 4× V100 server).
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    pub count: usize,
+    /// Persistent per-device speed factors (1.0 = nominal; smaller = faster).
+    /// Paper Fig. 1 shows a ~32% fastest↔slowest gap on identical V100s.
+    pub speed_factors: Vec<f64>,
+    /// AR(1) multiplicative jitter amplitude (0 disables).
+    pub jitter: f64,
+    /// Extra per-nonzero sensitivity of step time (sparse-data heterogeneity).
+    pub nnz_sensitivity: f64,
+    pub seed: u64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            count: 4,
+            speed_factors: vec![1.00, 1.10, 1.21, 1.32],
+            jitter: 0.05,
+            nnz_sensitivity: 1.0,
+            seed: 17,
+        }
+    }
+}
+
+/// Runtime execution mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Threaded workers executing the PJRT step for real; wall-clock timing
+    /// plus injected heterogeneity delays.
+    Real,
+    /// Discrete-event simulation: numerics still run through PJRT, but the
+    /// schedule advances on a virtual clock driven by the cost model.
+    /// Deterministic and fast — used by the figure benches.
+    Virtual,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "real" => Ok(ExecMode::Real),
+            "virtual" | "sim" => Ok(ExecMode::Virtual),
+            other => bail!("unknown exec mode '{other}' (real|virtual)"),
+        }
+    }
+}
+
+/// Training strategy (the paper's Adaptive SGD + the three GPU baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// The paper's contribution: dynamic scheduling + batch-size scaling +
+    /// normalized merging.
+    Adaptive,
+    /// Elastic (K-step) model averaging with static equal batches.
+    Elastic,
+    /// Synchronous gradient aggregation (TensorFlow-mirrored analog):
+    /// merge after every round of one batch per device.
+    SyncGradAgg,
+    /// CROSSBOW-style synchronous model averaging with replica correction
+    /// after every batch.
+    Crossbow,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "adaptive" => Ok(Strategy::Adaptive),
+            "elastic" => Ok(Strategy::Elastic),
+            "sync" | "gradagg" | "tensorflow" => Ok(Strategy::SyncGradAgg),
+            "crossbow" => Ok(Strategy::Crossbow),
+            other => bail!("unknown strategy '{other}' (adaptive|elastic|sync|crossbow)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Adaptive => "adaptive",
+            Strategy::Elastic => "elastic",
+            Strategy::SyncGradAgg => "sync",
+            Strategy::Crossbow => "crossbow",
+        }
+    }
+
+    pub fn all() -> [Strategy; 4] {
+        [Strategy::Adaptive, Strategy::Elastic, Strategy::SyncGradAgg, Strategy::Crossbow]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    pub mode: ExecMode,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: "artifacts".to_string(), mode: ExecMode::Virtual }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub model: ModelDims,
+    pub data: DataConfig,
+    pub sgd: SgdConfig,
+    pub merge: MergeConfig,
+    pub devices: DeviceConfig,
+    pub runtime: RuntimeConfig,
+    pub strategy: StrategyConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct StrategyConfig {
+    pub kind: Strategy,
+    /// Elastic/Adaptive: disable batch scaling (ablation; Elastic == Adaptive
+    /// with scaling+weighting off).
+    pub batch_scaling: bool,
+    /// CROSSBOW replica-correction rate.
+    pub crossbow_rate: f64,
+    /// Framework overhead multiplier for the TensorFlow-analog synchronous
+    /// gradient aggregation (the paper attributes TF's slow curves partly to
+    /// slower epoch execution + mirrored all-reduce; Fig. 6 discussion).
+    pub sync_overhead: f64,
+}
+
+impl Default for StrategyConfig {
+    fn default() -> Self {
+        StrategyConfig {
+            kind: Strategy::Adaptive,
+            batch_scaling: true,
+            crossbow_rate: 0.1,
+            sync_overhead: 1.5,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file then apply `--section.key=value` overrides.
+    pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let mut map = toml_mini::parse(&text)?;
+        for (k, v) in overrides {
+            let parsed = toml_mini::parse(&format!("{k} = {v}"))
+                .or_else(|_| toml_mini::parse(&format!("{k} = \"{v}\"")))?;
+            map.extend(parsed);
+        }
+        Config::from_map(&map)
+    }
+
+    /// Build purely from `--key=value` overrides on top of defaults.
+    pub fn from_overrides(overrides: &[(String, String)]) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        for (k, v) in overrides {
+            let parsed = toml_mini::parse(&format!("{k} = {v}"))
+                .or_else(|_| toml_mini::parse(&format!("{k} = \"{v}\"")))?;
+            map.extend(parsed);
+        }
+        Config::from_map(&map)
+    }
+
+    pub fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Config> {
+        let mut cfg = Config::default();
+
+        let usize_of = |map: &BTreeMap<String, TomlValue>, key: &str, dst: &mut usize| -> Result<()> {
+            if let Some(v) = map.get(key) {
+                *dst = v.as_usize().with_context(|| format!("{key} must be a non-negative integer"))?;
+            }
+            Ok(())
+        };
+        let f64_of = |map: &BTreeMap<String, TomlValue>, key: &str, dst: &mut f64| -> Result<()> {
+            if let Some(v) = map.get(key) {
+                *dst = v.as_f64().with_context(|| format!("{key} must be a number"))?;
+            }
+            Ok(())
+        };
+        let u64_of = |map: &BTreeMap<String, TomlValue>, key: &str, dst: &mut u64| -> Result<()> {
+            if let Some(v) = map.get(key) {
+                *dst = v.as_i64().map(|i| i as u64).with_context(|| format!("{key} must be an integer"))?;
+            }
+            Ok(())
+        };
+
+        usize_of(map, "model.features", &mut cfg.model.features)?;
+        usize_of(map, "model.hidden", &mut cfg.model.hidden)?;
+        usize_of(map, "model.classes", &mut cfg.model.classes)?;
+        usize_of(map, "model.max_nnz", &mut cfg.model.max_nnz)?;
+        usize_of(map, "model.max_labels", &mut cfg.model.max_labels)?;
+
+        if let Some(v) = map.get("data.profile") {
+            cfg.data.profile = DataProfile::parse(v.as_str().context("data.profile must be a string")?)?;
+            // Profile presets (may be overridden by explicit keys below).
+            match cfg.data.profile {
+                DataProfile::Amazon => {
+                    cfg.data.avg_nnz = 12.0;
+                    cfg.data.avg_labels = 2.0;
+                }
+                DataProfile::Delicious => {
+                    cfg.data.avg_nnz = 24.0;
+                    cfg.data.avg_labels = 6.0;
+                }
+            }
+        }
+        usize_of(map, "data.train_samples", &mut cfg.data.train_samples)?;
+        usize_of(map, "data.test_samples", &mut cfg.data.test_samples)?;
+        f64_of(map, "data.avg_nnz", &mut cfg.data.avg_nnz)?;
+        f64_of(map, "data.nnz_sigma", &mut cfg.data.nnz_sigma)?;
+        f64_of(map, "data.avg_labels", &mut cfg.data.avg_labels)?;
+        f64_of(map, "data.zipf_s", &mut cfg.data.zipf_s)?;
+        u64_of(map, "data.seed", &mut cfg.data.seed)?;
+
+        usize_of(map, "sgd.b_min", &mut cfg.sgd.b_min)?;
+        usize_of(map, "sgd.b_max", &mut cfg.sgd.b_max)?;
+        usize_of(map, "sgd.beta", &mut cfg.sgd.beta)?;
+        if let Some(v) = map.get("sgd.lr_bmax") {
+            cfg.sgd.lr_bmax = v.as_f64().context("sgd.lr_bmax must be a number")? as f32;
+        }
+        usize_of(map, "sgd.mega_batches", &mut cfg.sgd.mega_batches)?;
+        usize_of(map, "sgd.num_mega_batches", &mut cfg.sgd.num_mega_batches)?;
+        cfg.sgd.initial_batch = cfg.sgd.b_max;
+        usize_of(map, "sgd.initial_batch", &mut cfg.sgd.initial_batch)?;
+        usize_of(map, "sgd.warmup_mega_batches", &mut cfg.sgd.warmup_mega_batches)?;
+        u64_of(map, "sgd.seed", &mut cfg.sgd.seed)?;
+
+        f64_of(map, "merge.pert_thr", &mut cfg.merge.pert_thr)?;
+        f64_of(map, "merge.delta", &mut cfg.merge.delta)?;
+        f64_of(map, "merge.momentum", &mut cfg.merge.momentum)?;
+        if let Some(v) = map.get("merge.perturbation") {
+            cfg.merge.perturbation = v.as_bool().context("merge.perturbation must be a bool")?;
+        }
+        if let Some(v) = map.get("merge.normalization") {
+            cfg.merge.normalization =
+                Normalization::parse(v.as_str().context("merge.normalization must be a string")?)?;
+        }
+
+        usize_of(map, "devices.count", &mut cfg.devices.count)?;
+        if let Some(v) = map.get("devices.speed_factors") {
+            cfg.devices.speed_factors =
+                v.as_f64_arr().context("devices.speed_factors must be a number array")?;
+        } else if cfg.devices.count != cfg.devices.speed_factors.len() {
+            // Spread factors evenly up to the paper's ~32% gap.
+            let n = cfg.devices.count;
+            cfg.devices.speed_factors = (0..n)
+                .map(|i| 1.0 + 0.32 * i as f64 / (n.max(2) - 1) as f64)
+                .collect();
+        }
+        f64_of(map, "devices.jitter", &mut cfg.devices.jitter)?;
+        f64_of(map, "devices.nnz_sensitivity", &mut cfg.devices.nnz_sensitivity)?;
+        u64_of(map, "devices.seed", &mut cfg.devices.seed)?;
+
+        if let Some(v) = map.get("runtime.artifacts_dir") {
+            cfg.runtime.artifacts_dir =
+                v.as_str().context("runtime.artifacts_dir must be a string")?.to_string();
+        }
+        if let Some(v) = map.get("runtime.mode") {
+            cfg.runtime.mode = ExecMode::parse(v.as_str().context("runtime.mode must be a string")?)?;
+        }
+
+        if let Some(v) = map.get("strategy.kind") {
+            cfg.strategy.kind = Strategy::parse(v.as_str().context("strategy.kind must be a string")?)?;
+        }
+        if let Some(v) = map.get("strategy.batch_scaling") {
+            cfg.strategy.batch_scaling =
+                v.as_bool().context("strategy.batch_scaling must be a bool")?;
+        }
+        f64_of(map, "strategy.crossbow_rate", &mut cfg.strategy.crossbow_rate)?;
+        f64_of(map, "strategy.sync_overhead", &mut cfg.strategy.sync_overhead)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let m = &self.model;
+        if m.features == 0 || m.hidden == 0 || m.classes == 0 {
+            bail!("model dims must be positive");
+        }
+        if m.max_nnz == 0 || m.max_labels == 0 {
+            bail!("max_nnz / max_labels must be positive");
+        }
+        let s = &self.sgd;
+        if s.b_min == 0 || s.b_max < s.b_min {
+            bail!("need 0 < b_min <= b_max (got {} / {})", s.b_min, s.b_max);
+        }
+        if s.beta == 0 || (s.b_max - s.b_min) % s.beta != 0 {
+            bail!("beta must divide b_max - b_min (got beta={} range={})", s.beta, s.b_max - s.b_min);
+        }
+        if s.initial_batch < s.b_min || s.initial_batch > s.b_max {
+            bail!("initial_batch {} outside [{}, {}]", s.initial_batch, s.b_min, s.b_max);
+        }
+        if (s.initial_batch - s.b_min) % s.beta != 0 {
+            bail!("initial_batch must lie on the batch-size grid");
+        }
+        if !(0.0..=1.0).contains(&self.merge.momentum) {
+            bail!("merge.momentum must be in [0, 1]");
+        }
+        if self.merge.delta < 0.0 || self.merge.delta >= 1.0 {
+            bail!("merge.delta must be in [0, 1)");
+        }
+        if self.devices.count == 0 {
+            bail!("devices.count must be positive");
+        }
+        if self.devices.speed_factors.len() != self.devices.count {
+            bail!(
+                "devices.speed_factors has {} entries for {} devices",
+                self.devices.speed_factors.len(),
+                self.devices.count
+            );
+        }
+        if self.devices.speed_factors.iter().any(|&f| f <= 0.0) {
+            bail!("speed factors must be positive");
+        }
+        if self.data.train_samples == 0 || self.data.test_samples == 0 {
+            bail!("dataset sizes must be positive");
+        }
+        Ok(())
+    }
+
+    /// The batch-size grid {b_min, b_min+beta, ..., b_max}.
+    pub fn bucket_grid(&self) -> Vec<usize> {
+        (self.sgd.b_min..=self.sgd.b_max).step_by(self.sgd.beta).collect()
+    }
+
+    /// Linear-scaling learning rate for batch size `b` (paper [19]).
+    pub fn lr_for_batch(&self, b: usize) -> f32 {
+        self.sgd.lr_bmax * b as f32 / self.sgd.b_max as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate_and_match_aot() {
+        let cfg = Config::default();
+        cfg.validate().unwrap();
+        // Must match python/compile/aot.py defaults.
+        assert_eq!(cfg.model.features, 8192);
+        assert_eq!(cfg.model.hidden, 64);
+        assert_eq!(cfg.model.classes, 1024);
+        assert_eq!(cfg.bucket_grid().len(), 15);
+        assert_eq!(cfg.bucket_grid()[0], 16);
+        assert_eq!(*cfg.bucket_grid().last().unwrap(), 128);
+    }
+
+    #[test]
+    fn linear_lr_scaling() {
+        let cfg = Config::default();
+        assert!((cfg.lr_for_batch(128) - 0.05).abs() < 1e-9);
+        assert!((cfg.lr_for_batch(64) - 0.025).abs() < 1e-9);
+        assert!((cfg.lr_for_batch(16) - 0.00625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::from_overrides(&[
+            ("sgd.b_min".into(), "8".into()),
+            ("sgd.b_max".into(), "64".into()),
+            ("sgd.beta".into(), "8".into()),
+            ("devices.count".into(), "2".into()),
+            ("devices.speed_factors".into(), "[1.0, 1.3]".into()),
+            ("strategy.kind".into(), "elastic".into()),
+            ("data.profile".into(), "delicious".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.sgd.b_max, 64);
+        assert_eq!(cfg.strategy.kind, Strategy::Elastic);
+        assert_eq!(cfg.data.profile, DataProfile::Delicious);
+        assert_eq!(cfg.data.avg_labels, 6.0);
+        assert_eq!(cfg.sgd.initial_batch, 64, "initial batch follows b_max");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Config::from_overrides(&[("sgd.beta".into(), "9".into())]).is_err());
+        assert!(Config::from_overrides(&[("devices.count".into(), "0".into())]).is_err());
+        assert!(Config::from_overrides(&[("merge.momentum".into(), "1.5".into())]).is_err());
+        assert!(Config::from_overrides(&[
+            ("devices.count".into(), "3".into()),
+            ("devices.speed_factors".into(), "[1.0, 1.1]".into()),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn device_factors_autospread() {
+        let cfg = Config::from_overrides(&[("devices.count".into(), "2".into())]).unwrap();
+        assert_eq!(cfg.devices.speed_factors.len(), 2);
+        assert!((cfg.devices.speed_factors[1] - 1.32).abs() < 1e-9);
+    }
+}

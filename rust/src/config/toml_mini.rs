@@ -1,0 +1,245 @@
+//! Minimal TOML-subset parser for config files (offline `toml` replacement).
+//!
+//! Supported grammar — everything the shipped configs need:
+//! `[section]` and `[section.subsection]` headers, `key = value` pairs with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and blank lines. Values land in a flat
+//! `"section.key" -> TomlValue` map.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_arr(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Arr(items) => items.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse into a flat `"section.key" -> value` map. Keys outside any section
+/// are stored bare.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        map.insert(full, value);
+    }
+    Ok(map)
+}
+
+fn err(lineno: usize, msg: &str) -> TomlError {
+    TomlError { line: lineno + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err(lineno, "unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# top comment
+title = "heterosparse"
+
+[model]
+features = 8192
+lr = 0.05          # inline comment
+adaptive = true
+
+[devices]
+speed_factors = [1.0, 0.9, 0.85, 0.75]
+names = ["a", "b"]
+"#;
+        let m = parse(src).unwrap();
+        assert_eq!(m["title"].as_str(), Some("heterosparse"));
+        assert_eq!(m["model.features"].as_usize(), Some(8192));
+        assert_eq!(m["model.lr"].as_f64(), Some(0.05));
+        assert_eq!(m["model.adaptive"].as_bool(), Some(true));
+        assert_eq!(
+            m["devices.speed_factors"].as_f64_arr().unwrap(),
+            vec![1.0, 0.9, 0.85, 0.75]
+        );
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let m = parse("a = 3\nb = 3.0\nc = 1e3\nd = 1_000").unwrap();
+        assert_eq!(m["a"], TomlValue::Int(3));
+        assert_eq!(m["b"], TomlValue::Float(3.0));
+        assert_eq!(m["c"], TomlValue::Float(1000.0));
+        assert_eq!(m["d"], TomlValue::Int(1000));
+        // Int is accessible as f64 too.
+        assert_eq!(m["a"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn subsection_keys_are_flattened() {
+        let m = parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(m["a.b.c"].as_i64(), Some(1));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, ").is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Step/eval numerics providers.
+//!
+//! The coordinator logic is independent of *where* the math runs:
+//! [`PjrtBackend`] executes the AOT artifacts through PJRT (the production
+//! path), [`RefBackend`] runs the pure-Rust twin (hermetic unit tests, the
+//! SLIDE baseline's building block, and CI machines without artifacts).
+
+use std::time::Instant;
+
+use crate::data::PaddedBatch;
+use crate::model::reference;
+use crate::model::ModelState;
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// One SGD step / one eval pass. `step` returns (loss, real execution
+/// seconds) — engines combine the latter with the heterogeneity model.
+pub trait StepBackend {
+    fn step(&self, model: &mut ModelState, batch: &PaddedBatch, lr: f32) -> Result<(f32, f64)>;
+    fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>>;
+    fn name(&self) -> &'static str;
+}
+
+/// PJRT-backed numerics (loads `artifacts/`).
+pub struct PjrtBackend {
+    pub runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> Self {
+        PjrtBackend { runtime }
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn step(&self, model: &mut ModelState, batch: &PaddedBatch, lr: f32) -> Result<(f32, f64)> {
+        let (loss, dt) = self.runtime.step(model, batch, lr)?;
+        Ok((loss, dt.as_secs_f64()))
+    }
+
+    fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>> {
+        self.runtime.eval(model, batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Pure-Rust reference numerics (no artifacts needed).
+pub struct RefBackend;
+
+impl StepBackend for RefBackend {
+    fn step(&self, model: &mut ModelState, batch: &PaddedBatch, lr: f32) -> Result<(f32, f64)> {
+        let t0 = Instant::now();
+        let loss = reference::sgd_step_ref(model, batch, lr);
+        Ok((loss, t0.elapsed().as_secs_f64()))
+    }
+
+    fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>> {
+        Ok(reference::eval_ref(model, batch))
+    }
+
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+}

@@ -1,0 +1,257 @@
+//! Discrete-event virtual-time engine.
+//!
+//! Numerics still run for real (through whatever [`StepBackend`] is
+//! supplied), but *time* advances on a virtual clock driven by the
+//! heterogeneity model + cost model. Dispatch order is exactly the dynamic
+//! scheduler's: the next batch goes to the device with the earliest
+//! virtual free-time (ties broken by device id), so the schedule is
+//! deterministic given the seeds — which is what the figure benches need.
+
+use crate::data::batcher::Batcher;
+use crate::model::ModelState;
+use crate::runtime::{CostModel, SimDevice};
+use crate::Result;
+
+use super::backend::StepBackend;
+use super::plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+
+pub struct SimEngine<'b> {
+    backend: &'b dyn StepBackend,
+    pub devices: Vec<SimDevice>,
+    pub cost: CostModel,
+}
+
+impl<'b> SimEngine<'b> {
+    pub fn new(backend: &'b dyn StepBackend, devices: Vec<SimDevice>, cost: CostModel) -> Self {
+        assert!(!devices.is_empty());
+        SimEngine { backend, devices, cost }
+    }
+
+    /// Run one mega-batch over `replicas` (one model per device), drawing
+    /// batches from `batcher` according to `plan`.
+    pub fn run_mega_batch(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport> {
+        let g = self.devices.len();
+        assert_eq!(replicas.len(), g);
+        assert_eq!(plan.batch_sizes.len(), g);
+
+        let mut stats = vec![DevStats::default(); g];
+        let mut free_time = vec![0.0f64; g];
+
+        match plan.mode {
+            DispatchMode::Dynamic => {
+                let mut remaining = plan.sample_budget;
+                while remaining > 0 {
+                    // Earliest-free device wins the next batch (dynamic
+                    // scheduling); ties break toward the lower id.
+                    let dev = argmin(&free_time, |_| true);
+                    let bucket = plan.batch_sizes[dev];
+                    let valid = bucket.min(remaining);
+                    remaining -= valid;
+                    self.one_step(replicas, batcher, plan, dev, bucket, valid, &mut stats, &mut free_time)?;
+                }
+            }
+            DispatchMode::StaticQuota { batches_per_device } => {
+                let mut quota = vec![batches_per_device; g];
+                while quota.iter().any(|&q| q > 0) {
+                    let dev = argmin(&free_time, |i| quota[i] > 0);
+                    quota[dev] -= 1;
+                    let bucket = plan.batch_sizes[dev];
+                    self.one_step(replicas, batcher, plan, dev, bucket, bucket, &mut stats, &mut free_time)?;
+                }
+            }
+        }
+
+        for (s, &t) in stats.iter_mut().zip(&free_time) {
+            s.busy = t;
+        }
+        let wall = free_time.iter().copied().fold(0.0, f64::max);
+        Ok(MegaBatchReport { per_device: stats, wall })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn one_step(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+        dev: usize,
+        bucket: usize,
+        valid: usize,
+        stats: &mut [DevStats],
+        free_time: &mut [f64],
+    ) -> Result<()> {
+        let batch = batcher.next_batch(bucket, valid);
+        let (loss, _real) = self.backend.step(&mut replicas[dev], &batch, plan.lrs[dev])?;
+        let dur = self.devices[dev].step_duration(&self.cost, &batch);
+        free_time[dev] += dur;
+        let s = &mut stats[dev];
+        s.updates += 1;
+        s.samples += valid as u64;
+        s.loss_sum += loss as f64;
+        s.nnz += batch.nnz as u64;
+
+        // CROSSBOW-style correction: pull this replica toward the current
+        // fleet average after every batch.
+        if let Some(rate) = plan.crossbow_rate {
+            correct_toward_average(replicas, dev, rate);
+        }
+        Ok(())
+    }
+}
+
+fn argmin(times: &[f64], eligible: impl Fn(usize) -> bool) -> usize {
+    let mut best = usize::MAX;
+    for i in 0..times.len() {
+        if eligible(i) && (best == usize::MAX || times[i] < times[best]) {
+            best = i;
+        }
+    }
+    assert_ne!(best, usize::MAX, "no eligible device");
+    best
+}
+
+/// `replica[dev] += rate * (mean(replicas) − replica[dev])`.
+pub fn correct_toward_average(replicas: &mut [ModelState], dev: usize, rate: f64) {
+    let g = replicas.len() as f32;
+    let r = rate as f32;
+    for seg in 0..4 {
+        let len = replicas[0].segments()[seg].len();
+        for p in 0..len {
+            let mut mean = 0.0f32;
+            for rep in replicas.iter() {
+                mean += rep.segments()[seg][p];
+            }
+            mean /= g;
+            let dst = match seg {
+                0 => &mut replicas[dev].w1,
+                1 => &mut replicas[dev].b1,
+                2 => &mut replicas[dev].w2,
+                _ => &mut replicas[dev].b2,
+            };
+            dst[p] += r * (mean - dst[p]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DataConfig, ModelDims};
+    use crate::coordinator::backend::RefBackend;
+    use crate::data::synthetic::Generator;
+
+    fn setup() -> (Config, crate::data::SparseDataset) {
+        let mut cfg = Config::default();
+        cfg.model = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 4 };
+        cfg.sgd.b_min = 8;
+        cfg.sgd.b_max = 32;
+        cfg.sgd.beta = 4;
+        cfg.sgd.initial_batch = 32;
+        cfg.devices.jitter = 0.0;
+        let data_cfg = DataConfig { train_samples: 500, avg_nnz: 5.0, ..Default::default() };
+        let ds = Generator::new(&cfg.model, &data_cfg).generate(500, 1);
+        (cfg, ds)
+    }
+
+    fn plan_dynamic(g: usize, b: usize, budget: usize) -> DispatchPlan {
+        DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            batch_sizes: vec![b; g],
+            lrs: vec![0.05; g],
+            sample_budget: budget,
+            crossbow_rate: None,
+        }
+    }
+
+    #[test]
+    fn dynamic_budget_is_conserved_exactly() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        // Budget not divisible by the batch size: last dispatch is partial.
+        let report = engine
+            .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 32, 330))
+            .unwrap();
+        assert_eq!(report.total_samples(), 330);
+    }
+
+    #[test]
+    fn faster_devices_get_more_batches() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let report = engine
+            .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 16, 3200))
+            .unwrap();
+        let u = report.updates();
+        // Device 0 is fastest (factor 1.0), device 3 slowest (1.32).
+        assert!(u[0] > u[3], "updates {u:?}");
+        assert_eq!(report.total_updates(), 200);
+    }
+
+    #[test]
+    fn static_quota_gives_equal_updates_but_idle_time() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let plan = DispatchPlan {
+            mode: DispatchMode::StaticQuota { batches_per_device: 10 },
+            batch_sizes: vec![32; 4],
+            lrs: vec![0.05; 4],
+            sample_budget: 0,
+            crossbow_rate: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert!(report.updates().iter().all(|&u| u == 10));
+        // The straggler forces idle time on the fast device (the paper's
+        // elastic-SGD pathology).
+        assert!(report.max_idle() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_zero_jitter() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let run = || {
+            let mut engine =
+                SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+            let mut batcher = Batcher::new(&ds, &cfg.model, 7);
+            let mut replicas = vec![ModelState::init(&cfg.model, 3); 4];
+            let r = engine
+                .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 16, 640))
+                .unwrap();
+            (r.updates(), r.wall, replicas[0].w1[10])
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn crossbow_correction_contracts_replicas() {
+        let dims = ModelDims { features: 32, hidden: 4, classes: 8, max_nnz: 4, max_labels: 2 };
+        let mut replicas: Vec<ModelState> =
+            (0..3).map(|i| ModelState::init(&dims, i as u64)).collect();
+        let spread_before: f32 = replicas[0].max_abs_diff(&replicas[1]);
+        correct_toward_average(&mut replicas, 0, 0.5);
+        correct_toward_average(&mut replicas, 1, 0.5);
+        let spread_after = replicas[0].max_abs_diff(&replicas[1]);
+        assert!(spread_after < spread_before);
+    }
+}

@@ -1,0 +1,471 @@
+//! Threaded real-time engine: one GPU-manager thread per simulated device.
+//!
+//! Mirrors the HeteroGPU architecture (paper §4, Fig. 5): stand-alone
+//! asynchronous managers communicating with a central dynamic scheduler via
+//! event messages. Each manager thread owns its device's model replica and
+//! its *own* PJRT client (the `xla` crate client is `Rc`-based and the
+//! paper's managers own their GPU context anyway); the scheduler owns the
+//! batcher and routes batches dynamically on completion events.
+//!
+//! Heterogeneity is injected by stretching each measured step to what the
+//! simulated device would have taken (`SimDevice::stretch`) and sleeping
+//! the difference.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::data::batcher::Batcher;
+use crate::data::PaddedBatch;
+use crate::model::ModelState;
+use crate::runtime::SimDevice;
+use crate::Result;
+
+use super::backend::StepBackend;
+use super::plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+
+/// Creates a device's backend *inside* its worker thread.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn StepBackend>> + Send + Sync>;
+
+enum Cmd {
+    Step { batch: PaddedBatch, lr: f32, crossbow_rate: Option<f64> },
+    SetReplica(Box<ModelState>),
+    TakeReplica,
+    Shutdown,
+}
+
+enum Reply {
+    Ready { dev: usize },
+    StepDone { dev: usize, loss: f32, valid: usize, nnz: usize, busy: f64 },
+    Replica { dev: usize, model: Box<ModelState> },
+    Fatal { dev: usize, error: String },
+}
+
+struct Worker {
+    cmd: mpsc::Sender<Cmd>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Shared state for CROSSBOW-style corrections: the running *sum* of all
+/// replicas (avg = sum / G), incrementally maintained by the workers.
+struct CrossbowShared {
+    sum: Mutex<ModelState>,
+    devices: usize,
+}
+
+pub struct ThreadedEngine {
+    workers: Vec<Worker>,
+    replies: mpsc::Receiver<Reply>,
+    crossbow: Option<Arc<CrossbowShared>>,
+    template: ModelState,
+}
+
+impl ThreadedEngine {
+    /// Spawn one manager thread per device. Blocks until every worker has
+    /// constructed its backend (so compile errors surface here, not mid-run).
+    pub fn spawn(
+        factory: BackendFactory,
+        devices: Vec<SimDevice>,
+        template: &ModelState,
+    ) -> Result<ThreadedEngine> {
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+        let mut workers = Vec::with_capacity(devices.len());
+        let crossbow = Arc::new(CrossbowShared {
+            sum: Mutex::new(ModelState::zeros(&template.dims)),
+            devices: devices.len(),
+        });
+        for device in devices {
+            let dev = device.id;
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let replies = reply_tx.clone();
+            let factory = factory.clone();
+            let shared = crossbow.clone();
+            let template = template.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gpu-manager-{dev}"))
+                .spawn(move || worker_main(dev, device, factory, cmd_rx, replies, shared, template))
+                .expect("spawning worker thread");
+            workers.push(Worker { cmd: cmd_tx, handle: Some(handle) });
+        }
+        // Wait for all Ready (or Fatal) events.
+        let mut ready = vec![false; workers.len()];
+        while ready.iter().any(|r| !r) {
+            match reply_rx.recv().map_err(|_| anyhow!("worker channel closed during startup"))? {
+                Reply::Ready { dev } => ready[dev] = true,
+                Reply::Fatal { dev, error } => bail!("device {dev} failed to start: {error}"),
+                _ => bail!("unexpected reply during startup"),
+            }
+        }
+        Ok(ThreadedEngine {
+            workers,
+            replies: reply_rx,
+            crossbow: Some(crossbow),
+            template: template.clone(),
+        })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one mega-batch; protocol mirrors `SimEngine::run_mega_batch`.
+    pub fn run_mega_batch(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport> {
+        let g = self.workers.len();
+        assert_eq!(replicas.len(), g);
+        assert_eq!(plan.batch_sizes.len(), g);
+
+        // Install replicas (and the crossbow sum) for this mega-batch.
+        if plan.crossbow_rate.is_some() {
+            if let Some(shared) = &self.crossbow {
+                let mut sum = shared.sum.lock().unwrap();
+                *sum = ModelState::zeros(&self.template.dims);
+                let refs: Vec<&ModelState> = replicas.iter().collect();
+                let ones = vec![1.0; g];
+                sum.set_weighted_sum(&refs, &ones);
+            }
+        }
+        for (w, r) in self.workers.iter().zip(replicas.iter()) {
+            w.cmd
+                .send(Cmd::SetReplica(Box::new(r.clone())))
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+
+        let mut stats = vec![DevStats::default(); g];
+        let t0 = Instant::now();
+
+        // Per-device outstanding work accounting.
+        let mut inflight = 0usize;
+        let mut remaining = match plan.mode {
+            DispatchMode::Dynamic => plan.sample_budget,
+            DispatchMode::StaticQuota { .. } => 0,
+        };
+        let mut quota = match plan.mode {
+            DispatchMode::Dynamic => vec![usize::MAX; g],
+            DispatchMode::StaticQuota { batches_per_device } => vec![batches_per_device; g],
+        };
+
+        // Prime every device with one batch.
+        for dev in 0..g {
+            if self.try_dispatch(dev, plan, batcher, &mut remaining, &mut quota)? {
+                inflight += 1;
+            }
+        }
+
+        while inflight > 0 {
+            match self.replies.recv().map_err(|_| anyhow!("worker channel closed"))? {
+                Reply::StepDone { dev, loss, valid, nnz, busy } => {
+                    let s = &mut stats[dev];
+                    s.updates += 1;
+                    s.samples += valid as u64;
+                    s.loss_sum += loss as f64;
+                    s.nnz += nnz as u64;
+                    s.busy += busy;
+                    if self.try_dispatch(dev, plan, batcher, &mut remaining, &mut quota)? {
+                        // still inflight
+                    } else {
+                        inflight -= 1;
+                    }
+                }
+                Reply::Fatal { dev, error } => bail!("device {dev} failed: {error}"),
+                _ => bail!("unexpected reply during mega-batch"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // Barrier: pull replicas back.
+        for w in &self.workers {
+            w.cmd.send(Cmd::TakeReplica).map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut got = 0usize;
+        while got < g {
+            match self.replies.recv().map_err(|_| anyhow!("worker channel closed"))? {
+                Reply::Replica { dev, model } => {
+                    replicas[dev] = *model;
+                    got += 1;
+                }
+                Reply::Fatal { dev, error } => bail!("device {dev} failed: {error}"),
+                _ => bail!("unexpected reply at barrier"),
+            }
+        }
+
+        Ok(MegaBatchReport { per_device: stats, wall })
+    }
+
+    fn try_dispatch(
+        &self,
+        dev: usize,
+        plan: &DispatchPlan,
+        batcher: &mut Batcher<'_>,
+        remaining: &mut usize,
+        quota: &mut [usize],
+    ) -> Result<bool> {
+        match plan.mode {
+            DispatchMode::Dynamic => {
+                if *remaining == 0 {
+                    return Ok(false);
+                }
+                let bucket = plan.batch_sizes[dev];
+                let valid = bucket.min(*remaining);
+                *remaining -= valid;
+                let batch = batcher.next_batch(bucket, valid);
+                self.workers[dev]
+                    .cmd
+                    .send(Cmd::Step { batch, lr: plan.lrs[dev], crossbow_rate: plan.crossbow_rate })
+                    .map_err(|_| anyhow!("worker died"))?;
+                Ok(true)
+            }
+            DispatchMode::StaticQuota { .. } => {
+                if quota[dev] == 0 {
+                    return Ok(false);
+                }
+                quota[dev] -= 1;
+                let bucket = plan.batch_sizes[dev];
+                let batch = batcher.next_batch(bucket, bucket);
+                self.workers[dev]
+                    .cmd
+                    .send(Cmd::Step { batch, lr: plan.lrs[dev], crossbow_rate: plan.crossbow_rate })
+                    .map_err(|_| anyhow!("worker died"))?;
+                Ok(true)
+            }
+        }
+    }
+}
+
+impl Drop for ThreadedEngine {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    dev: usize,
+    mut device: SimDevice,
+    factory: BackendFactory,
+    cmd: mpsc::Receiver<Cmd>,
+    replies: mpsc::Sender<Reply>,
+    shared: Arc<CrossbowShared>,
+    template: ModelState,
+) {
+    let backend = match factory(dev) {
+        Ok(b) => {
+            let _ = replies.send(Reply::Ready { dev });
+            b
+        }
+        Err(e) => {
+            let _ = replies.send(Reply::Fatal { dev, error: format!("{e:#}") });
+            return;
+        }
+    };
+    let mut replica = template;
+    // Last version of this replica folded into the shared crossbow sum.
+    let mut published: Option<Box<ModelState>> = None;
+    loop {
+        match cmd.recv() {
+            Err(_) | Ok(Cmd::Shutdown) => return,
+            Ok(Cmd::SetReplica(m)) => {
+                replica = *m;
+                published = Some(Box::new(replica.clone()));
+            }
+            Ok(Cmd::TakeReplica) => {
+                if replies.send(Reply::Replica { dev, model: Box::new(replica.clone()) }).is_err() {
+                    return;
+                }
+            }
+            Ok(Cmd::Step { batch, lr, crossbow_rate }) => {
+                let t0 = Instant::now();
+                match backend.step(&mut replica, &batch, lr) {
+                    Ok((loss, _)) => {
+                        let real = t0.elapsed().as_secs_f64();
+                        let target = device.stretch(real);
+                        if target > real {
+                            std::thread::sleep(Duration::from_secs_f64(target - real));
+                        }
+                        if let Some(rate) = crossbow_rate {
+                            if let Some(pub_state) = published.as_mut() {
+                                crossbow_correct(&shared, &mut replica, pub_state, rate);
+                            }
+                        }
+                        let reply = Reply::StepDone {
+                            dev,
+                            loss,
+                            valid: batch.valid,
+                            nnz: batch.nnz,
+                            busy: target.max(real),
+                        };
+                        if replies.send(reply).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = replies.send(Reply::Fatal { dev, error: format!("{e:#}") });
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// CROSSBOW replica correction under the shared-sum lock.
+///
+/// Invariant: `shared.sum` always equals the sum of every worker's last
+/// *published* replica. This worker computes the fleet average from the sum
+/// (its own stale contribution included, exactly like CROSSBOW's central
+/// average model), pulls its post-step replica toward it, then swaps its
+/// published contribution for the corrected one — keeping the invariant.
+fn crossbow_correct(
+    shared: &Arc<CrossbowShared>,
+    replica: &mut ModelState,
+    published: &mut ModelState,
+    rate: f64,
+) {
+    let g = shared.devices as f32;
+    let r = rate as f32;
+    let mut sum = shared.sum.lock().unwrap();
+    for seg in 0..4 {
+        let len = replica.segments()[seg].len();
+        for p in 0..len {
+            let (sum_seg, rep_seg, pub_seg) = match seg {
+                0 => (&mut sum.w1, &mut replica.w1, &mut published.w1),
+                1 => (&mut sum.b1, &mut replica.b1, &mut published.b1),
+                2 => (&mut sum.w2, &mut replica.w2, &mut published.w2),
+                _ => (&mut sum.b2, &mut replica.b2, &mut published.b2),
+            };
+            debug_assert_eq!(sum_seg.len(), len);
+            let new = rep_seg[p];
+            let avg = sum_seg[p] / g;
+            let corrected = new + r * (avg - new);
+            sum_seg[p] += corrected - pub_seg[p];
+            pub_seg[p] = corrected;
+            rep_seg[p] = corrected;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, DataConfig, DeviceConfig, ModelDims};
+    use crate::coordinator::backend::RefBackend;
+    use crate::data::synthetic::Generator;
+
+    fn setup() -> (Config, crate::data::SparseDataset) {
+        let mut cfg = Config::default();
+        cfg.model = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 4 };
+        cfg.devices = DeviceConfig { count: 3, speed_factors: vec![1.0, 1.2, 1.4], ..Default::default() };
+        let data_cfg = DataConfig { train_samples: 400, avg_nnz: 5.0, ..Default::default() };
+        let ds = Generator::new(&cfg.model, &data_cfg).generate(400, 1);
+        (cfg, ds)
+    }
+
+    fn ref_factory() -> BackendFactory {
+        Arc::new(|_dev| Ok(Box::new(RefBackend) as Box<dyn StepBackend>))
+    }
+
+    #[test]
+    fn dynamic_megabatch_conserves_budget() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 1);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        let mut batcher = Batcher::new(&ds, &cfg.model, 5);
+        let mut replicas = vec![template.clone(); 3];
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            batch_sizes: vec![16, 16, 16],
+            lrs: vec![0.05; 3],
+            sample_budget: 250,
+            crossbow_rate: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert_eq!(report.total_samples(), 250);
+        assert!(report.wall > 0.0);
+        // Replicas actually trained (diverged from the template).
+        assert!(replicas[0].max_abs_diff(&template) > 0.0);
+    }
+
+    #[test]
+    fn static_quota_equal_updates() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 2);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        let mut batcher = Batcher::new(&ds, &cfg.model, 6);
+        let mut replicas = vec![template.clone(); 3];
+        let plan = DispatchPlan {
+            mode: DispatchMode::StaticQuota { batches_per_device: 4 },
+            batch_sizes: vec![32; 3],
+            lrs: vec![0.05; 3],
+            sample_budget: 0,
+            crossbow_rate: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert!(report.updates().iter().all(|&u| u == 4), "{:?}", report.updates());
+        assert_eq!(report.total_samples(), 3 * 4 * 32);
+    }
+
+    #[test]
+    fn engine_survives_multiple_megabatches() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 3);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        let mut batcher = Batcher::new(&ds, &cfg.model, 7);
+        let mut replicas = vec![template.clone(); 3];
+        for _ in 0..3 {
+            let plan = DispatchPlan {
+                mode: DispatchMode::Dynamic,
+                batch_sizes: vec![16; 3],
+                lrs: vec![0.05; 3],
+                sample_budget: 96,
+                crossbow_rate: None,
+            };
+            let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+            assert_eq!(report.total_samples(), 96);
+        }
+    }
+
+    #[test]
+    fn crossbow_rate_contracts_replica_spread() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 4);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        let mut batcher = Batcher::new(&ds, &cfg.model, 8);
+
+        let run = |engine: &mut ThreadedEngine, batcher: &mut Batcher<'_>, rate| {
+            let mut replicas = vec![template.clone(); 3];
+            let plan = DispatchPlan {
+                mode: DispatchMode::StaticQuota { batches_per_device: 12 },
+                batch_sizes: vec![16; 3],
+                lrs: vec![0.3; 3],
+                sample_budget: 0,
+                crossbow_rate: rate,
+            };
+            engine.run_mega_batch(&mut replicas, batcher, &plan).unwrap();
+            let spread = replicas[0]
+                .max_abs_diff(&replicas[1])
+                .max(replicas[1].max_abs_diff(&replicas[2]));
+            spread
+        };
+        // Thread interleaving varies the correction order, so average a few
+        // repetitions of each variant before comparing.
+        let free: f32 = (0..3).map(|_| run(&mut engine, &mut batcher, None)).sum();
+        let corrected: f32 = (0..3).map(|_| run(&mut engine, &mut batcher, Some(0.9))).sum();
+        assert!(corrected < free, "crossbow correction should contract spread: {corrected} vs {free}");
+    }
+}

@@ -1,0 +1,243 @@
+//! **Algorithm 2 — Normalized Model Merging** (paper §3.3).
+//!
+//! Weighted model averaging where the weights prioritize replicas updated
+//! more frequently and, secondarily, replicas fed larger batches:
+//!
+//! * equal update counts  → `α_i = b_i / Σb`   (batch-size normalization),
+//! * unequal update counts → `α_i = u_i / Σu`  (update-count normalization);
+//! * if **all** replicas are well-regularized (L2-norm per parameter below
+//!   `pert_thr`), perturb: `α_argmax(u) *= 1+δ`, `α_argmin(u) *= 1−δ`
+//!   (deliberately denormalizing, bounded by δ);
+//! * momentum global update: `w' = Σ α_i w_i + γ (w − w_p)`, `w_p ← w`.
+
+use crate::config::{MergeConfig, Normalization};
+use crate::model::ModelState;
+
+/// What happened at one merge (Fig. 12b trace material).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeOutcome {
+    pub weights: Vec<f64>,
+    pub perturbed: bool,
+    /// Which normalization branch ran.
+    pub by_updates: bool,
+}
+
+/// Lines 1–6: normalization weights.
+pub fn normalized_weights(
+    updates: &[u64],
+    batch_sizes: &[usize],
+    norm: Normalization,
+) -> (Vec<f64>, bool) {
+    assert_eq!(updates.len(), batch_sizes.len());
+    assert!(!updates.is_empty());
+    let equal = updates.windows(2).all(|w| w[0] == w[1]);
+    if equal {
+        let total: f64 = batch_sizes.iter().map(|&b| b as f64).sum();
+        (batch_sizes.iter().map(|&b| b as f64 / total).collect(), false)
+    } else {
+        let raw: Vec<f64> = match norm {
+            Normalization::Updates => updates.iter().map(|&u| u as f64).collect(),
+            // The paper's discussed-and-rejected alternative, kept for the
+            // ablation benches.
+            Normalization::UpdatesTimesBatch => updates
+                .iter()
+                .zip(batch_sizes)
+                .map(|(&u, &b)| u as f64 * b as f64)
+                .collect(),
+        };
+        let total: f64 = raw.iter().sum();
+        if total == 0.0 {
+            let g = updates.len() as f64;
+            return (vec![1.0 / g; updates.len()], true);
+        }
+        (raw.iter().map(|&w| w / total).collect(), true)
+    }
+}
+
+/// Lines 7–10: perturbation, gated on every replica being regularized.
+/// Returns true when applied.
+pub fn apply_perturbation(
+    weights: &mut [f64],
+    updates: &[u64],
+    replica_l2_per_param: &[f64],
+    cfg: &MergeConfig,
+) -> bool {
+    if !cfg.perturbation || weights.len() < 2 {
+        return false;
+    }
+    if !replica_l2_per_param.iter().all(|&n| n < cfg.pert_thr) {
+        return false;
+    }
+    // argmax / argmin of the update counts (first occurrence, as in the
+    // paper's argmax/argmin notation).
+    let mut r = 0usize;
+    let mut s = 0usize;
+    for (i, &u) in updates.iter().enumerate() {
+        if u > updates[r] {
+            r = i;
+        }
+        if u < updates[s] {
+            s = i;
+        }
+    }
+    if r == s {
+        return false;
+    }
+    weights[r] *= 1.0 + cfg.delta;
+    weights[s] *= 1.0 - cfg.delta;
+    true
+}
+
+/// Lines 11–12: momentum global-model update.
+///
+/// `global` and `global_prev` are updated in place:
+/// `w' = Σ α_i w_i + γ (w − w_p)`, then `w_p ← w`, `w ← w'`.
+pub fn momentum_update(
+    global: &mut ModelState,
+    global_prev: &mut ModelState,
+    merged: &ModelState,
+    momentum: f64,
+) {
+    // w' = merged + γ (w − w_p)
+    let mut new = merged.clone();
+    new.add_scaled_diff(global, global_prev, momentum);
+    // w_p ← w ; w ← w'
+    std::mem::swap(global_prev, global);
+    *global = new;
+}
+
+/// Full Algorithm 2 over replica references. Returns the outcome trace.
+/// The caller supplies the weighted-average result destination separately
+/// (typically through `allreduce::allreduce_merge` to charge transfer time).
+pub fn compute_weights(
+    updates: &[u64],
+    batch_sizes: &[usize],
+    replica_l2_per_param: &[f64],
+    cfg: &MergeConfig,
+) -> MergeOutcome {
+    let (mut weights, by_updates) = normalized_weights(updates, batch_sizes, cfg.normalization);
+    let perturbed = apply_perturbation(&mut weights, updates, replica_l2_per_param, cfg);
+    MergeOutcome { weights, perturbed, by_updates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+    use crate::util::prop;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 32, hidden: 8, classes: 16, max_nnz: 4, max_labels: 2 }
+    }
+
+    #[test]
+    fn equal_updates_normalizes_by_batch_size() {
+        let (w, by_updates) = normalized_weights(&[5, 5, 5], &[128, 64, 64], Normalization::Updates);
+        assert!(!by_updates);
+        assert!((w[0] - 0.5).abs() < 1e-12);
+        assert!((w[1] - 0.25).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unequal_updates_normalizes_by_updates() {
+        let (w, by_updates) = normalized_weights(&[6, 2], &[128, 128], Normalization::Updates);
+        assert!(by_updates);
+        assert!((w[0] - 0.75).abs() < 1e-12);
+        assert!((w[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn updates_times_batch_normalization_variant() {
+        let (w, by_updates) =
+            normalized_weights(&[6, 2], &[64, 128], Normalization::UpdatesTimesBatch);
+        assert!(by_updates);
+        // raw = [384, 256] -> [0.6, 0.4]
+        assert!((w[0] - 0.6).abs() < 1e-12);
+        assert!((w[1] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_updates_fall_back_to_equal_weights() {
+        let (w, _) = normalized_weights(&[0, 0, 3], &[64, 64, 64], Normalization::Updates);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(w[0], 0.0);
+        let (w, _) = normalized_weights(&[0, 1], &[0, 0], Normalization::UpdatesTimesBatch);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perturbation_requires_all_replicas_regularized() {
+        let cfg = MergeConfig::default(); // thr 0.1, delta 0.1
+        let mut w = vec![0.6, 0.4];
+        // One replica unregularized -> no perturbation.
+        assert!(!apply_perturbation(&mut w, &[6, 2], &[0.05, 0.2], &cfg));
+        assert_eq!(w, vec![0.6, 0.4]);
+        // All regularized -> applied.
+        assert!(apply_perturbation(&mut w, &[6, 2], &[0.05, 0.02], &cfg));
+        assert!((w[0] - 0.66).abs() < 1e-12);
+        assert!((w[1] - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perturbation_denormalization_is_bounded_by_delta() {
+        let cfg = MergeConfig::default();
+        let gen = prop::VecU64 { min_len: 2, max_len: 8, item_lo: 0, item_hi: 50 };
+        prop::check(300, 0xBEEF, gen, |updates| {
+            let b = vec![64usize; updates.len()];
+            let l2 = vec![0.01f64; updates.len()];
+            let out = compute_weights(updates, &b, &l2, &cfg);
+            let sum: f64 = out.weights.iter().sum();
+            // Without perturbation weights sum to exactly 1; perturbation
+            // shifts the sum by at most δ·(α_r − α_s) ⊆ [−δ, +δ].
+            if (sum - 1.0).abs() > cfg.delta + 1e-9 {
+                return Err(format!("weight sum {sum} drifted beyond delta"));
+            }
+            if out.weights.iter().any(|&w| w < 0.0) {
+                return Err("negative weight".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn perturbation_can_be_disabled() {
+        let cfg = MergeConfig { perturbation: false, ..Default::default() };
+        let mut w = vec![0.6, 0.4];
+        assert!(!apply_perturbation(&mut w, &[6, 2], &[0.01, 0.01], &cfg));
+    }
+
+    #[test]
+    fn all_equal_updates_never_perturbs() {
+        let cfg = MergeConfig::default();
+        let mut w = vec![0.5, 0.5];
+        // argmax == argmin when all counts equal.
+        assert!(!apply_perturbation(&mut w, &[4, 4], &[0.01, 0.01], &cfg));
+    }
+
+    #[test]
+    fn momentum_update_algebra() {
+        let d = dims();
+        let merged = ModelState::init(&d, 1);
+        let mut global = ModelState::init(&d, 2);
+        let mut prev = ModelState::init(&d, 3);
+        let g0 = global.clone();
+        let p0 = prev.clone();
+        momentum_update(&mut global, &mut prev, &merged, 0.9);
+        // w_p became the old w.
+        assert!(prev.max_abs_diff(&g0) == 0.0);
+        // w' = merged + 0.9 (g0 - p0), check one coordinate.
+        let expect = merged.w1[5] + 0.9 * (g0.w1[5] - p0.w1[5]);
+        assert!((global.w1[5] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_momentum_reduces_to_plain_average() {
+        let d = dims();
+        let merged = ModelState::init(&d, 4);
+        let mut global = ModelState::init(&d, 5);
+        let mut prev = ModelState::init(&d, 6);
+        momentum_update(&mut global, &mut prev, &merged, 0.0);
+        assert!(global.max_abs_diff(&merged) == 0.0);
+    }
+}

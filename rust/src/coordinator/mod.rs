@@ -1,0 +1,26 @@
+//! The Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`backend`] — where step numerics come from (PJRT artifacts or the
+//!   pure-Rust reference).
+//! * [`scaling`] — **Algorithm 1**: adaptive batch size scaling.
+//! * [`merge`] — **Algorithm 2**: normalized model merging with
+//!   perturbation and momentum.
+//! * [`plan`] — dispatch plans and per-mega-batch reports shared by both
+//!   engines.
+//! * [`engine_sim`] — deterministic discrete-event engine on a virtual
+//!   clock (figure benches).
+//! * [`engine_threaded`] — std::thread GPU-manager workers with real PJRT
+//!   execution and injected heterogeneity (e2e runs).
+//! * [`trainer`] — the full training session: strategy dispatch, merging,
+//!   scaling, evaluation, metrics.
+
+pub mod backend;
+pub mod engine_sim;
+pub mod engine_threaded;
+pub mod merge;
+pub mod plan;
+pub mod scaling;
+pub mod trainer;
+
+pub use plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+pub use trainer::{Trainer, TrainerOptions};

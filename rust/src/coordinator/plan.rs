@@ -1,0 +1,93 @@
+//! Dispatch plans and mega-batch reports — the contract between the trainer
+//! (strategy logic) and the two execution engines.
+
+/// How batches are routed to devices within one mega-batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Paper §3.1 dynamic scheduling: whenever a device finishes a batch it
+    /// is handed the next one, until the mega-batch sample budget is
+    /// consumed (Adaptive SGD, CROSSBOW).
+    Dynamic,
+    /// Static allocation: every device processes exactly `batches_per_device`
+    /// batches of its configured size, then waits at the barrier (Elastic
+    /// SGD, synchronous gradient aggregation).
+    StaticQuota { batches_per_device: usize },
+}
+
+/// Work order for one mega-batch.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub mode: DispatchMode,
+    /// Per-device batch size (a bucket-grid value).
+    pub batch_sizes: Vec<usize>,
+    /// Per-device learning rate (linear scaling).
+    pub lrs: Vec<f32>,
+    /// Sample budget for [`DispatchMode::Dynamic`].
+    pub sample_budget: usize,
+    /// CROSSBOW-style per-batch replica correction rate toward the fleet
+    /// average (None for everything but CROSSBOW).
+    pub crossbow_rate: Option<f64>,
+}
+
+impl DispatchPlan {
+    pub fn devices(&self) -> usize {
+        self.batch_sizes.len()
+    }
+}
+
+/// Per-device statistics for one mega-batch.
+#[derive(Clone, Debug, Default)]
+pub struct DevStats {
+    /// Model replica updates (batches processed).
+    pub updates: u64,
+    /// Real (unpadded) samples processed.
+    pub samples: u64,
+    /// Busy time in seconds (simulated or stretched wall).
+    pub busy: f64,
+    /// Sum of per-batch losses (divide by updates for the mean).
+    pub loss_sum: f64,
+    /// True non-zeros processed.
+    pub nnz: u64,
+}
+
+/// Aggregate outcome of one mega-batch.
+#[derive(Clone, Debug)]
+pub struct MegaBatchReport {
+    pub per_device: Vec<DevStats>,
+    /// Time from mega-batch start to the merge barrier (max device busy
+    /// time in the sim engine; measured wall time in the threaded engine).
+    pub wall: f64,
+}
+
+impl MegaBatchReport {
+    pub fn total_samples(&self) -> u64 {
+        self.per_device.iter().map(|d| d.samples).sum()
+    }
+
+    pub fn total_updates(&self) -> u64 {
+        self.per_device.iter().map(|d| d.updates).sum()
+    }
+
+    pub fn updates(&self) -> Vec<u64> {
+        self.per_device.iter().map(|d| d.updates).collect()
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        let (sum, n) = self
+            .per_device
+            .iter()
+            .fold((0.0, 0u64), |(s, n), d| (s + d.loss_sum, n + d.updates));
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Straggler delay: barrier wall minus the busiest device's... i.e. how
+    /// long the *least* busy device idled waiting for the barrier.
+    pub fn max_idle(&self) -> f64 {
+        let min_busy = self.per_device.iter().map(|d| d.busy).fold(f64::INFINITY, f64::min);
+        (self.wall - min_busy).max(0.0)
+    }
+}

@@ -1,0 +1,309 @@
+//! **Algorithm 1 — Batch Size Scaling** (paper §3.2).
+//!
+//! Goal: steady state in which every device performs the same number of
+//! model updates per mega-batch. After each merge, a device whose update
+//! count `u_i` exceeded the fleet average `μ̃` gets its batch enlarged by
+//! `β · (u_i − μ̃)` (and its learning rate linearly rescaled); a device that
+//! fell behind gets it shrunk — both only while the result stays inside
+//! `[b_min, b_max]`.
+//!
+//! One deviation from the paper's pseudo-code, forced by AOT static shapes:
+//! batch sizes are quantized to the grid `{b_min, b_min+β, …, b_max}`
+//! (DESIGN.md §3). The proposed size is computed exactly as in the paper and
+//! then rounded to the nearest grid point; since `β` is the grid pitch this
+//! changes a proposal by at most `β/2`.
+
+use crate::config::SgdConfig;
+
+/// Outcome of one scaling pass (Fig. 12a trace material).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalingOutcome {
+    /// Whether any device's batch size changed.
+    pub changed: bool,
+    /// Average update count used as the target.
+    pub mean_updates: f64,
+}
+
+/// Round `b` to the nearest point of the grid {b_min + k·β} within bounds.
+pub fn round_to_grid(b: f64, cfg: &SgdConfig) -> usize {
+    let beta = cfg.beta as f64;
+    let k = ((b - cfg.b_min as f64) / beta).round().max(0.0);
+    let snapped = cfg.b_min + (k as usize) * cfg.beta;
+    snapped.min(cfg.b_max)
+}
+
+/// Algorithm 1. `batch_sizes`, `lrs` and `updates` are indexed by device.
+pub fn rescale(
+    batch_sizes: &mut [usize],
+    lrs: &mut [f32],
+    updates: &[u64],
+    cfg: &SgdConfig,
+) -> ScalingOutcome {
+    assert_eq!(batch_sizes.len(), lrs.len());
+    assert_eq!(batch_sizes.len(), updates.len());
+    assert!(!batch_sizes.is_empty());
+
+    // Line 1: average number of model updates per device.
+    let mean = updates.iter().sum::<u64>() as f64 / updates.len() as f64;
+    let mut changed = false;
+
+    for i in 0..batch_sizes.len() {
+        let u = updates[i] as f64;
+        let b = batch_sizes[i] as f64;
+        let beta = cfg.beta as f64;
+        let proposal = if u > mean {
+            // Lines 3–5: faster device → larger batches (and larger lr).
+            let p = b + beta * (u - mean);
+            if p > cfg.b_max as f64 {
+                continue;
+            }
+            p
+        } else if u < mean {
+            // Lines 6–8: slower device → smaller batches.
+            let p = b - beta * (mean - u);
+            if p < cfg.b_min as f64 {
+                continue;
+            }
+            p
+        } else {
+            continue;
+        };
+        let new_b = round_to_grid(proposal, cfg);
+        if new_b != batch_sizes[i] {
+            // Linear-scaling rule: lr follows the batch size ratio.
+            lrs[i] *= new_b as f32 / batch_sizes[i] as f32;
+            batch_sizes[i] = new_b;
+            changed = true;
+        }
+    }
+    ScalingOutcome { changed, mean_updates: mean }
+}
+
+/// Scaling-frequency controller (paper §3.2: "if stability is achieved or
+/// the system enters an oscillatory state, the frequency at which scaling
+/// is performed can be increased").
+///
+/// Tracks recent batch-size vectors; [`ScalingState::should_scale`] goes
+/// false while the fleet is stable (three identical snapshots) or
+/// oscillating (an a,b,a,b flip on any device), then re-arms after a
+/// cool-down so the controller keeps responding to genuine drift.
+#[derive(Clone, Debug, Default)]
+pub struct ScalingState {
+    history: Vec<Vec<usize>>,
+    cooldown: usize,
+}
+
+impl ScalingState {
+    const WINDOW: usize = 4;
+    const COOLDOWN: usize = 3;
+
+    pub fn observe(&mut self, sizes: &[usize]) {
+        self.history.push(sizes.to_vec());
+        if self.history.len() > Self::WINDOW {
+            self.history.remove(0);
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+    }
+
+    /// Last three observed vectors identical.
+    pub fn stable(&self) -> bool {
+        self.history.len() >= 3 && self.history.iter().rev().take(3).all(|v| v == &self.history[self.history.len() - 1])
+    }
+
+    /// Any device flip-flopping a,b,a,b with a != b over the window.
+    pub fn oscillating(&self) -> bool {
+        if self.history.len() < Self::WINDOW {
+            return false;
+        }
+        let h = &self.history[self.history.len() - Self::WINDOW..];
+        let devices = h[0].len();
+        (0..devices).any(|d| h[0][d] == h[2][d] && h[1][d] == h[3][d] && h[0][d] != h[1][d])
+    }
+
+    /// Whether Algorithm 1 should run at this merge point.
+    pub fn should_scale(&mut self) -> bool {
+        if self.cooldown > 0 {
+            return false;
+        }
+        if self.oscillating() || self.stable() {
+            self.cooldown = Self::COOLDOWN;
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, Gen};
+    use crate::util::rng::Rng;
+
+    fn cfg() -> SgdConfig {
+        SgdConfig { b_min: 16, b_max: 128, beta: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn equal_updates_is_a_fixed_point() {
+        let c = cfg();
+        let mut b = vec![64, 64, 64, 64];
+        let mut lr = vec![0.05f32; 4];
+        let out = rescale(&mut b, &mut lr, &[10, 10, 10, 10], &c);
+        assert!(!out.changed);
+        assert_eq!(b, vec![64, 64, 64, 64]);
+        assert_eq!(lr, vec![0.05; 4]);
+    }
+
+    #[test]
+    fn faster_device_gets_larger_batch_and_lr() {
+        let c = cfg();
+        let mut b = vec![64, 64];
+        let mut lr = vec![0.05f32, 0.05];
+        // Device 0 did 12 updates, device 1 did 8 -> mean 10.
+        let out = rescale(&mut b, &mut lr, &[12, 8], &c);
+        assert!(out.changed);
+        // 64 + 8*(12-10) = 80 ; 64 - 8*(10-8) = 48.
+        assert_eq!(b, vec![80, 48]);
+        assert!((lr[0] - 0.05 * 80.0 / 64.0).abs() < 1e-7);
+        assert!((lr[1] - 0.05 * 48.0 / 64.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bounds_freeze_out_of_range_proposals() {
+        let c = cfg();
+        // Proposal above b_max: unchanged (paper's guard, not clamping).
+        let mut b = vec![120, 64];
+        let mut lr = vec![0.05f32, 0.05];
+        rescale(&mut b, &mut lr, &[20, 0], &c);
+        assert_eq!(b[0], 120, "over-max proposal must leave size unchanged");
+        // Proposal below b_min: unchanged.
+        let mut b = vec![24, 64];
+        let mut lr = vec![0.05f32, 0.05];
+        rescale(&mut b, &mut lr, &[0, 20], &c);
+        assert_eq!(b[0], 24);
+    }
+
+    #[test]
+    fn fractional_mean_rounds_to_grid() {
+        let c = cfg();
+        let mut b = vec![64, 64, 64];
+        let mut lr = vec![0.05f32; 3];
+        // mean = 10.3333…; deviations ±fractional.
+        rescale(&mut b, &mut lr, &[11, 10, 10], &c);
+        for &bb in &b {
+            assert_eq!((bb - c.b_min) % c.beta, 0, "batch {bb} off-grid");
+        }
+    }
+
+    #[test]
+    fn round_to_grid_snaps_and_clamps() {
+        let c = cfg();
+        assert_eq!(round_to_grid(63.9, &c), 64);
+        assert_eq!(round_to_grid(68.0, &c), 72); // 68 is 4 from 64, 4 from 72 -> round half up
+        assert_eq!(round_to_grid(10.0, &c), 16);
+        assert_eq!(round_to_grid(1000.0, &c), 128);
+    }
+
+    /// Property: scaling never leaves the grid or the [b_min, b_max] bounds,
+    /// and preserves the lr/batch linear-scaling coupling.
+    #[test]
+    fn prop_invariants_hold() {
+        let c = cfg();
+        let gen = prop::VecU64 { min_len: 1, max_len: 9, item_lo: 0, item_hi: 60 };
+        prop::check(300, 0xC0FFEE, gen, |updates| {
+            let n = updates.len();
+            let mut rng = Rng::new(updates.iter().sum::<u64>() ^ n as u64);
+            let grid: Vec<usize> = (c.b_min..=c.b_max).step_by(c.beta).collect();
+            let mut b: Vec<usize> =
+                (0..n).map(|_| grid[rng.range(0, grid.len())]).collect();
+            let mut lr: Vec<f32> = b.iter().map(|&bb| 0.05 * bb as f32 / 128.0).collect();
+            let before = b.clone();
+            rescale(&mut b, &mut lr, updates, &c);
+            for (i, &bb) in b.iter().enumerate() {
+                if !(c.b_min..=c.b_max).contains(&bb) {
+                    return Err(format!("device {i} batch {bb} out of bounds"));
+                }
+                if (bb - c.b_min) % c.beta != 0 {
+                    return Err(format!("device {i} batch {bb} off-grid"));
+                }
+                let expect_lr = 0.05 * before[i] as f32 / 128.0 * bb as f32 / before[i] as f32;
+                if (lr[i] - expect_lr).abs() > 1e-6 {
+                    return Err(format!("device {i} lr decoupled: {} vs {expect_lr}", lr[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scaling_state_detects_oscillation() {
+        let mut s = ScalingState::default();
+        for _ in 0..2 {
+            s.observe(&[64, 48]);
+            s.observe(&[72, 48]);
+        }
+        assert!(s.oscillating());
+        assert!(!s.should_scale(), "oscillation must pause scaling");
+        // Cooldown elapses, new drifting observations re-arm the controller.
+        s.observe(&[64, 48]);
+        s.observe(&[80, 40]);
+        s.observe(&[88, 32]);
+        assert!(!s.oscillating());
+        assert!(s.should_scale());
+    }
+
+    #[test]
+    fn scaling_state_detects_stability() {
+        let mut s = ScalingState::default();
+        s.observe(&[64, 64]);
+        assert!(!s.stable(), "needs three snapshots");
+        s.observe(&[64, 64]);
+        s.observe(&[64, 64]);
+        assert!(s.stable());
+        assert!(!s.should_scale());
+    }
+
+    #[test]
+    fn scaling_state_allows_drift() {
+        let mut s = ScalingState::default();
+        s.observe(&[128, 128]);
+        s.observe(&[120, 128]);
+        s.observe(&[112, 120]);
+        s.observe(&[104, 112]);
+        assert!(!s.oscillating());
+        assert!(!s.stable());
+        assert!(s.should_scale());
+    }
+
+    /// Property: iterating scaling with update counts proportional to an
+    /// (inverse) speed model converges to a steady state where faster
+    /// devices hold strictly-no-smaller batches.
+    #[test]
+    fn converges_to_speed_ordered_steady_state() {
+        let c = cfg();
+        let speeds = [1.0f64, 1.1, 1.21, 1.32]; // slowdown factors
+        let mut b = vec![c.b_max; 4];
+        let mut lr = vec![0.05f32; 4];
+        let mega = 100 * c.b_max; // samples per mega-batch
+        for _ in 0..40 {
+            // Updates ∝ share of the mega-batch each device wins when its
+            // throughput is batch/(slowdown * batch-time). With per-sample-
+            // dominated cost, update rate ∝ 1/(speed * b) and samples/s ∝
+            // 1/speed; devices split the budget by sample rate.
+            let rate: Vec<f64> = speeds.iter().map(|s| 1.0 / s).collect();
+            let total_rate: f64 = rate.iter().sum();
+            let updates: Vec<u64> = (0..4)
+                .map(|i| {
+                    let samples = mega as f64 * rate[i] / total_rate;
+                    (samples / b[i] as f64).round() as u64
+                })
+                .collect();
+            rescale(&mut b, &mut lr, &updates, &c);
+        }
+        // Fastest device ends with the largest batch, slowest the smallest.
+        assert!(b[0] >= b[1] && b[1] >= b[2] && b[2] >= b[3], "{b:?}");
+        assert!(b[0] > b[3], "scaling failed to differentiate: {b:?}");
+    }
+}

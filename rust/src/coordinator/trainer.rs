@@ -1,0 +1,582 @@
+//! The training session: strategy dispatch, model merging, batch scaling,
+//! evaluation, and metrics — the outer loop of Figure 4.
+//!
+//! One `Trainer` drives one run of one strategy:
+//!
+//! * **Adaptive** — dynamic dispatch over a sample-budget mega-batch, then
+//!   Algorithm 2 merging (normalized weights + perturbation + momentum) and
+//!   Algorithm 1 batch-size scaling.
+//! * **Elastic** — static equal batches, plain average merge with the same
+//!   momentum update rule (the paper implements both in HeteroGPU with the
+//!   same update rule; Fig. 6 note).
+//! * **SyncGradAgg** — the TensorFlow-mirrored analog: per-device batch
+//!   `b_max/G`, merge after *every* round; a configurable framework-overhead
+//!   multiplier models TF's slower epoch execution.
+//! * **Crossbow** — dynamic dispatch with per-batch replica correction
+//!   toward the fleet average, plain average merge at mega-batch ends.
+//!
+//! The training clock *excludes* evaluation time (paper §5.1 methodology).
+
+use crate::allreduce::{self, Algo};
+use crate::config::{Config, Strategy};
+use crate::data::batcher::{Batcher, EvalBatches};
+use crate::data::SparseDataset;
+use crate::metrics::{MegaBatchRow, RunLog};
+use crate::model::ModelState;
+use crate::Result;
+
+use super::backend::StepBackend;
+use super::engine_sim::SimEngine;
+use super::engine_threaded::ThreadedEngine;
+use super::plan::{DispatchMode, DispatchPlan, MegaBatchReport};
+use super::{merge, scaling};
+
+/// Either engine, unified behind one dispatch call.
+pub enum Engine<'b> {
+    Sim(SimEngine<'b>),
+    Threaded(ThreadedEngine),
+}
+
+impl<'b> Engine<'b> {
+    fn run_mega_batch(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport> {
+        match self {
+            Engine::Sim(e) => e.run_mega_batch(replicas, batcher, plan),
+            Engine::Threaded(e) => e.run_mega_batch(replicas, batcher, plan),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    /// Stop once the training clock exceeds this many seconds.
+    pub time_budget: Option<f64>,
+    /// Evaluate every k mega-batches (1 = the paper's cadence).
+    pub eval_every: usize,
+    /// All-reduce variant used for merging.
+    pub allreduce: Algo,
+    /// Evaluation batch bucket. With a PJRT eval backend this MUST equal the
+    /// manifest's `eval_batch`; `None` picks a reference-backend-friendly
+    /// default.
+    pub eval_bucket: Option<usize>,
+    /// Resume from this model instead of a fresh initialization.
+    pub init_model: Option<crate::model::ModelState>,
+    /// Save the merged global model here after every mega-batch (atomic).
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            time_budget: None,
+            eval_every: 1,
+            allreduce: Algo::Ring,
+            eval_bucket: None,
+            init_model: None,
+            checkpoint: None,
+            verbose: false,
+        }
+    }
+}
+
+pub struct Trainer<'b> {
+    pub cfg: Config,
+    pub engine: Engine<'b>,
+    pub eval_backend: &'b dyn StepBackend,
+    pub opts: TrainerOptions,
+}
+
+impl<'b> Trainer<'b> {
+    pub fn new(
+        cfg: Config,
+        engine: Engine<'b>,
+        eval_backend: &'b dyn StepBackend,
+        opts: TrainerOptions,
+    ) -> Self {
+        Trainer { cfg, engine, eval_backend, opts }
+    }
+
+    /// Train on `train`, evaluating P@1 on `test` after every merge window.
+    pub fn run(&mut self, train: &SparseDataset, test: &SparseDataset) -> Result<RunLog> {
+        let cfg = self.cfg.clone();
+        let g = cfg.devices.count;
+        let dims = cfg.model.clone();
+        let strategy = cfg.strategy.kind;
+
+        let mut log = RunLog::new(format!("{}-{}gpu", strategy.name(), g));
+        let mut batcher = Batcher::new(train, &dims, cfg.sgd.seed);
+        let eval_bucket = self.eval_bucket();
+        let eval_batches = EvalBatches::new(test, &dims, eval_bucket);
+
+        // Global model + momentum history + per-device replicas.
+        let mut global = match self.opts.init_model.take() {
+            Some(m) => {
+                anyhow::ensure!(m.dims == dims, "resume model dims mismatch");
+                m
+            }
+            None => ModelState::init(&dims, cfg.sgd.seed),
+        };
+        let mut global_prev = global.clone();
+        let mut replicas: Vec<ModelState> = vec![global.clone(); g];
+
+        // Per-device adaptive state.
+        let mut batch_sizes = vec![cfg.sgd.initial_batch; g];
+        let mut lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); g];
+        let mut scaling_state = scaling::ScalingState::default();
+
+        let mut clock = 0.0f64;
+        let mut samples = 0u64;
+
+        for mb in 0..cfg.sgd.num_mega_batches {
+            if let Some(budget) = self.opts.time_budget {
+                if clock >= budget {
+                    break;
+                }
+            }
+            // Goyal-style linear warmup on every device's learning rate.
+            let warmup = warmup_factor(mb, cfg.sgd.warmup_mega_batches);
+
+            let (report, merge_secs, perturbed) = match strategy {
+                Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
+                    let mut plan = self.plan_for(strategy, &batch_sizes, &lrs);
+                    for lr in plan.lrs.iter_mut() {
+                        *lr *= warmup;
+                    }
+                    let report = self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
+                    clock += report.wall;
+
+                    // ---- merge (Algorithm 2 for Adaptive) -----------------
+                    let updates = report.updates();
+                    let outcome = match strategy {
+                        Strategy::Adaptive => {
+                            let l2s: Vec<f64> =
+                                replicas.iter().map(|r| r.l2_per_param()).collect();
+                            merge::compute_weights(&updates, &batch_sizes, &l2s, &cfg.merge)
+                        }
+                        _ => merge::MergeOutcome {
+                            weights: vec![1.0 / g as f64; g],
+                            perturbed: false,
+                            by_updates: false,
+                        },
+                    };
+                    let mut merged = ModelState::zeros(&dims);
+                    let refs: Vec<&ModelState> = replicas.iter().collect();
+                    let stats = allreduce::allreduce_merge(
+                        &mut merged,
+                        &refs,
+                        &outcome.weights,
+                        self.opts.allreduce,
+                        g,
+                        &self.cost(),
+                    );
+                    // Momentum global update for the HeteroGPU strategies.
+                    let momentum = match strategy {
+                        Strategy::Adaptive | Strategy::Elastic => cfg.merge.momentum,
+                        _ => 0.0,
+                    };
+                    merge::momentum_update(&mut global, &mut global_prev, &merged, momentum);
+                    clock += stats.seconds;
+
+                    // ---- Algorithm 1 (Adaptive only), gated by the
+                    // stability/oscillation controller -----------------------
+                    scaling_state.observe(&batch_sizes);
+                    if strategy == Strategy::Adaptive
+                        && cfg.strategy.batch_scaling
+                        && scaling_state.should_scale()
+                    {
+                        scaling::rescale(&mut batch_sizes, &mut lrs, &updates, &cfg.sgd);
+                    }
+                    (report, stats.seconds, outcome.perturbed)
+                }
+                Strategy::SyncGradAgg => {
+                    // One "mega-batch" worth of synchronous rounds, merging
+                    // after every round (gradient aggregation ≡ averaging
+                    // one-step replicas).
+                    let b_tf = scaling::round_to_grid(
+                        (cfg.sgd.b_max as f64 / g as f64).max(cfg.sgd.b_min as f64),
+                        &cfg.sgd,
+                    );
+                    let rounds =
+                        (cfg.sgd.mega_batch_samples() / (g * b_tf)).max(1);
+                    let mut agg: Option<MegaBatchReport> = None;
+                    let mut merge_total = 0.0;
+                    for _ in 0..rounds {
+                        let plan = DispatchPlan {
+                            mode: DispatchMode::StaticQuota { batches_per_device: 1 },
+                            batch_sizes: vec![b_tf; g],
+                            lrs: vec![cfg.lr_for_batch(b_tf) * warmup; g],
+                            sample_budget: 0,
+                            crossbow_rate: None,
+                        };
+                        let report =
+                            self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
+                        clock += report.wall * cfg.strategy.sync_overhead;
+
+                        let mut merged = ModelState::zeros(&dims);
+                        let refs: Vec<&ModelState> = replicas.iter().collect();
+                        let stats = allreduce::allreduce_merge(
+                            &mut merged,
+                            &refs,
+                            &vec![1.0 / g as f64; g],
+                            self.opts.allreduce,
+                            g,
+                            &self.cost(),
+                        );
+                        clock += stats.seconds * cfg.strategy.sync_overhead;
+                        merge_total += stats.seconds;
+                        global_prev = global.clone();
+                        global = merged;
+                        for r in replicas.iter_mut() {
+                            *r = global.clone();
+                        }
+                        agg = Some(match agg.take() {
+                            None => report,
+                            Some(mut acc) => {
+                                for (a, b) in acc.per_device.iter_mut().zip(report.per_device) {
+                                    a.updates += b.updates;
+                                    a.samples += b.samples;
+                                    a.busy += b.busy;
+                                    a.loss_sum += b.loss_sum;
+                                    a.nnz += b.nnz;
+                                }
+                                acc.wall += report.wall;
+                                acc
+                            }
+                        });
+                    }
+                    (agg.unwrap(), merge_total, false)
+                }
+            };
+
+            // Reset replicas to the merged global model for the next window.
+            if strategy != Strategy::SyncGradAgg {
+                for r in replicas.iter_mut() {
+                    *r = global.clone();
+                }
+            }
+
+            samples += report.total_samples();
+
+            // ---- evaluate (excluded from the training clock) --------------
+            let accuracy = if (mb + 1) % self.opts.eval_every == 0 {
+                crate::eval::p_at_1(self.eval_backend, &global, &eval_batches, test)?
+            } else {
+                log.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
+            };
+
+            // Hardware efficiency: fraction of the barrier window each
+            // device spent busy (1.0 = no straggler idling).
+            let utilization: Vec<f64> = report
+                .per_device
+                .iter()
+                .map(|d| if report.wall > 0.0 { (d.busy / report.wall).min(1.0) } else { 1.0 })
+                .collect();
+
+            let row = MegaBatchRow {
+                mega_batch: mb,
+                clock,
+                samples,
+                loss: report.mean_loss(),
+                accuracy,
+                batch_sizes: batch_sizes.clone(),
+                updates: report.updates(),
+                perturbed,
+                merge_time: merge_secs,
+                l2_per_param: global.l2_per_param(),
+                utilization,
+            };
+            if let Some(path) = &self.opts.checkpoint {
+                crate::model::checkpoint::save(&global, path)?;
+            }
+            if self.opts.verbose {
+                println!(
+                    "[{}] mb={:<3} clock={:>8.3}s loss={:<8.4} P@1={:<6.4} b={:?} u={:?}{}",
+                    log.name,
+                    mb,
+                    clock,
+                    row.loss,
+                    accuracy,
+                    row.batch_sizes,
+                    row.updates,
+                    if perturbed { " pert" } else { "" }
+                );
+            }
+            log.push(row);
+        }
+        Ok(log)
+    }
+
+    fn plan_for(&self, strategy: Strategy, batch_sizes: &[usize], lrs: &[f32]) -> DispatchPlan {
+        let cfg = &self.cfg;
+        let g = cfg.devices.count;
+        match strategy {
+            Strategy::Adaptive => DispatchPlan {
+                mode: DispatchMode::Dynamic,
+                batch_sizes: batch_sizes.to_vec(),
+                lrs: lrs.to_vec(),
+                sample_budget: cfg.sgd.mega_batch_samples(),
+                crossbow_rate: None,
+            },
+            Strategy::Elastic => {
+                let b = cfg.sgd.b_max;
+                DispatchPlan {
+                    mode: DispatchMode::StaticQuota {
+                        batches_per_device: (cfg.sgd.mega_batch_samples() / (g * b)).max(1),
+                    },
+                    batch_sizes: vec![b; g],
+                    lrs: vec![cfg.lr_for_batch(b); g],
+                    sample_budget: 0,
+                    crossbow_rate: None,
+                }
+            }
+            Strategy::Crossbow => DispatchPlan {
+                mode: DispatchMode::Dynamic,
+                batch_sizes: vec![cfg.sgd.b_max; g],
+                lrs: vec![cfg.lr_for_batch(cfg.sgd.b_max); g],
+                sample_budget: cfg.sgd.mega_batch_samples(),
+                crossbow_rate: Some(cfg.strategy.crossbow_rate),
+            },
+            Strategy::SyncGradAgg => unreachable!("sync handled inline"),
+        }
+    }
+
+    fn eval_bucket(&self) -> usize {
+        self.opts
+            .eval_bucket
+            .unwrap_or_else(|| 256.min(self.cfg.data.test_samples.max(1)).max(1))
+    }
+
+    fn cost(&self) -> crate::runtime::CostModel {
+        match &self.engine {
+            Engine::Sim(e) => e.cost,
+            Engine::Threaded(_) => crate::runtime::CostModel::default(),
+        }
+    }
+}
+
+/// Linear warmup multiplier for mega-batch `mb` (1.0 once warmup is over or
+/// disabled).
+fn warmup_factor(mb: usize, warmup_mega_batches: usize) -> f32 {
+    if warmup_mega_batches == 0 {
+        1.0
+    } else {
+        (((mb + 1) as f32) / warmup_mega_batches as f32).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
+    use crate::coordinator::backend::RefBackend;
+    use crate::data::synthetic::Generator;
+    use crate::runtime::{CostModel, SimDevice};
+
+    fn test_config(strategy: Strategy, g: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+        cfg.sgd = SgdConfig {
+            b_min: 8,
+            b_max: 32,
+            beta: 4,
+            lr_bmax: 0.4,
+            mega_batches: 24,
+            num_mega_batches: 6,
+            initial_batch: 32,
+            warmup_mega_batches: 0,
+            seed: 7,
+        };
+        cfg.devices = DeviceConfig {
+            count: g,
+            speed_factors: (0..g).map(|i| 1.0 + 0.32 * i as f64 / (g.max(2) - 1) as f64).collect(),
+            jitter: 0.0,
+            nnz_sensitivity: 1.0,
+            seed: 17,
+        };
+        cfg.data = DataConfig { train_samples: 1500, test_samples: 300, avg_nnz: 6.0, ..Default::default() };
+        cfg.strategy.kind = strategy;
+        cfg.validate().unwrap();
+        cfg
+    }
+
+    fn run_strategy(strategy: Strategy, g: usize) -> RunLog {
+        let cfg = test_config(strategy, g);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine = Engine::Sim(SimEngine::new(
+            &backend,
+            SimDevice::fleet(&cfg.devices),
+            CostModel::default(),
+        ));
+        let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+        trainer.run(&train, &test).unwrap()
+    }
+
+    #[test]
+    fn adaptive_trains_and_improves() {
+        let log = run_strategy(Strategy::Adaptive, 4);
+        assert_eq!(log.rows.len(), 6);
+        assert!(log.rows[5].loss < log.rows[0].loss, "loss should fall");
+        assert!(log.best_accuracy() > 0.15, "acc {}", log.best_accuracy());
+        // Clock advances monotonically.
+        assert!(log.rows.windows(2).all(|w| w[1].clock > w[0].clock));
+    }
+
+    #[test]
+    fn all_strategies_complete_and_learn() {
+        for strategy in Strategy::all() {
+            let log = run_strategy(strategy, 2);
+            assert!(!log.rows.is_empty(), "{strategy:?}");
+            assert!(
+                log.rows.last().unwrap().loss < log.rows[0].loss + 0.1,
+                "{strategy:?} loss went up: {} -> {}",
+                log.rows[0].loss,
+                log.rows.last().unwrap().loss
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_batch_sizes_differentiate_under_heterogeneity() {
+        let log = run_strategy(Strategy::Adaptive, 4);
+        let last = log.rows.last().unwrap();
+        // The slowest device should have drifted below the fastest.
+        assert!(
+            last.batch_sizes[0] > last.batch_sizes[3]
+                || last.batch_sizes.iter().any(|&b| b != last.batch_sizes[0]),
+            "batch sizes never adapted: {:?}",
+            last.batch_sizes
+        );
+    }
+
+    #[test]
+    fn elastic_keeps_static_batches() {
+        let log = run_strategy(Strategy::Elastic, 4);
+        for row in &log.rows {
+            assert!(row.batch_sizes.iter().all(|&b| b == 32));
+            // Equal updates by construction.
+            assert!(row.updates.iter().all(|&u| u == row.updates[0]));
+        }
+    }
+
+    #[test]
+    fn time_budget_stops_early() {
+        let cfg = test_config(Strategy::Adaptive, 2);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(500, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
+        let backend = RefBackend;
+        let engine = Engine::Sim(SimEngine::new(
+            &backend,
+            SimDevice::fleet(&cfg.devices),
+            CostModel::default(),
+        ));
+        let opts = TrainerOptions { time_budget: Some(1e-9), ..Default::default() };
+        let mut trainer = Trainer::new(cfg, engine, &backend, opts);
+        let log = trainer.run(&train, &test).unwrap();
+        assert!(log.rows.len() <= 1);
+    }
+
+    #[test]
+    fn warmup_factor_ramps_linearly() {
+        assert_eq!(warmup_factor(0, 0), 1.0);
+        assert_eq!(warmup_factor(0, 4), 0.25);
+        assert_eq!(warmup_factor(1, 4), 0.5);
+        assert_eq!(warmup_factor(3, 4), 1.0);
+        assert_eq!(warmup_factor(100, 4), 1.0);
+    }
+
+    #[test]
+    fn warmup_slows_early_updates() {
+        // With warmup the first mega-batch moves the model strictly less.
+        let mut cfg = test_config(Strategy::Adaptive, 2);
+        cfg.sgd.num_mega_batches = 1;
+        let run = |cfg: &Config| {
+            let train = Generator::new(&cfg.model, &cfg.data).generate(800, 1);
+            let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
+            let backend = RefBackend;
+            let engine = Engine::Sim(SimEngine::new(
+                &backend,
+                SimDevice::fleet(&cfg.devices),
+                CostModel::default(),
+            ));
+            let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+            let log = trainer.run(&train, &test).unwrap();
+            log.rows[0].l2_per_param
+        };
+        let no_warmup = run(&cfg);
+        cfg.sgd.warmup_mega_batches = 10;
+        let with_warmup = run(&cfg);
+        // Warmup shrinks the first-step learning rates 10x, so the merged
+        // model stays closer to the (zero-bias) init -> smaller L2 drift
+        // relative to the aggressive run is not guaranteed in general, but
+        // the two must at least differ, proving warmup reached the plan.
+        assert_ne!(no_warmup, with_warmup);
+    }
+
+    #[test]
+    fn checkpoint_and_resume_round_trip() {
+        let dir = std::env::temp_dir().join("hs-trainer-ckpt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("global.ckpt");
+
+        let cfg = test_config(Strategy::Adaptive, 2);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(800, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
+        let backend = RefBackend;
+        let engine = Engine::Sim(SimEngine::new(
+            &backend,
+            SimDevice::fleet(&cfg.devices),
+            CostModel::default(),
+        ));
+        let opts = TrainerOptions { checkpoint: Some(path.clone()), ..Default::default() };
+        let mut trainer = Trainer::new(cfg.clone(), engine, &backend, opts);
+        trainer.run(&train, &test).unwrap();
+        assert!(path.exists());
+
+        // Resume from the checkpoint: first-row loss must be well below a
+        // fresh run's first-row loss.
+        let saved = crate::model::checkpoint::load(&path).unwrap();
+        let engine2 = Engine::Sim(SimEngine::new(
+            &backend,
+            SimDevice::fleet(&cfg.devices),
+            CostModel::default(),
+        ));
+        let opts2 = TrainerOptions { init_model: Some(saved), ..Default::default() };
+        let mut resumed = Trainer::new(cfg.clone(), engine2, &backend, opts2);
+        let log2 = resumed.run(&train, &test).unwrap();
+
+        let engine3 = Engine::Sim(SimEngine::new(
+            &backend,
+            SimDevice::fleet(&cfg.devices),
+            CostModel::default(),
+        ));
+        let mut fresh = Trainer::new(cfg, engine3, &backend, TrainerOptions::default());
+        let fresh_log = fresh.run(&train, &test).unwrap();
+        assert!(
+            log2.rows[0].loss < fresh_log.rows[0].loss,
+            "resumed run should start ahead: {} vs {}",
+            log2.rows[0].loss,
+            fresh_log.rows[0].loss
+        );
+    }
+
+    #[test]
+    fn deterministic_runs_with_zero_jitter() {
+        let a = run_strategy(Strategy::Adaptive, 3);
+        let b = run_strategy(Strategy::Adaptive, 3);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.clock, y.clock);
+            assert_eq!(x.loss, y.loss);
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.batch_sizes, y.batch_sizes);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Padded batch assembly for the AOT step executables.
+//!
+//! The step HLOs have static shapes `(bucket, K)` / `(bucket, L)`; this
+//! module turns CSR samples into those padded buffers. Padding rules (must
+//! match `python/compile/model.py`):
+//!
+//! * feature padding: index 0 with value 0.0 (inert in the gather-SpMM),
+//! * label padding: label 0 with weight 0.0,
+//! * sample padding (bucket > valid): `smask = 0.0` rows that contribute
+//!   nothing to the loss or gradient,
+//! * label weights are the normalized multi-hot `1/|labels|` (SLIDE-style).
+//!
+//! The batcher streams the dataset in epoch-shuffled order and reshuffles at
+//! wrap-around, so dynamic scheduling can keep drawing batches forever.
+
+use crate::config::ModelDims;
+use crate::util::rng::Rng;
+
+use super::sparse::SparseDataset;
+
+/// A batch padded to a static bucket shape, ready for literal upload.
+#[derive(Clone, Debug)]
+pub struct PaddedBatch {
+    /// Static batch dimension (a bucket-grid size).
+    pub bucket: usize,
+    /// Number of real samples (<= bucket); the rest are masked padding.
+    pub valid: usize,
+    /// int32[bucket * K] padded feature indices.
+    pub idx: Vec<i32>,
+    /// f32[bucket * K] padded feature values.
+    pub val: Vec<f32>,
+    /// int32[bucket * L] padded label indices.
+    pub lab: Vec<i32>,
+    /// f32[bucket * L] normalized label weights.
+    pub lab_w: Vec<f32>,
+    /// f32[bucket] sample validity mask.
+    pub smask: Vec<f32>,
+    /// Total true non-zeros in the batch (drives the cost model, mirroring
+    /// the paper's sparse-data-sensitivity observation).
+    pub nnz: usize,
+    /// Dataset row ids of the real samples (property tests: routing
+    /// conservation).
+    pub sample_ids: Vec<u32>,
+}
+
+impl PaddedBatch {
+    pub fn shape_checks(&self, dims: &ModelDims) {
+        debug_assert_eq!(self.idx.len(), self.bucket * dims.max_nnz);
+        debug_assert_eq!(self.val.len(), self.bucket * dims.max_nnz);
+        debug_assert_eq!(self.lab.len(), self.bucket * dims.max_labels);
+        debug_assert_eq!(self.lab_w.len(), self.bucket * dims.max_labels);
+        debug_assert_eq!(self.smask.len(), self.bucket);
+    }
+}
+
+/// Epoch-shuffled batch stream.
+pub struct Batcher<'a> {
+    ds: &'a SparseDataset,
+    dims: ModelDims,
+    order: Vec<u32>,
+    cursor: usize,
+    rng: Rng,
+    /// Monotone count of samples handed out (all epochs).
+    pub samples_served: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a SparseDataset, dims: &ModelDims, seed: u64) -> Self {
+        assert!(!ds.is_empty(), "cannot batch an empty dataset");
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<u32> = (0..ds.len() as u32).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, dims: dims.clone(), order, cursor: 0, rng, samples_served: 0 }
+    }
+
+    /// Fraction of the current epoch consumed.
+    pub fn epoch_progress(&self) -> f64 {
+        self.cursor as f64 / self.order.len() as f64
+    }
+
+    /// Assemble the next batch: `valid` real samples padded to `bucket`.
+    pub fn next_batch(&mut self, bucket: usize, valid: usize) -> PaddedBatch {
+        assert!(valid >= 1 && valid <= bucket, "need 1 <= valid({valid}) <= bucket({bucket})");
+        let k = self.dims.max_nnz;
+        let l = self.dims.max_labels;
+        let mut batch = PaddedBatch {
+            bucket,
+            valid,
+            idx: vec![0; bucket * k],
+            val: vec![0.0; bucket * k],
+            lab: vec![0; bucket * l],
+            lab_w: vec![0.0; bucket * l],
+            smask: vec![0.0; bucket],
+            nnz: 0,
+            sample_ids: Vec::with_capacity(valid),
+        };
+        for row in 0..valid {
+            let id = self.draw();
+            batch.sample_ids.push(id);
+            let s = self.ds.sample(id as usize);
+            let take = s.indices.len().min(k);
+            for (j, (&fi, &fv)) in s.indices.iter().zip(s.values).take(take).enumerate() {
+                batch.idx[row * k + j] = fi as i32;
+                batch.val[row * k + j] = fv;
+            }
+            batch.nnz += take;
+            let nl = s.labels.len().min(l);
+            let w = 1.0 / nl as f32;
+            for (j, &lb) in s.labels.iter().take(nl).enumerate() {
+                batch.lab[row * l + j] = lb as i32;
+                batch.lab_w[row * l + j] = w;
+            }
+            batch.smask[row] = 1.0;
+        }
+        self.samples_served += valid as u64;
+        batch.shape_checks(&self.dims);
+        batch
+    }
+
+    fn draw(&mut self) -> u32 {
+        if self.cursor >= self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+        let id = self.order[self.cursor];
+        self.cursor += 1;
+        id
+    }
+}
+
+/// Padded *evaluation* batches over the test split (fixed bucket; the last
+/// batch is mask-padded). Returns per-batch buffers plus the label sets
+/// needed for the P@1 check.
+pub struct EvalBatches {
+    pub bucket: usize,
+    pub batches: Vec<PaddedBatch>,
+}
+
+impl EvalBatches {
+    pub fn new(ds: &SparseDataset, dims: &ModelDims, bucket: usize) -> Self {
+        let mut batches = Vec::new();
+        let k = dims.max_nnz;
+        let l = dims.max_labels;
+        let mut row = 0usize;
+        while row < ds.len() {
+            let valid = (ds.len() - row).min(bucket);
+            let mut b = PaddedBatch {
+                bucket,
+                valid,
+                idx: vec![0; bucket * k],
+                val: vec![0.0; bucket * k],
+                lab: vec![0; bucket * l],
+                lab_w: vec![0.0; bucket * l],
+                smask: vec![0.0; bucket],
+                nnz: 0,
+                sample_ids: Vec::with_capacity(valid),
+            };
+            for r in 0..valid {
+                let id = (row + r) as u32;
+                b.sample_ids.push(id);
+                let s = ds.sample(id as usize);
+                let take = s.indices.len().min(k);
+                for (j, (&fi, &fv)) in s.indices.iter().zip(s.values).take(take).enumerate() {
+                    b.idx[r * k + j] = fi as i32;
+                    b.val[r * k + j] = fv;
+                }
+                b.nnz += take;
+                let nl = s.labels.len().min(l);
+                let w = 1.0 / nl as f32;
+                for (j, &lb) in s.labels.iter().take(nl).enumerate() {
+                    b.lab[r * l + j] = lb as i32;
+                    b.lab_w[r * l + j] = w;
+                }
+                b.smask[r] = 1.0;
+            }
+            batches.push(b);
+            row += valid;
+        }
+        EvalBatches { bucket, batches }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::synthetic::Generator;
+
+    fn dataset() -> (ModelDims, SparseDataset) {
+        let dims = ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 16, max_labels: 4 };
+        let cfg = DataConfig { train_samples: 100, avg_nnz: 6.0, ..Default::default() };
+        let ds = Generator::new(&dims, &cfg).generate(100, 1);
+        (dims, ds)
+    }
+
+    #[test]
+    fn batch_shapes_and_masks() {
+        let (dims, ds) = dataset();
+        let mut b = Batcher::new(&ds, &dims, 1);
+        let batch = b.next_batch(32, 20);
+        assert_eq!(batch.smask.iter().filter(|&&m| m == 1.0).count(), 20);
+        assert_eq!(batch.smask[20..].iter().filter(|&&m| m == 0.0).count(), 12);
+        assert_eq!(batch.idx.len(), 32 * 16);
+        assert_eq!(batch.sample_ids.len(), 20);
+        // Padding rows have zero values everywhere.
+        for r in 20..32 {
+            assert!(batch.val[r * 16..(r + 1) * 16].iter().all(|&v| v == 0.0));
+            assert!(batch.lab_w[r * 4..(r + 1) * 4].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn label_weights_normalized_per_sample() {
+        let (dims, ds) = dataset();
+        let mut b = Batcher::new(&ds, &dims, 2);
+        let batch = b.next_batch(16, 16);
+        for r in 0..16 {
+            let sum: f32 = batch.lab_w[r * 4..(r + 1) * 4].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} weight sum {sum}");
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_samples_before_repeat() {
+        let (dims, ds) = dataset();
+        let mut b = Batcher::new(&ds, &dims, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let batch = b.next_batch(10, 10);
+            for &id in &batch.sample_ids {
+                assert!(seen.insert(id), "sample {id} repeated within epoch");
+            }
+        }
+        assert_eq!(seen.len(), 100);
+        // Next draw starts a fresh epoch.
+        let batch = b.next_batch(10, 10);
+        assert!(batch.sample_ids.iter().all(|id| seen.contains(id)));
+    }
+
+    #[test]
+    fn nnz_counts_true_nonzeros() {
+        let (dims, ds) = dataset();
+        let mut b = Batcher::new(&ds, &dims, 4);
+        let batch = b.next_batch(8, 8);
+        let expected: usize =
+            batch.sample_ids.iter().map(|&id| ds.nnz(id as usize).min(dims.max_nnz)).sum();
+        assert_eq!(batch.nnz, expected);
+    }
+
+    #[test]
+    fn eval_batches_cover_test_set_once() {
+        let (dims, ds) = dataset();
+        let eb = EvalBatches::new(&ds, &dims, 32);
+        let total: usize = eb.batches.iter().map(|b| b.valid).sum();
+        assert_eq!(total, ds.len());
+        assert_eq!(eb.batches.len(), 4); // 100 samples / 32 -> 3 full + 1 partial
+        assert_eq!(eb.batches[3].valid, 4);
+    }
+}

@@ -1,0 +1,159 @@
+//! libSVM / Extreme-Classification-Repository sparse format I/O.
+//!
+//! The XML repository format (used by Amazon-670k, Delicious-200k) is
+//!
+//! ```text
+//! <num_samples> <num_features> <num_labels>     # header line
+//! l1,l2,...  idx:val idx:val ...                # one line per sample
+//! ```
+//!
+//! We read and write exactly that; plain libSVM files without the header are
+//! accepted too if dimensions are supplied by the caller.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::sparse::{DatasetBuilder, SparseDataset};
+use crate::Result;
+
+/// Read an XML-repository file (header required).
+pub fn read(path: &Path) -> Result<SparseDataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let parts: Vec<usize> = header
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad header line: {header:?}"))?;
+    if parts.len() != 3 {
+        bail!("header must be '<samples> <features> <labels>', got {header:?}");
+    }
+    let (n, num_features, num_classes) = (parts[0], parts[1], parts[2]);
+    let ds = read_body(reader, num_features, num_classes)?;
+    if ds.len() != n {
+        bail!("header claims {n} samples, file has {}", ds.len());
+    }
+    Ok(ds)
+}
+
+/// Read headerless libSVM lines with caller-supplied dimensions.
+pub fn read_headerless(path: &Path, num_features: usize, num_classes: usize) -> Result<SparseDataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    read_body(BufReader::new(file), num_features, num_classes)
+}
+
+fn read_body<R: BufRead>(reader: R, num_features: usize, num_classes: usize) -> Result<SparseDataset> {
+    let mut builder = DatasetBuilder::new(num_features, num_classes);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (labels, indices, values) =
+            parse_line(line).with_context(|| format!("line {}", lineno + 2))?;
+        builder
+            .push(&indices, &values, &labels)
+            .with_context(|| format!("line {}", lineno + 2))?;
+    }
+    let ds = builder.finish();
+    ds.check()?;
+    Ok(ds)
+}
+
+fn parse_line(line: &str) -> Result<(Vec<u32>, Vec<u32>, Vec<f32>)> {
+    let mut tokens = line.split_whitespace();
+    let label_tok = tokens.next().context("missing label field")?;
+    // A first token containing ':' means the sample has no labels — invalid
+    // for training data in this corpus.
+    if label_tok.contains(':') {
+        bail!("sample without labels");
+    }
+    let labels: Vec<u32> = label_tok
+        .split(',')
+        .map(|t| t.trim().parse::<u32>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad label field {label_tok:?}"))?;
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for tok in tokens {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("bad feature token {tok:?}"))?;
+        indices.push(i.parse::<u32>().with_context(|| format!("bad index {i:?}"))?);
+        values.push(v.parse::<f32>().with_context(|| format!("bad value {v:?}"))?);
+    }
+    Ok((labels, indices, values))
+}
+
+/// Write in XML-repository format.
+pub fn write(path: &Path, ds: &SparseDataset) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "{} {} {}", ds.len(), ds.num_features, ds.num_classes)?;
+    for i in 0..ds.len() {
+        let s = ds.sample(i);
+        let labels: Vec<String> = s.labels.iter().map(|l| l.to_string()).collect();
+        write!(w, "{}", labels.join(","))?;
+        for (idx, val) in s.indices.iter().zip(s.values) {
+            write!(w, " {idx}:{val}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::DatasetBuilder;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("heterosparse-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut b = DatasetBuilder::new(100, 10);
+        b.push(&[5, 17], &[0.5, 2.25], &[3, 7]).unwrap();
+        b.push(&[99], &[-1.0], &[0]).unwrap();
+        let ds = b.finish();
+        let path = tmpfile("roundtrip.txt");
+        write(&path, &ds).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.num_features, 100);
+        assert_eq!(back.sample(0).labels, &[3, 7]);
+        assert_eq!(back.sample(0).indices, &[5, 17]);
+        assert_eq!(back.sample(0).values, &[0.5, 2.25]);
+        assert_eq!(back.sample(1).values, &[-1.0]);
+    }
+
+    #[test]
+    fn parses_xml_repo_line() {
+        let (labels, idx, val) = parse_line("12,7 3:0.5 44:1.25").unwrap();
+        assert_eq!(labels, vec![12, 7]);
+        assert_eq!(idx, vec![3, 44]);
+        assert_eq!(val, vec![0.5, 1.25]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_line("3:0.5 4:1.0").is_err()); // no labels
+        assert!(parse_line("1 notafeature").is_err());
+        assert!(parse_line("x,y 3:0.5").is_err());
+    }
+
+    #[test]
+    fn header_mismatch_detected() {
+        let path = tmpfile("badheader.txt");
+        std::fs::write(&path, "5 10 4\n0 1:1.0\n").unwrap();
+        assert!(read(&path).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse-data substrate: CSR dataset storage, libSVM I/O, the synthetic
+//! XML dataset generator (Table 1 substitutes), and padded batch assembly.
+
+pub mod batcher;
+pub mod libsvm;
+pub mod sparse;
+pub mod synthetic;
+
+pub use batcher::{Batcher, PaddedBatch};
+pub use sparse::SparseDataset;

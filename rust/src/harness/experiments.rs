@@ -1,0 +1,392 @@
+//! One runner per paper table/figure (DESIGN.md §5 experiment index).
+//!
+//! Every runner prints the paper-style rows and returns the raw logs so
+//! benches/tests can assert the qualitative *shape* of the result (who
+//! wins, ordering, activation frequencies) without baking in absolute
+//! numbers that depend on the host.
+
+use crate::config::{Config, DataProfile, Strategy};
+use crate::coordinator::trainer::TrainerOptions;
+use crate::data::synthetic::Generator;
+use crate::metrics::RunLog;
+use crate::model::ModelState;
+use crate::runtime::{CostModel, SimDevice};
+use crate::slide::{SlideConfig, SlideTrainer};
+use crate::util::bench::Table;
+use crate::Result;
+
+use super::{apply_full_scale, bench_config, make_data, run_single, Backend};
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "—".to_string())
+}
+
+fn fmt_opt_usize(v: Option<usize>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_else(|| "—".to_string())
+}
+
+/// A common accuracy target all runs are measured against: 85% of the best
+/// accuracy any run achieved (the paper reports time to reach "a certain
+/// level of accuracy").
+pub fn common_target(logs: &[(String, RunLog)]) -> f64 {
+    0.85 * logs.iter().map(|(_, l)| l.best_accuracy()).fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — dataset profiles
+// ---------------------------------------------------------------------------
+
+pub struct Table1Row {
+    pub profile: &'static str,
+    pub samples: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub avg_nnz: f64,
+    pub avg_labels: f64,
+    pub target_nnz: f64,
+    pub target_labels: f64,
+}
+
+pub fn table1() -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for profile in [DataProfile::Amazon, DataProfile::Delicious] {
+        let cfg = bench_config(profile, 4, Strategy::Adaptive);
+        let ds = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        rows.push(Table1Row {
+            profile: profile.name(),
+            samples: ds.len(),
+            features: ds.num_features,
+            classes: ds.num_classes,
+            avg_nnz: ds.avg_nnz(),
+            avg_labels: ds.avg_labels(),
+            target_nnz: cfg.data.avg_nnz,
+            target_labels: cfg.data.avg_labels,
+        });
+    }
+    let mut t = Table::new(&[
+        "profile", "samples", "features", "classes", "avg nnz", "target", "avg labels", "target",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.profile.to_string(),
+            r.samples.to_string(),
+            r.features.to_string(),
+            r.classes.to_string(),
+            format!("{:.1}", r.avg_nnz),
+            format!("{:.1}", r.target_nnz),
+            format!("{:.2}", r.avg_labels),
+            format!("{:.2}", r.target_labels),
+        ]);
+    }
+    t.print("Table 1 — synthetic XML dataset profiles (shape statistics)");
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — multi-GPU heterogeneity on an identical batch
+// ---------------------------------------------------------------------------
+
+pub fn fig1() -> Result<Vec<f64>> {
+    let cfg = bench_config(DataProfile::Amazon, 4, Strategy::Adaptive);
+    let (train, _) = make_data(&cfg);
+    let mut batcher = crate::data::batcher::Batcher::new(&train, &cfg.model, 1);
+    let batch = batcher.next_batch(cfg.sgd.b_max, cfg.sgd.b_max);
+    let cost = CostModel::default();
+    let mut devices = SimDevice::fleet(&cfg.devices);
+    // One "epoch" = enough identical batches to cover the dataset once.
+    let batches_per_epoch = train.len() / cfg.sgd.b_max;
+    let mut epoch_times = Vec::new();
+    for d in devices.iter_mut() {
+        let t: f64 = (0..batches_per_epoch).map(|_| d.step_duration(&cost, &batch)).sum();
+        epoch_times.push(t);
+    }
+    let fastest = epoch_times.iter().copied().fold(f64::INFINITY, f64::min);
+    let mut t = Table::new(&["device", "speed factor", "epoch time (s)", "vs fastest"]);
+    for (i, &et) in epoch_times.iter().enumerate() {
+        t.row(&[
+            format!("gpu{i}"),
+            format!("{:.2}", cfg.devices.speed_factors[i]),
+            format!("{et:.3}"),
+            format!("+{:.1}%", (et / fastest - 1.0) * 100.0),
+        ]);
+    }
+    t.print("Fig. 1 — heterogeneity on an identical batch (4 simulated devices)");
+    Ok(epoch_times)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 / Fig. 7 — time-to-accuracy and statistical efficiency
+// ---------------------------------------------------------------------------
+
+/// Paper §5.1 methodology: "we execute every algorithm for the same amount
+/// of time". The budget is sized so the 4-device adaptive run completes its
+/// configured mega-batches, then every run gets exactly that much clock.
+pub fn equal_time_budget(profile: DataProfile, backend: Backend) -> Result<f64> {
+    let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+    apply_full_scale(&mut cfg);
+    let probe = run_single(&cfg, backend, TrainerOptions::default())?;
+    // 2.5× the fast-fleet clock so the 1-device configurations also get
+    // enough time to converge (the paper trains every algorithm to its
+    // plateau within the common window).
+    Ok(2.5 * probe.rows.last().map(|r| r.clock).unwrap_or(1.0))
+}
+
+pub fn fig6(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let budget = equal_time_budget(profile, backend)?;
+    let opts = TrainerOptions { time_budget: Some(budget), ..Default::default() };
+    let mut logs = Vec::new();
+    for gpus in [1usize, 2, 4] {
+        for strategy in Strategy::all() {
+            // On one device Elastic == Adaptive (same update rule); skip the
+            // duplicate like the paper's single curve.
+            if gpus == 1 && strategy == Strategy::Elastic {
+                continue;
+            }
+            let mut cfg = bench_config(profile, gpus, strategy);
+            apply_full_scale(&mut cfg);
+            // Cap mega-batches high; the time budget is the stop condition.
+            cfg.sgd.num_mega_batches *= 8;
+            let log = run_single(&cfg, backend, opts.clone())?;
+            logs.push((format!("{}-{}gpu", strategy.name(), gpus), log));
+        }
+    }
+    let target = common_target(&logs);
+    let mut t = Table::new(&["run", "best P@1", "final P@1", &format!("TTA@{target:.3} (s)"), "clock (s)"]);
+    for (name, log) in &logs {
+        t.row(&[
+            name.clone(),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            format!("{:.2}", log.rows.last().map(|r| r.clock).unwrap_or(0.0)),
+        ]);
+    }
+    t.print(&format!("Fig. 6 — time-to-accuracy ({})", profile.name()));
+    Ok(logs)
+}
+
+pub fn fig7(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let logs = fig6(profile, backend)?;
+    let target = common_target(&logs);
+    let mut t = Table::new(&["run", &format!("mega-batches to P@1≥{target:.3}"), "best P@1"]);
+    for (name, log) in &logs {
+        t.row(&[
+            name.clone(),
+            fmt_opt_usize(log.megabatches_to_accuracy(target)),
+            format!("{:.4}", log.best_accuracy()),
+        ]);
+    }
+    t.print(&format!("Fig. 7 — statistical efficiency ({})", profile.name()));
+    Ok(logs)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — scalability + SLIDE CPU baseline
+// ---------------------------------------------------------------------------
+
+pub struct Fig8Outcome {
+    pub gpu_logs: Vec<(String, RunLog)>,
+    pub slide_acc: f64,
+    pub slide_updates: u64,
+    pub slide_seconds: f64,
+}
+
+pub fn fig8(profile: DataProfile, backend: Backend) -> Result<Fig8Outcome> {
+    let budget = equal_time_budget(profile, backend)?;
+    let opts = TrainerOptions { time_budget: Some(budget), ..Default::default() };
+    let mut logs = Vec::new();
+    for gpus in [1usize, 2, 4] {
+        let mut cfg = bench_config(profile, gpus, Strategy::Adaptive);
+        apply_full_scale(&mut cfg);
+        cfg.sgd.num_mega_batches *= 8;
+        let log = run_single(&cfg, backend, opts.clone())?;
+        logs.push((format!("adaptive-{gpus}gpu"), log));
+    }
+
+    // SLIDE on the same data with the SAME time budget. Caveat recorded in
+    // EXPERIMENTS.md: the accelerator clock is a calibrated simulation while
+    // SLIDE burns real CPU seconds, so absolute cross-hardware time is only
+    // meaningful up to that calibration.
+    let cfg = bench_config(profile, 4, Strategy::Adaptive);
+    let (train, test) = make_data(&cfg);
+    let budget = budget.clamp(0.2, 30.0);
+    let init = ModelState::init(&cfg.model, cfg.sgd.seed);
+    let trainer = SlideTrainer::new(
+        &cfg.model,
+        &init,
+        SlideConfig { threads: 4, lr: cfg.sgd.lr_bmax / 4.0, ..Default::default() },
+    );
+    let (_samples, updates, seconds) = trainer.train(&train, budget, u64::MAX)?;
+    let snapshot = trainer.snapshot();
+    let eval = crate::data::batcher::EvalBatches::new(&test, &cfg.model, 256.min(test.len()));
+    let slide_acc = crate::eval::p_at_1(
+        &crate::coordinator::backend::RefBackend,
+        &snapshot,
+        &eval,
+        &test,
+    )?;
+
+    let target = common_target(&logs);
+    let mut t = Table::new(&["run", "best P@1", &format!("TTA@{target:.3} (s)"), "updates"]);
+    for (name, log) in &logs {
+        t.row(&[
+            name.clone(),
+            format!("{:.4}", log.best_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            log.rows.iter().map(|r| r.updates.iter().sum::<u64>()).sum::<u64>().to_string(),
+        ]);
+    }
+    t.row(&[
+        "SLIDE-cpu".to_string(),
+        format!("{slide_acc:.4}"),
+        "—".to_string(),
+        updates.to_string(),
+    ]);
+    t.print(&format!(
+        "Fig. 8 — scalability vs SLIDE ({}; SLIDE ran {seconds:.1}s wall)",
+        profile.name()
+    ));
+    Ok(Fig8Outcome { gpu_logs: logs, slide_acc, slide_updates: updates, slide_seconds: seconds })
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — mega-batch size (model merging frequency)
+// ---------------------------------------------------------------------------
+
+pub fn fig9(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let budget = equal_time_budget(profile, backend)?;
+    let opts = TrainerOptions { time_budget: Some(budget), ..Default::default() };
+    let mut logs = Vec::new();
+    for mega in [4usize, 20, 100] {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        cfg.sgd.mega_batches = mega;
+        // Equal time budget (paper methodology); cap counts high and let the
+        // clock decide — frequent merging now pays its barrier overhead.
+        cfg.sgd.num_mega_batches = (2400 / mega).max(4);
+        apply_full_scale(&mut cfg);
+        let log = run_single(&cfg, backend, opts.clone())?;
+        logs.push((format!("mega={mega}"), log));
+    }
+    let target = common_target(&logs);
+    let mut t = Table::new(&["mega-batch (batches)", "best P@1", &format!("TTA@{target:.3} (s)"), "merges"]);
+    for (name, log) in &logs {
+        t.row(&[
+            name.clone(),
+            format!("{:.4}", log.best_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            log.rows.len().to_string(),
+        ]);
+    }
+    t.print(&format!("Fig. 9 — merging frequency ({})", profile.name()));
+    Ok(logs)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — initial batch size (a) and scaling factor β (b)
+// ---------------------------------------------------------------------------
+
+pub fn fig10a(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let mut logs = Vec::new();
+    for b0 in [16usize, 64, 128] {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        cfg.sgd.initial_batch = b0;
+        apply_full_scale(&mut cfg);
+        let log = run_single(&cfg, backend, TrainerOptions::default())?;
+        logs.push((format!("b0={b0}"), log));
+    }
+    print_param_table("Fig. 10a — initial batch size", &logs);
+    Ok(logs)
+}
+
+pub fn fig10b(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let mut logs = Vec::new();
+    for beta in [4usize, 8, 16] {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        cfg.sgd.beta = beta;
+        apply_full_scale(&mut cfg);
+        let log = run_single(&cfg, backend, TrainerOptions::default())?;
+        logs.push((format!("beta={beta}"), log));
+    }
+    print_param_table("Fig. 10b — batch size scaling factor β", &logs);
+    Ok(logs)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — perturbation threshold (a) and factor δ (b)
+// ---------------------------------------------------------------------------
+
+pub fn fig11a(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let mut logs = Vec::new();
+    for thr in [0.05f64, 0.10, 0.15] {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        cfg.merge.pert_thr = thr;
+        apply_full_scale(&mut cfg);
+        let log = run_single(&cfg, backend, TrainerOptions::default())?;
+        logs.push((format!("thr={thr}"), log));
+    }
+    print_param_table("Fig. 11a — perturbation threshold", &logs);
+    Ok(logs)
+}
+
+pub fn fig11b(profile: DataProfile, backend: Backend) -> Result<Vec<(String, RunLog)>> {
+    let mut logs = Vec::new();
+    for delta in [0.05f64, 0.10, 0.15] {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        cfg.merge.delta = delta;
+        apply_full_scale(&mut cfg);
+        let log = run_single(&cfg, backend, TrainerOptions::default())?;
+        logs.push((format!("delta={delta}"), log));
+    }
+    print_param_table("Fig. 11b — perturbation factor δ", &logs);
+    Ok(logs)
+}
+
+fn print_param_table(title: &str, logs: &[(String, RunLog)]) {
+    let target = common_target(logs);
+    let mut t = Table::new(&["setting", "best P@1", "final P@1", &format!("TTA@{target:.3} (s)"), "pert freq"]);
+    for (name, log) in logs {
+        t.row(&[
+            name.clone(),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            format!("{:.2}", log.perturbation_frequency()),
+        ]);
+    }
+    t.print(title);
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — do batch scaling and perturbation activate?
+// ---------------------------------------------------------------------------
+
+pub fn fig12(profile: DataProfile, backend: Backend) -> Result<RunLog> {
+    let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+    cfg.sgd.num_mega_batches = 20;
+    apply_full_scale(&mut cfg);
+    let log = run_single(&cfg, backend, TrainerOptions::default())?;
+
+    let mut t = Table::new(&["mega-batch", "b0", "b1", "b2", "b3", "updates", "perturbed"]);
+    for r in &log.rows {
+        t.row(&[
+            r.mega_batch.to_string(),
+            r.batch_sizes[0].to_string(),
+            r.batch_sizes[1].to_string(),
+            r.batch_sizes[2].to_string(),
+            r.batch_sizes[3].to_string(),
+            format!("{:?}", r.updates),
+            if r.perturbed { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t.print(&format!("Fig. 12 — batch-size trace + perturbation activations ({})", profile.name()));
+    println!(
+        "perturbation frequency: {:.2} (paper: \"very high frequency\")",
+        log.perturbation_frequency()
+    );
+    Ok(log)
+}
+
+/// Config helper shared with `Config::from_overrides` users.
+pub fn profile_of(cfg: &Config) -> DataProfile {
+    cfg.data.profile
+}

@@ -1,0 +1,151 @@
+//! Experiment harness: one entry point per paper table/figure.
+//!
+//! Used by `benches/` (plain binaries) and the `heterosparse experiment`
+//! CLI subcommand. Every runner builds its workload from config, executes
+//! through the same Trainer as production runs, and prints paper-style rows
+//! via [`crate::util::bench::Table`]. Fast CI-scale defaults; `HS_FULL=1`
+//! switches to full-scale runs.
+
+use std::sync::Arc;
+
+use crate::config::{Config, DataProfile, ExecMode, Strategy};
+use crate::coordinator::backend::{PjrtBackend, RefBackend, StepBackend};
+use crate::coordinator::engine_sim::SimEngine;
+use crate::coordinator::engine_threaded::{BackendFactory, ThreadedEngine};
+use crate::coordinator::trainer::{Engine, Trainer, TrainerOptions};
+use crate::data::synthetic::Generator;
+use crate::data::SparseDataset;
+use crate::metrics::RunLog;
+use crate::model::ModelState;
+use crate::runtime::{CostModel, Runtime, SimDevice};
+use crate::Result;
+
+pub mod experiments;
+
+/// How step numerics are provided for a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifacts through PJRT — requires `make artifacts`.
+    Pjrt,
+    /// Pure-Rust reference twin — hermetic, no artifacts needed.
+    Reference,
+    /// PJRT when artifacts are present, reference otherwise.
+    Auto,
+}
+
+impl Backend {
+    pub fn resolve(self, cfg: &Config) -> Backend {
+        match self {
+            Backend::Auto => {
+                let manifest = std::path::Path::new(&cfg.runtime.artifacts_dir).join("manifest.json");
+                if manifest.exists() {
+                    // Only use PJRT when the artifacts actually match.
+                    match crate::runtime::Manifest::load(std::path::Path::new(
+                        &cfg.runtime.artifacts_dir,
+                    )) {
+                        Ok(m) if m.check_config(cfg).is_ok() => Backend::Pjrt,
+                        _ => Backend::Reference,
+                    }
+                } else {
+                    Backend::Reference
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Generate the train/test splits for a config.
+pub fn make_data(cfg: &Config) -> (SparseDataset, SparseDataset) {
+    let gen = Generator::new(&cfg.model, &cfg.data);
+    (gen.generate(cfg.data.train_samples, 1), gen.generate(cfg.data.test_samples, 2))
+}
+
+/// Run one full training session under `cfg`. This is the single funnel all
+/// benches, examples and the CLI go through.
+pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> Result<RunLog> {
+    cfg.validate()?;
+    let backend = backend.resolve(cfg);
+    let (train, test) = make_data(cfg);
+    let devices = SimDevice::fleet(&cfg.devices);
+
+    match (cfg.runtime.mode, backend) {
+        (ExecMode::Virtual, Backend::Pjrt) => {
+            let runtime = Runtime::load(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+            runtime.manifest.check_config(cfg)?;
+            opts.eval_bucket = Some(runtime.manifest.eval_batch);
+            let be = PjrtBackend::new(runtime);
+            let engine = Engine::Sim(SimEngine::new(&be, devices, CostModel::default()));
+            Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
+        }
+        (ExecMode::Virtual, _) => {
+            let be = RefBackend;
+            let engine = Engine::Sim(SimEngine::new(&be, devices, CostModel::default()));
+            Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
+        }
+        (ExecMode::Real, Backend::Pjrt) => {
+            let dir = cfg.runtime.artifacts_dir.clone();
+            let factory: BackendFactory = Arc::new(move |_dev| {
+                let rt = Runtime::load(std::path::Path::new(&dir))?;
+                Ok(Box::new(PjrtBackend::new(rt)) as Box<dyn StepBackend>)
+            });
+            let template = ModelState::init(&cfg.model, cfg.sgd.seed);
+            let engine = ThreadedEngine::spawn(factory, devices, &template)?;
+            // Eval through its own runtime on the coordinator thread.
+            let eval_rt = Runtime::load(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
+            eval_rt.manifest.check_config(cfg)?;
+            opts.eval_bucket = Some(eval_rt.manifest.eval_batch);
+            let eval_be = PjrtBackend::new(eval_rt);
+            Trainer::new(cfg.clone(), Engine::Threaded(engine), &eval_be, opts).run(&train, &test)
+        }
+        (ExecMode::Real, _) => {
+            let factory: BackendFactory =
+                Arc::new(|_dev| Ok(Box::new(RefBackend) as Box<dyn StepBackend>));
+            let template = ModelState::init(&cfg.model, cfg.sgd.seed);
+            let engine = ThreadedEngine::spawn(factory, devices, &template)?;
+            let eval_be = RefBackend;
+            Trainer::new(cfg.clone(), Engine::Threaded(engine), &eval_be, opts).run(&train, &test)
+        }
+    }
+}
+
+/// Baseline experiment config shared by the figure benches: small model,
+/// virtual time, zero-jitter determinism, Amazon profile.
+pub fn bench_config(profile: DataProfile, gpus: usize, strategy: Strategy) -> Config {
+    let mut cfg = Config::default();
+    // Small-profile model dims (must match `make artifacts` defaults so the
+    // PJRT backend can be used when present).
+    cfg.data.profile = profile;
+    match profile {
+        DataProfile::Amazon => {
+            cfg.data.avg_nnz = 12.0;
+            cfg.data.avg_labels = 2.0;
+        }
+        DataProfile::Delicious => {
+            cfg.data.avg_nnz = 24.0;
+            cfg.data.avg_labels = 6.0;
+        }
+    }
+    cfg.data.train_samples = 12_000;
+    cfg.data.test_samples = 1_500;
+    cfg.sgd.lr_bmax = 0.1; // grid-searched per paper §5.1 (largest stable under momentum)
+    cfg.sgd.mega_batches = 20;
+    cfg.sgd.num_mega_batches = 12;
+    cfg.devices.count = gpus;
+    cfg.devices.speed_factors = (0..gpus)
+        .map(|i| 1.0 + 0.32 * i as f64 / (gpus.max(2) - 1) as f64)
+        .collect();
+    cfg.devices.jitter = 0.03;
+    cfg.strategy.kind = strategy;
+    cfg.validate().expect("bench config must validate");
+    cfg
+}
+
+/// Scale a bench config up when `HS_FULL=1`.
+pub fn apply_full_scale(cfg: &mut Config) {
+    if crate::util::bench::full_scale() {
+        cfg.data.train_samples *= 4;
+        cfg.data.test_samples *= 2;
+        cfg.sgd.num_mega_batches *= 3;
+    }
+}

@@ -1,0 +1,38 @@
+//! # heterosparse
+//!
+//! A production-shaped reproduction of *Adaptive Elastic Training for Sparse
+//! Deep Learning on Heterogeneous Multi-GPU Servers* (Ma, Rusu, Wu, Sim —
+//! CS.DC 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the HeteroGPU-style coordinator: dynamic
+//!   scheduler, GPU-manager workers, adaptive batch-size scaling
+//!   (Algorithm 1), normalized model merging with perturbation and momentum
+//!   (Algorithm 2), the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU
+//!   baseline, and a multi-stream all-reduce simulation.
+//! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
+//!   AOT-lowered to HLO text per batch-size bucket.
+//! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and
+//!   the tiled online-softmax (`python/compile/kernels/`).
+//!
+//! Python never runs on the training path: `make artifacts` lowers the model
+//! once; this crate loads `artifacts/*.hlo.txt` through the PJRT C API
+//! (`xla` crate) and owns everything else.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod allreduce;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod slide;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, matching the `xla` crate style).
+pub type Result<T> = anyhow::Result<T>;

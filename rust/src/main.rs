@@ -1,0 +1,9 @@
+//! `heterosparse` binary — see `cli.rs` for the command surface.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = heterosparse::cli::main_with_args(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Training telemetry: per-mega-batch rows, CSV/JSON export, and the
+//! derived measures the paper reports (time-to-accuracy, statistical
+//! efficiency, best accuracy).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// One row per mega-batch (the paper evaluates after every mega-batch).
+#[derive(Clone, Debug)]
+pub struct MegaBatchRow {
+    pub mega_batch: usize,
+    /// Training clock in seconds (virtual or wall, per engine).
+    pub clock: f64,
+    /// Cumulative samples processed.
+    pub samples: u64,
+    /// Mean training loss over the mega-batch.
+    pub loss: f64,
+    /// Test P@1 after merging.
+    pub accuracy: f64,
+    /// Per-device batch sizes in effect during this mega-batch.
+    pub batch_sizes: Vec<usize>,
+    /// Per-device model update counts within this mega-batch.
+    pub updates: Vec<u64>,
+    /// Whether Algorithm 2 applied perturbation at this merge.
+    pub perturbed: bool,
+    /// Simulated/measured merge (all-reduce) time in seconds.
+    pub merge_time: f64,
+    /// L2 norm per parameter of the merged global model.
+    pub l2_per_param: f64,
+    /// Per-device hardware efficiency: busy time / barrier window.
+    pub utilization: Vec<f64>,
+}
+
+/// Full run log.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub rows: Vec<MegaBatchRow>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        RunLog { name: name.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: MegaBatchRow) {
+        self.rows.push(row);
+    }
+
+    /// First clock time at which accuracy >= target (time-to-accuracy).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rows.iter().find(|r| r.accuracy >= target).map(|r| r.clock)
+    }
+
+    /// First mega-batch index reaching the target (statistical efficiency).
+    pub fn megabatches_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rows.iter().find(|r| r.accuracy >= target).map(|r| r.mega_batch)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rows.iter().map(|r| r.accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    /// Fraction of merges in which perturbation activated (Fig. 12b).
+    pub fn perturbation_frequency(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().filter(|r| r.perturbed).count() as f64 / self.rows.len() as f64
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let dev = self.rows.first().map(|r| r.batch_sizes.len()).unwrap_or(0);
+        let mut header =
+            "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,l2_per_param".to_string();
+        for i in 0..dev {
+            header.push_str(&format!(",b{i}"));
+        }
+        for i in 0..dev {
+            header.push_str(&format!(",u{i}"));
+        }
+        for i in 0..dev {
+            header.push_str(&format!(",util{i}"));
+        }
+        writeln!(f, "{header}")?;
+        for r in &self.rows {
+            let mut line = format!(
+                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8}",
+                r.mega_batch,
+                r.clock,
+                r.samples,
+                r.loss,
+                r.accuracy,
+                r.perturbed as u8,
+                r.merge_time,
+                r.l2_per_param
+            );
+            for b in &r.batch_sizes {
+                line.push_str(&format!(",{b}"));
+            }
+            for u in &r.updates {
+                line.push_str(&format!(",{u}"));
+            }
+            for u in &r.utilization {
+                line.push_str(&format!(",{u:.4}"));
+            }
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("mega_batch", Json::int(r.mega_batch as i64)),
+                        ("clock", Json::num(r.clock)),
+                        ("samples", Json::int(r.samples as i64)),
+                        ("loss", Json::num(r.loss)),
+                        ("accuracy", Json::num(r.accuracy)),
+                        ("batch_sizes", Json::arr(r.batch_sizes.iter().map(|&b| Json::int(b as i64)))),
+                        ("updates", Json::arr(r.updates.iter().map(|&u| Json::int(u as i64)))),
+                        ("perturbed", Json::Bool(r.perturbed)),
+                        ("utilization", Json::arr(r.utilization.iter().map(|&u| Json::num(u)))),
+                        ("merge_time", Json::num(r.merge_time)),
+                        ("l2_per_param", Json::num(r.l2_per_param)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(mb: usize, clock: f64, acc: f64, perturbed: bool) -> MegaBatchRow {
+        MegaBatchRow {
+            mega_batch: mb,
+            clock,
+            samples: (mb as u64 + 1) * 1000,
+            loss: 5.0 - acc,
+            accuracy: acc,
+            batch_sizes: vec![128, 96],
+            updates: vec![10, 8],
+            perturbed,
+            merge_time: 0.01,
+            l2_per_param: 0.05,
+            utilization: vec![0.98, 0.80],
+        }
+    }
+
+    #[test]
+    fn tta_and_statistical_efficiency() {
+        let mut log = RunLog::new("t");
+        log.push(row(0, 1.0, 0.10, false));
+        log.push(row(1, 2.0, 0.25, true));
+        log.push(row(2, 3.0, 0.32, true));
+        assert_eq!(log.time_to_accuracy(0.2), Some(2.0));
+        assert_eq!(log.megabatches_to_accuracy(0.2), Some(1));
+        assert_eq!(log.time_to_accuracy(0.9), None);
+        assert!((log.best_accuracy() - 0.32).abs() < 1e-12);
+        assert!((log.perturbation_frequency() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let mut log = RunLog::new("t");
+        log.push(row(0, 1.0, 0.1, false));
+        let path = std::env::temp_dir().join("hs-metrics-test.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("mega_batch,clock"));
+        assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1"));
+        assert_eq!(lines[1].split(',').count(), lines[0].split(',').count());
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut log = RunLog::new("t");
+        log.push(row(0, 1.5, 0.2, true));
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("name").as_str(), Some("t"));
+        assert_eq!(parsed.get("rows").as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Model checkpointing: save/restore `ModelState` (binary, versioned) so
+//! long runs can resume and trained models can be served or inspected.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   b"HSCKPT01"
+//! dims    5 × u64   (features, hidden, classes, max_nnz, max_labels)
+//! lens    4 × u64   (w1, b1, w2, b2 element counts — redundant, validated)
+//! data    4 segments of f32 LE
+//! crc     u64       (FNV-1a over the raw data bytes)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::config::ModelDims;
+use crate::Result;
+
+use super::ModelState;
+
+const MAGIC: &[u8; 8] = b"HSCKPT01";
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Save a checkpoint (atomic: write to `.tmp` then rename).
+pub fn save(model: &ModelState, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        let d = &model.dims;
+        for v in [d.features, d.hidden, d.classes, d.max_nnz, d.max_labels] {
+            w.write_all(&(v as u64).to_le_bytes())?;
+        }
+        let segs = model.segments();
+        for s in &segs {
+            w.write_all(&(s.len() as u64).to_le_bytes())?;
+        }
+        let mut crc = 0xcbf29ce484222325u64;
+        for s in &segs {
+            let bytes = f32s_to_bytes(s);
+            // Chain the per-segment FNV state through all segments.
+            crc ^= fnv1a(&bytes);
+            crc = crc.wrapping_mul(0x100000001b3);
+            w.write_all(&bytes)?;
+        }
+        w.write_all(&crc.to_le_bytes())?;
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).context("renaming checkpoint into place")?;
+    Ok(())
+}
+
+/// Load and validate a checkpoint.
+pub fn load(path: &Path) -> Result<ModelState> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a heterosparse checkpoint (bad magic)", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let dims = ModelDims {
+        features: read_u64(&mut r)? as usize,
+        hidden: read_u64(&mut r)? as usize,
+        classes: read_u64(&mut r)? as usize,
+        max_nnz: read_u64(&mut r)? as usize,
+        max_labels: read_u64(&mut r)? as usize,
+    };
+    let lens: Vec<usize> = (0..4).map(|_| read_u64(&mut r).map(|v| v as usize)).collect::<Result<_>>()?;
+    let expect = [
+        dims.features * dims.hidden,
+        dims.hidden,
+        dims.hidden * dims.classes,
+        dims.classes,
+    ];
+    if lens != expect {
+        bail!("checkpoint segment lengths {lens:?} disagree with dims {dims:?}");
+    }
+    let mut segs: Vec<Vec<f32>> = Vec::with_capacity(4);
+    let mut crc = 0xcbf29ce484222325u64;
+    for &len in &lens {
+        let mut bytes = vec![0u8; len * 4];
+        r.read_exact(&mut bytes)?;
+        crc ^= fnv1a(&bytes);
+        crc = crc.wrapping_mul(0x100000001b3);
+        segs.push(bytes_to_f32s(&bytes));
+    }
+    let stored_crc = read_u64(&mut r)?;
+    if stored_crc != crc {
+        bail!("checkpoint {} is corrupt (crc mismatch)", path.display());
+    }
+    let b2 = segs.pop().unwrap();
+    let w2 = segs.pop().unwrap();
+    let b1 = segs.pop().unwrap();
+    let w1 = segs.pop().unwrap();
+    Ok(ModelState { dims, w1, b1, w2, b2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 64, hidden: 8, classes: 16, max_nnz: 8, max_labels: 4 }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hs-ckpt-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let m = ModelState::init(&dims(), 9);
+        let path = tmp("rt.ckpt");
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = ModelState::init(&dims(), 10);
+        let path = tmp("corrupt.ckpt");
+        save(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("crc") || err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("magic.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let m = ModelState::init(&dims(), 11);
+        let path = tmp("trunc.ckpt");
+        save(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Model state (parameter buffers) shared by the runtime, the coordinator's
+//! merging logic, and the pure-Rust reference implementation.
+
+pub mod checkpoint;
+pub mod reference;
+
+use crate::config::ModelDims;
+use crate::util::rng::Rng;
+
+/// Flat f32 parameter buffers for the 3-layer sparse MLP.
+///
+/// Layout mirrors the AOT step executable's I/O contract:
+/// `w1`: row-major `[features, hidden]`, `b1`: `[hidden]`,
+/// `w2`: row-major `[hidden, classes]`, `b2`: `[classes]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelState {
+    pub dims: ModelDims,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl ModelState {
+    pub fn zeros(dims: &ModelDims) -> Self {
+        ModelState {
+            dims: dims.clone(),
+            w1: vec![0.0; dims.features * dims.hidden],
+            b1: vec![0.0; dims.hidden],
+            w2: vec![0.0; dims.hidden * dims.classes],
+            b2: vec![0.0; dims.classes],
+        }
+    }
+
+    /// Paper §5.1: weights drawn from a normal whose scale depends on the
+    /// layer's unit count. We use N(0, 1/sqrt(fan_in)) — the standard,
+    /// numerically-sane reading (a literal σ = #units diverges immediately).
+    pub fn init(dims: &ModelDims, seed: u64) -> Self {
+        let mut m = ModelState::zeros(dims);
+        let mut rng = Rng::new(seed);
+        let s1 = 1.0 / (dims.features as f64).sqrt();
+        for w in &mut m.w1 {
+            *w = (rng.normal() * s1) as f32;
+        }
+        let s2 = 1.0 / (dims.hidden as f64).sqrt();
+        for w in &mut m.w2 {
+            *w = (rng.normal() * s2) as f32;
+        }
+        m
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+    }
+
+    /// The paper's "L2-norm per model parameter" regularization measure
+    /// gating merge perturbation (Algorithm 2 line 7), interpreted as the
+    /// parameter RMS (`||w||₂ / √N`). A literal `||w||₂ / N` reading makes
+    /// the 0.1 default threshold vacuous for any model beyond a few thousand
+    /// parameters; RMS preserves the intent — large values flag skewed,
+    /// unregularized replicas — at every scale (DESIGN.md notes this).
+    pub fn l2_per_param(&self) -> f64 {
+        let sq: f64 = self
+            .segments()
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        (sq / self.param_count() as f64).sqrt()
+    }
+
+    /// Borrow the four parameter segments (merge loops iterate these).
+    pub fn segments(&self) -> [&[f32]; 4] {
+        [&self.w1, &self.b1, &self.w2, &self.b2]
+    }
+
+    pub fn segments_mut(&mut self) -> [&mut [f32]; 4] {
+        [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2]
+    }
+
+    /// `self = sum_i weights[i] * models[i]` (weighted average merge core).
+    pub fn set_weighted_sum(&mut self, models: &[&ModelState], weights: &[f64]) {
+        assert_eq!(models.len(), weights.len());
+        assert!(!models.is_empty());
+        for seg in 0..4 {
+            let dst_len = self.segments()[seg].len();
+            let dst = match seg {
+                0 => &mut self.w1,
+                1 => &mut self.b1,
+                2 => &mut self.w2,
+                _ => &mut self.b2,
+            };
+            debug_assert_eq!(dst.len(), dst_len);
+            dst.fill(0.0);
+            for (m, &w) in models.iter().zip(weights) {
+                let src = m.segments()[seg];
+                let wf = w as f32;
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += wf * s;
+                }
+            }
+        }
+    }
+
+    /// `self += alpha * (a - b)` — the momentum term of Algorithm 2 line 11.
+    pub fn add_scaled_diff(&mut self, a: &ModelState, b: &ModelState, alpha: f64) {
+        let af = alpha as f32;
+        for seg in 0..4 {
+            let dst = match seg {
+                0 => &mut self.w1,
+                1 => &mut self.b1,
+                2 => &mut self.w2,
+                _ => &mut self.b2,
+            };
+            let sa = a.segments()[seg];
+            let sb = b.segments()[seg];
+            for ((d, &x), &y) in dst.iter_mut().zip(sa).zip(sb) {
+                *d += af * (x - y);
+            }
+        }
+    }
+
+    /// Max absolute difference across all parameters (test helper).
+    pub fn max_abs_diff(&self, other: &ModelState) -> f32 {
+        self.segments()
+            .iter()
+            .zip(other.segments().iter())
+            .flat_map(|(a, b)| a.iter().zip(b.iter()))
+            .map(|(&x, &y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 64, hidden: 8, classes: 16, max_nnz: 8, max_labels: 4 }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = ModelState::init(&dims(), 5);
+        let b = ModelState::init(&dims(), 5);
+        assert_eq!(a, b);
+        let c = ModelState::init(&dims(), 6);
+        assert!(a.max_abs_diff(&c) > 0.0);
+        // Bias starts at zero.
+        assert!(a.b1.iter().all(|&x| x == 0.0));
+        // Weight scale is sane.
+        let rms: f64 = (a.w1.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / a.w1.len() as f64)
+            .sqrt();
+        assert!((rms - 1.0 / 8.0).abs() < 0.02, "w1 rms {rms}"); // 1/sqrt(64)
+    }
+
+    #[test]
+    fn weighted_sum_identity_and_average() {
+        let d = dims();
+        let a = ModelState::init(&d, 1);
+        let b = ModelState::init(&d, 2);
+        let mut out = ModelState::zeros(&d);
+        out.set_weighted_sum(&[&a], &[1.0]);
+        assert!(out.max_abs_diff(&a) < 1e-7);
+        out.set_weighted_sum(&[&a, &b], &[0.5, 0.5]);
+        let expect = 0.5 * a.w1[0] + 0.5 * b.w1[0];
+        assert!((out.w1[0] - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_term_algebra() {
+        let d = dims();
+        let a = ModelState::init(&d, 3);
+        let b = ModelState::init(&d, 4);
+        let mut out = ModelState::zeros(&d);
+        out.add_scaled_diff(&a, &b, 0.9);
+        let expect = 0.9 * (a.w2[7] - b.w2[7]);
+        assert!((out.w2[7] - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn l2_per_param_monotone_in_scale() {
+        let d = dims();
+        let a = ModelState::init(&d, 1);
+        let mut big = a.clone();
+        for w in &mut big.w1 {
+            *w *= 10.0;
+        }
+        assert!(big.l2_per_param() > a.l2_per_param());
+        assert_eq!(ModelState::zeros(&d).l2_per_param(), 0.0);
+    }
+
+    #[test]
+    fn param_count_matches_dims() {
+        let d = dims();
+        assert_eq!(ModelState::zeros(&d).param_count(), d.param_count());
+    }
+}

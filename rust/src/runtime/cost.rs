@@ -1,0 +1,208 @@
+//! Analytic per-step cost model — the virtual-time engine's clock source.
+//!
+//! A step over a batch `(b, nnz)` on the 3-layer sparse MLP decomposes into
+//!
+//! * fixed dispatch/launch overhead            `t_fixed`
+//! * sparse input layer (gather-bound)          `t_nnz  * nnz`
+//! * dense hidden→output fwd+bwd (FLOP-bound)   `t_dense * b`
+//!
+//! mirroring the paper's observation that sparse-batch cost is cardinality-
+//! sensitive while the dense output layer scales with the batch size. The
+//! constants default to values fitted on the CPU PJRT backend at the default
+//! dims, and [`CostModel::calibrate`] refits them against live PJRT
+//! measurements (least squares over a small probe grid).
+
+use crate::data::PaddedBatch;
+use crate::model::ModelState;
+
+use super::Runtime;
+use crate::Result;
+
+/// Step-time model in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub t_fixed: f64,
+    pub t_per_nnz: f64,
+    pub t_per_sample: f64,
+    /// Per-parameter transfer cost of one model merge hop (all-reduce link).
+    pub t_per_param_xfer: f64,
+    /// Fixed cost of one model-merge barrier: stream setup, kernel launch,
+    /// cross-device synchronization (the paper's §4 observes large kernel
+    /// startup overheads that grow with the number of GPUs; merging too
+    /// often is what makes gradient aggregation slow in Fig. 9).
+    pub t_merge_fixed: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Fitted on the default dims (F=8192, H=64, C=1024) on CPU PJRT.
+        CostModel {
+            t_fixed: 300e-6,
+            t_per_nnz: 40e-9,
+            t_per_sample: 45e-6,
+            t_per_param_xfer: 0.15e-9,
+            t_merge_fixed: 4e-3,
+        }
+    }
+}
+
+impl CostModel {
+    /// Nominal (speed-factor-1.0) step time for a padded batch.
+    pub fn step_time(&self, batch: &PaddedBatch) -> f64 {
+        self.step_time_parts(batch.bucket, batch.nnz)
+    }
+
+    pub fn step_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
+        self.t_fixed + self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64
+    }
+
+    /// One ring/tree hop transferring `params` parameters.
+    pub fn transfer_time(&self, params: usize) -> f64 {
+        self.t_per_param_xfer * params as f64
+    }
+
+    /// Refit (t_fixed, t_per_nnz, t_per_sample) against live PJRT step
+    /// measurements over a probe grid of buckets. Uses ordinary least
+    /// squares on the 3-parameter linear model.
+    pub fn calibrate(runtime: &Runtime, buckets: &[usize], reps: usize) -> Result<CostModel> {
+        let dims = &runtime.manifest.dims;
+        let mut model = ModelState::init(dims, 1234);
+        let mut rows: Vec<[f64; 3]> = Vec::new(); // [1, nnz, bucket]
+        let mut ys: Vec<f64> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(99);
+        for &b in buckets {
+            for dense in [true, false] {
+                let batch = synth_batch(dims, b, dense, &mut rng);
+                // Warm the executable + caches.
+                runtime.step(&mut model, &batch, 0.0)?;
+                let mut best = f64::INFINITY;
+                for _ in 0..reps.max(1) {
+                    let (_, dt) = runtime.step(&mut model, &batch, 0.0)?;
+                    best = best.min(dt.as_secs_f64());
+                }
+                rows.push([1.0, batch.nnz as f64, b as f64]);
+                ys.push(best);
+            }
+        }
+        let coef = least_squares_3(&rows, &ys);
+        let base = CostModel::default();
+        Ok(CostModel {
+            t_fixed: coef[0].max(1e-6),
+            t_per_nnz: coef[1].max(0.0),
+            t_per_sample: coef[2].max(1e-9),
+            t_per_param_xfer: base.t_per_param_xfer,
+            t_merge_fixed: base.t_merge_fixed,
+        })
+    }
+}
+
+/// Random batch with either max or minimal nnz per row (spread for fitting).
+fn synth_batch(
+    dims: &crate::config::ModelDims,
+    bucket: usize,
+    dense: bool,
+    rng: &mut crate::util::rng::Rng,
+) -> PaddedBatch {
+    let k = dims.max_nnz;
+    let l = dims.max_labels;
+    let per_row = if dense { k } else { (k / 8).max(1) };
+    let mut b = PaddedBatch {
+        bucket,
+        valid: bucket,
+        idx: vec![0; bucket * k],
+        val: vec![0.0; bucket * k],
+        lab: vec![0; bucket * l],
+        lab_w: vec![0.0; bucket * l],
+        smask: vec![1.0; bucket],
+        nnz: bucket * per_row,
+        sample_ids: (0..bucket as u32).collect(),
+    };
+    for r in 0..bucket {
+        for j in 0..per_row {
+            b.idx[r * k + j] = rng.range(0, dims.features) as i32;
+            b.val[r * k + j] = rng.f32() + 0.1;
+        }
+        b.lab[r * l] = rng.range(0, dims.classes) as i32;
+        b.lab_w[r * l] = 1.0;
+    }
+    b
+}
+
+/// OLS for y = c0*x0 + c1*x1 + c2*x2 via normal equations (3x3 solve).
+fn least_squares_3(xs: &[[f64; 3]], ys: &[f64]) -> [f64; 3] {
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut aty = [0.0f64; 3];
+    for (x, &y) in xs.iter().zip(ys) {
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += x[i] * x[j];
+            }
+            aty[i] += x[i] * y;
+        }
+    }
+    solve3(ata, aty)
+}
+
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    // Gaussian elimination with partial pivoting.
+    for col in 0..3 {
+        let mut piv = col;
+        for r in col + 1..3 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-18 {
+            continue; // singular; leave zeros
+        }
+        for r in 0..3 {
+            if r != col {
+                let f = a[r][col] / d;
+                for c in 0..3 {
+                    a[r][c] -= f * a[col][c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+    }
+    let mut out = [0.0; 3];
+    for i in 0..3 {
+        out[i] = if a[i][i].abs() < 1e-18 { 0.0 } else { b[i] / a[i][i] };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_is_monotone() {
+        let m = CostModel::default();
+        assert!(m.step_time_parts(128, 1000) > m.step_time_parts(64, 1000));
+        assert!(m.step_time_parts(64, 2000) > m.step_time_parts(64, 1000));
+        assert!(m.step_time_parts(16, 0) >= m.t_fixed);
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_plane() {
+        // y = 2 + 3*x1 + 0.5*x2, exactly.
+        let xs: Vec<[f64; 3]> = (0..20)
+            .map(|i| [1.0, (i % 5) as f64, (i / 5) as f64 * 10.0])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x[1] + 0.5 * x[2]).collect();
+        let c = least_squares_3(&xs, &ys);
+        assert!((c[0] - 2.0).abs() < 1e-9, "{c:?}");
+        assert!((c[1] - 3.0).abs() < 1e-9);
+        assert!((c[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_scales_with_params() {
+        let m = CostModel::default();
+        assert!(m.transfer_time(2_000_000) > m.transfer_time(1_000_000));
+    }
+}

@@ -1,0 +1,160 @@
+//! Simulated heterogeneous accelerators — the Fig. 1 substitute.
+//!
+//! The paper measures a ~32% fastest↔slowest gap across *identical* V100s
+//! (clock/memory oscillation) amplified by sparse-batch cardinality
+//! variation. Here every virtual device wraps the same PJRT CPU executable
+//! with:
+//!
+//! * a **persistent speed factor** (config `devices.speed_factors`),
+//! * **AR(1) multiplicative jitter** (slowly-wandering clock state, matching
+//!   the paper's "oscillations within observable ranges"),
+//! * an **nnz-sensitivity** knob scaling the cardinality-dependent term.
+//!
+//! Two uses: the virtual-time engine asks for a full simulated duration
+//! ([`SimDevice::step_duration`]); the threaded real engine measures the
+//! actual PJRT time and asks how much *extra* delay to inject
+//! ([`SimDevice::stretch`]).
+
+use crate::config::DeviceConfig;
+use crate::data::PaddedBatch;
+use crate::util::rng::Rng;
+
+use super::cost::CostModel;
+
+/// AR(1) coefficient for the jitter process: state wanders slowly across
+/// steps instead of white noise, like real clock drift.
+const JITTER_RHO: f64 = 0.9;
+
+#[derive(Clone, Debug)]
+pub struct SimDevice {
+    pub id: usize,
+    pub speed_factor: f64,
+    jitter_amp: f64,
+    jitter_state: f64,
+    nnz_sensitivity: f64,
+    rng: Rng,
+}
+
+impl SimDevice {
+    pub fn new(id: usize, cfg: &DeviceConfig) -> Self {
+        assert!(id < cfg.count);
+        SimDevice {
+            id,
+            speed_factor: cfg.speed_factors[id],
+            jitter_amp: cfg.jitter,
+            jitter_state: 0.0,
+            nnz_sensitivity: cfg.nnz_sensitivity,
+            rng: Rng::new(cfg.seed ^ (id as u64).wrapping_mul(0xA5A5_5A5A_DEAD_BEEF)),
+        }
+    }
+
+    /// Build the whole fleet from config.
+    pub fn fleet(cfg: &DeviceConfig) -> Vec<SimDevice> {
+        (0..cfg.count).map(|i| SimDevice::new(i, cfg)).collect()
+    }
+
+    /// Advance the jitter process and return the current multiplicative
+    /// slowdown (always > 0.1).
+    fn next_multiplier(&mut self) -> f64 {
+        let eps = self.rng.normal() * self.jitter_amp;
+        self.jitter_state = JITTER_RHO * self.jitter_state + (1.0 - JITTER_RHO) * eps;
+        (self.speed_factor * (1.0 + self.jitter_state)).max(0.1)
+    }
+
+    /// Virtual-time engine: full simulated duration (seconds) of one step.
+    pub fn step_duration(&mut self, cost: &CostModel, batch: &PaddedBatch) -> f64 {
+        let nominal = cost.t_fixed
+            + cost.t_per_nnz * batch.nnz as f64 * self.nnz_sensitivity
+            + cost.t_per_sample * batch.bucket as f64;
+        nominal * self.next_multiplier()
+    }
+
+    /// Threaded real engine: given the measured PJRT wall time, how long the
+    /// *simulated heterogeneous device* would have taken. The worker sleeps
+    /// `stretch - real` when positive.
+    pub fn stretch(&mut self, real_secs: f64) -> f64 {
+        real_secs * self.next_multiplier()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn batch(bucket: usize, nnz: usize) -> PaddedBatch {
+        PaddedBatch {
+            bucket,
+            valid: bucket,
+            idx: vec![0; bucket],
+            val: vec![0.0; bucket],
+            lab: vec![0; bucket],
+            lab_w: vec![0.0; bucket],
+            smask: vec![1.0; bucket],
+            nnz,
+            sample_ids: vec![],
+        }
+    }
+
+    #[test]
+    fn slower_device_takes_longer_on_average() {
+        let cfg = DeviceConfig::default(); // factors 1.0 .. 1.32
+        let cost = CostModel::default();
+        let mut fast = SimDevice::new(0, &cfg);
+        let mut slow = SimDevice::new(3, &cfg);
+        let b = batch(64, 64 * 12);
+        let n = 500;
+        let tf: f64 = (0..n).map(|_| fast.step_duration(&cost, &b)).sum();
+        let ts: f64 = (0..n).map(|_| slow.step_duration(&cost, &b)).sum();
+        let gap = ts / tf;
+        assert!((1.25..1.45).contains(&gap), "expected ~1.32 gap, got {gap}");
+    }
+
+    #[test]
+    fn nnz_increases_duration() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(0, &cfg);
+        let t1 = d.step_duration(&cost, &batch(64, 100));
+        let t2 = d.step_duration(&cost, &batch(64, 10_000));
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn zero_jitter_is_deterministic() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(1, &cfg);
+        let b = batch(32, 400);
+        let t1 = d.step_duration(&cost, &b);
+        let t2 = d.step_duration(&cost, &b);
+        assert_eq!(t1, t2);
+        // Exactly factor × nominal.
+        let nominal = cost.t_fixed + cost.t_per_nnz * 400.0 + cost.t_per_sample * 32.0;
+        assert!((t1 - nominal * cfg.speed_factors[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_wanders_but_stays_bounded() {
+        let cfg = DeviceConfig { jitter: 0.05, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(0, &cfg);
+        let b = batch(64, 500);
+        let ts: Vec<f64> = (0..1000).map(|_| d.step_duration(&cost, &b)).collect();
+        let mean = crate::util::stats::mean(&ts);
+        for &t in &ts {
+            assert!(t > 0.0);
+            assert!((t / mean - 1.0).abs() < 0.5, "jitter exploded: {t} vs mean {mean}");
+        }
+        // It actually varies.
+        assert!(crate::util::stats::max(&ts) > crate::util::stats::min(&ts));
+    }
+
+    #[test]
+    fn stretch_scales_real_time() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let mut d = SimDevice::new(3, &cfg);
+        let s = d.stretch(0.010);
+        assert!((s - 0.0132).abs() < 1e-9); // 10ms * 1.32
+    }
+}

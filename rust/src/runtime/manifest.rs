@@ -1,0 +1,207 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the contract between the build-time Python world and the
+//! run-time Rust world: model dimensions, the batch-size bucket grid, file
+//! names, and the executable I/O layouts. `Manifest::load` validates
+//! structure; `Manifest::check_config` validates agreement with the run
+//! config before any training starts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::config::{Config, ModelDims};
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub buckets: Vec<usize>,
+    pub b_min: usize,
+    pub b_max: usize,
+    pub beta: usize,
+    pub eval_batch: usize,
+    pub config_hash: String,
+    /// bucket -> HLO file name.
+    pub step_files: Vec<(usize, String)>,
+    pub eval_file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first (python never runs on the training path, \
+                 but the AOT artifacts must exist)",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let dims_j = j.get("dims");
+        let dim = |k: &str| -> Result<usize> {
+            dims_j.get(k).as_usize().with_context(|| format!("manifest dims.{k} missing"))
+        };
+        let dims = ModelDims {
+            features: dim("features")?,
+            hidden: dim("hidden")?,
+            classes: dim("classes")?,
+            max_nnz: dim("max_nnz")?,
+            max_labels: dim("max_labels")?,
+        };
+
+        let buckets: Vec<usize> = j
+            .get("buckets")
+            .as_arr()
+            .context("manifest buckets missing")?
+            .iter()
+            .map(|v| v.as_usize().context("bucket must be an integer"))
+            .collect::<Result<_>>()?;
+        if buckets.is_empty() {
+            bail!("manifest has no buckets");
+        }
+        if !buckets.windows(2).all(|w| w[0] < w[1]) {
+            bail!("manifest buckets must be strictly increasing");
+        }
+
+        let steps_j = j.get("files").get("step");
+        let steps_obj = steps_j.as_obj().context("manifest files.step missing")?;
+        let mut step_files = Vec::with_capacity(buckets.len());
+        for &b in &buckets {
+            let name = steps_obj
+                .get(&b.to_string())
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("manifest missing step file for bucket {b}"))?;
+            let full = dir.join(name);
+            if !full.exists() {
+                bail!("manifest references missing file {}", full.display());
+            }
+            step_files.push((b, name.to_string()));
+        }
+        let eval_file = j
+            .get("files")
+            .get("eval")
+            .as_str()
+            .context("manifest files.eval missing")?
+            .to_string();
+        if !dir.join(&eval_file).exists() {
+            bail!("manifest references missing eval file {eval_file}");
+        }
+
+        let get_usize =
+            |k: &str| -> Result<usize> { j.get(k).as_usize().with_context(|| format!("manifest {k} missing")) };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dims,
+            b_min: get_usize("b_min")?,
+            b_max: get_usize("b_max")?,
+            beta: get_usize("beta")?,
+            eval_batch: get_usize("eval_batch")?,
+            config_hash: j.get("config_hash").as_str().unwrap_or("").to_string(),
+            buckets,
+            step_files,
+            eval_file,
+        })
+    }
+
+    /// Fail fast if the run config disagrees with what was AOT-compiled.
+    pub fn check_config(&self, cfg: &Config) -> Result<()> {
+        if self.dims != cfg.model {
+            bail!(
+                "artifact dims {:?} != config dims {:?}; re-run `make artifacts` with matching flags",
+                self.dims,
+                cfg.model
+            );
+        }
+        let grid = cfg.bucket_grid();
+        if grid != self.buckets {
+            bail!(
+                "artifact bucket grid {:?} != config grid {:?} (b_min/b_max/beta mismatch)",
+                self.buckets,
+                grid
+            );
+        }
+        Ok(())
+    }
+
+    pub fn step_path(&self, bucket: usize) -> Result<PathBuf> {
+        self.step_files
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, name)| self.dir.join(name))
+            .with_context(|| format!("no step artifact for bucket {bucket}"))
+    }
+
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join(&self.eval_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path, buckets: &[usize]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let steps: Vec<String> = buckets
+            .iter()
+            .map(|b| {
+                let name = format!("step_b{b}.hlo.txt");
+                std::fs::write(dir.join(&name), "HloModule fake").unwrap();
+                format!("\"{b}\": \"{name}\"")
+            })
+            .collect();
+        std::fs::write(dir.join("eval.hlo.txt"), "HloModule fake").unwrap();
+        let buckets_s: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
+        let manifest = format!(
+            r#"{{
+              "version": 2, "config_hash": "deadbeef",
+              "dims": {{"features": 8192, "hidden": 64, "classes": 1024,
+                        "max_nnz": 32, "max_labels": 8}},
+              "buckets": [{}], "b_min": {}, "b_max": {}, "beta": 8,
+              "eval_batch": 256,
+              "files": {{"eval": "eval.hlo.txt", "step": {{{}}}}}
+            }}"#,
+            buckets_s.join(","),
+            buckets[0],
+            buckets[buckets.len() - 1],
+            steps.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("hs-manifest-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_fake_manifest(&dir, &[16, 24, 32]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.features, 8192);
+        assert_eq!(m.buckets, vec![16, 24, 32]);
+        assert!(m.step_path(24).unwrap().exists());
+        assert!(m.step_path(99).is_err());
+    }
+
+    #[test]
+    fn missing_file_detected() {
+        let dir = std::env::temp_dir().join("hs-manifest-test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_fake_manifest(&dir, &[16]);
+        std::fs::remove_file(dir.join("step_b16.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn config_mismatch_detected() {
+        let dir = std::env::temp_dir().join("hs-manifest-test3");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_fake_manifest(&dir, &[16, 24, 32]);
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = crate::config::Config::default(); // grid 16..128 — mismatch
+        assert!(m.check_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them, plus the
+//! simulated heterogeneous device fleet that stands in for the paper's
+//! 4× V100 server.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`client`] — PJRT CPU client wrapper: per-bucket step executables,
+//!   the eval executable, literal plumbing. One instance per thread (the
+//!   `xla` crate's client is `Rc`-based, i.e. `!Send` — each GPU-manager
+//!   thread owns its own client, which also mirrors the paper's
+//!   one-manager-per-GPU design).
+//! * [`device`] — heterogeneity model: persistent speed factor + AR(1)
+//!   jitter + nnz sensitivity, with real-sleep and virtual-clock modes.
+//! * [`cost`] — analytic step-cost model, calibratable against real PJRT
+//!   measurements; drives the discrete-event engine.
+
+pub mod client;
+pub mod cost;
+pub mod device;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use cost::CostModel;
+pub use device::SimDevice;
+pub use manifest::Manifest;

@@ -1,0 +1,131 @@
+//! SimHash LSH tables over the output-layer weight columns.
+//!
+//! Table `t` hashes a vector `v ∈ R^H` to the sign pattern of `bits` random
+//! projections. Classes whose weight column hashes to the same bucket as the
+//! hidden activation are retrieved as active-set candidates — SLIDE's core
+//! trick for sampling the softmax.
+
+use crate::slide::network::SlideModel;
+use crate::util::rng::Rng;
+
+use std::collections::HashMap;
+
+pub struct LshTables {
+    /// `projections[t]` holds `bits` random H-dim hyperplanes.
+    projections: Vec<Vec<Vec<f32>>>,
+    /// `buckets[t][hash] -> class ids`.
+    buckets: Vec<HashMap<u32, Vec<u32>>>,
+    pub bits: usize,
+}
+
+impl LshTables {
+    /// Hash every class's output-weight column into every table.
+    pub fn build(model: &SlideModel, tables: usize, bits: usize, seed: u64) -> LshTables {
+        assert!(bits <= 31);
+        let h = model.hidden;
+        let c = model.classes;
+        let mut rng = Rng::new(seed);
+        let projections: Vec<Vec<Vec<f32>>> = (0..tables)
+            .map(|_| {
+                (0..bits)
+                    .map(|_| (0..h).map(|_| rng.normal() as f32).collect())
+                    .collect()
+            })
+            .collect();
+        let mut buckets: Vec<HashMap<u32, Vec<u32>>> = vec![HashMap::new(); tables];
+        let mut col = vec![0.0f32; h];
+        for class in 0..c {
+            model.read_w2_column(class, &mut col);
+            for (t, proj) in projections.iter().enumerate() {
+                let key = simhash(proj, &col);
+                buckets[t].entry(key).or_default().push(class as u32);
+            }
+        }
+        LshTables { projections, buckets, bits }
+    }
+
+    /// Candidate classes whose columns collide with `v` in any table.
+    pub fn query_into(&self, v: &[f32], out: &mut Vec<u32>) {
+        for (t, proj) in self.projections.iter().enumerate() {
+            let key = simhash(proj, v);
+            if let Some(ids) = self.buckets[t].get(&key) {
+                out.extend_from_slice(ids);
+            }
+        }
+    }
+
+    pub fn tables(&self) -> usize {
+        self.projections.len()
+    }
+}
+
+fn simhash(projections: &[Vec<f32>], v: &[f32]) -> u32 {
+    let mut key = 0u32;
+    for (b, plane) in projections.iter().enumerate() {
+        let dot: f32 = plane.iter().zip(v).map(|(&p, &x)| p * x).sum();
+        if dot >= 0.0 {
+            key |= 1 << b;
+        }
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+    use crate::model::ModelState;
+
+    fn model_with_columns(cols: &[Vec<f32>]) -> (ModelDims, SlideModel) {
+        let h = cols[0].len();
+        let c = cols.len();
+        let dims = ModelDims { features: 4, hidden: h, classes: c, max_nnz: 2, max_labels: 2 };
+        let mut state = ModelState::zeros(&dims);
+        for (class, col) in cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                state.w2[i * c + class] = v;
+            }
+        }
+        (dims, SlideModel::from_state(&state))
+    }
+
+    #[test]
+    fn identical_vector_always_collides() {
+        let col = vec![0.3, -0.7, 0.2, 0.9];
+        let (_, model) = model_with_columns(&[col.clone(), vec![0.0, 0.0, 0.0, 0.1]]);
+        let tables = LshTables::build(&model, 6, 8, 1);
+        let mut out = Vec::new();
+        tables.query_into(&col, &mut out);
+        // Class 0's column == query, so it must appear in every table.
+        let count0 = out.iter().filter(|&&c| c == 0).count();
+        assert_eq!(count0, 6);
+    }
+
+    #[test]
+    fn similar_vectors_collide_more_than_dissimilar() {
+        let mut rng = Rng::new(2);
+        let base: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let similar: Vec<f32> = base.iter().map(|&x| x + 0.05 * rng.normal() as f32).collect();
+        let opposite: Vec<f32> = base.iter().map(|&x| -x).collect();
+        let (_, model) = model_with_columns(&[similar, opposite]);
+        let tables = LshTables::build(&model, 12, 6, 3);
+        let mut out = Vec::new();
+        tables.query_into(&base, &mut out);
+        let sim_hits = out.iter().filter(|&&c| c == 0).count();
+        let opp_hits = out.iter().filter(|&&c| c == 1).count();
+        assert!(sim_hits > opp_hits, "sim={sim_hits} opp={opp_hits}");
+    }
+
+    #[test]
+    fn bucket_partition_covers_all_classes() {
+        let mut rng = Rng::new(4);
+        let cols: Vec<Vec<f32>> =
+            (0..40).map(|_| (0..8).map(|_| rng.normal() as f32).collect()).collect();
+        let (_, model) = model_with_columns(&cols);
+        let tables = LshTables::build(&model, 3, 5, 5);
+        for t in 0..3 {
+            let total: usize = tables.buckets[t].values().map(|v| v.len()).sum();
+            assert_eq!(total, 40, "table {t} lost classes");
+        }
+    }
+}

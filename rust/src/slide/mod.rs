@@ -1,0 +1,209 @@
+//! SLIDE CPU baseline (paper §5.1, Fig. 8) — "smart algorithms over
+//! hardware acceleration".
+//!
+//! SLIDE trains the same sparse MLP on CPU only, replacing the dense output
+//! layer with LSH-sampled *active classes*: per sample, only the classes
+//! whose weight vectors hash near the hidden activation (plus the true
+//! labels and a few random negatives) participate in the softmax and the
+//! backward pass. Updates are Hogwild-style asynchronous across threads.
+//!
+//! Our implementation:
+//! * [`lsh`] — SimHash tables over the output-layer weight columns.
+//! * [`network`] — active-set forward/backward on an atomic parameter store
+//!   (relaxed-ordering `AtomicU32` bit-cast floats: true lock-free hogwild
+//!   without UB; lost updates are part of the algorithm's contract).
+//! * [`SlideTrainer`] — multi-threaded driver with periodic table rebuilds.
+
+pub mod lsh;
+pub mod network;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::ModelDims;
+use crate::data::SparseDataset;
+use crate::model::ModelState;
+use crate::util::rng::Rng;
+use crate::Result;
+
+pub use network::SlideModel;
+
+#[derive(Clone, Debug)]
+pub struct SlideConfig {
+    pub threads: usize,
+    pub lr: f32,
+    /// LSH tables and bits per table.
+    pub tables: usize,
+    pub bits: usize,
+    /// Random negative classes added to every active set.
+    pub random_negatives: usize,
+    /// Rebuild the LSH tables every this many updates (per trainer).
+    pub rebuild_every: u64,
+    pub seed: u64,
+}
+
+impl Default for SlideConfig {
+    fn default() -> Self {
+        SlideConfig {
+            threads: 4,
+            lr: 0.05,
+            tables: 8,
+            bits: 9,
+            random_negatives: 16,
+            rebuild_every: 2_000,
+            seed: 33,
+        }
+    }
+}
+
+/// Multi-threaded SLIDE trainer over a shared atomic model.
+pub struct SlideTrainer {
+    pub cfg: SlideConfig,
+    pub model: Arc<SlideModel>,
+    dims: ModelDims,
+    updates: Arc<AtomicU64>,
+}
+
+impl SlideTrainer {
+    pub fn new(dims: &ModelDims, init: &ModelState, cfg: SlideConfig) -> Self {
+        SlideTrainer {
+            model: Arc::new(SlideModel::from_state(init)),
+            dims: dims.clone(),
+            updates: Arc::new(AtomicU64::new(0)),
+            cfg,
+        }
+    }
+
+    /// Train for (roughly) `wall_budget` seconds or `max_samples`, whichever
+    /// comes first. Returns (samples processed, updates, elapsed seconds).
+    pub fn train(
+        &self,
+        data: &SparseDataset,
+        wall_budget: f64,
+        max_samples: u64,
+    ) -> Result<(u64, u64, f64)> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let processed = Arc::new(AtomicU64::new(0));
+        let t0 = std::time::Instant::now();
+
+        // Initial LSH tables over the output layer.
+        let tables = Arc::new(std::sync::RwLock::new(lsh::LshTables::build(
+            &self.model,
+            self.cfg.tables,
+            self.cfg.bits,
+            self.cfg.seed,
+        )));
+
+        std::thread::scope(|scope| {
+            for t in 0..self.cfg.threads {
+                let model = self.model.clone();
+                let stop = stop.clone();
+                let processed = processed.clone();
+                let updates = self.updates.clone();
+                let tables = tables.clone();
+                let cfg = self.cfg.clone();
+                let dims = self.dims.clone();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(cfg.seed ^ (t as u64 + 1).wrapping_mul(0x9E37));
+                    let mut since_rebuild = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let i = rng.range(0, data.len());
+                        let sample = data.sample(i);
+                        {
+                            let guard = tables.read().unwrap();
+                            network::train_sample(&model, &dims, &sample, &guard, &cfg, &mut rng);
+                        }
+                        let n = processed.fetch_add(1, Ordering::Relaxed) + 1;
+                        updates.fetch_add(1, Ordering::Relaxed);
+                        since_rebuild += 1;
+                        if n >= max_samples || t0.elapsed().as_secs_f64() >= wall_budget {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                        // Thread 0 owns table rebuilds (as in SLIDE's
+                        // periodic re-hashing).
+                        if t == 0 && since_rebuild >= cfg.rebuild_every {
+                            since_rebuild = 0;
+                            let rebuilt = lsh::LshTables::build(
+                                &model,
+                                cfg.tables,
+                                cfg.bits,
+                                cfg.seed ^ n,
+                            );
+                            *tables.write().unwrap() = rebuilt;
+                        }
+                    }
+                });
+            }
+        });
+
+        Ok((
+            processed.load(Ordering::Relaxed),
+            self.updates.load(Ordering::Relaxed),
+            t0.elapsed().as_secs_f64(),
+        ))
+    }
+
+    /// Snapshot the atomic model into a plain `ModelState` for evaluation.
+    pub fn snapshot(&self) -> ModelState {
+        self.model.to_state(&self.dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+    use crate::data::batcher::EvalBatches;
+    use crate::data::synthetic::Generator;
+    use crate::model::reference;
+
+    #[test]
+    fn slide_improves_p_at_1() {
+        let dims = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+        let dcfg = DataConfig { train_samples: 2000, test_samples: 300, avg_nnz: 6.0, ..Default::default() };
+        let gen = Generator::new(&dims, &dcfg);
+        let train = gen.generate(2000, 1);
+        let test = gen.generate(300, 2);
+        let init = ModelState::init(&dims, 5);
+        let trainer = SlideTrainer::new(
+            &dims,
+            &init,
+            SlideConfig { threads: 2, lr: 0.25, ..Default::default() },
+        );
+
+        let eval = EvalBatches::new(&test, &dims, 64);
+        let p1 = |m: &ModelState| {
+            let mut hit = 0;
+            let mut tot = 0;
+            for b in &eval.batches {
+                let preds = reference::eval_ref(m, b);
+                for (r, &id) in b.sample_ids.iter().enumerate() {
+                    tot += 1;
+                    if test.sample(id as usize).labels.contains(&(preds[r] as u32)) {
+                        hit += 1;
+                    }
+                }
+            }
+            hit as f64 / tot as f64
+        };
+
+        let before = p1(&trainer.snapshot());
+        let (samples, updates, _) = trainer.train(&train, 20.0, 12_000).unwrap();
+        assert!(samples >= 12_000 || updates > 0);
+        let after = p1(&trainer.snapshot());
+        assert!(after > before + 0.05, "SLIDE failed to learn: {before} -> {after}");
+    }
+
+    #[test]
+    fn respects_sample_cap() {
+        let dims = ModelDims { features: 64, hidden: 8, classes: 16, max_nnz: 6, max_labels: 2 };
+        let dcfg = DataConfig { train_samples: 200, avg_nnz: 4.0, ..Default::default() };
+        let train = Generator::new(&dims, &dcfg).generate(200, 1);
+        let init = ModelState::init(&dims, 1);
+        let trainer =
+            SlideTrainer::new(&dims, &init, SlideConfig { threads: 3, ..Default::default() });
+        let (samples, _, _) = trainer.train(&train, 30.0, 500).unwrap();
+        // Threads may overshoot by at most ~threads samples.
+        assert!(samples >= 500 && samples < 600, "samples={samples}");
+    }
+}

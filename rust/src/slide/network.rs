@@ -1,0 +1,259 @@
+//! SLIDE's active-set sparse MLP on an atomic parameter store.
+//!
+//! Parameters live in `AtomicU32` arrays (f32 bit-cast, relaxed ordering):
+//! genuine lock-free Hogwild without undefined behaviour. Reads may observe
+//! torn *sets* of parameters (not torn words) and updates may be lost under
+//! contention — both are inherent to Hogwild-style SGD and harmless at our
+//! learning rates.
+//!
+//! Per training sample:
+//! 1. sparse input layer + ReLU (exact, every hidden unit),
+//! 2. active-set selection: true labels ∪ LSH candidates ∪ random negatives,
+//! 3. softmax restricted to the active set, cross-entropy on labels,
+//! 4. backprop through active classes only; sparse W1 scatter update.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::ModelDims;
+use crate::data::sparse::SampleView;
+use crate::model::ModelState;
+use crate::util::rng::Rng;
+
+use super::lsh::LshTables;
+use super::SlideConfig;
+
+const ORD: Ordering = Ordering::Relaxed;
+
+/// Atomic twin of `ModelState` (same layouts).
+pub struct SlideModel {
+    pub hidden: usize,
+    pub classes: usize,
+    pub features: usize,
+    w1: Vec<AtomicU32>,
+    b1: Vec<AtomicU32>,
+    w2: Vec<AtomicU32>,
+    b2: Vec<AtomicU32>,
+}
+
+fn to_atomic(xs: &[f32]) -> Vec<AtomicU32> {
+    xs.iter().map(|&x| AtomicU32::new(x.to_bits())).collect()
+}
+
+impl SlideModel {
+    pub fn from_state(m: &ModelState) -> SlideModel {
+        SlideModel {
+            hidden: m.dims.hidden,
+            classes: m.dims.classes,
+            features: m.dims.features,
+            w1: to_atomic(&m.w1),
+            b1: to_atomic(&m.b1),
+            w2: to_atomic(&m.w2),
+            b2: to_atomic(&m.b2),
+        }
+    }
+
+    pub fn to_state(&self, dims: &ModelDims) -> ModelState {
+        let read = |v: &Vec<AtomicU32>| -> Vec<f32> {
+            v.iter().map(|a| f32::from_bits(a.load(ORD))).collect()
+        };
+        ModelState {
+            dims: dims.clone(),
+            w1: read(&self.w1),
+            b1: read(&self.b1),
+            w2: read(&self.w2),
+            b2: read(&self.b2),
+        }
+    }
+
+    #[inline]
+    fn load(v: &[AtomicU32], i: usize) -> f32 {
+        f32::from_bits(v[i].load(ORD))
+    }
+
+    #[inline]
+    fn add(v: &[AtomicU32], i: usize, delta: f32) {
+        // Racy read-modify-write: classic Hogwild (lost updates allowed).
+        let cur = f32::from_bits(v[i].load(ORD));
+        v[i].store((cur + delta).to_bits(), ORD);
+    }
+
+    /// Copy W2[:, class] into `out` (LSH rebuilds).
+    pub fn read_w2_column(&self, class: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.hidden);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = Self::load(&self.w2, i * self.classes + class);
+        }
+    }
+}
+
+/// One SLIDE SGD update from one sample. Returns the sample loss over its
+/// active set.
+pub fn train_sample(
+    model: &SlideModel,
+    dims: &ModelDims,
+    sample: &SampleView<'_>,
+    tables: &LshTables,
+    cfg: &SlideConfig,
+    rng: &mut Rng,
+) -> f32 {
+    let h_dim = dims.hidden;
+    let c_dim = dims.classes;
+
+    // ---- hidden layer (exact) ---------------------------------------------
+    let mut a = vec![0.0f32; h_dim];
+    for i in 0..h_dim {
+        a[i] = SlideModel::load(&model.b1, i);
+    }
+    for (&fi, &fv) in sample.indices.iter().zip(sample.values) {
+        let base = fi as usize * h_dim;
+        for i in 0..h_dim {
+            a[i] += fv * SlideModel::load(&model.w1, base + i);
+        }
+    }
+    let h: Vec<f32> = a.iter().map(|&x| x.max(0.0)).collect();
+
+    // ---- active set ---------------------------------------------------------
+    let mut active: Vec<u32> = sample.labels.to_vec();
+    tables.query_into(&h, &mut active);
+    for _ in 0..cfg.random_negatives {
+        active.push(rng.range(0, c_dim) as u32);
+    }
+    active.sort_unstable();
+    active.dedup();
+
+    // ---- softmax over the active set ---------------------------------------
+    let mut logits = vec![0.0f32; active.len()];
+    for (j, &c) in active.iter().enumerate() {
+        let c = c as usize;
+        let mut acc = SlideModel::load(&model.b2, c);
+        for i in 0..h_dim {
+            if h[i] != 0.0 {
+                acc += h[i] * SlideModel::load(&model.w2, i * c_dim + c);
+            }
+        }
+        logits[j] = acc;
+    }
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for l in &logits {
+        sum += (l - mx).exp();
+    }
+    let lse = mx + sum.ln();
+
+    let label_w = 1.0 / sample.labels.len() as f32;
+    let mut loss = lse;
+    for (j, &c) in active.iter().enumerate() {
+        if sample.labels.contains(&c) {
+            loss -= label_w * logits[j];
+        }
+    }
+
+    // ---- backward over active classes ---------------------------------------
+    let lr = cfg.lr;
+    let mut dh = vec![0.0f32; h_dim];
+    for (j, &c) in active.iter().enumerate() {
+        let c = c as usize;
+        let mut dl = (logits[j] - lse).exp(); // softmax prob within active set
+        if sample.labels.contains(&(c as u32)) {
+            dl -= label_w;
+        }
+        // Accumulate dh before mutating w2 (consistent within this thread).
+        for i in 0..h_dim {
+            if h[i] != 0.0 {
+                dh[i] += dl * SlideModel::load(&model.w2, i * c_dim + c);
+                SlideModel::add(&model.w2, i * c_dim + c, -lr * dl * h[i]);
+            }
+        }
+        SlideModel::add(&model.b2, c, -lr * dl);
+    }
+
+    // ReLU gate + input layer scatter.
+    for i in 0..h_dim {
+        if a[i] <= 0.0 {
+            dh[i] = 0.0;
+        }
+    }
+    for i in 0..h_dim {
+        if dh[i] != 0.0 {
+            SlideModel::add(&model.b1, i, -lr * dh[i]);
+        }
+    }
+    for (&fi, &fv) in sample.indices.iter().zip(sample.values) {
+        let base = fi as usize * h_dim;
+        for i in 0..h_dim {
+            if dh[i] != 0.0 {
+                SlideModel::add(&model.w1, base + i, -lr * fv * dh[i]);
+            }
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+    use crate::data::synthetic::Generator;
+
+    #[test]
+    fn atomic_round_trip_preserves_state() {
+        let dims = ModelDims { features: 32, hidden: 8, classes: 16, max_nnz: 4, max_labels: 2 };
+        let m = ModelState::init(&dims, 7);
+        let atomic = SlideModel::from_state(&m);
+        let back = atomic.to_state(&dims);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn single_thread_training_reduces_loss() {
+        let dims = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 4 };
+        let dcfg = DataConfig { train_samples: 400, avg_nnz: 5.0, ..Default::default() };
+        let ds = Generator::new(&dims, &dcfg).generate(400, 1);
+        let model = SlideModel::from_state(&ModelState::init(&dims, 3));
+        let cfg = SlideConfig { lr: 0.2, ..Default::default() };
+        let tables = LshTables::build(&model, cfg.tables, cfg.bits, 1);
+        let mut rng = Rng::new(9);
+        let mut first_window = 0.0;
+        let mut last_window = 0.0;
+        let n = 2000;
+        for step in 0..n {
+            let s = ds.sample(rng.range(0, ds.len()));
+            let loss = train_sample(&model, &dims, &s, &tables, &cfg, &mut rng);
+            if step < 200 {
+                first_window += loss;
+            }
+            if step >= n - 200 {
+                last_window += loss;
+            }
+        }
+        assert!(
+            last_window < first_window,
+            "active-set loss should fall: {first_window} -> {last_window}"
+        );
+    }
+
+    #[test]
+    fn active_set_always_contains_labels() {
+        // Implicit in train_sample construction; verify the selection logic
+        // via a direct probe of the same code path.
+        let dims = ModelDims { features: 16, hidden: 4, classes: 8, max_nnz: 2, max_labels: 2 };
+        let model = SlideModel::from_state(&ModelState::init(&dims, 1));
+        // Enough random negatives that the active set is never just the
+        // label itself (a lone label gets softmax prob 1 ⇒ zero gradient).
+        let cfg = SlideConfig { random_negatives: 8, ..Default::default() };
+        let tables = LshTables::build(&model, 2, 3, 2);
+        let mut rng = Rng::new(5);
+        let indices = [1u32, 3];
+        let values = [1.0f32, -0.5];
+        let labels = [6u32];
+        let s = SampleView { indices: &indices, values: &values, labels: &labels };
+        // Loss must be finite and positive — and if labels were excluded
+        // from the active set the positive term would be missing, making
+        // loss == lse of negatives only; train_sample would still return a
+        // value, so instead check the update moved the label's bias up.
+        let b6_before = f32::from_bits(model.b2[6].load(std::sync::atomic::Ordering::Relaxed));
+        train_sample(&model, &dims, &s, &tables, &cfg, &mut rng);
+        let b6_after = f32::from_bits(model.b2[6].load(std::sync::atomic::Ordering::Relaxed));
+        assert!(b6_after > b6_before, "label bias should increase");
+    }
+}

@@ -1,0 +1,163 @@
+//! Measurement harness for `benches/` (offline replacement for criterion).
+//!
+//! Plain-binary benches (`harness = false`) call [`bench_fn`] for hot-path
+//! micro-measurements and use [`Table`] to print paper-style rows. Designed
+//! for reproducibility: fixed warmup, robust summary (median + IQR), and a
+//! `HS_FULL=1` escape hatch the figure benches use to switch from CI-sized
+//! to full-scale runs.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of a micro-benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10}  median {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            format!("n={}", self.iters),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations then `iters` timed ones.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: stats::percentile(&samples, 50.0),
+        p10_ns: stats::percentile(&samples, 10.0),
+        p90_ns: stats::percentile(&samples, 90.0),
+        mean_ns: stats::mean(&samples),
+    }
+}
+
+/// `HS_FULL=1` switches figure benches from fast CI defaults to full runs.
+pub fn full_scale() -> bool {
+    std::env::var("HS_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:<w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", self.widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_fn("spin", 2, 16, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+        assert_eq!(r.iters, 16);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()]);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,22 @@
+//! In-tree substrates that would normally come from crates.io.
+//!
+//! The build is fully offline and only the `xla` crate's dependency closure
+//! is vendored, so the usual ecosystem crates (rand, serde, clap, criterion,
+//! proptest, …) are unavailable. Everything the coordinator needs is
+//! implemented here, tested, and kept deliberately small:
+//!
+//! * [`rng`] — SplitMix64 seeding + xoshiro256** PRNG with normal / Zipf /
+//!   log-normal samplers (rand replacement).
+//! * [`json`] — JSON value model, parser and writer (serde_json replacement;
+//!   used for the artifact manifest and metrics logs).
+//! * [`stats`] — streaming mean/variance, percentiles, EWMA.
+//! * [`bench`] — measurement harness used by `benches/` (criterion
+//!   replacement): warmup, timed iterations, robust summary.
+//! * [`prop`] — miniature property-testing harness with shrinking
+//!   (proptest replacement) used for coordinator invariants.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

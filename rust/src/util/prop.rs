@@ -1,0 +1,209 @@
+//! Miniature property-testing harness with shrinking (proptest replacement).
+//!
+//! Coordinator invariants (routing conservation, batch bounds, merge-weight
+//! normalization) are checked over randomized inputs. On failure the input
+//! is shrunk toward a minimal counterexample before panicking, so test
+//! output stays actionable.
+//!
+//! ```ignore
+//! prop::check(100, seed, gen_vec_len(1..9), |case| {
+//!     // return Err(msg) to fail
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A generator produces a random case and can propose smaller variants.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks, in decreasing preference. Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `n` random cases; shrink + panic on the first failure.
+pub fn check<G: Gen>(
+    n: usize,
+    seed: u64,
+    gen: G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..n {
+        let case = gen.generate(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Greedy shrink loop.
+            let mut best = case;
+            let mut best_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {seed}): {best_msg}\nminimal counterexample: {best:?}"
+            );
+        }
+    }
+}
+
+/// Generator: u64 in [lo, hi), shrinking toward lo.
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.lo + rng.below(self.hi - self.lo)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: Vec<u64> with length in [min_len, max_len) and items in
+/// [item_lo, item_hi); shrinks by halving the vector and lowering items.
+pub struct VecU64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub item_lo: u64,
+    pub item_hi: u64,
+}
+
+impl Gen for VecU64 {
+    type Value = Vec<u64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<u64> {
+        let len = rng.range(self.min_len, self.max_len);
+        (0..len).map(|_| self.item_lo + rng.below(self.item_hi - self.item_lo)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut shorter = v.clone();
+            shorter.pop();
+            out.push(shorter);
+        }
+        // Lower the largest element.
+        if let Some((i, &m)) = v.iter().enumerate().max_by_key(|(_, &x)| x) {
+            if m > self.item_lo {
+                let mut lowered = v.clone();
+                lowered[i] = self.item_lo + (m - self.item_lo) / 2;
+                out.push(lowered);
+            }
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Generator: Vec<f64> in [lo, hi).
+pub struct VecF64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for VecF64 {
+    type Value = Vec<f64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let len = rng.range(self.min_len, self.max_len);
+        (0..len).map(|_| self.lo + rng.f64() * (self.hi - self.lo)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let mut shorter = v.clone();
+            shorter.pop();
+            out.push(shorter);
+        }
+        out
+    }
+}
+
+/// Pair generator combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, 1, U64Range { lo: 0, hi: 100 }, |&v| {
+            if v < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check(200, 2, U64Range { lo: 0, hi: 1000 }, |&v| {
+                if v < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 500"))
+                }
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        // The shrinker should have reduced the counterexample to exactly 500.
+        assert!(msg.contains("500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = VecU64 { min_len: 1, max_len: 10, item_lo: 5, item_hi: 15 };
+        check(100, 3, gen, |v| {
+            if v.is_empty() || v.len() >= 10 {
+                return Err(format!("len {}", v.len()));
+            }
+            if v.iter().any(|&x| !(5..15).contains(&x)) {
+                return Err("item out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration: the AOT artifacts executed through PJRT must match the
+//! pure-Rust reference twin bit-for-bit at f32 tolerance, and full training
+//! through the artifacts must learn.
+//!
+//! Requires `make artifacts` (the tests skip with a loud message otherwise
+//! so plain `cargo test` works on a fresh checkout).
+
+use std::path::Path;
+
+use heterosparse::config::Config;
+use heterosparse::coordinator::backend::{PjrtBackend, RefBackend, StepBackend};
+use heterosparse::data::batcher::{Batcher, EvalBatches};
+use heterosparse::data::synthetic::Generator;
+use heterosparse::model::ModelState;
+use heterosparse::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let cfg = Config::default();
+    let dir = Path::new(&cfg.runtime.artifacts_dir);
+    match Runtime::load(dir) {
+        Ok(rt) => {
+            rt.manifest.check_config(&cfg).expect("artifacts must match default config");
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_step_matches_reference_numerics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = Config::default();
+    let train = Generator::new(&cfg.model, &cfg.data).generate(600, 1);
+    let mut batcher = Batcher::new(&train, &cfg.model, 11);
+
+    let pjrt = PjrtBackend::new(rt);
+    let refb = RefBackend;
+
+    let mut m_pjrt = ModelState::init(&cfg.model, 42);
+    let mut m_ref = m_pjrt.clone();
+
+    // Several steps across several buckets, including a masked partial batch.
+    for (bucket, valid) in [(128usize, 128usize), (64, 64), (16, 16), (32, 20)] {
+        let batch = batcher.next_batch(bucket, valid);
+        let (loss_p, _) = pjrt.step(&mut m_pjrt, &batch, 0.05).unwrap();
+        let (loss_r, _) = refb.step(&mut m_ref, &batch, 0.05).unwrap();
+        assert!(
+            (loss_p - loss_r).abs() < 1e-3,
+            "bucket {bucket}: loss {loss_p} vs {loss_r}"
+        );
+        let diff = m_pjrt.max_abs_diff(&m_ref);
+        assert!(diff < 5e-3, "bucket {bucket}: params diverged by {diff}");
+    }
+}
+
+#[test]
+fn pjrt_eval_matches_reference_predictions() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = Config::default();
+    let test = Generator::new(&cfg.model, &cfg.data).generate(512, 2);
+    let eval_batch = rt.manifest.eval_batch;
+    let eb = EvalBatches::new(&test, &cfg.model, eval_batch);
+    let model = ModelState::init(&cfg.model, 9);
+
+    let pjrt = PjrtBackend::new(rt);
+    let refb = RefBackend;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for batch in &eb.batches {
+        let p = pjrt.eval(&model, batch).unwrap();
+        let r = refb.eval(&model, batch).unwrap();
+        for i in 0..batch.valid {
+            total += 1;
+            if p[i] == r[i] {
+                agree += 1;
+            }
+        }
+    }
+    // Argmax ties under f32 reassociation may flip a stray prediction.
+    assert!(agree as f64 / total as f64 > 0.99, "only {agree}/{total} predictions agree");
+}
+
+#[test]
+fn pjrt_step_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = Config::default();
+    let train = Generator::new(&cfg.model, &cfg.data).generate(200, 1);
+    let mut batcher = Batcher::new(&train, &cfg.model, 3);
+    let batch = batcher.next_batch(64, 64);
+
+    let run = |rt: &Runtime| {
+        let mut m = ModelState::init(&cfg.model, 5);
+        let (loss, _) = rt.step(&mut m, &batch, 0.05).unwrap();
+        (loss, m.w1[1234], m.w2[777])
+    };
+    let a = run(&rt);
+    let b = run(&rt);
+    assert_eq!(a, b, "same inputs must produce identical outputs");
+}
+
+#[test]
+fn all_buckets_compile_and_execute() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = Config::default();
+    let train = Generator::new(&cfg.model, &cfg.data).generate(300, 1);
+    let mut batcher = Batcher::new(&train, &cfg.model, 4);
+    let mut m = ModelState::init(&cfg.model, 6);
+    for &bucket in &rt.manifest.buckets {
+        let batch = batcher.next_batch(bucket, bucket);
+        let (loss, _) = rt.step(&mut m, &batch, 0.01).unwrap();
+        assert!(loss.is_finite(), "bucket {bucket} produced non-finite loss");
+    }
+    assert_eq!(rt.compiled_buckets(), rt.manifest.buckets.len());
+}
+
+#[test]
+fn full_training_through_pjrt_learns() {
+    if runtime_or_skip().is_none() {
+        return;
+    }
+    use heterosparse::coordinator::trainer::TrainerOptions;
+    use heterosparse::harness::{run_single, Backend};
+
+    let mut cfg = Config::default();
+    cfg.data.train_samples = 4_000;
+    cfg.data.test_samples = 600;
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 5;
+    cfg.sgd.mega_batches = 10;
+    cfg.validate().unwrap();
+
+    let log = run_single(&cfg, Backend::Pjrt, TrainerOptions::default()).unwrap();
+    assert_eq!(log.rows.len(), 5);
+    assert!(
+        log.rows.last().unwrap().loss < log.rows[0].loss,
+        "loss must decrease: {} -> {}",
+        log.rows[0].loss,
+        log.rows.last().unwrap().loss
+    );
+    assert!(log.best_accuracy() > 0.1, "P@1 {}", log.best_accuracy());
+}
+
+#[test]
+fn threaded_engine_with_pjrt_runs() {
+    if runtime_or_skip().is_none() {
+        return;
+    }
+    use heterosparse::config::ExecMode;
+    use heterosparse::coordinator::trainer::TrainerOptions;
+    use heterosparse::harness::{run_single, Backend};
+
+    let mut cfg = Config::default();
+    cfg.runtime.mode = ExecMode::Real;
+    cfg.data.train_samples = 2_000;
+    cfg.data.test_samples = 300;
+    cfg.devices.count = 2;
+    cfg.devices.speed_factors = vec![1.0, 1.3];
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 2;
+    cfg.sgd.mega_batches = 5;
+    cfg.validate().unwrap();
+
+    let log = run_single(&cfg, Backend::Pjrt, TrainerOptions::default()).unwrap();
+    assert_eq!(log.rows.len(), 2);
+    assert!(log.rows.iter().all(|r| r.loss.is_finite()));
+    // Real wall clock advanced.
+    assert!(log.rows.last().unwrap().clock > 0.0);
+}

@@ -1,0 +1,336 @@
+//! Integration over the coordinator without artifacts (hermetic): strategy
+//! end-to-end runs, engine cross-checks, and property tests on routing.
+
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ExecMode, ModelDims, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::plan::{DispatchMode, DispatchPlan};
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::data::batcher::Batcher;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::model::ModelState;
+use heterosparse::runtime::{CostModel, SimDevice};
+use heterosparse::util::prop;
+
+fn small_cfg(strategy: Strategy, mode: ExecMode) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 16,
+        num_mega_batches: 5,
+        initial_batch: 32,
+        warmup_mega_batches: 0,
+        seed: 3,
+    };
+    cfg.devices = DeviceConfig {
+        count: 3,
+        speed_factors: vec![1.0, 1.15, 1.32],
+        jitter: 0.02,
+        nnz_sensitivity: 1.0,
+        seed: 11,
+    };
+    cfg.data = DataConfig { train_samples: 2_000, test_samples: 400, avg_nnz: 6.0, ..Default::default() };
+    cfg.runtime.mode = mode;
+    cfg.strategy.kind = strategy;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn every_strategy_learns_in_both_engines() {
+    for mode in [ExecMode::Virtual, ExecMode::Real] {
+        for strategy in Strategy::all() {
+            let cfg = small_cfg(strategy, mode);
+            let log = run_single(&cfg, Backend::Reference, TrainerOptions::default())
+                .unwrap_or_else(|e| panic!("{strategy:?}/{mode:?}: {e}"));
+            assert!(!log.rows.is_empty());
+            let first = log.rows[0].loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(
+                last < first + 0.05,
+                "{strategy:?}/{mode:?}: loss {first} -> {last}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_beats_elastic_under_heavy_skew() {
+    // With strong heterogeneity the dynamic scheduler finishes the same
+    // sample budget in less (virtual) time than the static allocation.
+    let mut a_cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    let mut e_cfg = small_cfg(Strategy::Elastic, ExecMode::Virtual);
+    for cfg in [&mut a_cfg, &mut e_cfg] {
+        cfg.devices.speed_factors = vec![1.0, 1.5, 2.0];
+        cfg.devices.jitter = 0.0;
+        cfg.sgd.num_mega_batches = 6;
+    }
+    let a = run_single(&a_cfg, Backend::Reference, TrainerOptions::default()).unwrap();
+    let e = run_single(&e_cfg, Backend::Reference, TrainerOptions::default()).unwrap();
+    let a_clock = a.rows.last().unwrap().clock;
+    let e_clock = e.rows.last().unwrap().clock;
+    assert!(
+        a_clock < e_clock,
+        "adaptive should finish the sample budget faster: {a_clock} vs {e_clock}"
+    );
+}
+
+/// Property: the dynamic scheduler conserves the sample budget exactly for
+/// random budgets and random (grid-valid) batch-size assignments.
+#[test]
+fn prop_dynamic_routing_conserves_budget() {
+    let dims = ModelDims { features: 64, hidden: 4, classes: 16, max_nnz: 4, max_labels: 2 };
+    let data_cfg = DataConfig { train_samples: 300, avg_nnz: 3.0, ..Default::default() };
+    let ds = Generator::new(&dims, &data_cfg).generate(300, 1);
+    let dev_cfg = DeviceConfig {
+        count: 3,
+        speed_factors: vec![1.0, 1.2, 1.4],
+        jitter: 0.05,
+        nnz_sensitivity: 1.0,
+        seed: 5,
+    };
+
+    let gen = prop::Pair(
+        prop::U64Range { lo: 1, hi: 700 },
+        prop::VecU64 { min_len: 3, max_len: 4, item_lo: 1, item_hi: 5 },
+    );
+    prop::check(40, 0xDADA, gen, |(budget, size_picks)| {
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&dev_cfg), CostModel::default());
+        let mut batcher = Batcher::new(&ds, &dims, *budget ^ 77);
+        let mut replicas = vec![ModelState::init(&dims, 1); 3];
+        let batch_sizes: Vec<usize> = size_picks.iter().map(|&p| 8 * p as usize).collect();
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            batch_sizes,
+            lrs: vec![0.05; 3],
+            sample_budget: *budget as usize,
+            crossbow_rate: None,
+        };
+        let report = engine
+            .run_mega_batch(&mut replicas, &mut batcher, &plan)
+            .map_err(|e| e.to_string())?;
+        if report.total_samples() != *budget {
+            return Err(format!(
+                "budget {} but processed {}",
+                budget,
+                report.total_samples()
+            ));
+        }
+        // Updates × batch sizes must cover the budget (batches may be partial
+        // only at the tail).
+        if report.per_device.iter().any(|d| d.busy < 0.0) {
+            return Err("negative busy time".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property: samples within one batcher epoch are unique (no sample is
+/// processed twice before the whole dataset is seen) — routing correctness
+/// at the data layer.
+#[test]
+fn prop_epoch_uniqueness_under_random_batch_sizes() {
+    let dims = ModelDims { features: 64, hidden: 4, classes: 16, max_nnz: 4, max_labels: 2 };
+    let data_cfg = DataConfig { train_samples: 200, avg_nnz: 3.0, ..Default::default() };
+    let ds = Generator::new(&dims, &data_cfg).generate(200, 1);
+
+    let gen = prop::VecU64 { min_len: 1, max_len: 12, item_lo: 1, item_hi: 40 };
+    prop::check(60, 0xFEED, gen, |sizes| {
+        let mut batcher = Batcher::new(&ds, &dims, sizes.iter().sum::<u64>());
+        let mut seen = std::collections::HashSet::new();
+        let mut drawn = 0usize;
+        for &s in sizes {
+            let s = s as usize;
+            if drawn + s > 200 {
+                break;
+            }
+            let b = batcher.next_batch(s, s);
+            drawn += s;
+            for &id in &b.sample_ids {
+                if !seen.insert(id) {
+                    return Err(format!("sample {id} drawn twice within an epoch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn run_logs_are_written_and_parse_back() {
+    let cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    let log = run_single(&cfg, Backend::Reference, TrainerOptions::default()).unwrap();
+    let dir = std::env::temp_dir().join("hs-int-logs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("run.csv");
+    let json = dir.join("run.json");
+    log.write_csv(&csv).unwrap();
+    log.write_json(&json).unwrap();
+    let parsed = heterosparse::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert_eq!(parsed.get("rows").as_arr().unwrap().len(), log.rows.len());
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_text.lines().count(), log.rows.len() + 1);
+}
+
+#[test]
+fn gradient_aggregation_equals_model_averaging_single_round() {
+    // Analytical sanity from §2.2: for one SGD step from a common model,
+    // averaging the updated replicas equals applying the averaged gradient.
+    let dims = ModelDims { features: 64, hidden: 8, classes: 16, max_nnz: 4, max_labels: 2 };
+    let data_cfg = DataConfig { train_samples: 64, avg_nnz: 3.0, ..Default::default() };
+    let ds = Generator::new(&dims, &data_cfg).generate(64, 1);
+    let mut batcher = Batcher::new(&ds, &dims, 1);
+    let m0 = ModelState::init(&dims, 4);
+    let lr = 0.1f32;
+
+    let b1 = batcher.next_batch(16, 16);
+    let b2 = batcher.next_batch(16, 16);
+
+    // Model averaging of one-step replicas.
+    let mut r1 = m0.clone();
+    let mut r2 = m0.clone();
+    heterosparse::model::reference::sgd_step_ref(&mut r1, &b1, lr);
+    heterosparse::model::reference::sgd_step_ref(&mut r2, &b2, lr);
+    let mut avg = ModelState::zeros(&dims);
+    avg.set_weighted_sum(&[&r1, &r2], &[0.5, 0.5]);
+
+    // Averaged-gradient step: m0 - lr/2 * (g1 + g2). Recover g via lr=1 runs.
+    let mut g1 = m0.clone();
+    let mut g2 = m0.clone();
+    heterosparse::model::reference::sgd_step_ref(&mut g1, &b1, 1.0);
+    heterosparse::model::reference::sgd_step_ref(&mut g2, &b2, 1.0);
+    let mut agg = m0.clone();
+    // agg += lr/2 * ((g1 - m0) + (g2 - m0))
+    agg.add_scaled_diff(&g1, &m0, lr as f64 / 2.0);
+    agg.add_scaled_diff(&g2, &m0, lr as f64 / 2.0);
+
+    assert!(avg.max_abs_diff(&agg) < 1e-5, "diff {}", avg.max_abs_diff(&agg));
+}
+
+#[test]
+fn single_device_strategies_coincide() {
+    // On one device Adaptive and Elastic are the same algorithm (Fig. 6
+    // plots them as one curve). Verify trajectories match exactly in
+    // deterministic virtual time.
+    let mut a_cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    let mut e_cfg = small_cfg(Strategy::Elastic, ExecMode::Virtual);
+    for cfg in [&mut a_cfg, &mut e_cfg] {
+        cfg.devices = DeviceConfig {
+            count: 1,
+            speed_factors: vec![1.0],
+            jitter: 0.0,
+            nnz_sensitivity: 1.0,
+            seed: 11,
+        };
+        cfg.sgd.num_mega_batches = 3;
+    }
+    let a = run_single(&a_cfg, Backend::Reference, TrainerOptions::default()).unwrap();
+    let e = run_single(&e_cfg, Backend::Reference, TrainerOptions::default()).unwrap();
+    for (ra, re) in a.rows.iter().zip(&e.rows) {
+        assert!((ra.loss - re.loss).abs() < 1e-9, "losses diverge: {} vs {}", ra.loss, re.loss);
+        assert_eq!(ra.accuracy, re.accuracy);
+    }
+}
+
+/// Failure injection: a worker whose backend dies mid-run must surface an
+/// error from `run_mega_batch` (no hang, no poisoned engine teardown).
+#[test]
+fn threaded_engine_surfaces_worker_failure() {
+    use heterosparse::coordinator::backend::StepBackend;
+    use heterosparse::coordinator::engine_threaded::{BackendFactory, ThreadedEngine};
+    use heterosparse::data::PaddedBatch;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    struct FailingBackend {
+        remaining: AtomicU32,
+    }
+    impl StepBackend for FailingBackend {
+        fn step(
+            &self,
+            model: &mut ModelState,
+            batch: &PaddedBatch,
+            lr: f32,
+        ) -> heterosparse::Result<(f32, f64)> {
+            if self.remaining.fetch_sub(1, Ordering::Relaxed) == 0 {
+                anyhow::bail!("injected device fault");
+            }
+            let loss = heterosparse::model::reference::sgd_step_ref(model, batch, lr);
+            Ok((loss, 1e-6))
+        }
+        fn eval(&self, m: &ModelState, b: &PaddedBatch) -> heterosparse::Result<Vec<i32>> {
+            Ok(heterosparse::model::reference::eval_ref(m, b))
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    let dims = ModelDims { features: 64, hidden: 4, classes: 16, max_nnz: 4, max_labels: 2 };
+    let data_cfg = DataConfig { train_samples: 300, avg_nnz: 3.0, ..Default::default() };
+    let ds = Generator::new(&dims, &data_cfg).generate(300, 1);
+    let dev_cfg = DeviceConfig {
+        count: 2,
+        speed_factors: vec![1.0, 1.2],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 3,
+    };
+    let factory: BackendFactory = Arc::new(|dev| {
+        Ok(Box::new(FailingBackend {
+            // Device 1 fails on its third step; device 0 keeps working.
+            remaining: AtomicU32::new(if dev == 1 { 2 } else { u32::MAX }),
+        }) as Box<dyn StepBackend>)
+    });
+    let template = ModelState::init(&dims, 1);
+    let mut engine =
+        ThreadedEngine::spawn(factory, SimDevice::fleet(&dev_cfg), &template).unwrap();
+    let mut batcher = Batcher::new(&ds, &dims, 4);
+    let mut replicas = vec![template.clone(); 2];
+    let plan = DispatchPlan {
+        mode: DispatchMode::Dynamic,
+        batch_sizes: vec![8, 8],
+        lrs: vec![0.05; 2],
+        sample_budget: 200,
+        crossbow_rate: None,
+    };
+    let err = engine
+        .run_mega_batch(&mut replicas, &mut batcher, &plan)
+        .expect_err("worker fault must propagate");
+    assert!(format!("{err:#}").contains("injected device fault"), "{err:#}");
+}
+
+/// Config files load end to end (TOML subset + validation).
+#[test]
+fn shipped_config_files_parse_and_validate() {
+    for name in ["configs/default.toml", "configs/e2e.toml"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+        let cfg = Config::load(&path, &[]).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        cfg.validate().unwrap();
+    }
+    // Overrides stack on top of the file.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/default.toml");
+    let cfg = Config::load(&path, &[("devices.count".into(), "2".into()),
+                                    ("devices.speed_factors".into(), "[1.0, 1.2]".into())])
+        .unwrap();
+    assert_eq!(cfg.devices.count, 2);
+}
+
+/// eval_every > 1 skips evaluations but keeps rows consistent.
+#[test]
+fn sparse_eval_cadence() {
+    let cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    let opts = TrainerOptions { eval_every: 2, ..Default::default() };
+    let log = run_single(&cfg, Backend::Reference, opts).unwrap();
+    assert_eq!(log.rows.len(), cfg.sgd.num_mega_batches);
+    // Rows between evals repeat the previous accuracy value.
+    assert_eq!(log.rows[0].accuracy, 0.0, "mb 0 is not an eval point at cadence 2");
+    assert!(log.rows[1].accuracy >= 0.0);
+}
