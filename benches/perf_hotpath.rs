@@ -5,10 +5,12 @@
 //!   * eval latency,
 //!   * merge arithmetic (weighted all-reduce) across model sizes,
 //!   * batcher assembly,
-//!   * Algorithm 1 + Algorithm 2 overhead (must be negligible vs a step).
+//!   * Algorithm 1 + Algorithm 2 overhead (must be negligible vs a step),
+//!   * dispatch-plan recomputation + pool-event processing (the per-
+//!     mega-batch overhead the elastic pool adds to the hot path).
 
-use heterosparse::config::{Config, MergeConfig};
-use heterosparse::coordinator::{merge, scaling};
+use heterosparse::config::{Config, MergeConfig, Strategy};
+use heterosparse::coordinator::{merge, plan_for_strategy, scaling, DevicePool};
 use heterosparse::data::batcher::Batcher;
 use heterosparse::data::synthetic::Generator;
 use heterosparse::model::ModelState;
@@ -38,6 +40,39 @@ fn main() {
     let l2s = vec![0.01f64; 4];
     let r = bench_fn("alg2/compute_weights(4 devices)", 10, 1000, || {
         merge::compute_weights(&[12, 10, 9, 8], &[128, 96, 72, 48], &l2s, &MergeConfig::default())
+    });
+    println!("{r}");
+
+    // ---- elastic pool: plan recomputation + event processing ---------------
+    // Every mega-batch rebuilds the dispatch plan over the current active
+    // subset; pool events make the subset change. Both must stay negligible
+    // next to a step (hundreds of µs).
+    let batch_sizes = vec![128usize, 96, 72, 48];
+    let plan_lrs = vec![0.05f32, 0.04, 0.03, 0.02];
+    let active: Vec<usize> = vec![0, 1, 2, 3];
+    let r = bench_fn("pool/plan_rebuild(4 devices)", 10, 2000, || {
+        plan_for_strategy(&cfg, Strategy::Adaptive, &active, &batch_sizes, &plan_lrs)
+    });
+    println!("{r}");
+    let subset: Vec<usize> = vec![0, 2];
+    let r = bench_fn("pool/plan_rebuild(active subset 2/4)", 10, 2000, || {
+        plan_for_strategy(&cfg, Strategy::Adaptive, &subset, &batch_sizes, &plan_lrs)
+    });
+    println!("{r}");
+
+    let mut elastic_cfg = cfg.clone();
+    elastic_cfg.elastic.straggler_factor = 2.0;
+    elastic_cfg.elastic.events =
+        vec!["at_mb=1 remove=1".to_string(), "at_mb=2 add=1".to_string()];
+    elastic_cfg.validate().unwrap();
+    let mut pool = DevicePool::new(&elastic_cfg).unwrap();
+    let mut mb = 0usize;
+    let r = bench_fn("pool/begin_mega_batch+active_ids", 10, 2000, || {
+        // Cycle through remove/add mega-batches so events actually fire.
+        let ev = pool.begin_mega_batch(mb % 3);
+        let ids = pool.active_ids();
+        mb += 1;
+        (ev, ids)
     });
     println!("{r}");
 

@@ -14,9 +14,10 @@
 use heterosparse::config::{Config, DataProfile, Strategy};
 use heterosparse::coordinator::backend::RefBackend;
 use heterosparse::coordinator::engine_sim::SimEngine;
-use heterosparse::coordinator::trainer::{Engine, Trainer, TrainerOptions};
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
 use heterosparse::harness::{bench_config, make_data};
-use heterosparse::runtime::{CostModel, SimDevice};
+use heterosparse::runtime::CostModel;
 use heterosparse::util::bench::Table;
 
 fn run(cfg: &Config, xfer_scale: f64) -> anyhow::Result<(f64, f64, f64)> {
@@ -25,7 +26,7 @@ fn run(cfg: &Config, xfer_scale: f64) -> anyhow::Result<(f64, f64, f64)> {
     let mut cost = CostModel::default();
     cost.t_per_param_xfer *= xfer_scale;
     cost.t_merge_fixed *= xfer_scale.sqrt(); // latency grows slower than bw shrinks
-    let engine = Engine::Sim(SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), cost));
+    let engine = Box::new(SimEngine::new(&backend, DevicePool::roster(cfg), cost));
     let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
     let log = trainer.run(&train, &test)?;
     let merge_total: f64 = log.rows.iter().map(|r| r.merge_time).sum();

@@ -48,6 +48,7 @@ fn print_usage() {
          \x20 gen-data     write a synthetic XML dataset in libSVM format\n\
          \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
          \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12)\n\
+         \x20              or the elastic-failover study (elastic)\n\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\n\
          OPTIONS:\n\
@@ -58,6 +59,8 @@ fn print_usage() {
          \x20 --profile NAME     amazon | delicious\n\
          \x20 --checkpoint PATH  save the global model after every mega-batch\n\
          \x20 --resume PATH      initialize from a saved checkpoint\n\
+         \x20 --elastic EVENT    scripted pool event, e.g. \"at_mb=20 remove=2\"\n\
+         \x20                    (repeatable; appends to [elastic] events)\n\
          \x20 --verbose          progress output"
     );
 }
@@ -83,6 +86,7 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     let mut verbose = false;
     let mut checkpoint = None;
     let mut resume = None;
+    let mut elastic_events: Vec<String> = Vec::new();
     let mut positional = Vec::new();
 
     let mut it = args.iter().peekable();
@@ -115,15 +119,22 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
             "--resume" => {
                 resume = Some(PathBuf::from(it.next().context("--resume needs a value")?))
             }
+            "--elastic" => {
+                elastic_events.push(it.next().context("--elastic needs an event string")?.clone())
+            }
             "--verbose" | "-v" => verbose = true,
             other if other.starts_with("--") => bail!("unknown flag '{other}'"),
             other => positional.push(other.to_string()),
         }
     }
-    let cfg = match config_path {
+    let mut cfg = match config_path {
         Some(p) => Config::load(&p, &overrides)?,
         None => Config::from_overrides(&overrides)?,
     };
+    if !elastic_events.is_empty() {
+        cfg.elastic.events.extend(elastic_events);
+        cfg.validate()?;
+    }
     Ok(Parsed { cfg, out, backend, profile, verbose, checkpoint, resume, positional })
 }
 
@@ -183,7 +194,8 @@ fn cmd_gen_data(args: &[String]) -> Result<()> {
 fn cmd_experiment(args: &[String]) -> Result<()> {
     let p = parse_flags(args)?;
     let name = p.positional.first().context(
-        "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a fig11b fig12",
+        "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a \
+         fig11b fig12 elastic",
     )?;
     match name.as_str() {
         "table1" => {
@@ -218,6 +230,9 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         }
         "fig12" => {
             experiments::fig12(p.profile, p.backend)?;
+        }
+        "elastic" => {
+            experiments::elastic(p.profile, p.backend)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }
@@ -300,6 +315,16 @@ mod tests {
         assert!(parse_flags(&s(&["--bogus"])).is_err());
         assert!(parse_flags(&s(&["--set", "novalue"])).is_err());
         assert!(main_with_args(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn elastic_flag_appends_validated_events() {
+        let p = parse_flags(&s(&["--elastic", "at_mb=3 remove=1", "--elastic", "at_mb=5 add=1"]))
+            .unwrap();
+        assert_eq!(p.cfg.elastic.events.len(), 2);
+        assert_eq!(p.cfg.elastic.parsed_events().unwrap()[0].at_mb, 3);
+        assert!(parse_flags(&s(&["--elastic", "at_mb=3 explode=1"])).is_err());
+        assert!(parse_flags(&s(&["--elastic"])).is_err());
     }
 
     #[test]

@@ -300,6 +300,7 @@ pub struct Config {
     pub devices: DeviceConfig,
     pub runtime: RuntimeConfig,
     pub strategy: StrategyConfig,
+    pub elastic: ElasticConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -324,6 +325,115 @@ impl Default for StrategyConfig {
             crossbow_rate: 0.1,
             sync_overhead: 1.5,
         }
+    }
+}
+
+/// One operation of a scripted elasticity trace (`[elastic] events`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticOp {
+    /// Remove the `n` slowest active devices (bounded by `min_devices`).
+    Remove(usize),
+    /// Re-admit / hot-add `n` inactive devices (removed ones and spares).
+    Add(usize),
+    /// Remove one specific device by id.
+    RemoveId(usize),
+    /// Re-admit / hot-add one specific device by id.
+    AddId(usize),
+}
+
+/// A scripted pool-membership change applied at a mega-batch boundary,
+/// parsed from strings like `"at_mb=20 remove=2"` or `"at_mb=40 add_id=1"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElasticEvent {
+    pub at_mb: usize,
+    pub op: ElasticOp,
+}
+
+impl ElasticEvent {
+    pub fn parse(s: &str) -> Result<ElasticEvent> {
+        let mut at_mb: Option<usize> = None;
+        let mut op: Option<ElasticOp> = None;
+        for tok in s.split_whitespace() {
+            let (key, value) = tok
+                .split_once('=')
+                .with_context(|| format!("elastic event token '{tok}' is not key=value"))?;
+            let n: usize = value
+                .parse()
+                .with_context(|| format!("elastic event value '{value}' is not an integer"))?;
+            let parsed_op = match key {
+                "at_mb" => {
+                    if at_mb.replace(n).is_some() {
+                        bail!("elastic event '{s}' has more than one at_mb");
+                    }
+                    continue;
+                }
+                "remove" => ElasticOp::Remove(n),
+                "add" => ElasticOp::Add(n),
+                "remove_id" => ElasticOp::RemoveId(n),
+                "add_id" => ElasticOp::AddId(n),
+                other => bail!(
+                    "unknown elastic event key '{other}' (at_mb|remove|add|remove_id|add_id)"
+                ),
+            };
+            if op.replace(parsed_op).is_some() {
+                bail!(
+                    "elastic event '{s}' has more than one operation; \
+                     use one event string per operation"
+                );
+            }
+        }
+        let at_mb = at_mb.with_context(|| format!("elastic event '{s}' missing at_mb=N"))?;
+        let op = op.with_context(|| format!("elastic event '{s}' missing an operation"))?;
+        if let ElasticOp::Remove(0) | ElasticOp::Add(0) = op {
+            bail!("elastic event '{s}' is a no-op (count 0)");
+        }
+        Ok(ElasticEvent { at_mb, op })
+    }
+}
+
+/// Elastic device-pool control: scripted membership trace, hot-add spares,
+/// and the straggler-quarantine policy.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Scripted trace, e.g. `["at_mb=20 remove=2", "at_mb=40 add=2"]`.
+    pub events: Vec<String>,
+    /// Speed factors of spare devices that can be hot-added by `add` events
+    /// (they extend the roster but start outside the active pool).
+    pub spare_devices: Vec<f64>,
+    /// Quarantine a device whose windowed mean step time exceeds this
+    /// multiple of the active fleet's median (0 disables the policy).
+    pub straggler_factor: f64,
+    /// Sliding window length (mega-batches) for straggler detection.
+    pub straggler_window: usize,
+    /// Auto-readmit a quarantined device after this many mega-batches.
+    pub quarantine_mega_batches: usize,
+    /// Never let policy or trace shrink the active pool below this.
+    pub min_devices: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            events: Vec::new(),
+            spare_devices: Vec::new(),
+            straggler_factor: 0.0,
+            straggler_window: 3,
+            quarantine_mega_batches: 5,
+            min_devices: 1,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// Parse the scripted trace, sorted by mega-batch (stable for ties).
+    pub fn parsed_events(&self) -> Result<Vec<ElasticEvent>> {
+        let mut events = self
+            .events
+            .iter()
+            .map(|s| ElasticEvent::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        events.sort_by_key(|e| e.at_mb);
+        Ok(events)
     }
 }
 
@@ -459,6 +569,19 @@ impl Config {
         f64_of(map, "strategy.crossbow_rate", &mut cfg.strategy.crossbow_rate)?;
         f64_of(map, "strategy.sync_overhead", &mut cfg.strategy.sync_overhead)?;
 
+        if let Some(v) = map.get("elastic.events") {
+            cfg.elastic.events =
+                v.as_str_arr().context("elastic.events must be a string array")?;
+        }
+        if let Some(v) = map.get("elastic.spare_devices") {
+            cfg.elastic.spare_devices =
+                v.as_f64_arr().context("elastic.spare_devices must be a number array")?;
+        }
+        f64_of(map, "elastic.straggler_factor", &mut cfg.elastic.straggler_factor)?;
+        usize_of(map, "elastic.straggler_window", &mut cfg.elastic.straggler_window)?;
+        usize_of(map, "elastic.quarantine_mega_batches", &mut cfg.elastic.quarantine_mega_batches)?;
+        usize_of(map, "elastic.min_devices", &mut cfg.elastic.min_devices)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -505,6 +628,38 @@ impl Config {
         }
         if self.data.train_samples == 0 || self.data.test_samples == 0 {
             bail!("dataset sizes must be positive");
+        }
+        let e = &self.elastic;
+        let events = e.parsed_events()?;
+        let roster = self.devices.count + e.spare_devices.len();
+        for ev in &events {
+            if let ElasticOp::RemoveId(id) | ElasticOp::AddId(id) = ev.op {
+                if id >= roster {
+                    bail!(
+                        "elastic event targets device {id} but the roster has {roster} \
+                         devices (devices.count + elastic.spare_devices)"
+                    );
+                }
+            }
+        }
+        if e.spare_devices.iter().any(|&f| f <= 0.0) {
+            bail!("elastic.spare_devices factors must be positive");
+        }
+        if e.straggler_factor < 0.0 {
+            bail!("elastic.straggler_factor must be non-negative");
+        }
+        if e.straggler_factor > 0.0 && e.straggler_factor <= 1.0 {
+            bail!("elastic.straggler_factor must exceed 1.0 (it multiplies the fleet median)");
+        }
+        if e.straggler_window == 0 {
+            bail!("elastic.straggler_window must be positive");
+        }
+        if e.min_devices == 0 || e.min_devices > self.devices.count {
+            bail!(
+                "elastic.min_devices must be in [1, devices.count] (got {} of {})",
+                e.min_devices,
+                self.devices.count
+            );
         }
         Ok(())
     }
@@ -574,6 +729,64 @@ mod tests {
             ("devices.speed_factors".into(), "[1.0, 1.1]".into()),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn elastic_events_parse_and_validate() {
+        let ev = ElasticEvent::parse("at_mb=20 remove=2").unwrap();
+        assert_eq!(ev, ElasticEvent { at_mb: 20, op: ElasticOp::Remove(2) });
+        let ev = ElasticEvent::parse("add_id=3 at_mb=5").unwrap();
+        assert_eq!(ev, ElasticEvent { at_mb: 5, op: ElasticOp::AddId(3) });
+        assert!(ElasticEvent::parse("remove=1").is_err(), "missing at_mb");
+        assert!(ElasticEvent::parse("at_mb=1").is_err(), "missing op");
+        assert!(
+            ElasticEvent::parse("at_mb=5 remove=1 add=1").is_err(),
+            "one operation per event string"
+        );
+        assert!(ElasticEvent::parse("at_mb=5 at_mb=6 add=1").is_err(), "duplicate at_mb");
+        assert!(ElasticEvent::parse("at_mb=1 remove=0").is_err(), "no-op count");
+        assert!(ElasticEvent::parse("at_mb=x remove=1").is_err());
+        assert!(ElasticEvent::parse("at_mb=1 explode=1").is_err());
+
+        let cfg = Config::from_overrides(&[(
+            "elastic.events".into(),
+            "[\"at_mb=2 remove=1\", \"at_mb=4 add=1\"]".into(),
+        )])
+        .unwrap();
+        assert_eq!(cfg.elastic.parsed_events().unwrap().len(), 2);
+        // Events come back sorted by mega-batch.
+        let cfg2 = Config::from_overrides(&[(
+            "elastic.events".into(),
+            "[\"at_mb=9 add=1\", \"at_mb=2 remove=1\"]".into(),
+        )])
+        .unwrap();
+        assert_eq!(cfg2.elastic.parsed_events().unwrap()[0].at_mb, 2);
+    }
+
+    #[test]
+    fn invalid_elastic_configs_rejected() {
+        assert!(Config::from_overrides(&[(
+            "elastic.events".into(),
+            "[\"at_mb=1 frobnicate=2\"]".into(),
+        )])
+        .is_err());
+        assert!(Config::from_overrides(&[(
+            "elastic.events".into(),
+            "[\"at_mb=1 remove_id=99\"]".into(),
+        )])
+        .is_err(), "out-of-roster device id");
+        assert!(Config::from_overrides(&[("elastic.min_devices".into(), "0".into())]).is_err());
+        assert!(Config::from_overrides(&[("elastic.min_devices".into(), "9".into())]).is_err());
+        assert!(
+            Config::from_overrides(&[("elastic.straggler_factor".into(), "0.5".into())]).is_err()
+        );
+        assert!(Config::from_overrides(&[("elastic.straggler_window".into(), "0".into())]).is_err());
+        // Spares extend the addressable roster.
+        assert!(Config::from_overrides(&[
+            ("elastic.spare_devices".into(), "[1.2]".into()),
+            ("elastic.events".into(), "[\"at_mb=1 add_id=4\"]".into()),
+        ])
+        .is_ok());
     }
 
     #[test]

@@ -58,6 +58,15 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_str_arr(&self) -> Option<Vec<String>> {
+        match self {
+            TomlValue::Arr(items) => {
+                items.iter().map(|v| v.as_str().map(str::to_string)).collect()
+            }
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -226,6 +235,18 @@ names = ["a", "b"]
     fn hash_inside_string_is_not_comment() {
         let m = parse(r##"s = "a#b""##).unwrap();
         assert_eq!(m["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn string_arrays_parse() {
+        let m = parse(r#"events = ["at_mb=3 remove=1", "at_mb=6 add=1"]"#).unwrap();
+        assert_eq!(
+            m["events"].as_str_arr().unwrap(),
+            vec!["at_mb=3 remove=1".to_string(), "at_mb=6 add=1".to_string()]
+        );
+        // Mixed-type arrays yield None.
+        let m = parse(r#"bad = ["a", 1]"#).unwrap();
+        assert!(m["bad"].as_str_arr().is_none());
     }
 
     #[test]

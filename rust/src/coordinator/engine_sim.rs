@@ -3,9 +3,13 @@
 //! Numerics still run for real (through whatever [`StepBackend`] is
 //! supplied), but *time* advances on a virtual clock driven by the
 //! heterogeneity model + cost model. Dispatch order is exactly the dynamic
-//! scheduler's: the next batch goes to the device with the earliest
+//! scheduler's: the next batch goes to the active device with the earliest
 //! virtual free-time (ties broken by device id), so the schedule is
 //! deterministic given the seeds — which is what the figure benches need.
+//!
+//! The engine holds the full device *roster*; each plan's `device_ids`
+//! selects the active subset, so pool membership can change between
+//! mega-batches without touching engine state.
 
 use crate::data::batcher::Batcher;
 use crate::model::ModelState;
@@ -13,7 +17,7 @@ use crate::runtime::{CostModel, SimDevice};
 use crate::Result;
 
 use super::backend::StepBackend;
-use super::plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+use super::plan::{DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport};
 
 pub struct SimEngine<'b> {
     backend: &'b dyn StepBackend,
@@ -27,68 +31,23 @@ impl<'b> SimEngine<'b> {
         SimEngine { backend, devices, cost }
     }
 
-    /// Run one mega-batch over `replicas` (one model per device), drawing
-    /// batches from `batcher` according to `plan`.
-    pub fn run_mega_batch(
-        &mut self,
-        replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
-        plan: &DispatchPlan,
-    ) -> Result<MegaBatchReport> {
-        let g = self.devices.len();
-        assert_eq!(replicas.len(), g);
-        assert_eq!(plan.batch_sizes.len(), g);
-
-        let mut stats = vec![DevStats::default(); g];
-        let mut free_time = vec![0.0f64; g];
-
-        match plan.mode {
-            DispatchMode::Dynamic => {
-                let mut remaining = plan.sample_budget;
-                while remaining > 0 {
-                    // Earliest-free device wins the next batch (dynamic
-                    // scheduling); ties break toward the lower id.
-                    let dev = argmin(&free_time, |_| true);
-                    let bucket = plan.batch_sizes[dev];
-                    let valid = bucket.min(remaining);
-                    remaining -= valid;
-                    self.one_step(replicas, batcher, plan, dev, bucket, valid, &mut stats, &mut free_time)?;
-                }
-            }
-            DispatchMode::StaticQuota { batches_per_device } => {
-                let mut quota = vec![batches_per_device; g];
-                while quota.iter().any(|&q| q > 0) {
-                    let dev = argmin(&free_time, |i| quota[i] > 0);
-                    quota[dev] -= 1;
-                    let bucket = plan.batch_sizes[dev];
-                    self.one_step(replicas, batcher, plan, dev, bucket, bucket, &mut stats, &mut free_time)?;
-                }
-            }
-        }
-
-        for (s, &t) in stats.iter_mut().zip(&free_time) {
-            s.busy = t;
-        }
-        let wall = free_time.iter().copied().fold(0.0, f64::max);
-        Ok(MegaBatchReport { per_device: stats, wall })
-    }
-
     #[allow(clippy::too_many_arguments)]
     fn one_step(
         &mut self,
         replicas: &mut [ModelState],
         batcher: &mut Batcher<'_>,
         plan: &DispatchPlan,
-        dev: usize,
+        slot: usize,
         bucket: usize,
         valid: usize,
         stats: &mut [DevStats],
         free_time: &mut [f64],
     ) -> Result<()> {
+        let dev = plan.device_ids[slot];
         let batch = batcher.next_batch(bucket, valid);
-        let (loss, _real) = self.backend.step(&mut replicas[dev], &batch, plan.lrs[dev])?;
+        let (loss, _real) = self.backend.step(&mut replicas[dev], &batch, plan.lrs[slot])?;
         let dur = self.devices[dev].step_duration(&self.cost, &batch);
-        free_time[dev] += dur;
+        free_time[slot] += dur;
         let s = &mut stats[dev];
         s.updates += 1;
         s.samples += valid as u64;
@@ -96,11 +55,75 @@ impl<'b> SimEngine<'b> {
         s.nnz += batch.nnz as u64;
 
         // CROSSBOW-style correction: pull this replica toward the current
-        // fleet average after every batch.
+        // average of the *active* replicas after every batch.
         if let Some(rate) = plan.crossbow_rate {
-            correct_toward_average(replicas, dev, rate);
+            correct_toward_average(replicas, &plan.device_ids, dev, rate);
         }
         Ok(())
+    }
+}
+
+impl<'b> ExecutionEngine for SimEngine<'b> {
+    /// Run one mega-batch over the plan's active devices, drawing batches
+    /// from `batcher`. `replicas` covers the whole roster.
+    fn run_mega_batch(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport> {
+        let roster = self.devices.len();
+        let g = plan.devices();
+        assert_eq!(replicas.len(), roster);
+        assert_eq!(plan.batch_sizes.len(), g);
+        assert!(g > 0, "plan has no active devices");
+        assert!(plan.device_ids.iter().all(|&d| d < roster), "plan device outside roster");
+
+        let mut stats = vec![DevStats::default(); roster];
+        // Virtual free-times, parallel to the plan's active slots.
+        let mut free_time = vec![0.0f64; g];
+
+        match plan.mode {
+            DispatchMode::Dynamic => {
+                let mut remaining = plan.sample_budget;
+                while remaining > 0 {
+                    // Earliest-free device wins the next batch (dynamic
+                    // scheduling); ties break toward the lower slot.
+                    let slot = argmin(&free_time, |_| true);
+                    let bucket = plan.batch_sizes[slot];
+                    let valid = bucket.min(remaining);
+                    remaining -= valid;
+                    self.one_step(replicas, batcher, plan, slot, bucket, valid, &mut stats, &mut free_time)?;
+                }
+            }
+            DispatchMode::StaticQuota { batches_per_device } => {
+                let mut quota = vec![batches_per_device; g];
+                while quota.iter().any(|&q| q > 0) {
+                    let slot = argmin(&free_time, |i| quota[i] > 0);
+                    quota[slot] -= 1;
+                    let bucket = plan.batch_sizes[slot];
+                    self.one_step(replicas, batcher, plan, slot, bucket, bucket, &mut stats, &mut free_time)?;
+                }
+            }
+        }
+
+        for (slot, &t) in free_time.iter().enumerate() {
+            stats[plan.device_ids[slot]].busy = t;
+        }
+        let wall = free_time.iter().copied().fold(0.0, f64::max);
+        Ok(MegaBatchReport { per_device: stats, wall })
+    }
+
+    fn roster_len(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn cost_model(&self) -> CostModel {
+        self.cost
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
     }
 }
 
@@ -115,16 +138,21 @@ fn argmin(times: &[f64], eligible: impl Fn(usize) -> bool) -> usize {
     best
 }
 
-/// `replica[dev] += rate * (mean(replicas) − replica[dev])`.
-pub fn correct_toward_average(replicas: &mut [ModelState], dev: usize, rate: f64) {
-    let g = replicas.len() as f32;
+/// `replica[dev] += rate * (mean(active replicas) − replica[dev])`.
+pub fn correct_toward_average(
+    replicas: &mut [ModelState],
+    active: &[usize],
+    dev: usize,
+    rate: f64,
+) {
+    let g = active.len() as f32;
     let r = rate as f32;
     for seg in 0..4 {
         let len = replicas[0].segments()[seg].len();
         for p in 0..len {
             let mut mean = 0.0f32;
-            for rep in replicas.iter() {
-                mean += rep.segments()[seg][p];
+            for &a in active {
+                mean += replicas[a].segments()[seg][p];
             }
             mean /= g;
             let dst = match seg {
@@ -161,6 +189,7 @@ mod tests {
     fn plan_dynamic(g: usize, b: usize, budget: usize) -> DispatchPlan {
         DispatchPlan {
             mode: DispatchMode::Dynamic,
+            device_ids: (0..g).collect(),
             batch_sizes: vec![b; g],
             lrs: vec![0.05; g],
             sample_budget: budget,
@@ -201,6 +230,36 @@ mod tests {
     }
 
     #[test]
+    fn active_subset_leaves_inactive_replicas_untouched() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let init = ModelState::init(&cfg.model, 2);
+        let mut replicas = vec![init.clone(); 4];
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: vec![0, 2], // device 1 and 3 out of the pool
+            batch_sizes: vec![16, 16],
+            lrs: vec![0.05; 2],
+            sample_budget: 320,
+            crossbow_rate: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert_eq!(report.total_samples(), 320);
+        let u = report.updates();
+        assert_eq!(u[1], 0);
+        assert_eq!(u[3], 0);
+        assert!(u[0] > 0 && u[2] > 0);
+        assert_eq!(report.per_device[1].busy, 0.0);
+        // Inactive replicas are bit-identical to their initial state.
+        assert_eq!(replicas[1].max_abs_diff(&init), 0.0);
+        assert_eq!(replicas[3].max_abs_diff(&init), 0.0);
+        assert!(replicas[0].max_abs_diff(&init) > 0.0);
+    }
+
+    #[test]
     fn static_quota_gives_equal_updates_but_idle_time() {
         let (cfg, ds) = setup();
         let backend = RefBackend;
@@ -210,6 +269,7 @@ mod tests {
         let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
         let plan = DispatchPlan {
             mode: DispatchMode::StaticQuota { batches_per_device: 10 },
+            device_ids: vec![0, 1, 2, 3],
             batch_sizes: vec![32; 4],
             lrs: vec![0.05; 4],
             sample_budget: 0,
@@ -249,8 +309,9 @@ mod tests {
         let mut replicas: Vec<ModelState> =
             (0..3).map(|i| ModelState::init(&dims, i as u64)).collect();
         let spread_before: f32 = replicas[0].max_abs_diff(&replicas[1]);
-        correct_toward_average(&mut replicas, 0, 0.5);
-        correct_toward_average(&mut replicas, 1, 0.5);
+        let active = [0usize, 1, 2];
+        correct_toward_average(&mut replicas, &active, 0, 0.5);
+        correct_toward_average(&mut replicas, &active, 1, 0.5);
         let spread_after = replicas[0].max_abs_diff(&replicas[1]);
         assert!(spread_after < spread_before);
     }

@@ -7,10 +7,18 @@
 //! paper's managers own their GPU context anyway); the scheduler owns the
 //! batcher and routes batches dynamically on completion events.
 //!
+//! **Elastic membership:** the engine is constructed with the full device
+//! roster but spawns no threads up front. A worker is spawned the first
+//! time its device joins the active pool (hot-add); when a device leaves
+//! the pool its worker simply receives no work and parks on its command
+//! channel until the device re-joins — park/unpark instead of a fixed
+//! spawn-per-run fleet.
+//!
 //! Heterogeneity is injected by stretching each measured step to what the
 //! simulated device would have taken (`SimDevice::stretch`) and sleeping
 //! the difference.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -24,7 +32,7 @@ use crate::runtime::SimDevice;
 use crate::Result;
 
 use super::backend::StepBackend;
-use super::plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+use super::plan::{DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport};
 
 /// Creates a device's backend *inside* its worker thread.
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn StepBackend>> + Send + Sync>;
@@ -48,99 +56,190 @@ struct Worker {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Shared state for CROSSBOW-style corrections: the running *sum* of all
-/// replicas (avg = sum / G), incrementally maintained by the workers.
+/// Shared state for CROSSBOW-style corrections: the running *sum* of the
+/// active replicas (avg = sum / active count), incrementally maintained by
+/// the workers. The active count changes with pool membership.
 struct CrossbowShared {
     sum: Mutex<ModelState>,
-    devices: usize,
+    devices: AtomicUsize,
 }
 
 pub struct ThreadedEngine {
-    workers: Vec<Worker>,
+    factory: BackendFactory,
+    roster: Vec<SimDevice>,
+    /// Lazily-spawned workers, indexed by device id (None = never joined).
+    workers: Vec<Option<Worker>>,
+    reply_tx: mpsc::Sender<Reply>,
     replies: mpsc::Receiver<Reply>,
-    crossbow: Option<Arc<CrossbowShared>>,
+    crossbow: Arc<CrossbowShared>,
     template: ModelState,
 }
 
 impl ThreadedEngine {
-    /// Spawn one manager thread per device. Blocks until every worker has
-    /// constructed its backend (so compile errors surface here, not mid-run).
+    /// Create the engine over the device roster. No threads start here;
+    /// each worker is spawned (and its backend constructed) the first time
+    /// its device joins the active pool.
     pub fn spawn(
         factory: BackendFactory,
         devices: Vec<SimDevice>,
         template: &ModelState,
     ) -> Result<ThreadedEngine> {
+        assert!(!devices.is_empty());
         let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-        let mut workers = Vec::with_capacity(devices.len());
         let crossbow = Arc::new(CrossbowShared {
             sum: Mutex::new(ModelState::zeros(&template.dims)),
-            devices: devices.len(),
+            devices: AtomicUsize::new(devices.len()),
         });
-        for device in devices {
-            let dev = device.id;
-            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-            let replies = reply_tx.clone();
-            let factory = factory.clone();
-            let shared = crossbow.clone();
-            let template = template.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("gpu-manager-{dev}"))
-                .spawn(move || worker_main(dev, device, factory, cmd_rx, replies, shared, template))
-                .expect("spawning worker thread");
-            workers.push(Worker { cmd: cmd_tx, handle: Some(handle) });
-        }
-        // Wait for all Ready (or Fatal) events.
-        let mut ready = vec![false; workers.len()];
-        while ready.iter().any(|r| !r) {
-            match reply_rx.recv().map_err(|_| anyhow!("worker channel closed during startup"))? {
-                Reply::Ready { dev } => ready[dev] = true,
-                Reply::Fatal { dev, error } => bail!("device {dev} failed to start: {error}"),
-                _ => bail!("unexpected reply during startup"),
-            }
-        }
+        let workers = devices.iter().map(|_| None).collect();
         Ok(ThreadedEngine {
+            factory,
+            roster: devices,
             workers,
+            reply_tx,
             replies: reply_rx,
-            crossbow: Some(crossbow),
+            crossbow,
             template: template.clone(),
         })
     }
 
+    /// Roster size (spawned or not).
     pub fn devices(&self) -> usize {
-        self.workers.len()
+        self.roster.len()
     }
 
-    /// Run one mega-batch; protocol mirrors `SimEngine::run_mega_batch`.
-    pub fn run_mega_batch(
+    /// Number of workers actually spawned so far (telemetry / tests).
+    pub fn spawned_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_some()).count()
+    }
+
+    /// Spawn workers for any active device that doesn't have one yet, then
+    /// block until every fresh worker reports Ready (so backend construction
+    /// errors surface at the join boundary, not mid-mega-batch).
+    fn ensure_workers(&mut self, active: &[usize]) -> Result<()> {
+        let mut pending = Vec::new();
+        for &dev in active {
+            anyhow::ensure!(dev < self.roster.len(), "device {dev} outside the roster");
+            if self.workers[dev].is_some() {
+                continue;
+            }
+            let device = self.roster[dev].clone();
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let replies = self.reply_tx.clone();
+            let factory = self.factory.clone();
+            let shared = self.crossbow.clone();
+            let template = self.template.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gpu-manager-{dev}"))
+                .spawn(move || worker_main(dev, device, factory, cmd_rx, replies, shared, template))
+                .expect("spawning worker thread");
+            self.workers[dev] = Some(Worker { cmd: cmd_tx, handle: Some(handle) });
+            pending.push(dev);
+        }
+        let mut ready = vec![false; pending.len()];
+        while ready.iter().any(|r| !r) {
+            match self.replies.recv().map_err(|_| anyhow!("worker channel closed during startup"))? {
+                Reply::Ready { dev } => {
+                    let i = pending
+                        .iter()
+                        .position(|&p| p == dev)
+                        .ok_or_else(|| anyhow!("unexpected ready from device {dev}"))?;
+                    ready[i] = true;
+                }
+                Reply::Fatal { dev, error } => bail!("device {dev} failed to start: {error}"),
+                _ => bail!("unexpected reply during startup"),
+            }
+        }
+        Ok(())
+    }
+
+    fn worker(&self, dev: usize) -> &Worker {
+        self.workers[dev].as_ref().expect("worker not spawned")
+    }
+
+    fn try_dispatch(
+        &self,
+        slot: usize,
+        plan: &DispatchPlan,
+        batcher: &mut Batcher<'_>,
+        remaining: &mut usize,
+        quota: &mut [usize],
+    ) -> Result<bool> {
+        let dev = plan.device_ids[slot];
+        match plan.mode {
+            DispatchMode::Dynamic => {
+                if *remaining == 0 {
+                    return Ok(false);
+                }
+                let bucket = plan.batch_sizes[slot];
+                let valid = bucket.min(*remaining);
+                *remaining -= valid;
+                let batch = batcher.next_batch(bucket, valid);
+                self.worker(dev)
+                    .cmd
+                    .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
+                    .map_err(|_| anyhow!("worker died"))?;
+                Ok(true)
+            }
+            DispatchMode::StaticQuota { .. } => {
+                if quota[slot] == 0 {
+                    return Ok(false);
+                }
+                quota[slot] -= 1;
+                let bucket = plan.batch_sizes[slot];
+                let batch = batcher.next_batch(bucket, bucket);
+                self.worker(dev)
+                    .cmd
+                    .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
+                    .map_err(|_| anyhow!("worker died"))?;
+                Ok(true)
+            }
+        }
+    }
+}
+
+impl ExecutionEngine for ThreadedEngine {
+    /// Run one mega-batch over the plan's active devices; workers for
+    /// devices outside the pool stay parked on their channels.
+    fn run_mega_batch(
         &mut self,
         replicas: &mut [ModelState],
         batcher: &mut Batcher<'_>,
         plan: &DispatchPlan,
     ) -> Result<MegaBatchReport> {
-        let g = self.workers.len();
-        assert_eq!(replicas.len(), g);
+        let roster = self.roster.len();
+        let g = plan.devices();
+        assert_eq!(replicas.len(), roster);
         assert_eq!(plan.batch_sizes.len(), g);
+        assert!(g > 0, "plan has no active devices");
+
+        self.ensure_workers(&plan.device_ids)?;
+
+        // Map global device id -> active slot for reply routing.
+        let mut slot_of = vec![usize::MAX; roster];
+        for (slot, &dev) in plan.device_ids.iter().enumerate() {
+            slot_of[dev] = slot;
+        }
 
         // Install replicas (and the crossbow sum) for this mega-batch.
         if plan.crossbow_rate.is_some() {
-            if let Some(shared) = &self.crossbow {
-                let mut sum = shared.sum.lock().unwrap();
-                *sum = ModelState::zeros(&self.template.dims);
-                let refs: Vec<&ModelState> = replicas.iter().collect();
-                let ones = vec![1.0; g];
-                sum.set_weighted_sum(&refs, &ones);
-            }
+            self.crossbow.devices.store(g, Ordering::Relaxed);
+            let mut sum = self.crossbow.sum.lock().unwrap();
+            *sum = ModelState::zeros(&self.template.dims);
+            let refs: Vec<&ModelState> = plan.device_ids.iter().map(|&d| &replicas[d]).collect();
+            let ones = vec![1.0; g];
+            sum.set_weighted_sum(&refs, &ones);
         }
-        for (w, r) in self.workers.iter().zip(replicas.iter()) {
-            w.cmd
-                .send(Cmd::SetReplica(Box::new(r.clone())))
+        for &dev in &plan.device_ids {
+            self.worker(dev)
+                .cmd
+                .send(Cmd::SetReplica(Box::new(replicas[dev].clone())))
                 .map_err(|_| anyhow!("worker died"))?;
         }
 
-        let mut stats = vec![DevStats::default(); g];
+        let mut stats = vec![DevStats::default(); roster];
         let t0 = Instant::now();
 
-        // Per-device outstanding work accounting.
+        // Per-slot outstanding work accounting.
         let mut inflight = 0usize;
         let mut remaining = match plan.mode {
             DispatchMode::Dynamic => plan.sample_budget,
@@ -151,9 +250,9 @@ impl ThreadedEngine {
             DispatchMode::StaticQuota { batches_per_device } => vec![batches_per_device; g],
         };
 
-        // Prime every device with one batch.
-        for dev in 0..g {
-            if self.try_dispatch(dev, plan, batcher, &mut remaining, &mut quota)? {
+        // Prime every active device with one batch.
+        for slot in 0..g {
+            if self.try_dispatch(slot, plan, batcher, &mut remaining, &mut quota)? {
                 inflight += 1;
             }
         }
@@ -161,13 +260,15 @@ impl ThreadedEngine {
         while inflight > 0 {
             match self.replies.recv().map_err(|_| anyhow!("worker channel closed"))? {
                 Reply::StepDone { dev, loss, valid, nnz, busy } => {
+                    let slot = slot_of[dev];
+                    anyhow::ensure!(slot != usize::MAX, "step reply from inactive device {dev}");
                     let s = &mut stats[dev];
                     s.updates += 1;
                     s.samples += valid as u64;
                     s.loss_sum += loss as f64;
                     s.nnz += nnz as u64;
                     s.busy += busy;
-                    if self.try_dispatch(dev, plan, batcher, &mut remaining, &mut quota)? {
+                    if self.try_dispatch(slot, plan, batcher, &mut remaining, &mut quota)? {
                         // still inflight
                     } else {
                         inflight -= 1;
@@ -179,9 +280,9 @@ impl ThreadedEngine {
         }
         let wall = t0.elapsed().as_secs_f64();
 
-        // Barrier: pull replicas back.
-        for w in &self.workers {
-            w.cmd.send(Cmd::TakeReplica).map_err(|_| anyhow!("worker died"))?;
+        // Barrier: pull the active replicas back.
+        for &dev in &plan.device_ids {
+            self.worker(dev).cmd.send(Cmd::TakeReplica).map_err(|_| anyhow!("worker died"))?;
         }
         let mut got = 0usize;
         while got < g {
@@ -198,52 +299,21 @@ impl ThreadedEngine {
         Ok(MegaBatchReport { per_device: stats, wall })
     }
 
-    fn try_dispatch(
-        &self,
-        dev: usize,
-        plan: &DispatchPlan,
-        batcher: &mut Batcher<'_>,
-        remaining: &mut usize,
-        quota: &mut [usize],
-    ) -> Result<bool> {
-        match plan.mode {
-            DispatchMode::Dynamic => {
-                if *remaining == 0 {
-                    return Ok(false);
-                }
-                let bucket = plan.batch_sizes[dev];
-                let valid = bucket.min(*remaining);
-                *remaining -= valid;
-                let batch = batcher.next_batch(bucket, valid);
-                self.workers[dev]
-                    .cmd
-                    .send(Cmd::Step { batch, lr: plan.lrs[dev], crossbow_rate: plan.crossbow_rate })
-                    .map_err(|_| anyhow!("worker died"))?;
-                Ok(true)
-            }
-            DispatchMode::StaticQuota { .. } => {
-                if quota[dev] == 0 {
-                    return Ok(false);
-                }
-                quota[dev] -= 1;
-                let bucket = plan.batch_sizes[dev];
-                let batch = batcher.next_batch(bucket, bucket);
-                self.workers[dev]
-                    .cmd
-                    .send(Cmd::Step { batch, lr: plan.lrs[dev], crossbow_rate: plan.crossbow_rate })
-                    .map_err(|_| anyhow!("worker died"))?;
-                Ok(true)
-            }
-        }
+    fn roster_len(&self) -> usize {
+        self.roster.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "threaded"
     }
 }
 
 impl Drop for ThreadedEngine {
     fn drop(&mut self) {
-        for w in &self.workers {
+        for w in self.workers.iter().flatten() {
             let _ = w.cmd.send(Cmd::Shutdown);
         }
-        for w in &mut self.workers {
+        for w in self.workers.iter_mut().flatten() {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
             }
@@ -274,6 +344,9 @@ fn worker_main(
     // Last version of this replica folded into the shared crossbow sum.
     let mut published: Option<Box<ModelState>> = None;
     loop {
+        // A worker whose device is out of the pool parks right here — the
+        // blocking recv *is* the park; re-admission unparks it with the next
+        // SetReplica.
         match cmd.recv() {
             Err(_) | Ok(Cmd::Shutdown) => return,
             Ok(Cmd::SetReplica(m)) => {
@@ -322,18 +395,19 @@ fn worker_main(
 
 /// CROSSBOW replica correction under the shared-sum lock.
 ///
-/// Invariant: `shared.sum` always equals the sum of every worker's last
-/// *published* replica. This worker computes the fleet average from the sum
-/// (its own stale contribution included, exactly like CROSSBOW's central
-/// average model), pulls its post-step replica toward it, then swaps its
-/// published contribution for the corrected one — keeping the invariant.
+/// Invariant: `shared.sum` always equals the sum of every active worker's
+/// last *published* replica. This worker computes the fleet average from
+/// the sum (its own stale contribution included, exactly like CROSSBOW's
+/// central average model), pulls its post-step replica toward it, then
+/// swaps its published contribution for the corrected one — keeping the
+/// invariant. The divisor tracks the pool's current active count.
 fn crossbow_correct(
     shared: &Arc<CrossbowShared>,
     replica: &mut ModelState,
     published: &mut ModelState,
     rate: f64,
 ) {
-    let g = shared.devices as f32;
+    let g = shared.devices.load(Ordering::Relaxed).max(1) as f32;
     let r = rate as f32;
     let mut sum = shared.sum.lock().unwrap();
     for seg in 0..4 {
@@ -376,6 +450,10 @@ mod tests {
         Arc::new(|_dev| Ok(Box::new(RefBackend) as Box<dyn StepBackend>))
     }
 
+    fn all_active(g: usize) -> Vec<usize> {
+        (0..g).collect()
+    }
+
     #[test]
     fn dynamic_megabatch_conserves_budget() {
         let (cfg, ds) = setup();
@@ -386,6 +464,7 @@ mod tests {
         let mut replicas = vec![template.clone(); 3];
         let plan = DispatchPlan {
             mode: DispatchMode::Dynamic,
+            device_ids: all_active(3),
             batch_sizes: vec![16, 16, 16],
             lrs: vec![0.05; 3],
             sample_budget: 250,
@@ -408,6 +487,7 @@ mod tests {
         let mut replicas = vec![template.clone(); 3];
         let plan = DispatchPlan {
             mode: DispatchMode::StaticQuota { batches_per_device: 4 },
+            device_ids: all_active(3),
             batch_sizes: vec![32; 3],
             lrs: vec![0.05; 3],
             sample_budget: 0,
@@ -416,6 +496,44 @@ mod tests {
         let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 4), "{:?}", report.updates());
         assert_eq!(report.total_samples(), 3 * 4 * 32);
+    }
+
+    #[test]
+    fn workers_spawn_lazily_on_pool_join() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 3);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        assert_eq!(engine.spawned_workers(), 0, "no threads before the first mega-batch");
+        let mut batcher = Batcher::new(&ds, &cfg.model, 9);
+        let mut replicas = vec![template.clone(); 3];
+
+        // First mega-batch on a 2-device subset: only those workers spawn.
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: vec![0, 1],
+            batch_sizes: vec![16; 2],
+            lrs: vec![0.05; 2],
+            sample_budget: 96,
+            crossbow_rate: None,
+        };
+        engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert_eq!(engine.spawned_workers(), 2);
+        assert_eq!(replicas[2].max_abs_diff(&template), 0.0, "inactive replica untouched");
+
+        // Device 2 joins (hot-add): its worker spawns now; device 0 parks.
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: vec![1, 2],
+            batch_sizes: vec![16; 2],
+            lrs: vec![0.05; 2],
+            sample_budget: 96,
+            crossbow_rate: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        assert_eq!(engine.spawned_workers(), 3);
+        assert_eq!(report.per_device[0].updates, 0, "parked device does no work");
+        assert!(report.per_device[2].updates > 0);
     }
 
     #[test]
@@ -429,6 +547,7 @@ mod tests {
         for _ in 0..3 {
             let plan = DispatchPlan {
                 mode: DispatchMode::Dynamic,
+                device_ids: all_active(3),
                 batch_sizes: vec![16; 3],
                 lrs: vec![0.05; 3],
                 sample_budget: 96,
@@ -451,6 +570,7 @@ mod tests {
             let mut replicas = vec![template.clone(); 3];
             let plan = DispatchPlan {
                 mode: DispatchMode::StaticQuota { batches_per_device: 12 },
+                device_ids: all_active(3),
                 batch_sizes: vec![16; 3],
                 lrs: vec![0.3; 3],
                 sample_budget: 0,

@@ -215,6 +215,100 @@ mod tests {
         assert!(!apply_perturbation(&mut w, &[4, 4], &[0.01, 0.01], &cfg));
     }
 
+    /// Property: without perturbation, normalized weights always sum to
+    /// exactly 1 and are non-negative, whichever branch runs.
+    #[test]
+    fn prop_normalized_weights_sum_to_one() {
+        let gen = prop::Pair(
+            prop::VecU64 { min_len: 1, max_len: 9, item_lo: 0, item_hi: 40 },
+            prop::VecU64 { min_len: 1, max_len: 9, item_lo: 1, item_hi: 17 },
+        );
+        prop::check(400, 0x5EED, gen, |(updates, size_picks)| {
+            let n = updates.len().min(size_picks.len());
+            let updates = &updates[..n];
+            let batches: Vec<usize> = size_picks[..n].iter().map(|&p| 8 * p as usize).collect();
+            for norm in [Normalization::Updates, Normalization::UpdatesTimesBatch] {
+                let (w, _) = normalized_weights(updates, &batches, norm);
+                let sum: f64 = w.iter().sum();
+                if (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("{norm:?}: weight sum {sum}"));
+                }
+                if w.iter().any(|&x| x < 0.0) {
+                    return Err(format!("{norm:?}: negative weight"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: equal update counts and equal batch sizes give the uniform
+    /// 1/G weighting, for any active pool size G.
+    #[test]
+    fn prop_equal_work_is_uniform() {
+        let gen = prop::Pair(
+            prop::U64Range { lo: 1, hi: 12 },
+            prop::U64Range { lo: 0, hi: 30 },
+        );
+        prop::check(200, 0xFACE, gen, |&(g, u)| {
+            let g = g as usize;
+            let (w, by_updates) =
+                normalized_weights(&vec![u; g], &vec![64; g], Normalization::Updates);
+            if by_updates {
+                return Err("equal updates must take the batch-size branch".into());
+            }
+            for &x in &w {
+                if (x - 1.0 / g as f64).abs() > 1e-12 {
+                    return Err(format!("non-uniform weight {x} for G={g}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: weights stay a valid distribution when the active device
+    /// subset shrinks or grows between consecutive mega-batches — the merge
+    /// must renormalize over whatever subset is active *now*, with no
+    /// residue from the previous membership.
+    #[test]
+    fn prop_weights_valid_across_membership_churn() {
+        let gen = prop::Pair(
+            prop::VecU64 { min_len: 2, max_len: 9, item_lo: 0, item_hi: 40 },
+            prop::U64Range { lo: 0, hi: u64::MAX },
+        );
+        prop::check(300, 0xE1A5, gen, |(updates, mask_seed)| {
+            let roster = updates.len();
+            // Two consecutive memberships derived from the mask bits; always
+            // keep at least one device (min_devices floor).
+            let subset = |bits: u64| -> Vec<usize> {
+                let s: Vec<usize> =
+                    (0..roster).filter(|&d| bits >> d & 1 == 1).collect();
+                if s.is_empty() {
+                    vec![0]
+                } else {
+                    s
+                }
+            };
+            for active in [subset(*mask_seed), subset(mask_seed >> 16)] {
+                let u: Vec<u64> = active.iter().map(|&d| updates[d]).collect();
+                let b: Vec<usize> = active.iter().map(|&d| 16 + 8 * d).collect();
+                let (w, _) = normalized_weights(&u, &b, Normalization::Updates);
+                if w.len() != active.len() {
+                    return Err("weight count != active count".into());
+                }
+                let sum: f64 = w.iter().sum();
+                if (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!(
+                        "subset {active:?} of {roster}: weight sum {sum}"
+                    ));
+                }
+                if w.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+                    return Err(format!("subset {active:?}: invalid weight"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn momentum_update_algebra() {
         let d = dims();

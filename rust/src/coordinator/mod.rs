@@ -2,25 +2,33 @@
 //!
 //! * [`backend`] — where step numerics come from (PJRT artifacts or the
 //!   pure-Rust reference).
+//! * [`pool`] — the elastic device pool: runtime membership (straggler
+//!   quarantine, scripted remove/add traces, hot-add spares) applied at
+//!   mega-batch boundaries.
 //! * [`scaling`] — **Algorithm 1**: adaptive batch size scaling.
 //! * [`merge`] — **Algorithm 2**: normalized model merging with
-//!   perturbation and momentum.
-//! * [`plan`] — dispatch plans and per-mega-batch reports shared by both
-//!   engines.
+//!   perturbation and momentum, renormalized over the active device subset.
+//! * [`plan`] — dispatch plans, per-mega-batch reports, and the
+//!   [`plan::ExecutionEngine`] trait both engines implement.
 //! * [`engine_sim`] — deterministic discrete-event engine on a virtual
 //!   clock (figure benches).
 //! * [`engine_threaded`] — std::thread GPU-manager workers with real PJRT
-//!   execution and injected heterogeneity (e2e runs).
-//! * [`trainer`] — the full training session: strategy dispatch, merging,
-//!   scaling, evaluation, metrics.
+//!   execution and injected heterogeneity (e2e runs); workers spawn lazily
+//!   when their device first joins the pool and park when it leaves.
+//! * [`trainer`] — the full training session: pool membership, strategy
+//!   dispatch, merging, scaling, evaluation, metrics.
 
 pub mod backend;
 pub mod engine_sim;
 pub mod engine_threaded;
 pub mod merge;
 pub mod plan;
+pub mod pool;
 pub mod scaling;
 pub mod trainer;
 
-pub use plan::{DevStats, DispatchMode, DispatchPlan, MegaBatchReport};
+pub use plan::{
+    plan_for_strategy, DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport,
+};
+pub use pool::{DevicePool, DeviceSlot, PoolAction, PoolEvent, SlotState};
 pub use trainer::{Trainer, TrainerOptions};

@@ -1,5 +1,12 @@
-//! Dispatch plans and mega-batch reports — the contract between the trainer
-//! (strategy logic) and the two execution engines.
+//! Dispatch plans, mega-batch reports, and the [`ExecutionEngine`] trait —
+//! the contract between the trainer (strategy logic), the device pool
+//! (membership), and the execution engines.
+
+use crate::config::{Config, Strategy};
+use crate::data::batcher::Batcher;
+use crate::model::ModelState;
+use crate::runtime::CostModel;
+use crate::Result;
 
 /// How batches are routed to devices within one mega-batch.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -14,13 +21,17 @@ pub enum DispatchMode {
     StaticQuota { batches_per_device: usize },
 }
 
-/// Work order for one mega-batch.
+/// Work order for one mega-batch, covering the *active* subset of the
+/// device roster. The three per-device vectors are parallel: entry `i`
+/// belongs to global device id `device_ids[i]`.
 #[derive(Clone, Debug)]
 pub struct DispatchPlan {
     pub mode: DispatchMode,
-    /// Per-device batch size (a bucket-grid value).
+    /// Global ids of the devices participating in this mega-batch.
+    pub device_ids: Vec<usize>,
+    /// Per-device batch size (a bucket-grid value), parallel to `device_ids`.
     pub batch_sizes: Vec<usize>,
-    /// Per-device learning rate (linear scaling).
+    /// Per-device learning rate (linear scaling), parallel to `device_ids`.
     pub lrs: Vec<f32>,
     /// Sample budget for [`DispatchMode::Dynamic`].
     pub sample_budget: usize,
@@ -30,8 +41,69 @@ pub struct DispatchPlan {
 }
 
 impl DispatchPlan {
+    /// Number of participating devices.
     pub fn devices(&self) -> usize {
-        self.batch_sizes.len()
+        self.device_ids.len()
+    }
+}
+
+/// Build the dispatch plan for one mega-batch of `strategy` over the active
+/// device subset. `batch_sizes` / `lrs` are *roster-indexed* adaptive state;
+/// the plan gathers the active entries. This is the hot-path recomputation
+/// that runs after every pool event (benchmarked in `perf_hotpath`).
+pub fn plan_for_strategy(
+    cfg: &Config,
+    strategy: Strategy,
+    active: &[usize],
+    batch_sizes: &[usize],
+    lrs: &[f32],
+) -> DispatchPlan {
+    let g = active.len().max(1);
+    match strategy {
+        Strategy::Adaptive => DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: active.to_vec(),
+            batch_sizes: active.iter().map(|&d| batch_sizes[d]).collect(),
+            lrs: active.iter().map(|&d| lrs[d]).collect(),
+            sample_budget: cfg.sgd.mega_batch_samples(),
+            crossbow_rate: None,
+        },
+        Strategy::Elastic => {
+            let b = cfg.sgd.b_max;
+            DispatchPlan {
+                mode: DispatchMode::StaticQuota {
+                    batches_per_device: (cfg.sgd.mega_batch_samples() / (g * b)).max(1),
+                },
+                device_ids: active.to_vec(),
+                batch_sizes: vec![b; active.len()],
+                lrs: vec![cfg.lr_for_batch(b); active.len()],
+                sample_budget: 0,
+                crossbow_rate: None,
+            }
+        }
+        Strategy::Crossbow => DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: active.to_vec(),
+            batch_sizes: vec![cfg.sgd.b_max; active.len()],
+            lrs: vec![cfg.lr_for_batch(cfg.sgd.b_max); active.len()],
+            sample_budget: cfg.sgd.mega_batch_samples(),
+            crossbow_rate: Some(cfg.strategy.crossbow_rate),
+        },
+        Strategy::SyncGradAgg => {
+            // One synchronous round: per-device batch b_max/G, one batch each.
+            let b_tf = crate::coordinator::scaling::round_to_grid(
+                (cfg.sgd.b_max as f64 / g as f64).max(cfg.sgd.b_min as f64),
+                &cfg.sgd,
+            );
+            DispatchPlan {
+                mode: DispatchMode::StaticQuota { batches_per_device: 1 },
+                device_ids: active.to_vec(),
+                batch_sizes: vec![b_tf; active.len()],
+                lrs: vec![cfg.lr_for_batch(b_tf); active.len()],
+                sample_budget: 0,
+                crossbow_rate: None,
+            }
+        }
     }
 }
 
@@ -50,7 +122,9 @@ pub struct DevStats {
     pub nnz: u64,
 }
 
-/// Aggregate outcome of one mega-batch.
+/// Aggregate outcome of one mega-batch. `per_device` is indexed by global
+/// device id over the whole roster; devices outside the plan's active set
+/// stay at their zero default.
 #[derive(Clone, Debug)]
 pub struct MegaBatchReport {
     pub per_device: Vec<DevStats>,
@@ -84,10 +158,95 @@ impl MegaBatchReport {
         }
     }
 
-    /// Straggler delay: barrier wall minus the busiest device's... i.e. how
-    /// long the *least* busy device idled waiting for the barrier.
+    /// Straggler delay: how long the *least* busy participating device
+    /// idled waiting for the barrier. Devices with zero updates (outside
+    /// the active pool) don't count.
     pub fn max_idle(&self) -> f64 {
-        let min_busy = self.per_device.iter().map(|d| d.busy).fold(f64::INFINITY, f64::min);
-        (self.wall - min_busy).max(0.0)
+        let min_busy = self
+            .per_device
+            .iter()
+            .filter(|d| d.updates > 0)
+            .map(|d| d.busy)
+            .fold(f64::INFINITY, f64::min);
+        if min_busy.is_finite() {
+            (self.wall - min_busy).max(0.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A mega-batch execution engine, unified behind one dispatch call.
+///
+/// `replicas` is indexed by global device id over the full roster (the
+/// engine was constructed with the same roster); `plan.device_ids` selects
+/// which replicas participate. Engines must leave non-participating
+/// replicas untouched.
+pub trait ExecutionEngine {
+    fn run_mega_batch(
+        &mut self,
+        replicas: &mut [ModelState],
+        batcher: &mut Batcher<'_>,
+        plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport>;
+
+    /// Number of roster slots this engine was built with.
+    fn roster_len(&self) -> usize;
+
+    /// Cost model used to charge merge/all-reduce transfer time.
+    fn cost_model(&self) -> CostModel {
+        CostModel::default()
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn plans_cover_only_the_active_subset() {
+        let cfg = Config::default(); // 4 devices
+        let batch_sizes = vec![128, 96, 72, 48];
+        let lrs = vec![0.05, 0.04, 0.03, 0.02];
+        let plan =
+            plan_for_strategy(&cfg, Strategy::Adaptive, &[0, 2, 3], &batch_sizes, &lrs);
+        assert_eq!(plan.device_ids, vec![0, 2, 3]);
+        assert_eq!(plan.batch_sizes, vec![128, 72, 48]);
+        assert_eq!(plan.lrs, vec![0.05, 0.03, 0.02]);
+        assert_eq!(plan.devices(), 3);
+    }
+
+    #[test]
+    fn elastic_quota_rescales_with_pool_size() {
+        let cfg = Config::default(); // mega = 20 * 128 samples, b_max 128
+        let b = vec![128; 4];
+        let l = vec![0.05; 4];
+        let p4 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1, 2, 3], &b, &l);
+        let p2 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1], &b, &l);
+        let q4 = match p4.mode {
+            DispatchMode::StaticQuota { batches_per_device } => batches_per_device,
+            _ => unreachable!(),
+        };
+        let q2 = match p2.mode {
+            DispatchMode::StaticQuota { batches_per_device } => batches_per_device,
+            _ => unreachable!(),
+        };
+        assert_eq!(q4 * 2, q2, "half the devices, twice the per-device quota");
+    }
+
+    #[test]
+    fn max_idle_ignores_inactive_devices() {
+        let report = MegaBatchReport {
+            per_device: vec![
+                DevStats { updates: 5, busy: 0.8, ..Default::default() },
+                DevStats::default(), // inactive
+                DevStats { updates: 5, busy: 1.0, ..Default::default() },
+            ],
+            wall: 1.0,
+        };
+        assert!((report.max_idle() - 0.2).abs() < 1e-12);
     }
 }

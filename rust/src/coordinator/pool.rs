@@ -1,0 +1,591 @@
+//! Elastic device pool — runtime membership for the coordinator.
+//!
+//! The paper's headline is *adaptive elastic training*, and this module is
+//! where the elasticity lives: a [`DevicePool`] owns the full device
+//! *roster* (the configured fleet plus any hot-add spares) and tracks which
+//! devices are currently *active*. Membership changes happen only at
+//! mega-batch boundaries — the merge barrier is the natural consistency
+//! point — and come from two sources:
+//!
+//! * a **scripted trace** (`[elastic] events`, e.g. `"at_mb=20 remove=2"`),
+//!   the reproducible way to study failover and resource limbo
+//!   (ABS-SGD / Dynamic Mini-batch SGD scenarios);
+//! * the **straggler policy**: a device whose windowed mean step time
+//!   exceeds `straggler_factor ×` the active fleet's median is quarantined
+//!   and auto-readmitted after `quarantine_mega_batches` (transient slowness
+//!   — clock throttling, a noisy neighbor — usually passes).
+//!
+//! The trainer consumes the resulting [`PoolEvent`]s: dispatch plans, merge
+//! weights and Algorithm 1 scaling all operate on the active subset, while
+//! per-device state (replicas, batch sizes, momentum history) stays
+//! roster-indexed so it survives churn — a re-admitted device resumes from
+//! the current global model at its last batch size.
+
+use crate::config::{Config, ElasticEvent, ElasticOp};
+use crate::runtime::SimDevice;
+use crate::Result;
+
+use super::plan::MegaBatchReport;
+
+/// Membership state of one roster slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    /// Participating in dispatch and merging.
+    Active,
+    /// Temporarily out (straggler policy); auto-readmitted later.
+    Quarantined,
+    /// Out of the pool (scripted removal, or a spare never yet added).
+    Removed,
+}
+
+/// One device slot in the roster.
+#[derive(Clone, Debug)]
+pub struct DeviceSlot {
+    pub id: usize,
+    pub speed_factor: f64,
+    pub state: SlotState,
+    /// Mega-batch at which the slot last left the active set.
+    left_at: Option<usize>,
+    /// Sliding window of observed mean step times (seconds per update).
+    window: Vec<f64>,
+}
+
+impl DeviceSlot {
+    fn windowed_mean(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            None
+        } else {
+            Some(self.window.iter().sum::<f64>() / self.window.len() as f64)
+        }
+    }
+}
+
+/// What happened to pool membership, and why.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolAction {
+    /// Scripted ejection.
+    Remove,
+    /// Scripted re-admission / hot-add.
+    Add,
+    /// Straggler policy took the device out.
+    Quarantine,
+    /// Quarantine elapsed; the device re-joined.
+    Readmit,
+}
+
+impl PoolAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolAction::Remove => "remove",
+            PoolAction::Add => "add",
+            PoolAction::Quarantine => "quarantine",
+            PoolAction::Readmit => "readmit",
+        }
+    }
+}
+
+/// One membership change, recorded into the run log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolEvent {
+    pub mega_batch: usize,
+    pub device: usize,
+    pub action: PoolAction,
+    pub reason: String,
+}
+
+/// The elastic device pool.
+pub struct DevicePool {
+    slots: Vec<DeviceSlot>,
+    trace: Vec<ElasticEvent>,
+    straggler_factor: f64,
+    straggler_window: usize,
+    quarantine_mega_batches: usize,
+    min_devices: usize,
+}
+
+impl DevicePool {
+    /// Build the pool from config. The initial fleet starts active; spares
+    /// start outside the pool until an `add` event pulls them in.
+    pub fn new(cfg: &Config) -> Result<DevicePool> {
+        let trace = cfg.elastic.parsed_events()?;
+        let mut slots = Vec::new();
+        for (id, &sf) in cfg.devices.speed_factors.iter().enumerate() {
+            slots.push(DeviceSlot {
+                id,
+                speed_factor: sf,
+                state: SlotState::Active,
+                left_at: None,
+                window: Vec::new(),
+            });
+        }
+        for (i, &sf) in cfg.elastic.spare_devices.iter().enumerate() {
+            slots.push(DeviceSlot {
+                id: cfg.devices.count + i,
+                speed_factor: sf,
+                state: SlotState::Removed,
+                left_at: None,
+                window: Vec::new(),
+            });
+        }
+        Ok(DevicePool {
+            slots,
+            trace,
+            straggler_factor: cfg.elastic.straggler_factor,
+            straggler_window: cfg.elastic.straggler_window.max(1),
+            quarantine_mega_batches: cfg.elastic.quarantine_mega_batches,
+            min_devices: cfg.elastic.min_devices.max(1),
+        })
+    }
+
+    /// The full simulated roster — configured fleet plus hot-add spares.
+    /// Engines are sized to this; the pool activates subsets of it.
+    pub fn roster(cfg: &Config) -> Vec<SimDevice> {
+        let mut devices = SimDevice::fleet(&cfg.devices);
+        for (i, &sf) in cfg.elastic.spare_devices.iter().enumerate() {
+            devices.push(SimDevice::with_speed(cfg.devices.count + i, sf, &cfg.devices));
+        }
+        devices
+    }
+
+    pub fn roster_len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slots(&self) -> &[DeviceSlot] {
+        &self.slots
+    }
+
+    /// Ids of the devices currently in the pool, ascending.
+    pub fn active_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .filter(|s| s.state == SlotState::Active)
+            .map(|s| s.id)
+            .collect()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.state == SlotState::Active).count()
+    }
+
+    /// Apply scripted trace events and policy decisions for the mega-batch
+    /// about to run. Returns the membership changes, in application order.
+    pub fn begin_mega_batch(&mut self, mb: usize) -> Vec<PoolEvent> {
+        let mut events = Vec::new();
+
+        // Scripted trace first — explicit intent beats policy.
+        let due: Vec<ElasticEvent> =
+            self.trace.iter().filter(|e| e.at_mb == mb).copied().collect();
+        for ev in due {
+            match ev.op {
+                ElasticOp::Remove(k) => {
+                    for _ in 0..k {
+                        match self.slowest_active() {
+                            Some(id) if self.active_count() > self.min_devices => {
+                                self.set_state(id, SlotState::Removed, mb);
+                                events.push(PoolEvent {
+                                    mega_batch: mb,
+                                    device: id,
+                                    action: PoolAction::Remove,
+                                    reason: "scripted".to_string(),
+                                });
+                            }
+                            _ => break, // at the floor — trace op truncated
+                        }
+                    }
+                }
+                ElasticOp::RemoveId(id) => {
+                    // Explicit intent beats policy: removing a *quarantined*
+                    // device is allowed too (it cancels the pending
+                    // auto-readmission); only removing an Active device is
+                    // subject to the min_devices floor.
+                    let state = self.state_of(id);
+                    let removable = match state {
+                        Some(SlotState::Active) => self.active_count() > self.min_devices,
+                        Some(SlotState::Quarantined) => true,
+                        _ => false,
+                    };
+                    if removable {
+                        self.set_state(id, SlotState::Removed, mb);
+                        events.push(PoolEvent {
+                            mega_batch: mb,
+                            device: id,
+                            action: PoolAction::Remove,
+                            reason: "scripted".to_string(),
+                        });
+                    }
+                }
+                ElasticOp::Add(k) => {
+                    for _ in 0..k {
+                        match self.first_inactive() {
+                            Some(id) => {
+                                self.set_state(id, SlotState::Active, mb);
+                                events.push(PoolEvent {
+                                    mega_batch: mb,
+                                    device: id,
+                                    action: PoolAction::Add,
+                                    reason: "scripted".to_string(),
+                                });
+                            }
+                            None => break, // nothing left to add
+                        }
+                    }
+                }
+                ElasticOp::AddId(id) => {
+                    if matches!(
+                        self.state_of(id),
+                        Some(SlotState::Removed) | Some(SlotState::Quarantined)
+                    ) {
+                        self.set_state(id, SlotState::Active, mb);
+                        events.push(PoolEvent {
+                            mega_batch: mb,
+                            device: id,
+                            action: PoolAction::Add,
+                            reason: "scripted".to_string(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Quarantine sentences served → readmit.
+        let due_back: Vec<usize> = self
+            .slots
+            .iter()
+            .filter(|s| {
+                s.state == SlotState::Quarantined
+                    && s.left_at.is_some_and(|t| mb.saturating_sub(t) >= self.quarantine_mega_batches)
+            })
+            .map(|s| s.id)
+            .collect();
+        for id in due_back {
+            self.set_state(id, SlotState::Active, mb);
+            events.push(PoolEvent {
+                mega_batch: mb,
+                device: id,
+                action: PoolAction::Readmit,
+                reason: format!("{}-mega-batch quarantine elapsed", self.quarantine_mega_batches),
+            });
+        }
+
+        // Straggler policy over the observation windows.
+        if self.straggler_factor > 0.0 {
+            events.extend(self.quarantine_stragglers(mb));
+        }
+        events
+    }
+
+    /// Record per-device mean step times from the last mega-batch report
+    /// (`per_device` is roster-indexed; devices with zero updates are
+    /// skipped so idle pool members don't pollute their windows).
+    pub fn observe(&mut self, report: &MegaBatchReport) {
+        let window = self.straggler_window;
+        for slot in &mut self.slots {
+            if slot.state != SlotState::Active {
+                continue;
+            }
+            if let Some(d) = report.per_device.get(slot.id) {
+                if d.updates > 0 {
+                    slot.window.push(d.busy / d.updates as f64);
+                    if slot.window.len() > window {
+                        slot.window.remove(0);
+                    }
+                }
+            }
+        }
+    }
+
+    fn quarantine_stragglers(&mut self, mb: usize) -> Vec<PoolEvent> {
+        let mut events = Vec::new();
+        // Only judge devices with a full window; the median is taken over
+        // those same devices so the comparison is apples-to-apples.
+        let means: Vec<(usize, f64)> = self
+            .slots
+            .iter()
+            .filter(|s| s.state == SlotState::Active && s.window.len() >= self.straggler_window)
+            .filter_map(|s| s.windowed_mean().map(|m| (s.id, m)))
+            .collect();
+        if means.len() < 2 {
+            return events;
+        }
+        let mut sorted: Vec<f64> = means.iter().map(|&(_, m)| m).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        // Worst offenders first, so the floor cuts off the least-bad.
+        let mut offenders: Vec<(usize, f64)> = means
+            .into_iter()
+            .filter(|&(_, m)| m > self.straggler_factor * median)
+            .collect();
+        offenders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (id, m) in offenders {
+            if self.active_count() <= self.min_devices {
+                break;
+            }
+            self.set_state(id, SlotState::Quarantined, mb);
+            events.push(PoolEvent {
+                mega_batch: mb,
+                device: id,
+                action: PoolAction::Quarantine,
+                reason: format!(
+                    "step time {:.1}x fleet median (threshold {:.1}x)",
+                    m / median,
+                    self.straggler_factor
+                ),
+            });
+        }
+        events
+    }
+
+    /// The active device with the worst observed (or, lacking observations,
+    /// configured) slowness — the scripted `remove=k` victim. Observed step
+    /// times are only used when *every* active device has some, so seconds
+    /// never get compared against configured speed ratios.
+    fn slowest_active(&self) -> Option<usize> {
+        let all_observed = self
+            .slots
+            .iter()
+            .filter(|s| s.state == SlotState::Active)
+            .all(|s| !s.window.is_empty());
+        self.slots
+            .iter()
+            .filter(|s| s.state == SlotState::Active)
+            .max_by(|a, b| {
+                let key = |s: &DeviceSlot| {
+                    if all_observed {
+                        s.windowed_mean().unwrap_or(s.speed_factor)
+                    } else {
+                        s.speed_factor
+                    }
+                };
+                key(a).partial_cmp(&key(b)).unwrap().then(a.id.cmp(&b.id))
+            })
+            .map(|s| s.id)
+    }
+
+    /// Next `add=k` candidate: healthy Removed slots (scripted ejections and
+    /// never-used spares) before mid-quarantine stragglers — a scripted add
+    /// should bring clean capacity online, not cut a quarantine short.
+    fn first_inactive(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .find(|s| s.state == SlotState::Removed)
+            .or_else(|| self.slots.iter().find(|s| s.state == SlotState::Quarantined))
+            .map(|s| s.id)
+    }
+
+    fn state_of(&self, id: usize) -> Option<SlotState> {
+        self.slots.get(id).map(|s| s.state)
+    }
+
+    fn set_state(&mut self, id: usize, state: SlotState, mb: usize) {
+        let slot = &mut self.slots[id];
+        if state != SlotState::Active && slot.state == SlotState::Active {
+            slot.left_at = Some(mb);
+        }
+        if state == SlotState::Active {
+            slot.left_at = None;
+        }
+        // Stale timings must not poison post-churn straggler decisions.
+        slot.window.clear();
+        slot.state = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::DevStats;
+
+    fn cfg_with(events: &[&str], extra: &[(&str, &str)]) -> Config {
+        let mut overrides: Vec<(String, String)> = vec![(
+            "elastic.events".into(),
+            format!(
+                "[{}]",
+                events.iter().map(|e| format!("\"{e}\"")).collect::<Vec<_>>().join(", ")
+            ),
+        )];
+        for (k, v) in extra {
+            overrides.push((k.to_string(), v.to_string()));
+        }
+        Config::from_overrides(&overrides).unwrap()
+    }
+
+    fn report(busy_per_update: &[f64]) -> MegaBatchReport {
+        let per_device = busy_per_update
+            .iter()
+            .map(|&b| DevStats { updates: 10, busy: b * 10.0, ..Default::default() })
+            .collect();
+        MegaBatchReport { per_device, wall: 1.0 }
+    }
+
+    #[test]
+    fn scripted_remove_takes_slowest_and_add_restores() {
+        let cfg = cfg_with(&["at_mb=2 remove=2", "at_mb=4 add=2"], &[]);
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        assert_eq!(pool.active_ids(), vec![0, 1, 2, 3]);
+
+        assert!(pool.begin_mega_batch(0).is_empty());
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev.len(), 2);
+        // Default speed factors rise with id, so 3 then 2 go first.
+        assert_eq!(ev[0].device, 3);
+        assert_eq!(ev[1].device, 2);
+        assert!(ev.iter().all(|e| e.action == PoolAction::Remove));
+        assert_eq!(pool.active_ids(), vec![0, 1]);
+
+        let ev = pool.begin_mega_batch(4);
+        assert_eq!(ev.len(), 2);
+        assert!(ev.iter().all(|e| e.action == PoolAction::Add));
+        assert_eq!(pool.active_ids(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn min_devices_floor_truncates_removals() {
+        let cfg = cfg_with(&["at_mb=1 remove=9"], &[("elastic.min_devices", "2")]);
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        let ev = pool.begin_mega_batch(1);
+        assert_eq!(ev.len(), 2, "only down to the floor");
+        assert_eq!(pool.active_count(), 2);
+    }
+
+    #[test]
+    fn remove_id_and_add_id_are_explicit() {
+        let cfg = cfg_with(&["at_mb=1 remove_id=0", "at_mb=3 add_id=0"], &[]);
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        let ev = pool.begin_mega_batch(1);
+        assert_eq!(ev[0].device, 0);
+        assert_eq!(pool.active_ids(), vec![1, 2, 3]);
+        // Adding an already-active id is a no-op; removing twice too.
+        assert!(pool.begin_mega_batch(2).is_empty());
+        let ev = pool.begin_mega_batch(3);
+        assert_eq!(ev[0].device, 0);
+        assert_eq!(pool.active_ids(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn spares_extend_the_roster_and_hot_add() {
+        let cfg = cfg_with(
+            &["at_mb=2 add=1"],
+            &[("elastic.spare_devices", "[1.05]"), ("devices.count", "2"),
+              ("devices.speed_factors", "[1.0, 1.1]")],
+        );
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        assert_eq!(pool.roster_len(), 3);
+        assert_eq!(pool.active_ids(), vec![0, 1]);
+        let roster = DevicePool::roster(&cfg);
+        assert_eq!(roster.len(), 3);
+        assert_eq!(roster[2].id, 2);
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev[0].device, 2);
+        assert_eq!(ev[0].action, PoolAction::Add);
+        assert_eq!(pool.active_ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn remove_id_cancels_a_pending_quarantine_readmission() {
+        let cfg = cfg_with(
+            &["at_mb=3 remove_id=3"],
+            &[
+                ("elastic.straggler_factor", "2.0"),
+                ("elastic.straggler_window", "2"),
+                ("elastic.quarantine_mega_batches", "3"),
+            ],
+        );
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        for _ in 0..2 {
+            pool.observe(&report(&[1.0, 1.0, 1.0, 5.0]));
+        }
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev[0].action, PoolAction::Quarantine);
+        // The scripted removal applies to the quarantined device and logs.
+        let ev = pool.begin_mega_batch(3);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].action, PoolAction::Remove);
+        assert_eq!(ev[0].device, 3);
+        // No auto-readmission fires once the device was explicitly removed.
+        for mb in 4..10 {
+            assert!(pool.begin_mega_batch(mb).is_empty(), "mb {mb}");
+        }
+        assert_eq!(pool.active_ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn scripted_add_prefers_healthy_spares_over_quarantined() {
+        let cfg = cfg_with(
+            &["at_mb=3 add=1"],
+            &[
+                ("elastic.spare_devices", "[1.05]"),
+                ("elastic.straggler_factor", "2.0"),
+                ("elastic.straggler_window", "2"),
+                ("elastic.quarantine_mega_batches", "9"),
+            ],
+        );
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        for _ in 0..2 {
+            pool.observe(&report(&[1.0, 5.0, 1.0, 1.0]));
+        }
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev[0].action, PoolAction::Quarantine);
+        assert_eq!(ev[0].device, 1);
+        // add=1 brings in the clean spare (id 4), not the straggler.
+        let ev = pool.begin_mega_batch(3);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].action, PoolAction::Add);
+        assert_eq!(ev[0].device, 4);
+        assert_eq!(pool.active_ids(), vec![0, 2, 3, 4]);
+    }
+
+    #[test]
+    fn straggler_quarantine_and_auto_readmit() {
+        let cfg = cfg_with(
+            &[],
+            &[
+                ("elastic.straggler_factor", "2.0"),
+                ("elastic.straggler_window", "2"),
+                ("elastic.quarantine_mega_batches", "3"),
+            ],
+        );
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        // Device 3 runs 5x the others.
+        for _ in 0..2 {
+            pool.observe(&report(&[1.0, 1.0, 1.0, 5.0]));
+        }
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].device, 3);
+        assert_eq!(ev[0].action, PoolAction::Quarantine);
+        assert!(ev[0].reason.contains("median"), "{}", ev[0].reason);
+        assert_eq!(pool.active_ids(), vec![0, 1, 2]);
+
+        // Not yet served...
+        assert!(pool.begin_mega_batch(4).is_empty());
+        // ...served at mb 5 (2 + 3).
+        let ev = pool.begin_mega_batch(5);
+        assert_eq!(ev[0].action, PoolAction::Readmit);
+        assert_eq!(pool.active_ids(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn straggler_policy_respects_floor_and_window() {
+        let cfg = cfg_with(
+            &[],
+            &[
+                ("elastic.straggler_factor", "1.5"),
+                ("elastic.straggler_window", "3"),
+                ("elastic.min_devices", "4"),
+            ],
+        );
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        for _ in 0..3 {
+            pool.observe(&report(&[1.0, 1.0, 1.0, 9.0]));
+        }
+        // Offender exists but the floor forbids shrinking.
+        assert!(pool.begin_mega_batch(3).is_empty());
+
+        // Partial windows never trigger.
+        let cfg = cfg_with(&[], &[("elastic.straggler_factor", "1.5")]);
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        pool.observe(&report(&[1.0, 1.0, 1.0, 9.0]));
+        assert!(pool.begin_mega_batch(1).is_empty());
+    }
+}

@@ -1,5 +1,5 @@
-//! The training session: strategy dispatch, model merging, batch scaling,
-//! evaluation, and metrics — the outer loop of Figure 4.
+//! The training session: pool membership, strategy dispatch, model merging,
+//! batch scaling, evaluation, and metrics — the outer loop of Figure 4.
 //!
 //! One `Trainer` drives one run of one strategy:
 //!
@@ -15,41 +15,27 @@
 //! * **Crossbow** — dynamic dispatch with per-batch replica correction
 //!   toward the fleet average, plain average merge at mega-batch ends.
 //!
+//! Every strategy now runs on an elastic [`DevicePool`]: membership changes
+//! (scripted trace or straggler policy) land at mega-batch boundaries, the
+//! dispatch plan covers only the active subset, and Algorithm 2's merge
+//! weights renormalize over that subset. Per-device state — replicas, batch
+//! sizes, learning rates — is roster-indexed, and the momentum history
+//! lives on the global model, so both survive membership churn.
+//!
 //! The training clock *excludes* evaluation time (paper §5.1 methodology).
 
 use crate::allreduce::{self, Algo};
 use crate::config::{Config, Strategy};
 use crate::data::batcher::{Batcher, EvalBatches};
 use crate::data::SparseDataset;
-use crate::metrics::{MegaBatchRow, RunLog};
+use crate::metrics::{MegaBatchRow, PoolEventRow, RunLog};
 use crate::model::ModelState;
 use crate::Result;
 
 use super::backend::StepBackend;
-use super::engine_sim::SimEngine;
-use super::engine_threaded::ThreadedEngine;
-use super::plan::{DispatchMode, DispatchPlan, MegaBatchReport};
+use super::plan::{plan_for_strategy, DispatchPlan, ExecutionEngine, MegaBatchReport};
+use super::pool::{DevicePool, PoolAction, PoolEvent};
 use super::{merge, scaling};
-
-/// Either engine, unified behind one dispatch call.
-pub enum Engine<'b> {
-    Sim(SimEngine<'b>),
-    Threaded(ThreadedEngine),
-}
-
-impl<'b> Engine<'b> {
-    fn run_mega_batch(
-        &mut self,
-        replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
-        plan: &DispatchPlan,
-    ) -> Result<MegaBatchReport> {
-        match self {
-            Engine::Sim(e) => e.run_mega_batch(replicas, batcher, plan),
-            Engine::Threaded(e) => e.run_mega_batch(replicas, batcher, plan),
-        }
-    }
-}
 
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
@@ -87,7 +73,7 @@ impl Default for TrainerOptions {
 
 pub struct Trainer<'b> {
     pub cfg: Config,
-    pub engine: Engine<'b>,
+    pub engine: Box<dyn ExecutionEngine + 'b>,
     pub eval_backend: &'b dyn StepBackend,
     pub opts: TrainerOptions,
 }
@@ -95,7 +81,7 @@ pub struct Trainer<'b> {
 impl<'b> Trainer<'b> {
     pub fn new(
         cfg: Config,
-        engine: Engine<'b>,
+        engine: Box<dyn ExecutionEngine + 'b>,
         eval_backend: &'b dyn StepBackend,
         opts: TrainerOptions,
     ) -> Self {
@@ -105,16 +91,25 @@ impl<'b> Trainer<'b> {
     /// Train on `train`, evaluating P@1 on `test` after every merge window.
     pub fn run(&mut self, train: &SparseDataset, test: &SparseDataset) -> Result<RunLog> {
         let cfg = self.cfg.clone();
-        let g = cfg.devices.count;
         let dims = cfg.model.clone();
         let strategy = cfg.strategy.kind;
 
-        let mut log = RunLog::new(format!("{}-{}gpu", strategy.name(), g));
+        let mut pool = DevicePool::new(&cfg)?;
+        let roster = pool.roster_len();
+        anyhow::ensure!(
+            roster == self.engine.roster_len(),
+            "engine roster ({}) disagrees with the device pool ({roster}); build the engine \
+             from DevicePool::roster(&cfg)",
+            self.engine.roster_len()
+        );
+
+        let mut log =
+            RunLog::new(format!("{}-{}gpu", strategy.name(), cfg.devices.count));
         let mut batcher = Batcher::new(train, &dims, cfg.sgd.seed);
         let eval_bucket = self.eval_bucket();
         let eval_batches = EvalBatches::new(test, &dims, eval_bucket);
 
-        // Global model + momentum history + per-device replicas.
+        // Global model + momentum history + roster-indexed replicas.
         let mut global = match self.opts.init_model.take() {
             Some(m) => {
                 anyhow::ensure!(m.dims == dims, "resume model dims mismatch");
@@ -123,11 +118,11 @@ impl<'b> Trainer<'b> {
             None => ModelState::init(&dims, cfg.sgd.seed),
         };
         let mut global_prev = global.clone();
-        let mut replicas: Vec<ModelState> = vec![global.clone(); g];
+        let mut replicas: Vec<ModelState> = vec![global.clone(); roster];
 
-        // Per-device adaptive state.
-        let mut batch_sizes = vec![cfg.sgd.initial_batch; g];
-        let mut lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); g];
+        // Roster-indexed adaptive state (survives membership churn).
+        let mut batch_sizes = vec![cfg.sgd.initial_batch; roster];
+        let mut lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); roster];
         let mut scaling_state = scaling::ScalingState::default();
 
         let mut clock = 0.0f64;
@@ -139,101 +134,121 @@ impl<'b> Trainer<'b> {
                     break;
                 }
             }
+
+            // ---- pool membership for this mega-batch ----------------------
+            let events = pool.begin_mega_batch(mb);
+            let active = pool.active_ids();
+            // A device (re-)joining the pool resumes from the current global
+            // model; the momentum history lives on the global model and is
+            // unaffected by churn. (Inactive replicas are left stale rather
+            // than kept in sync — one clone per join, not per mega-batch.)
+            for ev in &events {
+                if matches!(ev.action, PoolAction::Add | PoolAction::Readmit) {
+                    replicas[ev.device] = global.clone();
+                }
+            }
+            if self.opts.verbose {
+                for ev in &events {
+                    println!(
+                        "[{}] mb={:<3} pool: {} device {} ({})",
+                        log.name,
+                        mb,
+                        ev.action.name(),
+                        ev.device,
+                        ev.reason
+                    );
+                }
+            }
+
             // Goyal-style linear warmup on every device's learning rate.
             let warmup = warmup_factor(mb, cfg.sgd.warmup_mega_batches);
 
-            let (report, merge_secs, perturbed) = match strategy {
+            let (report, merge_secs, merge_weights, perturbed) = match strategy {
                 Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
-                    let mut plan = self.plan_for(strategy, &batch_sizes, &lrs);
+                    let mut plan =
+                        plan_for_strategy(&cfg, strategy, &active, &batch_sizes, &lrs);
                     for lr in plan.lrs.iter_mut() {
                         *lr *= warmup;
                     }
                     let report = self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
                     clock += report.wall;
 
-                    // ---- merge (Algorithm 2 for Adaptive) -----------------
-                    let updates = report.updates();
+                    // ---- merge (Algorithm 2 for Adaptive), weights
+                    // renormalized over the active subset -------------------
+                    let active_updates: Vec<u64> =
+                        active.iter().map(|&d| report.per_device[d].updates).collect();
+                    let active_batches: Vec<usize> =
+                        active.iter().map(|&d| batch_sizes[d]).collect();
                     let outcome = match strategy {
                         Strategy::Adaptive => {
                             let l2s: Vec<f64> =
-                                replicas.iter().map(|r| r.l2_per_param()).collect();
-                            merge::compute_weights(&updates, &batch_sizes, &l2s, &cfg.merge)
+                                active.iter().map(|&d| replicas[d].l2_per_param()).collect();
+                            merge::compute_weights(&active_updates, &active_batches, &l2s, &cfg.merge)
                         }
                         _ => merge::MergeOutcome {
-                            weights: vec![1.0 / g as f64; g],
+                            weights: vec![1.0 / active.len() as f64; active.len()],
                             perturbed: false,
                             by_updates: false,
                         },
                     };
-                    let mut merged = ModelState::zeros(&dims);
-                    let refs: Vec<&ModelState> = replicas.iter().collect();
-                    let stats = allreduce::allreduce_merge(
-                        &mut merged,
-                        &refs,
-                        &outcome.weights,
-                        self.opts.allreduce,
-                        g,
-                        &self.cost(),
-                    );
+                    let (merged, merge_secs) =
+                        self.merge_active(&replicas, &active, &outcome.weights, &dims);
                     // Momentum global update for the HeteroGPU strategies.
                     let momentum = match strategy {
                         Strategy::Adaptive | Strategy::Elastic => cfg.merge.momentum,
                         _ => 0.0,
                     };
                     merge::momentum_update(&mut global, &mut global_prev, &merged, momentum);
-                    clock += stats.seconds;
+                    clock += merge_secs;
 
-                    // ---- Algorithm 1 (Adaptive only), gated by the
-                    // stability/oscillation controller -----------------------
+                    // ---- Algorithm 1 (Adaptive only) over the active
+                    // subset, gated by the stability/oscillation controller --
                     scaling_state.observe(&batch_sizes);
                     if strategy == Strategy::Adaptive
                         && cfg.strategy.batch_scaling
                         && scaling_state.should_scale()
                     {
-                        scaling::rescale(&mut batch_sizes, &mut lrs, &updates, &cfg.sgd);
+                        let mut b_act: Vec<usize> =
+                            active.iter().map(|&d| batch_sizes[d]).collect();
+                        let mut lr_act: Vec<f32> = active.iter().map(|&d| lrs[d]).collect();
+                        scaling::rescale(&mut b_act, &mut lr_act, &active_updates, &cfg.sgd);
+                        for (i, &d) in active.iter().enumerate() {
+                            batch_sizes[d] = b_act[i];
+                            lrs[d] = lr_act[i];
+                        }
                     }
-                    (report, stats.seconds, outcome.perturbed)
+                    let weights = scatter_weights(&outcome.weights, &active, roster);
+                    (report, merge_secs, weights, outcome.perturbed)
                 }
                 Strategy::SyncGradAgg => {
                     // One "mega-batch" worth of synchronous rounds, merging
                     // after every round (gradient aggregation ≡ averaging
                     // one-step replicas).
-                    let b_tf = scaling::round_to_grid(
-                        (cfg.sgd.b_max as f64 / g as f64).max(cfg.sgd.b_min as f64),
-                        &cfg.sgd,
-                    );
+                    let plan: DispatchPlan =
+                        plan_for_strategy(&cfg, strategy, &active, &batch_sizes, &lrs);
+                    let b_tf = plan.batch_sizes[0];
                     let rounds =
-                        (cfg.sgd.mega_batch_samples() / (g * b_tf)).max(1);
+                        (cfg.sgd.mega_batch_samples() / (active.len() * b_tf)).max(1);
                     let mut agg: Option<MegaBatchReport> = None;
                     let mut merge_total = 0.0;
+                    let uniform = vec![1.0 / active.len() as f64; active.len()];
                     for _ in 0..rounds {
-                        let plan = DispatchPlan {
-                            mode: DispatchMode::StaticQuota { batches_per_device: 1 },
-                            batch_sizes: vec![b_tf; g],
-                            lrs: vec![cfg.lr_for_batch(b_tf) * warmup; g],
-                            sample_budget: 0,
-                            crossbow_rate: None,
-                        };
+                        let mut plan = plan.clone();
+                        for lr in plan.lrs.iter_mut() {
+                            *lr *= warmup;
+                        }
                         let report =
                             self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
                         clock += report.wall * cfg.strategy.sync_overhead;
 
-                        let mut merged = ModelState::zeros(&dims);
-                        let refs: Vec<&ModelState> = replicas.iter().collect();
-                        let stats = allreduce::allreduce_merge(
-                            &mut merged,
-                            &refs,
-                            &vec![1.0 / g as f64; g],
-                            self.opts.allreduce,
-                            g,
-                            &self.cost(),
-                        );
-                        clock += stats.seconds * cfg.strategy.sync_overhead;
-                        merge_total += stats.seconds;
+                        let (merged, merge_secs) =
+                            self.merge_active(&replicas, &active, &uniform, &dims);
+                        clock += merge_secs * cfg.strategy.sync_overhead;
+                        merge_total += merge_secs;
                         global_prev = global.clone();
                         global = merged;
-                        for r in replicas.iter_mut() {
-                            *r = global.clone();
+                        for &d in &active {
+                            replicas[d] = global.clone();
                         }
                         agg = Some(match agg.take() {
                             None => report,
@@ -250,18 +265,20 @@ impl<'b> Trainer<'b> {
                             }
                         });
                     }
-                    (agg.unwrap(), merge_total, false)
+                    let weights = scatter_weights(&uniform, &active, roster);
+                    (agg.unwrap(), merge_total, weights, false)
                 }
             };
 
-            // Reset replicas to the merged global model for the next window.
-            if strategy != Strategy::SyncGradAgg {
-                for r in replicas.iter_mut() {
-                    *r = global.clone();
-                }
+            // Reset the active replicas to the merged global model for the
+            // next window. Inactive slots are synced lazily when their
+            // device re-joins (see the pool-event handling above).
+            for &d in &active {
+                replicas[d] = global.clone();
             }
 
             samples += report.total_samples();
+            pool.observe(&report);
 
             // ---- evaluate (excluded from the training clock) --------------
             let accuracy = if (mb + 1) % self.opts.eval_every == 0 {
@@ -271,11 +288,18 @@ impl<'b> Trainer<'b> {
             };
 
             // Hardware efficiency: fraction of the barrier window each
-            // device spent busy (1.0 = no straggler idling).
+            // active device spent busy (1.0 = no straggler idling; inactive
+            // devices report 0).
             let utilization: Vec<f64> = report
                 .per_device
                 .iter()
-                .map(|d| if report.wall > 0.0 { (d.busy / report.wall).min(1.0) } else { 1.0 })
+                .map(|d| {
+                    if d.updates > 0 && report.wall > 0.0 {
+                        (d.busy / report.wall).min(1.0)
+                    } else {
+                        0.0
+                    }
+                })
                 .collect();
 
             let row = MegaBatchRow {
@@ -290,18 +314,25 @@ impl<'b> Trainer<'b> {
                 merge_time: merge_secs,
                 l2_per_param: global.l2_per_param(),
                 utilization,
+                active_devices: active.clone(),
+                merge_weights,
+                pool_events: events.iter().map(pool_event_row).collect(),
             };
+            for ev in events {
+                log.pool_events.push(pool_event_row(&ev));
+            }
             if let Some(path) = &self.opts.checkpoint {
                 crate::model::checkpoint::save(&global, path)?;
             }
             if self.opts.verbose {
                 println!(
-                    "[{}] mb={:<3} clock={:>8.3}s loss={:<8.4} P@1={:<6.4} b={:?} u={:?}{}",
+                    "[{}] mb={:<3} clock={:>8.3}s loss={:<8.4} P@1={:<6.4} g={} b={:?} u={:?}{}",
                     log.name,
                     mb,
                     clock,
                     row.loss,
                     accuracy,
+                    row.active_devices.len(),
                     row.batch_sizes,
                     row.updates,
                     if perturbed { " pert" } else { "" }
@@ -312,38 +343,26 @@ impl<'b> Trainer<'b> {
         Ok(log)
     }
 
-    fn plan_for(&self, strategy: Strategy, batch_sizes: &[usize], lrs: &[f32]) -> DispatchPlan {
-        let cfg = &self.cfg;
-        let g = cfg.devices.count;
-        match strategy {
-            Strategy::Adaptive => DispatchPlan {
-                mode: DispatchMode::Dynamic,
-                batch_sizes: batch_sizes.to_vec(),
-                lrs: lrs.to_vec(),
-                sample_budget: cfg.sgd.mega_batch_samples(),
-                crossbow_rate: None,
-            },
-            Strategy::Elastic => {
-                let b = cfg.sgd.b_max;
-                DispatchPlan {
-                    mode: DispatchMode::StaticQuota {
-                        batches_per_device: (cfg.sgd.mega_batch_samples() / (g * b)).max(1),
-                    },
-                    batch_sizes: vec![b; g],
-                    lrs: vec![cfg.lr_for_batch(b); g],
-                    sample_budget: 0,
-                    crossbow_rate: None,
-                }
-            }
-            Strategy::Crossbow => DispatchPlan {
-                mode: DispatchMode::Dynamic,
-                batch_sizes: vec![cfg.sgd.b_max; g],
-                lrs: vec![cfg.lr_for_batch(cfg.sgd.b_max); g],
-                sample_budget: cfg.sgd.mega_batch_samples(),
-                crossbow_rate: Some(cfg.strategy.crossbow_rate),
-            },
-            Strategy::SyncGradAgg => unreachable!("sync handled inline"),
-        }
+    /// Weighted all-reduce over the active replicas; returns the merged
+    /// model and the simulated transfer seconds.
+    fn merge_active(
+        &self,
+        replicas: &[ModelState],
+        active: &[usize],
+        weights: &[f64],
+        dims: &crate::config::ModelDims,
+    ) -> (ModelState, f64) {
+        let mut merged = ModelState::zeros(dims);
+        let refs: Vec<&ModelState> = active.iter().map(|&d| &replicas[d]).collect();
+        let stats = allreduce::allreduce_merge(
+            &mut merged,
+            &refs,
+            weights,
+            self.opts.allreduce,
+            active.len(),
+            &self.engine.cost_model(),
+        );
+        (merged, stats.seconds)
     }
 
     fn eval_bucket(&self) -> usize {
@@ -351,12 +370,24 @@ impl<'b> Trainer<'b> {
             .eval_bucket
             .unwrap_or_else(|| 256.min(self.cfg.data.test_samples.max(1)).max(1))
     }
+}
 
-    fn cost(&self) -> crate::runtime::CostModel {
-        match &self.engine {
-            Engine::Sim(e) => e.cost,
-            Engine::Threaded(_) => crate::runtime::CostModel::default(),
-        }
+/// Spread active-subset merge weights back onto the roster (inactive = 0),
+/// for the per-row telemetry.
+fn scatter_weights(weights: &[f64], active: &[usize], roster: usize) -> Vec<f64> {
+    let mut out = vec![0.0; roster];
+    for (w, &d) in weights.iter().zip(active) {
+        out[d] = *w;
+    }
+    out
+}
+
+fn pool_event_row(ev: &PoolEvent) -> PoolEventRow {
+    PoolEventRow {
+        mega_batch: ev.mega_batch,
+        device: ev.device,
+        action: ev.action.name().to_string(),
+        reason: ev.reason.clone(),
     }
 }
 
@@ -375,8 +406,9 @@ mod tests {
     use super::*;
     use crate::config::{DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
     use crate::coordinator::backend::RefBackend;
+    use crate::coordinator::engine_sim::SimEngine;
     use crate::data::synthetic::Generator;
-    use crate::runtime::{CostModel, SimDevice};
+    use crate::runtime::CostModel;
 
     fn test_config(strategy: Strategy, g: usize) -> Config {
         let mut cfg = Config::default();
@@ -405,16 +437,16 @@ mod tests {
         cfg
     }
 
+    fn sim_engine<'b>(cfg: &Config, backend: &'b RefBackend) -> Box<dyn ExecutionEngine + 'b> {
+        Box::new(SimEngine::new(backend, DevicePool::roster(cfg), CostModel::default()))
+    }
+
     fn run_strategy(strategy: Strategy, g: usize) -> RunLog {
         let cfg = test_config(strategy, g);
         let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
         let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
         let backend = RefBackend;
-        let engine = Engine::Sim(SimEngine::new(
-            &backend,
-            SimDevice::fleet(&cfg.devices),
-            CostModel::default(),
-        ));
+        let engine = sim_engine(&cfg, &backend);
         let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
         trainer.run(&train, &test).unwrap()
     }
@@ -427,6 +459,9 @@ mod tests {
         assert!(log.best_accuracy() > 0.15, "acc {}", log.best_accuracy());
         // Clock advances monotonically.
         assert!(log.rows.windows(2).all(|w| w[1].clock > w[0].clock));
+        // Static pool: every row covers the whole fleet, no events.
+        assert!(log.rows.iter().all(|r| r.active_devices == vec![0, 1, 2, 3]));
+        assert!(log.pool_events.is_empty());
     }
 
     #[test]
@@ -467,16 +502,45 @@ mod tests {
     }
 
     #[test]
+    fn scripted_pool_events_flow_into_the_log() {
+        let mut cfg = test_config(Strategy::Adaptive, 4);
+        cfg.elastic.events =
+            vec!["at_mb=2 remove_id=0".to_string(), "at_mb=4 add_id=0".to_string()];
+        cfg.validate().unwrap();
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine = sim_engine(&cfg, &backend);
+        let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+        let log = trainer.run(&train, &test).unwrap();
+
+        let counts: Vec<usize> = log.rows.iter().map(|r| r.active_devices.len()).collect();
+        assert_eq!(counts, vec![4, 4, 3, 3, 4, 4]);
+        assert_eq!(log.pool_events.len(), 2);
+        assert_eq!(log.pool_events[0].action, "remove");
+        assert_eq!(log.pool_events[0].device, 0);
+        assert_eq!(log.pool_events[1].action, "add");
+        // While device 0 is out it does no updates and carries no weight.
+        for r in &log.rows[2..4] {
+            assert_eq!(r.updates[0], 0);
+            assert_eq!(r.merge_weights[0], 0.0);
+            assert!(!r.active_devices.contains(&0));
+        }
+        // Merge weights renormalize over the active subset at every merge
+        // (perturbation may denormalize by at most ±delta).
+        for r in &log.rows {
+            let sum: f64 = r.merge_weights.iter().sum();
+            assert!((sum - 1.0).abs() < 0.1 + 1e-9, "weight sum {sum} at mb {}", r.mega_batch);
+        }
+    }
+
+    #[test]
     fn time_budget_stops_early() {
         let cfg = test_config(Strategy::Adaptive, 2);
         let train = Generator::new(&cfg.model, &cfg.data).generate(500, 1);
         let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
         let backend = RefBackend;
-        let engine = Engine::Sim(SimEngine::new(
-            &backend,
-            SimDevice::fleet(&cfg.devices),
-            CostModel::default(),
-        ));
+        let engine = sim_engine(&cfg, &backend);
         let opts = TrainerOptions { time_budget: Some(1e-9), ..Default::default() };
         let mut trainer = Trainer::new(cfg, engine, &backend, opts);
         let log = trainer.run(&train, &test).unwrap();
@@ -501,11 +565,7 @@ mod tests {
             let train = Generator::new(&cfg.model, &cfg.data).generate(800, 1);
             let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
             let backend = RefBackend;
-            let engine = Engine::Sim(SimEngine::new(
-                &backend,
-                SimDevice::fleet(&cfg.devices),
-                CostModel::default(),
-            ));
+            let engine = sim_engine(cfg, &backend);
             let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
             let log = trainer.run(&train, &test).unwrap();
             log.rows[0].l2_per_param
@@ -530,11 +590,7 @@ mod tests {
         let train = Generator::new(&cfg.model, &cfg.data).generate(800, 1);
         let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
         let backend = RefBackend;
-        let engine = Engine::Sim(SimEngine::new(
-            &backend,
-            SimDevice::fleet(&cfg.devices),
-            CostModel::default(),
-        ));
+        let engine = sim_engine(&cfg, &backend);
         let opts = TrainerOptions { checkpoint: Some(path.clone()), ..Default::default() };
         let mut trainer = Trainer::new(cfg.clone(), engine, &backend, opts);
         trainer.run(&train, &test).unwrap();
@@ -543,20 +599,12 @@ mod tests {
         // Resume from the checkpoint: first-row loss must be well below a
         // fresh run's first-row loss.
         let saved = crate::model::checkpoint::load(&path).unwrap();
-        let engine2 = Engine::Sim(SimEngine::new(
-            &backend,
-            SimDevice::fleet(&cfg.devices),
-            CostModel::default(),
-        ));
+        let engine2 = sim_engine(&cfg, &backend);
         let opts2 = TrainerOptions { init_model: Some(saved), ..Default::default() };
         let mut resumed = Trainer::new(cfg.clone(), engine2, &backend, opts2);
         let log2 = resumed.run(&train, &test).unwrap();
 
-        let engine3 = Engine::Sim(SimEngine::new(
-            &backend,
-            SimDevice::fleet(&cfg.devices),
-            CostModel::default(),
-        ));
+        let engine3 = sim_engine(&cfg, &backend);
         let mut fresh = Trainer::new(cfg, engine3, &backend, TrainerOptions::default());
         let fresh_log = fresh.run(&train, &test).unwrap();
         assert!(

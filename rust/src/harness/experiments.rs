@@ -386,6 +386,56 @@ pub fn fig12(profile: DataProfile, backend: Backend) -> Result<RunLog> {
     Ok(log)
 }
 
+// ---------------------------------------------------------------------------
+// Elastic failover — beyond the paper (ROADMAP north-star): the pool loses
+// devices mid-run and recovers, and training rides through it.
+// ---------------------------------------------------------------------------
+
+pub struct ElasticOutcome {
+    pub static_log: RunLog,
+    pub elastic_log: RunLog,
+}
+
+/// Static 4-device run vs the same run losing 2 devices a third of the way
+/// in and regaining them at two thirds. Prints the device-count and P@1
+/// trajectories side by side plus the pool-event log.
+pub fn elastic(profile: DataProfile, backend: Backend) -> Result<ElasticOutcome> {
+    let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+    apply_full_scale(&mut cfg);
+    let static_log = run_single(&cfg, backend, TrainerOptions::default())?;
+
+    let mut e_cfg = cfg.clone();
+    let n = e_cfg.sgd.num_mega_batches;
+    e_cfg.elastic.events =
+        vec![format!("at_mb={} remove=2", n / 3), format!("at_mb={} add=2", 2 * n / 3)];
+    e_cfg.validate()?;
+    let elastic_log = run_single(&e_cfg, backend, TrainerOptions::default())?;
+
+    let mut t = Table::new(&["mega-batch", "devices", "P@1 (elastic)", "P@1 (static)", "events"]);
+    for (r, s) in elastic_log.rows.iter().zip(&static_log.rows) {
+        let events: Vec<String> = r
+            .pool_events
+            .iter()
+            .map(|e| format!("{} d{}", e.action, e.device))
+            .collect();
+        t.row(&[
+            r.mega_batch.to_string(),
+            r.active_devices.len().to_string(),
+            format!("{:.4}", r.accuracy),
+            format!("{:.4}", s.accuracy),
+            events.join(" "),
+        ]);
+    }
+    t.print(&format!("Elastic failover — remove 2 of 4 devices, then re-add ({})", profile.name()));
+    println!(
+        "final P@1: elastic {:.4} vs static {:.4} ({} pool events)",
+        elastic_log.final_accuracy(),
+        static_log.final_accuracy(),
+        elastic_log.pool_events.len()
+    );
+    Ok(ElasticOutcome { static_log, elastic_log })
+}
+
 /// Config helper shared with `Config::from_overrides` users.
 pub fn profile_of(cfg: &Config) -> DataProfile {
     cfg.data.profile

@@ -12,12 +12,13 @@ use crate::config::{Config, DataProfile, ExecMode, Strategy};
 use crate::coordinator::backend::{PjrtBackend, RefBackend, StepBackend};
 use crate::coordinator::engine_sim::SimEngine;
 use crate::coordinator::engine_threaded::{BackendFactory, ThreadedEngine};
-use crate::coordinator::trainer::{Engine, Trainer, TrainerOptions};
+use crate::coordinator::trainer::{Trainer, TrainerOptions};
+use crate::coordinator::DevicePool;
 use crate::data::synthetic::Generator;
 use crate::data::SparseDataset;
 use crate::metrics::RunLog;
 use crate::model::ModelState;
-use crate::runtime::{CostModel, Runtime, SimDevice};
+use crate::runtime::{CostModel, Runtime};
 use crate::Result;
 
 pub mod experiments;
@@ -25,11 +26,13 @@ pub mod experiments;
 /// How step numerics are provided for a run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
-    /// AOT artifacts through PJRT — requires `make artifacts`.
+    /// AOT artifacts through PJRT — requires `make artifacts` and the
+    /// `pjrt` cargo feature.
     Pjrt,
     /// Pure-Rust reference twin — hermetic, no artifacts needed.
     Reference,
-    /// PJRT when artifacts are present, reference otherwise.
+    /// PJRT when artifacts are present (and the feature is on), reference
+    /// otherwise.
     Auto,
 }
 
@@ -37,6 +40,9 @@ impl Backend {
     pub fn resolve(self, cfg: &Config) -> Backend {
         match self {
             Backend::Auto => {
+                if !cfg!(feature = "pjrt") {
+                    return Backend::Reference;
+                }
                 let manifest = std::path::Path::new(&cfg.runtime.artifacts_dir).join("manifest.json");
                 if manifest.exists() {
                     // Only use PJRT when the artifacts actually match.
@@ -62,12 +68,13 @@ pub fn make_data(cfg: &Config) -> (SparseDataset, SparseDataset) {
 }
 
 /// Run one full training session under `cfg`. This is the single funnel all
-/// benches, examples and the CLI go through.
+/// benches, examples and the CLI go through. Engines are sized to the
+/// elastic pool's roster (configured fleet + hot-add spares).
 pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> Result<RunLog> {
     cfg.validate()?;
     let backend = backend.resolve(cfg);
     let (train, test) = make_data(cfg);
-    let devices = SimDevice::fleet(&cfg.devices);
+    let devices = DevicePool::roster(cfg);
 
     match (cfg.runtime.mode, backend) {
         (ExecMode::Virtual, Backend::Pjrt) => {
@@ -75,12 +82,12 @@ pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> R
             runtime.manifest.check_config(cfg)?;
             opts.eval_bucket = Some(runtime.manifest.eval_batch);
             let be = PjrtBackend::new(runtime);
-            let engine = Engine::Sim(SimEngine::new(&be, devices, CostModel::default()));
+            let engine = Box::new(SimEngine::new(&be, devices, CostModel::default()));
             Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
         }
         (ExecMode::Virtual, _) => {
             let be = RefBackend;
-            let engine = Engine::Sim(SimEngine::new(&be, devices, CostModel::default()));
+            let engine = Box::new(SimEngine::new(&be, devices, CostModel::default()));
             Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
         }
         (ExecMode::Real, Backend::Pjrt) => {
@@ -90,21 +97,21 @@ pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> R
                 Ok(Box::new(PjrtBackend::new(rt)) as Box<dyn StepBackend>)
             });
             let template = ModelState::init(&cfg.model, cfg.sgd.seed);
-            let engine = ThreadedEngine::spawn(factory, devices, &template)?;
+            let engine = Box::new(ThreadedEngine::spawn(factory, devices, &template)?);
             // Eval through its own runtime on the coordinator thread.
             let eval_rt = Runtime::load(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
             eval_rt.manifest.check_config(cfg)?;
             opts.eval_bucket = Some(eval_rt.manifest.eval_batch);
             let eval_be = PjrtBackend::new(eval_rt);
-            Trainer::new(cfg.clone(), Engine::Threaded(engine), &eval_be, opts).run(&train, &test)
+            Trainer::new(cfg.clone(), engine, &eval_be, opts).run(&train, &test)
         }
         (ExecMode::Real, _) => {
             let factory: BackendFactory =
                 Arc::new(|_dev| Ok(Box::new(RefBackend) as Box<dyn StepBackend>));
             let template = ModelState::init(&cfg.model, cfg.sgd.seed);
-            let engine = ThreadedEngine::spawn(factory, devices, &template)?;
+            let engine = Box::new(ThreadedEngine::spawn(factory, devices, &template)?);
             let eval_be = RefBackend;
-            Trainer::new(cfg.clone(), Engine::Threaded(engine), &eval_be, opts).run(&train, &test)
+            Trainer::new(cfg.clone(), engine, &eval_be, opts).run(&train, &test)
         }
     }
 }

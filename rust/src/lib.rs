@@ -4,11 +4,13 @@
 //! Deep Learning on Heterogeneous Multi-GPU Servers* (Ma, Rusu, Wu, Sim —
 //! CS.DC 2021) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the HeteroGPU-style coordinator: dynamic
-//!   scheduler, GPU-manager workers, adaptive batch-size scaling
-//!   (Algorithm 1), normalized model merging with perturbation and momentum
-//!   (Algorithm 2), the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU
-//!   baseline, and a multi-stream all-reduce simulation.
+//! * **Layer 3 (this crate)** — the HeteroGPU-style coordinator: an elastic
+//!   device pool (runtime join/leave, straggler quarantine, scripted
+//!   elasticity traces), dynamic scheduler, GPU-manager workers, adaptive
+//!   batch-size scaling (Algorithm 1), normalized model merging with
+//!   perturbation and momentum over the active device subset (Algorithm 2),
+//!   the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU baseline, and
+//!   a multi-stream all-reduce simulation.
 //! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per batch-size bucket.
 //! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and

@@ -1,6 +1,6 @@
-//! Training telemetry: per-mega-batch rows, CSV/JSON export, and the
-//! derived measures the paper reports (time-to-accuracy, statistical
-//! efficiency, best accuracy).
+//! Training telemetry: per-mega-batch rows, pool-membership events, CSV/JSON
+//! export, and the derived measures the paper reports (time-to-accuracy,
+//! statistical efficiency, best accuracy).
 
 use std::io::Write;
 use std::path::Path;
@@ -9,6 +9,9 @@ use crate::util::json::Json;
 use crate::Result;
 
 /// One row per mega-batch (the paper evaluates after every mega-batch).
+/// Per-device vectors are indexed by global device id over the whole roster;
+/// devices outside the active pool report zero updates / utilization /
+/// merge weight.
 #[derive(Clone, Debug)]
 pub struct MegaBatchRow {
     pub mega_batch: usize,
@@ -32,6 +35,23 @@ pub struct MegaBatchRow {
     pub l2_per_param: f64,
     /// Per-device hardware efficiency: busy time / barrier window.
     pub utilization: Vec<f64>,
+    /// Devices that participated in this mega-batch, ascending.
+    pub active_devices: Vec<usize>,
+    /// Algorithm 2 merge weights, scattered over the roster (inactive = 0).
+    pub merge_weights: Vec<f64>,
+    /// Pool membership changes applied at this mega-batch boundary.
+    pub pool_events: Vec<PoolEventRow>,
+}
+
+/// One pool-membership change (also aggregated run-wide in
+/// [`RunLog::pool_events`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolEventRow {
+    pub mega_batch: usize,
+    pub device: usize,
+    /// "remove" | "add" | "quarantine" | "readmit".
+    pub action: String,
+    pub reason: String,
 }
 
 /// Full run log.
@@ -39,11 +59,13 @@ pub struct MegaBatchRow {
 pub struct RunLog {
     pub name: String,
     pub rows: Vec<MegaBatchRow>,
+    /// Every pool membership change over the run, in order.
+    pub pool_events: Vec<PoolEventRow>,
 }
 
 impl RunLog {
     pub fn new(name: impl Into<String>) -> Self {
-        RunLog { name: name.into(), rows: Vec::new() }
+        RunLog { name: name.into(), rows: Vec::new(), pool_events: Vec::new() }
     }
 
     pub fn push(&mut self, row: MegaBatchRow) {
@@ -68,6 +90,12 @@ impl RunLog {
         self.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
     }
 
+    /// Active-device count per mega-batch — the pool's size trajectory
+    /// (elasticity tests assert the transitions on this).
+    pub fn device_counts(&self) -> Vec<usize> {
+        self.rows.iter().map(|r| r.active_devices.len()).collect()
+    }
+
     /// Fraction of merges in which perturbation activated (Fig. 12b).
     pub fn perturbation_frequency(&self) -> f64 {
         if self.rows.is_empty() {
@@ -83,7 +111,8 @@ impl RunLog {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         let dev = self.rows.first().map(|r| r.batch_sizes.len()).unwrap_or(0);
         let mut header =
-            "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,l2_per_param".to_string();
+            "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,l2_per_param,active"
+                .to_string();
         for i in 0..dev {
             header.push_str(&format!(",b{i}"));
         }
@@ -96,7 +125,7 @@ impl RunLog {
         writeln!(f, "{header}")?;
         for r in &self.rows {
             let mut line = format!(
-                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8}",
+                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8},{}",
                 r.mega_batch,
                 r.clock,
                 r.samples,
@@ -104,7 +133,8 @@ impl RunLog {
                 r.accuracy,
                 r.perturbed as u8,
                 r.merge_time,
-                r.l2_per_param
+                r.l2_per_param,
+                r.active_devices.len()
             );
             for b in &r.batch_sizes {
                 line.push_str(&format!(",{b}"));
@@ -138,8 +168,24 @@ impl RunLog {
                         ("utilization", Json::arr(r.utilization.iter().map(|&u| Json::num(u)))),
                         ("merge_time", Json::num(r.merge_time)),
                         ("l2_per_param", Json::num(r.l2_per_param)),
+                        (
+                            "active_devices",
+                            Json::arr(r.active_devices.iter().map(|&d| Json::int(d as i64))),
+                        ),
+                        (
+                            "merge_weights",
+                            Json::arr(r.merge_weights.iter().map(|&w| Json::num(w))),
+                        ),
+                        (
+                            "pool_events",
+                            Json::arr(r.pool_events.iter().map(pool_event_json)),
+                        ),
                     ])
                 })),
+            ),
+            (
+                "pool_events",
+                Json::arr(self.pool_events.iter().map(pool_event_json)),
             ),
         ])
     }
@@ -151,6 +197,15 @@ impl RunLog {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
+}
+
+fn pool_event_json(ev: &PoolEventRow) -> Json {
+    Json::obj(vec![
+        ("mega_batch", Json::int(ev.mega_batch as i64)),
+        ("device", Json::int(ev.device as i64)),
+        ("action", Json::str(ev.action.clone())),
+        ("reason", Json::str(ev.reason.clone())),
+    ])
 }
 
 #[cfg(test)]
@@ -170,6 +225,9 @@ mod tests {
             merge_time: 0.01,
             l2_per_param: 0.05,
             utilization: vec![0.98, 0.80],
+            active_devices: vec![0, 1],
+            merge_weights: vec![0.55, 0.45],
+            pool_events: Vec::new(),
         }
     }
 
@@ -184,6 +242,7 @@ mod tests {
         assert_eq!(log.time_to_accuracy(0.9), None);
         assert!((log.best_accuracy() - 0.32).abs() < 1e-12);
         assert!((log.perturbation_frequency() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(log.device_counts(), vec![2, 2, 2]);
     }
 
     #[test]
@@ -196,17 +255,33 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("mega_batch,clock"));
+        assert!(lines[0].contains(",active,"));
         assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1"));
         assert_eq!(lines[1].split(',').count(), lines[0].split(',').count());
     }
 
     #[test]
-    fn json_round_trips() {
+    fn json_round_trips_with_pool_events() {
         let mut log = RunLog::new("t");
-        log.push(row(0, 1.5, 0.2, true));
+        let mut r = row(0, 1.5, 0.2, true);
+        r.pool_events.push(PoolEventRow {
+            mega_batch: 0,
+            device: 1,
+            action: "quarantine".to_string(),
+            reason: "test".to_string(),
+        });
+        log.pool_events.push(r.pool_events[0].clone());
+        log.push(r);
         let j = log.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("name").as_str(), Some("t"));
         assert_eq!(parsed.get("rows").as_arr().unwrap().len(), 1);
+        let events = parsed.get("pool_events").as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("action").as_str(), Some("quarantine"));
+        assert_eq!(events[0].get("device").as_i64(), Some(1));
+        let row0 = &parsed.get("rows").as_arr().unwrap()[0];
+        assert_eq!(row0.get("active_devices").as_arr().unwrap().len(), 2);
+        assert_eq!(row0.get("pool_events").as_arr().unwrap().len(), 1);
     }
 }

@@ -8,180 +8,256 @@
 //! `Runtime` is intentionally `!Send` (the `xla` crate's client is
 //! `Rc`-based): the threaded engine constructs one `Runtime` inside each
 //! GPU-manager thread, the discrete-event engine uses a single instance.
+//!
+//! **Feature gating:** the `xla` crate is not vendored in this offline
+//! tree, so the real implementation sits behind the `pjrt` cargo feature.
+//! Without it, `Runtime::load` returns an error and every caller (harness
+//! auto-resolution, the PJRT integration tests) falls back to / skips to
+//! the pure-Rust reference backend. The stub keeps the exact same API so
+//! no call site needs cfg knowledge.
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::time::{Duration, Instant};
+#[cfg(feature = "pjrt")]
+pub use real::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
-use anyhow::Context;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::time::{Duration, Instant};
 
-use crate::data::PaddedBatch;
-use crate::model::ModelState;
-use crate::Result;
+    use anyhow::Context;
 
-use super::manifest::Manifest;
+    use crate::data::PaddedBatch;
+    use crate::model::ModelState;
+    use crate::Result;
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    step_exes: RefCell<BTreeMap<usize, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    eval_exe: RefCell<Option<std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative wall time spent inside PJRT execute calls (perf telemetry).
-    pub exec_time: RefCell<Duration>,
-    pub exec_count: RefCell<u64>,
+    use super::super::manifest::Manifest;
+
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        step_exes: RefCell<BTreeMap<usize, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+        eval_exe: RefCell<Option<std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+        /// Cumulative wall time spent inside PJRT execute calls (perf telemetry).
+        pub exec_time: RefCell<Duration>,
+        pub exec_count: RefCell<u64>,
+    }
+
+    impl Runtime {
+        /// Load the manifest and create the PJRT CPU client. Executables are
+        /// compiled on first use; `warmup` forces specific buckets eagerly.
+        pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                manifest,
+                step_exes: RefCell::new(BTreeMap::new()),
+                eval_exe: RefCell::new(None),
+                exec_time: RefCell::new(Duration::ZERO),
+                exec_count: RefCell::new(0),
+            })
+        }
+
+        /// Eagerly compile the given buckets (e.g. the initial batch size).
+        pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
+            for &b in buckets {
+                self.step_exe(b)?;
+            }
+            Ok(())
+        }
+
+        fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        }
+
+        fn step_exe(&self, bucket: usize) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.step_exes.borrow().get(&bucket) {
+                return Ok(exe.clone());
+            }
+            let path = self.manifest.step_path(bucket)?;
+            let exe = std::rc::Rc::new(self.compile_file(&path)?);
+            self.step_exes.borrow_mut().insert(bucket, exe.clone());
+            Ok(exe)
+        }
+
+        fn eval_exe(&self) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.eval_exe.borrow().as_ref() {
+                return Ok(exe.clone());
+            }
+            let exe = std::rc::Rc::new(self.compile_file(&self.manifest.eval_path())?);
+            *self.eval_exe.borrow_mut() = Some(exe.clone());
+            Ok(exe)
+        }
+
+        /// Number of compiled step executables (telemetry).
+        pub fn compiled_buckets(&self) -> usize {
+            self.step_exes.borrow().len()
+        }
+
+        /// Execute one SGD step on `model` in place; returns (loss, exec wall time).
+        ///
+        /// `batch.bucket` selects the executable; the model buffers are uploaded,
+        /// the updated parameters downloaded back into `model`. (Buffer-resident
+        /// parameters via `execute_b` are used on the perf-optimized path — see
+        /// `step_on_device`.)
+        pub fn step(
+            &self,
+            model: &mut ModelState,
+            batch: &PaddedBatch,
+            lr: f32,
+        ) -> Result<(f32, Duration)> {
+            let exe = self.step_exe(batch.bucket)?;
+            let d = &self.manifest.dims;
+            batch.shape_checks(d);
+            let (f, h, c) = (d.features as i64, d.hidden as i64, d.classes as i64);
+            let (bk, k, l) = (batch.bucket as i64, d.max_nnz as i64, d.max_labels as i64);
+
+            let args: Vec<xla::Literal> = vec![
+                lit_f32(&model.w1, &[f, h]),
+                lit_f32(&model.b1, &[h]),
+                lit_f32(&model.w2, &[h, c]),
+                lit_f32(&model.b2, &[c]),
+                lit_i32(&batch.idx, &[bk, k]),
+                lit_f32(&batch.val, &[bk, k]),
+                lit_i32(&batch.lab, &[bk, l]),
+                lit_f32(&batch.lab_w, &[bk, l]),
+                lit_f32(&batch.smask, &[bk]),
+                xla::Literal::scalar(lr),
+            ];
+
+            let t0 = Instant::now();
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let dt = t0.elapsed();
+            *self.exec_time.borrow_mut() += dt;
+            *self.exec_count.borrow_mut() += 1;
+
+            let mut outs = result.to_tuple()?;
+            anyhow::ensure!(outs.len() == 5, "step executable returned {} outputs, want 5", outs.len());
+            // Copy straight into the existing model buffers — no reallocation on
+            // the hot path.
+            let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+            outs.pop().unwrap().copy_raw_to(&mut model.b2)?;
+            outs.pop().unwrap().copy_raw_to(&mut model.w2)?;
+            outs.pop().unwrap().copy_raw_to(&mut model.b1)?;
+            outs.pop().unwrap().copy_raw_to(&mut model.w1)?;
+            Ok((loss, dt))
+        }
+
+        /// Forward-only evaluation: top-1 class per row.
+        pub fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>> {
+            anyhow::ensure!(
+                batch.bucket == self.manifest.eval_batch,
+                "eval batch bucket {} != artifact eval batch {}",
+                batch.bucket,
+                self.manifest.eval_batch
+            );
+            let exe = self.eval_exe()?;
+            let d = &self.manifest.dims;
+            let (f, h, c) = (d.features as i64, d.hidden as i64, d.classes as i64);
+            let (bk, k) = (batch.bucket as i64, d.max_nnz as i64);
+            let args: Vec<xla::Literal> = vec![
+                lit_f32(&model.w1, &[f, h]),
+                lit_f32(&model.b1, &[h]),
+                lit_f32(&model.w2, &[h, c]),
+                lit_f32(&model.b2, &[c]),
+                lit_i32(&batch.idx, &[bk, k]),
+                lit_f32(&batch.val, &[bk, k]),
+            ];
+            let t0 = Instant::now();
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            *self.exec_time.borrow_mut() += t0.elapsed();
+            *self.exec_count.borrow_mut() += 1;
+            let preds = result.to_tuple1()?;
+            Ok(preds.to_vec::<i32>()?)
+        }
+    }
+
+    // Hot-path literal constructors. `create_from_shape_and_untyped_data` is a
+    // single memcpy into a pre-shaped literal; the obvious `vec1(..).reshape(..)`
+    // costs ~7x more (measured 4.3ms vs 0.6ms for the (8192,64) W1 — see
+    // EXPERIMENTS.md §Perf) because reshape runs a full C++ relayout.
+    fn lit_f32(data: &[f32], dims: &[i64]) -> xla::Literal {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
+            .expect("f32 literal creation cannot fail for matching element count")
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> xla::Literal {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, bytes)
+            .expect("i32 literal creation cannot fail for matching element count")
+    }
 }
 
-impl Runtime {
-    /// Load the manifest and create the PJRT CPU client. Executables are
-    /// compiled on first use; `warmup` forces specific buckets eagerly.
-    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            step_exes: RefCell::new(BTreeMap::new()),
-            eval_exe: RefCell::new(None),
-            exec_time: RefCell::new(Duration::ZERO),
-            exec_count: RefCell::new(0),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::cell::RefCell;
+    use std::path::Path;
+    use std::time::Duration;
+
+    use anyhow::bail;
+
+    use crate::data::PaddedBatch;
+    use crate::model::ModelState;
+    use crate::Result;
+
+    use super::super::manifest::Manifest;
+
+    /// API-compatible stand-in for the PJRT runtime when the `pjrt` feature
+    /// (and with it the `xla` crate) is absent. `load` always fails, so a
+    /// value of this type can never actually exist — the methods only keep
+    /// call sites compiling.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        pub exec_time: RefCell<Duration>,
+        pub exec_count: RefCell<u64>,
     }
 
-    /// Eagerly compile the given buckets (e.g. the initial batch size).
-    pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
-        for &b in buckets {
-            self.step_exe(b)?;
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature (the `xla` crate \
+         is not vendored offline); use the reference backend";
+
+    impl Runtime {
+        pub fn load(_artifacts_dir: &Path) -> Result<Runtime> {
+            bail!(UNAVAILABLE);
         }
-        Ok(())
-    }
 
-    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
-    }
-
-    fn step_exe(&self, bucket: usize) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.step_exes.borrow().get(&bucket) {
-            return Ok(exe.clone());
+        pub fn warmup(&self, _buckets: &[usize]) -> Result<()> {
+            bail!(UNAVAILABLE);
         }
-        let path = self.manifest.step_path(bucket)?;
-        let exe = std::rc::Rc::new(self.compile_file(&path)?);
-        self.step_exes.borrow_mut().insert(bucket, exe.clone());
-        Ok(exe)
-    }
 
-    fn eval_exe(&self) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.eval_exe.borrow().as_ref() {
-            return Ok(exe.clone());
+        pub fn compiled_buckets(&self) -> usize {
+            0
         }
-        let exe = std::rc::Rc::new(self.compile_file(&self.manifest.eval_path())?);
-        *self.eval_exe.borrow_mut() = Some(exe.clone());
-        Ok(exe)
+
+        pub fn step(
+            &self,
+            _model: &mut ModelState,
+            _batch: &PaddedBatch,
+            _lr: f32,
+        ) -> Result<(f32, Duration)> {
+            bail!(UNAVAILABLE);
+        }
+
+        pub fn eval(&self, _model: &ModelState, _batch: &PaddedBatch) -> Result<Vec<i32>> {
+            bail!(UNAVAILABLE);
+        }
     }
-
-    /// Number of compiled step executables (telemetry).
-    pub fn compiled_buckets(&self) -> usize {
-        self.step_exes.borrow().len()
-    }
-
-    /// Execute one SGD step on `model` in place; returns (loss, exec wall time).
-    ///
-    /// `batch.bucket` selects the executable; the model buffers are uploaded,
-    /// the updated parameters downloaded back into `model`. (Buffer-resident
-    /// parameters via `execute_b` are used on the perf-optimized path — see
-    /// `step_on_device`.)
-    pub fn step(&self, model: &mut ModelState, batch: &PaddedBatch, lr: f32) -> Result<(f32, Duration)> {
-        let exe = self.step_exe(batch.bucket)?;
-        let d = &self.manifest.dims;
-        batch.shape_checks(d);
-        let (f, h, c) = (d.features as i64, d.hidden as i64, d.classes as i64);
-        let (bk, k, l) = (batch.bucket as i64, d.max_nnz as i64, d.max_labels as i64);
-
-        let args: Vec<xla::Literal> = vec![
-            lit_f32(&model.w1, &[f, h]),
-            lit_f32(&model.b1, &[h]),
-            lit_f32(&model.w2, &[h, c]),
-            lit_f32(&model.b2, &[c]),
-            lit_i32(&batch.idx, &[bk, k]),
-            lit_f32(&batch.val, &[bk, k]),
-            lit_i32(&batch.lab, &[bk, l]),
-            lit_f32(&batch.lab_w, &[bk, l]),
-            lit_f32(&batch.smask, &[bk]),
-            xla::Literal::scalar(lr),
-        ];
-
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let dt = t0.elapsed();
-        *self.exec_time.borrow_mut() += dt;
-        *self.exec_count.borrow_mut() += 1;
-
-        let mut outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == 5, "step executable returned {} outputs, want 5", outs.len());
-        // Copy straight into the existing model buffers — no reallocation on
-        // the hot path.
-        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
-        outs.pop().unwrap().copy_raw_to(&mut model.b2)?;
-        outs.pop().unwrap().copy_raw_to(&mut model.w2)?;
-        outs.pop().unwrap().copy_raw_to(&mut model.b1)?;
-        outs.pop().unwrap().copy_raw_to(&mut model.w1)?;
-        Ok((loss, dt))
-    }
-
-    /// Forward-only evaluation: top-1 class per row.
-    pub fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>> {
-        anyhow::ensure!(
-            batch.bucket == self.manifest.eval_batch,
-            "eval batch bucket {} != artifact eval batch {}",
-            batch.bucket,
-            self.manifest.eval_batch
-        );
-        let exe = self.eval_exe()?;
-        let d = &self.manifest.dims;
-        let (f, h, c) = (d.features as i64, d.hidden as i64, d.classes as i64);
-        let (bk, k) = (batch.bucket as i64, d.max_nnz as i64);
-        let args: Vec<xla::Literal> = vec![
-            lit_f32(&model.w1, &[f, h]),
-            lit_f32(&model.b1, &[h]),
-            lit_f32(&model.w2, &[h, c]),
-            lit_f32(&model.b2, &[c]),
-            lit_i32(&batch.idx, &[bk, k]),
-            lit_f32(&batch.val, &[bk, k]),
-        ];
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        *self.exec_time.borrow_mut() += t0.elapsed();
-        *self.exec_count.borrow_mut() += 1;
-        let preds = result.to_tuple1()?;
-        Ok(preds.to_vec::<i32>()?)
-    }
-}
-
-// Hot-path literal constructors. `create_from_shape_and_untyped_data` is a
-// single memcpy into a pre-shaped literal; the obvious `vec1(..).reshape(..)`
-// costs ~7x more (measured 4.3ms vs 0.6ms for the (8192,64) W1 — see
-// EXPERIMENTS.md §Perf) because reshape runs a full C++ relayout.
-fn lit_f32(data: &[f32], dims: &[i64]) -> xla::Literal {
-    debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
-    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-    };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
-        .expect("f32 literal creation cannot fail for matching element count")
-}
-
-fn lit_i32(data: &[i32], dims: &[i64]) -> xla::Literal {
-    debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
-    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-    };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, bytes)
-        .expect("i32 literal creation cannot fail for matching element count")
 }

@@ -53,6 +53,19 @@ impl SimDevice {
         (0..cfg.count).map(|i| SimDevice::new(i, cfg)).collect()
     }
 
+    /// A device outside the configured fleet (elastic hot-add spares): any
+    /// id, explicit speed factor, same jitter/sensitivity/seed derivation.
+    pub fn with_speed(id: usize, speed_factor: f64, cfg: &DeviceConfig) -> Self {
+        SimDevice {
+            id,
+            speed_factor,
+            jitter_amp: cfg.jitter,
+            jitter_state: 0.0,
+            nnz_sensitivity: cfg.nnz_sensitivity,
+            rng: Rng::new(cfg.seed ^ (id as u64).wrapping_mul(0xA5A5_5A5A_DEAD_BEEF)),
+        }
+    }
+
     /// Advance the jitter process and return the current multiplicative
     /// slowdown (always > 0.1).
     fn next_multiplier(&mut self) -> f64 {

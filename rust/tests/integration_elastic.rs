@@ -1,0 +1,213 @@
+//! Integration over the elastic device pool (hermetic, reference backend):
+//! scripted membership traces, straggler quarantine, merge-weight
+//! renormalization over the active subset, and parity with static runs.
+
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ExecMode, ModelDims, SgdConfig, Strategy};
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::metrics::RunLog;
+
+fn small_cfg(strategy: Strategy, mode: ExecMode) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 8,
+        initial_batch: 32,
+        warmup_mega_batches: 0,
+        seed: 3,
+    };
+    cfg.devices = DeviceConfig {
+        count: 4,
+        speed_factors: vec![1.0, 1.1, 1.21, 1.32],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 11,
+    };
+    cfg.data = DataConfig { train_samples: 2_000, test_samples: 400, avg_nnz: 6.0, ..Default::default() };
+    cfg.runtime.mode = mode;
+    cfg.strategy.kind = strategy;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run(cfg: &Config) -> RunLog {
+    run_single(cfg, Backend::Reference, TrainerOptions::default()).unwrap()
+}
+
+/// The acceptance scenario: remove 1 of 4 devices at mega-batch N, re-add
+/// at M. The run completes, the RunLog pool events show the device-count
+/// transitions, merge weights renormalize over the active subset at every
+/// merge, and the final P@1 lands within tolerance of the static-pool run.
+#[test]
+fn scripted_trace_completes_and_matches_static_run() {
+    let static_cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    let static_log = run(&static_cfg);
+
+    let mut cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    cfg.elastic.events = vec!["at_mb=2 remove=1".to_string(), "at_mb=5 add=1".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+
+    // Device-count transitions 4 -> 3 -> 4 at the scripted boundaries.
+    assert_eq!(log.device_counts(), vec![4, 4, 3, 3, 3, 4, 4, 4]);
+    assert_eq!(log.pool_events.len(), 2);
+    assert_eq!(log.pool_events[0].action, "remove");
+    assert_eq!(log.pool_events[0].mega_batch, 2);
+    // remove=1 takes the slowest device (highest speed factor = id 3).
+    assert_eq!(log.pool_events[0].device, 3);
+    assert_eq!(log.pool_events[1].action, "add");
+    assert_eq!(log.pool_events[1].mega_batch, 5);
+
+    // Merge weights renormalize over the active subset at every merge:
+    // inactive devices carry exactly zero weight and the active weights sum
+    // to 1 (perturbation may denormalize by at most ±delta).
+    for r in &log.rows {
+        let sum: f64 = r.merge_weights.iter().sum();
+        assert!(
+            (sum - 1.0).abs() <= cfg.merge.delta + 1e-9,
+            "mb {}: weight sum {sum}",
+            r.mega_batch
+        );
+        for d in 0..4 {
+            let active = r.active_devices.contains(&d);
+            assert_eq!(
+                r.merge_weights[d] == 0.0 && r.updates[d] == 0,
+                !active,
+                "mb {}: device {d} active={active} weight={} updates={}",
+                r.mega_batch,
+                r.merge_weights[d],
+                r.updates[d]
+            );
+        }
+    }
+
+    // Both runs complete all mega-batches and learn comparably.
+    assert_eq!(log.rows.len(), static_log.rows.len());
+    let p_elastic = log.best_accuracy();
+    let p_static = static_log.best_accuracy();
+    assert!(p_elastic > 0.15, "elastic run failed to learn: {p_elastic}");
+    assert!(
+        (p_elastic - p_static).abs() < 0.15,
+        "elastic P@1 {p_elastic} too far from static {p_static}"
+    );
+}
+
+/// Losing devices must make the (virtual) clock slower per mega-batch, not
+/// corrupt the run: the 3-device stretch processes the same sample budget
+/// over fewer devices.
+#[test]
+fn shrunken_pool_still_conserves_sample_budget() {
+    let mut cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    cfg.elastic.events = vec!["at_mb=1 remove=2".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+    let budget = cfg.sgd.mega_batch_samples() as u64;
+    for r in &log.rows {
+        let processed: u64 = r.updates.iter().sum();
+        assert!(processed > 0);
+        // Dynamic dispatch conserves the budget exactly regardless of pool
+        // size: cumulative samples grow by exactly one budget per mega-batch.
+        assert_eq!(r.samples, budget * (r.mega_batch as u64 + 1));
+    }
+}
+
+/// The straggler policy quarantines a pathologically slow device and
+/// auto-readmits it after the configured number of mega-batches — all
+/// visible in the pool-event log.
+#[test]
+fn straggler_is_quarantined_and_readmitted() {
+    let mut cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    // Device 3 runs 4x slower than the rest; quarantine at 2x the median.
+    cfg.devices.speed_factors = vec![1.0, 1.0, 1.0, 4.0];
+    cfg.elastic.straggler_factor = 2.0;
+    cfg.elastic.straggler_window = 2;
+    cfg.elastic.quarantine_mega_batches = 3;
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+
+    let quarantines: Vec<_> =
+        log.pool_events.iter().filter(|e| e.action == "quarantine").collect();
+    assert!(!quarantines.is_empty(), "straggler never quarantined: {:?}", log.pool_events);
+    assert_eq!(quarantines[0].device, 3);
+    assert!(quarantines[0].reason.contains("median"));
+    // The first quarantine needs a full 2-mega-batch window first.
+    assert!(quarantines[0].mega_batch >= 2);
+    let readmits: Vec<_> = log.pool_events.iter().filter(|e| e.action == "readmit").collect();
+    assert!(!readmits.is_empty(), "quarantined device never readmitted");
+    assert_eq!(readmits[0].device, 3);
+    assert_eq!(readmits[0].mega_batch, quarantines[0].mega_batch + 3);
+    // While quarantined the pool runs on 3 devices.
+    let counts = log.device_counts();
+    assert!(counts.contains(&3), "pool never shrank: {counts:?}");
+}
+
+/// The elastic pool works identically through the threaded engine: workers
+/// for removed devices park, the hot-re-added device's worker resumes.
+#[test]
+fn threaded_engine_rides_through_pool_events() {
+    let mut cfg = small_cfg(Strategy::Adaptive, ExecMode::Real);
+    cfg.sgd.num_mega_batches = 5;
+    cfg.data.train_samples = 800;
+    cfg.data.test_samples = 200;
+    cfg.elastic.events = vec!["at_mb=1 remove_id=1".to_string(), "at_mb=3 add_id=1".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+    assert_eq!(log.device_counts(), vec![4, 3, 3, 4, 4]);
+    for r in &log.rows {
+        assert!(r.loss.is_finite());
+        let active_updates: u64 =
+            r.active_devices.iter().map(|&d| r.updates[d]).sum();
+        assert!(active_updates > 0);
+        if !r.active_devices.contains(&1) {
+            assert_eq!(r.updates[1], 0, "parked worker did work at mb {}", r.mega_batch);
+        }
+    }
+}
+
+/// Hot-add spares: a device that was never part of the initial fleet joins
+/// mid-run and picks up the current global model.
+#[test]
+fn spare_device_hot_adds_mid_run() {
+    let mut cfg = small_cfg(Strategy::Adaptive, ExecMode::Virtual);
+    cfg.devices.count = 2;
+    cfg.devices.speed_factors = vec![1.0, 1.2];
+    cfg.elastic.spare_devices = vec![1.05];
+    cfg.elastic.events = vec!["at_mb=3 add=1".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+    assert_eq!(log.device_counts(), vec![2, 2, 2, 3, 3, 3, 3, 3]);
+    let adds: Vec<_> = log.pool_events.iter().filter(|e| e.action == "add").collect();
+    assert_eq!(adds.len(), 1);
+    assert_eq!(adds[0].device, 2, "the spare has the first post-fleet id");
+    // Once in, the spare does real work and carries merge weight.
+    let last = log.rows.last().unwrap();
+    assert!(last.updates[2] > 0);
+    assert!(last.merge_weights[2] > 0.0);
+    assert!(log.best_accuracy() > 0.1, "P@1 {}", log.best_accuracy());
+}
+
+/// Elastic strategy (static equal batches) also renormalizes its uniform
+/// merge over the active subset: 1/3 weights while a device is out.
+#[test]
+fn elastic_strategy_uniform_weights_track_pool_size() {
+    let mut cfg = small_cfg(Strategy::Elastic, ExecMode::Virtual);
+    cfg.elastic.events = vec!["at_mb=2 remove=1".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+    for r in &log.rows {
+        let g = r.active_devices.len() as f64;
+        for &d in &r.active_devices {
+            assert!(
+                (r.merge_weights[d] - 1.0 / g).abs() < 1e-12,
+                "mb {}: weight {} != 1/{g}",
+                r.mega_batch,
+                r.merge_weights[d]
+            );
+        }
+    }
+}

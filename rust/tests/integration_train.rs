@@ -4,7 +4,7 @@
 use heterosparse::config::{Config, DataConfig, DeviceConfig, ExecMode, ModelDims, SgdConfig, Strategy};
 use heterosparse::coordinator::backend::RefBackend;
 use heterosparse::coordinator::engine_sim::SimEngine;
-use heterosparse::coordinator::plan::{DispatchMode, DispatchPlan};
+use heterosparse::coordinator::plan::{DispatchMode, DispatchPlan, ExecutionEngine};
 use heterosparse::coordinator::trainer::TrainerOptions;
 use heterosparse::data::batcher::Batcher;
 use heterosparse::data::synthetic::Generator;
@@ -108,6 +108,7 @@ fn prop_dynamic_routing_conserves_budget() {
         let batch_sizes: Vec<usize> = size_picks.iter().map(|&p| 8 * p as usize).collect();
         let plan = DispatchPlan {
             mode: DispatchMode::Dynamic,
+            device_ids: vec![0, 1, 2],
             batch_sizes,
             lrs: vec![0.05; 3],
             sample_budget: *budget as usize,
@@ -296,6 +297,7 @@ fn threaded_engine_surfaces_worker_failure() {
     let mut replicas = vec![template.clone(); 2];
     let plan = DispatchPlan {
         mode: DispatchMode::Dynamic,
+        device_ids: vec![0, 1],
         batch_sizes: vec![8, 8],
         lrs: vec![0.05; 2],
         sample_budget: 200,
