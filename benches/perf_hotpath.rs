@@ -5,17 +5,24 @@
 //!   * eval latency,
 //!   * merge arithmetic (weighted all-reduce) across model sizes,
 //!   * batcher assembly,
+//!   * data-plane throughput (composition policies, pooled vs fresh
+//!     allocation) — recorded to `BENCH_pipeline.json` (`HS_BENCH_OUT`
+//!     overrides the path),
 //!   * Algorithm 1 + Algorithm 2 overhead (must be negligible vs a step),
 //!   * dispatch-plan recomputation + pool-event processing (the per-
 //!     mega-batch overhead the elastic pool adds to the hot path).
 
-use heterosparse::config::{Config, MergeConfig, Strategy};
+use std::sync::Arc;
+
+use heterosparse::config::{CompositionPolicy, Config, MergeConfig, Strategy};
 use heterosparse::coordinator::{merge, plan_for_strategy, scaling, DevicePool};
-use heterosparse::data::batcher::Batcher;
+use heterosparse::data::batcher::{Batcher, PaddedBatch};
+use heterosparse::data::pipeline::{BufferPool, DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
 use heterosparse::model::ModelState;
 use heterosparse::runtime::{CostModel, Runtime};
-use heterosparse::util::bench::{bench_fn, fmt_ns};
+use heterosparse::util::bench::{bench_fn, fmt_ns, BenchResult};
+use heterosparse::util::json::Json;
 
 fn main() {
     let cfg = Config::default();
@@ -28,6 +35,39 @@ fn main() {
     // ---- batcher ----------------------------------------------------------
     let r = bench_fn("batcher/next_batch(b=128)", 10, 200, || batcher.next_batch(128, 128));
     println!("{r}");
+
+    // ---- data plane: composition policies + buffer recycling --------------
+    // Throughput is batches/sec of synchronous assembly (the producer
+    // thread's inner loop); the pooled-vs-fresh pair isolates the
+    // allocation-recycling win.
+    let sharded = Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples));
+    let mut pipeline_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    for policy in CompositionPolicy::all() {
+        let plane = DataPlane::new_sync(sharded.clone(), &cfg.model, policy, 1);
+        let name = format!("pipeline/next_batch(b=128, {})", policy.name());
+        let r = bench_fn(&name, 10, 200, || {
+            let b = plane.next_batch(128, 128);
+            plane.recycle(b);
+        });
+        let bps = r.throughput(1.0);
+        println!("{r}  ({bps:.0} batches/s)");
+        pipeline_results.push((format!("next_batch_{}", policy.name()), r, bps));
+    }
+    let k = cfg.model.max_nnz;
+    let l = cfg.model.max_labels;
+    let pool = BufferPool::new(8);
+    let r = bench_fn("pipeline/alloc fresh(b=128)", 10, 500, || PaddedBatch::with_shape(128, k, l));
+    let fresh_bps = r.throughput(1.0);
+    println!("{r}  ({fresh_bps:.0} allocs/s)");
+    pipeline_results.push(("alloc_fresh".to_string(), r, fresh_bps));
+    let r = bench_fn("pipeline/alloc pooled(b=128)", 10, 500, || {
+        let b = pool.get(128, k, l);
+        pool.put(b);
+    });
+    let pooled_bps = r.throughput(1.0);
+    println!("{r}  ({pooled_bps:.0} allocs/s)");
+    pipeline_results.push(("alloc_pooled".to_string(), r, pooled_bps));
+    write_pipeline_baseline(&pipeline_results);
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];
@@ -49,14 +89,15 @@ fn main() {
     // next to a step (hundreds of µs).
     let batch_sizes = vec![128usize, 96, 72, 48];
     let plan_lrs = vec![0.05f32, 0.04, 0.03, 0.02];
+    let nnz_est = sharded.mean_nnz_clamped(cfg.model.max_nnz);
     let active: Vec<usize> = vec![0, 1, 2, 3];
     let r = bench_fn("pool/plan_rebuild(4 devices)", 10, 2000, || {
-        plan_for_strategy(&cfg, Strategy::Adaptive, &active, &batch_sizes, &plan_lrs)
+        plan_for_strategy(&cfg, Strategy::Adaptive, &active, &batch_sizes, &plan_lrs, nnz_est)
     });
     println!("{r}");
     let subset: Vec<usize> = vec![0, 2];
     let r = bench_fn("pool/plan_rebuild(active subset 2/4)", 10, 2000, || {
-        plan_for_strategy(&cfg, Strategy::Adaptive, &subset, &batch_sizes, &plan_lrs)
+        plan_for_strategy(&cfg, Strategy::Adaptive, &subset, &batch_sizes, &plan_lrs, nnz_est)
     });
     println!("{r}");
 
@@ -126,5 +167,53 @@ fn main() {
             );
         }
         _ => println!("\n(pjrt step/eval skipped: artifacts missing or mismatched — run `make artifacts`)"),
+    }
+}
+
+/// Record the data-plane microbenchmarks to `BENCH_pipeline.json` (or
+/// `HS_BENCH_OUT`) so the throughput trajectory accumulates across PRs.
+/// Existing runs are preserved; this run is appended.
+fn write_pipeline_baseline(results: &[(String, BenchResult, f64)]) {
+    let path = std::env::var("HS_BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    let path = std::path::Path::new(&path);
+    let mut runs: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        match Json::parse(&text) {
+            Ok(j) => runs = j.get("runs").as_arr().map(|a| a.to_vec()).unwrap_or_default(),
+            Err(e) => {
+                // Never clobber an unparseable trajectory: park it aside
+                // and start a fresh one.
+                let bak = path.with_extension("json.bak");
+                let _ = std::fs::copy(path, &bak);
+                println!(
+                    "(existing {} unparseable ({e}); preserved at {})",
+                    path.display(),
+                    bak.display()
+                );
+            }
+        }
+    }
+    runs.push(Json::obj(vec![
+        (
+            "results",
+            Json::arr(results.iter().map(|(key, r, per_sec)| {
+                Json::obj(vec![
+                    ("name", Json::str(key.clone())),
+                    ("median_ns", Json::num(r.median_ns)),
+                    ("p10_ns", Json::num(r.p10_ns)),
+                    ("p90_ns", Json::num(r.p90_ns)),
+                    ("per_sec", Json::num(*per_sec)),
+                ])
+            })),
+        ),
+    ]));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath/pipeline")),
+        ("schema", Json::str("runs[].results[]{name,median_ns,p10_ns,p90_ns,per_sec}")),
+        ("runs", Json::arr(runs)),
+    ]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("\npipeline baseline appended to {}", path.display()),
+        Err(e) => println!("\n(could not write {}: {e})", path.display()),
     }
 }

@@ -1,0 +1,51 @@
+//! Data-plane demo: train the same heavy-tailed corpus under each batch
+//! composition policy and watch per-batch cost dispersion (nnz CV) change
+//! while the elastic scheduler runs on top.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_policies
+//! ```
+
+use heterosparse::config::{CompositionPolicy, Config};
+use heterosparse::harness::{run_single, Backend};
+
+fn main() -> anyhow::Result<()> {
+    let mut base = Config::default();
+    base.data.train_samples = 6_000;
+    base.data.test_samples = 800;
+    base.data.nnz_sigma = 1.2; // heavy-tailed nnz: composition has work to do
+    base.sgd.lr_bmax = 0.3;
+    base.sgd.num_mega_batches = 6;
+    base.validate()?;
+
+    println!(
+        "pipeline demo: {} devices, shard_samples={}, queue_depth={}",
+        base.devices.count, base.data.pipeline.shard_samples, base.data.pipeline.queue_depth
+    );
+    println!("\npolicy        nnz CV    best P@1  clock(s)  pool hit%");
+    for policy in CompositionPolicy::all() {
+        let mut cfg = base.clone();
+        cfg.data.pipeline.policy = policy;
+        let log = run_single(&cfg, Backend::Auto, Default::default())?;
+        let last = log.rows.last().expect("run produced rows");
+        let gets = last.pipeline.pool_hits + last.pipeline.pool_misses;
+        let hit_pct = if gets == 0 {
+            0.0
+        } else {
+            100.0 * last.pipeline.pool_hits as f64 / gets as f64
+        };
+        println!(
+            "{:<12}  {:<8.4}  {:<8.4}  {:<8.2}  {:.1}",
+            policy.name(),
+            log.mean_nnz_cv(),
+            log.best_accuracy(),
+            last.clock,
+            hit_pct
+        );
+    }
+    println!(
+        "\nnnz_balanced should show the lowest CV (stable batch cost), nnz_sorted the highest \
+         (the stress case the paper's Fig. 2 instability stems from)."
+    );
+    Ok(())
+}

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context};
 
-use crate::config::{Config, DataProfile};
+use crate::config::{CompositionPolicy, Config, DataProfile};
 use crate::coordinator::trainer::TrainerOptions;
 use crate::harness::{self, experiments, Backend};
 use crate::Result;
@@ -47,8 +47,9 @@ fn print_usage() {
          \x20 train        run one training session (strategy from config)\n\
          \x20 gen-data     write a synthetic XML dataset in libSVM format\n\
          \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
-         \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12)\n\
-         \x20              or the elastic-failover study (elastic)\n\
+         \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12),\n\
+         \x20              the elastic-failover study (elastic), or the data-plane\n\
+         \x20              composition-policy comparison (pipeline)\n\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\n\
          OPTIONS:\n\
@@ -61,6 +62,8 @@ fn print_usage() {
          \x20 --resume PATH      initialize from a saved checkpoint\n\
          \x20 --elastic EVENT    scripted pool event, e.g. \"at_mb=20 remove=2\"\n\
          \x20                    (repeatable; appends to [elastic] events)\n\
+         \x20 --data-policy P    batch composition policy: shuffled |\n\
+         \x20                    nnz_balanced | nnz_sorted (see [data.pipeline])\n\
          \x20 --verbose          progress output"
     );
 }
@@ -87,6 +90,7 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     let mut checkpoint = None;
     let mut resume = None;
     let mut elastic_events: Vec<String> = Vec::new();
+    let mut data_policy: Option<CompositionPolicy> = None;
     let mut positional = Vec::new();
 
     let mut it = args.iter().peekable();
@@ -122,6 +126,10 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
             "--elastic" => {
                 elastic_events.push(it.next().context("--elastic needs an event string")?.clone())
             }
+            "--data-policy" => {
+                let v = it.next().context("--data-policy needs a value")?;
+                data_policy = Some(CompositionPolicy::parse(v)?)
+            }
             "--verbose" | "-v" => verbose = true,
             other if other.starts_with("--") => bail!("unknown flag '{other}'"),
             other => positional.push(other.to_string()),
@@ -134,6 +142,9 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     if !elastic_events.is_empty() {
         cfg.elastic.events.extend(elastic_events);
         cfg.validate()?;
+    }
+    if let Some(policy) = data_policy {
+        cfg.data.pipeline.policy = policy;
     }
     Ok(Parsed { cfg, out, backend, profile, verbose, checkpoint, resume, positional })
 }
@@ -195,7 +206,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
     let p = parse_flags(args)?;
     let name = p.positional.first().context(
         "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a \
-         fig11b fig12 elastic",
+         fig11b fig12 elastic pipeline",
     )?;
     match name.as_str() {
         "table1" => {
@@ -233,6 +244,9 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         }
         "elastic" => {
             experiments::elastic(p.profile, p.backend)?;
+        }
+        "pipeline" => {
+            experiments::pipeline(p.profile, p.backend)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }
@@ -325,6 +339,23 @@ mod tests {
         assert_eq!(p.cfg.elastic.parsed_events().unwrap()[0].at_mb, 3);
         assert!(parse_flags(&s(&["--elastic", "at_mb=3 explode=1"])).is_err());
         assert!(parse_flags(&s(&["--elastic"])).is_err());
+    }
+
+    #[test]
+    fn data_policy_flag_overrides_config() {
+        let p = parse_flags(&s(&["--data-policy", "nnz_balanced"])).unwrap();
+        assert_eq!(p.cfg.data.pipeline.policy, CompositionPolicy::NnzBalanced);
+        // The flag wins over --set (it is the more specific spelling).
+        let p = parse_flags(&s(&[
+            "--set",
+            "data.pipeline.policy=shuffled",
+            "--data-policy",
+            "nnz_sorted",
+        ]))
+        .unwrap();
+        assert_eq!(p.cfg.data.pipeline.policy, CompositionPolicy::NnzSorted);
+        assert!(parse_flags(&s(&["--data-policy", "bogus"])).is_err());
+        assert!(parse_flags(&s(&["--data-policy"])).is_err());
     }
 
     #[test]

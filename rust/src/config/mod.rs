@@ -79,6 +79,8 @@ pub struct DataConfig {
     /// Zipf exponent for feature popularity.
     pub zipf_s: f64,
     pub seed: u64,
+    /// Data-plane settings (`[data.pipeline]`).
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for DataConfig {
@@ -92,6 +94,77 @@ impl Default for DataConfig {
             avg_labels: 2.0,
             zipf_s: 1.1,
             seed: 42,
+            pipeline: PipelineConfig::default(),
+        }
+    }
+}
+
+/// How the data plane composes samples into batches (`[data.pipeline]
+/// policy`, `--data-policy`). The paper's instability analysis traces back
+/// to per-batch nnz variance, so composition is a first-class scheduling
+/// knob rather than an afterthought.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompositionPolicy {
+    /// Epoch-shuffled, nnz-oblivious — the classic baseline.
+    Shuffled,
+    /// Stratify samples by nnz quantile and interleave the strata, so any
+    /// contiguous run of the epoch order (hence any batch) carries close to
+    /// `batch_size × mean_nnz` non-zeros.
+    NnzBalanced,
+    /// Descending-nnz order — maximal batch-cost dispersion; the stress
+    /// policy for scheduler experiments.
+    NnzSorted,
+}
+
+impl CompositionPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "shuffled" => Ok(CompositionPolicy::Shuffled),
+            "nnz_balanced" | "nnz-balanced" | "balanced" => Ok(CompositionPolicy::NnzBalanced),
+            "nnz_sorted" | "nnz-sorted" | "sorted" => Ok(CompositionPolicy::NnzSorted),
+            other => {
+                bail!("unknown composition policy '{other}' (shuffled|nnz_balanced|nnz_sorted)")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompositionPolicy::Shuffled => "shuffled",
+            CompositionPolicy::NnzBalanced => "nnz_balanced",
+            CompositionPolicy::NnzSorted => "nnz_sorted",
+        }
+    }
+
+    pub fn all() -> [CompositionPolicy; 3] {
+        [CompositionPolicy::Shuffled, CompositionPolicy::NnzBalanced, CompositionPolicy::NnzSorted]
+    }
+}
+
+/// Data-plane tuning (`[data.pipeline]`): sharded ingestion granularity,
+/// prefetch queue shape, and the batch-composition policy.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Bounded prefetch queue depth per device slot (2 = double-buffered).
+    pub queue_depth: usize,
+    /// Background producer threads assembling batches ahead of the
+    /// consumers. 0 disables prefetch; the virtual-time engine always runs
+    /// synchronously regardless (determinism).
+    pub producer_threads: usize,
+    /// Batch composition policy.
+    pub policy: CompositionPolicy,
+    /// Samples per ingestion shard (each shard carries its own nnz
+    /// histogram manifest).
+    pub shard_samples: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 2,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 4096,
         }
     }
 }
@@ -512,6 +585,14 @@ impl Config {
         f64_of(map, "data.zipf_s", &mut cfg.data.zipf_s)?;
         u64_of(map, "data.seed", &mut cfg.data.seed)?;
 
+        usize_of(map, "data.pipeline.queue_depth", &mut cfg.data.pipeline.queue_depth)?;
+        usize_of(map, "data.pipeline.producer_threads", &mut cfg.data.pipeline.producer_threads)?;
+        if let Some(v) = map.get("data.pipeline.policy") {
+            let s = v.as_str().context("data.pipeline.policy must be a string")?;
+            cfg.data.pipeline.policy = CompositionPolicy::parse(s)?;
+        }
+        usize_of(map, "data.pipeline.shard_samples", &mut cfg.data.pipeline.shard_samples)?;
+
         usize_of(map, "sgd.b_min", &mut cfg.sgd.b_min)?;
         usize_of(map, "sgd.b_max", &mut cfg.sgd.b_max)?;
         usize_of(map, "sgd.beta", &mut cfg.sgd.beta)?;
@@ -628,6 +709,16 @@ impl Config {
         }
         if self.data.train_samples == 0 || self.data.test_samples == 0 {
             bail!("dataset sizes must be positive");
+        }
+        let p = &self.data.pipeline;
+        if p.queue_depth == 0 {
+            bail!("data.pipeline.queue_depth must be positive");
+        }
+        if p.producer_threads > 64 {
+            bail!("data.pipeline.producer_threads must be <= 64 (got {})", p.producer_threads);
+        }
+        if p.shard_samples == 0 {
+            bail!("data.pipeline.shard_samples must be positive");
         }
         let e = &self.elastic;
         let events = e.parsed_events()?;
@@ -787,6 +878,32 @@ mod tests {
             ("elastic.events".into(), "[\"at_mb=1 add_id=4\"]".into()),
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn pipeline_section_parses_and_validates() {
+        let cfg = Config::from_overrides(&[
+            ("data.pipeline.queue_depth".into(), "4".into()),
+            ("data.pipeline.producer_threads".into(), "3".into()),
+            ("data.pipeline.policy".into(), "nnz_balanced".into()),
+            ("data.pipeline.shard_samples".into(), "512".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.data.pipeline.queue_depth, 4);
+        assert_eq!(cfg.data.pipeline.producer_threads, 3);
+        assert_eq!(cfg.data.pipeline.policy, CompositionPolicy::NnzBalanced);
+        assert_eq!(cfg.data.pipeline.shard_samples, 512);
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("data.pipeline.queue_depth", "0");
+        reject("data.pipeline.shard_samples", "0");
+        reject("data.pipeline.policy", "frobnicate");
+        assert!(CompositionPolicy::parse("nnz-sorted").is_ok());
+        for p in CompositionPolicy::all() {
+            assert_eq!(CompositionPolicy::parse(p.name()).unwrap(), p);
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! selects the active subset, so pool membership can change between
 //! mega-batches without touching engine state.
 
-use crate::data::batcher::Batcher;
+use crate::data::pipeline::DataPlane;
 use crate::model::ModelState;
 use crate::runtime::{CostModel, SimDevice};
 use crate::Result;
@@ -35,16 +35,17 @@ impl<'b> SimEngine<'b> {
     fn one_step(
         &mut self,
         replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
+        plane: &DataPlane,
         plan: &DispatchPlan,
         slot: usize,
         bucket: usize,
         valid: usize,
         stats: &mut [DevStats],
         free_time: &mut [f64],
+        batch_nnz: &mut Vec<u64>,
     ) -> Result<()> {
         let dev = plan.device_ids[slot];
-        let batch = batcher.next_batch(bucket, valid);
+        let batch = plane.next_batch_for(slot, bucket, valid);
         let (loss, _real) = self.backend.step(&mut replicas[dev], &batch, plan.lrs[slot])?;
         let dur = self.devices[dev].step_duration(&self.cost, &batch);
         free_time[slot] += dur;
@@ -53,6 +54,8 @@ impl<'b> SimEngine<'b> {
         s.samples += valid as u64;
         s.loss_sum += loss as f64;
         s.nnz += batch.nnz as u64;
+        batch_nnz.push(batch.nnz as u64);
+        plane.recycle(batch);
 
         // CROSSBOW-style correction: pull this replica toward the current
         // average of the *active* replicas after every batch.
@@ -64,12 +67,15 @@ impl<'b> SimEngine<'b> {
 }
 
 impl<'b> ExecutionEngine for SimEngine<'b> {
-    /// Run one mega-batch over the plan's active devices, drawing batches
-    /// from `batcher`. `replicas` covers the whole roster.
+    /// Run one mega-batch over the plan's active devices, pulling batches
+    /// from the data plane. `replicas` covers the whole roster. The plane
+    /// runs synchronously under this engine (the trainer passes zero
+    /// producer threads in virtual mode), so the sample→device routing is
+    /// deterministic.
     fn run_mega_batch(
         &mut self,
         replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
+        plane: &DataPlane,
         plan: &DispatchPlan,
     ) -> Result<MegaBatchReport> {
         let roster = self.devices.len();
@@ -79,7 +85,9 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
         assert!(g > 0, "plan has no active devices");
         assert!(plan.device_ids.iter().all(|&d| d < roster), "plan device outside roster");
 
+        plane.begin_window(&plan.batch_sizes);
         let mut stats = vec![DevStats::default(); roster];
+        let mut batch_nnz = Vec::new();
         // Virtual free-times, parallel to the plan's active slots.
         let mut free_time = vec![0.0f64; g];
 
@@ -93,7 +101,10 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
                     let bucket = plan.batch_sizes[slot];
                     let valid = bucket.min(remaining);
                     remaining -= valid;
-                    self.one_step(replicas, batcher, plan, slot, bucket, valid, &mut stats, &mut free_time)?;
+                    self.one_step(
+                        replicas, plane, plan, slot, bucket, valid, &mut stats, &mut free_time,
+                        &mut batch_nnz,
+                    )?;
                 }
             }
             DispatchMode::StaticQuota { batches_per_device } => {
@@ -102,7 +113,10 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
                     let slot = argmin(&free_time, |i| quota[i] > 0);
                     quota[slot] -= 1;
                     let bucket = plan.batch_sizes[slot];
-                    self.one_step(replicas, batcher, plan, slot, bucket, bucket, &mut stats, &mut free_time)?;
+                    self.one_step(
+                        replicas, plane, plan, slot, bucket, bucket, &mut stats, &mut free_time,
+                        &mut batch_nnz,
+                    )?;
                 }
             }
         }
@@ -111,7 +125,7 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
             stats[plan.device_ids[slot]].busy = t;
         }
         let wall = free_time.iter().copied().fold(0.0, f64::max);
-        Ok(MegaBatchReport { per_device: stats, wall })
+        Ok(MegaBatchReport { per_device: stats, wall, batch_nnz })
     }
 
     fn roster_len(&self) -> usize {
@@ -169,11 +183,13 @@ pub fn correct_toward_average(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Config, DataConfig, ModelDims};
+    use crate::config::{CompositionPolicy, Config, DataConfig, ModelDims};
     use crate::coordinator::backend::RefBackend;
+    use crate::data::pipeline::ShardedDataset;
     use crate::data::synthetic::Generator;
+    use std::sync::Arc;
 
-    fn setup() -> (Config, crate::data::SparseDataset) {
+    fn setup() -> (Config, Arc<ShardedDataset>) {
         let mut cfg = Config::default();
         cfg.model = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 4 };
         cfg.sgd.b_min = 8;
@@ -183,7 +199,11 @@ mod tests {
         cfg.devices.jitter = 0.0;
         let data_cfg = DataConfig { train_samples: 500, avg_nnz: 5.0, ..Default::default() };
         let ds = Generator::new(&cfg.model, &data_cfg).generate(500, 1);
-        (cfg, ds)
+        (cfg, Arc::new(ShardedDataset::from_dataset(&ds, 128)))
+    }
+
+    fn sync_plane(cfg: &Config, data: &Arc<ShardedDataset>, seed: u64) -> DataPlane {
+        DataPlane::new_sync(data.clone(), &cfg.model, CompositionPolicy::Shuffled, seed)
     }
 
     fn plan_dynamic(g: usize, b: usize, budget: usize) -> DispatchPlan {
@@ -194,6 +214,7 @@ mod tests {
             lrs: vec![0.05; g],
             sample_budget: budget,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         }
     }
 
@@ -203,13 +224,17 @@ mod tests {
         let backend = RefBackend;
         let mut engine =
             SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
-        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let plane = sync_plane(&cfg, &ds, 1);
         let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
         // Budget not divisible by the batch size: last dispatch is partial.
         let report = engine
-            .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 32, 330))
+            .run_mega_batch(&mut replicas, &plane, &plan_dynamic(4, 32, 330))
             .unwrap();
         assert_eq!(report.total_samples(), 330);
+        // Every dispatched batch reported its nnz.
+        assert_eq!(report.batch_nnz.len() as u64, report.total_updates());
+        let total_nnz: u64 = report.per_device.iter().map(|d| d.nnz).sum();
+        assert_eq!(report.batch_nnz.iter().sum::<u64>(), total_nnz);
     }
 
     #[test]
@@ -218,10 +243,10 @@ mod tests {
         let backend = RefBackend;
         let mut engine =
             SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
-        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let plane = sync_plane(&cfg, &ds, 1);
         let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
         let report = engine
-            .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 16, 3200))
+            .run_mega_batch(&mut replicas, &plane, &plan_dynamic(4, 16, 3200))
             .unwrap();
         let u = report.updates();
         // Device 0 is fastest (factor 1.0), device 3 slowest (1.32).
@@ -235,7 +260,7 @@ mod tests {
         let backend = RefBackend;
         let mut engine =
             SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
-        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let plane = sync_plane(&cfg, &ds, 1);
         let init = ModelState::init(&cfg.model, 2);
         let mut replicas = vec![init.clone(); 4];
         let plan = DispatchPlan {
@@ -245,8 +270,9 @@ mod tests {
             lrs: vec![0.05; 2],
             sample_budget: 320,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 320);
         let u = report.updates();
         assert_eq!(u[1], 0);
@@ -265,7 +291,7 @@ mod tests {
         let backend = RefBackend;
         let mut engine =
             SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
-        let mut batcher = Batcher::new(&ds, &cfg.model, 1);
+        let plane = sync_plane(&cfg, &ds, 1);
         let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
         let plan = DispatchPlan {
             mode: DispatchMode::StaticQuota { batches_per_device: 10 },
@@ -274,8 +300,9 @@ mod tests {
             lrs: vec![0.05; 4],
             sample_budget: 0,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 10));
         // The straggler forces idle time on the fast device (the paper's
         // elastic-SGD pathology).
@@ -289,18 +316,19 @@ mod tests {
         let run = || {
             let mut engine =
                 SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
-            let mut batcher = Batcher::new(&ds, &cfg.model, 7);
+            let plane = sync_plane(&cfg, &ds, 7);
             let mut replicas = vec![ModelState::init(&cfg.model, 3); 4];
             let r = engine
-                .run_mega_batch(&mut replicas, &mut batcher, &plan_dynamic(4, 16, 640))
+                .run_mega_batch(&mut replicas, &plane, &plan_dynamic(4, 16, 640))
                 .unwrap();
-            (r.updates(), r.wall, replicas[0].w1[10])
+            (r.updates(), r.wall, replicas[0].w1[10], r.batch_nnz.clone())
         };
         let a = run();
         let b = run();
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
         assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3, "per-batch nnz sequence is deterministic in sync mode");
     }
 
     #[test]

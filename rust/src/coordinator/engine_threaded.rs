@@ -4,8 +4,10 @@
 //! asynchronous managers communicating with a central dynamic scheduler via
 //! event messages. Each manager thread owns its device's model replica and
 //! its *own* PJRT client (the `xla` crate client is `Rc`-based and the
-//! paper's managers own their GPU context anyway); the scheduler owns the
-//! batcher and routes batches dynamically on completion events.
+//! paper's managers own their GPU context anyway); the scheduler pulls
+//! batches from the [`DataPlane`] (prefetched by its producer threads) and
+//! routes them dynamically on completion events, recycling each consumed
+//! batch's buffers back through the plane's pool.
 //!
 //! **Elastic membership:** the engine is constructed with the full device
 //! roster but spawns no threads up front. A worker is spawned the first
@@ -25,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
-use crate::data::batcher::Batcher;
+use crate::data::pipeline::DataPlane;
 use crate::data::PaddedBatch;
 use crate::model::ModelState;
 use crate::runtime::SimDevice;
@@ -46,7 +48,9 @@ enum Cmd {
 
 enum Reply {
     Ready { dev: usize },
-    StepDone { dev: usize, loss: f32, valid: usize, nnz: usize, busy: f64 },
+    /// The consumed batch rides back with the completion event so the
+    /// scheduler can recycle its buffers through the data plane.
+    StepDone { dev: usize, loss: f32, busy: f64, batch: PaddedBatch },
     Replica { dev: usize, model: Box<ModelState> },
     Fatal { dev: usize, error: String },
 }
@@ -160,7 +164,7 @@ impl ThreadedEngine {
         &self,
         slot: usize,
         plan: &DispatchPlan,
-        batcher: &mut Batcher<'_>,
+        plane: &DataPlane,
         remaining: &mut usize,
         quota: &mut [usize],
     ) -> Result<bool> {
@@ -173,7 +177,7 @@ impl ThreadedEngine {
                 let bucket = plan.batch_sizes[slot];
                 let valid = bucket.min(*remaining);
                 *remaining -= valid;
-                let batch = batcher.next_batch(bucket, valid);
+                let batch = plane.next_batch_for(slot, bucket, valid);
                 self.worker(dev)
                     .cmd
                     .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
@@ -186,7 +190,7 @@ impl ThreadedEngine {
                 }
                 quota[slot] -= 1;
                 let bucket = plan.batch_sizes[slot];
-                let batch = batcher.next_batch(bucket, bucket);
+                let batch = plane.next_batch_for(slot, bucket, bucket);
                 self.worker(dev)
                     .cmd
                     .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
@@ -199,11 +203,13 @@ impl ThreadedEngine {
 
 impl ExecutionEngine for ThreadedEngine {
     /// Run one mega-batch over the plan's active devices; workers for
-    /// devices outside the pool stay parked on their channels.
+    /// devices outside the pool stay parked on their channels. Batches are
+    /// pulled from the data plane's per-slot prefetch queues (filled by
+    /// its producer threads when configured) and recycled on completion.
     fn run_mega_batch(
         &mut self,
         replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
+        plane: &DataPlane,
         plan: &DispatchPlan,
     ) -> Result<MegaBatchReport> {
         let roster = self.roster.len();
@@ -213,6 +219,7 @@ impl ExecutionEngine for ThreadedEngine {
         assert!(g > 0, "plan has no active devices");
 
         self.ensure_workers(&plan.device_ids)?;
+        plane.begin_window(&plan.batch_sizes);
 
         // Map global device id -> active slot for reply routing.
         let mut slot_of = vec![usize::MAX; roster];
@@ -237,6 +244,7 @@ impl ExecutionEngine for ThreadedEngine {
         }
 
         let mut stats = vec![DevStats::default(); roster];
+        let mut batch_nnz = Vec::new();
         let t0 = Instant::now();
 
         // Per-slot outstanding work accounting.
@@ -252,23 +260,25 @@ impl ExecutionEngine for ThreadedEngine {
 
         // Prime every active device with one batch.
         for slot in 0..g {
-            if self.try_dispatch(slot, plan, batcher, &mut remaining, &mut quota)? {
+            if self.try_dispatch(slot, plan, plane, &mut remaining, &mut quota)? {
                 inflight += 1;
             }
         }
 
         while inflight > 0 {
             match self.replies.recv().map_err(|_| anyhow!("worker channel closed"))? {
-                Reply::StepDone { dev, loss, valid, nnz, busy } => {
+                Reply::StepDone { dev, loss, busy, batch } => {
                     let slot = slot_of[dev];
                     anyhow::ensure!(slot != usize::MAX, "step reply from inactive device {dev}");
                     let s = &mut stats[dev];
                     s.updates += 1;
-                    s.samples += valid as u64;
+                    s.samples += batch.valid as u64;
                     s.loss_sum += loss as f64;
-                    s.nnz += nnz as u64;
+                    s.nnz += batch.nnz as u64;
                     s.busy += busy;
-                    if self.try_dispatch(slot, plan, batcher, &mut remaining, &mut quota)? {
+                    batch_nnz.push(batch.nnz as u64);
+                    plane.recycle(batch);
+                    if self.try_dispatch(slot, plan, plane, &mut remaining, &mut quota)? {
                         // still inflight
                     } else {
                         inflight -= 1;
@@ -296,7 +306,7 @@ impl ExecutionEngine for ThreadedEngine {
             }
         }
 
-        Ok(MegaBatchReport { per_device: stats, wall })
+        Ok(MegaBatchReport { per_device: stats, wall, batch_nnz })
     }
 
     fn roster_len(&self) -> usize {
@@ -372,13 +382,10 @@ fn worker_main(
                                 crossbow_correct(&shared, &mut replica, pub_state, rate);
                             }
                         }
-                        let reply = Reply::StepDone {
-                            dev,
-                            loss,
-                            valid: batch.valid,
-                            nnz: batch.nnz,
-                            busy: target.max(real),
-                        };
+                        // The batch rides back so the scheduler can recycle
+                        // its buffers through the data plane's pool.
+                        let reply =
+                            Reply::StepDone { dev, loss, busy: target.max(real), batch };
                         if replies.send(reply).is_err() {
                             return;
                         }
@@ -433,17 +440,32 @@ fn crossbow_correct(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Config, DataConfig, DeviceConfig, ModelDims};
+    use crate::config::{
+        CompositionPolicy, Config, DataConfig, DeviceConfig, ModelDims, PipelineConfig,
+    };
     use crate::coordinator::backend::RefBackend;
+    use crate::data::pipeline::ShardedDataset;
     use crate::data::synthetic::Generator;
 
-    fn setup() -> (Config, crate::data::SparseDataset) {
+    fn setup() -> (Config, Arc<ShardedDataset>) {
         let mut cfg = Config::default();
         cfg.model = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 4 };
         cfg.devices = DeviceConfig { count: 3, speed_factors: vec![1.0, 1.2, 1.4], ..Default::default() };
         let data_cfg = DataConfig { train_samples: 400, avg_nnz: 5.0, ..Default::default() };
         let ds = Generator::new(&cfg.model, &data_cfg).generate(400, 1);
-        (cfg, ds)
+        (cfg, Arc::new(ShardedDataset::from_dataset(&ds, 128)))
+    }
+
+    /// Async plane with two producers — the production shape for this
+    /// engine.
+    fn async_plane(cfg: &Config, data: &Arc<ShardedDataset>, seed: u64) -> DataPlane {
+        let pcfg = PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 2,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 128,
+        };
+        DataPlane::new(data.clone(), &cfg.model, &pcfg, pcfg.producer_threads, seed)
     }
 
     fn ref_factory() -> BackendFactory {
@@ -460,7 +482,7 @@ mod tests {
         let template = ModelState::init(&cfg.model, 1);
         let mut engine =
             ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
-        let mut batcher = Batcher::new(&ds, &cfg.model, 5);
+        let plane = async_plane(&cfg, &ds, 5);
         let mut replicas = vec![template.clone(); 3];
         let plan = DispatchPlan {
             mode: DispatchMode::Dynamic,
@@ -469,10 +491,12 @@ mod tests {
             lrs: vec![0.05; 3],
             sample_budget: 250,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 250);
         assert!(report.wall > 0.0);
+        assert_eq!(report.batch_nnz.len() as u64, report.total_updates());
         // Replicas actually trained (diverged from the template).
         assert!(replicas[0].max_abs_diff(&template) > 0.0);
     }
@@ -483,7 +507,7 @@ mod tests {
         let template = ModelState::init(&cfg.model, 2);
         let mut engine =
             ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
-        let mut batcher = Batcher::new(&ds, &cfg.model, 6);
+        let plane = async_plane(&cfg, &ds, 6);
         let mut replicas = vec![template.clone(); 3];
         let plan = DispatchPlan {
             mode: DispatchMode::StaticQuota { batches_per_device: 4 },
@@ -492,8 +516,9 @@ mod tests {
             lrs: vec![0.05; 3],
             sample_budget: 0,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 4), "{:?}", report.updates());
         assert_eq!(report.total_samples(), 3 * 4 * 32);
     }
@@ -505,7 +530,7 @@ mod tests {
         let mut engine =
             ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
         assert_eq!(engine.spawned_workers(), 0, "no threads before the first mega-batch");
-        let mut batcher = Batcher::new(&ds, &cfg.model, 9);
+        let plane = async_plane(&cfg, &ds, 9);
         let mut replicas = vec![template.clone(); 3];
 
         // First mega-batch on a 2-device subset: only those workers spawn.
@@ -516,8 +541,9 @@ mod tests {
             lrs: vec![0.05; 2],
             sample_budget: 96,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 2);
         assert_eq!(replicas[2].max_abs_diff(&template), 0.0, "inactive replica untouched");
 
@@ -529,8 +555,9 @@ mod tests {
             lrs: vec![0.05; 2],
             sample_budget: 96,
             crossbow_rate: None,
+            nnz_estimate: 5.0,
         };
-        let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 3);
         assert_eq!(report.per_device[0].updates, 0, "parked device does no work");
         assert!(report.per_device[2].updates > 0);
@@ -542,7 +569,7 @@ mod tests {
         let template = ModelState::init(&cfg.model, 3);
         let mut engine =
             ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
-        let mut batcher = Batcher::new(&ds, &cfg.model, 7);
+        let plane = async_plane(&cfg, &ds, 7);
         let mut replicas = vec![template.clone(); 3];
         for _ in 0..3 {
             let plan = DispatchPlan {
@@ -552,10 +579,16 @@ mod tests {
                 lrs: vec![0.05; 3],
                 sample_budget: 96,
                 crossbow_rate: None,
+                nnz_estimate: 5.0,
             };
-            let report = engine.run_mega_batch(&mut replicas, &mut batcher, &plan).unwrap();
+            let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
             assert_eq!(report.total_samples(), 96);
         }
+        // Every consumed batch came through the plane (prefetched or
+        // synchronous fallback), and recycled buffers got reused.
+        let s = plane.stats();
+        assert_eq!(s.prefetched + s.synchronous, 18, "{s:?}"); // 3 mega-batches x 96/16
+        assert!(s.pool.hits > 0, "recycled buffers must be reused: {s:?}");
     }
 
     #[test]
@@ -564,9 +597,9 @@ mod tests {
         let template = ModelState::init(&cfg.model, 4);
         let mut engine =
             ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
-        let mut batcher = Batcher::new(&ds, &cfg.model, 8);
+        let plane = async_plane(&cfg, &ds, 8);
 
-        let run = |engine: &mut ThreadedEngine, batcher: &mut Batcher<'_>, rate| {
+        let run = |engine: &mut ThreadedEngine, plane: &DataPlane, rate| {
             let mut replicas = vec![template.clone(); 3];
             let plan = DispatchPlan {
                 mode: DispatchMode::StaticQuota { batches_per_device: 12 },
@@ -575,8 +608,9 @@ mod tests {
                 lrs: vec![0.3; 3],
                 sample_budget: 0,
                 crossbow_rate: rate,
+                nnz_estimate: 5.0,
             };
-            engine.run_mega_batch(&mut replicas, batcher, &plan).unwrap();
+            engine.run_mega_batch(&mut replicas, plane, &plan).unwrap();
             let spread = replicas[0]
                 .max_abs_diff(&replicas[1])
                 .max(replicas[1].max_abs_diff(&replicas[2]));
@@ -584,8 +618,8 @@ mod tests {
         };
         // Thread interleaving varies the correction order, so average a few
         // repetitions of each variant before comparing.
-        let free: f32 = (0..3).map(|_| run(&mut engine, &mut batcher, None)).sum();
-        let corrected: f32 = (0..3).map(|_| run(&mut engine, &mut batcher, Some(0.9))).sum();
+        let free: f32 = (0..3).map(|_| run(&mut engine, &plane, None)).sum();
+        let corrected: f32 = (0..3).map(|_| run(&mut engine, &plane, Some(0.9))).sum();
         assert!(corrected < free, "crossbow correction should contract spread: {corrected} vs {free}");
     }
 }

@@ -3,7 +3,7 @@
 //! (membership), and the execution engines.
 
 use crate::config::{Config, Strategy};
-use crate::data::batcher::Batcher;
+use crate::data::pipeline::DataPlane;
 use crate::model::ModelState;
 use crate::runtime::CostModel;
 use crate::Result;
@@ -38,12 +38,26 @@ pub struct DispatchPlan {
     /// CROSSBOW-style per-batch replica correction rate toward the fleet
     /// average (None for everything but CROSSBOW).
     pub crossbow_rate: Option<f64>,
+    /// Expected nnz per sample (post-`max_nnz` clamping), read off the
+    /// data plane's shard manifests. The plan consumes this so batch
+    /// *cost* — not just count — is known at dispatch time.
+    pub nnz_estimate: f64,
 }
 
 impl DispatchPlan {
     /// Number of participating devices.
     pub fn devices(&self) -> usize {
         self.device_ids.len()
+    }
+
+    /// Expected total nnz of one full batch on active slot `slot`.
+    pub fn expected_batch_nnz(&self, slot: usize) -> f64 {
+        self.nnz_estimate * self.batch_sizes[slot] as f64
+    }
+
+    /// Expected total nnz of the whole dynamic sample budget.
+    pub fn expected_budget_nnz(&self) -> f64 {
+        self.nnz_estimate * self.sample_budget as f64
     }
 }
 
@@ -57,6 +71,7 @@ pub fn plan_for_strategy(
     active: &[usize],
     batch_sizes: &[usize],
     lrs: &[f32],
+    nnz_estimate: f64,
 ) -> DispatchPlan {
     let g = active.len().max(1);
     match strategy {
@@ -67,6 +82,7 @@ pub fn plan_for_strategy(
             lrs: active.iter().map(|&d| lrs[d]).collect(),
             sample_budget: cfg.sgd.mega_batch_samples(),
             crossbow_rate: None,
+            nnz_estimate,
         },
         Strategy::Elastic => {
             let b = cfg.sgd.b_max;
@@ -79,6 +95,7 @@ pub fn plan_for_strategy(
                 lrs: vec![cfg.lr_for_batch(b); active.len()],
                 sample_budget: 0,
                 crossbow_rate: None,
+                nnz_estimate,
             }
         }
         Strategy::Crossbow => DispatchPlan {
@@ -88,6 +105,7 @@ pub fn plan_for_strategy(
             lrs: vec![cfg.lr_for_batch(cfg.sgd.b_max); active.len()],
             sample_budget: cfg.sgd.mega_batch_samples(),
             crossbow_rate: Some(cfg.strategy.crossbow_rate),
+            nnz_estimate,
         },
         Strategy::SyncGradAgg => {
             // One synchronous round: per-device batch b_max/G, one batch each.
@@ -102,6 +120,7 @@ pub fn plan_for_strategy(
                 lrs: vec![cfg.lr_for_batch(b_tf); active.len()],
                 sample_budget: 0,
                 crossbow_rate: None,
+                nnz_estimate,
             }
         }
     }
@@ -131,9 +150,35 @@ pub struct MegaBatchReport {
     /// Time from mega-batch start to the merge barrier (max device busy
     /// time in the sim engine; measured wall time in the threaded engine).
     pub wall: f64,
+    /// True nnz of every dispatched batch (dispatch/completion order) —
+    /// the per-batch cost dispersion the paper ties to instability.
+    pub batch_nnz: Vec<u64>,
 }
 
 impl MegaBatchReport {
+    /// Mean and coefficient of variation of per-batch nnz. CV is the
+    /// paper-relevant dispersion measure: the `NnzBalanced` composition
+    /// policy exists to push it toward zero.
+    pub fn nnz_dispersion(&self) -> (f64, f64) {
+        if self.batch_nnz.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.batch_nnz.len() as f64;
+        let mean = self.batch_nnz.iter().map(|&x| x as f64).sum::<f64>() / n;
+        if mean == 0.0 {
+            return (0.0, 0.0);
+        }
+        let var = self
+            .batch_nnz
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        (mean, var.sqrt() / mean)
+    }
     pub fn total_samples(&self) -> u64 {
         self.per_device.iter().map(|d| d.samples).sum()
     }
@@ -181,12 +226,13 @@ impl MegaBatchReport {
 /// `replicas` is indexed by global device id over the full roster (the
 /// engine was constructed with the same roster); `plan.device_ids` selects
 /// which replicas participate. Engines must leave non-participating
-/// replicas untouched.
+/// replicas untouched. Batches are pulled from (and their buffers recycled
+/// back to) the [`DataPlane`] — engines no longer own a batch source.
 pub trait ExecutionEngine {
     fn run_mega_batch(
         &mut self,
         replicas: &mut [ModelState],
-        batcher: &mut Batcher<'_>,
+        plane: &DataPlane,
         plan: &DispatchPlan,
     ) -> Result<MegaBatchReport>;
 
@@ -212,11 +258,17 @@ mod tests {
         let batch_sizes = vec![128, 96, 72, 48];
         let lrs = vec![0.05, 0.04, 0.03, 0.02];
         let plan =
-            plan_for_strategy(&cfg, Strategy::Adaptive, &[0, 2, 3], &batch_sizes, &lrs);
+            plan_for_strategy(&cfg, Strategy::Adaptive, &[0, 2, 3], &batch_sizes, &lrs, 12.0);
         assert_eq!(plan.device_ids, vec![0, 2, 3]);
         assert_eq!(plan.batch_sizes, vec![128, 72, 48]);
         assert_eq!(plan.lrs, vec![0.05, 0.03, 0.02]);
         assert_eq!(plan.devices(), 3);
+        // The plan consumes the pipeline's nnz estimate: per-batch and
+        // per-budget expected costs fall straight out.
+        assert!((plan.expected_batch_nnz(1) - 72.0 * 12.0).abs() < 1e-9);
+        assert!(
+            (plan.expected_budget_nnz() - cfg.sgd.mega_batch_samples() as f64 * 12.0).abs() < 1e-9
+        );
     }
 
     #[test]
@@ -224,8 +276,8 @@ mod tests {
         let cfg = Config::default(); // mega = 20 * 128 samples, b_max 128
         let b = vec![128; 4];
         let l = vec![0.05; 4];
-        let p4 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1, 2, 3], &b, &l);
-        let p2 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1], &b, &l);
+        let p4 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1, 2, 3], &b, &l, 12.0);
+        let p2 = plan_for_strategy(&cfg, Strategy::Elastic, &[0, 1], &b, &l, 12.0);
         let q4 = match p4.mode {
             DispatchMode::StaticQuota { batches_per_device } => batches_per_device,
             _ => unreachable!(),
@@ -246,7 +298,23 @@ mod tests {
                 DevStats { updates: 5, busy: 1.0, ..Default::default() },
             ],
             wall: 1.0,
+            batch_nnz: Vec::new(),
         };
         assert!((report.max_idle() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnz_dispersion_mean_and_cv() {
+        let mut report =
+            MegaBatchReport { per_device: Vec::new(), wall: 0.0, batch_nnz: Vec::new() };
+        assert_eq!(report.nnz_dispersion(), (0.0, 0.0));
+        report.batch_nnz = vec![100, 100, 100];
+        let (mean, cv) = report.nnz_dispersion();
+        assert!((mean - 100.0).abs() < 1e-12);
+        assert!(cv.abs() < 1e-12, "identical batches have zero dispersion");
+        report.batch_nnz = vec![50, 150];
+        let (mean, cv) = report.nnz_dispersion();
+        assert!((mean - 100.0).abs() < 1e-12);
+        assert!((cv - 0.5).abs() < 1e-12);
     }
 }

@@ -415,7 +415,7 @@ mod tests {
             .iter()
             .map(|&b| DevStats { updates: 10, busy: b * 10.0, ..Default::default() })
             .collect();
-        MegaBatchReport { per_device, wall: 1.0 }
+        MegaBatchReport { per_device, wall: 1.0, batch_nnz: Vec::new() }
     }
 
     #[test]

@@ -24,11 +24,14 @@
 //!
 //! The training clock *excludes* evaluation time (paper §5.1 methodology).
 
+use std::sync::Arc;
+
 use crate::allreduce::{self, Algo};
-use crate::config::{Config, Strategy};
-use crate::data::batcher::{Batcher, EvalBatches};
+use crate::config::{Config, ExecMode, Strategy};
+use crate::data::batcher::EvalBatches;
+use crate::data::pipeline::{DataPlane, PipelineStats, ShardedDataset};
 use crate::data::SparseDataset;
-use crate::metrics::{MegaBatchRow, PoolEventRow, RunLog};
+use crate::metrics::{MegaBatchRow, PipelineStatsRow, PoolEventRow, RunLog};
 use crate::model::ModelState;
 use crate::Result;
 
@@ -89,7 +92,23 @@ impl<'b> Trainer<'b> {
     }
 
     /// Train on `train`, evaluating P@1 on `test` after every merge window.
+    ///
+    /// Reshards the borrowed corpus (one copy) — callers that already hold
+    /// a sharded corpus (e.g. from `ShardedDataset::from_libsvm`) should
+    /// use [`run_sharded`](Trainer::run_sharded) and pay no copy at all.
     pub fn run(&mut self, train: &SparseDataset, test: &SparseDataset) -> Result<RunLog> {
+        let shard_samples = self.cfg.data.pipeline.shard_samples;
+        let sharded = Arc::new(ShardedDataset::from_dataset(train, shard_samples));
+        self.run_sharded(sharded, test)
+    }
+
+    /// Train from an already-sharded corpus — the zero-extra-copy path the
+    /// data plane is built around.
+    pub fn run_sharded(
+        &mut self,
+        train: Arc<ShardedDataset>,
+        test: &SparseDataset,
+    ) -> Result<RunLog> {
         let cfg = self.cfg.clone();
         let dims = cfg.model.clone();
         let strategy = cfg.strategy.kind;
@@ -105,7 +124,19 @@ impl<'b> Trainer<'b> {
 
         let mut log =
             RunLog::new(format!("{}-{}gpu", strategy.name(), cfg.devices.count));
-        let mut batcher = Batcher::new(train, &dims, cfg.sgd.seed);
+
+        // The data plane: sharded corpus + composition policy + (for the
+        // threaded engine) async prefetch. Virtual-time runs force
+        // synchronous assembly so the sample→device routing — and with it
+        // the whole run — stays deterministic.
+        let producer_threads = match cfg.runtime.mode {
+            ExecMode::Virtual => 0,
+            ExecMode::Real => cfg.data.pipeline.producer_threads,
+        };
+        let plane =
+            DataPlane::new(train, &dims, &cfg.data.pipeline, producer_threads, cfg.sgd.seed);
+        let nnz_estimate = plane.nnz_estimate();
+
         let eval_bucket = self.eval_bucket();
         let eval_batches = EvalBatches::new(test, &dims, eval_bucket);
 
@@ -165,12 +196,13 @@ impl<'b> Trainer<'b> {
 
             let (report, merge_secs, merge_weights, perturbed) = match strategy {
                 Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
-                    let mut plan =
-                        plan_for_strategy(&cfg, strategy, &active, &batch_sizes, &lrs);
+                    let mut plan = plan_for_strategy(
+                        &cfg, strategy, &active, &batch_sizes, &lrs, nnz_estimate,
+                    );
                     for lr in plan.lrs.iter_mut() {
                         *lr *= warmup;
                     }
-                    let report = self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
+                    let report = self.engine.run_mega_batch(&mut replicas, &plane, &plan)?;
                     clock += report.wall;
 
                     // ---- merge (Algorithm 2 for Adaptive), weights
@@ -224,8 +256,9 @@ impl<'b> Trainer<'b> {
                     // One "mega-batch" worth of synchronous rounds, merging
                     // after every round (gradient aggregation ≡ averaging
                     // one-step replicas).
-                    let plan: DispatchPlan =
-                        plan_for_strategy(&cfg, strategy, &active, &batch_sizes, &lrs);
+                    let plan: DispatchPlan = plan_for_strategy(
+                        &cfg, strategy, &active, &batch_sizes, &lrs, nnz_estimate,
+                    );
                     let b_tf = plan.batch_sizes[0];
                     let rounds =
                         (cfg.sgd.mega_batch_samples() / (active.len() * b_tf)).max(1);
@@ -238,7 +271,7 @@ impl<'b> Trainer<'b> {
                             *lr *= warmup;
                         }
                         let report =
-                            self.engine.run_mega_batch(&mut replicas, &mut batcher, &plan)?;
+                            self.engine.run_mega_batch(&mut replicas, &plane, &plan)?;
                         clock += report.wall * cfg.strategy.sync_overhead;
 
                         let (merged, merge_secs) =
@@ -261,6 +294,7 @@ impl<'b> Trainer<'b> {
                                     a.nnz += b.nnz;
                                 }
                                 acc.wall += report.wall;
+                                acc.batch_nnz.extend(report.batch_nnz);
                                 acc
                             }
                         });
@@ -302,6 +336,9 @@ impl<'b> Trainer<'b> {
                 })
                 .collect();
 
+            // Per-batch nnz dispersion (the cost variance the composition
+            // policy controls) plus cumulative data-plane counters.
+            let (nnz_mean, nnz_cv) = report.nnz_dispersion();
             let row = MegaBatchRow {
                 mega_batch: mb,
                 clock,
@@ -317,6 +354,9 @@ impl<'b> Trainer<'b> {
                 active_devices: active.clone(),
                 merge_weights,
                 pool_events: events.iter().map(pool_event_row).collect(),
+                nnz_mean,
+                nnz_cv,
+                pipeline: pipeline_row(&plane.stats()),
             };
             for ev in events {
                 log.pool_events.push(pool_event_row(&ev));
@@ -388,6 +428,18 @@ fn pool_event_row(ev: &PoolEvent) -> PoolEventRow {
         device: ev.device,
         action: ev.action.name().to_string(),
         reason: ev.reason.clone(),
+    }
+}
+
+fn pipeline_row(s: &PipelineStats) -> PipelineStatsRow {
+    PipelineStatsRow {
+        prefetched: s.prefetched,
+        synchronous: s.synchronous,
+        starved: s.starved,
+        flushed: s.flushed,
+        truncated_features: s.truncated_features,
+        pool_hits: s.pool.hits,
+        pool_misses: s.pool.misses,
     }
 }
 
@@ -613,6 +665,87 @@ mod tests {
             log2.rows[0].loss,
             fresh_log.rows[0].loss
         );
+    }
+
+    #[test]
+    fn rows_carry_nnz_dispersion_and_pipeline_counters() {
+        let mut cfg = test_config(Strategy::Adaptive, 2);
+        cfg.data.nnz_sigma = 1.0; // heavier tail -> nonzero dispersion
+        cfg.validate().unwrap();
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine = sim_engine(&cfg, &backend);
+        let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+        let log = trainer.run(&train, &test).unwrap();
+        for r in &log.rows {
+            assert!(r.nnz_mean > 0.0, "mb {} nnz_mean", r.mega_batch);
+            assert!(r.nnz_cv > 0.0, "shuffled heavy-tailed batches must disperse");
+        }
+        let last = &log.rows.last().unwrap().pipeline;
+        assert!(last.synchronous > 0, "virtual mode assembles synchronously");
+        assert_eq!(last.starved, 0, "sync mode never starves");
+        assert!(last.pool_hits > 0, "engine recycling must produce pool hits");
+    }
+
+    #[test]
+    fn balanced_policy_cuts_batch_cost_dispersion() {
+        // The acceptance check at trainer level: same heavy-tailed corpus,
+        // same strategy, only the composition policy differs.
+        // Elastic keeps every batch at b_max, so the CV is purely
+        // compositional (no batch-size variation mixed in).
+        let mean_cv = |policy| {
+            let mut cfg = test_config(Strategy::Elastic, 2);
+            cfg.model.max_nnz = 24;
+            cfg.data.avg_nnz = 8.0;
+            cfg.data.nnz_sigma = 1.2;
+            cfg.data.pipeline.policy = policy;
+            cfg.validate().unwrap();
+            let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+            let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+            let backend = RefBackend;
+            let engine = sim_engine(&cfg, &backend);
+            let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+            let log = trainer.run(&train, &test).unwrap();
+            log.rows.iter().map(|r| r.nnz_cv).sum::<f64>() / log.rows.len() as f64
+        };
+        let shuffled = mean_cv(crate::config::CompositionPolicy::Shuffled);
+        let balanced = mean_cv(crate::config::CompositionPolicy::NnzBalanced);
+        assert!(
+            balanced < shuffled * 0.6,
+            "NnzBalanced must cut per-batch nnz CV: {balanced:.4} vs shuffled {shuffled:.4}"
+        );
+    }
+
+    #[test]
+    fn run_sharded_matches_run() {
+        // run() is a resharding wrapper over run_sharded(); with the same
+        // corpus and seeds the two must be trajectory-identical.
+        let cfg = test_config(Strategy::Adaptive, 2);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+
+        let engine = sim_engine(&cfg, &backend);
+        let mut t1 = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+        let via_run = t1.run(&train, &test).unwrap();
+
+        let sharded = std::sync::Arc::new(
+            crate::data::pipeline::ShardedDataset::from_dataset(
+                &train,
+                cfg.data.pipeline.shard_samples,
+            ),
+        );
+        let engine = sim_engine(&cfg, &backend);
+        let mut t2 = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+        let via_sharded = t2.run_sharded(sharded, &test).unwrap();
+
+        assert_eq!(via_run.rows.len(), via_sharded.rows.len());
+        for (a, b) in via_run.rows.iter().zip(&via_sharded.rows) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.clock, b.clock);
+        }
     }
 
     #[test]

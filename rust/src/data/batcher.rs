@@ -16,7 +16,7 @@
 use crate::config::ModelDims;
 use crate::util::rng::Rng;
 
-use super::sparse::SparseDataset;
+use super::sparse::{SampleView, SparseDataset};
 
 /// A batch padded to a static bucket shape, ready for literal upload.
 #[derive(Clone, Debug)]
@@ -44,6 +44,42 @@ pub struct PaddedBatch {
 }
 
 impl PaddedBatch {
+    /// Freshly allocated all-padding batch of shape `(bucket, k, l)`.
+    pub fn with_shape(bucket: usize, k: usize, l: usize) -> PaddedBatch {
+        PaddedBatch {
+            bucket,
+            valid: 0,
+            idx: vec![0; bucket * k],
+            val: vec![0.0; bucket * k],
+            lab: vec![0; bucket * l],
+            lab_w: vec![0.0; bucket * l],
+            smask: vec![0.0; bucket],
+            nnz: 0,
+            sample_ids: Vec::new(),
+        }
+    }
+
+    /// Reshape in place to an all-padding `(bucket, k, l)` batch, keeping
+    /// the allocations (the buffer pool's recycle path). Every buffer is
+    /// cleared and re-zeroed so a recycled batch is indistinguishable from
+    /// a fresh one.
+    pub fn reset(&mut self, bucket: usize, k: usize, l: usize) {
+        self.bucket = bucket;
+        self.valid = 0;
+        self.nnz = 0;
+        self.sample_ids.clear();
+        self.idx.clear();
+        self.idx.resize(bucket * k, 0);
+        self.val.clear();
+        self.val.resize(bucket * k, 0.0);
+        self.lab.clear();
+        self.lab.resize(bucket * l, 0);
+        self.lab_w.clear();
+        self.lab_w.resize(bucket * l, 0.0);
+        self.smask.clear();
+        self.smask.resize(bucket, 0.0);
+    }
+
     pub fn shape_checks(&self, dims: &ModelDims) {
         debug_assert_eq!(self.idx.len(), self.bucket * dims.max_nnz);
         debug_assert_eq!(self.val.len(), self.bucket * dims.max_nnz);
@@ -51,6 +87,37 @@ impl PaddedBatch {
         debug_assert_eq!(self.lab_w.len(), self.bucket * dims.max_labels);
         debug_assert_eq!(self.smask.len(), self.bucket);
     }
+}
+
+/// Pad one CSR sample into row `row` of `batch` (shape `(bucket, k, l)`),
+/// applying the padding rules from the module docs. Updates the batch's
+/// `nnz`, `smask`, and `sample_ids`; `valid` stays the caller's to manage.
+/// Returns the number of features silently *truncated* because the sample
+/// carries more than `k` non-zeros — callers surface the count through
+/// metrics instead of dropping the tail invisibly.
+pub fn pad_sample_into(
+    batch: &mut PaddedBatch,
+    row: usize,
+    id: u32,
+    s: &SampleView<'_>,
+    k: usize,
+    l: usize,
+) -> usize {
+    let take = s.indices.len().min(k);
+    for (j, (&fi, &fv)) in s.indices.iter().zip(s.values).take(take).enumerate() {
+        batch.idx[row * k + j] = fi as i32;
+        batch.val[row * k + j] = fv;
+    }
+    batch.nnz += take;
+    let nl = s.labels.len().min(l);
+    let w = 1.0 / nl as f32;
+    for (j, &lb) in s.labels.iter().take(nl).enumerate() {
+        batch.lab[row * l + j] = lb as i32;
+        batch.lab_w[row * l + j] = w;
+    }
+    batch.smask[row] = 1.0;
+    batch.sample_ids.push(id);
+    s.indices.len() - take
 }
 
 /// Epoch-shuffled batch stream.
@@ -62,6 +129,9 @@ pub struct Batcher<'a> {
     rng: Rng,
     /// Monotone count of samples handed out (all epochs).
     pub samples_served: u64,
+    /// Monotone count of features dropped because a sample exceeded
+    /// `max_nnz` (surfaced through metrics; see `pad_sample_into`).
+    pub truncated_features: u64,
 }
 
 impl<'a> Batcher<'a> {
@@ -70,7 +140,15 @@ impl<'a> Batcher<'a> {
         let mut rng = Rng::new(seed);
         let mut order: Vec<u32> = (0..ds.len() as u32).collect();
         rng.shuffle(&mut order);
-        Batcher { ds, dims: dims.clone(), order, cursor: 0, rng, samples_served: 0 }
+        Batcher {
+            ds,
+            dims: dims.clone(),
+            order,
+            cursor: 0,
+            rng,
+            samples_served: 0,
+            truncated_features: 0,
+        }
     }
 
     /// Fraction of the current epoch consumed.
@@ -83,34 +161,12 @@ impl<'a> Batcher<'a> {
         assert!(valid >= 1 && valid <= bucket, "need 1 <= valid({valid}) <= bucket({bucket})");
         let k = self.dims.max_nnz;
         let l = self.dims.max_labels;
-        let mut batch = PaddedBatch {
-            bucket,
-            valid,
-            idx: vec![0; bucket * k],
-            val: vec![0.0; bucket * k],
-            lab: vec![0; bucket * l],
-            lab_w: vec![0.0; bucket * l],
-            smask: vec![0.0; bucket],
-            nnz: 0,
-            sample_ids: Vec::with_capacity(valid),
-        };
+        let mut batch = PaddedBatch::with_shape(bucket, k, l);
+        batch.valid = valid;
         for row in 0..valid {
             let id = self.draw();
-            batch.sample_ids.push(id);
             let s = self.ds.sample(id as usize);
-            let take = s.indices.len().min(k);
-            for (j, (&fi, &fv)) in s.indices.iter().zip(s.values).take(take).enumerate() {
-                batch.idx[row * k + j] = fi as i32;
-                batch.val[row * k + j] = fv;
-            }
-            batch.nnz += take;
-            let nl = s.labels.len().min(l);
-            let w = 1.0 / nl as f32;
-            for (j, &lb) in s.labels.iter().take(nl).enumerate() {
-                batch.lab[row * l + j] = lb as i32;
-                batch.lab_w[row * l + j] = w;
-            }
-            batch.smask[row] = 1.0;
+            self.truncated_features += pad_sample_into(&mut batch, row, id, &s, k, l) as u64;
         }
         self.samples_served += valid as u64;
         batch.shape_checks(&self.dims);
@@ -134,6 +190,10 @@ impl<'a> Batcher<'a> {
 pub struct EvalBatches {
     pub bucket: usize,
     pub batches: Vec<PaddedBatch>,
+    /// Features dropped because test samples exceeded `max_nnz` — P@1 is
+    /// computed on truncated inputs when this is nonzero, so it is
+    /// surfaced rather than silently skewing the headline metric.
+    pub truncated_features: u64,
 }
 
 impl EvalBatches {
@@ -142,41 +202,26 @@ impl EvalBatches {
         let k = dims.max_nnz;
         let l = dims.max_labels;
         let mut row = 0usize;
+        let mut truncated_features = 0u64;
         while row < ds.len() {
             let valid = (ds.len() - row).min(bucket);
-            let mut b = PaddedBatch {
-                bucket,
-                valid,
-                idx: vec![0; bucket * k],
-                val: vec![0.0; bucket * k],
-                lab: vec![0; bucket * l],
-                lab_w: vec![0.0; bucket * l],
-                smask: vec![0.0; bucket],
-                nnz: 0,
-                sample_ids: Vec::with_capacity(valid),
-            };
+            let mut b = PaddedBatch::with_shape(bucket, k, l);
+            b.valid = valid;
             for r in 0..valid {
                 let id = (row + r) as u32;
-                b.sample_ids.push(id);
                 let s = ds.sample(id as usize);
-                let take = s.indices.len().min(k);
-                for (j, (&fi, &fv)) in s.indices.iter().zip(s.values).take(take).enumerate() {
-                    b.idx[r * k + j] = fi as i32;
-                    b.val[r * k + j] = fv;
-                }
-                b.nnz += take;
-                let nl = s.labels.len().min(l);
-                let w = 1.0 / nl as f32;
-                for (j, &lb) in s.labels.iter().take(nl).enumerate() {
-                    b.lab[r * l + j] = lb as i32;
-                    b.lab_w[r * l + j] = w;
-                }
-                b.smask[r] = 1.0;
+                truncated_features += pad_sample_into(&mut b, r, id, &s, k, l) as u64;
             }
             batches.push(b);
             row += valid;
         }
-        EvalBatches { bucket, batches }
+        if truncated_features > 0 {
+            eprintln!(
+                "[eval] warning: test samples exceed model.max_nnz={k}; {truncated_features} \
+                 features truncated — P@1 is measured on clipped inputs"
+            );
+        }
+        EvalBatches { bucket, batches, truncated_features }
     }
 }
 
@@ -248,6 +293,46 @@ mod tests {
     }
 
     #[test]
+    fn truncation_is_counted_not_silent() {
+        // max_nnz 4 against samples that can carry up to 16 features.
+        let gen_dims =
+            ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 16, max_labels: 4 };
+        let cfg = DataConfig { train_samples: 200, avg_nnz: 10.0, ..Default::default() };
+        let ds = Generator::new(&gen_dims, &cfg).generate(200, 1);
+        let tight = ModelDims { max_nnz: 4, ..gen_dims.clone() };
+        let mut b = Batcher::new(&ds, &tight, 1);
+        let batch = b.next_batch(64, 64);
+        let expected: u64 = batch
+            .sample_ids
+            .iter()
+            .map(|&id| ds.nnz(id as usize).saturating_sub(4) as u64)
+            .sum();
+        assert!(expected > 0, "test dataset should overflow max_nnz=4");
+        assert_eq!(b.truncated_features, expected);
+        // Per-row nnz never exceeds the cap.
+        assert!(batch.nnz <= 64 * 4);
+    }
+
+    #[test]
+    fn reset_recycles_to_a_fresh_batch() {
+        let (dims, ds) = dataset();
+        let mut b = Batcher::new(&ds, &dims, 9);
+        let mut batch = b.next_batch(16, 16);
+        assert!(batch.nnz > 0);
+        batch.reset(8, dims.max_nnz, dims.max_labels);
+        assert_eq!(batch.bucket, 8);
+        assert_eq!(batch.valid, 0);
+        assert_eq!(batch.nnz, 0);
+        assert!(batch.sample_ids.is_empty());
+        assert!(batch.idx.iter().all(|&v| v == 0));
+        assert!(batch.val.iter().all(|&v| v == 0.0));
+        assert!(batch.lab.iter().all(|&v| v == 0));
+        assert!(batch.lab_w.iter().all(|&v| v == 0.0));
+        assert!(batch.smask.iter().all(|&v| v == 0.0));
+        batch.shape_checks(&dims);
+    }
+
+    #[test]
     fn eval_batches_cover_test_set_once() {
         let (dims, ds) = dataset();
         let eb = EvalBatches::new(&ds, &dims, 32);
@@ -255,5 +340,17 @@ mod tests {
         assert_eq!(total, ds.len());
         assert_eq!(eb.batches.len(), 4); // 100 samples / 32 -> 3 full + 1 partial
         assert_eq!(eb.batches[3].valid, 4);
+        assert_eq!(eb.truncated_features, 0, "max_nnz fits the generator cap");
+    }
+
+    #[test]
+    fn eval_truncation_is_counted() {
+        let (dims, ds) = dataset();
+        let tight = ModelDims { max_nnz: 2, ..dims };
+        let eb = EvalBatches::new(&ds, &tight, 32);
+        let expected: u64 =
+            (0..ds.len()).map(|i| ds.nnz(i).saturating_sub(2) as u64).sum();
+        assert!(expected > 0);
+        assert_eq!(eb.truncated_features, expected);
     }
 }

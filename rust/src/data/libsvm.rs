@@ -18,12 +18,8 @@ use anyhow::{bail, Context};
 use super::sparse::{DatasetBuilder, SparseDataset};
 use crate::Result;
 
-/// Read an XML-repository file (header required).
-pub fn read(path: &Path) -> Result<SparseDataset> {
-    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut reader = BufReader::new(file);
-    let mut header = String::new();
-    reader.read_line(&mut header)?;
+/// Parse the `<samples> <features> <labels>` header line.
+fn parse_header(header: &str) -> Result<(usize, usize, usize)> {
     let parts: Vec<usize> = header
         .split_whitespace()
         .map(|t| t.parse::<usize>())
@@ -32,8 +28,33 @@ pub fn read(path: &Path) -> Result<SparseDataset> {
     if parts.len() != 3 {
         bail!("header must be '<samples> <features> <labels>', got {header:?}");
     }
-    let (n, num_features, num_classes) = (parts[0], parts[1], parts[2]);
-    let ds = read_body(reader, num_features, num_classes)?;
+    Ok((parts[0], parts[1], parts[2]))
+}
+
+/// Parse one data line into the builder, with the 1-based file `lineno`
+/// attached to any error. Blank lines are skipped (returns false).
+fn push_line(builder: &mut DatasetBuilder, line: &str, lineno: usize) -> Result<bool> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(false);
+    }
+    let (labels, indices, values) =
+        parse_line(line).with_context(|| format!("line {lineno}"))?;
+    builder
+        .push(&indices, &values, &labels)
+        .with_context(|| format!("line {lineno}"))?;
+    Ok(true)
+}
+
+/// Read an XML-repository file (header required).
+pub fn read(path: &Path) -> Result<SparseDataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let (n, num_features, num_classes) = parse_header(&header)?;
+    // Data starts on file line 2 (line 1 is the header).
+    let ds = read_body(reader, num_features, num_classes, 2)?;
     if ds.len() != n {
         bail!("header claims {n} samples, file has {}", ds.len());
     }
@@ -43,26 +64,68 @@ pub fn read(path: &Path) -> Result<SparseDataset> {
 /// Read headerless libSVM lines with caller-supplied dimensions.
 pub fn read_headerless(path: &Path, num_features: usize, num_classes: usize) -> Result<SparseDataset> {
     let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    read_body(BufReader::new(file), num_features, num_classes)
+    // No header line: the first data line IS file line 1.
+    read_body(BufReader::new(file), num_features, num_classes, 1)
 }
 
-fn read_body<R: BufRead>(reader: R, num_features: usize, num_classes: usize) -> Result<SparseDataset> {
+/// `first_lineno` is the 1-based file line the first data line sits on (2
+/// for headered files, 1 for headerless), so error contexts point at the
+/// real file line in both cases.
+fn read_body<R: BufRead>(
+    reader: R,
+    num_features: usize,
+    num_classes: usize,
+    first_lineno: usize,
+) -> Result<SparseDataset> {
     let mut builder = DatasetBuilder::new(num_features, num_classes);
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let (labels, indices, values) =
-            parse_line(line).with_context(|| format!("line {}", lineno + 2))?;
-        builder
-            .push(&indices, &values, &labels)
-            .with_context(|| format!("line {}", lineno + 2))?;
+    for (i, line) in reader.lines().enumerate() {
+        push_line(&mut builder, &line?, i + first_lineno)?;
     }
     let ds = builder.finish();
     ds.check()?;
     Ok(ds)
+}
+
+/// Read an XML-repository file shard-by-shard: at most `shard_samples`
+/// samples are materialized per [`SparseDataset`] shard, so ingestion never
+/// holds one whole-corpus CSR. The sharded data plane
+/// (`data::pipeline::ShardedDataset::from_libsvm`) builds on this.
+pub fn read_shards(
+    path: &Path,
+    shard_samples: usize,
+) -> Result<(Vec<SparseDataset>, usize, usize)> {
+    assert!(shard_samples > 0, "shard_samples must be positive");
+    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let (n, num_features, num_classes) = parse_header(&header)?;
+
+    let mut shards = Vec::new();
+    let mut builder = DatasetBuilder::new(num_features, num_classes);
+    let mut total = 0usize;
+    for (i, line) in reader.lines().enumerate() {
+        // Data starts on file line 2 (line 1 is the header).
+        if push_line(&mut builder, &line?, i + 2)? {
+            total += 1;
+        }
+        if builder.len() == shard_samples {
+            let fresh = DatasetBuilder::new(num_features, num_classes);
+            let shard = std::mem::replace(&mut builder, fresh);
+            let ds = shard.finish();
+            ds.check()?;
+            shards.push(ds);
+        }
+    }
+    if !builder.is_empty() {
+        let ds = builder.finish();
+        ds.check()?;
+        shards.push(ds);
+    }
+    if total != n {
+        bail!("header claims {n} samples, file has {total}");
+    }
+    Ok((shards, num_features, num_classes))
 }
 
 fn parse_line(line: &str) -> Result<(Vec<u32>, Vec<u32>, Vec<f32>)> {
@@ -155,5 +218,51 @@ mod tests {
         let path = tmpfile("badheader.txt");
         std::fs::write(&path, "5 10 4\n0 1:1.0\n").unwrap();
         assert!(read(&path).is_err());
+    }
+
+    #[test]
+    fn error_linenos_account_for_the_header() {
+        // The bad line is file line 3 (header + one good line before it).
+        let path = tmpfile("lineno-headered.txt");
+        std::fs::write(&path, "2 10 4\n0 1:1.0\n0 notafeature\n").unwrap();
+        let err = format!("{:#}", read(&path).unwrap_err());
+        assert!(err.contains("line 3"), "headered: {err}");
+    }
+
+    #[test]
+    fn error_linenos_correct_without_header() {
+        // Same body, no header: the bad line is file line 2.
+        let path = tmpfile("lineno-headerless.txt");
+        std::fs::write(&path, "0 1:1.0\n0 notafeature\n").unwrap();
+        let err = format!("{:#}", read_headerless(&path, 10, 4).unwrap_err());
+        assert!(err.contains("line 2"), "headerless: {err}");
+        assert!(!err.contains("line 3"), "off-by-one regression: {err}");
+    }
+
+    #[test]
+    fn shard_reading_matches_whole_file() {
+        let mut b = DatasetBuilder::new(50, 8);
+        for i in 0..7u32 {
+            b.push(&[i, i + 10], &[1.0, 0.5], &[i % 8]).unwrap();
+        }
+        let ds = b.finish();
+        let path = tmpfile("sharded.txt");
+        write(&path, &ds).unwrap();
+
+        let (shards, nf, nc) = read_shards(&path, 3).unwrap();
+        assert_eq!((nf, nc), (50, 8));
+        assert_eq!(shards.iter().map(|s| s.len()).collect::<Vec<_>>(), vec![3, 3, 1]);
+        let mut row = 0usize;
+        for shard in &shards {
+            for i in 0..shard.len() {
+                assert_eq!(shard.sample(i).indices, ds.sample(row).indices);
+                assert_eq!(shard.sample(i).labels, ds.sample(row).labels);
+                row += 1;
+            }
+        }
+        assert_eq!(row, ds.len());
+        // Header sample-count mismatch still detected in shard mode.
+        std::fs::write(tmpfile("sharded-bad.txt"), "3 10 4\n0 1:1.0\n").unwrap();
+        assert!(read_shards(&tmpfile("sharded-bad.txt"), 2).is_err());
     }
 }

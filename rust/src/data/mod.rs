@@ -1,10 +1,14 @@
 //! Sparse-data substrate: CSR dataset storage, libSVM I/O, the synthetic
-//! XML dataset generator (Table 1 substitutes), and padded batch assembly.
+//! XML dataset generator (Table 1 substitutes), padded batch assembly, and
+//! the [`pipeline`] data plane (sharded ingestion, async prefetch,
+//! nnz-aware batch composition) the coordinator trains through.
 
 pub mod batcher;
 pub mod libsvm;
+pub mod pipeline;
 pub mod sparse;
 pub mod synthetic;
 
 pub use batcher::{Batcher, PaddedBatch};
+pub use pipeline::{DataPlane, ShardedDataset};
 pub use sparse::SparseDataset;

@@ -1,0 +1,171 @@
+//! Recycling pool for [`PaddedBatch`] allocations.
+//!
+//! The old hot path `vec!`-ed four buffers for every batch (idx, val, lab,
+//! lab_w — plus smask); at thousands of batches per second that is pure
+//! allocator traffic. The pool hands those allocations back and forth
+//! between producers and consumers instead. Every `get` returns a batch
+//! that is bit-for-bit indistinguishable from a freshly allocated one
+//! (`PaddedBatch::reset` clears and re-zeroes every buffer) — the
+//! never-hand-out-stale-state property is pinned by tests here and in
+//! `tests/integration_pipeline.rs`.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::data::batcher::PaddedBatch;
+
+/// Thread-safe batch-buffer pool (shared via `Arc` between the data plane,
+/// its producer threads, and the engine consumers).
+#[derive(Debug)]
+pub struct BufferPool {
+    free: Mutex<Vec<PaddedBatch>>,
+    /// Retention cap: `put` beyond this drops the buffer instead of
+    /// growing the free list without bound. Grows monotonically via
+    /// [`ensure_retention`](BufferPool::ensure_retention) as the data
+    /// plane learns its real working set (slots × depth + in-flight).
+    max_retained: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Counter snapshot for telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `get` calls served by recycling a retained buffer.
+    pub hits: u64,
+    /// `get` calls that had to allocate fresh buffers.
+    pub misses: u64,
+    /// Buffers currently retained.
+    pub retained: usize,
+}
+
+impl BufferPool {
+    pub fn new(max_retained: usize) -> BufferPool {
+        BufferPool {
+            free: Mutex::new(Vec::new()),
+            max_retained: AtomicUsize::new(max_retained.max(1)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Grow the retention cap to at least `n` (never shrinks — buffers
+    /// already in circulation should always find their way back).
+    pub fn ensure_retention(&self, n: usize) {
+        self.max_retained.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Take a cleared all-padding batch of shape `(bucket, k, l)`,
+    /// recycling a retained allocation when one is available.
+    pub fn get(&self, bucket: usize, k: usize, l: usize) -> PaddedBatch {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b.reset(bucket, k, l);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                PaddedBatch::with_shape(bucket, k, l)
+            }
+        }
+    }
+
+    /// Return a consumed batch's allocations to the pool.
+    pub fn put(&self, batch: PaddedBatch) {
+        let cap = self.max_retained.load(Ordering::Relaxed);
+        let mut free = self.free.lock().unwrap();
+        if free.len() < cap {
+            free.push(batch);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            retained: self.free.lock().unwrap().len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dirty_batch(bucket: usize, k: usize, l: usize) -> PaddedBatch {
+        let mut b = PaddedBatch::with_shape(bucket, k, l);
+        b.valid = bucket;
+        b.nnz = 999;
+        b.idx.fill(7);
+        b.val.fill(3.25);
+        b.lab.fill(5);
+        b.lab_w.fill(0.5);
+        b.smask.fill(1.0);
+        b.sample_ids.extend(0..bucket as u32);
+        b
+    }
+
+    #[test]
+    fn recycled_batches_are_clean() {
+        let pool = BufferPool::new(8);
+        pool.put(dirty_batch(32, 16, 4));
+        let b = pool.get(32, 16, 4);
+        assert_eq!(b.valid, 0);
+        assert_eq!(b.nnz, 0);
+        assert!(b.sample_ids.is_empty());
+        assert!(b.idx.iter().all(|&v| v == 0));
+        assert!(b.val.iter().all(|&v| v == 0.0));
+        assert!(b.lab.iter().all(|&v| v == 0));
+        assert!(b.lab_w.iter().all(|&v| v == 0.0));
+        assert!(b.smask.iter().all(|&v| v == 0.0));
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn reshapes_across_bucket_sizes() {
+        let pool = BufferPool::new(8);
+        pool.put(dirty_batch(128, 32, 8));
+        let b = pool.get(16, 4, 2);
+        assert_eq!(b.bucket, 16);
+        assert_eq!(b.idx.len(), 16 * 4);
+        assert_eq!(b.lab_w.len(), 16 * 2);
+        assert!(b.idx.iter().all(|&v| v == 0));
+        // Growing again also re-zeroes the reused capacity.
+        pool.put(b);
+        let big = pool.get(64, 8, 4);
+        assert_eq!(big.idx.len(), 64 * 8);
+        assert!(big.val.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn retention_grows_but_never_shrinks() {
+        let pool = BufferPool::new(1);
+        pool.ensure_retention(3);
+        pool.ensure_retention(2); // no-op: monotone
+        for _ in 0..5 {
+            pool.put(dirty_batch(4, 2, 1));
+        }
+        assert_eq!(pool.stats().retained, 3);
+    }
+
+    #[test]
+    fn retention_is_bounded_and_stats_track() {
+        let pool = BufferPool::new(2);
+        assert_eq!(pool.get(8, 2, 1).bucket, 8); // miss
+        for _ in 0..5 {
+            pool.put(dirty_batch(8, 2, 1));
+        }
+        let s = pool.stats();
+        assert_eq!(s.retained, 2, "retention cap enforced");
+        assert_eq!(s.misses, 1);
+        pool.get(8, 2, 1);
+        pool.get(8, 2, 1);
+        pool.get(8, 2, 1);
+        let s = pool.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.retained, 0);
+    }
+}

@@ -1,0 +1,325 @@
+//! nnz-aware batch composition: epoch-order generation per
+//! [`CompositionPolicy`] and the shared [`SampleStream`] every batch —
+//! prefetched or synchronous — draws its sample ids from.
+//!
+//! The stream is the single source of truth for epoch accounting: within
+//! one epoch every sample id is *emitted* at most once, no matter how many
+//! producers or queues sit downstream. Prefetched batches that get flushed
+//! (e.g. a device's bucket size changed before its queue drained) return
+//! their ids with [`SampleStream::unget`], carrying the per-draw epoch
+//! *runs* [`next_ids`](SampleStream::next_ids) reported — a draw may cross
+//! an epoch boundary, so each contiguous run of ids is tagged with its own
+//! epoch. Runs from the current epoch are re-queued (those ids will still
+//! be served exactly once this epoch); runs from completed epochs are
+//! dropped rather than risking a duplicate emission in the new epoch.
+
+use crate::config::CompositionPolicy;
+use crate::util::rng::Rng;
+
+use super::shard::ShardedDataset;
+use std::sync::Arc;
+
+/// Number of nnz-quantile strata the balanced policy interleaves. Any
+/// contiguous window of the epoch order of at least this length contains
+/// close to one sample per stratum, so batch nnz concentrates around
+/// `batch_size × mean_nnz` for every batch size on the bucket grid.
+const BALANCE_STRATA: usize = 16;
+
+/// Epoch-ordered sample-id stream over a sharded corpus.
+pub struct SampleStream {
+    data: Arc<ShardedDataset>,
+    policy: CompositionPolicy,
+    order: Vec<u32>,
+    cursor: usize,
+    /// Ids handed back by queue flushes, served before the cursor advances.
+    returned: Vec<u32>,
+    epoch: u64,
+    rng: Rng,
+    samples_served: u64,
+}
+
+impl SampleStream {
+    pub fn new(data: Arc<ShardedDataset>, policy: CompositionPolicy, seed: u64) -> SampleStream {
+        assert!(!data.is_empty(), "cannot stream an empty dataset");
+        let mut stream = SampleStream {
+            data,
+            policy,
+            order: Vec::new(),
+            cursor: 0,
+            returned: Vec::new(),
+            epoch: 0,
+            rng: Rng::new(seed),
+            samples_served: 0,
+        };
+        stream.build_order();
+        stream
+    }
+
+    pub fn policy(&self) -> CompositionPolicy {
+        self.policy
+    }
+
+    /// Draw the next `n` sample ids into `out` (cleared first). `runs`
+    /// (also cleared) receives the draw's epoch segmentation as
+    /// `(epoch, count)` pairs in id order — one pair normally, more when
+    /// the draw crosses epoch boundaries. Pass the runs back to [`unget`]
+    /// if the batch is flushed unconsumed.
+    ///
+    /// [`unget`]: SampleStream::unget
+    pub fn next_ids(&mut self, n: usize, out: &mut Vec<u32>, runs: &mut Vec<(u64, usize)>) {
+        out.clear();
+        runs.clear();
+        for _ in 0..n {
+            let id = match self.returned.pop() {
+                // Returned ids always belong to the current epoch (unget
+                // filters on that), so tagging with `self.epoch` is exact.
+                Some(id) => id,
+                None => {
+                    if self.cursor >= self.order.len() {
+                        self.epoch += 1;
+                        self.build_order();
+                    }
+                    let id = self.order[self.cursor];
+                    self.cursor += 1;
+                    id
+                }
+            };
+            match runs.last_mut() {
+                Some((e, c)) if *e == self.epoch => *c += 1,
+                _ => runs.push((self.epoch, 1)),
+            }
+            out.push(id);
+        }
+        self.samples_served += n as u64;
+    }
+
+    /// Return the unconsumed ids of a flushed prefetch batch, with the
+    /// epoch runs its draw reported. Current-epoch runs are re-queued (the
+    /// ids will still be served exactly once this epoch); completed-epoch
+    /// runs are dropped — their epoch already emitted them, and
+    /// re-emitting now would double-serve the id in the current epoch.
+    pub fn unget(&mut self, ids: &[u32], runs: &[(u64, usize)]) {
+        debug_assert_eq!(runs.iter().map(|&(_, c)| c).sum::<usize>(), ids.len());
+        let mut off = 0usize;
+        for &(epoch, count) in runs {
+            if epoch == self.epoch {
+                self.returned.extend_from_slice(&ids[off..off + count]);
+                self.samples_served = self.samples_served.saturating_sub(count as u64);
+            }
+            off += count;
+        }
+    }
+
+    /// Fraction of the current epoch consumed.
+    pub fn epoch_progress(&self) -> f64 {
+        let pending = self.returned.len();
+        (self.cursor.saturating_sub(pending)) as f64 / self.order.len() as f64
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn samples_served(&self) -> u64 {
+        self.samples_served
+    }
+
+    fn build_order(&mut self) {
+        let n = self.data.len() as u32;
+        let mut ids: Vec<u32> = (0..n).collect();
+        // Shuffle first so nnz ties land in random order under every policy.
+        self.rng.shuffle(&mut ids);
+        match self.policy {
+            CompositionPolicy::Shuffled => {}
+            CompositionPolicy::NnzSorted => {
+                ids.sort_by_key(|&i| std::cmp::Reverse(self.data.nnz(i as usize)));
+            }
+            CompositionPolicy::NnzBalanced => {
+                ids = balance_by_nnz(ids, &self.data);
+            }
+        }
+        self.order = ids;
+        self.cursor = 0;
+    }
+}
+
+/// Stratified interleave: sort by nnz, cut into [`BALANCE_STRATA`]
+/// quantile strata, then merge the strata at evenly spaced fractional
+/// positions (error-diffusion style). Consecutive windows of the result
+/// mix all quantiles, so per-batch total nnz hugs `b × mean_nnz`.
+fn balance_by_nnz(mut ids: Vec<u32>, data: &ShardedDataset) -> Vec<u32> {
+    let n = ids.len();
+    if n <= 2 {
+        return ids;
+    }
+    ids.sort_by_key(|&i| data.nnz(i as usize));
+    let strata = BALANCE_STRATA.min(n);
+    let stratum_size = n.div_ceil(strata);
+    let mut keyed: Vec<(f64, u32)> = Vec::with_capacity(n);
+    for (s, chunk) in ids.chunks(stratum_size).enumerate() {
+        let len = chunk.len() as f64;
+        for (j, &id) in chunk.iter().enumerate() {
+            // Fractional emission position within the epoch; the tiny
+            // stratum-indexed epsilon makes the sort total and stable
+            // across strata of equal length.
+            keyed.push(((j as f64 + 0.5) / len + s as f64 * 1e-12, id));
+        }
+    }
+    keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    keyed.into_iter().map(|(_, id)| id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::synthetic::Generator;
+
+    fn heavy_tailed(n: usize) -> Arc<ShardedDataset> {
+        let dims = ModelDims { features: 512, hidden: 8, classes: 32, max_nnz: 64, max_labels: 4 };
+        let cfg = DataConfig {
+            train_samples: n,
+            avg_nnz: 10.0,
+            nnz_sigma: 1.2, // heavy tail: nnz spans ~1..64
+            ..Default::default()
+        };
+        let ds = Generator::new(&dims, &cfg).generate(n, 1);
+        Arc::new(ShardedDataset::from_dataset(&ds, 128))
+    }
+
+    fn epoch_ids(stream: &mut SampleStream, n: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        let mut runs = Vec::new();
+        while out.len() < n {
+            stream.next_ids(25.min(n - out.len()), &mut buf, &mut runs);
+            out.extend_from_slice(&buf);
+        }
+        out
+    }
+
+    #[test]
+    fn every_policy_emits_each_id_once_per_epoch() {
+        let data = heavy_tailed(400);
+        for policy in CompositionPolicy::all() {
+            let mut stream = SampleStream::new(data.clone(), policy, 7);
+            let ids = epoch_ids(&mut stream, 400);
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 400, "{policy:?} epoch must cover every sample once");
+            assert_eq!(stream.epoch(), 0, "epoch 0 not over until sample 401");
+            // The next draw starts epoch 1 and re-covers everything.
+            let ids2 = epoch_ids(&mut stream, 400);
+            let mut sorted2 = ids2.clone();
+            sorted2.sort_unstable();
+            sorted2.dedup();
+            assert_eq!(sorted2.len(), 400, "{policy:?} epoch 1 re-covers the corpus");
+            assert_eq!(stream.epoch(), 1);
+        }
+    }
+
+    #[test]
+    fn unget_reserves_ids_within_the_epoch() {
+        let data = heavy_tailed(100);
+        let mut stream = SampleStream::new(data, CompositionPolicy::Shuffled, 3);
+        let mut buf = Vec::new();
+        let mut runs = Vec::new();
+        stream.next_ids(10, &mut buf, &mut runs);
+        assert_eq!(runs, vec![(0, 10)]);
+        let flushed = buf.clone();
+        stream.unget(&flushed, &runs);
+        // The whole epoch still comes out exactly once.
+        let ids = epoch_ids(&mut stream, 100);
+        let mut sorted = ids;
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+
+    #[test]
+    fn stale_epoch_unget_is_dropped() {
+        let data = heavy_tailed(50);
+        let mut stream = SampleStream::new(data, CompositionPolicy::Shuffled, 5);
+        let mut buf = Vec::new();
+        let mut runs = Vec::new();
+        stream.next_ids(10, &mut buf, &mut runs);
+        let held = buf.clone();
+        let held_runs = runs.clone();
+        epoch_ids(&mut stream, 40); // finish epoch 0
+        stream.next_ids(5, &mut buf, &mut runs); // now in epoch 1
+        stream.unget(&held, &held_runs);
+        // Epoch 1 must still be duplicate-free.
+        let mut seen: Vec<u32> = buf.clone();
+        seen.extend(epoch_ids(&mut stream, 45));
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seen.len(), "stale unget leaked a duplicate into epoch 1");
+    }
+
+    #[test]
+    fn boundary_spanning_flush_requeues_only_current_epoch_ids() {
+        // 50-sample corpus; draw 45, then a 10-draw that spans the
+        // boundary (5 from epoch 0, 5 from epoch 1). Flushing that batch
+        // must re-queue ONLY the epoch-1 ids — epoch 1 then still serves
+        // every id exactly once, and epoch 0's tail is dropped, not
+        // double-served.
+        let data = heavy_tailed(50);
+        let mut stream = SampleStream::new(data, CompositionPolicy::Shuffled, 9);
+        epoch_ids(&mut stream, 45);
+        let mut buf = Vec::new();
+        let mut runs = Vec::new();
+        stream.next_ids(10, &mut buf, &mut runs);
+        assert_eq!(runs, vec![(0, 5), (1, 5)], "draw must report the epoch split");
+        let epoch1_part: Vec<u32> = buf[5..].to_vec();
+        stream.unget(&buf, &runs);
+
+        // Epoch 1: 50 distinct ids total, including the re-queued five.
+        let e1 = epoch_ids(&mut stream, 50);
+        let mut sorted = e1.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50, "epoch 1 must cover the corpus exactly once");
+        // The re-queued ids come back first (LIFO returned pile).
+        for id in epoch1_part {
+            assert!(e1[..5].contains(&id), "re-queued epoch-1 id {id} must be served first");
+        }
+        assert_eq!(stream.epoch(), 1);
+    }
+
+    #[test]
+    fn balanced_order_flattens_windowed_nnz() {
+        let data = heavy_tailed(1024);
+        let window = 64usize;
+        let cv = |policy: CompositionPolicy| {
+            let mut stream = SampleStream::new(data.clone(), policy, 11);
+            let ids = epoch_ids(&mut stream, 1024);
+            let sums: Vec<f64> = ids
+                .chunks(window)
+                .map(|c| c.iter().map(|&i| data.nnz(i as usize) as f64).sum())
+                .collect();
+            let mean = sums.iter().sum::<f64>() / sums.len() as f64;
+            let var =
+                sums.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / sums.len() as f64;
+            var.sqrt() / mean
+        };
+        let shuffled = cv(CompositionPolicy::Shuffled);
+        let balanced = cv(CompositionPolicy::NnzBalanced);
+        let sorted = cv(CompositionPolicy::NnzSorted);
+        assert!(
+            balanced < shuffled * 0.5,
+            "balanced CV {balanced:.4} should be well under shuffled {shuffled:.4}"
+        );
+        assert!(sorted > shuffled, "sorted is the stress policy: {sorted:.4} vs {shuffled:.4}");
+    }
+
+    #[test]
+    fn epochs_reshuffle_between_iterations() {
+        let data = heavy_tailed(200);
+        let mut stream = SampleStream::new(data, CompositionPolicy::Shuffled, 13);
+        let e0 = epoch_ids(&mut stream, 200);
+        let e1 = epoch_ids(&mut stream, 200);
+        assert_ne!(e0, e1, "epochs must reshuffle");
+    }
+}

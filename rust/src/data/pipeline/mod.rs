@@ -1,0 +1,31 @@
+//! The sparse data plane: sharded ingestion, async prefetch, and nnz-aware
+//! batch composition (the producer/consumer layer between datasets and the
+//! coordinator).
+//!
+//! * [`shard`] — [`ShardedDataset`]: the corpus as bounded CSR shards,
+//!   each with an nnz-histogram manifest; loadable shard-by-shard from
+//!   libSVM files instead of whole-corpus.
+//! * [`buffer_pool`] — [`BufferPool`]: recycles
+//!   [`PaddedBatch`](crate::data::PaddedBatch) allocations so the hot path
+//!   stops re-`vec!`-ing four buffers per batch.
+//! * [`compose`] — [`SampleStream`]: epoch-exact sample-id emission under a
+//!   [`CompositionPolicy`](crate::config::CompositionPolicy) (`Shuffled` /
+//!   `NnzBalanced` / `NnzSorted`).
+//! * [`plane`] — [`DataPlane`]: bounded per-device prefetch queues filled
+//!   by background producers (threaded engine) or synchronous assembly
+//!   (deterministic virtual-time engine), with starvation / flush /
+//!   truncation counters feeding metrics.
+//!
+//! The paper's core observation is that per-batch nnz variance is what
+//! destabilizes heterogeneous training; this subsystem makes batch *cost*
+//! a controlled quantity instead of a measured afterthought.
+
+pub mod buffer_pool;
+pub mod compose;
+pub mod plane;
+pub mod shard;
+
+pub use buffer_pool::{BufferPool, PoolStats};
+pub use compose::SampleStream;
+pub use plane::{DataPlane, PipelineStats};
+pub use shard::{ShardMeta, ShardedDataset, NNZ_HIST_BUCKETS};

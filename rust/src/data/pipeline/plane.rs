@@ -1,0 +1,574 @@
+//! The [`DataPlane`]: the producer/consumer boundary between datasets and
+//! the coordinator.
+//!
+//! Consumers (the execution engines) pull [`PaddedBatch`]es per device
+//! slot; batches come either from bounded per-slot prefetch queues filled
+//! by background producer threads (the threaded real-time engine) or from
+//! synchronous assembly on the calling thread (the virtual-time engine,
+//! which must stay deterministic — producer interleaving would perturb the
+//! sample→device routing). Both paths draw ids from one [`SampleStream`]
+//! (epoch accounting, composition policy) and lease buffers from one
+//! [`BufferPool`] (allocation recycling); consumed batches come back via
+//! [`DataPlane::recycle`].
+//!
+//! Queue protocol: [`DataPlane::begin_window`] declares the per-slot bucket
+//! sizes for the next mega-batch. Queues whose bucket changed are flushed —
+//! their sample ids go back to the stream (per-epoch-run filtering, see
+//! `compose.rs`) and their buffers to the pool. The consumer hot path never
+//! blocks: an empty queue counts a *starvation* event and falls back to
+//! synchronous assembly, so prefetch is a throughput optimization, never a
+//! correctness dependency.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::{CompositionPolicy, ModelDims, PipelineConfig};
+use crate::data::batcher::{pad_sample_into, PaddedBatch};
+
+use super::buffer_pool::{BufferPool, PoolStats};
+use super::compose::SampleStream;
+use super::shard::ShardedDataset;
+
+/// Cumulative data-plane counters (snapshot via [`DataPlane::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Batches served straight from a prefetch queue.
+    pub prefetched: u64,
+    /// Batches assembled synchronously on the consumer thread.
+    pub synchronous: u64,
+    /// Consumer hits on an empty prefetch queue (starvation events).
+    pub starved: u64,
+    /// Prefetched batches flushed by a bucket reconfiguration.
+    pub flushed: u64,
+    /// Features dropped because samples exceeded `max_nnz`.
+    pub truncated_features: u64,
+    /// Buffer-pool counters.
+    pub pool: PoolStats,
+}
+
+/// Epoch segmentation of one batch's id draw (see `SampleStream::next_ids`).
+type EpochRuns = Vec<(u64, usize)>;
+
+struct SlotQueue {
+    /// Bucket size this queue prefetches for (0 = unconfigured, idle).
+    bucket: usize,
+    /// Ready batches with their draw's epoch runs (for unget on flush).
+    ready: VecDeque<(PaddedBatch, EpochRuns)>,
+    /// Producer reservations currently being assembled for this slot.
+    pending: usize,
+}
+
+impl SlotQueue {
+    fn idle() -> SlotQueue {
+        SlotQueue { bucket: 0, ready: VecDeque::new(), pending: 0 }
+    }
+}
+
+struct Shared {
+    data: Arc<ShardedDataset>,
+    dims: ModelDims,
+    depth: usize,
+    stream: Mutex<SampleStream>,
+    pool: BufferPool,
+    slots: Mutex<Vec<SlotQueue>>,
+    /// Producers park here when every queue is full (or none configured).
+    work: Condvar,
+    shutdown: AtomicBool,
+    prefetched: AtomicU64,
+    synchronous: AtomicU64,
+    starved: AtomicU64,
+    flushed: AtomicU64,
+    truncated: AtomicU64,
+    truncation_warned: AtomicBool,
+}
+
+impl Shared {
+    /// Draw `valid` ids and assemble them into a pooled `(bucket, K, L)`
+    /// batch. The stream lock is held only for the id draw; padding — the
+    /// expensive part — runs outside it so producers overlap.
+    fn assemble(&self, bucket: usize, valid: usize) -> (PaddedBatch, EpochRuns) {
+        let k = self.dims.max_nnz;
+        let l = self.dims.max_labels;
+        let mut batch = self.pool.get(bucket, k, l);
+        let mut ids = Vec::with_capacity(valid);
+        let mut runs = EpochRuns::new();
+        self.stream.lock().unwrap().next_ids(valid, &mut ids, &mut runs);
+        let mut truncated = 0usize;
+        for (row, &id) in ids.iter().enumerate() {
+            let s = self.data.sample(id as usize);
+            truncated += pad_sample_into(&mut batch, row, id, &s, k, l);
+        }
+        batch.valid = valid;
+        if truncated > 0 {
+            self.truncated.fetch_add(truncated as u64, Ordering::Relaxed);
+            if !self.truncation_warned.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[data-plane] warning: samples exceed model.max_nnz={k}; feature tails are \
+                     being truncated (count surfaced in metrics as truncated_features)"
+                );
+            }
+        }
+        batch.shape_checks(&self.dims);
+        (batch, runs)
+    }
+
+    /// Give a flushed batch's ids back to the stream and its buffers to
+    /// the pool. Call WITHOUT holding the slots lock (lock order: slots
+    /// before stream never both).
+    fn abandon(&self, batch: PaddedBatch, runs: EpochRuns) {
+        self.flushed.fetch_add(1, Ordering::Relaxed);
+        self.stream.lock().unwrap().unget(&batch.sample_ids, &runs);
+        self.pool.put(batch);
+    }
+}
+
+/// Handle the trainer owns and the engines consume from.
+pub struct DataPlane {
+    shared: Arc<Shared>,
+    producers: Vec<std::thread::JoinHandle<()>>,
+    /// Mean nnz per sample after `max_nnz` clamping, computed once at
+    /// construction (one corpus scan).
+    nnz_estimate: f64,
+}
+
+impl DataPlane {
+    /// Build a plane over a sharded corpus. `producer_threads` > 0 enables
+    /// async prefetch; 0 keeps every batch assembly on the consumer thread
+    /// (required for deterministic virtual-time runs — the trainer passes 0
+    /// whenever `runtime.mode = "virtual"`).
+    pub fn new(
+        data: Arc<ShardedDataset>,
+        dims: &ModelDims,
+        pcfg: &PipelineConfig,
+        producer_threads: usize,
+        seed: u64,
+    ) -> DataPlane {
+        let stream = SampleStream::new(data.clone(), pcfg.policy, seed);
+        // Initial retention guess; `begin_window` grows it to the real
+        // working set once the slot count is known.
+        let retain = pcfg.queue_depth * 4 + producer_threads + 4;
+        let shared = Arc::new(Shared {
+            data,
+            dims: dims.clone(),
+            depth: pcfg.queue_depth,
+            stream: Mutex::new(stream),
+            pool: BufferPool::new(retain),
+            slots: Mutex::new(Vec::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            prefetched: AtomicU64::new(0),
+            synchronous: AtomicU64::new(0),
+            starved: AtomicU64::new(0),
+            flushed: AtomicU64::new(0),
+            truncated: AtomicU64::new(0),
+            truncation_warned: AtomicBool::new(false),
+        });
+        let producers = (0..producer_threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("data-producer-{i}"))
+                    .spawn(move || producer_main(shared, i))
+                    .expect("spawning data-plane producer")
+            })
+            .collect();
+        let nnz_estimate = shared.data.mean_nnz_clamped(shared.dims.max_nnz);
+        DataPlane { shared, producers, nnz_estimate }
+    }
+
+    /// Synchronous plane with defaults except the policy — test/tool sugar.
+    pub fn new_sync(
+        data: Arc<ShardedDataset>,
+        dims: &ModelDims,
+        policy: CompositionPolicy,
+        seed: u64,
+    ) -> DataPlane {
+        let pcfg = PipelineConfig { policy, ..PipelineConfig::default() };
+        DataPlane::new(data, dims, &pcfg, 0, seed)
+    }
+
+    /// True when producer threads are prefetching.
+    pub fn is_async(&self) -> bool {
+        !self.producers.is_empty()
+    }
+
+    /// Declare the per-slot bucket sizes for the next dispatch window
+    /// (engines call this at every mega-batch start). Queues whose bucket
+    /// changed are flushed; their ids return to the stream.
+    pub fn begin_window(&self, buckets: &[usize]) {
+        // Retain enough buffers for every queue at full depth plus one
+        // in-flight batch per slot, producer, and consumer.
+        self.shared.pool.ensure_retention(
+            buckets.len() * (self.shared.depth + 2) + self.producers.len() + 4,
+        );
+        let mut flushed: Vec<(PaddedBatch, EpochRuns)> = Vec::new();
+        {
+            let mut slots = self.shared.slots.lock().unwrap();
+            if slots.len() > buckets.len() {
+                for q in slots.drain(buckets.len()..) {
+                    flushed.extend(q.ready);
+                }
+            }
+            while slots.len() < buckets.len() {
+                slots.push(SlotQueue::idle());
+            }
+            for (q, &b) in slots.iter_mut().zip(buckets) {
+                if q.bucket != b {
+                    flushed.extend(q.ready.drain(..));
+                    q.bucket = b;
+                }
+            }
+        }
+        for (batch, runs) in flushed {
+            self.shared.abandon(batch, runs);
+        }
+        self.shared.work.notify_all();
+    }
+
+    /// Pull the next batch for device slot `slot`: `valid` real samples
+    /// padded to `bucket`. Full batches come from the slot's prefetch
+    /// queue when possible; partial batches (the dynamic budget tail) and
+    /// starved or synchronous paths assemble on this thread.
+    pub fn next_batch_for(&self, slot: usize, bucket: usize, valid: usize) -> PaddedBatch {
+        assert!(valid >= 1 && valid <= bucket, "need 1 <= valid({valid}) <= bucket({bucket})");
+        if self.is_async() && valid == bucket {
+            let popped = {
+                let mut slots = self.shared.slots.lock().unwrap();
+                match slots.get_mut(slot) {
+                    Some(q) if q.bucket == bucket => match q.ready.pop_front() {
+                        Some((batch, _runs)) => Some(batch),
+                        None => {
+                            self.shared.starved.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                    },
+                    _ => None,
+                }
+            };
+            if let Some(batch) = popped {
+                self.shared.prefetched.fetch_add(1, Ordering::Relaxed);
+                self.shared.work.notify_one();
+                return batch;
+            }
+        }
+        self.shared.synchronous.fetch_add(1, Ordering::Relaxed);
+        self.shared.assemble(bucket, valid).0
+    }
+
+    /// Slot-less synchronous pull (eval tooling, benches).
+    pub fn next_batch(&self, bucket: usize, valid: usize) -> PaddedBatch {
+        assert!(valid >= 1 && valid <= bucket, "need 1 <= valid({valid}) <= bucket({bucket})");
+        self.shared.synchronous.fetch_add(1, Ordering::Relaxed);
+        self.shared.assemble(bucket, valid).0
+    }
+
+    /// Return a consumed batch's allocations to the buffer pool.
+    pub fn recycle(&self, batch: PaddedBatch) {
+        self.shared.pool.put(batch);
+    }
+
+    /// Mean nnz per sample after `max_nnz` clamping — the per-batch cost
+    /// estimate the dispatch plan consumes (computed once at construction).
+    pub fn nnz_estimate(&self) -> f64 {
+        self.nnz_estimate
+    }
+
+    pub fn epoch_progress(&self) -> f64 {
+        self.shared.stream.lock().unwrap().epoch_progress()
+    }
+
+    pub fn samples_served(&self) -> u64 {
+        self.shared.stream.lock().unwrap().samples_served()
+    }
+
+    pub fn policy(&self) -> CompositionPolicy {
+        self.shared.stream.lock().unwrap().policy()
+    }
+
+    pub fn data(&self) -> &Arc<ShardedDataset> {
+        &self.shared.data
+    }
+
+    /// Current prefetch-queue fill per slot (telemetry; also the hook
+    /// deterministic tests use to wait for producer quiescence — with a
+    /// single producer, every queue at full depth implies nothing is
+    /// in flight).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared.slots.lock().unwrap().iter().map(|q| q.ready.len()).collect()
+    }
+
+    pub fn stats(&self) -> PipelineStats {
+        PipelineStats {
+            prefetched: self.shared.prefetched.load(Ordering::Relaxed),
+            synchronous: self.shared.synchronous.load(Ordering::Relaxed),
+            starved: self.shared.starved.load(Ordering::Relaxed),
+            flushed: self.shared.flushed.load(Ordering::Relaxed),
+            truncated_features: self.shared.truncated.load(Ordering::Relaxed),
+            pool: self.shared.pool.stats(),
+        }
+    }
+}
+
+impl Drop for DataPlane {
+    fn drop(&mut self) {
+        // The store must happen under the slots mutex: a producer that has
+        // checked `shutdown` but not yet parked holds that mutex, so
+        // serializing on it guarantees every producer either sees the flag
+        // or is already inside `wait` when the notify lands (no lost
+        // wakeup, no hung join).
+        {
+            let _slots = self.shared.slots.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+        }
+        self.shared.work.notify_all();
+        for h in self.producers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Producer loop: claim the least-filled configured queue, assemble one
+/// full batch for it outside the locks, deliver (or abandon if the slot
+/// was reconfigured mid-assembly).
+fn producer_main(shared: Arc<Shared>, _id: usize) {
+    loop {
+        // ---- claim a slot needing work ------------------------------------
+        let claim = {
+            let mut slots = shared.slots.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                let mut best: Option<(usize, usize, usize)> = None; // (fill, slot, bucket)
+                for (i, q) in slots.iter().enumerate() {
+                    if q.bucket == 0 {
+                        continue;
+                    }
+                    let fill = q.ready.len() + q.pending;
+                    if fill < shared.depth && best.map(|(f, _, _)| fill < f).unwrap_or(true) {
+                        best = Some((fill, i, q.bucket));
+                    }
+                }
+                match best {
+                    Some((_, slot, bucket)) => {
+                        slots[slot].pending += 1;
+                        break (slot, bucket);
+                    }
+                    None => {
+                        slots = shared.work.wait(slots).unwrap();
+                    }
+                }
+            }
+        };
+        let (slot, bucket) = claim;
+
+        // ---- assemble outside the slot lock --------------------------------
+        let (batch, runs) = shared.assemble(bucket, bucket);
+
+        // ---- deliver (or abandon on reconfigure/shutdown) ------------------
+        let undelivered = {
+            let mut slots = shared.slots.lock().unwrap();
+            match slots.get_mut(slot) {
+                Some(q) => {
+                    q.pending = q.pending.saturating_sub(1);
+                    if q.bucket == bucket && !shared.shutdown.load(Ordering::Relaxed) {
+                        q.ready.push_back((batch, runs));
+                        None
+                    } else {
+                        Some((batch, runs))
+                    }
+                }
+                None => Some((batch, runs)),
+            }
+        };
+        if let Some((batch, runs)) = undelivered {
+            // Slot vanished or was re-bucketed mid-assembly: give the ids
+            // back to the stream and the buffers to the pool.
+            shared.abandon(batch, runs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::synthetic::Generator;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 16, max_labels: 4 }
+    }
+
+    fn sharded(n: usize) -> Arc<ShardedDataset> {
+        let cfg = DataConfig { train_samples: n, avg_nnz: 6.0, ..Default::default() };
+        let ds = Generator::new(&dims(), &cfg).generate(n, 1);
+        Arc::new(ShardedDataset::from_dataset(&ds, 64))
+    }
+
+    #[test]
+    fn sync_plane_batches_match_batcher_semantics() {
+        let data = sharded(120);
+        let dims = dims();
+        let plane = DataPlane::new_sync(data.clone(), &dims, CompositionPolicy::Shuffled, 1);
+        let b = plane.next_batch_for(0, 32, 20);
+        assert_eq!(b.bucket, 32);
+        assert_eq!(b.valid, 20);
+        assert_eq!(b.sample_ids.len(), 20);
+        assert_eq!(b.smask.iter().filter(|&&m| m == 1.0).count(), 20);
+        b.shape_checks(&dims);
+        let expected: usize =
+            b.sample_ids.iter().map(|&id| data.nnz(id as usize).min(dims.max_nnz)).sum();
+        assert_eq!(b.nnz, expected);
+        assert_eq!(plane.stats().synchronous, 1);
+        assert_eq!(plane.stats().prefetched, 0);
+        assert!(!plane.is_async());
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused() {
+        let data = sharded(100);
+        let plane = DataPlane::new_sync(data, &dims(), CompositionPolicy::Shuffled, 2);
+        let b = plane.next_batch_for(0, 16, 16);
+        plane.recycle(b);
+        let _b2 = plane.next_batch_for(0, 16, 16);
+        let s = plane.stats();
+        assert_eq!(s.pool.hits, 1, "second batch must recycle the first's buffers");
+        assert_eq!(s.pool.misses, 1);
+    }
+
+    /// Spin until every queue holds `depth` batches. With one producer,
+    /// full queues imply no assembly in flight, so the stream's emission
+    /// count is exactly `consumed + queued`.
+    fn wait_full(plane: &DataPlane, slots: usize, depth: usize) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let d = plane.queue_depths();
+            if d.len() == slots && d.iter().all(|&n| n == depth) {
+                return;
+            }
+            assert!(std::time::Instant::now() < deadline, "producer never filled: {d:?}");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn async_plane_prefetches_full_batches() {
+        let data = sharded(128);
+        let pcfg = PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 1,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 64,
+        };
+        let plane = DataPlane::new(data, &dims(), &pcfg, 1, 3);
+        assert!(plane.is_async());
+        plane.begin_window(&[16, 16]);
+        wait_full(&plane, 2, 2);
+        let b = plane.next_batch_for(0, 16, 16);
+        assert_eq!(b.valid, 16);
+        plane.recycle(b);
+        let s = plane.stats();
+        assert_eq!(s.prefetched, 1, "a full queue must serve the pop");
+        assert_eq!(s.starved, 0);
+    }
+
+    #[test]
+    fn flush_ungets_and_the_epoch_is_conserved() {
+        // One producer, two 16-slots over a 128-sample corpus. Consume 4
+        // batches, let the queues refill to 2+2, then flush everything by
+        // going idle: emissions are exactly 64 consumed + 64 queued = one
+        // whole epoch, the flush ungets the queued 64, and a synchronous
+        // drain must re-serve exactly those 64 — every id once per epoch
+        // despite crossing producers, queues, and a flush.
+        let data = sharded(128);
+        let pcfg = PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 1,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 64,
+        };
+        let plane = DataPlane::new(data, &dims(), &pcfg, 1, 5);
+        plane.begin_window(&[16, 16]);
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..4 {
+            let b = plane.next_batch_for(i % 2, 16, 16);
+            for &id in &b.sample_ids {
+                *counts.entry(id).or_insert(0u32) += 1;
+            }
+            plane.recycle(b);
+        }
+        wait_full(&plane, 2, 2);
+        plane.begin_window(&[]); // idle: flush both queues, producer parks
+        assert_eq!(plane.stats().flushed, 4, "both queues flushed");
+        for _ in 0..4 {
+            let b = plane.next_batch(16, 16);
+            for &id in &b.sample_ids {
+                *counts.entry(id).or_insert(0) += 1;
+            }
+            plane.recycle(b);
+        }
+        assert_eq!(counts.len(), 128, "flush + unget must not lose samples");
+        assert!(counts.values().all(|&c| c == 1), "epoch served exactly once despite the flush");
+    }
+
+    #[test]
+    fn rebucketing_flushes_the_old_shape() {
+        let data = sharded(128);
+        let pcfg = PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 1,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 64,
+        };
+        let plane = DataPlane::new(data, &dims(), &pcfg, 1, 7);
+        plane.begin_window(&[16]);
+        wait_full(&plane, 1, 2);
+        plane.begin_window(&[32]);
+        assert_eq!(plane.stats().flushed, 2, "old-bucket batches flushed");
+        let b = plane.next_batch_for(0, 32, 32);
+        assert_eq!(b.bucket, 32, "post-reconfigure batches use the new bucket");
+        plane.recycle(b);
+    }
+
+    #[test]
+    fn partial_batches_fall_back_to_sync_assembly() {
+        let data = sharded(64);
+        let pcfg = PipelineConfig {
+            queue_depth: 2,
+            producer_threads: 1,
+            policy: CompositionPolicy::Shuffled,
+            shard_samples: 64,
+        };
+        let plane = DataPlane::new(data, &dims(), &pcfg, 1, 7);
+        plane.begin_window(&[16]);
+        let b = plane.next_batch_for(0, 16, 5);
+        assert_eq!(b.valid, 5);
+        assert!(plane.stats().synchronous >= 1);
+    }
+
+    #[test]
+    fn nnz_estimate_reads_the_manifest() {
+        let data = sharded(200);
+        let plane = DataPlane::new_sync(data.clone(), &dims(), CompositionPolicy::Shuffled, 9);
+        let est = plane.nnz_estimate();
+        assert!(est > 0.0);
+        assert!((est - data.mean_nnz_clamped(16)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shutdown_joins_producers_cleanly() {
+        let data = sharded(64);
+        let pcfg = PipelineConfig {
+            queue_depth: 4,
+            producer_threads: 3,
+            policy: CompositionPolicy::NnzBalanced,
+            shard_samples: 32,
+        };
+        let plane = DataPlane::new(data, &dims(), &pcfg, 3, 11);
+        plane.begin_window(&[16, 32, 16]);
+        let b = plane.next_batch_for(1, 32, 32);
+        plane.recycle(b);
+        drop(plane); // must not hang or panic
+    }
+}

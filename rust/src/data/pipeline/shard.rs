@@ -1,0 +1,281 @@
+//! Sharded ingestion: a corpus as a sequence of bounded CSR shards, each
+//! carrying an nnz-histogram manifest.
+//!
+//! Splitting the corpus buys three things: (1) ingestion never needs the
+//! whole corpus resident as one CSR (the libSVM reader materializes one
+//! shard at a time), (2) the per-shard manifests summarize nnz statistics —
+//! [`ShardedDataset::mean_nnz`] sums them instead of rescanning samples,
+//! and the histograms are the per-shard cost profile telemetry and future
+//! shard-placement decisions read (the *clamped* estimate feeding
+//! `DispatchPlan.nnz_estimate` still scans once, since clamping depends on
+//! `max_nnz`), and (3) shards are the natural unit for future distribution
+//! (DESIGN.md north star).
+//!
+//! Samples keep *global* ids (`0..len`) across shards so epoch-conservation
+//! properties and routing telemetry are shard-agnostic.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure};
+
+use crate::data::sparse::{DatasetBuilder, SampleView, SparseDataset};
+use crate::Result;
+
+/// Histogram buckets in the shard manifest: bucket `i` counts samples whose
+/// nnz falls in `[2^i, 2^(i+1))` (bucket 0 additionally catches nnz 0).
+pub const NNZ_HIST_BUCKETS: usize = 16;
+
+/// Per-shard nnz statistics, computed once at ingestion.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    pub samples: usize,
+    pub total_nnz: u64,
+    pub min_nnz: usize,
+    pub max_nnz: usize,
+    /// log2-bucketed nnz-per-sample histogram.
+    pub nnz_hist: [u32; NNZ_HIST_BUCKETS],
+}
+
+impl ShardMeta {
+    pub fn from_shard(ds: &SparseDataset) -> ShardMeta {
+        let mut meta = ShardMeta {
+            samples: ds.len(),
+            total_nnz: 0,
+            min_nnz: usize::MAX,
+            max_nnz: 0,
+            nnz_hist: [0; NNZ_HIST_BUCKETS],
+        };
+        for i in 0..ds.len() {
+            let nnz = ds.nnz(i);
+            meta.total_nnz += nnz as u64;
+            meta.min_nnz = meta.min_nnz.min(nnz);
+            meta.max_nnz = meta.max_nnz.max(nnz);
+            meta.nnz_hist[hist_bucket(nnz)] += 1;
+        }
+        if ds.is_empty() {
+            meta.min_nnz = 0;
+        }
+        meta
+    }
+
+    pub fn mean_nnz(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.total_nnz as f64 / self.samples as f64
+        }
+    }
+}
+
+/// Which histogram bucket an nnz count lands in.
+pub fn hist_bucket(nnz: usize) -> usize {
+    if nnz <= 1 {
+        0
+    } else {
+        ((usize::BITS - 1 - nnz.leading_zeros()) as usize).min(NNZ_HIST_BUCKETS - 1)
+    }
+}
+
+/// A corpus stored as bounded shards with per-shard manifests. Immutable
+/// after construction; shared across producer threads via `Arc`.
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    pub num_features: usize,
+    pub num_classes: usize,
+    shards: Vec<SparseDataset>,
+    metas: Vec<ShardMeta>,
+    /// Global sample id of each shard's first sample, plus the total at the
+    /// end: shard of global id `g` = partition point over this table.
+    starts: Vec<usize>,
+}
+
+impl ShardedDataset {
+    /// Split an in-memory dataset into shards of at most `shard_samples`
+    /// samples (the synthetic-generator path).
+    pub fn from_dataset(ds: &SparseDataset, shard_samples: usize) -> ShardedDataset {
+        assert!(shard_samples > 0, "shard_samples must be positive");
+        let mut shards = Vec::new();
+        let mut row = 0usize;
+        while row < ds.len() {
+            let take = (ds.len() - row).min(shard_samples);
+            let mut b = DatasetBuilder::new(ds.num_features, ds.num_classes);
+            for i in row..row + take {
+                let s = ds.sample(i);
+                b.push(s.indices, s.values, s.labels)
+                    .expect("resharding a valid dataset cannot fail");
+            }
+            shards.push(b.finish());
+            row += take;
+        }
+        Self::from_shards(shards, ds.num_features, ds.num_classes)
+            .expect("shards from one dataset are consistent")
+    }
+
+    /// Assemble from already-loaded shards (the libSVM shard reader path).
+    pub fn from_shards(
+        shards: Vec<SparseDataset>,
+        num_features: usize,
+        num_classes: usize,
+    ) -> Result<ShardedDataset> {
+        for s in &shards {
+            ensure!(
+                s.num_features == num_features && s.num_classes == num_classes,
+                "shard dimensions disagree with the corpus ({}x{} vs {num_features}x{num_classes})",
+                s.num_features,
+                s.num_classes
+            );
+        }
+        let metas: Vec<ShardMeta> = shards.iter().map(ShardMeta::from_shard).collect();
+        let mut starts = Vec::with_capacity(shards.len() + 1);
+        let mut acc = 0usize;
+        for s in &shards {
+            starts.push(acc);
+            acc += s.len();
+        }
+        starts.push(acc);
+        if acc == 0 {
+            bail!("sharded dataset has no samples");
+        }
+        Ok(ShardedDataset { num_features, num_classes, shards, metas, starts })
+    }
+
+    /// Shard-by-shard libSVM ingestion (XML-repository header format).
+    pub fn from_libsvm(path: &Path, shard_samples: usize) -> Result<ShardedDataset> {
+        let (shards, num_features, num_classes) =
+            crate::data::libsvm::read_shards(path, shard_samples)?;
+        Self::from_shards(shards, num_features, num_classes)
+    }
+
+    pub fn len(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &SparseDataset {
+        &self.shards[i]
+    }
+
+    /// The per-shard nnz manifests.
+    pub fn manifest(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    /// Locate a global sample id: (shard index, offset within the shard).
+    fn locate(&self, global: usize) -> (usize, usize) {
+        debug_assert!(global < self.len(), "sample {global} out of range");
+        // First shard whose start exceeds `global`, minus one.
+        let shard = self.starts.partition_point(|&s| s <= global) - 1;
+        (shard, global - self.starts[shard])
+    }
+
+    pub fn sample(&self, global: usize) -> SampleView<'_> {
+        let (s, off) = self.locate(global);
+        self.shards[s].sample(off)
+    }
+
+    pub fn nnz(&self, global: usize) -> usize {
+        let (s, off) = self.locate(global);
+        self.shards[s].nnz(off)
+    }
+
+    /// Corpus mean nnz per sample, straight off the manifests.
+    pub fn mean_nnz(&self) -> f64 {
+        let total: u64 = self.metas.iter().map(|m| m.total_nnz).sum();
+        total as f64 / self.len() as f64
+    }
+
+    /// Mean nnz per sample after clamping every sample to `max_nnz` — the
+    /// per-batch cost estimate the dispatch plan consumes (clamping mirrors
+    /// what padding actually feeds the device).
+    pub fn mean_nnz_clamped(&self, max_nnz: usize) -> f64 {
+        let total: u64 =
+            (0..self.len()).map(|i| self.nnz(i).min(max_nnz) as u64).sum();
+        total as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::synthetic::Generator;
+
+    fn corpus(n: usize) -> SparseDataset {
+        let dims = ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 24, max_labels: 4 };
+        let cfg =
+            DataConfig { train_samples: n, avg_nnz: 8.0, nnz_sigma: 0.9, ..Default::default() };
+        Generator::new(&dims, &cfg).generate(n, 1)
+    }
+
+    #[test]
+    fn sharding_preserves_every_sample_globally() {
+        let ds = corpus(250);
+        let sharded = ShardedDataset::from_dataset(&ds, 64);
+        assert_eq!(sharded.len(), 250);
+        assert_eq!(sharded.num_shards(), 4); // 64+64+64+58
+        assert_eq!(sharded.shard(3).len(), 58);
+        for i in 0..ds.len() {
+            assert_eq!(sharded.sample(i).indices, ds.sample(i).indices, "sample {i}");
+            assert_eq!(sharded.sample(i).labels, ds.sample(i).labels, "sample {i}");
+            assert_eq!(sharded.nnz(i), ds.nnz(i));
+        }
+    }
+
+    #[test]
+    fn manifests_summarize_shards() {
+        let ds = corpus(200);
+        let sharded = ShardedDataset::from_dataset(&ds, 100);
+        let manifest = sharded.manifest();
+        assert_eq!(manifest.len(), 2);
+        for (s, meta) in manifest.iter().enumerate() {
+            assert_eq!(meta.samples, 100);
+            let hist_total: u32 = meta.nnz_hist.iter().sum();
+            assert_eq!(hist_total as usize, meta.samples, "shard {s} histogram covers all samples");
+            assert!(meta.min_nnz <= meta.max_nnz);
+            assert!(meta.mean_nnz() > 0.0);
+        }
+        let total: u64 = manifest.iter().map(|m| m.total_nnz).sum();
+        assert_eq!(total as usize, ds.total_nnz());
+        assert!((sharded.mean_nnz() - ds.avg_nnz()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamped_mean_tracks_padding_cost() {
+        let ds = corpus(300);
+        let sharded = ShardedDataset::from_dataset(&ds, 128);
+        let clamped = sharded.mean_nnz_clamped(4);
+        assert!(clamped <= 4.0);
+        assert!(clamped <= sharded.mean_nnz());
+        assert!((sharded.mean_nnz_clamped(10_000) - sharded.mean_nnz()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_buckets_are_log2() {
+        assert_eq!(hist_bucket(0), 0);
+        assert_eq!(hist_bucket(1), 0);
+        assert_eq!(hist_bucket(2), 1);
+        assert_eq!(hist_bucket(3), 1);
+        assert_eq!(hist_bucket(4), 2);
+        assert_eq!(hist_bucket(1023), 9);
+        assert_eq!(hist_bucket(1024), 10);
+    }
+
+    #[test]
+    fn inconsistent_shards_rejected() {
+        let a = DatasetBuilder::new(10, 4);
+        let b = DatasetBuilder::new(20, 4);
+        let mut a = a;
+        a.push(&[1], &[1.0], &[0]).unwrap();
+        let mut b = b;
+        b.push(&[1], &[1.0], &[0]).unwrap();
+        assert!(ShardedDataset::from_shards(vec![a.finish(), b.finish()], 10, 4).is_err());
+        assert!(ShardedDataset::from_shards(vec![], 10, 4).is_err());
+    }
+}

@@ -5,7 +5,7 @@
 //! wins, ordering, activation frequencies) without baking in absolute
 //! numbers that depend on the host.
 
-use crate::config::{Config, DataProfile, Strategy};
+use crate::config::{CompositionPolicy, Config, DataProfile, Strategy};
 use crate::coordinator::trainer::TrainerOptions;
 use crate::data::synthetic::Generator;
 use crate::metrics::RunLog;
@@ -434,6 +434,61 @@ pub fn elastic(profile: DataProfile, backend: Backend) -> Result<ElasticOutcome>
         elastic_log.pool_events.len()
     );
     Ok(ElasticOutcome { static_log, elastic_log })
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline — beyond the paper: data-plane composition-policy comparison
+// ---------------------------------------------------------------------------
+
+pub struct PipelineOutcome {
+    /// One (policy name, log) per composition policy.
+    pub logs: Vec<(String, RunLog)>,
+}
+
+/// Compare the data plane's composition policies on a heavy-tailed corpus:
+/// same model, same strategy, same sample budget — only the batch
+/// composition differs. The headline column is the per-batch nnz CV
+/// (batch-cost dispersion), which `nnz_balanced` exists to crush; clock
+/// and accuracy show what that stability costs or buys end to end.
+pub fn pipeline(profile: DataProfile, backend: Backend) -> Result<PipelineOutcome> {
+    let mut logs = Vec::new();
+    for policy in CompositionPolicy::all() {
+        let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+        // Heavier tail than the stock profile so composition has real
+        // variance to work against.
+        cfg.data.nnz_sigma = 1.2;
+        cfg.data.pipeline.policy = policy;
+        apply_full_scale(&mut cfg);
+        cfg.validate()?;
+        let log = run_single(&cfg, backend, TrainerOptions::default())?;
+        logs.push((policy.name().to_string(), log));
+    }
+    let mut t = Table::new(&[
+        "policy", "nnz CV", "best P@1", "final P@1", "clock (s)", "starved", "pool hit%",
+    ]);
+    for (name, log) in &logs {
+        let last = log.rows.last().expect("runs produce rows");
+        let p = &last.pipeline;
+        let gets = p.pool_hits + p.pool_misses;
+        t.row(&[
+            name.clone(),
+            format!("{:.4}", log.mean_nnz_cv()),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            format!("{:.2}", last.clock),
+            p.starved.to_string(),
+            if gets == 0 {
+                "—".to_string()
+            } else {
+                format!("{:.1}", 100.0 * p.pool_hits as f64 / gets as f64)
+            },
+        ]);
+    }
+    t.print(&format!(
+        "Pipeline — batch composition policies on a heavy-tailed corpus ({})",
+        profile.name()
+    ));
+    Ok(PipelineOutcome { logs })
 }
 
 /// Config helper shared with `Config::from_overrides` users.

@@ -41,6 +41,31 @@ pub struct MegaBatchRow {
     pub merge_weights: Vec<f64>,
     /// Pool membership changes applied at this mega-batch boundary.
     pub pool_events: Vec<PoolEventRow>,
+    /// Mean true nnz per dispatched batch within this mega-batch.
+    pub nnz_mean: f64,
+    /// Coefficient of variation of per-batch nnz — the batch-cost
+    /// dispersion the data plane's composition policy controls.
+    pub nnz_cv: f64,
+    /// Cumulative data-plane counters at the end of this mega-batch.
+    pub pipeline: PipelineStatsRow,
+}
+
+/// Data-plane counters as logged per row (cumulative since run start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStatsRow {
+    /// Batches served from a prefetch queue.
+    pub prefetched: u64,
+    /// Batches assembled synchronously on the consumer thread.
+    pub synchronous: u64,
+    /// Consumer hits on an empty prefetch queue.
+    pub starved: u64,
+    /// Prefetched batches flushed by reconfiguration.
+    pub flushed: u64,
+    /// Features dropped by `max_nnz` truncation.
+    pub truncated_features: u64,
+    /// Batch-buffer pool hits / misses.
+    pub pool_hits: u64,
+    pub pool_misses: u64,
 }
 
 /// One pool-membership change (also aggregated run-wide in
@@ -104,15 +129,24 @@ impl RunLog {
         self.rows.iter().filter(|r| r.perturbed).count() as f64 / self.rows.len() as f64
     }
 
+    /// Run-average per-batch nnz coefficient of variation (the pipeline
+    /// experiment's headline number).
+    pub fn mean_nnz_cv(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.nnz_cv).sum::<f64>() / self.rows.len() as f64
+    }
+
     pub fn write_csv(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         let dev = self.rows.first().map(|r| r.batch_sizes.len()).unwrap_or(0);
-        let mut header =
-            "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,l2_per_param,active"
-                .to_string();
+        let mut header = "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,\
+                          l2_per_param,nnz_mean,nnz_cv,starved,truncated,active"
+            .to_string();
         for i in 0..dev {
             header.push_str(&format!(",b{i}"));
         }
@@ -125,7 +159,7 @@ impl RunLog {
         writeln!(f, "{header}")?;
         for r in &self.rows {
             let mut line = format!(
-                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8},{}",
+                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8},{:.2},{:.6},{},{},{}",
                 r.mega_batch,
                 r.clock,
                 r.samples,
@@ -134,6 +168,10 @@ impl RunLog {
                 r.perturbed as u8,
                 r.merge_time,
                 r.l2_per_param,
+                r.nnz_mean,
+                r.nnz_cv,
+                r.pipeline.starved,
+                r.pipeline.truncated_features,
                 r.active_devices.len()
             );
             for b in &r.batch_sizes {
@@ -179,6 +217,23 @@ impl RunLog {
                         (
                             "pool_events",
                             Json::arr(r.pool_events.iter().map(pool_event_json)),
+                        ),
+                        ("nnz_mean", Json::num(r.nnz_mean)),
+                        ("nnz_cv", Json::num(r.nnz_cv)),
+                        (
+                            "pipeline",
+                            Json::obj(vec![
+                                ("prefetched", Json::int(r.pipeline.prefetched as i64)),
+                                ("synchronous", Json::int(r.pipeline.synchronous as i64)),
+                                ("starved", Json::int(r.pipeline.starved as i64)),
+                                ("flushed", Json::int(r.pipeline.flushed as i64)),
+                                (
+                                    "truncated_features",
+                                    Json::int(r.pipeline.truncated_features as i64),
+                                ),
+                                ("pool_hits", Json::int(r.pipeline.pool_hits as i64)),
+                                ("pool_misses", Json::int(r.pipeline.pool_misses as i64)),
+                            ]),
                         ),
                     ])
                 })),
@@ -228,6 +283,17 @@ mod tests {
             active_devices: vec![0, 1],
             merge_weights: vec![0.55, 0.45],
             pool_events: Vec::new(),
+            nnz_mean: 1536.0,
+            nnz_cv: 0.12,
+            pipeline: PipelineStatsRow {
+                prefetched: 14,
+                synchronous: 4,
+                starved: 1,
+                flushed: 0,
+                truncated_features: 3,
+                pool_hits: 16,
+                pool_misses: 2,
+            },
         }
     }
 
@@ -243,6 +309,7 @@ mod tests {
         assert!((log.best_accuracy() - 0.32).abs() < 1e-12);
         assert!((log.perturbation_frequency() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(log.device_counts(), vec![2, 2, 2]);
+        assert!((log.mean_nnz_cv() - 0.12).abs() < 1e-12);
     }
 
     #[test]
@@ -256,6 +323,7 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("mega_batch,clock"));
         assert!(lines[0].contains(",active,"));
+        assert!(lines[0].contains(",nnz_mean,nnz_cv,starved,truncated,"));
         assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1"));
         assert_eq!(lines[1].split(',').count(), lines[0].split(',').count());
     }
@@ -283,5 +351,10 @@ mod tests {
         let row0 = &parsed.get("rows").as_arr().unwrap()[0];
         assert_eq!(row0.get("active_devices").as_arr().unwrap().len(), 2);
         assert_eq!(row0.get("pool_events").as_arr().unwrap().len(), 1);
+        assert!(row0.get("nnz_cv").as_f64().unwrap() > 0.0);
+        let pipeline = row0.get("pipeline");
+        assert_eq!(pipeline.get("prefetched").as_i64(), Some(14));
+        assert_eq!(pipeline.get("starved").as_i64(), Some(1));
+        assert_eq!(pipeline.get("pool_hits").as_i64(), Some(16));
     }
 }

@@ -1,17 +1,21 @@
 //! Integration over the coordinator without artifacts (hermetic): strategy
 //! end-to-end runs, engine cross-checks, and property tests on routing.
 
-use heterosparse::config::{Config, DataConfig, DeviceConfig, ExecMode, ModelDims, SgdConfig, Strategy};
+use heterosparse::config::{
+    CompositionPolicy, Config, DataConfig, DeviceConfig, ExecMode, ModelDims, SgdConfig, Strategy,
+};
 use heterosparse::coordinator::backend::RefBackend;
 use heterosparse::coordinator::engine_sim::SimEngine;
 use heterosparse::coordinator::plan::{DispatchMode, DispatchPlan, ExecutionEngine};
 use heterosparse::coordinator::trainer::TrainerOptions;
 use heterosparse::data::batcher::Batcher;
+use heterosparse::data::pipeline::{DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
 use heterosparse::harness::{run_single, Backend};
 use heterosparse::model::ModelState;
 use heterosparse::runtime::{CostModel, SimDevice};
 use heterosparse::util::prop;
+use std::sync::Arc;
 
 fn small_cfg(strategy: Strategy, mode: ExecMode) -> Config {
     let mut cfg = Config::default();
@@ -95,6 +99,7 @@ fn prop_dynamic_routing_conserves_budget() {
         seed: 5,
     };
 
+    let sharded = Arc::new(ShardedDataset::from_dataset(&ds, 100));
     let gen = prop::Pair(
         prop::U64Range { lo: 1, hi: 700 },
         prop::VecU64 { min_len: 3, max_len: 4, item_lo: 1, item_hi: 5 },
@@ -103,7 +108,8 @@ fn prop_dynamic_routing_conserves_budget() {
         let backend = RefBackend;
         let mut engine =
             SimEngine::new(&backend, SimDevice::fleet(&dev_cfg), CostModel::default());
-        let mut batcher = Batcher::new(&ds, &dims, *budget ^ 77);
+        let plane =
+            DataPlane::new_sync(sharded.clone(), &dims, CompositionPolicy::Shuffled, *budget ^ 77);
         let mut replicas = vec![ModelState::init(&dims, 1); 3];
         let batch_sizes: Vec<usize> = size_picks.iter().map(|&p| 8 * p as usize).collect();
         let plan = DispatchPlan {
@@ -113,9 +119,10 @@ fn prop_dynamic_routing_conserves_budget() {
             lrs: vec![0.05; 3],
             sample_budget: *budget as usize,
             crossbow_rate: None,
+            nnz_estimate: 3.0,
         };
         let report = engine
-            .run_mega_batch(&mut replicas, &mut batcher, &plan)
+            .run_mega_batch(&mut replicas, &plane, &plan)
             .map_err(|e| e.to_string())?;
         if report.total_samples() != *budget {
             return Err(format!(
@@ -293,7 +300,8 @@ fn threaded_engine_surfaces_worker_failure() {
     let template = ModelState::init(&dims, 1);
     let mut engine =
         ThreadedEngine::spawn(factory, SimDevice::fleet(&dev_cfg), &template).unwrap();
-    let mut batcher = Batcher::new(&ds, &dims, 4);
+    let sharded = Arc::new(ShardedDataset::from_dataset(&ds, 100));
+    let plane = DataPlane::new_sync(sharded, &dims, CompositionPolicy::Shuffled, 4);
     let mut replicas = vec![template.clone(); 2];
     let plan = DispatchPlan {
         mode: DispatchMode::Dynamic,
@@ -302,9 +310,10 @@ fn threaded_engine_surfaces_worker_failure() {
         lrs: vec![0.05; 2],
         sample_budget: 200,
         crossbow_rate: None,
+        nnz_estimate: 3.0,
     };
     let err = engine
-        .run_mega_batch(&mut replicas, &mut batcher, &plan)
+        .run_mega_batch(&mut replicas, &plane, &plan)
         .expect_err("worker fault must propagate");
     assert!(format!("{err:#}").contains("injected device fault"), "{err:#}");
 }
