@@ -10,7 +10,10 @@
 //!     overrides the path),
 //!   * Algorithm 1 + Algorithm 2 overhead (must be negligible vs a step),
 //!   * dispatch-plan recomputation + pool-event processing (the per-
-//!     mega-batch overhead the elastic pool adds to the hot path).
+//!     mega-batch overhead the elastic pool adds to the hot path),
+//!   * serving plane: snapshot publish/hot-swap/read cost and admission
+//!     batch-formation throughput — recorded to `BENCH_serve.json`
+//!     (`HS_BENCH_SERVE_OUT` overrides the path).
 
 use std::sync::Arc;
 
@@ -21,6 +24,7 @@ use heterosparse::data::pipeline::{BufferPool, DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
 use heterosparse::model::ModelState;
 use heterosparse::runtime::{CostModel, Runtime};
+use heterosparse::serve::{Admission, SnapshotRegistry};
 use heterosparse::util::bench::{bench_fn, fmt_ns, BenchResult};
 use heterosparse::util::json::Json;
 
@@ -67,7 +71,47 @@ fn main() {
     let pooled_bps = r.throughput(1.0);
     println!("{r}  ({pooled_bps:.0} allocs/s)");
     pipeline_results.push(("alloc_pooled".to_string(), r, pooled_bps));
-    write_pipeline_baseline(&pipeline_results);
+    append_baseline(
+        "BENCH_pipeline.json",
+        "HS_BENCH_OUT",
+        "perf_hotpath/pipeline",
+        &pipeline_results,
+    );
+
+    // ---- serving plane: snapshot hot-swap + admission formation ------------
+    // Publish cost is dominated by the one model clone per publish (the
+    // swap itself is a pointer store under a write lock); reads are an Arc
+    // clone under a read lock and must stay nanosecond-scale — they sit on
+    // the per-batch serving hot path.
+    let mut serve_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let registry = SnapshotRegistry::with_history_cap(2);
+    let model = ModelState::init(&cfg.model, 3);
+    let r = bench_fn("serve/registry_publish(hot-swap)", 3, 50, || {
+        registry.publish(model.clone(), Some(0), 0.0)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} publishes/s)");
+    serve_results.push(("registry_publish".to_string(), r, per_sec));
+    let r = bench_fn("serve/registry_current(read)", 100, 2000, || registry.current());
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} reads/s)");
+    serve_results.push(("registry_current".to_string(), r, per_sec));
+
+    let mut admission = Admission::new(sharded.clone(), &cfg.model, &cfg);
+    let b = cfg.serve_max_batch();
+    let mut next_id = 0u64;
+    let r = bench_fn(&format!("serve/admission_form(b={b})"), 5, 200, || {
+        for i in 0..b {
+            admission.push(next_id, ((next_id as usize + i) % 4_000) as u32, 0.0);
+            next_id += 1;
+        }
+        let formed = admission.pop_full(0.0).expect("queue is full");
+        admission.recycle(formed.batch);
+    });
+    let per_sec = r.throughput(b as f64);
+    println!("{r}  ({:.0} krequests/s)", per_sec / 1e3);
+    serve_results.push(("admission_form".to_string(), r, per_sec));
+    append_baseline("BENCH_serve.json", "HS_BENCH_SERVE_OUT", "perf_hotpath/serve", &serve_results);
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];
@@ -170,11 +214,16 @@ fn main() {
     }
 }
 
-/// Record the data-plane microbenchmarks to `BENCH_pipeline.json` (or
-/// `HS_BENCH_OUT`) so the throughput trajectory accumulates across PRs.
-/// Existing runs are preserved; this run is appended.
-fn write_pipeline_baseline(results: &[(String, BenchResult, f64)]) {
-    let path = std::env::var("HS_BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+/// Record a bench section to its baseline JSON (default path overridable
+/// via `env_var`) so the trajectory accumulates across PRs. Existing runs
+/// are preserved; this run is appended.
+fn append_baseline(
+    default_path: &str,
+    env_var: &str,
+    bench_label: &str,
+    results: &[(String, BenchResult, f64)],
+) {
+    let path = std::env::var(env_var).unwrap_or_else(|_| default_path.to_string());
     let path = std::path::Path::new(&path);
     let mut runs: Vec<Json> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
@@ -208,12 +257,12 @@ fn write_pipeline_baseline(results: &[(String, BenchResult, f64)]) {
         ),
     ]));
     let doc = Json::obj(vec![
-        ("bench", Json::str("perf_hotpath/pipeline")),
+        ("bench", Json::str(bench_label)),
         ("schema", Json::str("runs[].results[]{name,median_ns,p10_ns,p90_ns,per_sec}")),
         ("runs", Json::arr(runs)),
     ]);
     match std::fs::write(path, doc.to_string()) {
-        Ok(()) => println!("\npipeline baseline appended to {}", path.display()),
+        Ok(()) => println!("\n{bench_label} baseline appended to {}", path.display()),
         Err(e) => println!("\n(could not write {}: {e})", path.display()),
     }
 }

@@ -1,0 +1,115 @@
+//! Serve a trained model under bursty synthetic traffic.
+//!
+//! Trains briefly with the snapshot-publish hook on, then replays an
+//! open-loop bursty trace against the registry: requests micro-batch under
+//! the admission deadline, route speed-aware over the heterogeneous
+//! device fleet, and the run prints per-window telemetry plus a latency
+//! histogram. A checkpoint round-trips through the registry along the way,
+//! proving saved artifacts are servable without a training run.
+//!
+//! ```bash
+//! cargo run --release --example serve_traffic
+//! ```
+
+use std::sync::Arc;
+
+use heterosparse::config::{Config, ServePattern};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::data::pipeline::ShardedDataset;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::serve::{replay, ReplayOptions, SnapshotRegistry};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.model.features = 2048;
+    cfg.model.classes = 256;
+    cfg.data.train_samples = 8_000;
+    cfg.data.test_samples = 1_000;
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 6;
+    cfg.serve.rate = 6_000.0;
+    cfg.serve.duration = 2.0;
+    cfg.serve.window = 0.25;
+    cfg.validate()?;
+
+    // ---- train briefly, publishing every merged global model ---------------
+    let registry = Arc::new(SnapshotRegistry::new());
+    let opts = TrainerOptions { publish: Some(registry.clone()), ..Default::default() };
+    let train_log = run_single(&cfg, Backend::Auto, opts)?;
+    println!(
+        "trained {} mega-batches (best P@1 {:.4}); registry holds {} snapshots\n",
+        train_log.rows.len(),
+        train_log.best_accuracy(),
+        registry.history().len()
+    );
+
+    // ---- checkpoint → registry round trip ----------------------------------
+    let ckpt = std::env::temp_dir().join("hs-serve-traffic.ckpt");
+    heterosparse::model::checkpoint::save(&registry.current().unwrap().model, &ckpt)?;
+    let from_disk = SnapshotRegistry::new();
+    from_disk.load_checkpoint(&ckpt)?;
+    println!("checkpoint {} is servable (version {})\n", ckpt.display(), from_disk.latest_version());
+
+    // ---- replay a bursty trace against the final snapshot ------------------
+    let (train, _) = {
+        let gen = Generator::new(&cfg.model, &cfg.data);
+        (gen.generate(cfg.data.train_samples, 1), ())
+    };
+    let data = Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples));
+    let log = replay(
+        &cfg,
+        data,
+        &registry,
+        &RefBackend,
+        &ReplayOptions {
+            pattern: ServePattern::Bursty,
+            duration: cfg.serve.duration,
+            follow_clock: false,
+            train_log: None,
+            name: "bursty".to_string(),
+        },
+    )?;
+
+    println!("window  t (s)        completed  batches  p50 (ms)  p99 (ms)  peak queue");
+    for r in &log.rows {
+        println!(
+            "{:>6}  {:>4.2}–{:<4.2}  {:>9}  {:>7}  {:>8.3}  {:>8.3}  {:>10}",
+            r.window, r.start, r.end, r.completed, r.batches, r.p50_ms, r.p99_ms,
+            r.max_queue_depth
+        );
+    }
+
+    // ---- latency histogram --------------------------------------------------
+    // Log-spaced buckets from 0.25ms; stars scale to the largest bucket.
+    let latencies: Vec<f64> =
+        log.requests.iter().map(|r| (r.completion - r.arrival) * 1e3).collect();
+    let edges: Vec<f64> = (0..10).map(|i| 0.25 * 2f64.powi(i)).collect();
+    let mut counts = vec![0usize; edges.len() + 1];
+    for &l in &latencies {
+        counts[edges.partition_point(|&e| e <= l)] += 1;
+    }
+    let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+    println!("\nlatency histogram ({} requests):", latencies.len());
+    for (i, &c) in counts.iter().enumerate() {
+        let label = match i {
+            0 => format!("      < {:>7.2} ms", edges[0]),
+            i if i == edges.len() => format!("     >= {:>7.2} ms", edges[i - 1]),
+            _ => format!("{:>7.2}–{:<7.2} ms", edges[i - 1], edges[i]),
+        };
+        println!("{label}  {:<50} {c}", "#".repeat(c * 50 / peak));
+    }
+    println!(
+        "\np50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  throughput {:.0} req/s  served P@1 {:.4}",
+        log.latency_percentile_ms(50.0),
+        log.latency_percentile_ms(95.0),
+        log.latency_percentile_ms(99.0),
+        log.throughput(),
+        log.served_accuracy()
+    );
+
+    anyhow::ensure!(log.total_requests() > 5_000, "trace unexpectedly small");
+    anyhow::ensure!(log.latency_percentile_ms(99.0) > 0.0, "latency accounting broke");
+    Ok(())
+}

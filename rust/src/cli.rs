@@ -48,8 +48,11 @@ fn print_usage() {
          \x20 gen-data     write a synthetic XML dataset in libSVM format\n\
          \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
          \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12),\n\
-         \x20              the elastic-failover study (elastic), or the data-plane\n\
-         \x20              composition-policy comparison (pipeline)\n\
+         \x20              the elastic-failover study (elastic), the data-plane\n\
+         \x20              composition-policy comparison (pipeline), or the serving\n\
+         \x20              plane: per-pattern latency + train-while-serve (serve;\n\
+         \x20              --resume CKPT resumes training from the artifact and\n\
+         \x20              serves it as the warm-start snapshot)\n\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\n\
          OPTIONS:\n\
@@ -206,7 +209,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
     let p = parse_flags(args)?;
     let name = p.positional.first().context(
         "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a \
-         fig11b fig12 elastic pipeline",
+         fig11b fig12 elastic pipeline serve",
     )?;
     match name.as_str() {
         "table1" => {
@@ -247,6 +250,9 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         }
         "pipeline" => {
             experiments::pipeline(p.profile, p.backend)?;
+        }
+        "serve" => {
+            experiments::serve(p.profile, p.backend, p.resume.as_deref())?;
         }
         other => bail!("unknown experiment '{other}'"),
     }

@@ -374,6 +374,7 @@ pub struct Config {
     pub runtime: RuntimeConfig,
     pub strategy: StrategyConfig,
     pub elastic: ElasticConfig,
+    pub serve: ServeConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -507,6 +508,99 @@ impl ElasticConfig {
             .collect::<Result<Vec<_>>>()?;
         events.sort_by_key(|e| e.at_mb);
         Ok(events)
+    }
+}
+
+/// Arrival process of the synthetic serving workload (`[serve] pattern`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePattern {
+    /// Memoryless open-loop arrivals at the configured mean rate.
+    Poisson,
+    /// Periodic bursts: within each `burst_period`, the first
+    /// `burst_fraction` runs at `burst_factor ×` the base rate.
+    Bursty,
+}
+
+impl ServePattern {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Ok(ServePattern::Poisson),
+            "bursty" | "burst" => Ok(ServePattern::Bursty),
+            other => bail!("unknown serve pattern '{other}' (poisson|bursty)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServePattern::Poisson => "poisson",
+            ServePattern::Bursty => "bursty",
+        }
+    }
+
+    pub fn all() -> [ServePattern; 2] {
+        [ServePattern::Poisson, ServePattern::Bursty]
+    }
+}
+
+/// Online inference plane (`[serve]`): micro-batch admission, snapshot
+/// publishing cadence, the synthetic workload, and scripted serving-pool
+/// churn.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Largest serving micro-batch; must lie on the training bucket grid
+    /// (the AOT executables only exist for grid shapes). 0 = `sgd.b_max`.
+    pub max_batch: usize,
+    /// Deadline (seconds) a request may wait in admission for batch
+    /// formation; when the oldest pending request hits it, a partial batch
+    /// flushes on the smallest grid bucket that fits.
+    pub max_delay: f64,
+    /// Mean request arrival rate (requests/second) of the generated trace.
+    pub rate: f64,
+    /// Trace duration (virtual seconds) for steady-state serving runs
+    /// (train-while-serve spans the training clock instead).
+    pub duration: f64,
+    /// Telemetry window length (seconds) for the latency/throughput rows.
+    pub window: f64,
+    /// Arrival pattern of the generated trace.
+    pub pattern: ServePattern,
+    /// Burst rate multiplier (`Bursty` only).
+    pub burst_factor: f64,
+    /// Burst cycle length in seconds (`Bursty` only).
+    pub burst_period: f64,
+    /// Fraction of each cycle spent bursting, in (0, 1) (`Bursty` only).
+    pub burst_fraction: f64,
+    /// Tilt request sampling toward heavy (high-nnz) corpus samples:
+    /// selection weight ∝ nnz^bias via the shard manifests (0 = corpus
+    /// distribution).
+    pub nnz_bias: f64,
+    /// Publish the merged global model into the snapshot registry every k
+    /// mega-batches (bounds served-snapshot staleness to k−1).
+    pub publish_every: usize,
+    /// Scripted serving-pool churn, same grammar as `[elastic] events` but
+    /// indexed by telemetry *window* instead of mega-batch
+    /// (e.g. `"at_mb=4 remove=1"` fires at the 4th window boundary).
+    pub events: Vec<String>,
+    /// Workload generator seed.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 0,
+            max_delay: 0.002,
+            rate: 8_000.0,
+            duration: 2.0,
+            window: 0.25,
+            pattern: ServePattern::Poisson,
+            burst_factor: 6.0,
+            burst_period: 0.5,
+            burst_fraction: 0.2,
+            nnz_bias: 0.0,
+            publish_every: 1,
+            events: Vec::new(),
+            seed: 99,
+        }
     }
 }
 
@@ -663,6 +757,25 @@ impl Config {
         usize_of(map, "elastic.quarantine_mega_batches", &mut cfg.elastic.quarantine_mega_batches)?;
         usize_of(map, "elastic.min_devices", &mut cfg.elastic.min_devices)?;
 
+        usize_of(map, "serve.max_batch", &mut cfg.serve.max_batch)?;
+        f64_of(map, "serve.max_delay", &mut cfg.serve.max_delay)?;
+        f64_of(map, "serve.rate", &mut cfg.serve.rate)?;
+        f64_of(map, "serve.duration", &mut cfg.serve.duration)?;
+        f64_of(map, "serve.window", &mut cfg.serve.window)?;
+        if let Some(v) = map.get("serve.pattern") {
+            cfg.serve.pattern =
+                ServePattern::parse(v.as_str().context("serve.pattern must be a string")?)?;
+        }
+        f64_of(map, "serve.burst_factor", &mut cfg.serve.burst_factor)?;
+        f64_of(map, "serve.burst_period", &mut cfg.serve.burst_period)?;
+        f64_of(map, "serve.burst_fraction", &mut cfg.serve.burst_fraction)?;
+        f64_of(map, "serve.nnz_bias", &mut cfg.serve.nnz_bias)?;
+        usize_of(map, "serve.publish_every", &mut cfg.serve.publish_every)?;
+        if let Some(v) = map.get("serve.events") {
+            cfg.serve.events = v.as_str_arr().context("serve.events must be a string array")?;
+        }
+        u64_of(map, "serve.seed", &mut cfg.serve.seed)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -752,7 +865,55 @@ impl Config {
                 self.devices.count
             );
         }
+        let sv = &self.serve;
+        if sv.max_batch != 0 && !self.bucket_grid().contains(&sv.max_batch) {
+            bail!(
+                "serve.max_batch {} must lie on the batch-size grid {:?} (0 = b_max)",
+                sv.max_batch,
+                self.bucket_grid()
+            );
+        }
+        if sv.max_delay <= 0.0 {
+            bail!("serve.max_delay must be positive seconds");
+        }
+        if sv.rate <= 0.0 || sv.duration <= 0.0 || sv.window <= 0.0 {
+            bail!("serve.rate / serve.duration / serve.window must be positive");
+        }
+        if sv.burst_factor < 1.0 {
+            bail!("serve.burst_factor must be >= 1.0 (it multiplies the base rate)");
+        }
+        if sv.burst_period <= 0.0 || !(0.0..1.0).contains(&sv.burst_fraction)
+            || sv.burst_fraction == 0.0
+        {
+            bail!("serve.burst_period must be positive and serve.burst_fraction in (0, 1)");
+        }
+        if sv.nnz_bias < 0.0 {
+            bail!("serve.nnz_bias must be non-negative");
+        }
+        if sv.publish_every == 0 {
+            bail!("serve.publish_every must be positive");
+        }
+        for s in &sv.events {
+            let ev = ElasticEvent::parse(s)?;
+            if let ElasticOp::RemoveId(id) | ElasticOp::AddId(id) = ev.op {
+                if id >= roster {
+                    bail!(
+                        "serve event targets device {id} but the roster has {roster} devices"
+                    );
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The serving micro-batch ceiling: `serve.max_batch`, defaulting to
+    /// `sgd.b_max` when left at 0.
+    pub fn serve_max_batch(&self) -> usize {
+        if self.serve.max_batch == 0 {
+            self.sgd.b_max
+        } else {
+            self.serve.max_batch
+        }
     }
 
     /// The batch-size grid {b_min, b_min+beta, ..., b_max}.
@@ -903,6 +1064,43 @@ mod tests {
         assert!(CompositionPolicy::parse("nnz-sorted").is_ok());
         for p in CompositionPolicy::all() {
             assert_eq!(CompositionPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let cfg = Config::from_overrides(&[
+            ("serve.max_batch".into(), "64".into()),
+            ("serve.max_delay".into(), "0.004".into()),
+            ("serve.rate".into(), "12000".into()),
+            ("serve.pattern".into(), "bursty".into()),
+            ("serve.publish_every".into(), "3".into()),
+            ("serve.nnz_bias".into(), "1.5".into()),
+            ("serve.events".into(), "[\"at_mb=2 remove=1\"]".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.serve.max_batch, 64);
+        assert_eq!(cfg.serve_max_batch(), 64);
+        assert_eq!(cfg.serve.pattern, ServePattern::Bursty);
+        assert_eq!(cfg.serve.publish_every, 3);
+        assert_eq!(cfg.serve.events.len(), 1);
+        // max_batch 0 resolves to b_max.
+        assert_eq!(Config::default().serve_max_batch(), 128);
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("serve.max_batch", "100"); // off the 16..128 step-8 grid
+        reject("serve.max_delay", "0");
+        reject("serve.rate", "0");
+        reject("serve.window", "-1");
+        reject("serve.pattern", "fractal");
+        reject("serve.burst_factor", "0.5");
+        reject("serve.burst_fraction", "1.5");
+        reject("serve.publish_every", "0");
+        reject("serve.events", "[\"at_mb=1 remove_id=99\"]");
+        for p in ServePattern::all() {
+            assert_eq!(ServePattern::parse(p.name()).unwrap(), p);
         }
     }
 

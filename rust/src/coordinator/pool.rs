@@ -137,6 +137,21 @@ impl DevicePool {
         })
     }
 
+    /// A pool driven by an explicit scripted trace instead of
+    /// `[elastic] events` — the serving plane reuses the membership
+    /// machinery with window-indexed `[serve] events` while training keeps
+    /// its own mega-batch-indexed trace.
+    pub fn with_trace(cfg: &Config, events: &[String]) -> Result<DevicePool> {
+        let mut pool = DevicePool::new(cfg)?;
+        let mut trace = events
+            .iter()
+            .map(|s| crate::config::ElasticEvent::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        trace.sort_by_key(|e| e.at_mb);
+        pool.trace = trace;
+        Ok(pool)
+    }
+
     /// The full simulated roster — configured fleet plus hot-add spares.
     /// Engines are sized to this; the pool activates subsets of it.
     pub fn roster(cfg: &Config) -> Vec<SimDevice> {
@@ -437,6 +452,19 @@ mod tests {
         assert_eq!(ev.len(), 2);
         assert!(ev.iter().all(|e| e.action == PoolAction::Add));
         assert_eq!(pool.active_ids(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn with_trace_overrides_the_elastic_events() {
+        // Elastic trace says remove at 1; the explicit trace says remove at 2.
+        let cfg = cfg_with(&["at_mb=1 remove=1"], &[]);
+        let mut pool =
+            DevicePool::with_trace(&cfg, &["at_mb=2 remove=1".to_string()]).unwrap();
+        assert!(pool.begin_mega_batch(1).is_empty(), "elastic trace must be ignored");
+        let ev = pool.begin_mega_batch(2);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].action, PoolAction::Remove);
+        assert!(DevicePool::with_trace(&cfg, &["garbage".to_string()]).is_err());
     }
 
     #[test]

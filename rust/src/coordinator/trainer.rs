@@ -56,6 +56,11 @@ pub struct TrainerOptions {
     pub init_model: Option<crate::model::ModelState>,
     /// Save the merged global model here after every mega-batch (atomic).
     pub checkpoint: Option<std::path::PathBuf>,
+    /// Publish merged global models into this snapshot registry: the
+    /// initial model before training starts (serving warm-starts on it)
+    /// and then every `[serve] publish_every` mega-batches — the
+    /// train→serve hook the serving plane reads from.
+    pub publish: Option<Arc<crate::serve::SnapshotRegistry>>,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -69,6 +74,7 @@ impl Default for TrainerOptions {
             eval_bucket: None,
             init_model: None,
             checkpoint: None,
+            publish: None,
             verbose: false,
         }
     }
@@ -150,6 +156,12 @@ impl<'b> Trainer<'b> {
         };
         let mut global_prev = global.clone();
         let mut replicas: Vec<ModelState> = vec![global.clone(); roster];
+
+        // Serving warm-start: the init (or resumed) model is servable before
+        // the first merge lands.
+        if let Some(reg) = &self.opts.publish {
+            reg.publish(global.clone(), None, 0.0);
+        }
 
         // Roster-indexed adaptive state (survives membership churn).
         let mut batch_sizes = vec![cfg.sgd.initial_batch; roster];
@@ -363,6 +375,13 @@ impl<'b> Trainer<'b> {
             }
             if let Some(path) = &self.opts.checkpoint {
                 crate::model::checkpoint::save(&global, path)?;
+            }
+            // Publish into the serving registry at the configured cadence
+            // (the clock stamp excludes eval time, like the training clock).
+            if let Some(reg) = &self.opts.publish {
+                if (mb + 1) % cfg.serve.publish_every == 0 {
+                    reg.publish(global.clone(), Some(mb), clock);
+                }
             }
             if self.opts.verbose {
                 println!(
@@ -665,6 +684,34 @@ mod tests {
             log2.rows[0].loss,
             fresh_log.rows[0].loss
         );
+    }
+
+    #[test]
+    fn publish_hook_feeds_the_snapshot_registry() {
+        let mut cfg = test_config(Strategy::Adaptive, 2); // 6 mega-batches
+        cfg.serve.publish_every = 2;
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine = sim_engine(&cfg, &backend);
+        let reg = std::sync::Arc::new(crate::serve::SnapshotRegistry::new());
+        let opts = TrainerOptions { publish: Some(reg.clone()), ..Default::default() };
+        let mut trainer = Trainer::new(cfg, engine, &backend, opts);
+        let log = trainer.run(&train, &test).unwrap();
+
+        let h = reg.history();
+        // Init publish + mega-batches 1, 3, 5.
+        assert_eq!(h.len(), 4);
+        assert_eq!(h[0].mega_batch, None, "warm-start snapshot first");
+        assert_eq!(
+            h[1..].iter().map(|s| s.mega_batch).collect::<Vec<_>>(),
+            vec![Some(1), Some(3), Some(5)]
+        );
+        // Publish clocks are the training clock at those merges.
+        assert_eq!(h[1].published_clock, log.rows[1].clock);
+        assert_eq!(h[3].published_clock, log.rows[5].clock);
+        assert!(h.windows(2).all(|w| w[0].published_clock < w[1].published_clock));
+        assert_eq!(reg.current().unwrap().version, 4);
     }
 
     #[test]

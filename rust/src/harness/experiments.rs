@@ -491,6 +491,163 @@ pub fn pipeline(profile: DataProfile, backend: Backend) -> Result<PipelineOutcom
     Ok(PipelineOutcome { logs })
 }
 
+// ---------------------------------------------------------------------------
+// Serve — beyond the paper (ROADMAP north-star): the serving plane. Train,
+// publish snapshots, then replay synthetic traffic against them — per-
+// arrival-pattern latency/throughput plus a train-while-serve timeline
+// where the accuracy of the *served* snapshot tracks the training curve.
+// ---------------------------------------------------------------------------
+
+pub struct ServeOutcome {
+    pub train_log: RunLog,
+    /// One steady-state log per arrival pattern.
+    pub steady: Vec<(String, crate::serve::ServeLog)>,
+    /// The train-while-serve replay over the training clock.
+    pub train_while_serve: crate::serve::ServeLog,
+}
+
+/// `experiment serve`: brief training run with the publish hook on, then
+/// (a) steady-state serving of the final snapshot under each arrival
+/// pattern, and (b) a train-while-serve replay across the whole training
+/// clock with snapshot hot-swaps at every publish. Pass a checkpoint to
+/// also seed the registry from a saved artifact.
+pub fn serve(
+    profile: DataProfile,
+    backend: Backend,
+    resume: Option<&std::path::Path>,
+) -> Result<ServeOutcome> {
+    use crate::config::ServePattern;
+    use crate::coordinator::backend::RefBackend;
+    use crate::data::pipeline::ShardedDataset;
+    use crate::serve::{replay, ReplayOptions, SnapshotRegistry};
+    use std::sync::Arc;
+
+    let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+    apply_full_scale(&mut cfg);
+
+    let registry = Arc::new(SnapshotRegistry::new());
+    // --resume: training continues from the artifact AND the artifact is
+    // servable from t=0 — the trainer's warm-start publish (version 1)
+    // pushes exactly this model into the registry before the first merge.
+    let init_model = match resume {
+        Some(path) => {
+            let m = crate::model::checkpoint::load(path)?;
+            println!("resuming from {} — served as the warm-start snapshot", path.display());
+            Some(m)
+        }
+        None => None,
+    };
+    let opts =
+        TrainerOptions { publish: Some(registry.clone()), init_model, ..Default::default() };
+    let train_log = run_single(&cfg, backend, opts)?;
+    let final_clock = train_log.rows.last().map(|r| r.clock).unwrap_or(1.0);
+
+    // Requests draw from the training corpus (same feature space the model
+    // was fitted on); serving numerics run the hermetic reference forward.
+    let (train, _) = make_data(&cfg);
+    let data = Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples));
+
+    let mut steady = Vec::new();
+    for pattern in ServePattern::all() {
+        let log = replay(
+            &cfg,
+            data.clone(),
+            &registry,
+            &RefBackend,
+            &ReplayOptions {
+                pattern,
+                duration: cfg.serve.duration,
+                follow_clock: false,
+                train_log: Some(&train_log),
+                name: format!("{}-steady", pattern.name()),
+            },
+        )?;
+        steady.push((pattern.name().to_string(), log));
+    }
+
+    // The train-while-serve timeline spans the training clock, so its
+    // telemetry windows scale to it (~12 rows regardless of run length).
+    let mut tws_cfg = cfg.clone();
+    tws_cfg.serve.window = (final_clock / 12.0).max(1e-3);
+    let tws = replay(
+        &tws_cfg,
+        data.clone(),
+        &registry,
+        &RefBackend,
+        &ReplayOptions {
+            pattern: cfg.serve.pattern,
+            duration: final_clock,
+            follow_clock: true,
+            train_log: Some(&train_log),
+            name: "train-while-serve".to_string(),
+        },
+    )?;
+
+    let fmt_nan = |v: f64, prec: usize| {
+        if v.is_finite() {
+            format!("{v:.prec$}")
+        } else {
+            "—".to_string()
+        }
+    };
+    let mut t = Table::new(&[
+        "pattern", "requests", "batches", "p50 (ms)", "p95 (ms)", "p99 (ms)", "rps",
+        "peak queue", "staleness (mb)", "P@1 (served)",
+    ]);
+    for (name, log) in &steady {
+        t.row(&[
+            name.clone(),
+            log.total_requests().to_string(),
+            log.batches.len().to_string(),
+            fmt_nan(log.latency_percentile_ms(50.0), 3),
+            fmt_nan(log.latency_percentile_ms(95.0), 3),
+            fmt_nan(log.latency_percentile_ms(99.0), 3),
+            format!("{:.0}", log.throughput()),
+            log.max_queue_depth().to_string(),
+            fmt_nan(log.mean_staleness(), 2),
+            fmt_nan(log.served_accuracy(), 4),
+        ]);
+    }
+    t.print(&format!(
+        "Serve — steady-state latency per arrival pattern ({}, {} req/s, snapshot v{})",
+        profile.name(),
+        cfg.serve.rate,
+        registry.latest_version()
+    ));
+
+    let mut t = Table::new(&[
+        "window", "t (s)", "completed", "p99 (ms)", "staleness (mb)", "P@1 (served)",
+        "P@1 (train)",
+    ]);
+    for r in &tws.rows {
+        t.row(&[
+            r.window.to_string(),
+            format!("{:.2}–{:.2}", r.start, r.end),
+            r.completed.to_string(),
+            fmt_nan(r.p99_ms, 3),
+            fmt_nan(r.mean_staleness, 2),
+            fmt_nan(r.served_accuracy, 4),
+            fmt_nan(r.train_accuracy, 4),
+        ]);
+    }
+    t.print(&format!(
+        "Serve — train-while-serve: served-snapshot accuracy vs the training curve \
+         ({}, publish_every={})",
+        profile.name(),
+        cfg.serve.publish_every
+    ));
+    println!(
+        "train-while-serve: {} requests, mean staleness {} mb, final served P@1 {} \
+         (training best {:.4})",
+        tws.total_requests(),
+        fmt_nan(tws.mean_staleness(), 2),
+        fmt_nan(tws.served_accuracy(), 4),
+        train_log.best_accuracy()
+    );
+
+    Ok(ServeOutcome { train_log, steady, train_while_serve: tws })
+}
+
 /// Config helper shared with `Config::from_overrides` users.
 pub fn profile_of(cfg: &Config) -> DataProfile {
     cfg.data.profile

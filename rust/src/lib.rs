@@ -9,8 +9,10 @@
 //!   elasticity traces), dynamic scheduler, GPU-manager workers, adaptive
 //!   batch-size scaling (Algorithm 1), normalized model merging with
 //!   perturbation and momentum over the active device subset (Algorithm 2),
-//!   the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU baseline, and
-//!   a multi-stream all-reduce simulation.
+//!   the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU baseline, a
+//!   multi-stream all-reduce simulation, and an online serving plane
+//!   (snapshot registry + micro-batch inference) closing the train→serve
+//!   loop.
 //! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per batch-size bucket.
 //! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and
@@ -33,6 +35,7 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod slide;
 pub mod util;
 

@@ -129,6 +129,23 @@ impl RunLog {
         self.rows.iter().filter(|r| r.perturbed).count() as f64 / self.rows.len() as f64
     }
 
+    /// How many mega-batches had *completed* (merged) by training-clock
+    /// time `t` — the serving plane's reference point for snapshot
+    /// staleness (rows are clock-ordered).
+    pub fn mega_batches_completed_at(&self, t: f64) -> usize {
+        self.rows.partition_point(|r| r.clock <= t)
+    }
+
+    /// Test accuracy of the training run as of clock time `t` (the last
+    /// evaluated row at or before `t`); NaN before the first merge — the
+    /// train-while-serve comparison column.
+    pub fn accuracy_at_clock(&self, t: f64) -> f64 {
+        match self.rows.partition_point(|r| r.clock <= t) {
+            0 => f64::NAN,
+            n => self.rows[n - 1].accuracy,
+        }
+    }
+
     /// Run-average per-batch nnz coefficient of variation (the pipeline
     /// experiment's headline number).
     pub fn mean_nnz_cv(&self) -> f64 {
@@ -310,6 +327,21 @@ mod tests {
         assert!((log.perturbation_frequency() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(log.device_counts(), vec![2, 2, 2]);
         assert!((log.mean_nnz_cv() - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_lookups_for_the_serving_plane() {
+        let mut log = RunLog::new("t");
+        log.push(row(0, 1.0, 0.10, false));
+        log.push(row(1, 2.0, 0.25, false));
+        log.push(row(2, 3.0, 0.32, false));
+        assert_eq!(log.mega_batches_completed_at(0.5), 0);
+        assert_eq!(log.mega_batches_completed_at(1.0), 1);
+        assert_eq!(log.mega_batches_completed_at(2.7), 2);
+        assert_eq!(log.mega_batches_completed_at(99.0), 3);
+        assert!(log.accuracy_at_clock(0.5).is_nan());
+        assert_eq!(log.accuracy_at_clock(2.0), 0.25);
+        assert_eq!(log.accuracy_at_clock(99.0), 0.32);
     }
 
     #[test]

@@ -43,36 +43,44 @@ fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
     b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
 
-/// Save a checkpoint (atomic: write to `.tmp` then rename).
+/// Save a checkpoint (atomic: write to `.tmp` then rename). A failure at
+/// any point after the temp file was created removes it — a bailed save
+/// never leaves a stray `.tmp` next to the checkpoint.
 pub fn save(model: &ModelState, path: &Path) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     let tmp = path.with_extension("tmp");
-    {
-        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
-        w.write_all(MAGIC)?;
-        let d = &model.dims;
-        for v in [d.features, d.hidden, d.classes, d.max_nnz, d.max_labels] {
-            w.write_all(&(v as u64).to_le_bytes())?;
+    let write_and_rename = || -> Result<()> {
+        {
+            let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            let d = &model.dims;
+            for v in [d.features, d.hidden, d.classes, d.max_nnz, d.max_labels] {
+                w.write_all(&(v as u64).to_le_bytes())?;
+            }
+            let segs = model.segments();
+            for s in &segs {
+                w.write_all(&(s.len() as u64).to_le_bytes())?;
+            }
+            let mut crc = 0xcbf29ce484222325u64;
+            for s in &segs {
+                let bytes = f32s_to_bytes(s);
+                // Chain the per-segment FNV state through all segments.
+                crc ^= fnv1a(&bytes);
+                crc = crc.wrapping_mul(0x100000001b3);
+                w.write_all(&bytes)?;
+            }
+            w.write_all(&crc.to_le_bytes())?;
+            w.flush()?;
         }
-        let segs = model.segments();
-        for s in &segs {
-            w.write_all(&(s.len() as u64).to_le_bytes())?;
-        }
-        let mut crc = 0xcbf29ce484222325u64;
-        for s in &segs {
-            let bytes = f32s_to_bytes(s);
-            // Chain the per-segment FNV state through all segments.
-            crc ^= fnv1a(&bytes);
-            crc = crc.wrapping_mul(0x100000001b3);
-            w.write_all(&bytes)?;
-        }
-        w.write_all(&crc.to_le_bytes())?;
-        w.flush()?;
+        std::fs::rename(&tmp, path).context("renaming checkpoint into place")
+    };
+    let result = write_and_rename();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
     }
-    std::fs::rename(&tmp, path).context("renaming checkpoint into place")?;
-    Ok(())
+    result
 }
 
 /// Load and validate a checkpoint.
@@ -81,7 +89,8 @@ pub fn load(path: &Path) -> Result<ModelState> {
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
     );
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .with_context(|| format!("checkpoint {} is truncated (missing header)", path.display()))?;
     if &magic != MAGIC {
         bail!("{} is not a heterosparse checkpoint (bad magic)", path.display());
     }
@@ -109,14 +118,21 @@ pub fn load(path: &Path) -> Result<ModelState> {
     }
     let mut segs: Vec<Vec<f32>> = Vec::with_capacity(4);
     let mut crc = 0xcbf29ce484222325u64;
-    for &len in &lens {
+    for (seg, &len) in lens.iter().enumerate() {
         let mut bytes = vec![0u8; len * 4];
-        r.read_exact(&mut bytes)?;
+        r.read_exact(&mut bytes).with_context(|| {
+            format!(
+                "checkpoint {} is truncated (segment {seg} expected {} bytes)",
+                path.display(),
+                len * 4
+            )
+        })?;
         crc ^= fnv1a(&bytes);
         crc = crc.wrapping_mul(0x100000001b3);
         segs.push(bytes_to_f32s(&bytes));
     }
-    let stored_crc = read_u64(&mut r)?;
+    let stored_crc = read_u64(&mut r)
+        .with_context(|| format!("checkpoint {} is truncated (missing crc)", path.display()))?;
     if stored_crc != crc {
         bail!("checkpoint {} is corrupt (crc mismatch)", path.display());
     }
@@ -178,5 +194,75 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
         assert!(load(&path).is_err());
+    }
+
+    /// Property: save → load is the identity over random dims and seeds.
+    #[test]
+    fn round_trip_property() {
+        use crate::util::prop::{self, VecU64};
+        // [features, hidden, classes, max_nnz, max_labels, seed]
+        let gen = VecU64 { min_len: 6, max_len: 7, item_lo: 1, item_hi: 40 };
+        prop::check(25, 17, gen, |v| {
+            let d = ModelDims {
+                features: v[0] as usize,
+                hidden: v[1] as usize,
+                classes: v[2] as usize,
+                max_nnz: v[3] as usize,
+                max_labels: v[4] as usize,
+            };
+            let m = ModelState::init(&d, v[5]);
+            let path = tmp(&format!("prop-{}-{}-{}.ckpt", v[0], v[1], v[5]));
+            save(&m, &path).map_err(|e| e.to_string())?;
+            let back = load(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            if back != m {
+                return Err("round trip changed the model".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flipped_data_byte_reports_crc_mismatch() {
+        let m = ModelState::init(&dims(), 21);
+        let path = tmp("flip.ckpt");
+        save(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside the data section (past magic + dims + lens).
+        let data_start = 8 + 5 * 8 + 4 * 8;
+        bytes[data_start + 3] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("crc"), "crc mismatch must be named: {err}");
+    }
+
+    #[test]
+    fn truncation_points_report_clear_errors() {
+        let m = ModelState::init(&dims(), 22);
+        let path = tmp("trunc-points.ckpt");
+        save(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Mid-header, mid-data, and missing-crc truncations all name the
+        // file and say "truncated".
+        for cut in [4usize, 8 + 5 * 8 + 4 * 8 + 10, bytes.len() - 4] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = format!("{:#}", load(&path).unwrap_err());
+            assert!(err.contains("truncated"), "cut at {cut}: {err}");
+            assert!(err.contains("trunc-points.ckpt"), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn failed_save_removes_the_stray_tmp_file() {
+        let m = ModelState::init(&dims(), 23);
+        // The target path is an occupied directory, so the final rename
+        // fails after the temp file was fully written.
+        let dir = tmp("save-fail-target.ckpt");
+        std::fs::create_dir_all(dir.join("occupant")).unwrap();
+        let err = save(&m, &dir);
+        assert!(err.is_err(), "rename onto a non-empty directory must fail");
+        let stray = dir.with_extension("tmp");
+        assert!(!stray.exists(), "failed save left {} behind", stray.display());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -31,6 +31,11 @@ pub struct CostModel {
     /// startup overheads that grow with the number of GPUs; merging too
     /// often is what makes gradient aggregation slow in Fig. 9).
     pub t_merge_fixed: f64,
+    /// Forward-only fraction of a training step's variable cost — inference
+    /// skips the backward pass (~2/3 of the FLOPs on this MLP), so the
+    /// serving plane charges `t_fixed + infer_fraction × (nnz + sample)`
+    /// per micro-batch.
+    pub infer_fraction: f64,
 }
 
 impl Default for CostModel {
@@ -42,6 +47,7 @@ impl Default for CostModel {
             t_per_sample: 45e-6,
             t_per_param_xfer: 0.15e-9,
             t_merge_fixed: 4e-3,
+            infer_fraction: 0.35,
         }
     }
 }
@@ -54,6 +60,17 @@ impl CostModel {
 
     pub fn step_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
         self.t_fixed + self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64
+    }
+
+    /// Nominal forward-only (inference) time for a padded batch.
+    pub fn infer_time(&self, batch: &PaddedBatch) -> f64 {
+        self.infer_time_parts(batch.bucket, batch.nnz)
+    }
+
+    pub fn infer_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
+        self.t_fixed
+            + self.infer_fraction
+                * (self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64)
     }
 
     /// One ring/tree hop transferring `params` parameters.
@@ -92,6 +109,7 @@ impl CostModel {
             t_per_sample: coef[2].max(1e-9),
             t_per_param_xfer: base.t_per_param_xfer,
             t_merge_fixed: base.t_merge_fixed,
+            infer_fraction: base.infer_fraction,
         })
     }
 }
@@ -198,6 +216,16 @@ mod tests {
         assert!((c[0] - 2.0).abs() < 1e-9, "{c:?}");
         assert!((c[1] - 3.0).abs() < 1e-9);
         assert!((c[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inference_is_cheaper_than_training_but_keeps_the_fixed_cost() {
+        let m = CostModel::default();
+        assert!(m.infer_time_parts(128, 1000) < m.step_time_parts(128, 1000));
+        assert!(m.infer_time_parts(16, 0) >= m.t_fixed);
+        // Still monotone in both batch size and cardinality.
+        assert!(m.infer_time_parts(128, 1000) > m.infer_time_parts(64, 1000));
+        assert!(m.infer_time_parts(64, 2000) > m.infer_time_parts(64, 1000));
     }
 
     #[test]

@@ -88,6 +88,17 @@ impl SimDevice {
     pub fn stretch(&mut self, real_secs: f64) -> f64 {
         real_secs * self.next_multiplier()
     }
+
+    /// Serving plane: full simulated duration of one forward-only inference
+    /// pass — same heterogeneity model as training steps, forward-fraction
+    /// cost (see [`CostModel::infer_time_parts`]).
+    pub fn infer_duration(&mut self, cost: &CostModel, batch: &PaddedBatch) -> f64 {
+        let nominal = cost.t_fixed
+            + cost.infer_fraction
+                * (cost.t_per_nnz * batch.nnz as f64 * self.nnz_sensitivity
+                    + cost.t_per_sample * batch.bucket as f64);
+        nominal * self.next_multiplier()
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +172,20 @@ mod tests {
         }
         // It actually varies.
         assert!(crate::util::stats::max(&ts) > crate::util::stats::min(&ts));
+    }
+
+    #[test]
+    fn inference_is_faster_than_training_on_the_same_device() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(2, &cfg);
+        let b = batch(64, 64 * 12);
+        let infer = d.infer_duration(&cost, &b);
+        let step = d.step_duration(&cost, &b);
+        assert!(infer < step, "forward-only {infer} must undercut fwd+bwd {step}");
+        // Deterministic with zero jitter and slowed by the speed factor.
+        let nominal = cost.infer_time_parts(64, 64 * 12);
+        assert!((infer - nominal * cfg.speed_factors[2]).abs() < 1e-12);
     }
 
     #[test]

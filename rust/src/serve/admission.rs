@@ -1,0 +1,250 @@
+//! Deadline-aware micro-batch admission for the serving plane.
+//!
+//! Sparse requests accumulate into [`PaddedBatch`]es on the *training*
+//! batch-size grid (the AOT executables only exist for grid shapes):
+//!
+//! * a **full** batch forms the moment `serve.max_batch` requests are
+//!   pending,
+//! * a **partial** batch flushes when the oldest pending request has
+//!   waited `serve.max_delay` seconds — latency SLOs beat batching
+//!   efficiency — padded to the smallest grid bucket that fits.
+//!
+//! The hot path reuses the data plane's machinery: samples pad through
+//! [`pad_sample_into`] (same rules as training) and batch buffers recycle
+//! through a [`BufferPool`], so steady-state admission performs no
+//! per-request buffer allocation.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::{Config, ModelDims};
+use crate::data::batcher::{pad_sample_into, PaddedBatch};
+use crate::data::pipeline::{BufferPool, PoolStats, ShardedDataset};
+
+/// A request waiting for batch formation.
+#[derive(Clone, Copy, Debug)]
+struct PendingRequest {
+    id: u64,
+    sample_id: u32,
+    arrival: f64,
+}
+
+/// One formed micro-batch, ready for routing. `request_ids` / `arrivals`
+/// are parallel to the batch's valid rows.
+#[derive(Debug)]
+pub struct AdmittedBatch {
+    pub batch: PaddedBatch,
+    pub request_ids: Vec<u64>,
+    pub arrivals: Vec<f64>,
+    pub formed_at: f64,
+}
+
+/// The admission queue: requests in, grid-shaped micro-batches out.
+pub struct Admission {
+    data: Arc<ShardedDataset>,
+    k: usize,
+    l: usize,
+    /// Ascending grid buckets up to (and including) `max_batch`.
+    grid: Vec<usize>,
+    max_batch: usize,
+    max_delay: f64,
+    pool: BufferPool,
+    pending: VecDeque<PendingRequest>,
+    /// Cumulative counters (telemetry).
+    pub admitted: u64,
+    pub formed_batches: u64,
+    pub deadline_flushes: u64,
+    pub truncated_features: u64,
+}
+
+impl Admission {
+    pub fn new(data: Arc<ShardedDataset>, dims: &ModelDims, cfg: &Config) -> Admission {
+        let max_batch = cfg.serve_max_batch();
+        let grid: Vec<usize> =
+            cfg.bucket_grid().into_iter().filter(|&b| b <= max_batch).collect();
+        assert!(
+            grid.last() == Some(&max_batch),
+            "serve.max_batch must lie on the bucket grid (validated in config)"
+        );
+        Admission {
+            data,
+            k: dims.max_nnz,
+            l: dims.max_labels,
+            grid,
+            max_batch,
+            max_delay: cfg.serve.max_delay,
+            pool: BufferPool::new(8),
+            pending: VecDeque::new(),
+            admitted: 0,
+            formed_batches: 0,
+            deadline_flushes: 0,
+            truncated_features: 0,
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn push(&mut self, id: u64, sample_id: u32, arrival: f64) {
+        debug_assert!((sample_id as usize) < self.data.len());
+        self.admitted += 1;
+        self.pending.push_back(PendingRequest { id, sample_id, arrival });
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// When the queue must flush even if not full: the oldest pending
+    /// request's arrival plus the formation deadline. None when idle.
+    pub fn deadline(&self) -> Option<f64> {
+        self.pending.front().map(|r| r.arrival + self.max_delay)
+    }
+
+    /// Form a full `max_batch` batch if enough requests are pending.
+    pub fn pop_full(&mut self, now: f64) -> Option<AdmittedBatch> {
+        (self.pending.len() >= self.max_batch).then(|| self.form(self.max_batch, now))
+    }
+
+    /// Flush everything pending (the deadline hit, or the trace ended):
+    /// the batch pads up to the smallest grid bucket that fits.
+    pub fn flush(&mut self, now: f64) -> Option<AdmittedBatch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.deadline_flushes += 1;
+        let count = self.pending.len().min(self.max_batch);
+        Some(self.form(count, now))
+    }
+
+    fn form(&mut self, count: usize, now: f64) -> AdmittedBatch {
+        // Smallest grid bucket covering `count` (grid ends at max_batch).
+        let bucket =
+            self.grid.iter().copied().find(|&b| b >= count).unwrap_or(self.max_batch);
+        let mut batch = self.pool.get(bucket, self.k, self.l);
+        let mut request_ids = Vec::with_capacity(count);
+        let mut arrivals = Vec::with_capacity(count);
+        let mut truncated = 0usize;
+        for row in 0..count {
+            let req = self.pending.pop_front().expect("count <= pending.len()");
+            let s = self.data.sample(req.sample_id as usize);
+            truncated += pad_sample_into(&mut batch, row, req.sample_id, &s, self.k, self.l);
+            request_ids.push(req.id);
+            arrivals.push(req.arrival);
+        }
+        batch.valid = count;
+        self.truncated_features += truncated as u64;
+        self.formed_batches += 1;
+        AdmittedBatch { batch, request_ids, arrivals, formed_at: now }
+    }
+
+    /// Return a served batch's buffers to the pool.
+    pub fn recycle(&self, batch: PaddedBatch) {
+        self.pool.put(batch);
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::synthetic::Generator;
+
+    fn setup() -> (Config, Arc<ShardedDataset>) {
+        let mut cfg = Config::default();
+        cfg.model = ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 16, max_labels: 4 };
+        cfg.sgd.b_min = 8;
+        cfg.sgd.b_max = 32;
+        cfg.sgd.beta = 8;
+        cfg.sgd.initial_batch = 32;
+        cfg.validate().unwrap();
+        let data_cfg = DataConfig { train_samples: 300, avg_nnz: 6.0, ..Default::default() };
+        let ds = Generator::new(&cfg.model, &data_cfg).generate(300, 1);
+        (cfg, Arc::new(ShardedDataset::from_dataset(&ds, 128)))
+    }
+
+    #[test]
+    fn full_batches_form_at_max_batch() {
+        let (cfg, data) = setup();
+        let mut adm = Admission::new(data.clone(), &cfg.model, &cfg);
+        for i in 0..31 {
+            adm.push(i, i as u32, i as f64 * 1e-4);
+            assert!(adm.pop_full(0.01).is_none(), "not full at {}", i + 1);
+        }
+        adm.push(31, 31, 31e-4);
+        let b = adm.pop_full(0.01).unwrap();
+        assert_eq!(b.batch.bucket, 32);
+        assert_eq!(b.batch.valid, 32);
+        assert_eq!(b.request_ids, (0..32).collect::<Vec<u64>>());
+        assert_eq!(b.batch.sample_ids.len(), 32);
+        assert_eq!(b.formed_at, 0.01);
+        assert_eq!(adm.queue_depth(), 0);
+        assert_eq!(adm.formed_batches, 1);
+        assert_eq!(adm.deadline_flushes, 0);
+    }
+
+    #[test]
+    fn deadline_flush_pads_to_the_smallest_fitting_bucket() {
+        let (cfg, data) = setup(); // grid {8, 16, 24, 32}
+        let mut adm = Admission::new(data.clone(), &cfg.model, &cfg);
+        for i in 0..11 {
+            adm.push(i, i as u32, 0.001);
+        }
+        assert_eq!(adm.deadline(), Some(0.001 + cfg.serve.max_delay));
+        let b = adm.flush(0.004).unwrap();
+        assert_eq!(b.batch.valid, 11);
+        assert_eq!(b.batch.bucket, 16, "11 requests pad to the 16 bucket");
+        assert_eq!(adm.deadline(), None, "queue drained");
+        assert_eq!(adm.deadline_flushes, 1);
+        assert!(adm.flush(0.01).is_none(), "empty queue has nothing to flush");
+        // A 3-request flush lands on the smallest bucket.
+        for i in 0..3 {
+            adm.push(100 + i, i as u32, 0.02);
+        }
+        let b = adm.flush(0.03).unwrap();
+        assert_eq!((b.batch.valid, b.batch.bucket), (3, 8));
+    }
+
+    #[test]
+    fn batch_buffers_recycle_through_the_pool() {
+        let (cfg, data) = setup();
+        let mut adm = Admission::new(data.clone(), &cfg.model, &cfg);
+        for round in 0..3u64 {
+            for i in 0..32 {
+                adm.push(round * 32 + i, i as u32, round as f64);
+            }
+            let b = adm.pop_full(round as f64).unwrap();
+            adm.recycle(b.batch);
+        }
+        let s = adm.pool_stats();
+        assert_eq!(s.misses, 1, "only the first batch allocates");
+        assert_eq!(s.hits, 2, "later batches reuse the buffers");
+    }
+
+    #[test]
+    fn truncation_is_counted_not_silent() {
+        let (mut cfg, _) = setup();
+        // Regenerate with wide samples, then serve under a tight max_nnz.
+        let gen_dims =
+            ModelDims { features: 256, hidden: 8, classes: 32, max_nnz: 16, max_labels: 4 };
+        let data_cfg = DataConfig { train_samples: 100, avg_nnz: 10.0, ..Default::default() };
+        let ds = Generator::new(&gen_dims, &data_cfg).generate(100, 1);
+        let data = Arc::new(ShardedDataset::from_dataset(&ds, 64));
+        cfg.model.max_nnz = 4;
+        let mut adm = Admission::new(data.clone(), &cfg.model, &cfg);
+        for i in 0..32u64 {
+            adm.push(i, i as u32, 0.0);
+        }
+        let b = adm.pop_full(0.0).unwrap();
+        let expected: u64 = b
+            .batch
+            .sample_ids
+            .iter()
+            .map(|&id| data.nnz(id as usize).saturating_sub(4) as u64)
+            .sum();
+        assert!(expected > 0, "corpus should overflow max_nnz=4");
+        assert_eq!(adm.truncated_features, expected);
+    }
+}

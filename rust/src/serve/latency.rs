@@ -1,0 +1,372 @@
+//! Windowed serving telemetry: latency percentiles, throughput, queue
+//! depth, batch fill, and served-snapshot staleness.
+//!
+//! The replay loop records raw per-request and per-batch events; this
+//! module folds them into fixed-length windows after the fact — windowing
+//! by *completion* time for latency/throughput and by *arrival* time for
+//! admission load, so a batch finishing after its window's arrivals lands
+//! where an operator's dashboard would put it. Percentiles come from
+//! [`crate::util::stats::percentile`], which yields NaN for an empty
+//! window (zero completed requests is a normal state during bursts' quiet
+//! phases, not an error).
+
+use crate::metrics::{PoolEventRow, RunLog};
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One completed request (times in virtual seconds from trace start).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    pub completion: f64,
+    /// Did the served model's top-1 prediction hit a true label?
+    pub hit: bool,
+}
+
+/// One served micro-batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchRecord {
+    pub formed_at: f64,
+    pub start: f64,
+    pub completion: f64,
+    pub device: usize,
+    pub bucket: usize,
+    pub valid: usize,
+    /// Snapshot version the batch was served from.
+    pub version: u64,
+    /// Served-snapshot staleness in mega-batches at formation time (None
+    /// without a training timeline, e.g. checkpoint-only serving).
+    pub staleness: Option<usize>,
+}
+
+/// One telemetry window.
+#[derive(Clone, Debug)]
+pub struct ServeWindow {
+    pub window: usize,
+    pub start: f64,
+    pub end: f64,
+    /// Requests that *arrived* in the window.
+    pub admitted: u64,
+    /// Requests that *completed* in the window.
+    pub completed: u64,
+    pub batches: u64,
+    /// Latency percentiles in milliseconds (NaN when nothing completed).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Completions per second.
+    pub throughput: f64,
+    /// Peak admission queue depth observed in the window.
+    pub max_queue_depth: usize,
+    /// Mean valid/bucket of the window's batches (NaN without batches).
+    pub mean_fill: f64,
+    /// Mean staleness in mega-batches (NaN without a training timeline).
+    pub mean_staleness: f64,
+    /// P@1 over the window's served requests (NaN when nothing completed).
+    pub served_accuracy: f64,
+    /// Training-curve accuracy at the window end (NaN without a timeline).
+    pub train_accuracy: f64,
+    /// Snapshot versions served in the window (0/0 when idle).
+    pub min_version: u64,
+    pub max_version: u64,
+}
+
+/// Full serving-run telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct ServeLog {
+    pub name: String,
+    pub rows: Vec<ServeWindow>,
+    pub requests: Vec<RequestRecord>,
+    pub batches: Vec<BatchRecord>,
+    /// Serving-pool membership changes (window-indexed).
+    pub pool_events: Vec<PoolEventRow>,
+    /// Nominal trace duration in seconds (completions may run past it).
+    pub duration: f64,
+}
+
+impl ServeLog {
+    /// Fold raw records into windows of `window_secs`. `depth_samples` are
+    /// (time, queue depth) observations; `train_log` enables the staleness
+    /// and training-accuracy columns.
+    #[allow(clippy::too_many_arguments)]
+    pub fn summarize(
+        name: impl Into<String>,
+        duration: f64,
+        window_secs: f64,
+        requests: Vec<RequestRecord>,
+        batches: Vec<BatchRecord>,
+        depth_samples: &[(f64, usize)],
+        pool_events: Vec<PoolEventRow>,
+        train_log: Option<&RunLog>,
+    ) -> ServeLog {
+        assert!(window_secs > 0.0);
+        let horizon = requests
+            .iter()
+            .map(|r| r.completion)
+            .fold(duration, f64::max);
+        let windows = (horizon / window_secs).ceil().max(1.0) as usize;
+        let idx = |t: f64| ((t / window_secs) as usize).min(windows - 1);
+
+        let mut rows: Vec<ServeWindow> = (0..windows)
+            .map(|w| ServeWindow {
+                window: w,
+                start: w as f64 * window_secs,
+                end: (w + 1) as f64 * window_secs,
+                admitted: 0,
+                completed: 0,
+                batches: 0,
+                p50_ms: f64::NAN,
+                p95_ms: f64::NAN,
+                p99_ms: f64::NAN,
+                throughput: 0.0,
+                max_queue_depth: 0,
+                mean_fill: f64::NAN,
+                mean_staleness: f64::NAN,
+                served_accuracy: f64::NAN,
+                train_accuracy: train_log
+                    .map(|l| l.accuracy_at_clock((w + 1) as f64 * window_secs))
+                    .unwrap_or(f64::NAN),
+                min_version: 0,
+                max_version: 0,
+            })
+            .collect();
+
+        let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); windows];
+        let mut hits = vec![0u64; windows];
+        for r in &requests {
+            rows[idx(r.arrival)].admitted += 1;
+            let w = idx(r.completion);
+            rows[w].completed += 1;
+            latencies[w].push((r.completion - r.arrival) * 1e3);
+            hits[w] += r.hit as u64;
+        }
+        let mut fills: Vec<Vec<f64>> = vec![Vec::new(); windows];
+        let mut stale: Vec<Vec<f64>> = vec![Vec::new(); windows];
+        for b in &batches {
+            let w = idx(b.completion);
+            let row = &mut rows[w];
+            row.batches += 1;
+            if row.min_version == 0 || b.version < row.min_version {
+                row.min_version = b.version;
+            }
+            row.max_version = row.max_version.max(b.version);
+            fills[w].push(b.valid as f64 / b.bucket as f64);
+            if let Some(s) = b.staleness {
+                stale[w].push(s as f64);
+            }
+        }
+        for (t, depth) in depth_samples {
+            let row = &mut rows[idx(*t)];
+            row.max_queue_depth = row.max_queue_depth.max(*depth);
+        }
+        for (w, row) in rows.iter_mut().enumerate() {
+            row.p50_ms = stats::percentile(&latencies[w], 50.0);
+            row.p95_ms = stats::percentile(&latencies[w], 95.0);
+            row.p99_ms = stats::percentile(&latencies[w], 99.0);
+            row.throughput = row.completed as f64 / window_secs;
+            if row.completed > 0 {
+                row.served_accuracy = hits[w] as f64 / row.completed as f64;
+            }
+            if !fills[w].is_empty() {
+                row.mean_fill = stats::mean(&fills[w]);
+            }
+            if !stale[w].is_empty() {
+                row.mean_staleness = stats::mean(&stale[w]);
+            }
+        }
+        ServeLog { name: name.into(), rows, requests, batches, pool_events, duration }
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Run-wide latency percentile in milliseconds (NaN when empty).
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        let lat: Vec<f64> =
+            self.requests.iter().map(|r| (r.completion - r.arrival) * 1e3).collect();
+        stats::percentile(&lat, p)
+    }
+
+    /// Run-wide *delivered* throughput: completions that landed inside the
+    /// nominal duration, per second. Under overload the backlog drains
+    /// after the trace ends, so this sinks below the offered rate instead
+    /// of parroting it.
+    pub fn throughput(&self) -> f64 {
+        self.requests.iter().filter(|r| r.completion <= self.duration).count() as f64
+            / self.duration
+    }
+
+    /// Run-wide served P@1 (NaN when nothing completed).
+    pub fn served_accuracy(&self) -> f64 {
+        if self.requests.is_empty() {
+            return f64::NAN;
+        }
+        self.requests.iter().filter(|r| r.hit).count() as f64 / self.requests.len() as f64
+    }
+
+    /// Run-wide mean staleness in mega-batches (NaN without a timeline).
+    pub fn mean_staleness(&self) -> f64 {
+        let s: Vec<f64> =
+            self.batches.iter().filter_map(|b| b.staleness.map(|x| x as f64)).collect();
+        if s.is_empty() {
+            f64::NAN
+        } else {
+            stats::mean(&s)
+        }
+    }
+
+    pub fn max_queue_depth(&self) -> usize {
+        self.rows.iter().map(|r| r.max_queue_depth).max().unwrap_or(0)
+    }
+
+    /// JSON export (window rows + run-wide summary; raw per-request records
+    /// stay in memory only). NaN telemetry (empty windows) exports as
+    /// `null` — "NaN" is not valid JSON.
+    pub fn to_json(&self) -> Json {
+        fn num(x: f64) -> Json {
+            if x.is_finite() {
+                Json::num(x)
+            } else {
+                Json::Null
+            }
+        }
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("duration", num(self.duration)),
+            ("requests", Json::int(self.total_requests() as i64)),
+            ("p50_ms", num(self.latency_percentile_ms(50.0))),
+            ("p95_ms", num(self.latency_percentile_ms(95.0))),
+            ("p99_ms", num(self.latency_percentile_ms(99.0))),
+            ("throughput_rps", num(self.throughput())),
+            ("served_accuracy", num(self.served_accuracy())),
+            ("mean_staleness_mb", num(self.mean_staleness())),
+            (
+                "windows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("window", Json::int(r.window as i64)),
+                        ("admitted", Json::int(r.admitted as i64)),
+                        ("completed", Json::int(r.completed as i64)),
+                        ("batches", Json::int(r.batches as i64)),
+                        ("p50_ms", num(r.p50_ms)),
+                        ("p95_ms", num(r.p95_ms)),
+                        ("p99_ms", num(r.p99_ms)),
+                        ("throughput_rps", num(r.throughput)),
+                        ("max_queue_depth", Json::int(r.max_queue_depth as i64)),
+                        ("mean_fill", num(r.mean_fill)),
+                        ("mean_staleness_mb", num(r.mean_staleness)),
+                        ("served_accuracy", num(r.served_accuracy)),
+                        ("train_accuracy", num(r.train_accuracy)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, completion: f64, hit: bool) -> RequestRecord {
+        RequestRecord { id, arrival, completion, hit }
+    }
+
+    fn batch(formed_at: f64, completion: f64, valid: usize, version: u64) -> BatchRecord {
+        BatchRecord {
+            formed_at,
+            start: formed_at,
+            completion,
+            device: 0,
+            bucket: 16,
+            valid,
+            version,
+            staleness: Some(1),
+        }
+    }
+
+    #[test]
+    fn windows_split_by_completion_and_empty_windows_are_nan() {
+        let requests = vec![
+            req(0, 0.01, 0.02, true),
+            req(1, 0.02, 0.04, false),
+            // Nothing completes in window 1 (0.25..0.5).
+            req(2, 0.24, 0.55, true),
+        ];
+        let batches = vec![batch(0.01, 0.02, 8, 1), batch(0.24, 0.55, 4, 2)];
+        let log = ServeLog::summarize(
+            "t",
+            0.75,
+            0.25,
+            requests,
+            batches,
+            &[(0.01, 3), (0.26, 9)],
+            Vec::new(),
+            None,
+        );
+        assert_eq!(log.rows.len(), 3);
+        assert_eq!(log.rows[0].completed, 2);
+        assert_eq!(log.rows[0].admitted, 2);
+        assert!(log.rows[0].p50_ms > 0.0);
+        assert_eq!(log.rows[0].served_accuracy, 0.5);
+        assert_eq!(log.rows[0].min_version, 1);
+        // Window 1: one arrival, zero completions — NaN percentiles, not a
+        // panic (the satellite fix this subsystem depends on).
+        assert_eq!(log.rows[1].admitted, 1);
+        assert_eq!(log.rows[1].completed, 0);
+        assert!(log.rows[1].p99_ms.is_nan());
+        assert!(log.rows[1].served_accuracy.is_nan());
+        assert_eq!(log.rows[1].max_queue_depth, 9);
+        // Window 2 catches the late completion.
+        assert_eq!(log.rows[2].completed, 1);
+        assert_eq!(log.rows[2].max_version, 2);
+        assert!((log.rows[2].mean_fill - 0.25).abs() < 1e-12);
+        // Run-wide summary.
+        assert_eq!(log.total_requests(), 3);
+        assert!((log.served_accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((log.mean_staleness() - 1.0).abs() < 1e-12);
+        assert_eq!(log.max_queue_depth(), 9);
+        assert!(log.latency_percentile_ms(99.0) > 0.0);
+    }
+
+    #[test]
+    fn horizon_extends_past_the_nominal_duration() {
+        let requests = vec![req(0, 0.1, 1.4, true)];
+        let log = ServeLog::summarize(
+            "t",
+            0.5,
+            0.25,
+            requests,
+            Vec::new(),
+            &[],
+            Vec::new(),
+            None,
+        );
+        // 1.4s completion stretches the window set to 6 windows.
+        assert_eq!(log.rows.len(), 6);
+        assert_eq!(log.rows[5].completed, 1);
+        // Delivered throughput excludes the completion past the nominal
+        // duration — overload shows up instead of echoing the offered rate.
+        assert_eq!(log.throughput(), 0.0);
+    }
+
+    #[test]
+    fn json_exports_summary_and_windows() {
+        let log = ServeLog::summarize(
+            "t",
+            0.25,
+            0.25,
+            vec![req(0, 0.0, 0.01, true)],
+            Vec::new(),
+            &[],
+            Vec::new(),
+            None,
+        );
+        let parsed = Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("requests").as_i64(), Some(1));
+        assert_eq!(parsed.get("windows").as_arr().unwrap().len(), 1);
+        assert!(parsed.get("p99_ms").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! The serving plane: online inference over trained snapshots — the
+//! train→serve loop the ROADMAP north star asks for ("serves heavy traffic
+//! from millions of users") built from the same primitives as training.
+//!
+//! * [`registry`] — [`SnapshotRegistry`]: versioned immutable
+//!   `Arc<ModelState>` snapshots with atomic hot-swap; fed by the trainer's
+//!   publish hook at mega-batch boundaries and by `model::checkpoint`
+//!   files.
+//! * [`admission`] — [`Admission`]: deadline-aware micro-batching of
+//!   sparse requests onto the training bucket grid, reusing
+//!   `pad_sample_into` + `BufferPool` so steady-state admission performs
+//!   no per-request buffer allocation.
+//! * [`router`] — [`Router`]: speed-aware routing over the device roster
+//!   (earliest-virtual-free-time, the same rule as training's dynamic
+//!   dispatch); pool churn shrinks/grows capacity live while in-flight
+//!   batches drain.
+//! * [`traffic`] — open-loop workload generation (Poisson / bursty
+//!   arrivals, nnz-biased draws from the shard manifests).
+//! * [`latency`] — windowed p50/p95/p99, throughput, queue depth, batch
+//!   fill, staleness, and served-accuracy telemetry.
+//!
+//! [`replay`] ties them together as a deterministic discrete-event loop on
+//! the same virtual clock training uses, which is what makes serving runs
+//! bit-reproducible (`integration_serve.rs` pins this) and lets
+//! train-while-serve interleave a recorded publish timeline with a traffic
+//! trace without nondeterministic threads.
+
+pub mod admission;
+pub mod latency;
+pub mod registry;
+pub mod router;
+pub mod traffic;
+
+pub use admission::{AdmittedBatch, Admission};
+pub use latency::{BatchRecord, RequestRecord, ServeLog, ServeWindow};
+pub use registry::{Snapshot, SnapshotRegistry};
+pub use router::{Routed, Router};
+pub use traffic::Arrival;
+
+use std::sync::Arc;
+
+use crate::config::{Config, ServePattern};
+use crate::coordinator::backend::StepBackend;
+use crate::coordinator::DevicePool;
+use crate::data::pipeline::ShardedDataset;
+use crate::metrics::RunLog;
+use crate::runtime::CostModel;
+use crate::Result;
+
+/// How one replay run is driven.
+#[derive(Clone, Debug)]
+pub struct ReplayOptions<'a> {
+    pub pattern: ServePattern,
+    /// Trace length in virtual seconds. For train-while-serve pass the
+    /// training run's final clock so the serving timeline spans training.
+    pub duration: f64,
+    /// Follow the registry's publish timeline (`snapshot_at_clock`) instead
+    /// of always serving the latest snapshot — train-while-serve replay.
+    pub follow_clock: bool,
+    /// Training run to measure staleness / accuracy tracking against:
+    /// timeline replays (`follow_clock`) measure staleness at formation
+    /// time, steady-state replays against the end of the run.
+    pub train_log: Option<&'a RunLog>,
+    pub name: String,
+}
+
+/// Replay a synthetic trace against the registry on a virtual clock:
+/// generate arrivals, micro-batch them under the admission deadline, route
+/// speed-aware over the (churning) serving pool, evaluate against the live
+/// snapshot, and fold telemetry into windows.
+///
+/// Deterministic for a fixed (config, corpus, registry content): same seed
+/// → bit-identical `ServeLog`.
+pub fn replay(
+    cfg: &Config,
+    data: Arc<ShardedDataset>,
+    registry: &SnapshotRegistry,
+    eval_backend: &dyn StepBackend,
+    opts: &ReplayOptions<'_>,
+) -> Result<ServeLog> {
+    anyhow::ensure!(!registry.is_empty(), "nothing to serve: the snapshot registry is empty");
+    let arrivals =
+        traffic::generate(opts.pattern, &cfg.serve, &data, opts.duration, cfg.serve.seed);
+
+    let mut admission = Admission::new(data.clone(), &cfg.model, cfg);
+    let mut pool = DevicePool::with_trace(cfg, &cfg.serve.events)?;
+    let mut router =
+        Router::new(DevicePool::roster(cfg), pool.active_ids(), CostModel::default());
+
+    let window = cfg.serve.window;
+    let mut requests: Vec<RequestRecord> = Vec::with_capacity(arrivals.len());
+    let mut batches: Vec<BatchRecord> = Vec::new();
+    let mut depth_samples: Vec<(f64, usize)> = Vec::new();
+    let mut pool_events: Vec<crate::metrics::PoolEventRow> = Vec::new();
+
+    // Scripted churn lands at telemetry-window boundaries (the serving
+    // analog of training's mega-batch barrier); `next_window` is the next
+    // boundary not yet applied.
+    let mut next_window = 0usize;
+    let mut churn_until = |t: f64,
+                           pool: &mut DevicePool,
+                           router: &mut Router,
+                           pool_events: &mut Vec<crate::metrics::PoolEventRow>| {
+        while (next_window as f64) * window <= t {
+            let events = pool.begin_mega_batch(next_window);
+            if !events.is_empty() {
+                router.set_active(&pool.active_ids());
+            }
+            for ev in events {
+                pool_events.push(crate::metrics::PoolEventRow {
+                    mega_batch: ev.mega_batch,
+                    device: ev.device,
+                    action: ev.action.name().to_string(),
+                    reason: ev.reason.clone(),
+                });
+            }
+            next_window += 1;
+        }
+    };
+
+    let dispatch = |ab: AdmittedBatch,
+                        admission: &Admission,
+                        router: &mut Router,
+                        requests: &mut Vec<RequestRecord>,
+                        batches: &mut Vec<BatchRecord>|
+     -> Result<()> {
+        let t = ab.formed_at;
+        let snap = if opts.follow_clock {
+            registry.snapshot_at_clock(t)
+        } else {
+            registry.current()
+        }
+        .expect("registry checked non-empty");
+        let routed = router.route(t, &ab.batch);
+        let preds = eval_backend.eval(&snap.model, &ab.batch)?;
+        // Staleness in mega-batches: how far training had moved past the
+        // served snapshot. Timeline replays measure against the training
+        // clock at formation time; steady-state (post-training) serving
+        // measures against the end of the run.
+        let staleness = match (opts.train_log, snap.mega_batch) {
+            (Some(log), Some(p)) => {
+                let completed = if opts.follow_clock {
+                    log.mega_batches_completed_at(t)
+                } else {
+                    log.rows.len()
+                };
+                Some(completed.saturating_sub(p + 1))
+            }
+            _ => None,
+        };
+        for (row, (&rid, &arrival)) in ab.request_ids.iter().zip(&ab.arrivals).enumerate() {
+            let sample_id = ab.batch.sample_ids[row] as usize;
+            let hit = data.sample(sample_id).labels.contains(&(preds[row].max(0) as u32));
+            requests.push(RequestRecord {
+                id: rid,
+                arrival,
+                completion: routed.completion,
+                hit,
+            });
+        }
+        batches.push(BatchRecord {
+            formed_at: t,
+            start: routed.start,
+            completion: routed.completion,
+            device: routed.device,
+            bucket: ab.batch.bucket,
+            valid: ab.batch.valid,
+            version: snap.version,
+            staleness,
+        });
+        admission.recycle(ab.batch);
+        Ok(())
+    };
+
+    // Discrete-event loop: the next event is either the next arrival or the
+    // oldest pending request's formation deadline, whichever is earlier
+    // (ties go to the arrival so the deadline flush sees the full queue).
+    let mut i = 0usize;
+    let mut next_id = 0u64;
+    while i < arrivals.len() || admission.queue_depth() > 0 {
+        let t_arr = arrivals.get(i).map(|a| a.at).unwrap_or(f64::INFINITY);
+        let t_dead = admission.deadline().unwrap_or(f64::INFINITY);
+        if t_arr <= t_dead {
+            churn_until(t_arr, &mut pool, &mut router, &mut pool_events);
+            admission.push(next_id, arrivals[i].sample_id, t_arr);
+            next_id += 1;
+            i += 1;
+            depth_samples.push((t_arr, admission.queue_depth()));
+            while let Some(ab) = admission.pop_full(t_arr) {
+                dispatch(ab, &admission, &mut router, &mut requests, &mut batches)?;
+            }
+        } else {
+            churn_until(t_dead, &mut pool, &mut router, &mut pool_events);
+            if let Some(ab) = admission.flush(t_dead) {
+                dispatch(ab, &admission, &mut router, &mut requests, &mut batches)?;
+            }
+        }
+    }
+
+    Ok(ServeLog::summarize(
+        opts.name.clone(),
+        opts.duration,
+        window,
+        requests,
+        batches,
+        &depth_samples,
+        pool_events,
+        opts.train_log,
+    ))
+}

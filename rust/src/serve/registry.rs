@@ -1,0 +1,269 @@
+//! Versioned registry of immutable model snapshots with atomic hot-swap —
+//! the seam between the trainer (publisher) and the serving plane
+//! (reader).
+//!
+//! A snapshot is an `Arc<ModelState>`: once published it is immutable, so
+//! a reader that has cloned the `Arc` can never observe a torn or
+//! half-written model regardless of how many publishes race past it —
+//! hot-swap replaces the *pointer*, never the parameters. The trainer
+//! pushes the merged global model here at mega-batch boundaries
+//! (`TrainerOptions::publish`, cadence `[serve] publish_every`), and the
+//! registry can also seed itself from `model::checkpoint` files, so
+//! `--resume`-style artifacts become servable without a training run.
+//!
+//! The full publish history is retained (bounded by
+//! [`SnapshotRegistry::with_history_cap`]) because train-while-serve
+//! replay needs to answer "which snapshot was live at training-clock `t`"
+//! ([`SnapshotRegistry::snapshot_at_clock`]).
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::model::ModelState;
+use crate::Result;
+
+/// One published, immutable model version.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Monotone publish counter (1-based; 0 means "nothing published").
+    pub version: u64,
+    /// Mega-batch whose merge produced this model (None for checkpoint
+    /// loads and the pre-training init publish).
+    pub mega_batch: Option<usize>,
+    /// Training clock at publish time (-1.0 for checkpoint loads, so they
+    /// order before any training-time publish).
+    pub published_clock: f64,
+    pub model: Arc<ModelState>,
+}
+
+/// Thread-safe snapshot store: one atomic "current" pointer plus the
+/// version-ordered history.
+pub struct SnapshotRegistry {
+    current: RwLock<Option<Arc<Snapshot>>>,
+    history: Mutex<Vec<Arc<Snapshot>>>,
+    history_cap: usize,
+    next_version: AtomicU64,
+}
+
+impl fmt::Debug for SnapshotRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SnapshotRegistry")
+            .field("latest_version", &self.latest_version())
+            .field("history_len", &self.history.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl Default for SnapshotRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotRegistry {
+    /// Registry with unbounded history (replay-capable).
+    pub fn new() -> SnapshotRegistry {
+        Self::with_history_cap(usize::MAX)
+    }
+
+    /// Registry that retains only the `cap` most recent snapshots (long
+    /// production runs; `snapshot_at_clock` then only sees that window).
+    pub fn with_history_cap(cap: usize) -> SnapshotRegistry {
+        SnapshotRegistry {
+            current: RwLock::new(None),
+            history: Mutex::new(Vec::new()),
+            history_cap: cap.max(1),
+            next_version: AtomicU64::new(1),
+        }
+    }
+
+    /// Publish a model: assign the next version, record it in the history,
+    /// and atomically swap the current pointer (in that order — readers
+    /// only learn of a snapshot once it is fully fetchable). Returns the
+    /// version. The intended topology is a single publishing trainer; with
+    /// racing publishers the last current-pointer store wins.
+    pub fn publish(&self, model: ModelState, mega_batch: Option<usize>, clock: f64) -> u64 {
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed);
+        let snap = Arc::new(Snapshot {
+            version,
+            mega_batch,
+            published_clock: clock,
+            model: Arc::new(model),
+        });
+        {
+            let mut h = self.history.lock().unwrap();
+            h.push(snap.clone());
+            if h.len() > self.history_cap {
+                let drop_n = h.len() - self.history_cap;
+                h.drain(..drop_n);
+            }
+        }
+        *self.current.write().unwrap() = Some(snap);
+        version
+    }
+
+    /// Seed the registry from a saved checkpoint (version with no
+    /// mega-batch, clock −1 so it orders before any live publish).
+    pub fn load_checkpoint(&self, path: &Path) -> Result<u64> {
+        let model = crate::model::checkpoint::load(path)?;
+        Ok(self.publish_loaded(model))
+    }
+
+    /// Publish an already-loaded artifact model (checkpoint semantics).
+    pub fn publish_loaded(&self, model: ModelState) -> u64 {
+        self.publish(model, None, -1.0)
+    }
+
+    /// The currently-served snapshot (cheap: one `Arc` clone under a read
+    /// lock).
+    pub fn current(&self) -> Option<Arc<Snapshot>> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The snapshot that was live at training-clock `t`: the newest with
+    /// `published_clock <= t`, falling back to the oldest retained snapshot
+    /// when `t` precedes every publish (serving warm-starts on whatever
+    /// model exists). None only when nothing was ever published.
+    pub fn snapshot_at_clock(&self, t: f64) -> Option<Arc<Snapshot>> {
+        let h = self.history.lock().unwrap();
+        h.iter().rev().find(|s| s.published_clock <= t).or_else(|| h.first()).cloned()
+    }
+
+    /// Version-ordered publish history (clones of the `Arc`s).
+    pub fn history(&self) -> Vec<Arc<Snapshot>> {
+        self.history.lock().unwrap().clone()
+    }
+
+    /// Version of the currently-served snapshot (0 before the first
+    /// publish). Derived from `current`, not the version counter, so it
+    /// never names a version a concurrent reader cannot yet fetch —
+    /// `publish` bumps the counter before the snapshot becomes visible.
+    pub fn latest_version(&self) -> u64 {
+        self.current.read().unwrap().as_ref().map(|s| s.version).unwrap_or(0)
+    }
+
+    /// True until the first publish is fully visible. `!is_empty()`
+    /// guarantees `current()` is `Some` and the history is non-empty (the
+    /// current pointer is stored last in `publish`).
+    pub fn is_empty(&self) -> bool {
+        self.current.read().unwrap().is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 32, hidden: 4, classes: 8, max_nnz: 4, max_labels: 2 }
+    }
+
+    /// A model whose every parameter equals `v` — torn reads would show as
+    /// mixed values.
+    fn constant_model(v: f32) -> ModelState {
+        let mut m = ModelState::zeros(&dims());
+        for seg in m.segments_mut() {
+            seg.fill(v);
+        }
+        m
+    }
+
+    fn uniform_value(m: &ModelState) -> Option<f32> {
+        let first = m.w1[0];
+        m.segments()
+            .iter()
+            .all(|s| s.iter().all(|&x| x == first))
+            .then_some(first)
+    }
+
+    #[test]
+    fn publish_bumps_versions_and_swaps_current() {
+        let reg = SnapshotRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.current().is_none());
+        let v1 = reg.publish(constant_model(1.0), Some(0), 0.5);
+        let v2 = reg.publish(constant_model(2.0), Some(1), 1.5);
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(reg.latest_version(), 2);
+        let cur = reg.current().unwrap();
+        assert_eq!(cur.version, 2);
+        assert_eq!(uniform_value(&cur.model), Some(2.0));
+        assert_eq!(reg.history().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_at_clock_picks_the_live_version() {
+        let reg = SnapshotRegistry::new();
+        reg.publish(constant_model(1.0), Some(0), 1.0);
+        reg.publish(constant_model(2.0), Some(1), 2.0);
+        reg.publish(constant_model(3.0), Some(2), 3.0);
+        assert_eq!(reg.snapshot_at_clock(2.5).unwrap().version, 2);
+        assert_eq!(reg.snapshot_at_clock(3.0).unwrap().version, 3);
+        // Before the first publish: warm-start on the oldest snapshot.
+        assert_eq!(reg.snapshot_at_clock(0.1).unwrap().version, 1);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_into_the_registry() {
+        let dir = std::env::temp_dir().join("hs-serve-registry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("served.ckpt");
+        let m = ModelState::init(&dims(), 5);
+        crate::model::checkpoint::save(&m, &path).unwrap();
+
+        let reg = SnapshotRegistry::new();
+        let v = reg.load_checkpoint(&path).unwrap();
+        assert_eq!(v, 1);
+        let snap = reg.current().unwrap();
+        assert_eq!(snap.mega_batch, None);
+        assert!(snap.published_clock < 0.0);
+        assert_eq!(*snap.model, m);
+        // A checkpoint snapshot serves at any clock.
+        assert_eq!(reg.snapshot_at_clock(0.0).unwrap().version, 1);
+        assert!(reg.load_checkpoint(&dir.join("missing.ckpt")).is_err());
+    }
+
+    #[test]
+    fn history_cap_keeps_only_the_tail() {
+        let reg = SnapshotRegistry::with_history_cap(2);
+        for i in 0..5 {
+            reg.publish(constant_model(i as f32), Some(i), i as f64);
+        }
+        let h = reg.history();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].version, 4);
+        assert_eq!(h[1].version, 5);
+        assert_eq!(reg.current().unwrap().version, 5);
+    }
+
+    /// Concurrent publishes against concurrent reads: every read observes a
+    /// fully-published model (all parameters from the same version) and
+    /// versions move monotonically.
+    #[test]
+    fn hot_swap_is_atomic_under_concurrent_publishes() {
+        let reg = Arc::new(SnapshotRegistry::with_history_cap(4));
+        reg.publish(constant_model(0.0), Some(0), 0.0);
+        let writer = {
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                for i in 1..200u32 {
+                    reg.publish(constant_model(i as f32), Some(i as usize), i as f64);
+                }
+            })
+        };
+        let mut last_version = 0;
+        for _ in 0..2000 {
+            let snap = reg.current().unwrap();
+            let v = uniform_value(&snap.model)
+                .expect("served model must never mix parameter versions");
+            assert_eq!(v as u64 + 1, snap.version, "model content matches its version");
+            assert!(snap.version >= last_version, "versions move forward");
+            last_version = snap.version;
+        }
+        writer.join().unwrap();
+        assert_eq!(reg.current().unwrap().version, 200);
+    }
+}

@@ -1,0 +1,172 @@
+//! Speed-aware micro-batch routing over the device roster.
+//!
+//! Each active device holds an inference replica (a clone of the current
+//! snapshot `Arc` — pointer, not parameters), and admitted batches route
+//! with the *same rule training uses for dynamic dispatch*: the batch goes
+//! to the active device with the earliest virtual free time, ties broken
+//! toward the lower id. Faster devices therefore drain more batches per
+//! second, exactly proportional to their relative throughput — no static
+//! partitioning, no weights to tune.
+//!
+//! Pool churn (`[serve] events` through [`DevicePool::begin_mega_batch`])
+//! shrinks or grows serving capacity live: [`Router::set_active`] only
+//! affects *future* routing decisions, so batches already dispatched to a
+//! removed device drain to completion — every admitted request is answered
+//! exactly once across churn.
+
+use crate::data::PaddedBatch;
+use crate::runtime::{CostModel, SimDevice};
+
+/// Outcome of routing one micro-batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Routed {
+    /// Device (global roster id) that serves the batch.
+    pub device: usize,
+    /// Virtual time service starts (>= formation time; queueing shows up
+    /// as `start − formed_at`).
+    pub start: f64,
+    /// Virtual completion time.
+    pub completion: f64,
+}
+
+/// Earliest-free routing over the roster's heterogeneity model.
+pub struct Router {
+    devices: Vec<SimDevice>,
+    free_time: Vec<f64>,
+    active: Vec<usize>,
+    cost: CostModel,
+    routed: Vec<u64>,
+}
+
+impl Router {
+    /// `devices` is the full roster ([`DevicePool::roster`]); `active` the
+    /// initially-active subset.
+    pub fn new(devices: Vec<SimDevice>, active: Vec<usize>, cost: CostModel) -> Router {
+        assert!(!devices.is_empty());
+        let n = devices.len();
+        let mut r = Router { devices, free_time: vec![0.0; n], active: Vec::new(), cost, routed: vec![0; n] };
+        r.set_active(&active);
+        r
+    }
+
+    /// Apply a pool-membership change. In-flight work on departed devices
+    /// drains (their `free_time` stays); only future routing changes.
+    pub fn set_active(&mut self, ids: &[usize]) {
+        assert!(!ids.is_empty(), "serving needs at least one active device");
+        assert!(ids.iter().all(|&d| d < self.devices.len()), "active id outside roster");
+        self.active = ids.to_vec();
+    }
+
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Route one batch at time `now`: earliest-free active device wins
+    /// (training's dynamic-dispatch rule), then its virtual clock advances
+    /// by the heterogeneity-modeled inference duration.
+    pub fn route(&mut self, now: f64, batch: &PaddedBatch) -> Routed {
+        let device = *self
+            .active
+            .iter()
+            .min_by(|&&a, &&b| {
+                let ka = self.free_time[a].max(now);
+                let kb = self.free_time[b].max(now);
+                ka.partial_cmp(&kb).unwrap().then(a.cmp(&b))
+            })
+            .expect("router has an active device");
+        let start = self.free_time[device].max(now);
+        let completion = start + self.devices[device].infer_duration(&self.cost, batch);
+        self.free_time[device] = completion;
+        self.routed[device] += 1;
+        Routed { device, start, completion }
+    }
+
+    /// Batches routed per roster device so far.
+    pub fn routed(&self) -> &[u64] {
+        &self.routed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn batch(bucket: usize, nnz: usize) -> PaddedBatch {
+        let mut b = PaddedBatch::with_shape(bucket, 4, 2);
+        b.valid = bucket;
+        b.nnz = nnz;
+        b
+    }
+
+    fn router(jitter: f64) -> Router {
+        let cfg = DeviceConfig { jitter, ..Default::default() }; // factors 1.0..1.32
+        Router::new(SimDevice::fleet(&cfg), vec![0, 1, 2, 3], CostModel::default())
+    }
+
+    #[test]
+    fn faster_devices_serve_more_batches() {
+        let mut r = router(0.0);
+        let b = batch(32, 32 * 12);
+        let mut last_completion = 0.0f64;
+        for _ in 0..400 {
+            last_completion = r.route(0.0, &b).completion.max(last_completion);
+        }
+        let routed = r.routed().to_vec();
+        assert_eq!(routed.iter().sum::<u64>(), 400);
+        assert!(routed[0] > routed[3], "fastest beats slowest: {routed:?}");
+        // Share tracks relative speed (1.32 gap ⇒ roughly 32% more work).
+        let ratio = routed[0] as f64 / routed[3] as f64;
+        assert!((1.2..1.5).contains(&ratio), "throughput ratio {ratio}");
+        assert!(last_completion > 0.0);
+    }
+
+    #[test]
+    fn idle_routing_starts_at_now_and_queues_stack() {
+        let mut r = router(0.0);
+        let b = batch(16, 16 * 12);
+        let first = r.route(5.0, &b);
+        assert_eq!(first.start, 5.0, "idle device starts at the request time");
+        // Saturate device 0 (all four then one more).
+        for _ in 0..3 {
+            r.route(5.0, &b);
+        }
+        let queued = r.route(5.0, &b);
+        assert!(queued.start > 5.0, "fifth batch queues behind the first round");
+        assert!(queued.completion > queued.start);
+    }
+
+    #[test]
+    fn churn_only_affects_future_routing() {
+        let mut r = router(0.0);
+        let b = batch(32, 32 * 12);
+        for _ in 0..8 {
+            r.route(0.0, &b);
+        }
+        let before = r.routed().to_vec();
+        r.set_active(&[1, 2]);
+        for _ in 0..10 {
+            r.route(1.0, &b);
+        }
+        let after = r.routed().to_vec();
+        assert_eq!(after[0], before[0], "removed device gets no new work");
+        assert_eq!(after[3], before[3]);
+        assert_eq!(after[1] + after[2] - before[1] - before[2], 10);
+        // Re-adding resumes routing to the whole fleet.
+        r.set_active(&[0, 1, 2, 3]);
+        for _ in 0..4 {
+            r.route(50.0, &b);
+        }
+        assert!(r.routed()[0] > before[0]);
+    }
+
+    #[test]
+    fn deterministic_with_zero_jitter() {
+        let run = || {
+            let mut r = router(0.0);
+            let b = batch(32, 32 * 12);
+            (0..50).map(|i| r.route(i as f64 * 1e-3, &b)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

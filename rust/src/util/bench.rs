@@ -56,6 +56,9 @@ pub fn fmt_ns(ns: f64) -> String {
 /// Run `f` repeatedly: `warmup` untimed iterations then `iters` timed ones.
 /// The closure's return value is black-boxed to keep the optimizer honest.
 pub fn bench_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    // `stats::percentile` returns NaN on empty input; a zero-iteration bench
+    // would silently record NaN into the baseline JSONs, so reject it here.
+    assert!(iters >= 1, "bench_fn('{name}') needs at least one timed iteration");
     for _ in 0..warmup {
         std::hint::black_box(f());
     }

@@ -72,9 +72,15 @@ impl Ewma {
 }
 
 /// Percentile with linear interpolation (sorts a copy; fine for bench sizes).
+///
+/// Returns `f64::NAN` for an empty slice — serving-telemetry windows with
+/// zero completed requests are a normal state, not a caller bug, and NaN
+/// renders as "NaN"/`null` in tables and JSON instead of panicking.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    assert!(!samples.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p));
+    if samples.is_empty() {
+        return f64::NAN;
+    }
     let mut v: Vec<f64> = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = p / 100.0 * (v.len() - 1) as f64;
@@ -147,6 +153,20 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 100.0), 4.0);
         assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_empty_slice_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 0.0).is_nan());
+        assert!(percentile(&[], 99.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_of_single_element_is_that_element() {
+        for p in [0.0, 10.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
     }
 
     #[test]

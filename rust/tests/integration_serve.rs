@@ -1,0 +1,253 @@
+//! Integration over the serving plane (hermetic, reference backend):
+//! bit-deterministic virtual-time latency accounting, hot-swap atomicity
+//! and request conservation under scripted pool churn, and train-while-
+//! serve accuracy tracking with bounded snapshot staleness.
+
+use std::sync::Arc;
+
+use heterosparse::config::{
+    Config, DataConfig, DeviceConfig, ModelDims, ServePattern, SgdConfig,
+};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::data::pipeline::ShardedDataset;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::model::ModelState;
+use heterosparse::serve::{replay, ReplayOptions, ServeLog, SnapshotRegistry};
+
+fn serve_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 8,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 8,
+        initial_batch: 32,
+        warmup_mega_batches: 0,
+        seed: 3,
+    };
+    cfg.devices = DeviceConfig {
+        count: 4,
+        speed_factors: vec![1.0, 1.1, 1.21, 1.32],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 11,
+    };
+    cfg.data =
+        DataConfig { train_samples: 2_000, test_samples: 400, avg_nnz: 6.0, ..Default::default() };
+    cfg.serve.rate = 5_000.0;
+    cfg.serve.duration = 1.0;
+    cfg.serve.window = 0.1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn corpus(cfg: &Config) -> Arc<ShardedDataset> {
+    let ds = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    Arc::new(ShardedDataset::from_dataset(&ds, cfg.data.pipeline.shard_samples))
+}
+
+/// A model whose every parameter equals `v` — a torn read (parameters from
+/// two versions mixed) would be non-uniform.
+fn constant_model(cfg: &Config, v: f32) -> ModelState {
+    let mut m = ModelState::zeros(&cfg.model);
+    for seg in m.segments_mut() {
+        seg.fill(v);
+    }
+    m
+}
+
+/// Same seed → bit-identical serving runs: every latency percentile, every
+/// window row, every batch record.
+#[test]
+fn virtual_time_serving_is_bit_deterministic() {
+    let cfg = serve_cfg();
+    let data = corpus(&cfg);
+    let run = || -> ServeLog {
+        let reg = SnapshotRegistry::new();
+        reg.publish(ModelState::init(&cfg.model, 5), Some(0), 0.0);
+        replay(
+            &cfg,
+            data.clone(),
+            &reg,
+            &RefBackend,
+            &ReplayOptions {
+                pattern: ServePattern::Bursty,
+                duration: cfg.serve.duration,
+                follow_clock: false,
+                train_log: None,
+                name: "det".to_string(),
+            },
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.total_requests() > 1_000, "trace too small: {}", a.total_requests());
+    for p in [50.0, 95.0, 99.0] {
+        assert_eq!(
+            a.latency_percentile_ms(p).to_bits(),
+            b.latency_percentile_ms(p).to_bits(),
+            "p{p} must be bit-identical"
+        );
+    }
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.p99_ms.to_bits(), y.p99_ms.to_bits(), "window {}", x.window);
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.max_queue_depth, y.max_queue_depth);
+    }
+    // And the telemetry is non-trivial: positive latencies, served batches.
+    assert!(a.latency_percentile_ms(50.0) > 0.0);
+    assert!(!a.batches.is_empty());
+}
+
+/// Scripted pool churn mid-serve: every admitted request is answered
+/// exactly once, no batch routes to the removed device while it is out,
+/// and every served snapshot is a fully-published version (hot-swap never
+/// exposes a torn model).
+#[test]
+fn hot_swap_under_churn_conserves_requests_and_serves_whole_versions() {
+    let mut cfg = serve_cfg();
+    // Window = 0.1s: device 0 leaves at the 3rd boundary, returns at the 7th.
+    cfg.serve.events =
+        vec!["at_mb=3 remove_id=0".to_string(), "at_mb=7 add_id=0".to_string()];
+    cfg.validate().unwrap();
+    let data = corpus(&cfg);
+
+    // Three constant-valued versions published at clocks 0.0 / 0.4 / 0.8;
+    // follow_clock replays the hot-swaps mid-trace.
+    let reg = SnapshotRegistry::new();
+    for (i, clock) in [(1usize, 0.0), (2, 0.4), (3, 0.8)] {
+        reg.publish(constant_model(&cfg, i as f32 * 0.01), Some(i - 1), clock);
+    }
+    let log = replay(
+        &cfg,
+        data.clone(),
+        &reg,
+        &RefBackend,
+        &ReplayOptions {
+            pattern: ServePattern::Poisson,
+            duration: cfg.serve.duration,
+            follow_clock: true,
+            train_log: None,
+            name: "churn".to_string(),
+        },
+    )
+    .unwrap();
+
+    // Request conservation: ids are assigned 0..n in arrival order; every
+    // one must complete exactly once, across churn and deadline flushes.
+    let mut ids: Vec<u64> = log.requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..log.requests.len() as u64).collect::<Vec<_>>());
+    assert!(log.requests.iter().all(|r| r.completion > r.arrival));
+
+    // The removed device serves nothing between the boundaries.
+    assert_eq!(log.pool_events.len(), 2, "{:?}", log.pool_events);
+    assert_eq!(log.pool_events[0].action, "remove");
+    assert_eq!(log.pool_events[1].action, "add");
+    let (out_at, back_at) = (0.3, 0.7);
+    let mut served_while_out = 0usize;
+    let mut device0_total = 0usize;
+    for b in &log.batches {
+        if b.device == 0 {
+            device0_total += 1;
+            if b.formed_at > out_at + 1e-9 && b.formed_at < back_at - 1e-9 {
+                served_while_out += 1;
+            }
+        }
+    }
+    assert_eq!(served_while_out, 0, "removed device took new work");
+    assert!(device0_total > 0, "device 0 must serve outside the churn window");
+
+    // Hot-swap atomicity: every batch names a published version, versions
+    // follow the publish timeline monotonically, and each version's model
+    // is internally consistent (all parameters from the same publish).
+    assert!(log.batches.iter().all(|b| (1..=3).contains(&b.version)));
+    assert!(log.batches.windows(2).all(|w| w[0].version <= w[1].version));
+    let versions: std::collections::HashSet<u64> =
+        log.batches.iter().map(|b| b.version).collect();
+    assert_eq!(versions.len(), 3, "all three snapshots must serve traffic");
+    for snap in reg.history() {
+        let expect = snap.version as f32 * 0.01;
+        assert!(
+            snap.model.segments().iter().all(|s| s.iter().all(|&x| x == expect)),
+            "version {} model is torn",
+            snap.version
+        );
+    }
+}
+
+/// Train-while-serve: the served snapshot's accuracy climbs with the
+/// training curve and its staleness stays bounded by `publish_every − 1`.
+#[test]
+fn train_while_serve_tracks_the_training_curve_with_bounded_staleness() {
+    let mut cfg = serve_cfg();
+    cfg.serve.publish_every = 2;
+    cfg.serve.rate = 30_000.0;
+    cfg.validate().unwrap();
+
+    let registry = Arc::new(SnapshotRegistry::new());
+    let opts = TrainerOptions { publish: Some(registry.clone()), ..Default::default() };
+    let train_log = run_single(&cfg, Backend::Reference, opts).unwrap();
+    let final_clock = train_log.rows.last().unwrap().clock;
+    // Init + one publish per 2 mega-batches over 8.
+    assert_eq!(registry.history().len(), 5);
+
+    let mut tws_cfg = cfg.clone();
+    tws_cfg.serve.window = final_clock / 8.0;
+    let data = corpus(&cfg);
+    let log = replay(
+        &tws_cfg,
+        data,
+        &registry,
+        &RefBackend,
+        &ReplayOptions {
+            pattern: ServePattern::Poisson,
+            duration: final_clock,
+            follow_clock: true,
+            train_log: Some(&train_log),
+            name: "tws".to_string(),
+        },
+    )
+    .unwrap();
+    assert!(log.total_requests() > 500, "trace too small: {}", log.total_requests());
+
+    // Staleness is measured and bounded by the publish cadence.
+    let staleness: Vec<usize> = log.batches.iter().filter_map(|b| b.staleness).collect();
+    assert!(!staleness.is_empty(), "train-while-serve must measure staleness");
+    let max_stale = *staleness.iter().max().unwrap();
+    assert!(
+        max_stale <= cfg.serve.publish_every - 1,
+        "staleness {max_stale} exceeds publish_every-1"
+    );
+
+    // The served snapshot's accuracy tracks the training curve: the last
+    // window (serving the late model) clearly beats the first (serving the
+    // warm-start init model).
+    let acc: Vec<f64> = log
+        .rows
+        .iter()
+        .filter(|r| r.completed > 30)
+        .map(|r| r.served_accuracy)
+        .collect();
+    assert!(acc.len() >= 4, "need populated windows, got {}", acc.len());
+    let first = *acc.first().unwrap();
+    let last = *acc.last().unwrap();
+    assert!(
+        last > first + 0.05,
+        "served accuracy must climb with training: first {first:.4} last {last:.4}"
+    );
+    // The training-accuracy column mirrors the run log at the window ends.
+    let final_row = log.rows.iter().rev().find(|r| r.completed > 0).unwrap();
+    assert_eq!(final_row.train_accuracy, train_log.rows.last().unwrap().accuracy);
+    // Versions only move forward along the timeline.
+    assert!(log.batches.windows(2).all(|w| w[0].version <= w[1].version));
+}
