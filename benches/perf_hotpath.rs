@@ -19,6 +19,9 @@ use std::sync::Arc;
 
 use heterosparse::config::{CompositionPolicy, Config, MergeConfig, Strategy};
 use heterosparse::coordinator::{merge, plan_for_strategy, scaling, DevicePool};
+use heterosparse::fleet::{
+    fair_allocation, Arbiter, ArbiterConfig, LeaseBook, PriorityClass, TenantSpec,
+};
 use heterosparse::data::batcher::{Batcher, PaddedBatch};
 use heterosparse::data::pipeline::{BufferPool, DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
@@ -112,6 +115,56 @@ fn main() {
     println!("{r}  ({:.0} krequests/s)", per_sec / 1e3);
     serve_results.push(("admission_form".to_string(), r, per_sec));
     append_baseline("BENCH_serve.json", "HS_BENCH_SERVE_OUT", "perf_hotpath/serve", &serve_results);
+
+    // ---- fleet scheduler: arbiter decisions + lease churn ------------------
+    // The arbiter runs every decision window of the co-schedule; its
+    // rebalance (fair allocation + SLO ledger + lease diff) and the lease
+    // book's grant/revoke/expire cycle must stay microseconds-scale next
+    // to mega-batches and serve micro-batches.
+    let mut fleet_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let tenants = vec![
+        TenantSpec::training(0, "train-a", 1.0),
+        TenantSpec::training(1, "train-b", 1.0),
+        TenantSpec::serve(2, "lane", 1.0),
+    ];
+    let mut arb = Arbiter::new(
+        tenants.clone(),
+        vec![1.0, 1.1, 1.21, 1.32],
+        &[0, 1, 2, 3],
+        ArbiterConfig::default(),
+    );
+    let mut tick_t = 0.0f64;
+    let r = bench_fn("fleet/arbiter_rebalance(3 tenants, 4 devices)", 10, 2000, || {
+        tick_t += 0.25;
+        arb.rebalance(tick_t);
+        arb.take_events().len()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} decisions/s)");
+    fleet_results.push(("arbiter_rebalance".to_string(), r, per_sec));
+
+    let devices8: Vec<(usize, f64)> =
+        (0..8).map(|d| (d, 1.0 + 0.04 * d as f64)).collect();
+    let r = bench_fn("fleet/fair_allocation(3 tenants, 8 devices)", 10, 2000, || {
+        fair_allocation(&tenants, &devices8)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} allocations/s)");
+    fleet_results.push(("fair_allocation".to_string(), r, per_sec));
+
+    let mut book = LeaseBook::new(8, &(0..8).collect::<Vec<usize>>());
+    let mut lease_t = 0.0f64;
+    let r = bench_fn("fleet/lease_churn(grant+revoke+expire)", 10, 2000, || {
+        lease_t += 1.0;
+        let id = book.grant(0, 3, PriorityClass::Standard, lease_t).unwrap();
+        book.revoke(id, 0.5, lease_t, "bench").unwrap();
+        book.expire(lease_t + 1.0);
+        book.take_events().len()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} churn cycles/s)");
+    fleet_results.push(("lease_churn".to_string(), r, per_sec));
+    append_baseline("BENCH_fleet.json", "HS_BENCH_FLEET_OUT", "perf_hotpath/fleet", &fleet_results);
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

@@ -49,10 +49,12 @@ fn print_usage() {
          \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
          \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12),\n\
          \x20              the elastic-failover study (elastic), the data-plane\n\
-         \x20              composition-policy comparison (pipeline), or the serving\n\
+         \x20              composition-policy comparison (pipeline), the serving\n\
          \x20              plane: per-pattern latency + train-while-serve (serve;\n\
          \x20              --resume CKPT resumes training from the artifact and\n\
-         \x20              serves it as the warm-start snapshot)\n\
+         \x20              serves it as the warm-start snapshot), or the multi-\n\
+         \x20              tenant fleet scheduler: exclusive vs fair-share vs\n\
+         \x20              priority-preemption co-scheduling (fleet)\n\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\n\
          OPTIONS:\n\
@@ -74,6 +76,10 @@ fn print_usage() {
 /// Shared flag parsing: returns (config, out, backend, profile, verbose).
 struct Parsed {
     cfg: Config,
+    /// Whether `--config` or any `--set` was given (some experiments build
+    /// their own scaled-down config only when the user supplied neither —
+    /// explicit config input must never be silently discarded).
+    had_config: bool,
     out: Option<PathBuf>,
     backend: Backend,
     profile: DataProfile,
@@ -138,6 +144,10 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
             other => positional.push(other.to_string()),
         }
     }
+    let had_config = config_path.is_some()
+        || !overrides.is_empty()
+        || data_policy.is_some()
+        || !elastic_events.is_empty();
     let mut cfg = match config_path {
         Some(p) => Config::load(&p, &overrides)?,
         None => Config::from_overrides(&overrides)?,
@@ -149,7 +159,7 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     if let Some(policy) = data_policy {
         cfg.data.pipeline.policy = policy;
     }
-    Ok(Parsed { cfg, out, backend, profile, verbose, checkpoint, resume, positional })
+    Ok(Parsed { cfg, had_config, out, backend, profile, verbose, checkpoint, resume, positional })
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -209,7 +219,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
     let p = parse_flags(args)?;
     let name = p.positional.first().context(
         "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a \
-         fig11b fig12 elastic pipeline serve",
+         fig11b fig12 elastic pipeline serve fleet",
     )?;
     match name.as_str() {
         "table1" => {
@@ -253,6 +263,13 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         }
         "serve" => {
             experiments::serve(p.profile, p.backend, p.resume.as_deref())?;
+        }
+        "fleet" => {
+            // With --config or --set the co-schedule runs exactly that
+            // fleet; bare invocations get the bench-scale burst-overload
+            // scenario.
+            let base = p.had_config.then_some(&p.cfg);
+            experiments::fleet(p.profile, base)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }

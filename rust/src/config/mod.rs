@@ -189,6 +189,15 @@ pub struct SgdConfig {
     /// Learning-rate warmup horizon in mega-batches (0 disables; the paper
     /// cites Goyal et al.'s warmup as the fix for large-batch instability).
     pub warmup_mega_batches: usize,
+    /// Batch-size history the scaling-frequency controller must accumulate
+    /// before it judges oscillation (mega-batches, >= 4). The judgment
+    /// itself always inspects the last 4 snapshots (the a,b,a,b pattern) —
+    /// a larger window makes the controller *slower to judge*, not
+    /// deeper-sighted.
+    pub scaling_window: usize,
+    /// How many merges Algorithm 1 stays paused after the controller
+    /// detects stability or oscillation (>= 1).
+    pub scaling_cooldown: usize,
     pub seed: u64,
 }
 
@@ -203,6 +212,8 @@ impl Default for SgdConfig {
             num_mega_batches: 10,
             initial_batch: 128,
             warmup_mega_batches: 0,
+            scaling_window: 4,
+            scaling_cooldown: 3,
             seed: 7,
         }
     }
@@ -375,6 +386,7 @@ pub struct Config {
     pub strategy: StrategyConfig,
     pub elastic: ElasticConfig,
     pub serve: ServeConfig,
+    pub fleet: FleetConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -604,6 +616,53 @@ impl Default for ServeConfig {
     }
 }
 
+/// Multi-tenant fleet scheduler (`[fleet]`): arbiter cadence, lease grace,
+/// the serve lane's latency SLO, preemption policy, tenant weights, and
+/// scripted fleet churn.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Arbiter decision interval in fleet (virtual) seconds; SLO windows
+    /// and scripted churn land on these boundaries.
+    pub decision_window: f64,
+    /// Grace (seconds) a revoked lease has to drain before the book
+    /// force-releases it.
+    pub grace: f64,
+    /// Serve-lane SLO: windowed p95 latency target in milliseconds.
+    pub slo_p95_ms: f64,
+    /// Consecutive breached decision windows before preemption fires.
+    pub breach_windows: usize,
+    /// Consecutive clear decision windows before preempted capacity
+    /// returns.
+    pub clear_windows: usize,
+    /// SLO-triggered preemption on/off (off = pure weighted fair share).
+    pub preemption: bool,
+    /// Fair-share weight of the serve lane.
+    pub serve_weight: f64,
+    /// One weight per training tenant — the length decides how many
+    /// training tenants `experiment fleet` co-schedules.
+    pub train_weights: Vec<f64>,
+    /// Scripted fleet churn, same grammar as `[elastic] events` but
+    /// indexed by *arbiter decision window* (e.g. `"at_mb=4 remove=1"`
+    /// fires at the 4th decision boundary).
+    pub events: Vec<String>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            decision_window: 0.25,
+            grace: 0.5,
+            slo_p95_ms: 5.0,
+            breach_windows: 2,
+            clear_windows: 2,
+            preemption: true,
+            serve_weight: 1.0,
+            train_weights: vec![1.0, 1.0],
+            events: Vec::new(),
+        }
+    }
+}
+
 impl Config {
     /// Load from a TOML file then apply `--section.key=value` overrides.
     pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
@@ -698,6 +757,8 @@ impl Config {
         cfg.sgd.initial_batch = cfg.sgd.b_max;
         usize_of(map, "sgd.initial_batch", &mut cfg.sgd.initial_batch)?;
         usize_of(map, "sgd.warmup_mega_batches", &mut cfg.sgd.warmup_mega_batches)?;
+        usize_of(map, "sgd.scaling_window", &mut cfg.sgd.scaling_window)?;
+        usize_of(map, "sgd.scaling_cooldown", &mut cfg.sgd.scaling_cooldown)?;
         u64_of(map, "sgd.seed", &mut cfg.sgd.seed)?;
 
         f64_of(map, "merge.pert_thr", &mut cfg.merge.pert_thr)?;
@@ -776,6 +837,23 @@ impl Config {
         }
         u64_of(map, "serve.seed", &mut cfg.serve.seed)?;
 
+        f64_of(map, "fleet.decision_window", &mut cfg.fleet.decision_window)?;
+        f64_of(map, "fleet.grace", &mut cfg.fleet.grace)?;
+        f64_of(map, "fleet.slo_p95_ms", &mut cfg.fleet.slo_p95_ms)?;
+        usize_of(map, "fleet.breach_windows", &mut cfg.fleet.breach_windows)?;
+        usize_of(map, "fleet.clear_windows", &mut cfg.fleet.clear_windows)?;
+        if let Some(v) = map.get("fleet.preemption") {
+            cfg.fleet.preemption = v.as_bool().context("fleet.preemption must be a bool")?;
+        }
+        f64_of(map, "fleet.serve_weight", &mut cfg.fleet.serve_weight)?;
+        if let Some(v) = map.get("fleet.train_weights") {
+            cfg.fleet.train_weights =
+                v.as_f64_arr().context("fleet.train_weights must be a number array")?;
+        }
+        if let Some(v) = map.get("fleet.events") {
+            cfg.fleet.events = v.as_str_arr().context("fleet.events must be a string array")?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -800,6 +878,16 @@ impl Config {
         }
         if (s.initial_batch - s.b_min) % s.beta != 0 {
             bail!("initial_batch must lie on the batch-size grid");
+        }
+        if s.scaling_window < 4 {
+            bail!(
+                "sgd.scaling_window must be >= 4 (the oscillation pattern spans four \
+                 snapshots; got {})",
+                s.scaling_window
+            );
+        }
+        if s.scaling_cooldown == 0 {
+            bail!("sgd.scaling_cooldown must be >= 1");
         }
         if !(0.0..=1.0).contains(&self.merge.momentum) {
             bail!("merge.momentum must be in [0, 1]");
@@ -903,6 +991,35 @@ impl Config {
                 }
             }
         }
+        let fl = &self.fleet;
+        if fl.decision_window <= 0.0 {
+            bail!("fleet.decision_window must be positive seconds");
+        }
+        if fl.grace <= 0.0 {
+            bail!("fleet.grace must be positive seconds");
+        }
+        if fl.slo_p95_ms <= 0.0 {
+            bail!("fleet.slo_p95_ms must be positive milliseconds");
+        }
+        if fl.breach_windows == 0 || fl.clear_windows == 0 {
+            bail!("fleet.breach_windows / fleet.clear_windows must be >= 1");
+        }
+        if fl.serve_weight <= 0.0 {
+            bail!("fleet.serve_weight must be positive");
+        }
+        if fl.train_weights.is_empty() || fl.train_weights.iter().any(|&w| w <= 0.0) {
+            bail!("fleet.train_weights must be a non-empty array of positive weights");
+        }
+        for s in &fl.events {
+            let ev = ElasticEvent::parse(s)?;
+            if let ElasticOp::RemoveId(id) | ElasticOp::AddId(id) = ev.op {
+                if id >= roster {
+                    bail!(
+                        "fleet event targets device {id} but the roster has {roster} devices"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
@@ -981,6 +1098,21 @@ mod tests {
             ("devices.speed_factors".into(), "[1.0, 1.1]".into()),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn scaling_controller_knobs_parse_and_validate() {
+        let cfg = Config::default();
+        assert_eq!((cfg.sgd.scaling_window, cfg.sgd.scaling_cooldown), (4, 3));
+        let cfg = Config::from_overrides(&[
+            ("sgd.scaling_window".into(), "6".into()),
+            ("sgd.scaling_cooldown".into(), "1".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.sgd.scaling_window, 6);
+        assert_eq!(cfg.sgd.scaling_cooldown, 1);
+        assert!(Config::from_overrides(&[("sgd.scaling_window".into(), "3".into())]).is_err());
+        assert!(Config::from_overrides(&[("sgd.scaling_cooldown".into(), "0".into())]).is_err());
     }
 
     #[test]
@@ -1102,6 +1234,45 @@ mod tests {
         for p in ServePattern::all() {
             assert_eq!(ServePattern::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn fleet_section_parses_and_validates() {
+        let cfg = Config::from_overrides(&[
+            ("fleet.decision_window".into(), "0.5".into()),
+            ("fleet.grace".into(), "1.0".into()),
+            ("fleet.slo_p95_ms".into(), "3.5".into()),
+            ("fleet.breach_windows".into(), "3".into()),
+            ("fleet.clear_windows".into(), "1".into()),
+            ("fleet.preemption".into(), "false".into()),
+            ("fleet.serve_weight".into(), "2.0".into()),
+            ("fleet.train_weights".into(), "[1.0, 3.0, 1.0]".into()),
+            ("fleet.events".into(), "[\"at_mb=4 remove=1\"]".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.fleet.decision_window, 0.5);
+        assert_eq!(cfg.fleet.slo_p95_ms, 3.5);
+        assert!(!cfg.fleet.preemption);
+        assert_eq!(cfg.fleet.train_weights.len(), 3);
+        assert_eq!(cfg.fleet.events.len(), 1);
+        // Defaults: two equally-weighted training tenants, preemption on.
+        let d = Config::default();
+        assert_eq!(d.fleet.train_weights, vec![1.0, 1.0]);
+        assert!(d.fleet.preemption);
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("fleet.decision_window", "0");
+        reject("fleet.grace", "-1");
+        reject("fleet.slo_p95_ms", "0");
+        reject("fleet.breach_windows", "0");
+        reject("fleet.clear_windows", "0");
+        reject("fleet.serve_weight", "0");
+        reject("fleet.train_weights", "[]");
+        reject("fleet.train_weights", "[1.0, 0.0]");
+        reject("fleet.events", "[\"at_mb=1 remove_id=99\"]");
+        reject("fleet.events", "[\"garbage\"]");
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! The earliest-virtual-free-time dispatch rule, in one place.
+//!
+//! Training's dynamic scheduler ([`crate::coordinator::engine_sim`]) and
+//! the serving router ([`crate::serve::router`]) route the next unit of
+//! work with the same rule: among the eligible devices, pick the one whose
+//! effective free time `max(free_time, now)` is earliest, breaking ties
+//! toward the lower index. Both call sites used to carry their own copy;
+//! this helper is the shared implementation, so a change to the rule (or a
+//! bug in it) cannot fork the two planes' behavior.
+
+/// Index of the eligible slot with the earliest effective free time
+/// (`max(free_time[i], now)`), ties toward the lower index. `None` when no
+/// slot is eligible.
+pub fn next_free_device(
+    free_time: &[f64],
+    now: f64,
+    eligible: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for i in 0..free_time.len() {
+        if !eligible(i) {
+            continue;
+        }
+        let key = free_time[i].max(now);
+        match best {
+            Some(b) if free_time[b].max(now) <= key => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_earliest_free_slot() {
+        let ft = [3.0, 1.0, 2.0];
+        assert_eq!(next_free_device(&ft, 0.0, |_| true), Some(1));
+    }
+
+    #[test]
+    fn ties_break_toward_the_lower_index() {
+        let ft = [2.0, 2.0, 2.0];
+        assert_eq!(next_free_device(&ft, 0.0, |_| true), Some(0));
+        // `now` past every free time makes all keys equal: still the lowest.
+        let ft = [0.5, 0.1, 0.3];
+        assert_eq!(next_free_device(&ft, 9.0, |_| true), Some(0));
+    }
+
+    #[test]
+    fn eligibility_filters_and_empty_is_none() {
+        let ft = [3.0, 1.0, 2.0];
+        assert_eq!(next_free_device(&ft, 0.0, |i| i != 1), Some(2));
+        assert_eq!(next_free_device(&ft, 0.0, |_| false), None);
+        assert_eq!(next_free_device(&[], 0.0, |_| true), None);
+    }
+
+    #[test]
+    fn now_floors_idle_devices_to_a_common_key() {
+        // Device 2 idle since 0.2; device 0 busy until 1.0. At now=0.5 the
+        // idle device wins even though another idle device has a *lower*
+        // stale free time — keys are floored at now, so ties go by index.
+        let ft = [1.0, 0.2, 0.4];
+        assert_eq!(next_free_device(&ft, 0.5, |_| true), Some(1));
+    }
+}

@@ -17,6 +17,7 @@ use crate::runtime::{CostModel, SimDevice};
 use crate::Result;
 
 use super::backend::StepBackend;
+use super::dispatch::next_free_device;
 use super::plan::{DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport};
 
 pub struct SimEngine<'b> {
@@ -96,8 +97,10 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
                 let mut remaining = plan.sample_budget;
                 while remaining > 0 {
                     // Earliest-free device wins the next batch (dynamic
-                    // scheduling); ties break toward the lower slot.
-                    let slot = argmin(&free_time, |_| true);
+                    // scheduling); ties break toward the lower slot — the
+                    // same rule the serving router uses (dispatch.rs).
+                    let slot = next_free_device(&free_time, 0.0, |_| true)
+                        .expect("plan has at least one active device");
                     let bucket = plan.batch_sizes[slot];
                     let valid = bucket.min(remaining);
                     remaining -= valid;
@@ -110,7 +113,8 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
             DispatchMode::StaticQuota { batches_per_device } => {
                 let mut quota = vec![batches_per_device; g];
                 while quota.iter().any(|&q| q > 0) {
-                    let slot = argmin(&free_time, |i| quota[i] > 0);
+                    let slot = next_free_device(&free_time, 0.0, |i| quota[i] > 0)
+                        .expect("some quota remains");
                     quota[slot] -= 1;
                     let bucket = plan.batch_sizes[slot];
                     self.one_step(
@@ -139,17 +143,6 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
     fn name(&self) -> &'static str {
         "sim"
     }
-}
-
-fn argmin(times: &[f64], eligible: impl Fn(usize) -> bool) -> usize {
-    let mut best = usize::MAX;
-    for i in 0..times.len() {
-        if eligible(i) && (best == usize::MAX || times[i] < times[best]) {
-            best = i;
-        }
-    }
-    assert_ne!(best, usize::MAX, "no eligible device");
-    best
 }
 
 /// `replica[dev] += rate * (mean(active replicas) − replica[dev])`.

@@ -5,6 +5,8 @@
 //! * [`pool`] — the elastic device pool: runtime membership (straggler
 //!   quarantine, scripted remove/add traces, hot-add spares) applied at
 //!   mega-batch boundaries.
+//! * [`dispatch`] — the earliest-virtual-free-time routing rule shared by
+//!   the dynamic scheduler and the serving router.
 //! * [`scaling`] — **Algorithm 1**: adaptive batch size scaling.
 //! * [`merge`] — **Algorithm 2**: normalized model merging with
 //!   perturbation and momentum, renormalized over the active device subset.
@@ -19,6 +21,7 @@
 //!   dispatch, merging, scaling, evaluation, metrics.
 
 pub mod backend;
+pub mod dispatch;
 pub mod engine_sim;
 pub mod engine_threaded;
 pub mod merge;
@@ -31,4 +34,4 @@ pub use plan::{
     plan_for_strategy, DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport,
 };
 pub use pool::{DevicePool, DeviceSlot, PoolAction, PoolEvent, SlotState};
-pub use trainer::{Trainer, TrainerOptions};
+pub use trainer::{Trainer, TrainerOptions, TrainerSession};

@@ -183,6 +183,18 @@ impl DevicePool {
         self.slots.iter().filter(|s| s.state == SlotState::Active).count()
     }
 
+    /// Lease-aware view of the pool: the active devices for which
+    /// `is_taken` is false — what a fleet arbiter may still grant. The
+    /// pool stays the source of truth for *physical* membership (churn,
+    /// quarantine); the lease book overlays *ownership* on top of it.
+    pub fn available_ids(&self, is_taken: impl Fn(usize) -> bool) -> Vec<usize> {
+        self.slots
+            .iter()
+            .filter(|s| s.state == SlotState::Active && !is_taken(s.id))
+            .map(|s| s.id)
+            .collect()
+    }
+
     /// Apply scripted trace events and policy decisions for the mega-batch
     /// about to run. Returns the membership changes, in application order.
     pub fn begin_mega_batch(&mut self, mb: usize) -> Vec<PoolEvent> {
@@ -465,6 +477,19 @@ mod tests {
         assert_eq!(ev.len(), 1);
         assert_eq!(ev[0].action, PoolAction::Remove);
         assert!(DevicePool::with_trace(&cfg, &["garbage".to_string()]).is_err());
+    }
+
+    #[test]
+    fn available_ids_overlays_leases_on_membership() {
+        let cfg = cfg_with(&["at_mb=1 remove_id=3"], &[]);
+        let mut pool = DevicePool::new(&cfg).unwrap();
+        // Devices 0 and 2 leased: only 1 and 3 are grantable.
+        let leased = [true, false, true, false];
+        assert_eq!(pool.available_ids(|d| leased[d]), vec![1, 3]);
+        // Physical removal wins over lease state: 3 leaves the pool.
+        pool.begin_mega_batch(1);
+        assert_eq!(pool.available_ids(|d| leased[d]), vec![1]);
+        assert_eq!(pool.available_ids(|_| false), vec![0, 1, 2]);
     }
 
     #[test]

@@ -87,19 +87,46 @@ pub fn rescale(
 /// false while the fleet is stable (three identical snapshots) or
 /// oscillating (an a,b,a,b flip on any device), then re-arms after a
 /// cool-down so the controller keeps responding to genuine drift.
-#[derive(Clone, Debug, Default)]
+///
+/// The history length and cool-down come from `SgdConfig`
+/// (`scaling_window` / `scaling_cooldown`) so multi-tenant fleet
+/// experiments can tune stability detection per tenant; `Default` keeps
+/// the historical 4/3 constants. The window is how much history must
+/// accumulate before oscillation is judged — the pattern check itself is
+/// fixed at the last four snapshots (and stability at the last three), so
+/// a larger window slows the judgment rather than deepening it.
+#[derive(Clone, Debug)]
 pub struct ScalingState {
     history: Vec<Vec<usize>>,
     cooldown: usize,
+    window: usize,
+    cooldown_len: usize,
+}
+
+impl Default for ScalingState {
+    fn default() -> Self {
+        let d = SgdConfig::default();
+        ScalingState::new(d.scaling_window, d.scaling_cooldown)
+    }
 }
 
 impl ScalingState {
-    const WINDOW: usize = 4;
-    const COOLDOWN: usize = 3;
+    /// `window` is the history length (config validation enforces >= 4:
+    /// the oscillation pattern needs four snapshots); `cooldown` is how
+    /// many merges scaling stays paused after a stability/oscillation hit.
+    pub fn new(window: usize, cooldown: usize) -> ScalingState {
+        assert!(window >= 4, "scaling window must hold the 4-snapshot oscillation pattern");
+        ScalingState { history: Vec::new(), cooldown: 0, window, cooldown_len: cooldown.max(1) }
+    }
+
+    /// Controller for the configured SGD hyperparameters.
+    pub fn from_config(cfg: &SgdConfig) -> ScalingState {
+        ScalingState::new(cfg.scaling_window, cfg.scaling_cooldown)
+    }
 
     pub fn observe(&mut self, sizes: &[usize]) {
         self.history.push(sizes.to_vec());
-        if self.history.len() > Self::WINDOW {
+        if self.history.len() > self.window {
             self.history.remove(0);
         }
         if self.cooldown > 0 {
@@ -112,12 +139,13 @@ impl ScalingState {
         self.history.len() >= 3 && self.history.iter().rev().take(3).all(|v| v == &self.history[self.history.len() - 1])
     }
 
-    /// Any device flip-flopping a,b,a,b with a != b over the window.
+    /// Any device flip-flopping a,b,a,b with a != b over the last four
+    /// snapshots (only judged once the configured window has filled).
     pub fn oscillating(&self) -> bool {
-        if self.history.len() < Self::WINDOW {
+        if self.history.len() < self.window {
             return false;
         }
-        let h = &self.history[self.history.len() - Self::WINDOW..];
+        let h = &self.history[self.history.len() - 4..];
         let devices = h[0].len();
         (0..devices).any(|d| h[0][d] == h[2][d] && h[1][d] == h[3][d] && h[0][d] != h[1][d])
     }
@@ -128,7 +156,7 @@ impl ScalingState {
             return false;
         }
         if self.oscillating() || self.stable() {
-            self.cooldown = Self::COOLDOWN;
+            self.cooldown = self.cooldown_len;
             return false;
         }
         true
@@ -275,6 +303,29 @@ mod tests {
         assert!(!s.oscillating());
         assert!(!s.stable());
         assert!(s.should_scale());
+    }
+
+    #[test]
+    fn scaling_state_window_and_cooldown_are_configurable() {
+        // A 6-snapshot window delays oscillation detection until it fills.
+        let mut s = ScalingState::new(6, 1);
+        for _ in 0..2 {
+            s.observe(&[64, 48]);
+            s.observe(&[72, 48]);
+        }
+        assert!(!s.oscillating(), "4 snapshots must not fill a 6-window");
+        s.observe(&[64, 48]);
+        s.observe(&[72, 48]);
+        assert!(s.oscillating(), "the filled window sees the a,b,a,b flip");
+        assert!(!s.should_scale());
+        // Cooldown of 1 re-arms after a single observation.
+        s.observe(&[80, 40]);
+        assert!(!s.oscillating() || !s.stable());
+        // from_config mirrors the SgdConfig knobs.
+        let cfg = SgdConfig { scaling_window: 5, scaling_cooldown: 2, ..Default::default() };
+        let s2 = ScalingState::from_config(&cfg);
+        assert_eq!(s2.window, 5);
+        assert_eq!(s2.cooldown_len, 2);
     }
 
     /// Property: iterating scaling with update counts proportional to an

@@ -1,7 +1,22 @@
 //! The training session: pool membership, strategy dispatch, model merging,
 //! batch scaling, evaluation, and metrics — the outer loop of Figure 4.
 //!
-//! One `Trainer` drives one run of one strategy:
+//! Two layers live here:
+//!
+//! * [`TrainerSession`] — the resumable per-mega-batch core. One call to
+//!   [`TrainerSession::step`] runs one mega-batch over an *externally
+//!   imposed* active device subset: dispatch plan, merge (Algorithm 2
+//!   weights renormalized over that subset), batch scaling (Algorithm 1),
+//!   evaluation, and the metrics row. Because the roster arrives per step,
+//!   a session can pause (no step while it holds no devices) and resume by
+//!   re-planning through the existing elastic path — this is what the
+//!   fleet scheduler ([`crate::fleet`]) drives when an arbiter grants and
+//!   revokes device leases mid-run.
+//! * [`Trainer`] — the classic single-job loop: owns a [`DevicePool`]
+//!   (scripted traces + straggler policy) and feeds its active set into
+//!   the session, one mega-batch per pool window.
+//!
+//! Strategies:
 //!
 //! * **Adaptive** — dynamic dispatch over a sample-budget mega-batch, then
 //!   Algorithm 2 merging (normalized weights + perturbation + momentum) and
@@ -15,14 +30,10 @@
 //! * **Crossbow** — dynamic dispatch with per-batch replica correction
 //!   toward the fleet average, plain average merge at mega-batch ends.
 //!
-//! Every strategy now runs on an elastic [`DevicePool`]: membership changes
-//! (scripted trace or straggler policy) land at mega-batch boundaries, the
-//! dispatch plan covers only the active subset, and Algorithm 2's merge
-//! weights renormalize over that subset. Per-device state — replicas, batch
-//! sizes, learning rates — is roster-indexed, and the momentum history
-//! lives on the global model, so both survive membership churn.
-//!
-//! The training clock *excludes* evaluation time (paper §5.1 methodology).
+//! Per-device state — replicas, batch sizes, learning rates — is
+//! roster-indexed, and the momentum history lives on the global model, so
+//! both survive membership churn. The training clock *excludes* evaluation
+//! time (paper §5.1 methodology).
 
 use std::sync::Arc;
 
@@ -37,7 +48,7 @@ use crate::Result;
 
 use super::backend::StepBackend;
 use super::plan::{plan_for_strategy, DispatchPlan, ExecutionEngine, MegaBatchReport};
-use super::pool::{DevicePool, PoolAction, PoolEvent};
+use super::pool::{DevicePool, PoolEvent};
 use super::{merge, scaling};
 
 #[derive(Clone, Debug)]
@@ -80,6 +91,430 @@ impl Default for TrainerOptions {
     }
 }
 
+/// A resumable training session stepped one mega-batch at a time.
+///
+/// The caller supplies the active device subset at every step — the
+/// trainer's own [`DevicePool`] in single-job runs, the fleet arbiter's
+/// lease set under multi-tenant co-scheduling. A step with a different
+/// subset than the last one re-plans through the elastic path: joining
+/// devices resync to the global model, merge weights renormalize over the
+/// new subset, and Algorithm 1 state stays roster-indexed so it survives
+/// the churn.
+pub struct TrainerSession<'b> {
+    cfg: Config,
+    engine: Box<dyn ExecutionEngine + 'b>,
+    eval_backend: &'b dyn StepBackend,
+    opts: TrainerOptions,
+    plane: DataPlane,
+    eval_batches: EvalBatches,
+    test: Arc<SparseDataset>,
+    nnz_estimate: f64,
+    roster: usize,
+    global: ModelState,
+    global_prev: ModelState,
+    replicas: Vec<ModelState>,
+    batch_sizes: Vec<usize>,
+    lrs: Vec<f32>,
+    scaling_state: scaling::ScalingState,
+    /// Active set of the previous step (resync detection). Starts as the
+    /// full roster: every replica begins as a clone of the global model.
+    prev_active: Vec<usize>,
+    clock: f64,
+    samples: u64,
+    mb: usize,
+    last_report: Option<MegaBatchReport>,
+    log: RunLog,
+}
+
+impl<'b> TrainerSession<'b> {
+    /// Build a session over an already-sharded corpus. `name` labels the
+    /// run log (tenant name under the fleet scheduler).
+    pub fn new(
+        cfg: Config,
+        engine: Box<dyn ExecutionEngine + 'b>,
+        eval_backend: &'b dyn StepBackend,
+        mut opts: TrainerOptions,
+        train: Arc<ShardedDataset>,
+        test: Arc<SparseDataset>,
+        name: impl Into<String>,
+    ) -> Result<TrainerSession<'b>> {
+        let dims = cfg.model.clone();
+        let roster = engine.roster_len();
+
+        // The data plane: sharded corpus + composition policy + (for the
+        // threaded engine) async prefetch. Virtual-time runs force
+        // synchronous assembly so the sample→device routing — and with it
+        // the whole run — stays deterministic.
+        let producer_threads = match cfg.runtime.mode {
+            ExecMode::Virtual => 0,
+            ExecMode::Real => cfg.data.pipeline.producer_threads,
+        };
+        let plane =
+            DataPlane::new(train, &dims, &cfg.data.pipeline, producer_threads, cfg.sgd.seed);
+        let nnz_estimate = plane.nnz_estimate();
+
+        let eval_bucket = opts
+            .eval_bucket
+            .unwrap_or_else(|| 256.min(cfg.data.test_samples.max(1)).max(1));
+        let eval_batches = EvalBatches::new(&test, &dims, eval_bucket);
+
+        // Global model + momentum history + roster-indexed replicas.
+        let global = match opts.init_model.take() {
+            Some(m) => {
+                anyhow::ensure!(m.dims == dims, "resume model dims mismatch");
+                m
+            }
+            None => ModelState::init(&dims, cfg.sgd.seed),
+        };
+        let global_prev = global.clone();
+        let replicas: Vec<ModelState> = vec![global.clone(); roster];
+
+        // Serving warm-start: the init (or resumed) model is servable before
+        // the first merge lands.
+        if let Some(reg) = &opts.publish {
+            reg.publish(global.clone(), None, 0.0);
+        }
+
+        let batch_sizes = vec![cfg.sgd.initial_batch; roster];
+        let lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); roster];
+        let scaling_state = scaling::ScalingState::from_config(&cfg.sgd);
+
+        Ok(TrainerSession {
+            log: RunLog::new(name),
+            plane,
+            eval_batches,
+            test,
+            nnz_estimate,
+            roster,
+            global,
+            global_prev,
+            replicas,
+            batch_sizes,
+            lrs,
+            scaling_state,
+            prev_active: (0..roster).collect(),
+            clock: 0.0,
+            samples: 0,
+            mb: 0,
+            last_report: None,
+            cfg,
+            engine,
+            eval_backend,
+            opts,
+        })
+    }
+
+    /// All configured mega-batches have run.
+    pub fn done(&self) -> bool {
+        self.mb >= self.cfg.sgd.num_mega_batches
+    }
+
+    /// Training clock in virtual/wall seconds (excludes evaluation time).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Mega-batches completed so far.
+    pub fn completed_mega_batches(&self) -> usize {
+        self.mb
+    }
+
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    pub fn into_log(self) -> RunLog {
+        self.log
+    }
+
+    /// Tear the session down, returning the run log and the engine it
+    /// borrowed (so a [`Trainer`] can reclaim it).
+    pub fn finish(self) -> (RunLog, Box<dyn ExecutionEngine + 'b>) {
+        (self.log, self.engine)
+    }
+
+    /// Report of the most recent mega-batch (straggler-policy food).
+    pub fn last_report(&self) -> Option<&MegaBatchReport> {
+        self.last_report.as_ref()
+    }
+
+    /// Run one mega-batch over `active` starting no earlier than `now`
+    /// (the clock jumps forward to `now` first — a paused tenant resuming
+    /// under the fleet scheduler lands on the shared fleet clock).
+    /// `events` are the membership/lease changes that produced this
+    /// roster; they are recorded into the row and the run-wide event log.
+    /// Returns the completed row (its `clock` is the post-step time).
+    pub fn step(
+        &mut self,
+        active: &[usize],
+        now: f64,
+        events: Vec<PoolEventRow>,
+    ) -> Result<&MegaBatchRow> {
+        anyhow::ensure!(!self.done(), "session already ran all mega-batches");
+        anyhow::ensure!(!active.is_empty(), "step needs at least one active device");
+        anyhow::ensure!(
+            active.iter().all(|&d| d < self.roster),
+            "active device outside the roster"
+        );
+        // One config clone per mega-batch keeps the borrow graph trivial
+        // across the strategy match below; it is a few small Vecs next to
+        // thousands of model steps, not a hot-path cost.
+        let cfg = self.cfg.clone();
+        let dims = cfg.model.clone();
+        let strategy = cfg.strategy.kind;
+        let mb = self.mb;
+        self.clock = self.clock.max(now);
+
+        // A device (re-)joining resumes from the current global model; the
+        // momentum history lives on the global model and is unaffected by
+        // churn. (Inactive replicas are left stale rather than kept in
+        // sync — one clone per join, not per mega-batch.)
+        for &d in active {
+            if !self.prev_active.contains(&d) {
+                self.replicas[d] = self.global.clone();
+            }
+        }
+        if self.opts.verbose {
+            for ev in &events {
+                println!(
+                    "[{}] mb={:<3} pool: {} device {} ({})",
+                    self.log.name, mb, ev.action, ev.device, ev.reason
+                );
+            }
+        }
+
+        // Goyal-style linear warmup on every device's learning rate.
+        let warmup = warmup_factor(mb, cfg.sgd.warmup_mega_batches);
+
+        let (report, merge_secs, merge_weights, perturbed) = match strategy {
+            Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
+                let mut plan = plan_for_strategy(
+                    &cfg,
+                    strategy,
+                    active,
+                    &self.batch_sizes,
+                    &self.lrs,
+                    self.nnz_estimate,
+                );
+                for lr in plan.lrs.iter_mut() {
+                    *lr *= warmup;
+                }
+                let report = self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
+                self.clock += report.wall;
+
+                // ---- merge (Algorithm 2 for Adaptive), weights
+                // renormalized over the active subset -----------------------
+                let active_updates: Vec<u64> =
+                    active.iter().map(|&d| report.per_device[d].updates).collect();
+                let active_batches: Vec<usize> =
+                    active.iter().map(|&d| self.batch_sizes[d]).collect();
+                let outcome = match strategy {
+                    Strategy::Adaptive => {
+                        let l2s: Vec<f64> =
+                            active.iter().map(|&d| self.replicas[d].l2_per_param()).collect();
+                        merge::compute_weights(&active_updates, &active_batches, &l2s, &cfg.merge)
+                    }
+                    _ => merge::MergeOutcome {
+                        weights: vec![1.0 / active.len() as f64; active.len()],
+                        perturbed: false,
+                        by_updates: false,
+                    },
+                };
+                let (merged, merge_secs) = self.merge_active(active, &outcome.weights, &dims);
+                // Momentum global update for the HeteroGPU strategies.
+                let momentum = match strategy {
+                    Strategy::Adaptive | Strategy::Elastic => cfg.merge.momentum,
+                    _ => 0.0,
+                };
+                merge::momentum_update(
+                    &mut self.global,
+                    &mut self.global_prev,
+                    &merged,
+                    momentum,
+                );
+                self.clock += merge_secs;
+
+                // ---- Algorithm 1 (Adaptive only) over the active subset,
+                // gated by the stability/oscillation controller --------------
+                self.scaling_state.observe(&self.batch_sizes);
+                if strategy == Strategy::Adaptive
+                    && cfg.strategy.batch_scaling
+                    && self.scaling_state.should_scale()
+                {
+                    let mut b_act: Vec<usize> =
+                        active.iter().map(|&d| self.batch_sizes[d]).collect();
+                    let mut lr_act: Vec<f32> = active.iter().map(|&d| self.lrs[d]).collect();
+                    scaling::rescale(&mut b_act, &mut lr_act, &active_updates, &cfg.sgd);
+                    for (i, &d) in active.iter().enumerate() {
+                        self.batch_sizes[d] = b_act[i];
+                        self.lrs[d] = lr_act[i];
+                    }
+                }
+                let weights = scatter_weights(&outcome.weights, active, self.roster);
+                (report, merge_secs, weights, outcome.perturbed)
+            }
+            Strategy::SyncGradAgg => {
+                // One "mega-batch" worth of synchronous rounds, merging
+                // after every round (gradient aggregation ≡ averaging
+                // one-step replicas).
+                let plan: DispatchPlan = plan_for_strategy(
+                    &cfg,
+                    strategy,
+                    active,
+                    &self.batch_sizes,
+                    &self.lrs,
+                    self.nnz_estimate,
+                );
+                let b_tf = plan.batch_sizes[0];
+                let rounds = (cfg.sgd.mega_batch_samples() / (active.len() * b_tf)).max(1);
+                let mut agg: Option<MegaBatchReport> = None;
+                let mut merge_total = 0.0;
+                let uniform = vec![1.0 / active.len() as f64; active.len()];
+                for _ in 0..rounds {
+                    let mut plan = plan.clone();
+                    for lr in plan.lrs.iter_mut() {
+                        *lr *= warmup;
+                    }
+                    let report =
+                        self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
+                    self.clock += report.wall * cfg.strategy.sync_overhead;
+
+                    let (merged, merge_secs) = self.merge_active(active, &uniform, &dims);
+                    self.clock += merge_secs * cfg.strategy.sync_overhead;
+                    merge_total += merge_secs;
+                    self.global_prev = self.global.clone();
+                    self.global = merged;
+                    for &d in active {
+                        self.replicas[d] = self.global.clone();
+                    }
+                    agg = Some(match agg.take() {
+                        None => report,
+                        Some(mut acc) => {
+                            for (a, b) in acc.per_device.iter_mut().zip(report.per_device) {
+                                a.updates += b.updates;
+                                a.samples += b.samples;
+                                a.busy += b.busy;
+                                a.loss_sum += b.loss_sum;
+                                a.nnz += b.nnz;
+                            }
+                            acc.wall += report.wall;
+                            acc.batch_nnz.extend(report.batch_nnz);
+                            acc
+                        }
+                    });
+                }
+                let weights = scatter_weights(&uniform, active, self.roster);
+                (agg.unwrap(), merge_total, weights, false)
+            }
+        };
+
+        // Reset the active replicas to the merged global model for the
+        // next window. Inactive slots are synced lazily when their device
+        // re-joins (the prev_active diff above).
+        for &d in active {
+            self.replicas[d] = self.global.clone();
+        }
+
+        self.samples += report.total_samples();
+
+        // ---- evaluate (excluded from the training clock) ------------------
+        let accuracy = if (mb + 1) % self.opts.eval_every == 0 {
+            crate::eval::p_at_1(self.eval_backend, &self.global, &self.eval_batches, &self.test)?
+        } else {
+            self.log.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
+        };
+
+        // Hardware efficiency: fraction of the barrier window each active
+        // device spent busy (1.0 = no straggler idling; inactive devices
+        // report 0).
+        let utilization: Vec<f64> = report
+            .per_device
+            .iter()
+            .map(|d| {
+                if d.updates > 0 && report.wall > 0.0 {
+                    (d.busy / report.wall).min(1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        // Per-batch nnz dispersion (the cost variance the composition
+        // policy controls) plus cumulative data-plane counters.
+        let (nnz_mean, nnz_cv) = report.nnz_dispersion();
+        let row = MegaBatchRow {
+            mega_batch: mb,
+            clock: self.clock,
+            samples: self.samples,
+            loss: report.mean_loss(),
+            accuracy,
+            batch_sizes: self.batch_sizes.clone(),
+            updates: report.updates(),
+            perturbed,
+            merge_time: merge_secs,
+            l2_per_param: self.global.l2_per_param(),
+            utilization,
+            active_devices: active.to_vec(),
+            merge_weights,
+            pool_events: events.clone(),
+            nnz_mean,
+            nnz_cv,
+            pipeline: pipeline_row(&self.plane.stats()),
+        };
+        self.log.pool_events.extend(events);
+        if let Some(path) = &self.opts.checkpoint {
+            crate::model::checkpoint::save(&self.global, path)?;
+        }
+        // Publish into the serving registry at the configured cadence
+        // (the clock stamp excludes eval time, like the training clock).
+        if let Some(reg) = &self.opts.publish {
+            if (mb + 1) % cfg.serve.publish_every == 0 {
+                reg.publish(self.global.clone(), Some(mb), self.clock);
+            }
+        }
+        if self.opts.verbose {
+            println!(
+                "[{}] mb={:<3} clock={:>8.3}s loss={:<8.4} P@1={:<6.4} g={} b={:?} u={:?}{}",
+                self.log.name,
+                mb,
+                self.clock,
+                row.loss,
+                accuracy,
+                row.active_devices.len(),
+                row.batch_sizes,
+                row.updates,
+                if perturbed { " pert" } else { "" }
+            );
+        }
+        self.log.push(row);
+        self.prev_active = active.to_vec();
+        self.last_report = Some(report);
+        self.mb += 1;
+        Ok(self.log.rows.last().expect("row just pushed"))
+    }
+
+    /// Weighted all-reduce over the active replicas; returns the merged
+    /// model and the simulated transfer seconds.
+    fn merge_active(
+        &self,
+        active: &[usize],
+        weights: &[f64],
+        dims: &crate::config::ModelDims,
+    ) -> (ModelState, f64) {
+        let mut merged = ModelState::zeros(dims);
+        let refs: Vec<&ModelState> = active.iter().map(|&d| &self.replicas[d]).collect();
+        let stats = allreduce::allreduce_merge(
+            &mut merged,
+            &refs,
+            weights,
+            self.opts.allreduce,
+            active.len(),
+            &self.engine.cost_model(),
+        );
+        (merged, stats.seconds)
+    }
+}
+
 pub struct Trainer<'b> {
     pub cfg: Config,
     pub engine: Box<dyn ExecutionEngine + 'b>,
@@ -109,16 +544,18 @@ impl<'b> Trainer<'b> {
     }
 
     /// Train from an already-sharded corpus — the zero-extra-copy path the
-    /// data plane is built around.
+    /// data plane is built around (the *test* split is still cloned once
+    /// into the session's `Arc`; callers that train many times over one
+    /// corpus should hold a `TrainerSession` with a shared
+    /// `Arc<SparseDataset>` instead). Owns the classic single-job loop: the
+    /// [`DevicePool`] decides membership at every mega-batch boundary and a
+    /// [`TrainerSession`] does the rest.
     pub fn run_sharded(
         &mut self,
         train: Arc<ShardedDataset>,
         test: &SparseDataset,
     ) -> Result<RunLog> {
         let cfg = self.cfg.clone();
-        let dims = cfg.model.clone();
-        let strategy = cfg.strategy.kind;
-
         let mut pool = DevicePool::new(&cfg)?;
         let roster = pool.roster_len();
         anyhow::ensure!(
@@ -127,307 +564,78 @@ impl<'b> Trainer<'b> {
              from DevicePool::roster(&cfg)",
             self.engine.roster_len()
         );
-
-        let mut log =
-            RunLog::new(format!("{}-{}gpu", strategy.name(), cfg.devices.count));
-
-        // The data plane: sharded corpus + composition policy + (for the
-        // threaded engine) async prefetch. Virtual-time runs force
-        // synchronous assembly so the sample→device routing — and with it
-        // the whole run — stays deterministic.
-        let producer_threads = match cfg.runtime.mode {
-            ExecMode::Virtual => 0,
-            ExecMode::Real => cfg.data.pipeline.producer_threads,
-        };
-        let plane =
-            DataPlane::new(train, &dims, &cfg.data.pipeline, producer_threads, cfg.sgd.seed);
-        let nnz_estimate = plane.nnz_estimate();
-
-        let eval_bucket = self.eval_bucket();
-        let eval_batches = EvalBatches::new(test, &dims, eval_bucket);
-
-        // Global model + momentum history + roster-indexed replicas.
-        let mut global = match self.opts.init_model.take() {
-            Some(m) => {
-                anyhow::ensure!(m.dims == dims, "resume model dims mismatch");
-                m
-            }
-            None => ModelState::init(&dims, cfg.sgd.seed),
-        };
-        let mut global_prev = global.clone();
-        let mut replicas: Vec<ModelState> = vec![global.clone(); roster];
-
-        // Serving warm-start: the init (or resumed) model is servable before
-        // the first merge lands.
-        if let Some(reg) = &self.opts.publish {
-            reg.publish(global.clone(), None, 0.0);
+        // Fail fallible session inputs *before* handing over the engine, so
+        // an invalid resume model leaves this Trainer usable (the session
+        // constructor cannot give the engine back on error).
+        if let Some(m) = &self.opts.init_model {
+            anyhow::ensure!(m.dims == cfg.model, "resume model dims mismatch");
         }
 
-        // Roster-indexed adaptive state (survives membership churn).
-        let mut batch_sizes = vec![cfg.sgd.initial_batch; roster];
-        let mut lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); roster];
-        let mut scaling_state = scaling::ScalingState::default();
+        // Hand the engine to the session for the duration of the run; a
+        // placeholder engine takes its slot so Trainer stays usable after.
+        let engine = std::mem::replace(&mut self.engine, Box::new(NullEngine { roster }));
+        // Move (not clone) any resume model into the session's options —
+        // it can be a full paper-scale ModelState — and never resume twice.
+        let init_model = self.opts.init_model.take();
+        let mut opts = self.opts.clone();
+        opts.init_model = init_model;
+        let name = format!("{}-{}gpu", cfg.strategy.kind.name(), cfg.devices.count);
+        let test = Arc::new(test.clone());
+        let mut session =
+            TrainerSession::new(cfg.clone(), engine, self.eval_backend, opts, train, test, name)?;
 
-        let mut clock = 0.0f64;
-        let mut samples = 0u64;
-
-        for mb in 0..cfg.sgd.num_mega_batches {
+        let mut step_err: Option<anyhow::Error> = None;
+        while !session.done() {
             if let Some(budget) = self.opts.time_budget {
-                if clock >= budget {
+                if session.clock() >= budget {
                     break;
                 }
             }
-
             // ---- pool membership for this mega-batch ----------------------
+            let mb = session.completed_mega_batches();
             let events = pool.begin_mega_batch(mb);
             let active = pool.active_ids();
-            // A device (re-)joining the pool resumes from the current global
-            // model; the momentum history lives on the global model and is
-            // unaffected by churn. (Inactive replicas are left stale rather
-            // than kept in sync — one clone per join, not per mega-batch.)
-            for ev in &events {
-                if matches!(ev.action, PoolAction::Add | PoolAction::Readmit) {
-                    replicas[ev.device] = global.clone();
+            let rows = events.iter().map(pool_event_row).collect();
+            match session.step(&active, session.clock(), rows) {
+                Ok(_) => pool.observe(session.last_report().expect("step just ran")),
+                Err(e) => {
+                    step_err = Some(e);
+                    break;
                 }
             }
-            if self.opts.verbose {
-                for ev in &events {
-                    println!(
-                        "[{}] mb={:<3} pool: {} device {} ({})",
-                        log.name,
-                        mb,
-                        ev.action.name(),
-                        ev.device,
-                        ev.reason
-                    );
-                }
-            }
-
-            // Goyal-style linear warmup on every device's learning rate.
-            let warmup = warmup_factor(mb, cfg.sgd.warmup_mega_batches);
-
-            let (report, merge_secs, merge_weights, perturbed) = match strategy {
-                Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
-                    let mut plan = plan_for_strategy(
-                        &cfg, strategy, &active, &batch_sizes, &lrs, nnz_estimate,
-                    );
-                    for lr in plan.lrs.iter_mut() {
-                        *lr *= warmup;
-                    }
-                    let report = self.engine.run_mega_batch(&mut replicas, &plane, &plan)?;
-                    clock += report.wall;
-
-                    // ---- merge (Algorithm 2 for Adaptive), weights
-                    // renormalized over the active subset -------------------
-                    let active_updates: Vec<u64> =
-                        active.iter().map(|&d| report.per_device[d].updates).collect();
-                    let active_batches: Vec<usize> =
-                        active.iter().map(|&d| batch_sizes[d]).collect();
-                    let outcome = match strategy {
-                        Strategy::Adaptive => {
-                            let l2s: Vec<f64> =
-                                active.iter().map(|&d| replicas[d].l2_per_param()).collect();
-                            merge::compute_weights(&active_updates, &active_batches, &l2s, &cfg.merge)
-                        }
-                        _ => merge::MergeOutcome {
-                            weights: vec![1.0 / active.len() as f64; active.len()],
-                            perturbed: false,
-                            by_updates: false,
-                        },
-                    };
-                    let (merged, merge_secs) =
-                        self.merge_active(&replicas, &active, &outcome.weights, &dims);
-                    // Momentum global update for the HeteroGPU strategies.
-                    let momentum = match strategy {
-                        Strategy::Adaptive | Strategy::Elastic => cfg.merge.momentum,
-                        _ => 0.0,
-                    };
-                    merge::momentum_update(&mut global, &mut global_prev, &merged, momentum);
-                    clock += merge_secs;
-
-                    // ---- Algorithm 1 (Adaptive only) over the active
-                    // subset, gated by the stability/oscillation controller --
-                    scaling_state.observe(&batch_sizes);
-                    if strategy == Strategy::Adaptive
-                        && cfg.strategy.batch_scaling
-                        && scaling_state.should_scale()
-                    {
-                        let mut b_act: Vec<usize> =
-                            active.iter().map(|&d| batch_sizes[d]).collect();
-                        let mut lr_act: Vec<f32> = active.iter().map(|&d| lrs[d]).collect();
-                        scaling::rescale(&mut b_act, &mut lr_act, &active_updates, &cfg.sgd);
-                        for (i, &d) in active.iter().enumerate() {
-                            batch_sizes[d] = b_act[i];
-                            lrs[d] = lr_act[i];
-                        }
-                    }
-                    let weights = scatter_weights(&outcome.weights, &active, roster);
-                    (report, merge_secs, weights, outcome.perturbed)
-                }
-                Strategy::SyncGradAgg => {
-                    // One "mega-batch" worth of synchronous rounds, merging
-                    // after every round (gradient aggregation ≡ averaging
-                    // one-step replicas).
-                    let plan: DispatchPlan = plan_for_strategy(
-                        &cfg, strategy, &active, &batch_sizes, &lrs, nnz_estimate,
-                    );
-                    let b_tf = plan.batch_sizes[0];
-                    let rounds =
-                        (cfg.sgd.mega_batch_samples() / (active.len() * b_tf)).max(1);
-                    let mut agg: Option<MegaBatchReport> = None;
-                    let mut merge_total = 0.0;
-                    let uniform = vec![1.0 / active.len() as f64; active.len()];
-                    for _ in 0..rounds {
-                        let mut plan = plan.clone();
-                        for lr in plan.lrs.iter_mut() {
-                            *lr *= warmup;
-                        }
-                        let report =
-                            self.engine.run_mega_batch(&mut replicas, &plane, &plan)?;
-                        clock += report.wall * cfg.strategy.sync_overhead;
-
-                        let (merged, merge_secs) =
-                            self.merge_active(&replicas, &active, &uniform, &dims);
-                        clock += merge_secs * cfg.strategy.sync_overhead;
-                        merge_total += merge_secs;
-                        global_prev = global.clone();
-                        global = merged;
-                        for &d in &active {
-                            replicas[d] = global.clone();
-                        }
-                        agg = Some(match agg.take() {
-                            None => report,
-                            Some(mut acc) => {
-                                for (a, b) in acc.per_device.iter_mut().zip(report.per_device) {
-                                    a.updates += b.updates;
-                                    a.samples += b.samples;
-                                    a.busy += b.busy;
-                                    a.loss_sum += b.loss_sum;
-                                    a.nnz += b.nnz;
-                                }
-                                acc.wall += report.wall;
-                                acc.batch_nnz.extend(report.batch_nnz);
-                                acc
-                            }
-                        });
-                    }
-                    let weights = scatter_weights(&uniform, &active, roster);
-                    (agg.unwrap(), merge_total, weights, false)
-                }
-            };
-
-            // Reset the active replicas to the merged global model for the
-            // next window. Inactive slots are synced lazily when their
-            // device re-joins (see the pool-event handling above).
-            for &d in &active {
-                replicas[d] = global.clone();
-            }
-
-            samples += report.total_samples();
-            pool.observe(&report);
-
-            // ---- evaluate (excluded from the training clock) --------------
-            let accuracy = if (mb + 1) % self.opts.eval_every == 0 {
-                crate::eval::p_at_1(self.eval_backend, &global, &eval_batches, test)?
-            } else {
-                log.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
-            };
-
-            // Hardware efficiency: fraction of the barrier window each
-            // active device spent busy (1.0 = no straggler idling; inactive
-            // devices report 0).
-            let utilization: Vec<f64> = report
-                .per_device
-                .iter()
-                .map(|d| {
-                    if d.updates > 0 && report.wall > 0.0 {
-                        (d.busy / report.wall).min(1.0)
-                    } else {
-                        0.0
-                    }
-                })
-                .collect();
-
-            // Per-batch nnz dispersion (the cost variance the composition
-            // policy controls) plus cumulative data-plane counters.
-            let (nnz_mean, nnz_cv) = report.nnz_dispersion();
-            let row = MegaBatchRow {
-                mega_batch: mb,
-                clock,
-                samples,
-                loss: report.mean_loss(),
-                accuracy,
-                batch_sizes: batch_sizes.clone(),
-                updates: report.updates(),
-                perturbed,
-                merge_time: merge_secs,
-                l2_per_param: global.l2_per_param(),
-                utilization,
-                active_devices: active.clone(),
-                merge_weights,
-                pool_events: events.iter().map(pool_event_row).collect(),
-                nnz_mean,
-                nnz_cv,
-                pipeline: pipeline_row(&plane.stats()),
-            };
-            for ev in events {
-                log.pool_events.push(pool_event_row(&ev));
-            }
-            if let Some(path) = &self.opts.checkpoint {
-                crate::model::checkpoint::save(&global, path)?;
-            }
-            // Publish into the serving registry at the configured cadence
-            // (the clock stamp excludes eval time, like the training clock).
-            if let Some(reg) = &self.opts.publish {
-                if (mb + 1) % cfg.serve.publish_every == 0 {
-                    reg.publish(global.clone(), Some(mb), clock);
-                }
-            }
-            if self.opts.verbose {
-                println!(
-                    "[{}] mb={:<3} clock={:>8.3}s loss={:<8.4} P@1={:<6.4} g={} b={:?} u={:?}{}",
-                    log.name,
-                    mb,
-                    clock,
-                    row.loss,
-                    accuracy,
-                    row.active_devices.len(),
-                    row.batch_sizes,
-                    row.updates,
-                    if perturbed { " pert" } else { "" }
-                );
-            }
-            log.push(row);
         }
-        Ok(log)
+        // Reclaim the engine so this Trainer stays usable for another run.
+        let (log, engine) = session.finish();
+        self.engine = engine;
+        match step_err {
+            Some(e) => Err(e),
+            None => Ok(log),
+        }
+    }
+}
+
+/// Placeholder engine occupying `Trainer::engine` while a session borrows
+/// the real one; any attempt to run through it is a programming error.
+struct NullEngine {
+    roster: usize,
+}
+
+impl ExecutionEngine for NullEngine {
+    fn run_mega_batch(
+        &mut self,
+        _replicas: &mut [ModelState],
+        _plane: &DataPlane,
+        _plan: &DispatchPlan,
+    ) -> Result<MegaBatchReport> {
+        anyhow::bail!("trainer engine is owned by an active session")
     }
 
-    /// Weighted all-reduce over the active replicas; returns the merged
-    /// model and the simulated transfer seconds.
-    fn merge_active(
-        &self,
-        replicas: &[ModelState],
-        active: &[usize],
-        weights: &[f64],
-        dims: &crate::config::ModelDims,
-    ) -> (ModelState, f64) {
-        let mut merged = ModelState::zeros(dims);
-        let refs: Vec<&ModelState> = active.iter().map(|&d| &replicas[d]).collect();
-        let stats = allreduce::allreduce_merge(
-            &mut merged,
-            &refs,
-            weights,
-            self.opts.allreduce,
-            active.len(),
-            &self.engine.cost_model(),
-        );
-        (merged, stats.seconds)
+    fn roster_len(&self) -> usize {
+        self.roster
     }
 
-    fn eval_bucket(&self) -> usize {
-        self.opts
-            .eval_bucket
-            .unwrap_or_else(|| 256.min(self.cfg.data.test_samples.max(1)).max(1))
+    fn name(&self) -> &'static str {
+        "null"
     }
 }
 
@@ -441,7 +649,7 @@ fn scatter_weights(weights: &[f64], active: &[usize], roster: usize) -> Vec<f64>
     out
 }
 
-fn pool_event_row(ev: &PoolEvent) -> PoolEventRow {
+pub(crate) fn pool_event_row(ev: &PoolEvent) -> PoolEventRow {
     PoolEventRow {
         mega_batch: ev.mega_batch,
         device: ev.device,
@@ -494,6 +702,7 @@ mod tests {
             initial_batch: 32,
             warmup_mega_batches: 0,
             seed: 7,
+            ..Default::default()
         };
         cfg.devices = DeviceConfig {
             count: g,
@@ -806,5 +1015,86 @@ mod tests {
             assert_eq!(x.accuracy, y.accuracy);
             assert_eq!(x.batch_sizes, y.batch_sizes);
         }
+    }
+
+    #[test]
+    fn session_pauses_and_resumes_on_an_imposed_roster() {
+        // Drive a session directly with externally-imposed rosters — the
+        // fleet scheduler's contract: shrink to one device, pause (no
+        // step), then resume on a different subset at a later shared clock.
+        let cfg = test_config(Strategy::Adaptive, 4);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine = sim_engine(&cfg, &backend);
+        let sharded = std::sync::Arc::new(
+            crate::data::pipeline::ShardedDataset::from_dataset(
+                &train,
+                cfg.data.pipeline.shard_samples,
+            ),
+        );
+        let mut session = TrainerSession::new(
+            cfg,
+            engine,
+            &backend,
+            TrainerOptions::default(),
+            sharded,
+            std::sync::Arc::new(test),
+            "tenant-a",
+        )
+        .unwrap();
+
+        session.step(&[0, 1, 2, 3], 0.0, Vec::new()).unwrap();
+        let t1 = session.clock();
+        // Lease shrinks to a single device.
+        let row = session.step(&[2], t1, Vec::new()).unwrap();
+        assert_eq!(row.active_devices, vec![2]);
+        assert_eq!(row.merge_weights[2], 1.0, "single-device merge weight is 1");
+        assert!(row.updates.iter().enumerate().all(|(d, &u)| (u > 0) == (d == 2)));
+        // Paused for 5 virtual seconds, then resumed on a disjoint subset:
+        // the clock lands on the shared fleet time, not the private one.
+        let resume_at = session.clock() + 5.0;
+        let row = session.step(&[0, 3], resume_at, Vec::new()).unwrap();
+        assert!(row.clock > resume_at, "resume starts at the shared clock");
+        assert_eq!(row.active_devices, vec![0, 3]);
+        let w: f64 = row.merge_weights.iter().sum();
+        assert!((w - 1.0).abs() < 0.1 + 1e-9, "weights renormalize over the lease: {w}");
+        // Loss keeps improving across the churn.
+        let log = session.log();
+        assert!(log.rows[2].loss < log.rows[0].loss + 0.5);
+        assert_eq!(log.rows.len(), 3);
+    }
+
+    #[test]
+    fn session_rejects_bad_rosters_and_trainer_reclaims_engine() {
+        let cfg = test_config(Strategy::Adaptive, 2);
+        let train = Generator::new(&cfg.model, &cfg.data).generate(600, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(100, 2);
+        let backend = RefBackend;
+        let engine = sim_engine(&cfg, &backend);
+        let sharded = std::sync::Arc::new(
+            crate::data::pipeline::ShardedDataset::from_dataset(&train, 4096),
+        );
+        let mut session = TrainerSession::new(
+            cfg.clone(),
+            engine,
+            &backend,
+            TrainerOptions::default(),
+            sharded,
+            std::sync::Arc::new(test.clone()),
+            "t",
+        )
+        .unwrap();
+        assert!(session.step(&[], 0.0, Vec::new()).is_err(), "empty roster");
+        assert!(session.step(&[9], 0.0, Vec::new()).is_err(), "outside roster");
+        assert!(!session.done());
+
+        // Trainer::run reclaims its engine: a second run on the same
+        // instance works.
+        let engine = sim_engine(&cfg, &backend);
+        let mut trainer = Trainer::new(cfg, engine, &backend, TrainerOptions::default());
+        let a = trainer.run(&train, &test).unwrap();
+        let b = trainer.run(&train, &test).unwrap();
+        assert_eq!(a.rows.len(), b.rows.len(), "the engine survives run()");
     }
 }

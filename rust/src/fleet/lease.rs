@@ -1,0 +1,453 @@
+//! Device leases — the ownership overlay the fleet arbiter maintains on
+//! top of the physical [`crate::coordinator::DevicePool`].
+//!
+//! A lease binds one roster device to one tenant at one priority. The
+//! [`LeaseBook`] is the single ledger of every live lease and enforces the
+//! **conservation invariant** the whole fleet plane rests on:
+//!
+//! 1. no device is ever leased to two tenants at once,
+//! 2. every live lease covers a device inside the *active* roster,
+//! 3. a revoked lease drains within its grace bound — the holder may
+//!    finish in-flight work (its current mega-batch / routed batches), but
+//!    at `deadline` the book force-releases regardless.
+//!
+//! Revocation is therefore two-phase: `revoke` moves a lease to
+//! [`LeaseState::Draining`] with `deadline = now + grace`; the holder acks
+//! at its next barrier via `release`, or [`LeaseBook::expire`] forces the
+//! release when the deadline passes. Physical churn is harsher: a device
+//! leaving the active roster force-releases its lease immediately
+//! (invariant 2 beats the grace window — the hardware is gone).
+
+use std::fmt;
+
+use anyhow::bail;
+
+use crate::metrics::LeaseEventRow;
+use crate::Result;
+
+/// Tenant handle (index into the arbiter's tenant table).
+pub type TenantId = usize;
+
+/// Scheduling priority of a lease / tenant. Preemption only ever flows
+/// downhill: a breaching serve lane takes from the lowest class first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PriorityClass {
+    /// Preempt-me-first batch work.
+    BestEffort,
+    /// Normal training jobs.
+    Standard,
+    /// Latency-SLO serve lanes; never preempted.
+    Critical,
+}
+
+impl PriorityClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityClass::BestEffort => "best-effort",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Critical => "critical",
+        }
+    }
+}
+
+/// Unique lease handle (monotone, never reused).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LeaseId(pub u64);
+
+impl fmt::Display for LeaseId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lease#{}", self.0)
+    }
+}
+
+/// Lifecycle of a live lease.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LeaseState {
+    /// Held; the tenant schedules work on the device.
+    Active,
+    /// Revoked with a grace window: in-flight work may finish, no new work
+    /// should start, and the book force-releases at `deadline`.
+    Draining { deadline: f64 },
+}
+
+/// One live lease.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub id: LeaseId,
+    pub tenant: TenantId,
+    pub device: usize,
+    pub priority: PriorityClass,
+    pub granted_at: f64,
+    pub state: LeaseState,
+}
+
+/// The lease ledger. All mutation goes through grant / revoke / release /
+/// expire / set_roster_active, each of which appends to the event log, so
+/// the history of ownership is fully reconstructible.
+pub struct LeaseBook {
+    /// Live leases, ascending by device (at most one per device).
+    leases: Vec<Lease>,
+    /// Roster-indexed active mask (the physical membership the invariant
+    /// is checked against).
+    active: Vec<bool>,
+    next_id: u64,
+    events: Vec<LeaseEventRow>,
+}
+
+impl LeaseBook {
+    /// A book over a roster of `roster_len` devices, of which
+    /// `initially_active` are in the pool.
+    pub fn new(roster_len: usize, initially_active: &[usize]) -> LeaseBook {
+        let mut active = vec![false; roster_len];
+        for &d in initially_active {
+            assert!(d < roster_len, "active device outside the roster");
+            active[d] = true;
+        }
+        LeaseBook { leases: Vec::new(), active, next_id: 1, events: Vec::new() }
+    }
+
+    pub fn roster_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Every live lease (Active and Draining), ascending by device.
+    pub fn leases(&self) -> &[Lease] {
+        &self.leases
+    }
+
+    /// The live lease covering `device`, if any.
+    pub fn lease_on(&self, device: usize) -> Option<&Lease> {
+        self.leases.iter().find(|l| l.device == device)
+    }
+
+    pub fn lease(&self, id: LeaseId) -> Option<&Lease> {
+        self.leases.iter().find(|l| l.id == id)
+    }
+
+    /// Devices leased to `tenant` in the given states. `include_draining`
+    /// is the tenant's view (it may finish in-flight work on a draining
+    /// device); pass false for the arbiter's "firmly held" view.
+    pub fn devices_of(&self, tenant: TenantId, include_draining: bool) -> Vec<usize> {
+        self.leases
+            .iter()
+            .filter(|l| {
+                l.tenant == tenant
+                    && (include_draining || matches!(l.state, LeaseState::Active))
+            })
+            .map(|l| l.device)
+            .collect()
+    }
+
+    /// Is `device` covered by any live lease?
+    pub fn is_leased(&self, device: usize) -> bool {
+        self.lease_on(device).is_some()
+    }
+
+    /// Ownership-change history since construction.
+    pub fn events(&self) -> &[LeaseEventRow] {
+        &self.events
+    }
+
+    /// Drain the recorded events (the sim collects them per tick).
+    pub fn take_events(&mut self) -> Vec<LeaseEventRow> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Grant `device` to `tenant`. Fails when the device is outside the
+    /// active roster or already leased — conservation is enforced at the
+    /// door, not audited after the fact.
+    pub fn grant(
+        &mut self,
+        tenant: TenantId,
+        device: usize,
+        priority: PriorityClass,
+        now: f64,
+    ) -> Result<LeaseId> {
+        if device >= self.active.len() || !self.active[device] {
+            bail!("device {device} is outside the active roster");
+        }
+        if let Some(l) = self.lease_on(device) {
+            bail!("device {device} is already leased to tenant {} ({})", l.tenant, l.id);
+        }
+        let id = LeaseId(self.next_id);
+        self.next_id += 1;
+        let lease = Lease {
+            id,
+            tenant,
+            device,
+            priority,
+            granted_at: now,
+            state: LeaseState::Active,
+        };
+        let at = self.leases.partition_point(|l| l.device < device);
+        self.leases.insert(at, lease);
+        self.push_event(now, tenant, device, "grant", format!("{priority:?} lease {id}"));
+        Ok(id)
+    }
+
+    /// Two-phase revocation: the lease enters `Draining` with
+    /// `deadline = now + grace`. Revoking a draining lease only ever
+    /// *tightens* its deadline (a second revocation cannot extend the
+    /// original grace bound).
+    pub fn revoke(&mut self, id: LeaseId, grace: f64, now: f64, reason: &str) -> Result<()> {
+        assert!(grace >= 0.0, "grace must be non-negative");
+        let lease = self
+            .leases
+            .iter_mut()
+            .find(|l| l.id == id)
+            .ok_or_else(|| anyhow::anyhow!("{id} is not live"))?;
+        let deadline = match lease.state {
+            LeaseState::Active => now + grace,
+            LeaseState::Draining { deadline } => deadline.min(now + grace),
+        };
+        lease.state = LeaseState::Draining { deadline };
+        let (tenant, device) = (lease.tenant, lease.device);
+        self.push_event(
+            now,
+            tenant,
+            device,
+            "revoke",
+            format!("{reason}; drains by {deadline:.3}s"),
+        );
+        Ok(())
+    }
+
+    /// Cancel a drain: the arbiter decided the holder keeps the device
+    /// after all (e.g. a preempt/return flap within one grace window), so
+    /// the lease goes straight back to `Active` with no release/regrant
+    /// round-trip.
+    pub fn reinstate(&mut self, id: LeaseId, now: f64, reason: &str) -> Result<()> {
+        let lease = self
+            .leases
+            .iter_mut()
+            .find(|l| l.id == id)
+            .ok_or_else(|| anyhow::anyhow!("{id} is not live"))?;
+        match lease.state {
+            LeaseState::Draining { .. } => lease.state = LeaseState::Active,
+            LeaseState::Active => bail!("{id} is not draining"),
+        }
+        let (tenant, device) = (lease.tenant, lease.device);
+        self.push_event(now, tenant, device, "reinstate", reason.to_string());
+        Ok(())
+    }
+
+    /// The holder gives the lease back (drain acked at a barrier, or a
+    /// voluntary release on tenant departure).
+    pub fn release(&mut self, id: LeaseId, now: f64, reason: &str) -> Result<()> {
+        let at = self
+            .leases
+            .iter()
+            .position(|l| l.id == id)
+            .ok_or_else(|| anyhow::anyhow!("{id} is not live"))?;
+        let lease = self.leases.remove(at);
+        self.push_event(now, lease.tenant, lease.device, "release", reason.to_string());
+        Ok(())
+    }
+
+    /// Force-release every draining lease whose deadline has passed —
+    /// the grace bound of invariant 3. Returns the expired leases.
+    pub fn expire(&mut self, now: f64) -> Vec<Lease> {
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < self.leases.len() {
+            match self.leases[i].state {
+                LeaseState::Draining { deadline } if now >= deadline => {
+                    let lease = self.leases.remove(i);
+                    self.push_event(
+                        now,
+                        lease.tenant,
+                        lease.device,
+                        "force-release",
+                        format!("grace expired ({:.3}s)", deadline),
+                    );
+                    expired.push(lease);
+                }
+                _ => i += 1,
+            }
+        }
+        expired
+    }
+
+    /// Apply a physical-membership change. Leases on devices that left the
+    /// active roster are force-released immediately (the hardware is gone;
+    /// invariant 2 beats any grace window). Returns the released leases.
+    pub fn set_roster_active(&mut self, ids: &[usize], now: f64) -> Vec<Lease> {
+        self.active.fill(false);
+        for &d in ids {
+            assert!(d < self.active.len(), "active device outside the roster");
+            self.active[d] = true;
+        }
+        let mut released = Vec::new();
+        let mut i = 0;
+        while i < self.leases.len() {
+            if !self.active[self.leases[i].device] {
+                let lease = self.leases.remove(i);
+                self.push_event(
+                    now,
+                    lease.tenant,
+                    lease.device,
+                    "force-release",
+                    "device left the pool".to_string(),
+                );
+                released.push(lease);
+            } else {
+                i += 1;
+            }
+        }
+        released
+    }
+
+    /// Audit the conservation invariant. `now` bounds invariant 3: no
+    /// draining lease may outlive its deadline once `expire(now)` ran.
+    pub fn check_conservation(&self, now: f64) -> Result<()> {
+        for w in self.leases.windows(2) {
+            if w[0].device == w[1].device {
+                bail!("device {} leased twice ({} and {})", w[0].device, w[0].id, w[1].id);
+            }
+        }
+        for l in &self.leases {
+            if !self.active[l.device] {
+                bail!("{} covers device {} outside the active roster", l.id, l.device);
+            }
+            if let LeaseState::Draining { deadline } = l.state {
+                if now > deadline {
+                    bail!("{} overstayed its drain deadline ({deadline:.3}s < {now:.3}s)", l.id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn push_event(
+        &mut self,
+        at: f64,
+        tenant: TenantId,
+        device: usize,
+        action: &str,
+        reason: String,
+    ) {
+        self.events.push(LeaseEventRow {
+            at,
+            tenant,
+            device,
+            action: action.to_string(),
+            reason,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book4() -> LeaseBook {
+        LeaseBook::new(4, &[0, 1, 2, 3])
+    }
+
+    #[test]
+    fn grant_is_exclusive_and_roster_bound() {
+        let mut book = book4();
+        let a = book.grant(0, 1, PriorityClass::Standard, 0.0).unwrap();
+        assert!(book.is_leased(1));
+        assert_eq!(book.lease_on(1).unwrap().tenant, 0);
+        // Double-lease is refused at the door.
+        assert!(book.grant(1, 1, PriorityClass::Critical, 0.1).is_err());
+        // Outside the roster / inactive devices are refused.
+        assert!(book.grant(0, 9, PriorityClass::Standard, 0.1).is_err());
+        let mut small = LeaseBook::new(4, &[0, 1]);
+        assert!(small.grant(0, 3, PriorityClass::Standard, 0.0).is_err());
+        book.check_conservation(0.2).unwrap();
+        book.release(a, 0.3, "done").unwrap();
+        assert!(!book.is_leased(1));
+        assert!(book.release(a, 0.4, "twice").is_err());
+    }
+
+    #[test]
+    fn revoke_drains_within_grace_and_expire_forces() {
+        let mut book = book4();
+        let id = book.grant(2, 0, PriorityClass::BestEffort, 0.0).unwrap();
+        book.revoke(id, 0.5, 1.0, "rebalance").unwrap();
+        assert!(matches!(
+            book.lease(id).unwrap().state,
+            LeaseState::Draining { deadline } if (deadline - 1.5).abs() < 1e-12
+        ));
+        // Tenant still sees the draining device; the arbiter's firm view
+        // does not.
+        assert_eq!(book.devices_of(2, true), vec![0]);
+        assert!(book.devices_of(2, false).is_empty());
+        // Within grace: conservation holds, nothing expires.
+        assert!(book.expire(1.2).is_empty());
+        book.check_conservation(1.2).unwrap();
+        // Past the deadline the book force-releases.
+        let expired = book.expire(1.6);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].device, 0);
+        assert!(!book.is_leased(0));
+        book.check_conservation(1.6).unwrap();
+        let actions: Vec<&str> = book.events().iter().map(|e| e.action.as_str()).collect();
+        assert_eq!(actions, vec!["grant", "revoke", "force-release"]);
+    }
+
+    #[test]
+    fn reinstate_cancels_a_drain() {
+        let mut book = book4();
+        let id = book.grant(0, 1, PriorityClass::Standard, 0.0).unwrap();
+        assert!(book.reinstate(id, 0.1, "not draining").is_err());
+        book.revoke(id, 0.5, 0.2, "r").unwrap();
+        book.reinstate(id, 0.4, "flap").unwrap();
+        assert!(matches!(book.lease(id).unwrap().state, LeaseState::Active));
+        // The cancelled deadline no longer expires the lease.
+        assert!(book.expire(9.0).is_empty());
+        book.check_conservation(9.0).unwrap();
+        let actions: Vec<&str> = book.events().iter().map(|e| e.action.as_str()).collect();
+        assert_eq!(actions, vec!["grant", "revoke", "reinstate"]);
+    }
+
+    #[test]
+    fn second_revoke_only_tightens_the_deadline() {
+        let mut book = book4();
+        let id = book.grant(0, 2, PriorityClass::Standard, 0.0).unwrap();
+        book.revoke(id, 1.0, 0.0, "first").unwrap();
+        book.revoke(id, 5.0, 0.5, "looser grace must not extend").unwrap();
+        match book.lease(id).unwrap().state {
+            LeaseState::Draining { deadline } => assert!((deadline - 1.0).abs() < 1e-12),
+            s => panic!("{s:?}"),
+        }
+        book.revoke(id, 0.1, 0.5, "tighter grace wins").unwrap();
+        match book.lease(id).unwrap().state {
+            LeaseState::Draining { deadline } => assert!((deadline - 0.6).abs() < 1e-12),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_churn_force_releases_departed_devices() {
+        let mut book = book4();
+        book.grant(0, 0, PriorityClass::Standard, 0.0).unwrap();
+        book.grant(1, 3, PriorityClass::Critical, 0.0).unwrap();
+        // Device 3 leaves the pool: its lease dies with it, grace or not.
+        let released = book.set_roster_active(&[0, 1, 2], 1.0);
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].device, 3);
+        assert_eq!(released[0].tenant, 1);
+        assert!(book.is_leased(0));
+        book.check_conservation(1.0).unwrap();
+        // A grant on the departed device now fails; re-adding it re-enables.
+        assert!(book.grant(1, 3, PriorityClass::Critical, 1.1).is_err());
+        book.set_roster_active(&[0, 1, 2, 3], 2.0);
+        assert!(book.grant(1, 3, PriorityClass::Critical, 2.1).is_ok());
+    }
+
+    #[test]
+    fn conservation_audit_catches_overstayed_drains() {
+        let mut book = book4();
+        let id = book.grant(0, 1, PriorityClass::Standard, 0.0).unwrap();
+        book.revoke(id, 0.25, 0.0, "r").unwrap();
+        book.check_conservation(0.25).unwrap();
+        // Without expire() the audit flags the overstay — the sim must
+        // call expire before checking.
+        assert!(book.check_conservation(0.3).is_err());
+        book.expire(0.3);
+        book.check_conservation(0.3).unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! The fleet scheduler — multi-tenant arbitration of the shared
+//! heterogeneous device fleet.
+//!
+//! Everything below the elastic machinery assumes *one* job owns the
+//! roster; this subsystem removes that assumption. Many training jobs and
+//! latency-SLO serve lanes share one fleet through **device leases**:
+//!
+//! * [`lease`] — the [`LeaseBook`](lease::LeaseBook) ledger: priority-
+//!   classed leases, two-phase revocation with a bounded grace drain, and
+//!   the conservation invariant (no device leased twice, leases ⊆ active
+//!   roster, drains bounded by grace).
+//! * [`tenant`] — tenant descriptors (training jobs, serve lanes) with
+//!   weights and quotas, and weighted max-min fair allocation over
+//!   heterogeneous device capacity.
+//! * [`arbiter`] — the decision loop: fair-share targets recomputed on
+//!   tenant arrival/departure and pool churn, plus SLO feedback — a serve
+//!   lane whose windowed p95 breaches its target preempts the lowest-
+//!   priority training lease and returns it when the breach clears.
+//! * [`sim`] — the deterministic discrete-event co-schedule interleaving
+//!   [`TrainerSession`](crate::coordinator::trainer::TrainerSession)s and
+//!   a serve lane on the shared virtual clock (`experiment fleet`).
+//!
+//! Training rides through lease churn via the paper's own elastic path:
+//! a revoked lease shrinks the session's active subset at the next merge
+//! barrier and Algorithm 2's weights renormalize over what remains — the
+//! normalized-merging machinery applied to an externally-imposed roster.
+
+pub mod arbiter;
+pub mod lease;
+pub mod sim;
+pub mod tenant;
+
+pub use arbiter::{Arbiter, ArbiterConfig};
+pub use lease::{Lease, LeaseBook, LeaseId, LeaseState, PriorityClass, TenantId};
+pub use sim::{co_schedule, FleetOutcome, TenantJob};
+pub use tenant::{fair_allocation, TenantKind, TenantSpec};

@@ -1,0 +1,579 @@
+//! Deterministic discrete-event co-scheduling of multiple training
+//! tenants and a serve lane on one shared heterogeneous fleet.
+//!
+//! This is where the two previously-independent planes genuinely contend:
+//! every device belongs to exactly one tenant at a time (the lease book's
+//! conservation invariant), training tenants advance one mega-batch per
+//! [`TrainerSession::step`] on whatever subset the arbiter granted them,
+//! and the serve lane admits/routes requests on *its* leased subset — all
+//! on one shared virtual clock, so the whole co-schedule is
+//! bit-reproducible.
+//!
+//! Event sources, processed in time order (ties: tick, then training
+//! barrier, then arrival, then admission deadline — an arrival tying with
+//! a deadline is admitted first so the flush sees the full queue, same as
+//! `serve::replay`):
+//!
+//! * **arbiter ticks** every `[fleet] decision_window` seconds — scripted
+//!   fleet churn (`[fleet] events`, window-indexed through the same
+//!   [`DevicePool`] machinery as training), drain acks for idle tenants,
+//!   the SLO sample (`util::stats::trailing_percentile` over the last
+//!   window's completed requests), and one [`Arbiter::rebalance`];
+//! * **training barriers** — a tenant's in-flight mega-batch completes:
+//!   draining leases ack, a finished tenant departs (its share
+//!   redistributes), and idle tenants with firm leases start their next
+//!   mega-batch immediately;
+//! * **serve arrivals / admission deadlines** — exactly the
+//!   `serve::replay` loop, but capacity is the serve lane's *lease*, not
+//!   the raw roster, and a lane that momentarily holds no devices queues
+//!   instead of routing (the outage shows up as latency, which is what
+//!   trips the SLO detector and triggers preemption).
+//!
+//! Modeling simplifications, on purpose: a mega-batch in flight when its
+//! lease's grace expires still completes (the book force-releases the
+//! device; configure `grace` at or above a mega-batch duration to avoid
+//! double-booking), and the serve lane serves the snapshot that was
+//! *published by* the request's formation time (`snapshot_at_clock`), so
+//! causality holds even though sessions compute whole mega-batches
+//! atomically.
+//!
+//! [`TrainerSession::step`]: crate::coordinator::trainer::TrainerSession::step
+//! [`DevicePool`]: crate::coordinator::DevicePool
+
+use std::sync::Arc;
+
+use crate::config::{Config, ServePattern};
+use crate::coordinator::backend::RefBackend;
+use crate::coordinator::engine_sim::SimEngine;
+use crate::coordinator::trainer::{TrainerOptions, TrainerSession};
+use crate::coordinator::DevicePool;
+use crate::data::pipeline::ShardedDataset;
+use crate::data::SparseDataset;
+use crate::metrics::{LeaseEventRow, PoolEventRow, RunLog};
+use crate::runtime::CostModel;
+use crate::serve::{
+    Admission, Arrival, BatchRecord, RequestRecord, Router, ServeLog, SnapshotRegistry,
+};
+use crate::util::stats;
+use crate::Result;
+
+use super::arbiter::{Arbiter, ArbiterConfig};
+use super::lease::TenantId;
+use super::tenant::TenantSpec;
+
+/// One training tenant of a co-schedule: its own config (model dims and
+/// the `[devices]` section must match the shared fleet's), corpus, and
+/// fair-share weight.
+pub struct TenantJob {
+    pub name: String,
+    pub cfg: Config,
+    pub weight: f64,
+    pub train: Arc<ShardedDataset>,
+    pub test: Arc<SparseDataset>,
+}
+
+/// Everything a co-schedule produced.
+pub struct FleetOutcome {
+    pub name: String,
+    /// One (tenant name, training log) per training tenant. Row clocks are
+    /// on the shared fleet clock.
+    pub tenant_logs: Vec<(String, RunLog)>,
+    /// Serve-lane telemetry (None when no serve lane was scheduled).
+    pub serve: Option<ServeLog>,
+    /// (tick time, windowed p95 ms) — the arbiter's SLO samples.
+    pub slo_series: Vec<(f64, f64)>,
+    /// Every lease-ownership change, time-ordered.
+    pub events: Vec<LeaseEventRow>,
+    /// Scripted physical churn that fired (window-indexed).
+    pub churn: Vec<PoolEventRow>,
+    /// Conservation audits that ran (every tick) — all passed, or
+    /// `co_schedule` would have erred.
+    pub conservation_checks: usize,
+    pub preemptions: usize,
+    pub returns: usize,
+    /// Fleet time when the last training tenant finished (serve duration).
+    pub horizon: f64,
+}
+
+/// Chunked open-loop arrival generation: the co-schedule's horizon is not
+/// known up front (it ends when the last tenant finishes), so traces are
+/// generated `serve.duration`-sized chunks at a time, each chunk seeded
+/// from the base seed and its index — still fully deterministic.
+struct ArrivalStream {
+    pattern: ServePattern,
+    chunk_len: f64,
+    chunk: usize,
+    buf: Vec<Arrival>,
+    idx: usize,
+    exhausted: bool,
+}
+
+impl ArrivalStream {
+    const MAX_EMPTY_CHUNKS: usize = 10_000;
+
+    fn new(cfg: &Config) -> ArrivalStream {
+        ArrivalStream {
+            pattern: cfg.serve.pattern,
+            chunk_len: cfg.serve.duration,
+            chunk: 0,
+            buf: Vec::new(),
+            idx: 0,
+            exhausted: false,
+        }
+    }
+
+    /// Arrival time of the next request (`f64::INFINITY` once exhausted).
+    fn peek(&mut self, cfg: &Config, data: &ShardedDataset) -> f64 {
+        let mut empties = 0;
+        while !self.exhausted && self.idx >= self.buf.len() {
+            let offset = self.chunk as f64 * self.chunk_len;
+            let seed = cfg.serve.seed.wrapping_add((self.chunk as u64).wrapping_mul(0x9E37));
+            let len = self.chunk_len;
+            self.buf = crate::serve::traffic::generate(self.pattern, &cfg.serve, data, len, seed);
+            for a in &mut self.buf {
+                a.at += offset;
+            }
+            self.idx = 0;
+            self.chunk += 1;
+            if self.buf.is_empty() {
+                empties += 1;
+                if empties >= Self::MAX_EMPTY_CHUNKS {
+                    self.exhausted = true;
+                }
+            }
+        }
+        if self.exhausted {
+            f64::INFINITY
+        } else {
+            self.buf[self.idx].at
+        }
+    }
+
+    fn pop(&mut self) -> Arrival {
+        let a = self.buf[self.idx];
+        self.idx += 1;
+        a
+    }
+}
+
+struct TrainTenant<'b> {
+    id: TenantId,
+    name: String,
+    session: TrainerSession<'b>,
+    barrier_at: f64,
+    running: bool,
+    finished: bool,
+}
+
+/// Run one co-schedule. `base` supplies the shared fleet (`[devices]` +
+/// `[elastic] spare_devices`), the serve workload (`[serve]`), and the
+/// arbiter policy (`[fleet]`); `jobs` the training tenants;
+/// `serve_corpus` the request corpus of the serve lane (None = no lane).
+/// The serve lane serves `registry` — the first job publishes into it
+/// (warm-start + every `publish_every` mega-batches), so pre-seed it (e.g.
+/// from a checkpoint) when scheduling a lane without training tenants.
+///
+/// Deterministic: same inputs → bit-identical outcome. Numerics run the
+/// hermetic reference backend on the virtual clock.
+pub fn co_schedule(
+    base: &Config,
+    jobs: &[TenantJob],
+    serve_corpus: Option<Arc<ShardedDataset>>,
+    registry: Arc<SnapshotRegistry>,
+    name: &str,
+) -> Result<FleetOutcome> {
+    let roster = DevicePool::roster(base);
+    let speed_factors: Vec<f64> = roster.iter().map(|d| d.speed_factor).collect();
+    let dw = base.fleet.decision_window;
+    anyhow::ensure!(
+        !jobs.is_empty() || serve_corpus.is_some(),
+        "a co-schedule needs at least one tenant"
+    );
+    for job in jobs {
+        anyhow::ensure!(
+            job.cfg.model == base.model,
+            "tenant '{}' model dims differ from the fleet's",
+            job.name
+        );
+        anyhow::ensure!(
+            job.cfg.devices.count == base.devices.count
+                && job.cfg.devices.speed_factors == base.devices.speed_factors
+                && job.cfg.elastic.spare_devices == base.elastic.spare_devices,
+            "tenant '{}' devices/spares differ from the fleet's (the session roster, the \
+             arbiter's speed model, and the shared pool must describe the same hardware)",
+            job.name
+        );
+    }
+    if serve_corpus.is_some() {
+        anyhow::ensure!(
+            !jobs.is_empty() || !registry.is_empty(),
+            "the serve lane has nothing to serve: no training tenant publishes and the \
+             registry is empty"
+        );
+    }
+
+    // ---- tenant table -----------------------------------------------------
+    let mut specs: Vec<TenantSpec> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| TenantSpec::training(i, j.name.clone(), j.weight))
+        .collect();
+    let serve_id: Option<TenantId> = serve_corpus.as_ref().map(|_| {
+        let id = specs.len();
+        specs.push(TenantSpec::serve(id, "serve-lane", base.fleet.serve_weight));
+        id
+    });
+
+    // ---- physical fleet + arbiter -----------------------------------------
+    let mut pool = DevicePool::with_trace(base, &base.fleet.events)?;
+    let acfg = ArbiterConfig {
+        grace: base.fleet.grace,
+        slo_p95_ms: base.fleet.slo_p95_ms,
+        breach_windows: base.fleet.breach_windows,
+        clear_windows: base.fleet.clear_windows,
+        preemption: base.fleet.preemption,
+    };
+    let mut arbiter = Arbiter::new(specs, speed_factors, &pool.active_ids(), acfg);
+
+    // ---- training sessions ------------------------------------------------
+    let backend = RefBackend;
+    let mut tenants: Vec<TrainTenant<'_>> = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.iter().enumerate() {
+        let engine =
+            Box::new(SimEngine::new(&backend, DevicePool::roster(&job.cfg), CostModel::default()));
+        let opts = TrainerOptions {
+            // The first tenant always feeds the snapshot registry — the
+            // serve lane reads it live, and a lane-less (exclusive) run
+            // leaves behind a publish timeline a later serve-only
+            // co-schedule can replay.
+            publish: (i == 0).then(|| registry.clone()),
+            ..Default::default()
+        };
+        let session = TrainerSession::new(
+            job.cfg.clone(),
+            engine,
+            &backend,
+            opts,
+            job.train.clone(),
+            job.test.clone(),
+            job.name.clone(),
+        )?;
+        tenants.push(TrainTenant {
+            id: i,
+            name: job.name.clone(),
+            session,
+            barrier_at: 0.0,
+            running: false,
+            finished: false,
+        });
+    }
+
+    // ---- serve lane -------------------------------------------------------
+    let mut serve = serve_corpus.map(|data| ServeLane {
+        admission: Admission::new(data.clone(), &base.model, base),
+        router: Router::new(DevicePool::roster(base), pool.active_ids(), CostModel::default()),
+        stream: ArrivalStream::new(base),
+        data,
+        has_capacity: false,
+        requests: Vec::new(),
+        batches: Vec::new(),
+        depth_samples: Vec::new(),
+        lat_events: Vec::new(),
+        next_id: 0,
+    });
+
+    let mut events: Vec<LeaseEventRow> = Vec::new();
+    let mut churn: Vec<PoolEventRow> = Vec::new();
+    let mut slo_series: Vec<(f64, f64)> = Vec::new();
+    let mut conservation_checks = 0usize;
+    let mut tick = 0usize;
+    let mut now = 0.0f64;
+    let mut horizon = 0.0f64;
+    // Consecutive ticks on which unfinished training tenants held no work
+    // at all — a fleet that can never cover the tenant floors (e.g. churned
+    // down to one device that the serve lane's Critical floor claims) would
+    // otherwise tick forever.
+    let mut starved_ticks = 0usize;
+    const MAX_STARVED_TICKS: usize = 1_000;
+
+    // A serve-only co-schedule (no training tenants) runs an open-loop
+    // trace of the configured `serve.duration` instead of following the
+    // training horizon.
+    let serve_only = jobs.is_empty();
+
+    loop {
+        let training_done = tenants.iter().all(|t| t.finished);
+        let backlog = serve.as_ref().is_some_and(|s| s.admission.queue_depth() > 0);
+
+        // ---- candidate event times ----------------------------------------
+        let t_tick = tick as f64 * dw;
+        let t_barrier = tenants
+            .iter()
+            .filter(|t| t.running)
+            .map(|t| t.barrier_at)
+            .fold(f64::INFINITY, f64::min);
+        let (mut t_arr, t_dead) = match serve.as_mut() {
+            Some(s) => {
+                let arr = s.stream.peek(base, &s.data);
+                let dead = if s.has_capacity {
+                    s.admission.deadline().unwrap_or(f64::INFINITY)
+                } else {
+                    f64::INFINITY // no capacity: queue builds until a grant
+                };
+                (arr, dead)
+            }
+            None => (f64::INFINITY, f64::INFINITY),
+        };
+        // Admissions close when training ends (the co-schedule's horizon)
+        // or, serve-only, at the configured trace duration.
+        if (serve_only && t_arr >= base.serve.duration) || (!serve_only && training_done) {
+            t_arr = f64::INFINITY;
+        }
+        if training_done && t_arr.is_infinite() && !backlog {
+            break;
+        }
+
+        // Tie order: tick, barrier, arrival, deadline.
+        if t_tick <= t_barrier && t_tick <= t_arr && t_tick <= t_dead {
+            // ---- arbiter tick ---------------------------------------------
+            now = now.max(t_tick);
+            // Scripted physical churn lands on decision boundaries.
+            let pool_events = pool.begin_mega_batch(tick);
+            if !pool_events.is_empty() {
+                arbiter.on_pool_churn(&pool.active_ids(), now);
+                churn.extend(pool_events.iter().map(crate::coordinator::trainer::pool_event_row));
+            }
+            // Idle holders have no in-flight work: drains ack instantly.
+            if let Some(sid) = serve_id {
+                arbiter.note_barrier(sid, now);
+            }
+            for t in &tenants {
+                if !t.running && !t.finished {
+                    arbiter.note_barrier(t.id, now);
+                }
+            }
+            // SLO sample over the closing window (NaN = no data: the
+            // arbiter holds both streaks).
+            if let (Some(sid), Some(s)) = (serve_id, serve.as_mut()) {
+                let p95 = stats::trailing_percentile(&s.lat_events, now, dw, 95.0);
+                arbiter.on_slo_sample(sid, p95);
+                slo_series.push((now, p95));
+                // The detector only looks one window back: events at or
+                // before `now` can never enter a later (now', now'+dw]
+                // window, so drop them instead of rescanning forever.
+                s.lat_events.retain(|&(t, _)| t > now);
+            }
+            arbiter.rebalance(now);
+            arbiter.check_conservation(now)?;
+            // Cross-check the pool's lease-aware view against the ledger:
+            // grantable ∪ leased must cover the active roster exactly.
+            let mut covered = pool.available_ids(|d| arbiter.book().is_leased(d));
+            covered.extend(arbiter.book().leases().iter().map(|l| l.device));
+            covered.sort_unstable();
+            anyhow::ensure!(
+                covered == pool.active_ids(),
+                "lease-aware pool view diverged from the lease book at t={now:.3}"
+            );
+            conservation_checks += 1;
+            if let (Some(sid), Some(s)) = (serve_id, serve.as_mut()) {
+                s.update_capacity(&arbiter, sid);
+            }
+            start_idle_tenants(&mut tenants, &mut arbiter, now)?;
+            if !training_done && tenants.iter().all(|t| !t.running || t.finished) {
+                starved_ticks += 1;
+                anyhow::ensure!(
+                    starved_ticks <= MAX_STARVED_TICKS,
+                    "training tenants starved of leases for {MAX_STARVED_TICKS} consecutive \
+                     decision windows — the active fleet cannot cover the tenant floors \
+                     (shrink tenants, raise elastic.min_devices, or soften [fleet] events)"
+                );
+            } else {
+                starved_ticks = 0;
+            }
+            tick += 1;
+        } else if t_barrier <= t_arr && t_barrier <= t_dead {
+            // ---- training barrier -----------------------------------------
+            now = now.max(t_barrier);
+            let i = tenants
+                .iter()
+                .position(|t| t.running && t.barrier_at == t_barrier)
+                .expect("a running tenant owns this barrier");
+            tenants[i].running = false;
+            arbiter.note_barrier(tenants[i].id, now);
+            if tenants[i].session.done() {
+                tenants[i].finished = true;
+                horizon = horizon.max(now);
+                arbiter.remove_tenant(tenants[i].id, now);
+            }
+            start_idle_tenants(&mut tenants, &mut arbiter, now)?;
+        } else if t_arr <= t_dead {
+            // ---- request arrival ------------------------------------------
+            now = now.max(t_arr);
+            let s = serve.as_mut().expect("arrivals imply a serve lane");
+            let a = s.stream.pop();
+            let id = s.next_id;
+            s.next_id += 1;
+            s.admission.push(id, a.sample_id, a.at);
+            s.depth_samples.push((a.at, s.admission.queue_depth()));
+            if s.has_capacity {
+                while let Some(ab) = s.admission.pop_full(now) {
+                    s.dispatch(ab, &registry, &backend, now)?;
+                }
+            }
+        } else if t_dead.is_finite() {
+            // ---- admission deadline flush ---------------------------------
+            // `now` (not `t_dead`): a deadline deferred through a
+            // no-capacity outage flushes the moment capacity returned, so
+            // the batch forms — and queueing latency accrues — at the real
+            // fleet time.
+            now = now.max(t_dead);
+            let s = serve.as_mut().expect("deadlines imply a serve lane");
+            if let Some(ab) = s.admission.flush(now) {
+                s.dispatch(ab, &registry, &backend, now)?;
+            }
+        } else {
+            // Nothing schedulable but tenants unfinished: the next tick
+            // will re-grant (t_tick was the minimum; unreachable).
+            unreachable!("no schedulable event");
+        }
+        events.extend(arbiter.take_events());
+    }
+
+    let horizon = if serve_only {
+        base.serve.duration
+    } else if horizon > 0.0 {
+        horizon
+    } else {
+        now
+    };
+    let tenant_logs: Vec<(String, RunLog)> =
+        tenants.into_iter().map(|t| (t.name, t.session.into_log())).collect();
+    let serve_log = serve.map(|s| {
+        let train_log = tenant_logs.first().map(|(_, l)| l);
+        ServeLog::summarize(
+            format!("{name}-serve"),
+            horizon,
+            dw,
+            s.requests,
+            s.batches,
+            &s.depth_samples,
+            Vec::new(),
+            train_log,
+        )
+    });
+
+    Ok(FleetOutcome {
+        name: name.to_string(),
+        tenant_logs,
+        serve: serve_log,
+        slo_series,
+        events,
+        churn,
+        conservation_checks,
+        preemptions: arbiter.preemptions,
+        returns: arbiter.returns,
+        horizon,
+    })
+}
+
+/// Start every idle, unfinished tenant that holds at least one firm lease.
+fn start_idle_tenants(
+    tenants: &mut [TrainTenant<'_>],
+    arbiter: &mut Arbiter,
+    now: f64,
+) -> Result<()> {
+    for t in tenants.iter_mut() {
+        if t.running || t.finished {
+            continue;
+        }
+        if t.session.done() {
+            // Degenerate zero-mega-batch job: departs without ever running,
+            // releasing its share instead of squatting on it.
+            t.finished = true;
+            arbiter.remove_tenant(t.id, now);
+            continue;
+        }
+        let firm = arbiter.firm_devices(t.id);
+        if firm.is_empty() {
+            continue; // paused: no lease, no work — resumes on a grant
+        }
+        let row = t.session.step(&firm, now, Vec::new())?;
+        t.barrier_at = row.clock;
+        t.running = true;
+    }
+    Ok(())
+}
+
+/// The serve lane's moving parts (admission, routing, telemetry).
+struct ServeLane {
+    admission: Admission,
+    router: Router,
+    stream: ArrivalStream,
+    data: Arc<ShardedDataset>,
+    has_capacity: bool,
+    requests: Vec<RequestRecord>,
+    batches: Vec<BatchRecord>,
+    depth_samples: Vec<(f64, usize)>,
+    /// (completion, latency ms) — the SLO detector's event feed.
+    lat_events: Vec<(f64, f64)>,
+    next_id: u64,
+}
+
+impl ServeLane {
+    /// Re-derive routing capacity from the lane's *firm* leases only — a
+    /// draining lease must not take new work (the lease contract; its
+    /// in-flight batches still drain on the router's virtual timeline). A
+    /// firm-less lane pauses dispatch entirely, and the resulting queueing
+    /// is real latency the SLO detector is supposed to see.
+    fn update_capacity(&mut self, arbiter: &Arbiter, id: TenantId) {
+        let firm = arbiter.firm_devices(id);
+        if firm.is_empty() {
+            self.has_capacity = false;
+        } else {
+            self.router.set_active(&firm);
+            self.has_capacity = true;
+        }
+    }
+
+    /// Route one admitted batch and record per-request telemetry. Serves
+    /// the snapshot that was *published by* formation time — causally
+    /// correct on the shared clock even though training mega-batches are
+    /// computed atomically.
+    fn dispatch(
+        &mut self,
+        ab: crate::serve::AdmittedBatch,
+        registry: &SnapshotRegistry,
+        backend: &RefBackend,
+        now: f64,
+    ) -> Result<()> {
+        use crate::coordinator::backend::StepBackend;
+        let snap = registry
+            .snapshot_at_clock(now)
+            .expect("co_schedule guarantees a non-empty registry");
+        let routed = self.router.route(ab.formed_at, &ab.batch);
+        let preds = backend.eval(&snap.model, &ab.batch)?;
+        for (row, (&rid, &arrival)) in ab.request_ids.iter().zip(&ab.arrivals).enumerate() {
+            let sample_id = ab.batch.sample_ids[row] as usize;
+            let hit = self.data.sample(sample_id).labels.contains(&(preds[row].max(0) as u32));
+            self.requests.push(RequestRecord {
+                id: rid,
+                arrival,
+                completion: routed.completion,
+                hit,
+            });
+            self.lat_events.push((routed.completion, (routed.completion - arrival) * 1e3));
+        }
+        self.batches.push(BatchRecord {
+            formed_at: ab.formed_at,
+            start: routed.start,
+            completion: routed.completion,
+            device: routed.device,
+            bucket: ab.batch.bucket,
+            valid: ab.batch.valid,
+            version: snap.version,
+            staleness: None,
+        });
+        self.admission.recycle(ab.batch);
+        Ok(())
+    }
+}

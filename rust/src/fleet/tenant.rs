@@ -1,0 +1,238 @@
+//! Tenant descriptors and the fair-share allocator.
+//!
+//! A tenant is either a **training job** (a [`TrainerSession`] the fleet
+//! sim steps one mega-batch at a time) or a **serve lane** (a latency-SLO
+//! inference stream). Each carries a weight and device quotas; the
+//! arbiter's target allocation is **weighted max-min fair over
+//! heterogeneous capacity**: device capacity is `1 / speed_factor` (the
+//! [`CostModel`](crate::runtime::CostModel) convention — a factor of 1.32
+//! runs ~32% slower than nominal), and devices are handed out greedily,
+//! fastest first, each to the tenant whose `capacity / weight` ratio is
+//! currently smallest. That is progressive filling — the discrete analog
+//! of weighted max-min water-filling — and is fully deterministic (ties
+//! break toward the lower tenant id, devices toward the lower device id).
+//!
+//! [`TrainerSession`]: crate::coordinator::trainer::TrainerSession
+
+use super::lease::{PriorityClass, TenantId};
+
+/// What kind of work a tenant schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantKind {
+    /// An elastic training job (pauses/resumes on lease churn).
+    Training,
+    /// A latency-SLO serve lane (may preempt training on breach).
+    Serve,
+}
+
+impl TenantKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantKind::Training => "training",
+            TenantKind::Serve => "serve",
+        }
+    }
+}
+
+/// One tenant of the shared fleet.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub id: TenantId,
+    pub name: String,
+    pub kind: TenantKind,
+    /// Fair-share weight (> 0): target capacity share ∝ weight.
+    pub weight: f64,
+    /// The allocator satisfies these floors first (priority order).
+    pub min_devices: usize,
+    /// Hard ceiling on concurrently-leased devices (`usize::MAX` = none).
+    pub max_devices: usize,
+    pub priority: PriorityClass,
+}
+
+impl TenantSpec {
+    /// A standard-priority training tenant with a 1-device floor.
+    pub fn training(id: TenantId, name: impl Into<String>, weight: f64) -> TenantSpec {
+        TenantSpec {
+            id,
+            name: name.into(),
+            kind: TenantKind::Training,
+            weight,
+            min_devices: 1,
+            max_devices: usize::MAX,
+            priority: PriorityClass::Standard,
+        }
+    }
+
+    /// A critical-priority serve lane with a 1-device floor (never
+    /// preempted; preempts downhill on SLO breach).
+    pub fn serve(id: TenantId, name: impl Into<String>, weight: f64) -> TenantSpec {
+        TenantSpec {
+            id,
+            name: name.into(),
+            kind: TenantKind::Serve,
+            weight,
+            min_devices: 1,
+            max_devices: usize::MAX,
+            priority: PriorityClass::Critical,
+        }
+    }
+}
+
+/// Weighted max-min fair integral allocation of `devices` (pairs of
+/// `(device id, speed_factor)`) across `tenants`. Returns one device list
+/// per tenant, parallel to `tenants`; lists are disjoint and their union
+/// is all devices (unless every tenant hit `max_devices`).
+///
+/// Two phases, both deterministic:
+/// 1. **floors** — in descending priority (ties → lower id), every tenant
+///    receives up to `min_devices`, fastest devices first;
+/// 2. **water-filling** — remaining devices go one at a time (fastest
+///    first) to the unsaturated tenant with the smallest
+///    `assigned_capacity / weight` (ties → lower id).
+pub fn fair_allocation(tenants: &[TenantSpec], devices: &[(usize, f64)]) -> Vec<Vec<usize>> {
+    assert!(tenants.iter().all(|t| t.weight > 0.0), "tenant weights must be positive");
+    let mut shares: Vec<Vec<usize>> = vec![Vec::new(); tenants.len()];
+    let mut capacity: Vec<f64> = vec![0.0; tenants.len()];
+
+    // Capacity-descending device order: fastest (lowest speed factor)
+    // first, ties toward the lower device id.
+    let mut order: Vec<(usize, f64)> = devices.to_vec();
+    order.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut queue: std::collections::VecDeque<(usize, f64)> = order.into_iter().collect();
+
+    // Phase 1: floors, in descending priority then ascending id.
+    let mut floor_order: Vec<usize> = (0..tenants.len()).collect();
+    floor_order.sort_by(|&a, &b| {
+        tenants[b].priority.cmp(&tenants[a].priority).then(tenants[a].id.cmp(&tenants[b].id))
+    });
+    for &t in &floor_order {
+        while shares[t].len() < tenants[t].min_devices.min(tenants[t].max_devices) {
+            match queue.pop_front() {
+                Some((d, sf)) => {
+                    shares[t].push(d);
+                    capacity[t] += 1.0 / sf;
+                }
+                None => return finish(shares),
+            }
+        }
+    }
+
+    // Phase 2: progressive filling on normalized capacity.
+    while let Some((d, sf)) = queue.pop_front() {
+        let next = (0..tenants.len())
+            .filter(|&t| shares[t].len() < tenants[t].max_devices)
+            .min_by(|&a, &b| {
+                let ka = capacity[a] / tenants[a].weight;
+                let kb = capacity[b] / tenants[b].weight;
+                ka.partial_cmp(&kb).unwrap().then(a.cmp(&b))
+            });
+        match next {
+            Some(t) => {
+                shares[t].push(d);
+                capacity[t] += 1.0 / sf;
+            }
+            None => break, // every tenant saturated; leave the rest idle
+        }
+    }
+    finish(shares)
+}
+
+fn finish(mut shares: Vec<Vec<usize>>) -> Vec<Vec<usize>> {
+    for s in &mut shares {
+        s.sort_unstable();
+    }
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet4() -> Vec<(usize, f64)> {
+        vec![(0, 1.00), (1, 1.10), (2, 1.21), (3, 1.32)]
+    }
+
+    #[test]
+    fn equal_weights_split_the_fleet_evenly() {
+        let tenants = vec![TenantSpec::training(0, "a", 1.0), TenantSpec::training(1, "b", 1.0)];
+        let shares = fair_allocation(&tenants, &fleet4());
+        assert_eq!(shares[0].len(), 2);
+        assert_eq!(shares[1].len(), 2);
+        // Disjoint cover of the fleet.
+        let mut all: Vec<usize> = shares.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // Fastest device seeds tenant 0's floor, second-fastest tenant 1's.
+        assert!(shares[0].contains(&0));
+        assert!(shares[1].contains(&1));
+    }
+
+    #[test]
+    fn weights_tilt_capacity_not_just_counts() {
+        // 3:1 weights over four devices: the heavy tenant takes three.
+        let tenants =
+            vec![TenantSpec::training(0, "heavy", 3.0), TenantSpec::training(1, "light", 1.0)];
+        let shares = fair_allocation(&tenants, &fleet4());
+        assert_eq!(shares[0].len(), 3, "{shares:?}");
+        assert_eq!(shares[1].len(), 1);
+    }
+
+    #[test]
+    fn serve_priority_claims_the_fastest_floor_device() {
+        let tenants = vec![
+            TenantSpec::training(0, "train-a", 1.0),
+            TenantSpec::training(1, "train-b", 1.0),
+            TenantSpec::serve(2, "lane", 1.0),
+        ];
+        let shares = fair_allocation(&tenants, &fleet4());
+        // Critical floor is satisfied first → serve holds device 0.
+        assert!(shares[2].contains(&0), "{shares:?}");
+        assert!(shares.iter().all(|s| !s.is_empty()), "floors guarantee one each");
+        let total: usize = shares.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn quotas_cap_and_floors_truncate_gracefully() {
+        let mut heavy = TenantSpec::training(0, "capped", 10.0);
+        heavy.max_devices = 1;
+        let tenants = vec![heavy, TenantSpec::training(1, "rest", 1.0)];
+        let shares = fair_allocation(&tenants, &fleet4());
+        assert_eq!(shares[0].len(), 1, "max_devices caps the heavy tenant");
+        assert_eq!(shares[1].len(), 3);
+
+        // More floor demand than devices: priority order wins, no panic.
+        let mut a = TenantSpec::training(0, "a", 1.0);
+        a.min_devices = 3;
+        let mut b = TenantSpec::serve(1, "b", 1.0);
+        b.min_devices = 3;
+        let shares = fair_allocation(&[a, b], &[(0, 1.0), (1, 1.0)]);
+        assert_eq!(shares[1].len(), 2, "critical floor first");
+        assert_eq!(shares[0].len(), 0);
+    }
+
+    #[test]
+    fn heterogeneous_capacity_balances_speed_not_count() {
+        // One very fast device vs three slow ones: with equal weights the
+        // tenant holding the fast device needs fewer devices for the same
+        // capacity, so the other tenant gets more units.
+        let devices = vec![(0, 0.25), (1, 2.0), (2, 2.0), (3, 2.0)];
+        let tenants = vec![TenantSpec::training(0, "a", 1.0), TenantSpec::training(1, "b", 1.0)];
+        let shares = fair_allocation(&tenants, &devices);
+        assert!(shares[0].contains(&0), "floor hands the fastest to tenant 0");
+        assert_eq!(shares[0].len(), 1, "fast device ≈ 4 slow ones: {shares:?}");
+        assert_eq!(shares[1].len(), 3);
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let tenants = vec![
+            TenantSpec::training(0, "a", 1.0),
+            TenantSpec::training(1, "b", 2.0),
+            TenantSpec::serve(2, "s", 1.0),
+        ];
+        let a = fair_allocation(&tenants, &fleet4());
+        let b = fair_allocation(&tenants, &fleet4());
+        assert_eq!(a, b);
+    }
+}

@@ -648,6 +648,265 @@ pub fn serve(
     Ok(ServeOutcome { train_log, steady, train_while_serve: tws })
 }
 
+// ---------------------------------------------------------------------------
+// Fleet — beyond the paper (ROADMAP north-star): multi-tenant co-scheduling.
+// Two training tenants plus one latency-SLO serve lane contend for one
+// shared heterogeneous fleet under three policies: exclusive (every tenant
+// alone — the no-contention reference), weighted fair share, and fair share
+// with SLO-triggered priority preemption.
+// ---------------------------------------------------------------------------
+
+pub struct FleetExperimentOutcome {
+    /// One exclusive-fleet baseline per training tenant.
+    pub exclusive: Vec<crate::fleet::FleetOutcome>,
+    /// Serve lane alone on the whole fleet (replaying tenant 0's publish
+    /// timeline).
+    pub exclusive_serve: crate::fleet::FleetOutcome,
+    /// Co-scheduled, weighted fair share, preemption off.
+    pub fair: crate::fleet::FleetOutcome,
+    /// Co-scheduled with SLO-triggered priority preemption.
+    pub preempt: crate::fleet::FleetOutcome,
+}
+
+/// `experiment fleet`. Pass `base` (e.g. from `--config`) to co-schedule
+/// under an explicit config; `None` uses a bench-scale setup whose bursty
+/// serve trace deliberately overloads the lane's fair-share capacity, so
+/// the preemption scenario has an SLO breach to react to. Numerics run the
+/// hermetic reference backend on the virtual clock regardless of backend
+/// flags — the co-schedule must stay deterministic.
+pub fn fleet(
+    profile: DataProfile,
+    base_override: Option<&Config>,
+) -> Result<FleetExperimentOutcome> {
+    use crate::config::ServePattern;
+    use crate::data::pipeline::ShardedDataset;
+    use crate::fleet::{co_schedule, FleetOutcome, TenantJob};
+    use crate::serve::SnapshotRegistry;
+    use std::sync::Arc;
+
+    let mut base = match base_override {
+        Some(cfg) => cfg.clone(),
+        None => {
+            let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+            apply_full_scale(&mut cfg);
+            // A bursty lane sized to overload its 1-device fair share
+            // (~1.5× a device's service capacity during bursts) while two
+            // devices absorb it comfortably — the preemption story.
+            cfg.serve.rate = 2_500.0;
+            cfg.serve.pattern = ServePattern::Bursty;
+            cfg.serve.burst_factor = 24.0;
+            cfg.serve.burst_period = 0.5;
+            cfg.serve.burst_fraction = 0.2;
+            cfg.serve.max_delay = 0.001;
+            cfg.serve.max_batch = 32;
+            cfg.fleet.decision_window = 0.05;
+            cfg.fleet.grace = 0.25;
+            cfg.fleet.slo_p95_ms = 3.0;
+            cfg.fleet.breach_windows = 2;
+            cfg.fleet.clear_windows = 4;
+            cfg
+        }
+    };
+    // The co-schedule runs on the virtual clock; the threaded engine's
+    // wall-clock nondeterminism has no place in it.
+    base.runtime.mode = crate::config::ExecMode::Virtual;
+    base.validate()?;
+
+    // One training job per configured weight; distinct corpora and seeds.
+    let mut jobs: Vec<TenantJob> = Vec::new();
+    for (i, &w) in base.fleet.train_weights.iter().enumerate() {
+        let mut cfg = base.clone();
+        cfg.sgd.seed = base.sgd.seed.wrapping_add(i as u64);
+        cfg.data.seed = base.data.seed.wrapping_add(7 * i as u64);
+        let (train, test) = make_data(&cfg);
+        jobs.push(TenantJob {
+            name: format!("train-{}", (b'a' + i as u8) as char),
+            weight: w,
+            train: Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples)),
+            test: Arc::new(test),
+            cfg,
+        });
+    }
+    // Serve requests draw from tenant a's corpus — the model the lane
+    // serves is fitted on that feature space.
+    let serve_corpus = jobs[0].train.clone();
+
+    // ---- exclusive baselines ----------------------------------------------
+    let mut exclusive: Vec<FleetOutcome> = Vec::new();
+    let reg_excl = Arc::new(SnapshotRegistry::new());
+    for (i, job) in jobs.iter().enumerate() {
+        // Tenant a's exclusive run also fills the registry the exclusive
+        // serve baseline replays.
+        let reg =
+            if i == 0 { reg_excl.clone() } else { Arc::new(SnapshotRegistry::new()) };
+        let out = co_schedule(
+            &base,
+            std::slice::from_ref(job),
+            None,
+            reg,
+            &format!("exclusive-{}", job.name),
+        )?;
+        exclusive.push(out);
+    }
+    let exclusive_serve = co_schedule(
+        &base,
+        &[],
+        Some(serve_corpus.clone()),
+        reg_excl,
+        "exclusive-serve",
+    )?;
+
+    // ---- co-scheduled scenarios -------------------------------------------
+    let mut fair_base = base.clone();
+    fair_base.fleet.preemption = false;
+    let fair = co_schedule(
+        &fair_base,
+        &jobs,
+        Some(serve_corpus.clone()),
+        Arc::new(SnapshotRegistry::new()),
+        "fair-share",
+    )?;
+    let mut pre_base = base.clone();
+    pre_base.fleet.preemption = true;
+    let preempt = co_schedule(
+        &pre_base,
+        &jobs,
+        Some(serve_corpus),
+        Arc::new(SnapshotRegistry::new()),
+        "priority-preemption",
+    )?;
+
+    // ---- training comparison table ----------------------------------------
+    let mean_devices = |log: &RunLog| {
+        if log.rows.is_empty() {
+            0.0
+        } else {
+            log.rows.iter().map(|r| r.active_devices.len()).sum::<usize>() as f64
+                / log.rows.len() as f64
+        }
+    };
+    let mut t = Table::new(&[
+        "scenario", "tenant", "avg devices", "best P@1", "final P@1", "dP@1 vs excl",
+        "clock (s)",
+    ]);
+    let scenarios: Vec<(&str, &FleetOutcome)> =
+        vec![("fair-share", &fair), ("priority-preemption", &preempt)];
+    for out in &exclusive {
+        let (name, log) = &out.tenant_logs[0];
+        t.row(&[
+            "exclusive".to_string(),
+            name.clone(),
+            format!("{:.2}", mean_devices(log)),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            "—".to_string(),
+            format!("{:.2}", log.rows.last().map(|r| r.clock).unwrap_or(0.0)),
+        ]);
+    }
+    for (scen, out) in &scenarios {
+        for (i, (name, log)) in out.tenant_logs.iter().enumerate() {
+            let excl_final = exclusive[i].tenant_logs[0].1.final_accuracy();
+            t.row(&[
+                scen.to_string(),
+                name.clone(),
+                format!("{:.2}", mean_devices(log)),
+                format!("{:.4}", log.best_accuracy()),
+                format!("{:.4}", log.final_accuracy()),
+                format!("{:+.4}", log.final_accuracy() - excl_final),
+                format!("{:.2}", log.rows.last().map(|r| r.clock).unwrap_or(0.0)),
+            ]);
+        }
+    }
+    t.print(&format!(
+        "Fleet — two training tenants sharing {} devices with a serve lane ({})",
+        base.devices.count,
+        profile.name()
+    ));
+
+    // ---- serve comparison table -------------------------------------------
+    let fmt_nan = |v: f64, prec: usize| {
+        if v.is_finite() {
+            format!("{v:.prec$}")
+        } else {
+            "—".to_string()
+        }
+    };
+    let mut t = Table::new(&[
+        "scenario", "requests", "p95 (ms)", "p99 (ms)", "worst window p95", "preempts",
+        "returns", "lease events", "conservation",
+    ]);
+    let all: Vec<(&str, &FleetOutcome)> = vec![
+        ("exclusive-serve", &exclusive_serve),
+        ("fair-share", &fair),
+        ("priority-preemption", &preempt),
+    ];
+    for (scen, out) in &all {
+        let serve = out.serve.as_ref().expect("scenario has a serve lane");
+        let worst = out
+            .slo_series
+            .iter()
+            .map(|&(_, p)| p)
+            .filter(|p| p.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        t.row(&[
+            scen.to_string(),
+            serve.total_requests().to_string(),
+            fmt_nan(serve.latency_percentile_ms(95.0), 3),
+            fmt_nan(serve.latency_percentile_ms(99.0), 3),
+            fmt_nan(worst, 3),
+            out.preemptions.to_string(),
+            out.returns.to_string(),
+            out.events.len().to_string(),
+            format!("OK ({} checks)", out.conservation_checks),
+        ]);
+    }
+    t.print(&format!(
+        "Fleet — serve lane p95/p99 under contention (SLO p95 ≤ {:.1} ms, window {:.0} ms)",
+        base.fleet.slo_p95_ms,
+        base.fleet.decision_window * 1e3
+    ));
+
+    // ---- the preemption timeline ------------------------------------------
+    if let Some(first) = preempt.events.iter().find(|e| e.action == "preempt") {
+        let before = preempt
+            .slo_series
+            .iter()
+            .rev()
+            .find(|&&(t, p)| t <= first.at && p.is_finite())
+            .map(|&(_, p)| p)
+            .unwrap_or(f64::NAN);
+        let after = preempt
+            .slo_series
+            .iter()
+            .filter(|&&(t, p)| {
+                t > first.at && t <= first.at + 6.0 * base.fleet.decision_window && p.is_finite()
+            })
+            .map(|&(_, p)| p)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "preemption at t={:.2}s: windowed p95 {} ms at the breach -> best {} ms within \
+             6 windows after ({} preemptions, {} returns over the run)",
+            first.at,
+            fmt_nan(before, 3),
+            fmt_nan(after, 3),
+            preempt.preemptions,
+            preempt.returns
+        );
+    } else {
+        println!(
+            "no SLO breach under this config — preemption scenario degenerated to fair share"
+        );
+    }
+    if !preempt.churn.is_empty() {
+        println!(
+            "scripted fleet churn: {} events rode through with conservation intact",
+            preempt.churn.len()
+        );
+    }
+
+    Ok(FleetExperimentOutcome { exclusive, exclusive_serve, fair, preempt })
+}
+
 /// Config helper shared with `Config::from_overrides` users.
 pub fn profile_of(cfg: &Config) -> DataProfile {
     cfg.data.profile

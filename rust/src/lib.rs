@@ -10,9 +10,11 @@
 //!   batch-size scaling (Algorithm 1), normalized model merging with
 //!   perturbation and momentum over the active device subset (Algorithm 2),
 //!   the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU baseline, a
-//!   multi-stream all-reduce simulation, and an online serving plane
+//!   multi-stream all-reduce simulation, an online serving plane
 //!   (snapshot registry + micro-batch inference) closing the train→serve
-//!   loop.
+//!   loop, and a multi-tenant fleet scheduler (device leases, weighted
+//!   fair share, SLO-aware priority preemption) co-scheduling many
+//!   training jobs and serve lanes on one shared fleet.
 //! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per batch-size bucket.
 //! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and
@@ -31,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fleet;
 pub mod harness;
 pub mod metrics;
 pub mod model;

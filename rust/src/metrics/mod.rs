@@ -79,6 +79,35 @@ pub struct PoolEventRow {
     pub reason: String,
 }
 
+/// One fleet lease-ownership change (grant / revoke / release /
+/// force-release, plus the arbiter's preempt / return annotations) —
+/// the multi-tenant analog of [`PoolEventRow`], stamped with the shared
+/// fleet clock instead of a mega-batch index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseEventRow {
+    /// Fleet virtual clock (seconds) when the change landed.
+    pub at: f64,
+    /// Tenant holding (or receiving) the lease.
+    pub tenant: usize,
+    pub device: usize,
+    /// "grant" | "revoke" | "release" | "force-release" | "preempt" |
+    /// "return".
+    pub action: String,
+    pub reason: String,
+}
+
+impl LeaseEventRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at", Json::num(self.at)),
+            ("tenant", Json::int(self.tenant as i64)),
+            ("device", Json::int(self.device as i64)),
+            ("action", Json::str(self.action.clone())),
+            ("reason", Json::str(self.reason.clone())),
+        ])
+    }
+}
+
 /// Full run log.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {

@@ -5,10 +5,12 @@
 //! module folds them into fixed-length windows after the fact — windowing
 //! by *completion* time for latency/throughput and by *arrival* time for
 //! admission load, so a batch finishing after its window's arrivals lands
-//! where an operator's dashboard would put it. Percentiles come from
-//! [`crate::util::stats::percentile`], which yields NaN for an empty
-//! window (zero completed requests is a normal state during bursts' quiet
-//! phases, not an error).
+//! where an operator's dashboard would put it. Per-window latency
+//! percentiles come from [`crate::util::stats::trailing_percentile`] — the
+//! same definition the fleet arbiter's SLO-breach detector uses, so
+//! telemetry and the arbiter can never disagree on what a p95 breach
+//! means — and yield NaN for an empty window (zero completed requests is a
+//! normal state during bursts' quiet phases, not an error).
 
 use crate::metrics::{PoolEventRow, RunLog};
 use crate::util::json::Json;
@@ -132,13 +134,29 @@ impl ServeLog {
             })
             .collect();
 
-        let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); windows];
+        // (completion time, latency ms) events for the shared windowed-
+        // quantile helper. Completion-windowed metrics (completed, hits,
+        // throughput, percentiles) all use the helper's trailing
+        // `(start, end]` convention — end-inclusive, so a completion landing
+        // exactly on a boundary belongs to the window that closes there and
+        // a row's percentiles cover exactly the requests its `completed`
+        // counts. Arrival/batch bucketing keeps the plain `[start, end)`
+        // grid (no percentile counterpart to disagree with).
+        let mut lat_events: Vec<(f64, f64)> =
+            requests.iter().map(|r| (r.completion, (r.completion - r.arrival) * 1e3)).collect();
+        lat_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cidx = |t: f64| {
+            if t <= 0.0 {
+                0
+            } else {
+                ((t / window_secs).ceil() as usize).saturating_sub(1).min(windows - 1)
+            }
+        };
         let mut hits = vec![0u64; windows];
         for r in &requests {
             rows[idx(r.arrival)].admitted += 1;
-            let w = idx(r.completion);
+            let w = cidx(r.completion);
             rows[w].completed += 1;
-            latencies[w].push((r.completion - r.arrival) * 1e3);
             hits[w] += r.hit as u64;
         }
         let mut fills: Vec<Vec<f64>> = vec![Vec::new(); windows];
@@ -161,9 +179,10 @@ impl ServeLog {
             row.max_queue_depth = row.max_queue_depth.max(*depth);
         }
         for (w, row) in rows.iter_mut().enumerate() {
-            row.p50_ms = stats::percentile(&latencies[w], 50.0);
-            row.p95_ms = stats::percentile(&latencies[w], 95.0);
-            row.p99_ms = stats::percentile(&latencies[w], 99.0);
+            let end = row.end;
+            row.p50_ms = stats::trailing_percentile_sorted(&lat_events, end, window_secs, 50.0);
+            row.p95_ms = stats::trailing_percentile_sorted(&lat_events, end, window_secs, 95.0);
+            row.p99_ms = stats::trailing_percentile_sorted(&lat_events, end, window_secs, 99.0);
             row.throughput = row.completed as f64 / window_secs;
             if row.completed > 0 {
                 row.served_accuracy = hits[w] as f64 / row.completed as f64;

@@ -14,6 +14,7 @@
 //! removed device drain to completion — every admitted request is answered
 //! exactly once across churn.
 
+use crate::coordinator::dispatch::next_free_device;
 use crate::data::PaddedBatch;
 use crate::runtime::{CostModel, SimDevice};
 
@@ -34,6 +35,9 @@ pub struct Router {
     devices: Vec<SimDevice>,
     free_time: Vec<f64>,
     active: Vec<usize>,
+    /// Roster-indexed membership mask mirroring `active` (the dispatch-rule
+    /// eligibility predicate).
+    active_mask: Vec<bool>,
     cost: CostModel,
     routed: Vec<u64>,
 }
@@ -44,17 +48,31 @@ impl Router {
     pub fn new(devices: Vec<SimDevice>, active: Vec<usize>, cost: CostModel) -> Router {
         assert!(!devices.is_empty());
         let n = devices.len();
-        let mut r = Router { devices, free_time: vec![0.0; n], active: Vec::new(), cost, routed: vec![0; n] };
+        let mut r = Router {
+            devices,
+            free_time: vec![0.0; n],
+            active: Vec::new(),
+            active_mask: vec![false; n],
+            cost,
+            routed: vec![0; n],
+        };
         r.set_active(&active);
         r
     }
 
-    /// Apply a pool-membership change. In-flight work on departed devices
-    /// drains (their `free_time` stays); only future routing changes.
+    /// Apply a pool-membership (or fleet-lease) change. In-flight work on
+    /// departed devices drains (their `free_time` stays); only future
+    /// routing changes. Under the fleet scheduler the serve lane calls this
+    /// with its *leased* device set, so serving capacity is whatever the
+    /// arbiter granted — not the raw roster.
     pub fn set_active(&mut self, ids: &[usize]) {
         assert!(!ids.is_empty(), "serving needs at least one active device");
         assert!(ids.iter().all(|&d| d < self.devices.len()), "active id outside roster");
         self.active = ids.to_vec();
+        self.active_mask.fill(false);
+        for &d in ids {
+            self.active_mask[d] = true;
+        }
     }
 
     pub fn active(&self) -> &[usize] {
@@ -62,17 +80,11 @@ impl Router {
     }
 
     /// Route one batch at time `now`: earliest-free active device wins
-    /// (training's dynamic-dispatch rule), then its virtual clock advances
-    /// by the heterogeneity-modeled inference duration.
+    /// (training's dynamic-dispatch rule, shared via
+    /// `coordinator::dispatch`), then its virtual clock advances by the
+    /// heterogeneity-modeled inference duration.
     pub fn route(&mut self, now: f64, batch: &PaddedBatch) -> Routed {
-        let device = *self
-            .active
-            .iter()
-            .min_by(|&&a, &&b| {
-                let ka = self.free_time[a].max(now);
-                let kb = self.free_time[b].max(now);
-                ka.partial_cmp(&kb).unwrap().then(a.cmp(&b))
-            })
+        let device = next_free_device(&self.free_time, now, |d| self.active_mask[d])
             .expect("router has an active device");
         let start = self.free_time[device].max(now);
         let completion = start + self.devices[device].infer_duration(&self.cost, batch);

@@ -94,6 +94,42 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Percentile of the values whose timestamps fall inside the trailing
+/// window `(end - span, end]` — end-inclusive, so a sample landing exactly
+/// on a window boundary belongs to the window that *closes* there.
+///
+/// `events` are `(timestamp, value)` pairs in any order. This is the single
+/// definition of a "windowed quantile" shared by the serving-latency
+/// telemetry ([`crate::serve::latency`]) and the fleet arbiter's SLO-breach
+/// detector ([`crate::fleet::arbiter`]), so the two can never disagree on
+/// what a p95 breach means. NaN when no event falls in the window (same
+/// contract as [`percentile`] on an empty slice).
+pub fn trailing_percentile(events: &[(f64, f64)], end: f64, span: f64, p: f64) -> f64 {
+    assert!(span > 0.0, "trailing window span must be positive");
+    let start = end - span;
+    let values: Vec<f64> = events
+        .iter()
+        .filter(|&&(t, _)| t > start && t <= end)
+        .map(|&(_, v)| v)
+        .collect();
+    percentile(&values, p)
+}
+
+/// [`trailing_percentile`] over events pre-sorted by timestamp: the same
+/// `(end - span, end]` window resolved by binary search instead of a full
+/// scan — what per-window telemetry uses when it folds many windows over
+/// one event list. The two functions agree by construction (pinned by a
+/// test below); keep any semantic change in both.
+pub fn trailing_percentile_sorted(events: &[(f64, f64)], end: f64, span: f64, p: f64) -> f64 {
+    assert!(span > 0.0, "trailing window span must be positive");
+    debug_assert!(events.windows(2).all(|w| w[0].0 <= w[1].0), "events must be time-sorted");
+    let start = end - span;
+    let lo = events.partition_point(|&(t, _)| t <= start);
+    let hi = events.partition_point(|&(t, _)| t <= end);
+    let values: Vec<f64> = events[lo..hi].iter().map(|&(_, v)| v).collect();
+    percentile(&values, p)
+}
+
 pub fn mean(samples: &[f64]) -> f64 {
     if samples.is_empty() {
         return 0.0;
@@ -166,6 +202,36 @@ mod tests {
     fn percentile_of_single_element_is_that_element() {
         for p in [0.0, 10.0, 50.0, 99.0, 100.0] {
             assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+    }
+
+    #[test]
+    fn trailing_percentile_is_end_inclusive_start_exclusive() {
+        let events = [(0.25, 10.0), (0.30, 20.0), (0.50, 30.0), (0.75, 40.0)];
+        // Window (0.25, 0.50]: the 0.25 sample is excluded, 0.50 included.
+        assert!((trailing_percentile(&events, 0.50, 0.25, 50.0) - 25.0).abs() < 1e-12);
+        assert_eq!(trailing_percentile(&events, 0.50, 0.25, 100.0), 30.0);
+        // Empty window -> NaN, matching percentile([]) semantics.
+        assert!(trailing_percentile(&events, 1.5, 0.25, 95.0).is_nan());
+        // A span covering everything reproduces the plain percentile.
+        assert_eq!(
+            trailing_percentile(&events, 1.0, 10.0, 100.0),
+            percentile(&[10.0, 20.0, 30.0, 40.0], 100.0)
+        );
+    }
+
+    #[test]
+    fn sorted_variant_agrees_with_the_scan() {
+        let events = [(0.1, 5.0), (0.25, 10.0), (0.25, 12.0), (0.5, 30.0), (0.9, 7.0)];
+        for (end, span) in [(0.25, 0.25), (0.5, 0.25), (0.9, 0.5), (2.0, 0.5), (0.5, 10.0)] {
+            for p in [0.0, 50.0, 95.0, 100.0] {
+                let a = trailing_percentile(&events, end, span, p);
+                let b = trailing_percentile_sorted(&events, end, span, p);
+                assert!(
+                    a == b || (a.is_nan() && b.is_nan()),
+                    "end={end} span={span} p={p}: {a} vs {b}"
+                );
+            }
         }
     }
 

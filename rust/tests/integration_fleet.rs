@@ -1,0 +1,299 @@
+//! Fleet-scheduler integration: lease conservation under randomized
+//! grant/revoke/churn (the property the whole subsystem rests on), plus
+//! end-to-end co-scheduling — determinism, request conservation across
+//! lease churn, SLO-triggered preemption, and tenant convergence.
+
+use std::sync::Arc;
+
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
+use heterosparse::data::pipeline::ShardedDataset;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::fleet::{co_schedule, LeaseBook, LeaseState, PriorityClass, TenantJob};
+use heterosparse::serve::SnapshotRegistry;
+use heterosparse::util::prop::{self, VecU64};
+
+// ---------------------------------------------------------------------------
+// Property: lease conservation under random grant / revoke / release /
+// churn / time-advance sequences.
+// ---------------------------------------------------------------------------
+
+const ROSTER: usize = 5;
+const TENANTS: usize = 3;
+const GRACE: f64 = 0.4;
+
+/// Decode one opcode of the random program and apply it. Ops that are
+/// invalid in the current state (granting a leased device, revoking with
+/// no leases, …) are expected to be refused by the book — the property
+/// checks the ledger stays conserved no matter what is thrown at it.
+fn apply_op(book: &mut LeaseBook, code: u64, now: &mut f64) {
+    match code % 5 {
+        0 => {
+            let tenant = (code / 5) as usize % TENANTS;
+            let device = (code / 31) as usize % ROSTER;
+            let prio = match (code / 7) % 3 {
+                0 => PriorityClass::BestEffort,
+                1 => PriorityClass::Standard,
+                _ => PriorityClass::Critical,
+            };
+            let _ = book.grant(tenant, device, prio, *now);
+        }
+        1 => {
+            // Revoke the live lease whose id hashes closest to the code.
+            let ids: Vec<_> = book.leases().iter().map(|l| l.id).collect();
+            if !ids.is_empty() {
+                let id = ids[(code / 5) as usize % ids.len()];
+                book.revoke(id, GRACE, *now, "prop").unwrap();
+            }
+        }
+        2 => {
+            let ids: Vec<_> = book.leases().iter().map(|l| l.id).collect();
+            if !ids.is_empty() {
+                let id = ids[(code / 5) as usize % ids.len()];
+                book.release(id, *now, "prop").unwrap();
+            }
+        }
+        3 => {
+            // Random roster subset from the code's bits (possibly empty —
+            // a fully-dead fleet must still conserve).
+            let mask = (code / 5) as usize;
+            let active: Vec<usize> = (0..ROSTER).filter(|d| mask & (1 << d) != 0).collect();
+            book.set_roster_active(&active, *now);
+        }
+        _ => {
+            // Advance time by up to ~GRACE so drains genuinely expire.
+            *now += (code % 97) as f64 * (GRACE / 80.0);
+        }
+    }
+}
+
+#[test]
+fn prop_lease_conservation_under_random_churn() {
+    let gen = VecU64 { min_len: 1, max_len: 120, item_lo: 0, item_hi: u64::MAX / 2 };
+    prop::check(200, 0xF1EE7, gen, |program| {
+        let mut book = LeaseBook::new(ROSTER, &(0..ROSTER).collect::<Vec<_>>());
+        let mut now = 0.0f64;
+        for &code in program {
+            apply_op(&mut book, code, &mut now);
+            // The sim's contract: expire before relying on the ledger.
+            book.expire(now);
+            if let Err(e) = book.check_conservation(now) {
+                return Err(format!("after code {code} at t={now:.3}: {e}"));
+            }
+            // Invariant 3 restated: every surviving drain is within grace.
+            for l in book.leases() {
+                if let LeaseState::Draining { deadline } = l.state {
+                    if deadline > now + GRACE + 1e-9 {
+                        return Err(format!("{} drains past its grace bound", l.id));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end co-scheduling.
+// ---------------------------------------------------------------------------
+
+fn base_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 5,
+        initial_batch: 32,
+        warmup_mega_batches: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: 4,
+        speed_factors: vec![1.0, 1.1, 1.21, 1.32],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1200, test_samples: 200, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.serve.rate = 2_000.0;
+    cfg.serve.duration = 0.5;
+    cfg.serve.max_delay = 0.002;
+    cfg.serve.max_batch = 16;
+    cfg.fleet.decision_window = 0.01;
+    cfg.fleet.grace = 0.06;
+    cfg.fleet.breach_windows = 2;
+    cfg.fleet.clear_windows = 2;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn jobs_for(base: &Config, n: usize) -> Vec<TenantJob> {
+    (0..n)
+        .map(|i| {
+            let mut cfg = base.clone();
+            cfg.sgd.seed = base.sgd.seed + i as u64;
+            cfg.data.seed = base.data.seed + 7 * i as u64;
+            let gen = Generator::new(&cfg.model, &cfg.data);
+            let train = gen.generate(cfg.data.train_samples, 1 + i as u64);
+            let test = gen.generate(cfg.data.test_samples, 91 + i as u64);
+            TenantJob {
+                name: format!("tenant-{i}"),
+                weight: 1.0,
+                train: Arc::new(ShardedDataset::from_dataset(&train, 512)),
+                test: Arc::new(test),
+                cfg,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn co_schedule_is_deterministic_and_conserves_requests() {
+    let base = base_config();
+    let run = || {
+        let jobs = jobs_for(&base, 2);
+        let corpus = jobs[0].train.clone();
+        co_schedule(&base, &jobs, Some(corpus), Arc::new(SnapshotRegistry::new()), "det")
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+
+    // Conservation audited every tick, horizon past the training runs.
+    assert!(a.conservation_checks > 5, "{} checks", a.conservation_checks);
+    assert!(a.horizon > 0.0);
+
+    // Both tenants trained to completion with falling loss.
+    assert_eq!(a.tenant_logs.len(), 2);
+    for (name, log) in &a.tenant_logs {
+        assert_eq!(log.rows.len(), base.sgd.num_mega_batches, "{name}");
+        assert!(
+            log.rows.last().unwrap().loss < log.rows[0].loss,
+            "{name} loss must fall"
+        );
+        // Shared-clock rows are monotone.
+        assert!(log.rows.windows(2).all(|w| w[1].clock > w[0].clock), "{name}");
+    }
+
+    // Every admitted request is answered exactly once across lease churn:
+    // ids are dense and unique.
+    let serve = a.serve.as_ref().expect("serve lane ran");
+    let mut ids: Vec<u64> = serve.requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), serve.requests.len(), "duplicate answers");
+    assert_eq!(ids.last().map(|&i| i as usize + 1), Some(serve.requests.len()), "dropped requests");
+    assert!(serve.total_requests() > 100, "traffic actually flowed");
+
+    // Bit-identical repeat: training trajectories and serve tail latency.
+    for ((_, la), (_, lb)) in a.tenant_logs.iter().zip(&b.tenant_logs) {
+        for (ra, rb) in la.rows.iter().zip(&lb.rows) {
+            assert_eq!(ra.loss, rb.loss);
+            assert_eq!(ra.clock, rb.clock);
+            assert_eq!(ra.active_devices, rb.active_devices);
+        }
+    }
+    let sb = b.serve.as_ref().unwrap();
+    assert_eq!(serve.latency_percentile_ms(99.0), sb.latency_percentile_ms(99.0));
+    assert_eq!(a.events.len(), b.events.len());
+}
+
+#[test]
+fn slo_breach_triggers_preemption_and_fair_share_does_not() {
+    // An absurdly tight SLO guarantees a breach as soon as traffic flows.
+    let mut tight = base_config();
+    tight.fleet.slo_p95_ms = 0.05;
+    tight.fleet.preemption = true;
+    let jobs = jobs_for(&tight, 2);
+    let corpus = jobs[0].train.clone();
+    let preempt = co_schedule(
+        &tight,
+        &jobs,
+        Some(corpus.clone()),
+        Arc::new(SnapshotRegistry::new()),
+        "tight",
+    )
+    .unwrap();
+    assert!(preempt.preemptions >= 1, "tight SLO must preempt");
+    assert!(preempt.events.iter().any(|e| e.action == "preempt"));
+    // After the first preempt event, the serve lane receives a grant.
+    let t_pre = preempt.events.iter().find(|e| e.action == "preempt").unwrap().at;
+    let serve_tenant = jobs.len(); // serve id follows the training tenants
+    assert!(
+        preempt
+            .events
+            .iter()
+            .any(|e| e.action == "grant" && e.tenant == serve_tenant && e.at >= t_pre),
+        "preemption must turn into a serve-lane grant"
+    );
+
+    // Same workload with preemption off: fair share never preempts, and
+    // training still completes.
+    let mut fair = tight.clone();
+    fair.fleet.preemption = false;
+    let jobs = jobs_for(&fair, 2);
+    let corpus = jobs[0].train.clone();
+    let out =
+        co_schedule(&fair, &jobs, Some(corpus), Arc::new(SnapshotRegistry::new()), "fair")
+            .unwrap();
+    assert_eq!(out.preemptions, 0);
+    assert!(out.events.iter().all(|e| e.action != "preempt"));
+    for (_, log) in &out.tenant_logs {
+        assert_eq!(log.rows.len(), fair.sgd.num_mega_batches);
+    }
+}
+
+#[test]
+fn scripted_fleet_churn_rides_through_with_conservation() {
+    let mut base = base_config();
+    // Window-indexed churn: lose a device at the 3rd decision boundary,
+    // regain one at the 12th.
+    base.fleet.events = vec!["at_mb=3 remove=1".to_string(), "at_mb=12 add=1".to_string()];
+    base.validate().unwrap();
+    let jobs = jobs_for(&base, 2);
+    let corpus = jobs[0].train.clone();
+    let out =
+        co_schedule(&base, &jobs, Some(corpus), Arc::new(SnapshotRegistry::new()), "churn")
+            .unwrap();
+    assert_eq!(out.churn.len(), 2, "{:?}", out.churn);
+    assert_eq!(out.churn[0].action, "remove");
+    assert_eq!(out.churn[1].action, "add");
+    // Conservation held on every tick (co_schedule errs otherwise) and
+    // training completed despite the shrunken fleet.
+    assert!(out.conservation_checks >= 12);
+    for (_, log) in &out.tenant_logs {
+        assert_eq!(log.rows.len(), base.sgd.num_mega_batches);
+    }
+}
+
+#[test]
+fn serve_only_co_schedule_replays_a_seeded_registry() {
+    let base = base_config();
+    // Train one tenant exclusively (it publishes), then serve alone.
+    let jobs = jobs_for(&base, 1);
+    let corpus = jobs[0].train.clone();
+    let registry = Arc::new(SnapshotRegistry::new());
+    let trained =
+        co_schedule(&base, &jobs, Some(corpus.clone()), registry.clone(), "seed").unwrap();
+    assert!(registry.latest_version() > 0, "training published snapshots");
+    let serve_only =
+        co_schedule(&base, &[], Some(corpus), registry, "serve-only").unwrap();
+    assert!(serve_only.tenant_logs.is_empty());
+    let log = serve_only.serve.as_ref().unwrap();
+    assert!(log.total_requests() > 100);
+    assert!((serve_only.horizon - base.serve.duration).abs() < 1e-9);
+    // The lane alone on the fleet is at least as fast as under contention.
+    let contended = trained.serve.as_ref().unwrap();
+    assert!(
+        log.latency_percentile_ms(95.0) <= contended.latency_percentile_ms(95.0) * 3.0 + 1.0,
+        "exclusive serving should not be wildly slower: {} vs {}",
+        log.latency_percentile_ms(95.0),
+        contended.latency_percentile_ms(95.0)
+    );
+}

@@ -29,6 +29,7 @@ fn serve_cfg() -> Config {
         initial_batch: 32,
         warmup_mega_batches: 0,
         seed: 3,
+        ..Default::default()
     };
     cfg.devices = DeviceConfig {
         count: 4,

@@ -30,6 +30,7 @@ fn small_cfg(strategy: Strategy, mode: ExecMode) -> Config {
         initial_batch: 32,
         warmup_mega_batches: 0,
         seed: 3,
+        ..Default::default()
     };
     cfg.devices = DeviceConfig {
         count: 3,
