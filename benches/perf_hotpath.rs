@@ -28,6 +28,9 @@ use heterosparse::data::synthetic::Generator;
 use heterosparse::model::ModelState;
 use heterosparse::runtime::{CostModel, Runtime};
 use heterosparse::serve::{Admission, SnapshotRegistry};
+use heterosparse::tuning::{
+    score_plan, CalibratedCosts, DeviceEstimator, EstimatorConfig, Observation,
+};
 use heterosparse::util::bench::{bench_fn, fmt_ns, BenchResult};
 use heterosparse::util::json::Json;
 
@@ -165,6 +168,61 @@ fn main() {
     println!("{r}  ({per_sec:.0} churn cycles/s)");
     fleet_results.push(("lease_churn".to_string(), r, per_sec));
     append_baseline("BENCH_fleet.json", "HS_BENCH_FLEET_OUT", "perf_hotpath/fleet", &fleet_results);
+
+    // ---- calibration plane: estimator, view swap, what-if ------------------
+    // The estimator runs once per active device per mega-batch, the view
+    // swap once per mega-batch, and what-if scoring on demand; all three
+    // must stay far below a step (hundreds of µs).
+    let mut cal_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let nominal_cost = CostModel::default();
+    let mut est = DeviceEstimator::new(EstimatorConfig::default(), nominal_cost);
+    let mut i = 0usize;
+    let r = bench_fn("tuning/estimator_observe+estimate", 10, 2000, || {
+        let b = 32 + 16 * (i % 4);
+        let nnz = 12.0 * b as f64;
+        i += 1;
+        est.observe(Observation {
+            bucket: b,
+            nnz_per_batch: nnz,
+            secs_per_batch: 1.2 * nominal_cost.step_time_parts(b, nnz as usize),
+        });
+        est.estimate()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} observations/s)");
+    cal_results.push(("estimator_observe".to_string(), r, per_sec));
+
+    let costs = CalibratedCosts::new(vec![1.0, 1.1, 1.21, 1.32]);
+    let sample = est.estimate().expect("estimator has observations");
+    let r = bench_fn("tuning/view_update+read(4 devices)", 10, 2000, || {
+        costs.update_devices(&[(1, sample)], 0.0);
+        costs.current().speeds()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} swaps/s)");
+    cal_results.push(("view_update_read".to_string(), r, per_sec));
+
+    let whatif_plan = plan_for_strategy(
+        &cfg,
+        Strategy::Adaptive,
+        &[0, 1, 2, 3],
+        &[128, 96, 72, 48],
+        &[0.05, 0.04, 0.03, 0.02],
+        12.0,
+    );
+    let speeds = [1.0, 1.1, 1.9, 1.32];
+    let r = bench_fn("tuning/whatif_score_plan(4 devices)", 10, 500, || {
+        score_plan(&whatif_plan, &speeds, &nominal_cost)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} scorings/s)");
+    cal_results.push(("whatif_score_plan".to_string(), r, per_sec));
+    append_baseline(
+        "BENCH_calibration.json",
+        "HS_BENCH_CAL_OUT",
+        "perf_hotpath/calibration",
+        &cal_results,
+    );
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

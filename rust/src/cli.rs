@@ -39,6 +39,13 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
 }
 
 fn print_usage() {
+    // The experiment list is generated from the registry in
+    // `harness::experiments::EXPERIMENTS`, so it cannot drift from the
+    // implementations again.
+    let experiment_lines: String = experiments::EXPERIMENTS
+        .iter()
+        .map(|e| format!("\x20   {:<12} {}\n", e.name, e.about))
+        .collect();
     println!(
         "heterosparse — adaptive elastic SGD for sparse deep learning on \
          heterogeneous multi-accelerator servers\n\n\
@@ -46,15 +53,8 @@ fn print_usage() {
          COMMANDS:\n\
          \x20 train        run one training session (strategy from config)\n\
          \x20 gen-data     write a synthetic XML dataset in libSVM format\n\
-         \x20 experiment   regenerate a paper table/figure (table1, fig1, fig6,\n\
-         \x20              fig7, fig8, fig9, fig10a, fig10b, fig11a, fig11b, fig12),\n\
-         \x20              the elastic-failover study (elastic), the data-plane\n\
-         \x20              composition-policy comparison (pipeline), the serving\n\
-         \x20              plane: per-pattern latency + train-while-serve (serve;\n\
-         \x20              --resume CKPT resumes training from the artifact and\n\
-         \x20              serves it as the warm-start snapshot), or the multi-\n\
-         \x20              tenant fleet scheduler: exclusive vs fair-share vs\n\
-         \x20              priority-preemption co-scheduling (fleet)\n\
+         \x20 experiment   regenerate a paper table/figure or run a study:\n\
+         {experiment_lines}\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\n\
          OPTIONS:\n\
@@ -217,10 +217,15 @@ fn cmd_gen_data(args: &[String]) -> Result<()> {
 
 fn cmd_experiment(args: &[String]) -> Result<()> {
     let p = parse_flags(args)?;
-    let name = p.positional.first().context(
-        "experiment name required: table1 fig1 fig6 fig7 fig8 fig9 fig10a fig10b fig11a \
-         fig11b fig12 elastic pipeline serve fleet",
-    )?;
+    let name = p.positional.first().with_context(|| {
+        format!("experiment name required: {}", experiments::experiment_names().join(" "))
+    })?;
+    if !experiments::is_experiment(name) {
+        bail!(
+            "unknown experiment '{name}' (registered: {})",
+            experiments::experiment_names().join(" ")
+        );
+    }
     match name.as_str() {
         "table1" => {
             experiments::table1()?;
@@ -271,7 +276,13 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             let base = p.had_config.then_some(&p.cfg);
             experiments::fleet(p.profile, base)?;
         }
-        other => bail!("unknown experiment '{other}'"),
+        "calibration" => {
+            experiments::calibration(p.profile, p.backend)?;
+        }
+        other => bail!(
+            "experiment '{other}' is registered but has no dispatch arm — update \
+             cli::cmd_experiment alongside harness::experiments::EXPERIMENTS"
+        ),
     }
     Ok(())
 }
@@ -385,5 +396,19 @@ mod tests {
     fn help_runs() {
         main_with_args(&s(&["help"])).unwrap();
         main_with_args(&[]).unwrap();
+    }
+
+    #[test]
+    fn experiment_registry_backs_dispatch_and_errors() {
+        assert!(experiments::is_experiment("calibration"));
+        assert!(experiments::is_experiment("fig6"));
+        assert!(!experiments::is_experiment("frobnicate"));
+        assert_eq!(experiments::experiment_names().len(), experiments::EXPERIMENTS.len());
+        // Unknown experiment names fail with the registry list, both with
+        // and without a name.
+        let err = main_with_args(&s(&["experiment", "frobnicate"])).unwrap_err();
+        assert!(err.to_string().contains("calibration"), "{err}");
+        let err = main_with_args(&s(&["experiment"])).unwrap_err();
+        assert!(err.to_string().contains("fleet"), "{err}");
     }
 }

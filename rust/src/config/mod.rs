@@ -387,6 +387,7 @@ pub struct Config {
     pub elastic: ElasticConfig,
     pub serve: ServeConfig,
     pub fleet: FleetConfig,
+    pub calibration: CalibrationConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -663,6 +664,56 @@ impl Default for FleetConfig {
     }
 }
 
+/// Online cost-model calibration (`[calibration]`): the estimator knobs,
+/// and scripted drift traces for throttle/recover experiments.
+///
+/// `events` describe the *physical* drift scenario and always apply to
+/// the simulated devices; `enabled` decides whether the resulting
+/// estimates (instead of the static `devices.speed_factors`) drive
+/// dispatch, batch scaling, fleet fair share, and serve routing. With
+/// `enabled = false` runs are bit-identical to the pre-calibration
+/// behavior.
+#[derive(Clone, Debug)]
+pub struct CalibrationConfig {
+    /// Close the scheduling loop on measured costs (default off).
+    pub enabled: bool,
+    /// Per-device observation window of the robust fit (>= 3).
+    pub window: usize,
+    /// EWMA smoothing factor across window fits, in (0, 1] — the slow
+    /// tracking path for gradual drift.
+    pub alpha: f64,
+    /// Relative deviation from the smoothed prediction that counts as a
+    /// step-drift outlier (> 0).
+    pub step_threshold: f64,
+    /// Consecutive outliers before a step change is declared and the
+    /// estimate fast re-seeds (>= 1).
+    pub step_obs: usize,
+    /// Scripted drift trace, e.g.
+    /// `["at_mb=10 device=0 factor=1.8 ramp=2"]` — device 0 throttles to
+    /// 1.8× its configured factor over 2 mega-batches starting at 10.
+    pub events: Vec<String>,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            enabled: false,
+            window: 6,
+            alpha: 0.25,
+            step_threshold: 0.25,
+            step_obs: 2,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// Parse the scripted drift trace, sorted by mega-batch.
+    pub fn parsed_events(&self) -> Result<Vec<crate::tuning::DriftEvent>> {
+        crate::tuning::parse_trace(&self.events)
+    }
+}
+
 impl Config {
     /// Load from a TOML file then apply `--section.key=value` overrides.
     pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
@@ -854,6 +905,18 @@ impl Config {
             cfg.fleet.events = v.as_str_arr().context("fleet.events must be a string array")?;
         }
 
+        if let Some(v) = map.get("calibration.enabled") {
+            cfg.calibration.enabled = v.as_bool().context("calibration.enabled must be a bool")?;
+        }
+        usize_of(map, "calibration.window", &mut cfg.calibration.window)?;
+        f64_of(map, "calibration.alpha", &mut cfg.calibration.alpha)?;
+        f64_of(map, "calibration.step_threshold", &mut cfg.calibration.step_threshold)?;
+        usize_of(map, "calibration.step_obs", &mut cfg.calibration.step_obs)?;
+        if let Some(v) = map.get("calibration.events") {
+            cfg.calibration.events =
+                v.as_str_arr().context("calibration.events must be a string array")?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -1018,6 +1081,27 @@ impl Config {
                         "fleet event targets device {id} but the roster has {roster} devices"
                     );
                 }
+            }
+        }
+        let cal = &self.calibration;
+        if cal.window < 3 {
+            bail!("calibration.window must be >= 3 (the robust fit needs history; got {})", cal.window);
+        }
+        if !(cal.alpha > 0.0 && cal.alpha <= 1.0) {
+            bail!("calibration.alpha must be in (0, 1]");
+        }
+        if cal.step_threshold <= 0.0 {
+            bail!("calibration.step_threshold must be positive");
+        }
+        if cal.step_obs == 0 {
+            bail!("calibration.step_obs must be >= 1");
+        }
+        for ev in cal.parsed_events()? {
+            if ev.device >= roster {
+                bail!(
+                    "calibration event targets device {} but the roster has {roster} devices",
+                    ev.device
+                );
             }
         }
         Ok(())
@@ -1273,6 +1357,46 @@ mod tests {
         reject("fleet.train_weights", "[1.0, 0.0]");
         reject("fleet.events", "[\"at_mb=1 remove_id=99\"]");
         reject("fleet.events", "[\"garbage\"]");
+    }
+
+    #[test]
+    fn calibration_section_parses_and_validates() {
+        let cfg = Config::from_overrides(&[
+            ("calibration.enabled".into(), "true".into()),
+            ("calibration.window".into(), "8".into()),
+            ("calibration.alpha".into(), "0.5".into()),
+            ("calibration.step_threshold".into(), "0.3".into()),
+            ("calibration.step_obs".into(), "1".into()),
+            ("calibration.events".into(), "[\"at_mb=4 device=0 factor=1.8 ramp=2\"]".into()),
+        ])
+        .unwrap();
+        assert!(cfg.calibration.enabled);
+        assert_eq!(cfg.calibration.window, 8);
+        assert_eq!(cfg.calibration.step_obs, 1);
+        let trace = cfg.calibration.parsed_events().unwrap();
+        assert_eq!(trace.len(), 1);
+        assert_eq!(trace[0].device, 0);
+        // Defaults: the plane is inert.
+        let d = Config::default();
+        assert!(!d.calibration.enabled);
+        assert!(d.calibration.events.is_empty());
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("calibration.window", "2");
+        reject("calibration.alpha", "0");
+        reject("calibration.alpha", "1.5");
+        reject("calibration.step_threshold", "0");
+        reject("calibration.step_obs", "0");
+        reject("calibration.events", "[\"at_mb=1 device=99 factor=2\"]");
+        reject("calibration.events", "[\"garbage\"]");
+        // Spares extend the addressable roster, as for elastic events.
+        assert!(Config::from_overrides(&[
+            ("elastic.spare_devices".into(), "[1.2]".into()),
+            ("calibration.events".into(), "[\"at_mb=1 device=4 factor=2\"]".into()),
+        ])
+        .is_ok());
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! toward the lower index. Both call sites used to carry their own copy;
 //! this helper is the shared implementation, so a change to the rule (or a
 //! bug in it) cannot fork the two planes' behavior.
+//!
+//! When the calibration plane ([`crate::tuning`]) is on, both planes
+//! upgrade to [`next_completion_device`]: the same rule keyed on predicted
+//! *completion* time (`free + estimated cost on that device`) instead of
+//! free time alone. With homogeneous work the two rules agree; with
+//! per-device batch sizes or drifted speeds, completion-keyed dispatch
+//! stops handing work to a device that frees first but finishes last.
 
 /// Index of the eligible slot with the earliest effective free time
 /// (`max(free_time[i], now)`), ties toward the lower index. `None` when no
@@ -28,6 +35,31 @@ pub fn next_free_device(
         }
     }
     best
+}
+
+/// Index of the eligible slot with the earliest *predicted completion*
+/// (`max(free_time[i], now) + step_secs[i]`), ties toward the lower
+/// index. `step_secs` is the calibrated per-slot cost of the next unit of
+/// work (parallel to `free_time`). `None` when no slot is eligible.
+pub fn next_completion_device(
+    free_time: &[f64],
+    now: f64,
+    step_secs: &[f64],
+    eligible: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    assert_eq!(free_time.len(), step_secs.len(), "step_secs must parallel free_time");
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..free_time.len() {
+        if !eligible(i) {
+            continue;
+        }
+        let key = free_time[i].max(now) + step_secs[i];
+        match best {
+            Some((_, b)) if b <= key => {}
+            _ => best = Some((i, key)),
+        }
+    }
+    best.map(|(i, _)| i)
 }
 
 #[cfg(test)]
@@ -55,6 +87,24 @@ mod tests {
         assert_eq!(next_free_device(&ft, 0.0, |i| i != 1), Some(2));
         assert_eq!(next_free_device(&ft, 0.0, |_| false), None);
         assert_eq!(next_free_device(&[], 0.0, |_| true), None);
+    }
+
+    #[test]
+    fn completion_rule_accounts_for_per_device_cost() {
+        // Device 0 frees first but is slow on the next unit; device 1
+        // finishes it sooner overall. Earliest-free would pick 0.
+        let ft = [1.0, 2.0];
+        assert_eq!(next_free_device(&ft, 0.0, |_| true), Some(0));
+        assert_eq!(next_completion_device(&ft, 0.0, &[5.0, 1.0], |_| true), Some(1));
+        // Uniform costs reduce to the earliest-free rule (ties included).
+        assert_eq!(next_completion_device(&ft, 0.0, &[2.0, 2.0], |_| true), Some(0));
+        let ties = [3.0, 3.0];
+        assert_eq!(next_completion_device(&ties, 0.0, &[1.0, 1.0], |_| true), Some(0));
+        // `now` floors idle devices, same as the free-time rule.
+        assert_eq!(next_completion_device(&[0.1, 9.0], 5.0, &[1.0, 1.0], |_| true), Some(0));
+        // Eligibility filters; empty is None.
+        assert_eq!(next_completion_device(&ft, 0.0, &[5.0, 1.0], |i| i != 1), Some(0));
+        assert_eq!(next_completion_device(&[], 0.0, &[], |_| true), None);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::runtime::{CostModel, SimDevice};
 use crate::Result;
 
 use super::backend::StepBackend;
-use super::dispatch::next_free_device;
+use super::dispatch::{next_completion_device, next_free_device};
 use super::plan::{DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBatchReport};
 
 pub struct SimEngine<'b> {
@@ -98,9 +98,15 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
                 while remaining > 0 {
                     // Earliest-free device wins the next batch (dynamic
                     // scheduling); ties break toward the lower slot — the
-                    // same rule the serving router uses (dispatch.rs).
-                    let slot = next_free_device(&free_time, 0.0, |_| true)
-                        .expect("plan has at least one active device");
+                    // same rule the serving router uses (dispatch.rs). A
+                    // calibrated plan upgrades to earliest-predicted-
+                    // completion, so per-device batch sizes and drifted
+                    // speeds are priced in at dispatch time.
+                    let slot = match &plan.predicted_step_secs {
+                        Some(secs) => next_completion_device(&free_time, 0.0, secs, |_| true),
+                        None => next_free_device(&free_time, 0.0, |_| true),
+                    }
+                    .expect("plan has at least one active device");
                     let bucket = plan.batch_sizes[slot];
                     let valid = bucket.min(remaining);
                     remaining -= valid;
@@ -113,8 +119,13 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
             DispatchMode::StaticQuota { batches_per_device } => {
                 let mut quota = vec![batches_per_device; g];
                 while quota.iter().any(|&q| q > 0) {
-                    let slot = next_free_device(&free_time, 0.0, |i| quota[i] > 0)
-                        .expect("some quota remains");
+                    let slot = match &plan.predicted_step_secs {
+                        Some(secs) => {
+                            next_completion_device(&free_time, 0.0, secs, |i| quota[i] > 0)
+                        }
+                        None => next_free_device(&free_time, 0.0, |i| quota[i] > 0),
+                    }
+                    .expect("some quota remains");
                     quota[slot] -= 1;
                     let bucket = plan.batch_sizes[slot];
                     self.one_step(
@@ -138,6 +149,14 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
 
     fn cost_model(&self) -> CostModel {
         self.cost
+    }
+
+    /// Scripted drift lands directly on the simulated device's clock
+    /// model — the virtual-time analog of a real GPU throttling.
+    fn set_drift(&mut self, device: usize, multiplier: f64) {
+        if let Some(d) = self.devices.get_mut(device) {
+            d.set_drift(multiplier);
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -208,6 +227,7 @@ mod tests {
             sample_budget: budget,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         }
     }
 
@@ -264,6 +284,7 @@ mod tests {
             sample_budget: 320,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 320);
@@ -294,6 +315,7 @@ mod tests {
             sample_budget: 0,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 10));
@@ -322,6 +344,51 @@ mod tests {
         assert_eq!(a.1, b.1);
         assert_eq!(a.2, b.2);
         assert_eq!(a.3, b.3, "per-batch nnz sequence is deterministic in sync mode");
+    }
+
+    #[test]
+    fn calibrated_dispatch_conserves_the_budget_and_shifts_work() {
+        // Device 3 is 1.32x slow; with calibrated per-slot predictions the
+        // completion-keyed dispatcher hands it strictly less work, and the
+        // sample budget still lands exactly.
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let cost = CostModel::default();
+        let mut engine = SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), cost);
+        let plane = sync_plane(&cfg, &ds, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let secs: Vec<f64> = cfg
+            .devices
+            .speed_factors
+            .iter()
+            .map(|sf| sf * cost.step_time_parts(16, 16 * 5))
+            .collect();
+        let plan = plan_dynamic(4, 16, 3200).with_predicted_step_secs(secs);
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        assert_eq!(report.total_samples(), 3200, "budget conserved under calibration");
+        let u = report.updates();
+        assert!(u[0] > u[3], "calibrated dispatch still favors the fast device: {u:?}");
+    }
+
+    #[test]
+    fn set_drift_slows_a_device_live() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let plane = sync_plane(&cfg, &ds, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let plan = plan_dynamic(4, 16, 1600);
+        let before = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        engine.set_drift(0, 4.0); // the fastest device throttles hard
+        let after = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        assert!(
+            after.updates()[0] < before.updates()[0],
+            "throttled device wins fewer batches: {:?} -> {:?}",
+            before.updates(),
+            after.updates()
+        );
+        engine.set_drift(99, 2.0); // out-of-roster drift is ignored, not a panic
     }
 
     #[test]

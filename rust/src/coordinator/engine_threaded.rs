@@ -492,6 +492,7 @@ mod tests {
             sample_budget: 250,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 250);
@@ -517,6 +518,7 @@ mod tests {
             sample_budget: 0,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 4), "{:?}", report.updates());
@@ -542,6 +544,7 @@ mod tests {
             sample_budget: 96,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 2);
@@ -556,6 +559,7 @@ mod tests {
             sample_budget: 96,
             crossbow_rate: None,
             nnz_estimate: 5.0,
+            predicted_step_secs: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 3);
@@ -580,6 +584,7 @@ mod tests {
                 sample_budget: 96,
                 crossbow_rate: None,
                 nnz_estimate: 5.0,
+                predicted_step_secs: None,
             };
             let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
             assert_eq!(report.total_samples(), 96);
@@ -609,6 +614,7 @@ mod tests {
                 sample_budget: 0,
                 crossbow_rate: rate,
                 nnz_estimate: 5.0,
+                predicted_step_secs: None,
             };
             engine.run_mega_batch(&mut replicas, plane, &plan).unwrap();
             let spread = replicas[0]

@@ -9,6 +9,16 @@
 //!   `pert_thr`), perturb: `α_argmax(u) *= 1+δ`, `α_argmin(u) *= 1−δ`
 //!   (deliberately denormalizing, bounded by δ);
 //! * momentum global update: `w' = Σ α_i w_i + γ (w − w_p)`, `w_p ← w`.
+//!
+//! # Invariants
+//!
+//! * Normalized weights always sum to 1 over whatever *active* subset
+//!   they were computed for — pool shrink/grow renormalizes implicitly —
+//!   and perturbation denormalizes by at most ±δ (property-tested in
+//!   `integration_elastic.rs`).
+//! * Equal update counts yield the batch-size normalization branch; any
+//!   inequality switches to update counts. Zero total updates degrades to
+//!   uniform weights instead of dividing by zero.
 
 use crate::config::{MergeConfig, Normalization};
 use crate::model::ModelState;

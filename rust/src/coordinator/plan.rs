@@ -42,12 +42,28 @@ pub struct DispatchPlan {
     /// data plane's shard manifests. The plan consumes this so batch
     /// *cost* — not just count — is known at dispatch time.
     pub nnz_estimate: f64,
+    /// Calibrated predicted seconds per full batch, parallel to
+    /// `device_ids` (`[calibration]` plane). `Some` upgrades the dynamic
+    /// scheduler from earliest-free to earliest-predicted-completion
+    /// dispatch ([`crate::coordinator::dispatch::next_completion_device`]);
+    /// `None` (the default everywhere) keeps the historical behavior
+    /// bit-for-bit.
+    pub predicted_step_secs: Option<Vec<f64>>,
 }
 
 impl DispatchPlan {
     /// Number of participating devices.
     pub fn devices(&self) -> usize {
         self.device_ids.len()
+    }
+
+    /// Attach calibrated per-slot step predictions (parallel to
+    /// `device_ids`) — the trainer does this when `[calibration]` is
+    /// enabled and an estimate view exists.
+    pub fn with_predicted_step_secs(mut self, secs: Vec<f64>) -> DispatchPlan {
+        assert_eq!(secs.len(), self.device_ids.len(), "predictions must parallel the slots");
+        self.predicted_step_secs = Some(secs);
+        self
     }
 
     /// Expected total nnz of one full batch on active slot `slot`.
@@ -83,6 +99,7 @@ pub fn plan_for_strategy(
             sample_budget: cfg.sgd.mega_batch_samples(),
             crossbow_rate: None,
             nnz_estimate,
+            predicted_step_secs: None,
         },
         Strategy::Elastic => {
             let b = cfg.sgd.b_max;
@@ -96,6 +113,7 @@ pub fn plan_for_strategy(
                 sample_budget: 0,
                 crossbow_rate: None,
                 nnz_estimate,
+                predicted_step_secs: None,
             }
         }
         Strategy::Crossbow => DispatchPlan {
@@ -106,6 +124,7 @@ pub fn plan_for_strategy(
             sample_budget: cfg.sgd.mega_batch_samples(),
             crossbow_rate: Some(cfg.strategy.crossbow_rate),
             nnz_estimate,
+            predicted_step_secs: None,
         },
         Strategy::SyncGradAgg => {
             // One synchronous round: per-device batch b_max/G, one batch each.
@@ -121,6 +140,7 @@ pub fn plan_for_strategy(
                 sample_budget: 0,
                 crossbow_rate: None,
                 nnz_estimate,
+                predicted_step_secs: None,
             }
         }
     }
@@ -243,6 +263,14 @@ pub trait ExecutionEngine {
     fn cost_model(&self) -> CostModel {
         CostModel::default()
     }
+
+    /// Apply a scripted drift multiplier to one roster device
+    /// (`[calibration] events` — the trainer re-applies the trace value at
+    /// every mega-batch boundary). Virtual-time engines forward this to
+    /// [`SimDevice::set_drift`](crate::runtime::SimDevice::set_drift);
+    /// the default is a no-op, so engines without a heterogeneity model
+    /// (or with workers owning their devices) simply ignore drift traces.
+    fn set_drift(&mut self, _device: usize, _multiplier: f64) {}
 
     fn name(&self) -> &'static str;
 }

@@ -79,6 +79,44 @@ pub fn rescale(
     ScalingOutcome { changed, mean_updates: mean }
 }
 
+/// Calibration-plane re-targeting: batch sizes that equalize *predicted*
+/// per-batch step time across devices, given estimated per-device speed
+/// multipliers ([`crate::tuning`]) and the expected nnz per sample.
+///
+/// Algorithm 1 reaches the same steady state from *measured* update
+/// counts, but only at one β-step per device per merge — and its
+/// stability controller deliberately pauses scaling once the fleet looks
+/// settled, which is exactly when a step drift (thermal throttle, a
+/// co-tenant landing) hurts most. This function is the fast path the
+/// trainer takes when the drift detector fires: jump every active device
+/// straight to the grid size whose predicted step time matches the
+/// fastest device at `b_max`, and let Algorithm 1 fine-tune from there.
+///
+/// `speeds` are effective slowdown multipliers (the `speed_factor`
+/// convention), one per device being re-targeted; the result is parallel
+/// to it, always on the grid and inside `[b_min, b_max]`.
+pub fn calibrated_targets(
+    speeds: &[f64],
+    nnz_per_sample: f64,
+    cost: &crate::runtime::CostModel,
+    cfg: &SgdConfig,
+) -> Vec<usize> {
+    assert!(!speeds.is_empty());
+    assert!(speeds.iter().all(|&s| s > 0.0), "speed multipliers must be positive");
+    // Per-sample variable cost; per-batch cost is linear in b.
+    let per_sample = cost.t_per_nnz * nnz_per_sample + cost.t_per_sample;
+    let fastest = speeds.iter().copied().fold(f64::INFINITY, f64::min);
+    // Common per-batch time target: the fastest device running b_max.
+    let target = fastest * (cost.t_fixed + per_sample * cfg.b_max as f64);
+    speeds
+        .iter()
+        .map(|&s| {
+            let b = (target / s - cost.t_fixed) / per_sample;
+            round_to_grid(b, cfg)
+        })
+        .collect()
+}
+
 /// Scaling-frequency controller (paper §3.2: "if stability is achieved or
 /// the system enters an oscillatory state, the frequency at which scaling
 /// is performed can be increased").
@@ -263,6 +301,36 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn calibrated_targets_equalize_predicted_batch_time() {
+        let c = cfg(); // grid 16..128 step 8
+        let cost = crate::runtime::CostModel::default();
+        // Homogeneous fleet: everyone runs b_max.
+        assert_eq!(calibrated_targets(&[1.0, 1.0, 1.0], 12.0, &cost, &c), vec![128, 128, 128]);
+        // Heterogeneous fleet: the fastest holds b_max, slower devices get
+        // strictly smaller grid sizes in speed order.
+        let t = calibrated_targets(&[1.0, 1.32, 2.0], 12.0, &cost, &c);
+        assert_eq!(t[0], 128);
+        assert!(t[0] > t[1] && t[1] > t[2], "{t:?}");
+        for &b in &t {
+            assert!((c.b_min..=c.b_max).contains(&b));
+            assert_eq!((b - c.b_min) % c.beta, 0, "off-grid {b}");
+        }
+        // The targets really do equalize predicted per-batch time (within
+        // one grid pitch of slack per device).
+        let per_sample = cost.t_per_nnz * 12.0 + cost.t_per_sample;
+        let times: Vec<f64> = t
+            .iter()
+            .zip([1.0, 1.32, 2.0])
+            .map(|(&b, s)| s * (cost.t_fixed + per_sample * b as f64))
+            .collect();
+        let spread = crate::util::stats::max(&times) / crate::util::stats::min(&times);
+        assert!(spread < 1.15, "predicted times should be near-equal: {times:?}");
+        // An extreme straggler clamps to b_min instead of leaving the grid.
+        let t = calibrated_targets(&[1.0, 50.0], 12.0, &cost, &c);
+        assert_eq!(t[1], c.b_min);
     }
 
     #[test]

@@ -44,6 +44,9 @@ use crate::data::pipeline::{DataPlane, PipelineStats, ShardedDataset};
 use crate::data::SparseDataset;
 use crate::metrics::{MegaBatchRow, PipelineStatsRow, PoolEventRow, RunLog};
 use crate::model::ModelState;
+use crate::tuning::{
+    self, CalibratedCosts, DeviceEstimator, DriftEvent, EstimatorConfig, Observation,
+};
 use crate::Result;
 
 use super::backend::StepBackend;
@@ -72,6 +75,11 @@ pub struct TrainerOptions {
     /// and then every `[serve] publish_every` mega-batches — the
     /// train→serve hook the serving plane reads from.
     pub publish: Option<Arc<crate::serve::SnapshotRegistry>>,
+    /// Share this calibrated-costs view instead of creating a private one
+    /// — the fleet co-scheduler hands every tenant (and the serve router)
+    /// the same view, so all observers of a device pool their estimates.
+    /// Ignored when `[calibration]` is disabled.
+    pub costs: Option<Arc<CalibratedCosts>>,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -86,6 +94,7 @@ impl Default for TrainerOptions {
             init_model: None,
             checkpoint: None,
             publish: None,
+            costs: None,
             verbose: false,
         }
     }
@@ -116,6 +125,17 @@ pub struct TrainerSession<'b> {
     batch_sizes: Vec<usize>,
     lrs: Vec<f32>,
     scaling_state: scaling::ScalingState,
+    /// Per-roster-device cost estimators (`[calibration] enabled`; empty
+    /// when the plane is off).
+    estimators: Vec<DeviceEstimator>,
+    /// Shared calibrated-costs view the estimators publish into (None =
+    /// calibration off; every consumer then reads config constants).
+    costs: Option<Arc<CalibratedCosts>>,
+    /// Scripted drift trace (`[calibration] events`), re-applied to the
+    /// engine's devices at every mega-batch boundary. Applies whether or
+    /// not `enabled` closes the scheduling loop — it is the physical
+    /// scenario, not the policy.
+    drift_trace: Vec<DriftEvent>,
     /// Active set of the previous step (resync detection). Starts as the
     /// full roster: every replica begins as a clone of the global model.
     prev_active: Vec<usize>,
@@ -179,6 +199,41 @@ impl<'b> TrainerSession<'b> {
         let lrs = vec![cfg.lr_for_batch(cfg.sgd.initial_batch); roster];
         let scaling_state = scaling::ScalingState::from_config(&cfg.sgd);
 
+        // ---- calibration plane -------------------------------------------
+        // The drift trace is the physical scenario: parsed unconditionally.
+        // Estimators and the shared view only exist when `enabled` closes
+        // the scheduling loop on them.
+        let drift_trace = cfg.calibration.parsed_events()?;
+        let (estimators, costs) = if cfg.calibration.enabled {
+            let ecfg = EstimatorConfig {
+                window: cfg.calibration.window,
+                alpha: cfg.calibration.alpha,
+                step_threshold: cfg.calibration.step_threshold,
+                step_obs: cfg.calibration.step_obs,
+            };
+            let nominal_cost = engine.cost_model();
+            let estimators: Vec<DeviceEstimator> =
+                (0..roster).map(|_| DeviceEstimator::new(ecfg, nominal_cost)).collect();
+            let costs = match opts.costs.clone() {
+                Some(shared) => {
+                    anyhow::ensure!(
+                        shared.current().roster_len() == roster,
+                        "shared calibrated-costs view covers {} devices, roster has {roster}",
+                        shared.current().roster_len()
+                    );
+                    shared
+                }
+                None => {
+                    let mut nominal = cfg.devices.speed_factors.clone();
+                    nominal.extend(cfg.elastic.spare_devices.iter().copied());
+                    Arc::new(CalibratedCosts::new(nominal))
+                }
+            };
+            (estimators, Some(costs))
+        } else {
+            (Vec::new(), None)
+        };
+
         Ok(TrainerSession {
             log: RunLog::new(name),
             plane,
@@ -192,6 +247,9 @@ impl<'b> TrainerSession<'b> {
             batch_sizes,
             lrs,
             scaling_state,
+            estimators,
+            costs,
+            drift_trace,
             prev_active: (0..roster).collect(),
             clock: 0.0,
             samples: 0,
@@ -236,6 +294,34 @@ impl<'b> TrainerSession<'b> {
     /// Report of the most recent mega-batch (straggler-policy food).
     pub fn last_report(&self) -> Option<&MegaBatchReport> {
         self.last_report.as_ref()
+    }
+
+    /// The calibrated-costs view this session publishes into (None when
+    /// `[calibration]` is disabled). The fleet arbiter and serve router
+    /// read the same view for capacity weighting and routing.
+    pub fn calibrated_costs(&self) -> Option<&Arc<CalibratedCosts>> {
+        self.costs.as_ref()
+    }
+
+    /// Calibrated per-slot step predictions for a plan's active slots
+    /// (None when calibration is off): the device's current estimate when
+    /// one exists, its nominal speed factor otherwise.
+    fn predicted_secs(&self, device_ids: &[usize], batch_sizes: &[usize]) -> Option<Vec<f64>> {
+        let view = self.costs.as_ref()?.current();
+        let cost = self.engine.cost_model();
+        Some(
+            device_ids
+                .iter()
+                .zip(batch_sizes)
+                .map(|(&d, &b)| {
+                    let nnz = self.nnz_estimate * b as f64;
+                    match view.estimate(d) {
+                        Some(e) => e.step_secs(&cost, b, nnz),
+                        None => view.nominal[d] * cost.step_time_parts(b, nnz as usize),
+                    }
+                })
+                .collect(),
+        )
     }
 
     /// Run one mega-batch over `active` starting no earlier than `now`
@@ -286,6 +372,20 @@ impl<'b> TrainerSession<'b> {
         // Goyal-style linear warmup on every device's learning rate.
         let warmup = warmup_factor(mb, cfg.sgd.warmup_mega_batches);
 
+        // Scripted drift lands at mega-batch boundaries — the physical
+        // throttle/recover scenario, applied whether or not calibration
+        // closes the loop on it.
+        if !self.drift_trace.is_empty() {
+            for d in 0..self.roster {
+                self.engine.set_drift(d, tuning::multiplier_at(&self.drift_trace, d, mb));
+            }
+        }
+
+        // Roster-indexed batch sizes each device actually ran this
+        // mega-batch (captured per plan below — calibration observations
+        // must describe the work that ran, not post-rescale state).
+        let mut sizes_used = vec![0usize; self.roster];
+
         let (report, merge_secs, merge_weights, perturbed) = match strategy {
             Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
                 let mut plan = plan_for_strategy(
@@ -298,6 +398,12 @@ impl<'b> TrainerSession<'b> {
                 );
                 for lr in plan.lrs.iter_mut() {
                     *lr *= warmup;
+                }
+                if let Some(secs) = self.predicted_secs(&plan.device_ids, &plan.batch_sizes) {
+                    plan = plan.with_predicted_step_secs(secs);
+                }
+                for (i, &d) in plan.device_ids.iter().enumerate() {
+                    sizes_used[d] = plan.batch_sizes[i];
                 }
                 let report = self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
                 self.clock += report.wall;
@@ -357,7 +463,7 @@ impl<'b> TrainerSession<'b> {
                 // One "mega-batch" worth of synchronous rounds, merging
                 // after every round (gradient aggregation ≡ averaging
                 // one-step replicas).
-                let plan: DispatchPlan = plan_for_strategy(
+                let mut plan: DispatchPlan = plan_for_strategy(
                     &cfg,
                     strategy,
                     active,
@@ -365,6 +471,12 @@ impl<'b> TrainerSession<'b> {
                     &self.lrs,
                     self.nnz_estimate,
                 );
+                if let Some(secs) = self.predicted_secs(&plan.device_ids, &plan.batch_sizes) {
+                    plan = plan.with_predicted_step_secs(secs);
+                }
+                for (i, &d) in plan.device_ids.iter().enumerate() {
+                    sizes_used[d] = plan.batch_sizes[i];
+                }
                 let b_tf = plan.batch_sizes[0];
                 let rounds = (cfg.sgd.mega_batch_samples() / (active.len() * b_tf)).max(1);
                 let mut agg: Option<MegaBatchReport> = None;
@@ -408,6 +520,65 @@ impl<'b> TrainerSession<'b> {
             }
         };
 
+        // ---- calibration plane: observe, publish, fast re-target ----------
+        // Every active device's mean per-batch time feeds its estimator;
+        // fresh estimates publish into the shared view (Arc-swap). When the
+        // step-drift detector fires, batch sizes re-seed immediately from
+        // the estimated speeds — Algorithm 1 would need several merge
+        // windows (and a paused stability controller re-arm) to catch up.
+        if let Some(costs) = &self.costs {
+            let nominal_cost = self.engine.cost_model();
+            let mut fresh: Vec<(usize, tuning::DeviceEstimate)> = Vec::new();
+            let mut drifted = false;
+            for &d in active {
+                let s = &report.per_device[d];
+                if s.updates == 0 {
+                    continue;
+                }
+                let obs = Observation {
+                    bucket: sizes_used[d],
+                    nnz_per_batch: s.nnz as f64 / s.updates as f64,
+                    secs_per_batch: s.busy / s.updates as f64,
+                };
+                if self.estimators[d].observe(obs) {
+                    drifted = true;
+                }
+                if let Some(e) = self.estimators[d].estimate() {
+                    fresh.push((d, e));
+                }
+            }
+            if !fresh.is_empty() {
+                costs.update_devices(&fresh, self.clock);
+            }
+            if drifted && strategy == Strategy::Adaptive && cfg.strategy.batch_scaling {
+                let view = costs.current();
+                let speeds: Vec<f64> = active.iter().map(|&d| view.speed(d)).collect();
+                let targets = scaling::calibrated_targets(
+                    &speeds,
+                    self.nnz_estimate,
+                    &nominal_cost,
+                    &cfg.sgd,
+                );
+                if self.opts.verbose {
+                    println!(
+                        "[{}] mb={:<3} calibration: step drift detected; re-seeding batch \
+                         grid {:?} -> {:?} on {:?}",
+                        self.log.name,
+                        mb,
+                        active.iter().map(|&d| self.batch_sizes[d]).collect::<Vec<_>>(),
+                        targets,
+                        active
+                    );
+                }
+                for (i, &d) in active.iter().enumerate() {
+                    if targets[i] != self.batch_sizes[d] {
+                        self.lrs[d] *= targets[i] as f32 / self.batch_sizes[d] as f32;
+                        self.batch_sizes[d] = targets[i];
+                    }
+                }
+            }
+        }
+
         // Reset the active replicas to the merged global model for the
         // next window. Inactive slots are synced lazily when their device
         // re-joins (the prev_active diff above).
@@ -442,6 +613,22 @@ impl<'b> TrainerSession<'b> {
         // Per-batch nnz dispersion (the cost variance the composition
         // policy controls) plus cumulative data-plane counters.
         let (nnz_mean, nnz_cv) = report.nnz_dispersion();
+
+        // Calibration telemetry: the current estimate (and its residual)
+        // per roster device; zeros mean "no estimate" / plane off.
+        let (cost_speed, cost_residual) = match &self.costs {
+            Some(costs) => {
+                let view = costs.current();
+                let speed: Vec<f64> = (0..self.roster)
+                    .map(|d| view.estimate(d).map(|e| e.speed).unwrap_or(0.0))
+                    .collect();
+                let residual: Vec<f64> = (0..self.roster)
+                    .map(|d| view.estimate(d).map(|e| e.residual_rel).unwrap_or(0.0))
+                    .collect();
+                (speed, residual)
+            }
+            None => (vec![0.0; self.roster], vec![0.0; self.roster]),
+        };
         let row = MegaBatchRow {
             mega_batch: mb,
             clock: self.clock,
@@ -460,6 +647,8 @@ impl<'b> TrainerSession<'b> {
             nnz_mean,
             nnz_cv,
             pipeline: pipeline_row(&self.plane.stats()),
+            cost_speed,
+            cost_residual,
         };
         self.log.pool_events.extend(events);
         if let Some(path) = &self.opts.checkpoint {

@@ -12,6 +12,16 @@
 //! epoch. Runs from the current epoch are re-queued (those ids will still
 //! be served exactly once this epoch); runs from completed epochs are
 //! dropped rather than risking a duplicate emission in the new epoch.
+//!
+//! # Invariants
+//!
+//! * **Epoch-exact emission**: within one epoch, every sample id is
+//!   emitted at most once, across any mix of prefetch queues, flushes,
+//!   and `unget` round-trips (property-tested in
+//!   `integration_pipeline.rs`).
+//! * Emission order is a deterministic function of (policy, seed, unget
+//!   sequence) — the virtual-time engines' bit-reproducibility rests on
+//!   this.
 
 use crate::config::CompositionPolicy;
 use crate::util::rng::Rng;

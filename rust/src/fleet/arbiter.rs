@@ -73,6 +73,20 @@ struct SloState {
 }
 
 /// The decision loop over tenants, leases, and SLO feedback.
+///
+/// # Invariants
+///
+/// * After every [`rebalance`](Arbiter::rebalance) the lease book's
+///   conservation invariant holds ([`check_conservation`]
+///   audits it each tick in the co-scheduler): no device leased twice,
+///   leases only on pool-active devices, drains bounded by grace.
+/// * Preemption only flows downhill in priority and never below a
+///   tenant's `min_devices` floor; a preemption is only *counted* once a
+///   device actually moved.
+/// * Decisions are a deterministic function of the observation sequence
+///   (no clocks, no randomness) — co-schedules are bit-reproducible.
+///
+/// [`check_conservation`]: Arbiter::check_conservation
 pub struct Arbiter {
     tenants: Vec<TenantSpec>,
     /// Parallel to `tenants`: false once departed.
@@ -152,6 +166,23 @@ impl Arbiter {
     pub fn on_pool_churn(&mut self, active: &[usize], now: f64) {
         self.active_roster = active.to_vec();
         self.book.set_roster_active(active, now);
+    }
+
+    /// Refresh the capacity model with calibrated speed estimates
+    /// (`[calibration]` plane): fair allocation weights devices by
+    /// `1/speed`, so a throttled device counts for less capacity at the
+    /// next `rebalance`. `speeds` is roster-indexed, same convention as
+    /// the configured factors this replaces. The fleet co-scheduler calls
+    /// this every decision window from the shared
+    /// [`CostsView`](crate::tuning::CostsView).
+    pub fn update_speed_factors(&mut self, speeds: &[f64]) {
+        assert_eq!(
+            speeds.len(),
+            self.speed_factors.len(),
+            "speed update must cover the whole roster"
+        );
+        assert!(speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
+        self.speed_factors = speeds.to_vec();
     }
 
     /// One windowed-p95 observation for a serve lane. NaN means no
@@ -557,6 +588,33 @@ mod tests {
         assert!(a.firm_devices(1).is_empty());
         let total: usize = [0, 2].iter().map(|&t| a.firm_devices(t).len()).sum();
         assert_eq!(total, 3, "departed tenant's share redistributed");
+    }
+
+    #[test]
+    fn calibrated_speeds_retilt_the_fair_shares() {
+        // Nominally homogeneous fleet, two training tenants: 2/2 split.
+        // The calibration plane then reports devices 1–3 throttled to 3x:
+        // device 0 is now worth three of the others, so equal-capacity
+        // fair share becomes 1 device vs 3 — a reallocation no count-based
+        // scheduler would make.
+        let tenants =
+            vec![TenantSpec::training(0, "a", 1.0), TenantSpec::training(1, "b", 1.0)];
+        let cfg = ArbiterConfig { preemption: false, ..Default::default() };
+        let mut a = Arbiter::new(tenants, vec![1.0, 1.0, 1.0, 1.0], &[0, 1, 2, 3], cfg);
+        a.rebalance(0.0);
+        assert_eq!(a.firm_devices(0).len(), 2);
+        assert_eq!(a.firm_devices(1).len(), 2);
+
+        a.update_speed_factors(&[1.0, 3.0, 3.0, 3.0]);
+        a.rebalance(0.25);
+        // Surplus leases drain; barriers ack; the next tick completes the
+        // handoff.
+        a.note_barrier(0, 0.3);
+        a.note_barrier(1, 0.3);
+        a.rebalance(0.5);
+        a.check_conservation(0.5).unwrap();
+        assert_eq!(a.firm_devices(0), vec![0], "fast device alone matches the floor tenant");
+        assert_eq!(a.firm_devices(1), vec![1, 2, 3], "three throttled devices balance it");
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub enum PriorityClass {
 }
 
 impl PriorityClass {
+    /// Human-readable class name (event logs and tables).
     pub fn name(&self) -> &'static str {
         match self {
             PriorityClass::BestEffort => "best-effort",
@@ -73,17 +74,35 @@ pub enum LeaseState {
 /// One live lease.
 #[derive(Clone, Debug)]
 pub struct Lease {
+    /// Unique handle (monotone per book).
     pub id: LeaseId,
+    /// Tenant holding the lease.
     pub tenant: TenantId,
+    /// Roster device the lease covers.
     pub device: usize,
+    /// Scheduling priority the lease was granted at.
     pub priority: PriorityClass,
+    /// Fleet clock when the grant landed.
     pub granted_at: f64,
+    /// Current lifecycle state.
     pub state: LeaseState,
 }
 
 /// The lease ledger. All mutation goes through grant / revoke / release /
 /// expire / set_roster_active, each of which appends to the event log, so
 /// the history of ownership is fully reconstructible.
+///
+/// # Invariants
+///
+/// Lease conservation, enforced at the mutators (a violating call fails,
+/// it is never recorded) and auditable via
+/// [`check_conservation`](LeaseBook::check_conservation):
+///
+/// 1. no device is ever covered by two live leases,
+/// 2. every live lease covers a device inside the active roster
+///    (physical churn force-releases instantly — hardware beats grace),
+/// 3. every drain is bounded: a `Draining` lease never outlives its
+///    deadline once [`expire`](LeaseBook::expire) has run at that time.
 pub struct LeaseBook {
     /// Live leases, ascending by device (at most one per device).
     leases: Vec<Lease>,
@@ -106,6 +125,7 @@ impl LeaseBook {
         LeaseBook { leases: Vec::new(), active, next_id: 1, events: Vec::new() }
     }
 
+    /// Number of roster devices this book covers (active or not).
     pub fn roster_len(&self) -> usize {
         self.active.len()
     }
@@ -120,6 +140,7 @@ impl LeaseBook {
         self.leases.iter().find(|l| l.device == device)
     }
 
+    /// The live lease with this id, if any.
     pub fn lease(&self, id: LeaseId) -> Option<&Lease> {
         self.leases.iter().find(|l| l.id == id)
     }

@@ -15,7 +15,9 @@
 //! * [`arbiter`] — the decision loop: fair-share targets recomputed on
 //!   tenant arrival/departure and pool churn, plus SLO feedback — a serve
 //!   lane whose windowed p95 breaches its target preempts the lowest-
-//!   priority training lease and returns it when the breach clears.
+//!   priority training lease and returns it when the breach clears. With
+//!   the calibration plane on ([`crate::tuning`]), capacity weights come
+//!   from live per-device estimates instead of configured speed factors.
 //! * [`sim`] — the deterministic discrete-event co-schedule interleaving
 //!   [`TrainerSession`](crate::coordinator::trainer::TrainerSession)s and
 //!   a serve lane on the shared virtual clock (`experiment fleet`).

@@ -54,6 +54,7 @@ use crate::runtime::CostModel;
 use crate::serve::{
     Admission, Arrival, BatchRecord, RequestRecord, Router, ServeLog, SnapshotRegistry,
 };
+use crate::tuning::CalibratedCosts;
 use crate::util::stats;
 use crate::Result;
 
@@ -65,10 +66,15 @@ use super::tenant::TenantSpec;
 /// the `[devices]` section must match the shared fleet's), corpus, and
 /// fair-share weight.
 pub struct TenantJob {
+    /// Tenant display name (logs, tables, lease events).
     pub name: String,
+    /// The job's own config (`[devices]`/spares must match the fleet's).
     pub cfg: Config,
+    /// Fair-share weight (> 0).
     pub weight: f64,
+    /// Sharded training corpus.
     pub train: Arc<ShardedDataset>,
+    /// Evaluation split.
     pub test: Arc<SparseDataset>,
 }
 
@@ -203,6 +209,17 @@ pub fn co_schedule(
              arbiter's speed model, and the shared pool must describe the same hardware)",
             job.name
         );
+        // Calibration is a fleet-level decision: a tenant whose own config
+        // disagrees would silently skip publishing into the shared view
+        // (or drift on different hardware), so mismatches are errors, not
+        // no-ops.
+        anyhow::ensure!(
+            job.cfg.calibration.enabled == base.calibration.enabled
+                && job.cfg.calibration.events == base.calibration.events,
+            "tenant '{}' [calibration] enabled/events differ from the fleet's (the shared \
+             costs view and the drift scenario must describe the same physical fleet)",
+            job.name
+        );
     }
     if serve_corpus.is_some() {
         anyhow::ensure!(
@@ -224,6 +241,19 @@ pub fn co_schedule(
         id
     });
 
+    // ---- calibration plane (shared across every tenant + the lane) --------
+    // One view for the whole co-schedule: every training session publishes
+    // its device estimates into it, the arbiter weights capacity by it,
+    // and the serve router routes on it. Scripted drift reaches serving
+    // devices at tick boundaries (training devices get the same trace at
+    // their own mega-batch boundaries, via each session).
+    let calibration: Option<Arc<CalibratedCosts>> = if base.calibration.enabled {
+        Some(Arc::new(CalibratedCosts::new(speed_factors.clone())))
+    } else {
+        None
+    };
+    let drift_trace = base.calibration.parsed_events()?;
+
     // ---- physical fleet + arbiter -----------------------------------------
     let mut pool = DevicePool::with_trace(base, &base.fleet.events)?;
     let acfg = ArbiterConfig {
@@ -233,7 +263,7 @@ pub fn co_schedule(
         clear_windows: base.fleet.clear_windows,
         preemption: base.fleet.preemption,
     };
-    let mut arbiter = Arbiter::new(specs, speed_factors, &pool.active_ids(), acfg);
+    let mut arbiter = Arbiter::new(specs, speed_factors.clone(), &pool.active_ids(), acfg);
 
     // ---- training sessions ------------------------------------------------
     let backend = RefBackend;
@@ -247,6 +277,8 @@ pub fn co_schedule(
             // leaves behind a publish timeline a later serve-only
             // co-schedule can replay.
             publish: (i == 0).then(|| registry.clone()),
+            // Every tenant publishes into the one shared costs view.
+            costs: calibration.clone(),
             ..Default::default()
         };
         let session = TrainerSession::new(
@@ -362,6 +394,27 @@ pub fn co_schedule(
                 // before `now` can never enter a later (now', now'+dw]
                 // window, so drop them instead of rescanning forever.
                 s.lat_events.retain(|&(t, _)| t > now);
+            }
+            // Calibrated capacity: refresh the arbiter's speed model and
+            // the router's view from the shared estimates before deciding,
+            // and land scripted drift on the serving devices. Drift is
+            // window-indexed per plane — arbiter ticks here, each
+            // session's own mega-batches on the training side — so align
+            // decision_window with the mega-batch duration when a
+            // scenario needs both planes throttling in step.
+            if !drift_trace.is_empty() {
+                if let Some(s) = serve.as_mut() {
+                    for d in 0..speed_factors.len() {
+                        s.router.set_drift(d, crate::tuning::multiplier_at(&drift_trace, d, tick));
+                    }
+                }
+            }
+            if let Some(costs) = &calibration {
+                let view = costs.current();
+                arbiter.update_speed_factors(&view.speeds());
+                if let Some(s) = serve.as_mut() {
+                    s.router.set_cost_view(Some(view));
+                }
             }
             arbiter.rebalance(now);
             arbiter.check_conservation(now)?;

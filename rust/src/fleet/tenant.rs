@@ -26,6 +26,7 @@ pub enum TenantKind {
 }
 
 impl TenantKind {
+    /// Human-readable kind name (event logs and tables).
     pub fn name(&self) -> &'static str {
         match self {
             TenantKind::Training => "training",
@@ -37,8 +38,11 @@ impl TenantKind {
 /// One tenant of the shared fleet.
 #[derive(Clone, Debug)]
 pub struct TenantSpec {
+    /// Dense index into the arbiter's tenant table.
     pub id: TenantId,
+    /// Display name (logs and tables).
     pub name: String,
+    /// Training job or latency-SLO serve lane.
     pub kind: TenantKind,
     /// Fair-share weight (> 0): target capacity share ∝ weight.
     pub weight: f64,
@@ -89,6 +93,20 @@ impl TenantSpec {
 /// 2. **water-filling** — remaining devices go one at a time (fastest
 ///    first) to the unsaturated tenant with the smallest
 ///    `assigned_capacity / weight` (ties → lower id).
+///
+/// The speed factors come from the arbiter's capacity model — the
+/// configured `devices.speed_factors`, or the calibration plane's live
+/// estimates once [`Arbiter::update_speed_factors`] has been fed
+/// (DESIGN.md §9); the allocation algebra is identical either way.
+///
+/// # Invariants
+///
+/// * Returned shares are pairwise disjoint, and their union is the whole
+///   device list unless every tenant hit `max_devices`.
+/// * Deterministic: identical inputs produce the identical allocation
+///   (all ties break by index), so fleet co-schedules replay exactly.
+///
+/// [`Arbiter::update_speed_factors`]: super::arbiter::Arbiter::update_speed_factors
 pub fn fair_allocation(tenants: &[TenantSpec], devices: &[(usize, f64)]) -> Vec<Vec<usize>> {
     assert!(tenants.iter().all(|t| t.weight > 0.0), "tenant weights must be positive");
     let mut shares: Vec<Vec<usize>> = vec![Vec::new(); tenants.len()];

@@ -17,6 +17,58 @@ use crate::Result;
 
 use super::{apply_full_scale, bench_config, make_data, run_single, Backend};
 
+/// One entry of the experiment registry: the canonical name the CLI
+/// dispatches on plus the one-line description `--help` prints.
+pub struct ExperimentSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// The single source of truth for which experiments exist. The CLI's
+/// usage text, its "experiment name required" hint, and its unknown-name
+/// error are all generated from this table, so the hand-maintained list
+/// can no longer drift from the implementations (it had).
+pub const EXPERIMENTS: &[ExperimentSpec] = &[
+    ExperimentSpec { name: "table1", about: "synthetic XML dataset profiles (Table 1)" },
+    ExperimentSpec { name: "fig1", about: "heterogeneity on an identical batch (Fig. 1)" },
+    ExperimentSpec { name: "fig6", about: "time-to-accuracy, all strategies (Fig. 6)" },
+    ExperimentSpec { name: "fig7", about: "statistical efficiency (Fig. 7)" },
+    ExperimentSpec { name: "fig8", about: "scalability + SLIDE CPU baseline (Fig. 8)" },
+    ExperimentSpec { name: "fig9", about: "mega-batch size / merge frequency (Fig. 9)" },
+    ExperimentSpec { name: "fig10a", about: "initial batch size sweep (Fig. 10a)" },
+    ExperimentSpec { name: "fig10b", about: "batch-size scaling factor β sweep (Fig. 10b)" },
+    ExperimentSpec { name: "fig11a", about: "perturbation threshold sweep (Fig. 11a)" },
+    ExperimentSpec { name: "fig11b", about: "perturbation factor δ sweep (Fig. 11b)" },
+    ExperimentSpec {
+        name: "fig12",
+        about: "batch-size traces + perturbation activations (Fig. 12)",
+    },
+    ExperimentSpec { name: "elastic", about: "elastic failover: lose devices mid-run, recover" },
+    ExperimentSpec { name: "pipeline", about: "data-plane composition policies head to head" },
+    ExperimentSpec {
+        name: "serve",
+        about: "serving plane: per-pattern latency + train-while-serve (--resume CKPT)",
+    },
+    ExperimentSpec {
+        name: "fleet",
+        about: "multi-tenant fleet: exclusive vs fair-share vs priority-preemption",
+    },
+    ExperimentSpec {
+        name: "calibration",
+        about: "static vs calibrated scheduling under a scripted throttle trace",
+    },
+];
+
+/// Every registered experiment name, in registry order.
+pub fn experiment_names() -> Vec<&'static str> {
+    EXPERIMENTS.iter().map(|e| e.name).collect()
+}
+
+/// Is `name` a registered experiment?
+pub fn is_experiment(name: &str) -> bool {
+    EXPERIMENTS.iter().any(|e| e.name == name)
+}
+
 fn fmt_opt(v: Option<f64>) -> String {
     v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "—".to_string())
 }
@@ -905,6 +957,156 @@ pub fn fleet(
     }
 
     Ok(FleetExperimentOutcome { exclusive, exclusive_serve, fair, preempt })
+}
+
+// ---------------------------------------------------------------------------
+// Calibration — beyond the paper (ROADMAP north-star): drift-adaptive
+// scheduling. One device throttles mid-run and later recovers; the same
+// scenario runs once with static speed_factor scheduling and once with the
+// calibration plane closing the loop on measured costs.
+// ---------------------------------------------------------------------------
+
+pub struct CalibrationOutcome {
+    /// `[calibration] enabled = false`: the drift happens, scheduling
+    /// keeps trusting the config constants.
+    pub static_log: RunLog,
+    /// `enabled = true`: estimates drive dispatch + batch re-targeting.
+    pub calibrated_log: RunLog,
+    /// Mean update balance (max/min per-device update count) over the
+    /// throttled window: (static, calibrated). 1.0 is the paper's
+    /// equal-update-rate goal.
+    pub throttled_balance: (f64, f64),
+    /// The mid-throttle dispatch plan scored under nominal vs estimated
+    /// speeds (`tuning::whatif`).
+    pub whatif: (crate::tuning::PlanScore, crate::tuning::PlanScore),
+}
+
+/// `experiment calibration`: device 0 (the fastest) throttles to 2.2× a
+/// quarter of the way in and recovers at three quarters — the ABS-SGD
+/// drift regime. The static run keeps scheduling on configured speed
+/// factors (Algorithm 1's measured feedback is its only defense, and the
+/// stability controller pauses it exactly when the fleet looked settled);
+/// the calibrated run detects the step, re-seeds the batch grid from the
+/// estimates, and dispatches on predicted completion times. Reports
+/// per-window traces, the throttled-window update balance, time-to-
+/// accuracy, and a what-if rescoring of the mid-throttle plan.
+pub fn calibration(profile: DataProfile, backend: Backend) -> Result<CalibrationOutcome> {
+    use crate::coordinator::plan_for_strategy;
+
+    let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+    apply_full_scale(&mut cfg);
+    // Zero jitter: the drift signal (and the bit-for-bit disabled claim
+    // pinned by integration_calibration.rs) stays sharp.
+    cfg.devices.jitter = 0.0;
+    let n = cfg.sgd.num_mega_batches;
+    let throttle_at = (n / 4).max(1);
+    let recover_at = (3 * n / 4).max(throttle_at + 2);
+    cfg.calibration.events = vec![
+        format!("at_mb={throttle_at} device=0 factor=2.2 ramp=1"),
+        format!("at_mb={recover_at} device=0 factor=1.0 ramp=1"),
+    ];
+    cfg.calibration.step_obs = 1; // react within one mega-batch window
+    cfg.validate()?;
+
+    let static_log = run_single(&cfg, backend, TrainerOptions::default())?;
+    let mut cal_cfg = cfg.clone();
+    cal_cfg.calibration.enabled = true;
+    cal_cfg.validate()?;
+    let calibrated_log = run_single(&cal_cfg, backend, TrainerOptions::default())?;
+
+    // ---- per-window trace --------------------------------------------------
+    let trace = cfg.calibration.parsed_events()?;
+    let mut t = Table::new(&[
+        "mega-batch", "drift d0", "est d0", "b (static)", "b (calibrated)", "u (static)",
+        "u (calibrated)",
+    ]);
+    for (s, c) in static_log.rows.iter().zip(&calibrated_log.rows) {
+        let est = c.cost_speed.first().copied().unwrap_or(0.0);
+        t.row(&[
+            s.mega_batch.to_string(),
+            format!("{:.2}", crate::tuning::multiplier_at(&trace, 0, s.mega_batch)),
+            if est > 0.0 { format!("{est:.2}") } else { "—".to_string() },
+            format!("{:?}", s.batch_sizes),
+            format!("{:?}", c.batch_sizes),
+            format!("{:?}", s.updates),
+            format!("{:?}", c.updates),
+        ]);
+    }
+    t.print(&format!(
+        "Calibration — device 0 throttles 2.2x at mb {throttle_at}, recovers at mb \
+         {recover_at} ({})",
+        profile.name()
+    ));
+
+    // ---- headline numbers --------------------------------------------------
+    // Balance is judged once the detector could have reacted (one window
+    // after the throttle) until the recovery starts.
+    let b_static = static_log.window_balance(throttle_at + 1, recover_at);
+    let b_cal = calibrated_log.window_balance(throttle_at + 1, recover_at);
+    let named: [(&str, &RunLog, f64); 2] =
+        [("static", &static_log, b_static), ("calibrated", &calibrated_log, b_cal)];
+    let target =
+        0.85 * named.iter().map(|(_, l, _)| l.best_accuracy()).fold(0.0, f64::max);
+    let mut t = Table::new(&[
+        "schedule", "throttled balance", "run balance", "best P@1",
+        &format!("TTA@{target:.3} (s)"), "clock (s)",
+    ]);
+    for (name, log, tb) in &named {
+        t.row(&[
+            name.to_string(),
+            format!("{tb:.2}"),
+            format!("{:.2}", log.update_balance()),
+            format!("{:.4}", log.best_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            format!("{:.2}", log.rows.last().map(|r| r.clock).unwrap_or(0.0)),
+        ]);
+    }
+    t.print("Calibration — static speed_factor scheduling vs the calibration plane");
+
+    // ---- what-if: the mid-throttle plan under nominal vs estimated costs ---
+    let mid = calibrated_log
+        .rows
+        .iter()
+        .find(|r| r.mega_batch == recover_at.saturating_sub(1))
+        .or_else(|| calibrated_log.rows.last())
+        .expect("run produced rows");
+    let nnz_estimate = cfg.data.avg_nnz.min(cfg.model.max_nnz as f64);
+    let plan = plan_for_strategy(
+        &cfg,
+        Strategy::Adaptive,
+        &[0, 1, 2, 3],
+        &mid.batch_sizes,
+        &[cfg.sgd.lr_bmax; 4],
+        nnz_estimate,
+    );
+    let estimated: Vec<f64> = mid
+        .cost_speed
+        .iter()
+        .zip(&cfg.devices.speed_factors)
+        .map(|(&e, &nom)| if e > 0.0 { e } else { nom })
+        .collect();
+    let (score_nom, score_est) = crate::tuning::compare(
+        &plan,
+        &cfg.devices.speed_factors,
+        &estimated,
+        &crate::runtime::CostModel::default(),
+    );
+    println!(
+        "what-if (mid-throttle plan): nominal costs predict wall {:.3}s balance {:.2}; \
+         estimated costs predict wall {:.3}s balance {:.2}",
+        score_nom.wall, score_nom.balance, score_est.wall, score_est.balance
+    );
+    println!(
+        "throttled-window update balance: static {b_static:.2} vs calibrated {b_cal:.2} \
+         (1.0 = the paper's equal-update-rate goal)"
+    );
+
+    Ok(CalibrationOutcome {
+        static_log,
+        calibrated_log,
+        throttled_balance: (b_static, b_cal),
+        whatif: (score_nom, score_est),
+    })
 }
 
 /// Config helper shared with `Config::from_overrides` users.

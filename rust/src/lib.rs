@@ -12,9 +12,13 @@
 //!   the Elastic/Synchronous/CROSSBOW baselines, a SLIDE CPU baseline, a
 //!   multi-stream all-reduce simulation, an online serving plane
 //!   (snapshot registry + micro-batch inference) closing the train→serve
-//!   loop, and a multi-tenant fleet scheduler (device leases, weighted
+//!   loop, a multi-tenant fleet scheduler (device leases, weighted
 //!   fair share, SLO-aware priority preemption) co-scheduling many
-//!   training jobs and serve lanes on one shared fleet.
+//!   training jobs and serve lanes on one shared fleet, and an online
+//!   cost-model calibration plane ([`tuning`]) that estimates per-device
+//!   costs from live timings and feeds dispatch, batch scaling, fleet
+//!   fair share, and serve routing — so scheduling follows measured
+//!   speeds, not config constants, even as devices throttle and recover.
 //! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per batch-size bucket.
 //! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and
@@ -40,6 +44,7 @@ pub mod model;
 pub mod runtime;
 pub mod serve;
 pub mod slide;
+pub mod tuning;
 pub mod util;
 
 /// Crate-wide result type (anyhow-based, matching the `xla` crate style).

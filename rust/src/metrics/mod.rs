@@ -48,6 +48,12 @@ pub struct MegaBatchRow {
     pub nnz_cv: f64,
     /// Cumulative data-plane counters at the end of this mega-batch.
     pub pipeline: PipelineStatsRow,
+    /// Calibration plane: estimated effective speed multiplier per roster
+    /// device (`[calibration]`; 0 = no estimate yet or calibration off).
+    pub cost_speed: Vec<f64>,
+    /// Calibration plane: median relative residual of each device's
+    /// estimate — the estimate's own trust signal (0 when none).
+    pub cost_residual: Vec<f64>,
 }
 
 /// Data-plane counters as logged per row (cumulative since run start).
@@ -184,6 +190,46 @@ impl RunLog {
         self.rows.iter().map(|r| r.nnz_cv).sum::<f64>() / self.rows.len() as f64
     }
 
+    /// Run-average update balance: per row, the max/min ratio of update
+    /// counts among devices that did any work (1.0 = the paper's
+    /// equal-update-rate goal; rows with fewer than two working devices
+    /// count as balanced). The calibration experiment's headline number —
+    /// drift unbalances it, calibrated scheduling pulls it back toward 1.
+    pub fn update_balance(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.window_balance(0, usize::MAX)
+    }
+
+    /// [`update_balance`](RunLog::update_balance) restricted to
+    /// mega-batches `[from, to)` — how a drift window scored, without the
+    /// pre-throttle and recovery rows diluting it. 1.0 when the range
+    /// holds no rows. The single definition of "update balance": the
+    /// calibration experiment and its tests both call this.
+    pub fn window_balance(&self, from: usize, to: usize) -> f64 {
+        let per_row: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| (from..to).contains(&r.mega_batch))
+            .map(|r| {
+                let working: Vec<u64> = r.updates.iter().copied().filter(|&u| u > 0).collect();
+                if working.len() < 2 {
+                    1.0
+                } else {
+                    let hi = *working.iter().max().unwrap() as f64;
+                    let lo = *working.iter().min().unwrap() as f64;
+                    hi / lo
+                }
+            })
+            .collect();
+        if per_row.is_empty() {
+            1.0
+        } else {
+            per_row.iter().sum::<f64>() / per_row.len() as f64
+        }
+    }
+
     pub fn write_csv(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -201,6 +247,9 @@ impl RunLog {
         }
         for i in 0..dev {
             header.push_str(&format!(",util{i}"));
+        }
+        for i in 0..dev {
+            header.push_str(&format!(",est{i}"));
         }
         writeln!(f, "{header}")?;
         for r in &self.rows {
@@ -228,6 +277,9 @@ impl RunLog {
             }
             for u in &r.utilization {
                 line.push_str(&format!(",{u:.4}"));
+            }
+            for s in &r.cost_speed {
+                line.push_str(&format!(",{s:.4}"));
             }
             writeln!(f, "{line}")?;
         }
@@ -266,6 +318,14 @@ impl RunLog {
                         ),
                         ("nnz_mean", Json::num(r.nnz_mean)),
                         ("nnz_cv", Json::num(r.nnz_cv)),
+                        (
+                            "cost_speed",
+                            Json::arr(r.cost_speed.iter().map(|&s| Json::num(s))),
+                        ),
+                        (
+                            "cost_residual",
+                            Json::arr(r.cost_residual.iter().map(|&s| Json::num(s))),
+                        ),
                         (
                             "pipeline",
                             Json::obj(vec![
@@ -340,6 +400,8 @@ mod tests {
                 pool_hits: 16,
                 pool_misses: 2,
             },
+            cost_speed: vec![1.02, 1.34],
+            cost_residual: vec![0.01, 0.02],
         }
     }
 
@@ -385,8 +447,21 @@ mod tests {
         assert!(lines[0].starts_with("mega_batch,clock"));
         assert!(lines[0].contains(",active,"));
         assert!(lines[0].contains(",nnz_mean,nnz_cv,starved,truncated,"));
-        assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1"));
+        assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1,est0,est1"));
         assert_eq!(lines[1].split(',').count(), lines[0].split(',').count());
+    }
+
+    #[test]
+    fn update_balance_ratios_working_devices_only() {
+        let mut log = RunLog::new("t");
+        assert_eq!(log.update_balance(), 0.0, "empty log");
+        let mut r = row(0, 1.0, 0.1, false);
+        r.updates = vec![12, 6];
+        log.push(r);
+        let mut r = row(1, 2.0, 0.2, false);
+        r.updates = vec![10, 0]; // inactive device doesn't skew the ratio
+        log.push(r);
+        assert!((log.update_balance() - (2.0 + 1.0) / 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -417,5 +492,7 @@ mod tests {
         assert_eq!(pipeline.get("prefetched").as_i64(), Some(14));
         assert_eq!(pipeline.get("starved").as_i64(), Some(1));
         assert_eq!(pipeline.get("pool_hits").as_i64(), Some(16));
+        assert_eq!(row0.get("cost_speed").as_arr().unwrap().len(), 2);
+        assert_eq!(row0.get("cost_residual").as_arr().unwrap().len(), 2);
     }
 }

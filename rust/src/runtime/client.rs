@@ -15,6 +15,15 @@
 //! auto-resolution, the PJRT integration tests) falls back to / skips to
 //! the pure-Rust reference backend. The stub keeps the exact same API so
 //! no call site needs cfg knowledge.
+//!
+//! # Invariants
+//!
+//! * `step` mutates `model` in place and copies outputs straight into the
+//!   existing buffers — no hot-path reallocation.
+//! * An executable is compiled at most once per bucket per `Runtime`
+//!   (lazy compile + cache); `warmup` only changes *when*, never *whether*.
+//! * The stub's `load` always fails, so a stub `Runtime` value can never
+//!   exist — its methods exist purely to keep call sites compiling.
 
 #[cfg(feature = "pjrt")]
 pub use real::Runtime;
@@ -225,8 +234,12 @@ mod stub {
     /// value of this type can never actually exist — the methods only keep
     /// call sites compiling.
     pub struct Runtime {
+        /// Typed view of `artifacts/manifest.json` (never populated in the
+        /// stub — see the type docs).
         pub manifest: Manifest,
+        /// Cumulative wall time inside PJRT execute calls (always zero).
         pub exec_time: RefCell<Duration>,
+        /// Number of PJRT execute calls (always zero).
         pub exec_count: RefCell<u64>,
     }
 
@@ -235,18 +248,22 @@ mod stub {
          is not vendored offline); use the reference backend";
 
     impl Runtime {
+        /// Always fails: the `pjrt` feature (and the `xla` crate) is absent.
         pub fn load(_artifacts_dir: &Path) -> Result<Runtime> {
             bail!(UNAVAILABLE);
         }
 
+        /// Unreachable in practice (`load` never succeeds).
         pub fn warmup(&self, _buckets: &[usize]) -> Result<()> {
             bail!(UNAVAILABLE);
         }
 
+        /// Number of compiled step executables — zero, nothing compiles.
         pub fn compiled_buckets(&self) -> usize {
             0
         }
 
+        /// Unreachable in practice (`load` never succeeds).
         pub fn step(
             &self,
             _model: &mut ModelState,
@@ -256,6 +273,7 @@ mod stub {
             bail!(UNAVAILABLE);
         }
 
+        /// Unreachable in practice (`load` never succeeds).
         pub fn eval(&self, _model: &ModelState, _batch: &PaddedBatch) -> Result<Vec<i32>> {
             bail!(UNAVAILABLE);
         }

@@ -19,10 +19,25 @@ use super::Runtime;
 use crate::Result;
 
 /// Step-time model in seconds.
+///
+/// # Invariants
+///
+/// * Step and inference times are strictly monotone in both batch size
+///   and nnz, and never below `t_fixed` — the discrete-event clock can
+///   always advance.
+/// * [`CostModel::calibrate`] clamps every refitted coefficient
+///   non-negative, so a noisy probe can't produce negative time.
+/// * This is the *nominal* model: per-device speed factors, jitter, and
+///   drift multiply on top of it ([`crate::runtime::SimDevice`]), and
+///   the online calibration plane ([`crate::tuning`]) estimates those
+///   multipliers back from observed timings against these same terms.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
+    /// Fixed dispatch/launch overhead per step (seconds).
     pub t_fixed: f64,
+    /// Sparse input-layer cost per non-zero (gather-bound term).
     pub t_per_nnz: f64,
+    /// Dense fwd+bwd cost per sample (FLOP-bound term).
     pub t_per_sample: f64,
     /// Per-parameter transfer cost of one model merge hop (all-reduce link).
     pub t_per_param_xfer: f64,
@@ -58,6 +73,7 @@ impl CostModel {
         self.step_time_parts(batch.bucket, batch.nnz)
     }
 
+    /// [`step_time`](CostModel::step_time) from raw (bucket, nnz) parts.
     pub fn step_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
         self.t_fixed + self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64
     }
@@ -67,6 +83,7 @@ impl CostModel {
         self.infer_time_parts(batch.bucket, batch.nnz)
     }
 
+    /// [`infer_time`](CostModel::infer_time) from raw (bucket, nnz) parts.
     pub fn infer_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
         self.t_fixed
             + self.infer_fraction

@@ -25,13 +25,28 @@ use super::cost::CostModel;
 /// steps instead of white noise, like real clock drift.
 const JITTER_RHO: f64 = 0.9;
 
+/// One simulated heterogeneous accelerator.
+///
+/// # Invariants
+///
+/// * The effective multiplier is always > 0.1 — jitter and drift can
+///   slow a device arbitrarily but never stop or reverse its clock.
+/// * With `jitter = 0` every duration is a deterministic function of
+///   (speed factor, drift, workload); with jitter on, the trajectory is a
+///   deterministic function of the config seed — runs are reproducible
+///   either way.
 #[derive(Clone, Debug)]
 pub struct SimDevice {
+    /// Global roster id.
     pub id: usize,
+    /// Persistent configured slowdown factor (1.0 = nominal).
     pub speed_factor: f64,
     jitter_amp: f64,
     jitter_state: f64,
     nnz_sensitivity: f64,
+    /// Scripted drift multiplier on top of the configured factor
+    /// (`[calibration] events`; 1.0 = no drift). See [`SimDevice::set_drift`].
+    drift: f64,
     rng: Rng,
 }
 
@@ -44,6 +59,7 @@ impl SimDevice {
             jitter_amp: cfg.jitter,
             jitter_state: 0.0,
             nnz_sensitivity: cfg.nnz_sensitivity,
+            drift: 1.0,
             rng: Rng::new(cfg.seed ^ (id as u64).wrapping_mul(0xA5A5_5A5A_DEAD_BEEF)),
         }
     }
@@ -62,8 +78,23 @@ impl SimDevice {
             jitter_amp: cfg.jitter,
             jitter_state: 0.0,
             nnz_sensitivity: cfg.nnz_sensitivity,
+            drift: 1.0,
             rng: Rng::new(cfg.seed ^ (id as u64).wrapping_mul(0xA5A5_5A5A_DEAD_BEEF)),
         }
+    }
+
+    /// Set the scripted drift multiplier (thermal throttle / co-tenant
+    /// contention scenarios): the device's effective slowdown becomes
+    /// `speed_factor × multiplier`, jitter on top. 1.0 restores nominal.
+    /// Idempotent — the engines re-apply the trace value every mega-batch.
+    pub fn set_drift(&mut self, multiplier: f64) {
+        assert!(multiplier > 0.0, "drift multiplier must be positive");
+        self.drift = multiplier;
+    }
+
+    /// The scripted drift multiplier currently in effect.
+    pub fn drift(&self) -> f64 {
+        self.drift
     }
 
     /// Advance the jitter process and return the current multiplicative
@@ -71,7 +102,7 @@ impl SimDevice {
     fn next_multiplier(&mut self) -> f64 {
         let eps = self.rng.normal() * self.jitter_amp;
         self.jitter_state = JITTER_RHO * self.jitter_state + (1.0 - JITTER_RHO) * eps;
-        (self.speed_factor * (1.0 + self.jitter_state)).max(0.1)
+        (self.speed_factor * self.drift * (1.0 + self.jitter_state)).max(0.1)
     }
 
     /// Virtual-time engine: full simulated duration (seconds) of one step.
@@ -186,6 +217,21 @@ mod tests {
         // Deterministic with zero jitter and slowed by the speed factor.
         let nominal = cost.infer_time_parts(64, 64 * 12);
         assert!((infer - nominal * cfg.speed_factors[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_multiplies_the_speed_factor_and_restores() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(0, &cfg); // factor 1.0
+        let b = batch(32, 400);
+        let nominal = d.step_duration(&cost, &b);
+        d.set_drift(1.8);
+        assert_eq!(d.drift(), 1.8);
+        let throttled = d.step_duration(&cost, &b);
+        assert!((throttled - 1.8 * nominal).abs() < 1e-12, "{throttled} vs {nominal}");
+        d.set_drift(1.0);
+        assert_eq!(d.step_duration(&cost, &b), nominal, "recover restores nominal exactly");
     }
 
     #[test]

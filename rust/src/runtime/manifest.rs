@@ -5,6 +5,14 @@
 //! names, and the executable I/O layouts. `Manifest::load` validates
 //! structure; `Manifest::check_config` validates agreement with the run
 //! config before any training starts.
+//!
+//! # Invariants
+//!
+//! * A loaded manifest's `buckets` are non-empty and strictly increasing,
+//!   and every referenced HLO file existed at load time — `load` rejects
+//!   anything else, so downstream code never re-validates.
+//! * `check_config` passing means dims and the bucket grid agree exactly
+//!   with the run config; a mismatch is a hard error, never a fallback.
 
 use std::path::{Path, PathBuf};
 
@@ -14,22 +22,34 @@ use crate::config::{Config, ModelDims};
 use crate::util::json::Json;
 use crate::Result;
 
+/// Typed, validated view of one `artifacts/` directory.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Model dimensions the artifacts were AOT-lowered for.
     pub dims: ModelDims,
+    /// Batch-size bucket grid (strictly increasing, one executable each).
     pub buckets: Vec<usize>,
+    /// Grid minimum (must equal `buckets[0]`).
     pub b_min: usize,
+    /// Grid maximum (must equal `buckets.last()`).
     pub b_max: usize,
+    /// Grid pitch (Algorithm 1's β).
     pub beta: usize,
+    /// The single evaluation batch size the eval executable was built for.
     pub eval_batch: usize,
+    /// Hash of the AOT config (provenance; empty when absent).
     pub config_hash: String,
     /// bucket -> HLO file name.
     pub step_files: Vec<(usize, String)>,
+    /// Eval executable's HLO file name.
     pub eval_file: String,
 }
 
 impl Manifest {
+    /// Load and structurally validate `dir/manifest.json` (see the module
+    /// docs for what "valid" guarantees).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).with_context(|| {
@@ -128,6 +148,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// Path of the step executable for `bucket` (error off the grid).
     pub fn step_path(&self, bucket: usize) -> Result<PathBuf> {
         self.step_files
             .iter()
@@ -136,6 +157,7 @@ impl Manifest {
             .with_context(|| format!("no step artifact for bucket {bucket}"))
     }
 
+    /// Path of the eval executable.
     pub fn eval_path(&self) -> PathBuf {
         self.dir.join(&self.eval_file)
     }

@@ -9,9 +9,12 @@
 //!   thread owns its own client, which also mirrors the paper's
 //!   one-manager-per-GPU design).
 //! * [`device`] — heterogeneity model: persistent speed factor + AR(1)
-//!   jitter + nnz sensitivity, with real-sleep and virtual-clock modes.
+//!   jitter + nnz sensitivity + scripted drift multipliers
+//!   (`[calibration] events`), with real-sleep and virtual-clock modes.
 //! * [`cost`] — analytic step-cost model, calibratable against real PJRT
-//!   measurements; drives the discrete-event engine.
+//!   measurements; drives the discrete-event engine and is the nominal
+//!   reference the online calibration plane ([`crate::tuning`]) fits
+//!   per-device multipliers against.
 
 pub mod client;
 pub mod cost;

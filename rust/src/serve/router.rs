@@ -13,10 +13,21 @@
 //! affects *future* routing decisions, so batches already dispatched to a
 //! removed device drain to completion — every admitted request is answered
 //! exactly once across churn.
+//!
+//! With the calibration plane on ([`Router::set_cost_view`]), routing
+//! upgrades to earliest *predicted completion* on the shared
+//! [`CostsView`] — the same estimates training dispatch uses — so a
+//! device the estimators have watched throttle stops winning batches it
+//! will finish late, before its own queue has to reveal the slowdown.
+//!
+//! [`DevicePool::begin_mega_batch`]: crate::coordinator::DevicePool::begin_mega_batch
 
-use crate::coordinator::dispatch::next_free_device;
+use std::sync::Arc;
+
+use crate::coordinator::dispatch::{next_completion_device, next_free_device};
 use crate::data::PaddedBatch;
 use crate::runtime::{CostModel, SimDevice};
+use crate::tuning::CostsView;
 
 /// Outcome of routing one micro-batch.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -39,6 +50,11 @@ pub struct Router {
     /// eligibility predicate).
     active_mask: Vec<bool>,
     cost: CostModel,
+    /// Calibrated costs view (None = historical earliest-free routing).
+    view: Option<Arc<CostsView>>,
+    /// Reusable per-route prediction buffer (hot path: no allocation per
+    /// micro-batch).
+    pred_secs: Vec<f64>,
     routed: Vec<u64>,
 }
 
@@ -54,6 +70,8 @@ impl Router {
             active: Vec::new(),
             active_mask: vec![false; n],
             cost,
+            view: None,
+            pred_secs: Vec::with_capacity(n),
             routed: vec![0; n],
         };
         r.set_active(&active);
@@ -79,13 +97,35 @@ impl Router {
         &self.active
     }
 
+    /// Route on this calibrated-costs view (`[calibration]` plane): the
+    /// next batch goes to the active device with the earliest *predicted
+    /// completion* under the view's estimated speeds. `None` restores the
+    /// historical earliest-free rule bit-for-bit. The fleet co-scheduler
+    /// refreshes this every decision window.
+    pub fn set_cost_view(&mut self, view: Option<Arc<CostsView>>) {
+        if let Some(v) = &view {
+            assert_eq!(v.roster_len(), self.devices.len(), "view must cover the roster");
+        }
+        self.view = view;
+    }
+
     /// Route one batch at time `now`: earliest-free active device wins
     /// (training's dynamic-dispatch rule, shared via
     /// `coordinator::dispatch`), then its virtual clock advances by the
     /// heterogeneity-modeled inference duration.
     pub fn route(&mut self, now: f64, batch: &PaddedBatch) -> Routed {
-        let device = next_free_device(&self.free_time, now, |d| self.active_mask[d])
-            .expect("router has an active device");
+        let device = match &self.view {
+            Some(view) => {
+                let nominal = self.cost.infer_time_parts(batch.bucket, batch.nnz);
+                self.pred_secs.clear();
+                self.pred_secs.extend((0..self.devices.len()).map(|d| view.speed(d) * nominal));
+                next_completion_device(&self.free_time, now, &self.pred_secs, |d| {
+                    self.active_mask[d]
+                })
+            }
+            None => next_free_device(&self.free_time, now, |d| self.active_mask[d]),
+        }
+        .expect("router has an active device");
         let start = self.free_time[device].max(now);
         let completion = start + self.devices[device].infer_duration(&self.cost, batch);
         self.free_time[device] = completion;
@@ -96,6 +136,21 @@ impl Router {
     /// Batches routed per roster device so far.
     pub fn routed(&self) -> &[u64] {
         &self.routed
+    }
+
+    /// Apply a scripted drift multiplier to one serving device — the
+    /// serve-side mirror of
+    /// [`ExecutionEngine::set_drift`](crate::coordinator::ExecutionEngine::set_drift).
+    /// Drift traces are *window-indexed per plane*: the fleet
+    /// co-scheduler applies them here at arbiter-tick boundaries, while
+    /// each training session applies them at its own mega-batch
+    /// boundaries — size `fleet.decision_window` near a mega-batch
+    /// duration when a scenario needs the two planes' ramps aligned in
+    /// virtual time.
+    pub fn set_drift(&mut self, device: usize, multiplier: f64) {
+        if let Some(d) = self.devices.get_mut(device) {
+            d.set_drift(multiplier);
+        }
     }
 }
 
@@ -170,6 +225,45 @@ mod tests {
             r.route(50.0, &b);
         }
         assert!(r.routed()[0] > before[0]);
+    }
+
+    #[test]
+    fn cost_view_steers_routing_away_from_a_throttled_device() {
+        use crate::tuning::{CalibratedCosts, DeviceEstimate};
+        let mut r = router(0.0);
+        let b = batch(32, 32 * 12);
+        // The view knows device 0 (nominally fastest) throttled to 3x.
+        let costs = CalibratedCosts::new(vec![1.0, 1.1, 1.21, 1.32]);
+        costs.update_devices(
+            &[(
+                0,
+                DeviceEstimate {
+                    speed: 3.0,
+                    t_fixed: 300e-6,
+                    slope: 3.0,
+                    residual_rel: 0.01,
+                    observations: 6,
+                    drift_events: 1,
+                },
+            )],
+            0.0,
+        );
+        r.set_cost_view(Some(costs.current()));
+        // Earliest-free would hand device 0 the very first batch (all
+        // idle, lowest id). Predicted-completion routing sends the first
+        // four batches elsewhere — the view demotes the throttled device
+        // before its own queue could reveal the slowdown.
+        for _ in 0..4 {
+            r.route(0.0, &b);
+        }
+        let routed = r.routed().to_vec();
+        assert_eq!(routed.iter().sum::<u64>(), 4, "every batch still routed exactly once");
+        assert_eq!(routed[0], 0, "throttled device never wins early work: {routed:?}");
+        // Dropping the view restores the earliest-free rule.
+        r.set_cost_view(None);
+        let routed_before = r.routed()[0];
+        r.route(1e9, &b);
+        assert_eq!(r.routed()[0], routed_before + 1, "idle lowest id wins again");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Scripted drift traces — reproducible throttle/recover scenarios for
+//! the calibration experiments (`[calibration] events`).
+//!
+//! A drift event ramps one device's *effective* speed away from its
+//! configured factor at mega-batch boundaries: `"at_mb=10 device=0
+//! factor=1.8 ramp=4"` means device 0's drift multiplier moves linearly
+//! from its previous value to 1.8 over the 4 mega-batches starting at 10
+//! (reaching 1.8 at mega-batch 14); `ramp=0` (the default) is a step.
+//! Traces describe the *physical* scenario — they apply whether or not
+//! `[calibration] enabled` closes the scheduling loop, which is exactly
+//! what lets `experiment calibration` compare static and calibrated
+//! scheduling under identical hardware behavior.
+//!
+//! # Invariants
+//!
+//! * [`multiplier_at`] is a pure function of (trace, device, mega-batch):
+//!   no state, no clocks — drift scenarios are bit-reproducible.
+//! * Multipliers are validated positive; an absent trace yields 1.0
+//!   everywhere (no drift).
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+/// One scripted drift ramp, parsed from
+/// `"at_mb=N device=D factor=F [ramp=R]"`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftEvent {
+    /// Mega-batch (window) at which the ramp starts.
+    pub at_mb: usize,
+    /// Roster device id the ramp applies to.
+    pub device: usize,
+    /// Target drift multiplier on the device's configured speed factor
+    /// (> 0; 1.0 = back to nominal, 2.0 = half speed).
+    pub factor: f64,
+    /// Mega-batches the linear ramp takes to reach `factor` (0 = step).
+    pub ramp: usize,
+}
+
+impl DriftEvent {
+    /// Parse one event string. Every token is `key=value`; `at_mb`,
+    /// `device`, and `factor` are required, `ramp` defaults to 0.
+    pub fn parse(s: &str) -> Result<DriftEvent> {
+        let mut at_mb: Option<usize> = None;
+        let mut device: Option<usize> = None;
+        let mut factor: Option<f64> = None;
+        let mut ramp: usize = 0;
+        for tok in s.split_whitespace() {
+            let (key, value) = tok
+                .split_once('=')
+                .with_context(|| format!("drift event token '{tok}' is not key=value"))?;
+            match key {
+                "at_mb" => {
+                    let n = value
+                        .parse()
+                        .with_context(|| format!("drift event at_mb '{value}' is not an integer"))?;
+                    if at_mb.replace(n).is_some() {
+                        bail!("drift event '{s}' has more than one at_mb");
+                    }
+                }
+                "device" => {
+                    let n = value
+                        .parse()
+                        .with_context(|| format!("drift event device '{value}' is not an integer"))?;
+                    if device.replace(n).is_some() {
+                        bail!("drift event '{s}' has more than one device");
+                    }
+                }
+                "factor" => {
+                    let f: f64 = value
+                        .parse()
+                        .with_context(|| format!("drift event factor '{value}' is not a number"))?;
+                    if factor.replace(f).is_some() {
+                        bail!("drift event '{s}' has more than one factor");
+                    }
+                }
+                "ramp" => {
+                    ramp = value
+                        .parse()
+                        .with_context(|| format!("drift event ramp '{value}' is not an integer"))?;
+                }
+                other => bail!("unknown drift event key '{other}' (at_mb|device|factor|ramp)"),
+            }
+        }
+        let at_mb = at_mb.with_context(|| format!("drift event '{s}' missing at_mb=N"))?;
+        let device = device.with_context(|| format!("drift event '{s}' missing device=D"))?;
+        let factor = factor.with_context(|| format!("drift event '{s}' missing factor=F"))?;
+        if factor <= 0.0 {
+            bail!("drift event '{s}' factor must be positive");
+        }
+        Ok(DriftEvent { at_mb, device, factor, ramp })
+    }
+}
+
+/// Parse a whole `[calibration] events` trace, sorted by `at_mb` (stable
+/// for ties).
+pub fn parse_trace(events: &[String]) -> Result<Vec<DriftEvent>> {
+    let mut trace =
+        events.iter().map(|s| DriftEvent::parse(s)).collect::<Result<Vec<_>>>()?;
+    trace.sort_by_key(|e| e.at_mb);
+    Ok(trace)
+}
+
+/// The drift multiplier in effect for `device` at mega-batch `mb`: 1.0
+/// before any of the device's events, then each ramp interpolates
+/// linearly from the value it started at to its `factor`. Events chain —
+/// a recover ramp starts from wherever the throttle left the device, and
+/// an event landing mid-ramp freezes the old ramp at its value at the
+/// new event's start (so every segment is monotone toward its target,
+/// even when ramps overlap).
+pub fn multiplier_at(trace: &[DriftEvent], device: usize, mb: usize) -> f64 {
+    // (active event, the multiplier it started ramping from).
+    let mut active: Option<(&DriftEvent, f64)> = None;
+    for e in trace.iter().filter(|e| e.device == device) {
+        if mb < e.at_mb {
+            break;
+        }
+        let start = match active {
+            Some((prev, prev_start)) => ramp_value(prev, prev_start, e.at_mb),
+            None => 1.0,
+        };
+        active = Some((e, start));
+    }
+    match active {
+        Some((e, start)) => ramp_value(e, start, mb),
+        None => 1.0,
+    }
+}
+
+/// Value of one ramp at `mb` (>= its `at_mb`), starting from `start`.
+fn ramp_value(e: &DriftEvent, start: f64, mb: usize) -> f64 {
+    if e.ramp == 0 || mb >= e.at_mb + e.ramp {
+        e.factor
+    } else {
+        start + (e.factor - start) * ((mb - e.at_mb) as f64 / e.ramp as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let e = DriftEvent::parse("at_mb=10 device=0 factor=1.8 ramp=4").unwrap();
+        assert_eq!(e, DriftEvent { at_mb: 10, device: 0, factor: 1.8, ramp: 4 });
+        let e = DriftEvent::parse("factor=2 device=3 at_mb=5").unwrap();
+        assert_eq!(e.ramp, 0, "ramp defaults to a step");
+        assert!(DriftEvent::parse("at_mb=1 device=0").is_err(), "missing factor");
+        assert!(DriftEvent::parse("at_mb=1 factor=2").is_err(), "missing device");
+        assert!(DriftEvent::parse("device=0 factor=2").is_err(), "missing at_mb");
+        assert!(DriftEvent::parse("at_mb=1 device=0 factor=0").is_err(), "factor must be > 0");
+        assert!(DriftEvent::parse("at_mb=1 device=0 factor=2 explode=1").is_err());
+        assert!(DriftEvent::parse("at_mb=x device=0 factor=2").is_err());
+    }
+
+    #[test]
+    fn step_events_switch_at_the_boundary() {
+        let trace = parse_trace(&[
+            "at_mb=5 device=0 factor=2.0".to_string(),
+            "at_mb=9 device=0 factor=1.0".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(multiplier_at(&trace, 0, 0), 1.0);
+        assert_eq!(multiplier_at(&trace, 0, 4), 1.0);
+        assert_eq!(multiplier_at(&trace, 0, 5), 2.0);
+        assert_eq!(multiplier_at(&trace, 0, 8), 2.0);
+        assert_eq!(multiplier_at(&trace, 0, 9), 1.0, "recover steps back");
+        assert_eq!(multiplier_at(&trace, 1, 7), 1.0, "other devices untouched");
+    }
+
+    #[test]
+    fn ramps_interpolate_linearly_and_chain() {
+        let trace = parse_trace(&["at_mb=4 device=2 factor=2.0 ramp=4".to_string()]).unwrap();
+        assert_eq!(multiplier_at(&trace, 2, 4), 1.0, "ramp starts from the old value");
+        assert!((multiplier_at(&trace, 2, 6) - 1.5).abs() < 1e-12, "halfway");
+        assert_eq!(multiplier_at(&trace, 2, 8), 2.0, "ramp completes at at_mb + ramp");
+        assert_eq!(multiplier_at(&trace, 2, 99), 2.0, "holds after completion");
+
+        // A recover ramp starting mid-throttle chains from the current value.
+        let trace = parse_trace(&[
+            "at_mb=0 device=0 factor=3.0".to_string(),
+            "at_mb=10 device=0 factor=1.0 ramp=2".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(multiplier_at(&trace, 0, 9), 3.0);
+        assert!((multiplier_at(&trace, 0, 11) - 2.0).abs() < 1e-12);
+        assert_eq!(multiplier_at(&trace, 0, 12), 1.0);
+    }
+
+    #[test]
+    fn overlapping_ramps_stay_monotone_toward_the_new_target() {
+        // A recovery ramp interrupting a throttle ramp freezes the old
+        // ramp at its current value and descends from there — the
+        // multiplier must never rise during a recovery.
+        let trace = parse_trace(&[
+            "at_mb=0 device=0 factor=3.0 ramp=10".to_string(),
+            "at_mb=5 device=0 factor=1.0 ramp=10".to_string(),
+        ])
+        .unwrap();
+        // At mb 5 the throttle ramp sits at 1 + (3-1)*0.5 = 2.0.
+        assert!((multiplier_at(&trace, 0, 5) - 2.0).abs() < 1e-12);
+        let mut prev = multiplier_at(&trace, 0, 5);
+        for mb in 6..=15 {
+            let v = multiplier_at(&trace, 0, mb);
+            assert!(v <= prev + 1e-12, "recovery rose at mb {mb}: {prev} -> {v}");
+            prev = v;
+        }
+        assert_eq!(multiplier_at(&trace, 0, 15), 1.0, "recovery completes at at_mb + ramp");
+    }
+
+    #[test]
+    fn trace_sorts_by_mega_batch() {
+        let trace = parse_trace(&[
+            "at_mb=9 device=0 factor=1.0".to_string(),
+            "at_mb=2 device=0 factor=2.0".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(trace[0].at_mb, 2);
+        assert_eq!(multiplier_at(&trace, 0, 5), 2.0);
+        assert_eq!(multiplier_at(&trace, 0, 9), 1.0);
+        assert!(parse_trace(&["garbage".to_string()]).is_err());
+    }
+}

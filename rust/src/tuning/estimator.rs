@@ -1,0 +1,406 @@
+//! Per-device online cost estimation — windowed robust regression with
+//! EWMA smoothing and a step-drift detector.
+//!
+//! Each device's observed step times are fitted against the *nominal*
+//! [`CostModel`]'s variable cost `x = t_per_nnz·nnz + t_per_sample·b`, so
+//! an estimate has the same shape as the cost model it replaces:
+//!
+//! ```text
+//! t(b, nnz) ≈ t_fixed_est + slope_est · x(b, nnz)
+//! ```
+//!
+//! with `slope_est` absorbing the device's effective speed multiplier
+//! (configured `speed_factor` × whatever drift the hardware is really
+//! doing). Fitting is Theil–Sen over a bounded observation window —
+//! median-of-pairwise-slopes, so a single jittered outlier cannot bend
+//! the estimate — then EWMA-smoothed across windows for gradual-drift
+//! tracking.
+//!
+//! Drift handling is two-speed, mirroring the throttle regimes of
+//! ABS-SGD (arXiv:2308.15164): **gradual** drift (clock oscillation,
+//! slow thermal creep) flows through the slow EWMA; a **step** change
+//! (sudden throttle, a co-tenant landing on the device) is detected when
+//! `step_obs` consecutive observations deviate from the smoothed
+//! prediction by more than `step_threshold` relative — the stale window
+//! is then discarded and the estimate re-seeds from the post-step
+//! observations alone (fast re-estimate).
+//!
+//! # Invariants
+//!
+//! * Estimates are deterministic functions of the observation sequence —
+//!   no clocks, no randomness — so calibrated runs stay bit-reproducible.
+//! * `t_fixed` and `slope` are clamped non-negative; `speed` is clamped
+//!   positive, so a consumer can always divide by it.
+//! * The window never exceeds `EstimatorConfig::window` observations.
+
+use crate::runtime::CostModel;
+
+/// Estimator knobs (a projection of the `[calibration]` config block).
+#[derive(Clone, Copy, Debug)]
+pub struct EstimatorConfig {
+    /// Observation-window length per device (>= 3): how much history the
+    /// robust fit sees.
+    pub window: usize,
+    /// EWMA smoothing factor in (0, 1] applied across window fits — the
+    /// *slow* tracking path for gradual drift (1.0 = no smoothing).
+    pub alpha: f64,
+    /// Relative deviation of an observation from the smoothed prediction
+    /// that counts as a step-drift outlier (> 0).
+    pub step_threshold: f64,
+    /// Consecutive outliers before the detector declares a step change
+    /// and fast re-estimates (>= 1).
+    pub step_obs: usize,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig { window: 6, alpha: 0.25, step_threshold: 0.25, step_obs: 2 }
+    }
+}
+
+/// One per-device timing observation: the mean over one mega-batch of
+/// that device's dispatched batches (both engines already report these).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    /// Padded batch size (bucket-grid value) the device ran.
+    pub bucket: usize,
+    /// Mean true non-zeros per batch.
+    pub nnz_per_batch: f64,
+    /// Mean observed seconds per batch (simulated or stretched wall).
+    pub secs_per_batch: f64,
+}
+
+/// The current calibrated estimate for one device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceEstimate {
+    /// Effective slowdown multiplier vs the nominal [`CostModel`] at the
+    /// window's mean workload — directly comparable to (and a drop-in
+    /// replacement for) the configured `speed_factor`. Always > 0.
+    pub speed: f64,
+    /// Estimated fixed per-step overhead in seconds (>= 0).
+    pub t_fixed: f64,
+    /// Estimated multiplier on the nominal variable cost (>= 0).
+    pub slope: f64,
+    /// Median relative residual of the window under the smoothed estimate
+    /// — the estimate's own quality signal (small = trustworthy).
+    pub residual_rel: f64,
+    /// Observations consumed so far.
+    pub observations: u64,
+    /// Step-drift re-estimates fired so far.
+    pub drift_events: u64,
+}
+
+impl DeviceEstimate {
+    /// Predicted seconds for one step of a `bucket`-sized batch carrying
+    /// `nnz` non-zeros, under this estimate of the device.
+    pub fn step_secs(&self, nominal: &CostModel, bucket: usize, nnz: f64) -> f64 {
+        self.t_fixed + self.slope * variable_cost(nominal, bucket, nnz)
+    }
+}
+
+/// The smoothed two-parameter fit (internal state).
+#[derive(Clone, Copy, Debug)]
+struct Fit {
+    t_fixed: f64,
+    slope: f64,
+}
+
+/// Online cost estimator for a single roster device.
+#[derive(Clone, Debug)]
+pub struct DeviceEstimator {
+    cfg: EstimatorConfig,
+    nominal: CostModel,
+    /// FIFO observation window (len <= cfg.window).
+    window: Vec<Observation>,
+    smoothed: Option<Fit>,
+    outlier_streak: usize,
+    observations: u64,
+    drift_events: u64,
+}
+
+impl DeviceEstimator {
+    /// Estimator fitting against `nominal` (the cost model the engine
+    /// charges time with — estimates are multipliers on *its* terms).
+    pub fn new(cfg: EstimatorConfig, nominal: CostModel) -> DeviceEstimator {
+        assert!(cfg.window >= 3, "estimator window must hold at least 3 observations");
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
+        assert!(cfg.step_threshold > 0.0, "step threshold must be positive");
+        assert!(cfg.step_obs >= 1, "step_obs must be >= 1");
+        DeviceEstimator {
+            cfg,
+            nominal,
+            window: Vec::new(),
+            smoothed: None,
+            outlier_streak: 0,
+            observations: 0,
+            drift_events: 0,
+        }
+    }
+
+    /// Feed one observation. Returns `true` when the step-drift detector
+    /// fired on this observation (the estimate just fast re-seeded from
+    /// the post-step window — consumers may want to re-plan immediately).
+    pub fn observe(&mut self, obs: Observation) -> bool {
+        self.observations += 1;
+
+        // Outlier test against the *smoothed* prediction (not the raw
+        // window fit): a step change makes consecutive observations land
+        // far from where the slow path thinks the device is.
+        if let Some(f) = self.smoothed {
+            let y_hat = (f.t_fixed + f.slope * self.x(&obs)).max(1e-12);
+            let rel = (obs.secs_per_batch - y_hat).abs() / y_hat;
+            if rel > self.cfg.step_threshold {
+                self.outlier_streak += 1;
+            } else {
+                self.outlier_streak = 0;
+            }
+        }
+
+        self.window.push(obs);
+        if self.window.len() > self.cfg.window {
+            self.window.remove(0);
+        }
+
+        if self.smoothed.is_some() && self.outlier_streak >= self.cfg.step_obs {
+            // Step drift: the pre-step window is stale evidence. Keep only
+            // the outlier run and re-seed the smoothed estimate from it —
+            // the fast path.
+            let keep = self.outlier_streak.min(self.window.len());
+            self.window.drain(..self.window.len() - keep);
+            self.smoothed = Some(self.fit_window());
+            self.outlier_streak = 0;
+            self.drift_events += 1;
+            return true;
+        }
+
+        // Slow path: robust window fit, EWMA-blended for gradual drift.
+        let fresh = self.fit_window();
+        self.smoothed = Some(match self.smoothed {
+            None => fresh,
+            Some(prev) => Fit {
+                t_fixed: self.cfg.alpha * fresh.t_fixed + (1.0 - self.cfg.alpha) * prev.t_fixed,
+                slope: self.cfg.alpha * fresh.slope + (1.0 - self.cfg.alpha) * prev.slope,
+            },
+        });
+        false
+    }
+
+    /// The current estimate (None until the first observation).
+    pub fn estimate(&self) -> Option<DeviceEstimate> {
+        let f = self.smoothed?;
+        let x_mean = self.window.iter().map(|o| self.x(o)).sum::<f64>()
+            / self.window.len().max(1) as f64;
+        let speed = ((f.t_fixed + f.slope * x_mean) / (self.nominal.t_fixed + x_mean)).max(1e-6);
+        let mut residuals: Vec<f64> = self
+            .window
+            .iter()
+            .map(|o| {
+                let y_hat = (f.t_fixed + f.slope * self.x(o)).max(1e-12);
+                (o.secs_per_batch - y_hat).abs() / y_hat
+            })
+            .collect();
+        Some(DeviceEstimate {
+            speed,
+            t_fixed: f.t_fixed,
+            slope: f.slope,
+            residual_rel: median(&mut residuals),
+            observations: self.observations,
+            drift_events: self.drift_events,
+        })
+    }
+
+    /// Observations consumed so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Step-drift re-estimates fired so far.
+    pub fn drift_events(&self) -> u64 {
+        self.drift_events
+    }
+
+    /// Nominal variable cost of an observation's workload.
+    fn x(&self, o: &Observation) -> f64 {
+        variable_cost(&self.nominal, o.bucket, o.nnz_per_batch)
+    }
+
+    /// Theil–Sen fit of `y = t_fixed + slope·x` over the window. When the
+    /// window has no workload spread (every batch the same size and nnz —
+    /// the static-batch strategies), the two parameters are not separately
+    /// identifiable, so the fit degrades gracefully to a pure
+    /// multiplicative model: `median(y/nominal) × (t_fixed, 1)`.
+    fn fit_window(&self) -> Fit {
+        let n = self.nominal;
+        let pts: Vec<(f64, f64)> =
+            self.window.iter().map(|o| (self.x(o), o.secs_per_batch)).collect();
+        debug_assert!(!pts.is_empty(), "fit_window requires observations");
+        let x_lo = pts.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let x_hi = pts.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+        if pts.len() < 2 || x_hi - x_lo <= 1e-9 * x_hi.max(1e-12) {
+            let mut ratios: Vec<f64> =
+                pts.iter().map(|&(x, y)| y / (n.t_fixed + x).max(1e-12)).collect();
+            let m = median(&mut ratios).max(0.0);
+            return Fit { t_fixed: m * n.t_fixed, slope: m };
+        }
+        let mut slopes = Vec::with_capacity(pts.len() * (pts.len() - 1) / 2);
+        for i in 0..pts.len() {
+            for j in i + 1..pts.len() {
+                let dx = pts[j].0 - pts[i].0;
+                if dx.abs() > 1e-15 {
+                    slopes.push((pts[j].1 - pts[i].1) / dx);
+                }
+            }
+        }
+        let slope = median(&mut slopes).max(0.0);
+        let mut intercepts: Vec<f64> = pts.iter().map(|&(x, y)| y - slope * x).collect();
+        let t_fixed = median(&mut intercepts).max(0.0);
+        Fit { t_fixed, slope }
+    }
+}
+
+/// Nominal variable (workload-dependent) cost of one step.
+fn variable_cost(nominal: &CostModel, bucket: usize, nnz: f64) -> f64 {
+    nominal.t_per_nnz * nnz + nominal.t_per_sample * bucket as f64
+}
+
+/// Median of a non-empty slice (sorts in place; lower-of-two for even
+/// lengths, matching the robust-statistics convention used elsewhere).
+fn median(v: &mut [f64]) -> f64 {
+    assert!(!v.is_empty(), "median of an empty slice");
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[(v.len() - 1) / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(bucket: usize, nnz: f64, secs: f64) -> Observation {
+        Observation { bucket, nnz_per_batch: nnz, secs_per_batch: secs }
+    }
+
+    /// Feed `k` noiseless observations of a `speed ×` nominal device over
+    /// a spread of workloads.
+    fn feed_true(est: &mut DeviceEstimator, speed: f64, k: usize) {
+        let n = CostModel::default();
+        for i in 0..k {
+            let b = 32 + 16 * (i % 4);
+            let nnz = 12.0 * b as f64;
+            let secs = speed * n.step_time_parts(b, nnz as usize);
+            est.observe(obs(b, nnz, secs));
+        }
+    }
+
+    #[test]
+    fn converges_to_a_scripted_multiplier() {
+        let mut est = DeviceEstimator::new(EstimatorConfig::default(), CostModel::default());
+        assert!(est.estimate().is_none(), "no estimate before observations");
+        feed_true(&mut est, 1.32, 12);
+        let e = est.estimate().unwrap();
+        assert!((e.speed - 1.32).abs() < 0.02, "speed {}", e.speed);
+        assert!(e.residual_rel < 0.02, "noiseless fit must have tiny residuals");
+        assert_eq!(e.drift_events, 0);
+        assert_eq!(e.observations, 12);
+    }
+
+    #[test]
+    fn recovers_fixed_and_slope_separately() {
+        // A device with doubled fixed overhead but nominal variable cost:
+        // the two-parameter fit separates them; a pure multiplier cannot.
+        let n = CostModel::default();
+        let mut est = DeviceEstimator::new(
+            EstimatorConfig { alpha: 1.0, ..Default::default() },
+            n,
+        );
+        for i in 0..8 {
+            let b = 16 + 16 * (i % 4);
+            let nnz = 12.0 * b as f64;
+            let secs = 2.0 * n.t_fixed + n.t_per_nnz * nnz + n.t_per_sample * b as f64;
+            est.observe(obs(b, nnz, secs));
+        }
+        let e = est.estimate().unwrap();
+        assert!((e.t_fixed - 2.0 * n.t_fixed).abs() < 0.1 * n.t_fixed, "t_fixed {}", e.t_fixed);
+        assert!((e.slope - 1.0).abs() < 0.05, "slope {}", e.slope);
+    }
+
+    #[test]
+    fn constant_workload_falls_back_to_multiplicative() {
+        let n = CostModel::default();
+        let mut est = DeviceEstimator::new(EstimatorConfig::default(), n);
+        for _ in 0..6 {
+            let secs = 1.21 * n.step_time_parts(64, 768);
+            est.observe(obs(64, 768.0, secs));
+        }
+        let e = est.estimate().unwrap();
+        assert!((e.speed - 1.21).abs() < 0.02, "speed {}", e.speed);
+        assert!((e.slope - 1.21).abs() < 0.02, "degenerate fit is the multiplier");
+    }
+
+    #[test]
+    fn single_outlier_does_not_bend_the_estimate() {
+        let mut est = DeviceEstimator::new(EstimatorConfig::default(), CostModel::default());
+        feed_true(&mut est, 1.0, 8);
+        let before = est.estimate().unwrap().speed;
+        // One wild observation (a GC pause, a noisy neighbor blip).
+        let n = CostModel::default();
+        let fired = est.observe(obs(64, 768.0, 10.0 * n.step_time_parts(64, 768)));
+        assert!(!fired, "one outlier must not trigger a step re-estimate");
+        feed_true(&mut est, 1.0, 2);
+        let after = est.estimate().unwrap().speed;
+        assert!((after - before).abs() < 0.15 * before, "{before} -> {after}");
+        assert_eq!(est.drift_events(), 0);
+    }
+
+    #[test]
+    fn step_drift_detected_within_step_obs() {
+        let cfg = EstimatorConfig { step_obs: 2, ..Default::default() };
+        let mut est = DeviceEstimator::new(cfg, CostModel::default());
+        feed_true(&mut est, 1.0, 8);
+        // The device throttles 1.8x: the first post-step observation is an
+        // outlier, the second completes the streak and re-seeds.
+        let n = CostModel::default();
+        let secs = 1.8 * n.step_time_parts(64, 768);
+        assert!(!est.observe(obs(64, 768.0, secs)), "first outlier only starts the streak");
+        assert!(est.observe(obs(64, 768.0, secs)), "second outlier fires the detector");
+        assert_eq!(est.drift_events(), 1);
+        // The fast re-estimate is already at the new speed.
+        let e = est.estimate().unwrap();
+        assert!((e.speed - 1.8).abs() < 0.05, "fast re-estimate {}", e.speed);
+    }
+
+    #[test]
+    fn gradual_drift_tracks_without_step_events() {
+        let n = CostModel::default();
+        let mut est = DeviceEstimator::new(
+            EstimatorConfig { alpha: 0.5, step_threshold: 0.5, ..Default::default() },
+            n,
+        );
+        // Speed creeps 1.00 -> 1.20 in 2% increments: never an outlier.
+        for i in 0..20 {
+            let speed = 1.0 + 0.01 * i as f64;
+            let secs = speed * n.step_time_parts(64, 768);
+            assert!(!est.observe(obs(64, 768.0, secs)), "creep must not fire the detector");
+        }
+        let e = est.estimate().unwrap();
+        assert_eq!(e.drift_events, 0);
+        assert!(e.speed > 1.1, "EWMA tracked the creep: {}", e.speed);
+    }
+
+    #[test]
+    fn deterministic_given_the_same_observations() {
+        let run = || {
+            let mut est =
+                DeviceEstimator::new(EstimatorConfig::default(), CostModel::default());
+            feed_true(&mut est, 1.1, 9);
+            est.estimate().unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn median_is_deterministic_and_lower_of_two() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&mut [7.0]), 7.0);
+    }
+}

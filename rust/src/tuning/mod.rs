@@ -1,0 +1,53 @@
+//! The online cost-model calibration plane — measured per-device costs
+//! replacing the static `speed_factor` config as the scheduling source of
+//! truth.
+//!
+//! Every consumer of relative device speed in this repo — dynamic dispatch
+//! ([`crate::coordinator::dispatch`]), batch-size scaling
+//! ([`crate::coordinator::scaling`]), fleet fair share
+//! ([`crate::fleet::tenant`]), serve routing ([`crate::serve::router`]) —
+//! historically read the *configured* `devices.speed_factors`. Real
+//! heterogeneous servers drift: thermal throttling and co-tenant
+//! contention move a device's effective speed mid-run, exactly the regime
+//! the paper's dynamic scheduling is supposed to absorb. This module
+//! closes that loop:
+//!
+//! * [`estimator`] — [`DeviceEstimator`]: per-device online estimation of
+//!   the [`CostModel`](crate::runtime::CostModel)-shaped step cost (fixed
+//!   overhead + variable slope) from observed mega-batch timings, via
+//!   windowed Theil–Sen robust regression with EWMA smoothing and a
+//!   step-drift detector (step change → fast re-estimate; gradual drift →
+//!   slow tracking).
+//! * [`view`] — [`CalibratedCosts`]: the versioned, `Arc`-swapped shared
+//!   view of every device's current estimate (the snapshot-registry
+//!   pattern applied to costs), read lock-free-ish by dispatch, scaling,
+//!   the fleet arbiter, and the serve router.
+//! * [`whatif`] — [`score_plan`]: re-scores a dispatch plan under any
+//!   speed vector (estimated vs nominal), predicting makespan and
+//!   update balance without running a single step.
+//! * [`drift`] — [`DriftEvent`]: scripted throttle/recover traces
+//!   (`[calibration] events`) applied to [`SimDevice`]s at mega-batch
+//!   boundaries, so drift scenarios are reproducible experiments rather
+//!   than anecdotes.
+//!
+//! Everything behind the `[calibration]` config block: `events` describe
+//! the *physical* drift scenario and always apply; `enabled` decides
+//! whether the estimates (rather than config constants) drive scheduling.
+//! With `enabled = false` the plane is fully inert and runs are
+//! bit-identical to the pre-calibration behavior.
+//!
+//! [`SimDevice`]: crate::runtime::SimDevice
+
+// New-subsystem bar: every public item here must be documented — with
+// `RUSTDOCFLAGS="-D warnings"` in CI, a missing doc fails the build.
+#![warn(missing_docs)]
+
+pub mod drift;
+pub mod estimator;
+pub mod view;
+pub mod whatif;
+
+pub use drift::{multiplier_at, parse_trace, DriftEvent};
+pub use estimator::{DeviceEstimate, DeviceEstimator, EstimatorConfig, Observation};
+pub use view::{CalibratedCosts, CostsView};
+pub use whatif::{compare, score_plan, PlanScore};

@@ -1,0 +1,178 @@
+//! The shared calibrated-costs view — versioned, immutable snapshots with
+//! atomic hot-swap (the [`SnapshotRegistry`] pattern applied to costs).
+//!
+//! Writers (training sessions feeding [`DeviceEstimator`]s) publish
+//! per-device estimate updates; readers (dispatch planning, the fleet
+//! arbiter, the serve router) clone one `Arc<CostsView>` and see a
+//! coherent roster-wide picture for the duration of their decision. A
+//! device with no estimate yet falls back to its *nominal* configured
+//! speed factor, so consumers never special-case cold starts.
+//!
+//! # Invariants
+//!
+//! * A published [`CostsView`] is immutable — readers can never observe a
+//!   torn update, no matter how many publishes race past them.
+//! * `version` is strictly monotone across updates; `version == 0` is the
+//!   nominal-only view.
+//! * [`CostsView::speed`] is always positive (estimates are clamped at
+//!   the estimator; nominal factors are validated positive by config).
+//!
+//! [`SnapshotRegistry`]: crate::serve::SnapshotRegistry
+//! [`DeviceEstimator`]: super::estimator::DeviceEstimator
+
+use std::fmt;
+use std::sync::{Arc, RwLock};
+
+use super::estimator::DeviceEstimate;
+
+/// One immutable, versioned snapshot of the fleet's calibrated costs.
+#[derive(Clone, Debug)]
+pub struct CostsView {
+    /// Monotone update counter (0 = nominal-only, nothing calibrated yet).
+    pub version: u64,
+    /// Training/fleet clock of the most recent update folded in.
+    pub updated_clock: f64,
+    /// Roster-indexed configured speed factors — the fallback.
+    pub nominal: Vec<f64>,
+    /// Roster-indexed current estimates (None until a device has been
+    /// observed).
+    pub estimates: Vec<Option<DeviceEstimate>>,
+}
+
+impl CostsView {
+    /// Number of roster devices this view covers.
+    pub fn roster_len(&self) -> usize {
+        self.nominal.len()
+    }
+
+    /// Effective speed multiplier for `device`: the calibrated estimate
+    /// when one exists, the configured nominal factor otherwise.
+    pub fn speed(&self, device: usize) -> f64 {
+        match self.estimates[device] {
+            Some(e) => e.speed,
+            None => self.nominal[device],
+        }
+    }
+
+    /// Effective speed multipliers for the whole roster (estimate where
+    /// available, nominal elsewhere) — the drop-in replacement for a
+    /// `speed_factors` vector.
+    pub fn speeds(&self) -> Vec<f64> {
+        (0..self.nominal.len()).map(|d| self.speed(d)).collect()
+    }
+
+    /// The calibrated estimate for `device`, if any.
+    pub fn estimate(&self, device: usize) -> Option<DeviceEstimate> {
+        self.estimates[device]
+    }
+}
+
+/// Thread-safe holder of the current [`CostsView`]: one atomic pointer,
+/// clone-modify-swap updates.
+pub struct CalibratedCosts {
+    current: RwLock<Arc<CostsView>>,
+}
+
+impl fmt::Debug for CalibratedCosts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let v = self.current();
+        f.debug_struct("CalibratedCosts")
+            .field("version", &v.version)
+            .field("roster_len", &v.roster_len())
+            .finish()
+    }
+}
+
+impl CalibratedCosts {
+    /// A fresh view over `nominal` (roster-indexed configured speed
+    /// factors), version 0, no estimates.
+    pub fn new(nominal: Vec<f64>) -> CalibratedCosts {
+        assert!(!nominal.is_empty(), "calibrated costs need a non-empty roster");
+        assert!(nominal.iter().all(|&f| f > 0.0), "nominal speed factors must be positive");
+        let n = nominal.len();
+        CalibratedCosts {
+            current: RwLock::new(Arc::new(CostsView {
+                version: 0,
+                updated_clock: 0.0,
+                nominal,
+                estimates: vec![None; n],
+            })),
+        }
+    }
+
+    /// The current view (cheap: one `Arc` clone under a read lock).
+    pub fn current(&self) -> Arc<CostsView> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Current version without cloning the view.
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// Merge per-device estimate updates into a new view and swap it in.
+    /// Devices not mentioned keep their previous estimates, so concurrent
+    /// sessions observing disjoint device subsets compose instead of
+    /// clobbering each other. Returns the new version.
+    pub fn update_devices(&self, updates: &[(usize, DeviceEstimate)], clock: f64) -> u64 {
+        let mut guard = self.current.write().unwrap();
+        let mut next = (**guard).clone();
+        for &(d, e) in updates {
+            assert!(d < next.estimates.len(), "estimate update outside the roster");
+            next.estimates[d] = Some(e);
+        }
+        next.version += 1;
+        next.updated_clock = clock;
+        let version = next.version;
+        *guard = Arc::new(next);
+        version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(speed: f64) -> DeviceEstimate {
+        DeviceEstimate {
+            speed,
+            t_fixed: 300e-6,
+            slope: speed,
+            residual_rel: 0.01,
+            observations: 5,
+            drift_events: 0,
+        }
+    }
+
+    #[test]
+    fn falls_back_to_nominal_until_estimated() {
+        let costs = CalibratedCosts::new(vec![1.0, 1.1, 1.21, 1.32]);
+        let v = costs.current();
+        assert_eq!(v.version, 0);
+        assert_eq!(v.speeds(), vec![1.0, 1.1, 1.21, 1.32]);
+        assert!(v.estimate(2).is_none());
+    }
+
+    #[test]
+    fn updates_merge_and_version_monotonically() {
+        let costs = CalibratedCosts::new(vec![1.0, 1.1, 1.21, 1.32]);
+        assert_eq!(costs.update_devices(&[(0, est(1.5))], 1.0), 1);
+        // A second writer updating a disjoint device keeps device 0.
+        assert_eq!(costs.update_devices(&[(3, est(2.0))], 2.0), 2);
+        let v = costs.current();
+        assert_eq!(v.version, 2);
+        assert_eq!(v.updated_clock, 2.0);
+        assert_eq!(v.speed(0), 1.5);
+        assert_eq!(v.speed(1), 1.1, "unobserved device stays nominal");
+        assert_eq!(v.speed(3), 2.0);
+    }
+
+    #[test]
+    fn readers_hold_an_immutable_snapshot_across_swaps() {
+        let costs = CalibratedCosts::new(vec![1.0, 1.0]);
+        let before = costs.current();
+        costs.update_devices(&[(1, est(3.0))], 5.0);
+        assert_eq!(before.speed(1), 1.0, "the old Arc is untouched");
+        assert_eq!(costs.current().speed(1), 3.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! The what-if planner — re-score a dispatch plan under any speed vector
+//! without running a step.
+//!
+//! Given a [`DispatchPlan`] and roster-indexed speed multipliers (the
+//! configured nominals, or a [`CostsView`](super::view::CostsView)'s
+//! estimates), [`score_plan`] replays the plan's dispatch rule on
+//! *predicted* per-batch times and reports the makespan and per-device
+//! update counts it would produce. `experiment calibration` uses the
+//! nominal-vs-estimated pair to show how far the static cost assumptions
+//! have drifted from what the calibration plane measures; operators can
+//! use the same comparison to sanity-check a plan before committing a
+//! long run to it.
+//!
+//! # Invariants
+//!
+//! * Scoring is a pure function — no engine, no model state, no clock —
+//!   and replays *calibrated* dispatch exactly: earliest predicted
+//!   completion under the given speed vector
+//!   ([`next_completion_device`]), ties toward the lower slot. With
+//!   uniform per-slot costs this reduces to the earliest-free rule, so a
+//!   score difference always traces to the speed vector, never to
+//!   simulation skew.
+//! * Predicted per-batch cost charges the full padded bucket (as the
+//!   engines do) at the plan's expected nnz; partial tail batches are
+//!   charged like full ones, a deliberate over-estimate of at most one
+//!   batch per device.
+
+use crate::coordinator::dispatch::next_completion_device;
+use crate::coordinator::plan::{DispatchMode, DispatchPlan};
+use crate::runtime::CostModel;
+
+/// Predicted outcome of one mega-batch under a given speed vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanScore {
+    /// Predicted makespan: when the slowest device reaches the barrier.
+    pub wall: f64,
+    /// Predicted per-slot update counts (parallel to `plan.device_ids`).
+    pub updates: Vec<u64>,
+    /// Predicted per-slot sample counts (parallel to `plan.device_ids`).
+    pub samples: Vec<u64>,
+    /// Update balance: max/min predicted per-device update count (1.0 is
+    /// perfect; `INFINITY` when a device would get no work at all).
+    pub balance: f64,
+}
+
+/// Replay `plan`'s dispatch rule on predicted per-batch times.
+/// `speeds` is roster-indexed (the same order as `DevicePool::roster`);
+/// only the plan's active devices are read.
+pub fn score_plan(plan: &DispatchPlan, speeds: &[f64], cost: &CostModel) -> PlanScore {
+    let g = plan.devices();
+    assert!(g > 0, "cannot score a plan with no active devices");
+    assert!(
+        plan.device_ids.iter().all(|&d| d < speeds.len()),
+        "plan device outside the speed vector"
+    );
+    // Predicted seconds for one full batch on each active slot.
+    let secs: Vec<f64> = plan
+        .device_ids
+        .iter()
+        .zip(&plan.batch_sizes)
+        .map(|(&d, &b)| {
+            speeds[d] * cost.step_time_parts(b, (plan.nnz_estimate * b as f64) as usize)
+        })
+        .collect();
+
+    let mut free = vec![0.0f64; g];
+    let mut updates = vec![0u64; g];
+    let mut samples = vec![0u64; g];
+    match plan.mode {
+        DispatchMode::Dynamic => {
+            let mut remaining = plan.sample_budget;
+            while remaining > 0 {
+                // The calibrated engine's rule, on these predicted costs.
+                let slot = next_completion_device(&free, 0.0, &secs, |_| true)
+                    .expect("plan has at least one active device");
+                let valid = plan.batch_sizes[slot].min(remaining);
+                remaining -= valid;
+                free[slot] += secs[slot];
+                updates[slot] += 1;
+                samples[slot] += valid as u64;
+            }
+        }
+        DispatchMode::StaticQuota { batches_per_device } => {
+            for slot in 0..g {
+                updates[slot] = batches_per_device as u64;
+                samples[slot] = (batches_per_device * plan.batch_sizes[slot]) as u64;
+                free[slot] = batches_per_device as f64 * secs[slot];
+            }
+        }
+    }
+    let wall = free.iter().copied().fold(0.0, f64::max);
+    let hi = updates.iter().copied().max().unwrap_or(0);
+    let lo = updates.iter().copied().min().unwrap_or(0);
+    let balance = if hi == 0 {
+        1.0
+    } else if lo == 0 {
+        f64::INFINITY
+    } else {
+        hi as f64 / lo as f64
+    };
+    PlanScore { wall, updates, samples, balance }
+}
+
+/// Score the same plan under the nominal and the estimated speed vectors
+/// — the "how wrong were the static assumptions" comparison.
+pub fn compare(
+    plan: &DispatchPlan,
+    nominal: &[f64],
+    estimated: &[f64],
+    cost: &CostModel,
+) -> (PlanScore, PlanScore) {
+    (score_plan(plan, nominal, cost), score_plan(plan, estimated, cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_dynamic(g: usize, b: usize, budget: usize) -> DispatchPlan {
+        DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: (0..g).collect(),
+            batch_sizes: vec![b; g],
+            lrs: vec![0.05; g],
+            sample_budget: budget,
+            crossbow_rate: None,
+            nnz_estimate: 12.0,
+            predicted_step_secs: None,
+        }
+    }
+
+    #[test]
+    fn uniform_speeds_balance_perfectly() {
+        let s = score_plan(&plan_dynamic(4, 32, 4 * 32 * 10), &[1.0; 4], &CostModel::default());
+        assert_eq!(s.updates, vec![10, 10, 10, 10]);
+        assert_eq!(s.balance, 1.0);
+        assert_eq!(s.samples.iter().sum::<u64>(), 4 * 32 * 10);
+        assert!(s.wall > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_speeds_skew_updates_and_equal_batches_unbalance() {
+        let speeds = [1.0, 1.0, 1.0, 2.0];
+        let s = score_plan(&plan_dynamic(4, 32, 4 * 32 * 10), &speeds, &CostModel::default());
+        assert!(s.updates[0] > s.updates[3], "{:?}", s.updates);
+        assert!(s.balance > 1.3, "equal batches on a 2x-slow device unbalance: {}", s.balance);
+        // Sample conservation holds regardless of the speed vector.
+        assert_eq!(s.samples.iter().sum::<u64>(), 4 * 32 * 10);
+    }
+
+    #[test]
+    fn speed_matched_batch_sizes_rebalance_the_score() {
+        // Half the batch on the 2x-slow device ≈ equal per-batch time.
+        let mut plan = plan_dynamic(4, 64, 4 * 64 * 8);
+        plan.batch_sizes = vec![64, 64, 64, 32];
+        let speeds = [1.0, 1.0, 1.0, 2.0];
+        let balanced = score_plan(&plan, &speeds, &CostModel::default());
+        let naive = score_plan(&plan_dynamic(4, 64, 4 * 64 * 8), &speeds, &CostModel::default());
+        assert!(
+            balanced.balance < naive.balance,
+            "calibrated sizes must score closer to balance: {} vs {}",
+            balanced.balance,
+            naive.balance
+        );
+    }
+
+    #[test]
+    fn static_quota_wall_is_the_slowest_device() {
+        let plan = DispatchPlan {
+            mode: DispatchMode::StaticQuota { batches_per_device: 5 },
+            device_ids: vec![0, 1],
+            batch_sizes: vec![32, 32],
+            lrs: vec![0.05; 2],
+            sample_budget: 0,
+            crossbow_rate: None,
+            nnz_estimate: 12.0,
+            predicted_step_secs: None,
+        };
+        let cost = CostModel::default();
+        let s = score_plan(&plan, &[1.0, 2.0], &cost);
+        assert_eq!(s.updates, vec![5, 5]);
+        assert_eq!(s.balance, 1.0);
+        let per_batch = cost.step_time_parts(32, (12.0 * 32.0) as usize);
+        assert!((s.wall - 5.0 * 2.0 * per_batch).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_pairs_nominal_and_estimated() {
+        let plan = plan_dynamic(2, 32, 2 * 32 * 6);
+        let (a, b) = compare(&plan, &[1.0, 1.0], &[1.0, 3.0], &CostModel::default());
+        assert_eq!(a.balance, 1.0);
+        assert!(b.balance > a.balance);
+        assert!(b.wall > a.wall, "a slower fleet predicts a longer mega-batch");
+    }
+}

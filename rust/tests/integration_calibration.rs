@@ -1,0 +1,261 @@
+//! Integration tests for the online cost-model calibration plane: the
+//! estimator against the real heterogeneity model, step-drift detection,
+//! dispatch conservation under calibrated scheduling + pool churn, the
+//! static-vs-calibrated rebalancing claim, and the bit-for-bit guarantee
+//! that a disabled `[calibration]` block changes nothing.
+
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::data::PaddedBatch;
+use heterosparse::metrics::RunLog;
+use heterosparse::runtime::{CostModel, SimDevice};
+use heterosparse::tuning::{DeviceEstimator, EstimatorConfig, Observation};
+
+fn small_cfg(g: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 10,
+        initial_batch: 32,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: g,
+        speed_factors: vec![1.0; g],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1500, test_samples: 300, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run(cfg: &Config) -> RunLog {
+    let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+    let backend = RefBackend;
+    let engine =
+        Box::new(SimEngine::new(&backend, DevicePool::roster(cfg), CostModel::default()));
+    let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+    trainer.run(&train, &test).unwrap()
+}
+
+fn device_obs(dev: &mut SimDevice, cost: &CostModel, bucket: usize, nnz: usize) -> Observation {
+    let mut b = PaddedBatch::with_shape(bucket, 4, 2);
+    b.valid = bucket;
+    b.nnz = nnz;
+    Observation {
+        bucket,
+        nnz_per_batch: nnz as f64,
+        secs_per_batch: dev.step_duration(cost, &b),
+    }
+}
+
+#[test]
+fn estimator_converges_to_a_scripted_true_cost() {
+    // A zero-jitter device at factor 1.21 with a 1.5x scripted drift: the
+    // true effective speed is 1.815, and the estimator must land within
+    // tolerance from a handful of mega-batch observations.
+    let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+    let cost = CostModel::default();
+    let mut dev = SimDevice::new(2, &cfg); // factor 1.21
+    dev.set_drift(1.5);
+    let mut est = DeviceEstimator::new(EstimatorConfig::default(), cost);
+    for i in 0..10 {
+        let bucket = 16 + 8 * (i % 3);
+        let obs = device_obs(&mut dev, &cost, bucket, bucket * 6);
+        est.observe(obs);
+    }
+    let e = est.estimate().expect("estimator has observations");
+    let truth = 1.21 * 1.5;
+    assert!(
+        (e.speed - truth).abs() < 0.05 * truth,
+        "estimated {} vs true {truth}",
+        e.speed
+    );
+    assert!(e.residual_rel < 0.02, "zero-jitter fit must be near-exact: {}", e.residual_rel);
+    assert_eq!(e.drift_events, 0, "a constant device has no step drift");
+}
+
+#[test]
+fn step_drift_is_detected_within_the_configured_window() {
+    let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+    let cost = CostModel::default();
+    let mut dev = SimDevice::new(0, &cfg); // factor 1.0
+    let ecfg = EstimatorConfig { step_obs: 2, ..Default::default() };
+    let mut est = DeviceEstimator::new(ecfg, cost);
+    for _ in 0..6 {
+        let obs = device_obs(&mut dev, &cost, 32, 32 * 6);
+        assert!(!est.observe(obs), "steady device must not trip the detector");
+    }
+    // The device throttles 1.8x: detection must land within step_obs
+    // post-change observations, and the fast re-estimate is already at
+    // the new speed.
+    dev.set_drift(1.8);
+    let mut fired_after = None;
+    for k in 1..=4 {
+        let obs = device_obs(&mut dev, &cost, 32, 32 * 6);
+        if est.observe(obs) {
+            fired_after = Some(k);
+            break;
+        }
+    }
+    assert_eq!(fired_after, Some(2), "step drift must fire after exactly step_obs outliers");
+    assert_eq!(est.drift_events(), 1);
+    let e = est.estimate().unwrap();
+    assert!((e.speed - 1.8).abs() < 0.1, "fast re-estimate at the new speed: {}", e.speed);
+}
+
+#[test]
+fn calibrated_scheduling_rebalances_updates_under_a_throttle() {
+    // Homogeneous 4-device fleet; device 0 throttles 2.5x at mega-batch 3
+    // and stays throttled. The static run's batch sizes never change (the
+    // stability controller sees a settled grid and keeps Algorithm 1
+    // paused), so its update counts stay skewed ~2.5x. The calibrated run
+    // detects the step within one window and re-seeds the batch grid from
+    // the estimates.
+    let mut cfg = small_cfg(4);
+    cfg.calibration.events = vec!["at_mb=3 device=0 factor=2.5".to_string()];
+    cfg.calibration.step_obs = 1;
+    cfg.validate().unwrap();
+    let static_log = run(&cfg);
+
+    let mut cal = cfg.clone();
+    cal.calibration.enabled = true;
+    cal.validate().unwrap();
+    let cal_log = run(&cal);
+
+    // Same physical scenario: both runs slow down after the throttle.
+    assert_eq!(static_log.rows.len(), 10);
+    assert_eq!(cal_log.rows.len(), 10);
+
+    // Post-detection window: mega-batches 5..10.
+    let b_static = static_log.window_balance(5, 10);
+    let b_cal = cal_log.window_balance(5, 10);
+    assert!(b_static > 1.8, "static scheduling stays skewed: {b_static}");
+    assert!(b_cal < 1.6, "calibrated scheduling rebalances: {b_cal}");
+    assert!(b_cal < b_static, "calibrated must beat static: {b_cal} vs {b_static}");
+
+    // The estimate tracked the throttle and the grid re-seeded.
+    let last = cal_log.rows.last().unwrap();
+    assert!(
+        (last.cost_speed[0] - 2.5).abs() < 0.3,
+        "device 0 estimate tracks the drift: {}",
+        last.cost_speed[0]
+    );
+    assert!((last.cost_speed[1] - 1.0).abs() < 0.1, "unthrottled device stays nominal");
+    assert!(
+        last.batch_sizes[0] < last.batch_sizes[1],
+        "throttled device runs smaller batches: {:?}",
+        last.batch_sizes
+    );
+
+    // Sample conservation holds in both schedules.
+    for log in [&static_log, &cal_log] {
+        let expect = (cfg.sgd.mega_batch_samples() * cfg.sgd.num_mega_batches) as u64;
+        assert_eq!(log.rows.last().unwrap().samples, expect);
+    }
+}
+
+#[test]
+fn calibrated_dispatch_preserves_conservation_under_churn() {
+    // Calibration on, plus elastic churn: device 0 leaves at mb 2 and
+    // returns at mb 4, while device 1 throttles. Budgets must land
+    // exactly, inactive devices must do no work, and the whole run must
+    // be bit-reproducible.
+    let mut cfg = small_cfg(4);
+    cfg.calibration.enabled = true;
+    cfg.calibration.events = vec!["at_mb=1 device=1 factor=2.0".to_string()];
+    cfg.elastic.events =
+        vec!["at_mb=2 remove_id=0".to_string(), "at_mb=4 add_id=0".to_string()];
+    cfg.validate().unwrap();
+
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.clock, y.clock, "calibrated runs stay deterministic");
+        assert_eq!(x.loss, y.loss);
+        assert_eq!(x.updates, y.updates);
+        assert_eq!(x.cost_speed, y.cost_speed);
+    }
+
+    let expect = (cfg.sgd.mega_batch_samples() * cfg.sgd.num_mega_batches) as u64;
+    assert_eq!(a.rows.last().unwrap().samples, expect, "budget conserved across churn");
+    assert_eq!(a.device_counts(), vec![4, 4, 3, 3, 4, 4, 4, 4, 4, 4]);
+    for r in &a.rows {
+        for d in 0..4 {
+            if !r.active_devices.contains(&d) {
+                assert_eq!(r.updates[d], 0, "inactive device did work at mb {}", r.mega_batch);
+            }
+        }
+    }
+    // The throttled device's estimate shows up in the telemetry rows.
+    let last = a.rows.last().unwrap();
+    assert!((last.cost_speed[1] - 2.0).abs() < 0.25, "estimate {}", last.cost_speed[1]);
+}
+
+#[test]
+fn disabled_calibration_reproduces_static_results_bit_for_bit() {
+    // The acceptance gate: with `enabled = false` the plane is inert —
+    // whatever the other knobs say, the run is bit-identical to a config
+    // that never mentioned [calibration].
+    let base = small_cfg(2);
+    let plain = run(&base);
+
+    let mut knobs = base.clone();
+    knobs.calibration.enabled = false;
+    knobs.calibration.window = 12;
+    knobs.calibration.alpha = 1.0;
+    knobs.calibration.step_threshold = 0.01;
+    knobs.calibration.step_obs = 1;
+    knobs.validate().unwrap();
+    let inert = run(&knobs);
+
+    assert_eq!(plain.rows.len(), inert.rows.len());
+    for (x, y) in plain.rows.iter().zip(&inert.rows) {
+        assert_eq!(x.clock, y.clock);
+        assert_eq!(x.loss, y.loss);
+        assert_eq!(x.accuracy, y.accuracy);
+        assert_eq!(x.batch_sizes, y.batch_sizes);
+        assert_eq!(x.updates, y.updates);
+        assert!(x.cost_speed.iter().all(|&s| s == 0.0), "no estimates when disabled");
+        assert!(y.cost_speed.iter().all(|&s| s == 0.0));
+    }
+}
+
+#[test]
+fn drift_trace_applies_even_with_calibration_disabled() {
+    // The trace is the physical scenario, not the policy: a disabled
+    // plane still runs it, and dynamic dispatch visibly shifts work away
+    // from the throttled device.
+    let mut cfg = small_cfg(4);
+    cfg.calibration.events = vec!["at_mb=3 device=0 factor=3.0".to_string()];
+    cfg.validate().unwrap();
+    let log = run(&cfg);
+    let before = log.rows[1].updates[0];
+    let after = log.rows[5].updates[0];
+    assert!(
+        after < before,
+        "throttled device must win fewer batches: {before} -> {after}"
+    );
+    // And the clock slows down relative to an undrifted run.
+    let undrifted = run(&small_cfg(4));
+    assert!(
+        log.rows.last().unwrap().clock > undrifted.rows.last().unwrap().clock,
+        "a throttled fleet takes longer"
+    );
+}

@@ -121,6 +121,7 @@ fn prop_dynamic_routing_conserves_budget() {
             sample_budget: *budget as usize,
             crossbow_rate: None,
             nnz_estimate: 3.0,
+            predicted_step_secs: None,
         };
         let report = engine
             .run_mega_batch(&mut replicas, &plane, &plan)
@@ -312,6 +313,7 @@ fn threaded_engine_surfaces_worker_failure() {
         sample_budget: 200,
         crossbow_rate: None,
         nnz_estimate: 3.0,
+        predicted_step_secs: None,
     };
     let err = engine
         .run_mega_batch(&mut replicas, &plane, &plan)
