@@ -13,7 +13,11 @@
 //!     mega-batch overhead the elastic pool adds to the hot path),
 //!   * serving plane: snapshot publish/hot-swap/read cost and admission
 //!     batch-formation throughput — recorded to `BENCH_serve.json`
-//!     (`HS_BENCH_SERVE_OUT` overrides the path).
+//!     (`HS_BENCH_SERVE_OUT` overrides the path),
+//!   * adaptive-sparsity lever: LSH build/query throughput, active-set
+//!     step cost down the ratio ladder, pooled-vs-fresh step scratch —
+//!     recorded to `BENCH_slide.json` (`HS_BENCH_SLIDE_OUT` overrides
+//!     the path).
 
 use std::sync::Arc;
 
@@ -25,8 +29,11 @@ use heterosparse::fleet::{
 use heterosparse::data::batcher::{Batcher, PaddedBatch};
 use heterosparse::data::pipeline::{BufferPool, DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
+use heterosparse::model::reference::{sgd_step_ref, sgd_step_scratch, StepScratch};
 use heterosparse::model::ModelState;
 use heterosparse::runtime::{CostModel, Runtime};
+use heterosparse::slide::lsh::LshTables;
+use heterosparse::slide::SparseStepper;
 use heterosparse::serve::{Admission, SnapshotRegistry};
 use heterosparse::tuning::{
     score_plan, CalibratedCosts, DeviceEstimator, EstimatorConfig, Observation,
@@ -185,6 +192,7 @@ fn main() {
             bucket: b,
             nnz_per_batch: nnz,
             secs_per_batch: 1.2 * nominal_cost.step_time_parts(b, nnz as usize),
+            ratio: 1.0,
         });
         est.estimate()
     });
@@ -223,6 +231,62 @@ fn main() {
         "perf_hotpath/calibration",
         &cal_results,
     );
+
+    // ---- adaptive-sparsity lever: LSH tables + active-set kernels ----------
+    // Build amortizes over `rebuild_every` steps and query sits inside
+    // every sparse step, so both must stay far below a dense step; the
+    // ratio ladder is the compute knob itself — its cost curve is what the
+    // scheduler trades against batch size.
+    let mut slide_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let slide_sec = cfg.slide.clone();
+    let mut slide_model = ModelState::init(&cfg.model, 11);
+    let r = bench_fn("slide/lsh_build(w2)", 3, 30, || {
+        LshTables::build(&slide_model, slide_sec.tables, slide_sec.bits, 7)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.1} builds/s)");
+    slide_results.push(("lsh_build".to_string(), r, per_sec));
+
+    let tables = LshTables::build(&slide_model, slide_sec.tables, slide_sec.bits, 7);
+    let probe: Vec<f32> = (0..cfg.model.hidden).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut hits: Vec<u32> = Vec::new();
+    let r = bench_fn("slide/lsh_query(hidden)", 10, 2000, || {
+        tables.query_into(&probe, &mut hits);
+        hits.len()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({:.0} kqueries/s)", per_sec / 1e3);
+    slide_results.push(("lsh_query".to_string(), r, per_sec));
+
+    let step_batch = batcher.next_batch(128, 128);
+    let mut scratch = StepScratch::new();
+    for ratio in [1.0f64, 0.25, 0.05] {
+        let mut stepper = SparseStepper::new(&slide_sec, 99);
+        stepper.set_ratio(ratio);
+        let name = format!("slide/step(b=128, ratio={ratio})");
+        let r = bench_fn(&name, 3, 30, || {
+            stepper.step(&mut slide_model, &step_batch, 0.01, &mut scratch)
+        });
+        let per_sec = r.throughput(128.0);
+        println!("{r}  ({:.1} ksamples/s)", per_sec / 1e3);
+        slide_results.push((format!("step_ratio_{ratio}"), r, per_sec));
+    }
+
+    // Pooled vs fresh step buffers: the delta is the allocation the
+    // StepScratch pool removes from every engine/serve step.
+    let r = bench_fn("slide/step_scratch_pooled(b=128)", 3, 30, || {
+        sgd_step_scratch(&mut slide_model, &step_batch, 0.01, &mut scratch)
+    });
+    let per_sec = r.throughput(128.0);
+    println!("{r}  ({:.1} ksamples/s)", per_sec / 1e3);
+    slide_results.push(("step_scratch_pooled".to_string(), r, per_sec));
+    let r = bench_fn("slide/step_scratch_fresh(b=128)", 3, 30, || {
+        sgd_step_ref(&mut slide_model, &step_batch, 0.01)
+    });
+    let per_sec = r.throughput(128.0);
+    println!("{r}  ({:.1} ksamples/s)", per_sec / 1e3);
+    slide_results.push(("step_scratch_fresh".to_string(), r, per_sec));
+    append_baseline("BENCH_slide.json", "HS_BENCH_SLIDE_OUT", "perf_hotpath/slide", &slide_results);
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

@@ -1,0 +1,78 @@
+//! The adaptive-sparsity compute lever: when a device throttles past what
+//! batch scaling can absorb, the scheduler shrinks its LSH active-class
+//! ratio instead of letting it straggle.
+//!
+//! Four homogeneous simulated devices train adaptive SGD with the
+//! calibration plane and the `[slide]` lever both on. A scripted trace
+//! throttles device 0 to 10× a third of the way in — so hard that the
+//! equal-time batch size falls below `b_min` and the batch knob alone
+//! cannot rebalance. The printed trace shows the joint re-targeting: the
+//! batch grid shrinks to the floor AND the throttled device walks down
+//! the sparsity ratio ladder, its per-step active-class count dropping
+//! with it, while per-device update counts stay near-equal.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_sparsity
+//! ```
+
+use heterosparse::config::Config;
+use heterosparse::coordinator::trainer::TrainerOptions;
+use heterosparse::harness::{run_single, Backend};
+use heterosparse::runtime::CostModel;
+use heterosparse::tuning::multiplier_at;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.data.train_samples = 8_000;
+    cfg.data.test_samples = 1_000;
+    cfg.sgd.lr_bmax = 0.3;
+    cfg.sgd.num_mega_batches = 12;
+    cfg.devices.speed_factors = vec![1.0; 4];
+    cfg.devices.jitter = 0.0; // keep the printed trace crisp
+    let throttle_at = 4;
+    let recover_at = 8;
+    cfg.calibration.enabled = true;
+    cfg.calibration.step_obs = 1;
+    cfg.calibration.events = vec![
+        format!("at_mb={throttle_at} device=0 factor=10.0 ramp=1"),
+        format!("at_mb={recover_at} device=0 factor=1.0 ramp=1"),
+    ];
+    cfg.slide.adaptive = true; // arm the sparsity lever
+    cfg.validate()?;
+    let trace = cfg.calibration.parsed_events()?;
+
+    // The lever's cost curve: predicted per-step time on the throttled
+    // device down the configured ratio ladder.
+    let cost = CostModel::default();
+    let b = cfg.sgd.b_max;
+    let nnz = (cfg.data.avg_nnz * b as f64) as usize;
+    println!("per-step cost on the 10x-throttled device, down the ratio ladder:");
+    for r in cfg.slide.ratio_ladder() {
+        let ms = 10.0 * cost.step_time_parts_at(b, nnz, r) * 1e3;
+        println!("  ratio {r:>4.2}  ->  {ms:>7.3} ms");
+    }
+    println!();
+
+    let log = run_single(&cfg, Backend::Auto, TrainerOptions::default())?;
+
+    println!("mega-batch  drift d0  batch grid          ratio d0  act d0  updates             P@1");
+    for r in &log.rows {
+        println!(
+            "{:>10}  {:>8.2}  {:<18}  {:>8.2}  {:>6.0}  {:<18}  {:.4}",
+            r.mega_batch,
+            multiplier_at(&trace, 0, r.mega_batch),
+            format!("{:?}", r.batch_sizes),
+            r.sparsity_ratio[0],
+            r.active_classes[0],
+            format!("{:?}", r.updates),
+            r.accuracy,
+        );
+    }
+    println!(
+        "\nrun update balance (max/min per-device updates, 1.0 = ideal): {:.2}",
+        log.update_balance()
+    );
+    let clock = log.rows.last().map(|r| r.clock).unwrap_or(0.0);
+    println!("final P@1 {:.4} over {clock:.2}s of virtual training", log.final_accuracy());
+    Ok(())
+}

@@ -279,6 +279,12 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         "calibration" => {
             experiments::calibration(p.profile, p.backend)?;
         }
+        "slide" => {
+            // Same convention as fleet: explicit config input drives the
+            // scenario; bare invocations get the bench-scale setup.
+            let base = p.had_config.then_some(&p.cfg);
+            experiments::slide(p.profile, p.backend, base)?;
+        }
         other => bail!(
             "experiment '{other}' is registered but has no dispatch arm — update \
              cli::cmd_experiment alongside harness::experiments::EXPERIMENTS"

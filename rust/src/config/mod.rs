@@ -388,6 +388,7 @@ pub struct Config {
     pub serve: ServeConfig,
     pub fleet: FleetConfig,
     pub calibration: CalibrationConfig,
+    pub slide: SlideConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -714,6 +715,87 @@ impl CalibrationConfig {
     }
 }
 
+/// The unified `[slide]` block: LSH active-class training — both the
+/// standalone Fig. 8 CPU baseline (`slide::SlideTrainer`) and the
+/// adaptive-sparsity compute lever the coordinator schedules
+/// (`slide::SparseStepper`). One block so the two paths cannot drift.
+///
+/// With `adaptive = false` (the default) every training device runs the
+/// exact dense step (`ratio = 1.0`, bit-identical to `sgd_step_ref`), and
+/// serving stays exact unless `serve_slo_ms` engages — existing configs
+/// see zero behavior change.
+#[derive(Clone, Debug)]
+pub struct SlideConfig {
+    /// Hogwild trainer threads (standalone baseline only).
+    pub threads: usize,
+    /// Baseline learning rate; 0 = derive `sgd.lr_bmax / 4` (the
+    /// historical Fig. 8 choice).
+    pub lr: f64,
+    /// LSH tables and bits per table (1..=31).
+    pub tables: usize,
+    pub bits: usize,
+    /// Random negative classes added to every active set (>= 1).
+    pub random_negatives: usize,
+    /// Rebuild the LSH tables every this many updates/steps (>= 1) — the
+    /// staleness bound of the candidate structure.
+    pub rebuild_every: u64,
+    pub seed: u64,
+    /// Let batch scaling trade sparsity against batch size on slow
+    /// devices (the tentpole lever; default off).
+    pub adaptive: bool,
+    /// Floor of the per-device sparsity ratio ladder, in (0, 1].
+    pub min_ratio: f64,
+    /// Ladder decrement per rung, in (0, 1): rungs are
+    /// 1.0, 1.0 - step, 1.0 - 2·step, ..., min_ratio.
+    pub ratio_step: f64,
+    /// Merge-weight gradient-quality exponent: a device at ratio r gets
+    /// its merge weight scaled by r^quality_discount (>= 0; 0 = no
+    /// discount).
+    pub quality_discount: f64,
+    /// Sparsity ratio serve replicas drop to in approximate mode,
+    /// in (0, 1].
+    pub serve_ratio: f64,
+    /// Serve latency SLO in milliseconds; replicas switch to approximate
+    /// LSH top-k when windowed p95 nears this, back to exact when idle.
+    /// 0 disables the switch (always exact).
+    pub serve_slo_ms: f64,
+}
+
+impl Default for SlideConfig {
+    fn default() -> Self {
+        SlideConfig {
+            threads: 4,
+            lr: 0.0,
+            tables: 8,
+            bits: 9,
+            random_negatives: 16,
+            rebuild_every: 2_000,
+            seed: 33,
+            adaptive: false,
+            min_ratio: 0.05,
+            ratio_step: 0.25,
+            quality_discount: 0.5,
+            serve_ratio: 0.25,
+            serve_slo_ms: 0.0,
+        }
+    }
+}
+
+impl SlideConfig {
+    /// The sparsity ladder scaling walks down: `1.0, 1.0 - ratio_step,
+    /// ...` clamped to end exactly at `min_ratio`. Strictly decreasing.
+    pub fn ratio_ladder(&self) -> Vec<f64> {
+        let mut ladder = Vec::new();
+        let mut r = 1.0;
+        while r > self.min_ratio {
+            ladder.push(r);
+            r -= self.ratio_step;
+        }
+        ladder.push(self.min_ratio);
+        ladder
+    }
+}
+
 impl Config {
     /// Load from a TOML file then apply `--section.key=value` overrides.
     pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
@@ -917,6 +999,22 @@ impl Config {
                 v.as_str_arr().context("calibration.events must be a string array")?;
         }
 
+        usize_of(map, "slide.threads", &mut cfg.slide.threads)?;
+        f64_of(map, "slide.lr", &mut cfg.slide.lr)?;
+        usize_of(map, "slide.tables", &mut cfg.slide.tables)?;
+        usize_of(map, "slide.bits", &mut cfg.slide.bits)?;
+        usize_of(map, "slide.random_negatives", &mut cfg.slide.random_negatives)?;
+        u64_of(map, "slide.rebuild_every", &mut cfg.slide.rebuild_every)?;
+        u64_of(map, "slide.seed", &mut cfg.slide.seed)?;
+        if let Some(v) = map.get("slide.adaptive") {
+            cfg.slide.adaptive = v.as_bool().context("slide.adaptive must be a bool")?;
+        }
+        f64_of(map, "slide.min_ratio", &mut cfg.slide.min_ratio)?;
+        f64_of(map, "slide.ratio_step", &mut cfg.slide.ratio_step)?;
+        f64_of(map, "slide.quality_discount", &mut cfg.slide.quality_discount)?;
+        f64_of(map, "slide.serve_ratio", &mut cfg.slide.serve_ratio)?;
+        f64_of(map, "slide.serve_slo_ms", &mut cfg.slide.serve_slo_ms)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -1103,6 +1201,40 @@ impl Config {
                     ev.device
                 );
             }
+        }
+        let sl = &self.slide;
+        if sl.threads == 0 {
+            bail!("slide.threads must be >= 1");
+        }
+        if sl.lr < 0.0 {
+            bail!("slide.lr must be >= 0 (0 = derive from sgd.lr_bmax)");
+        }
+        if sl.tables == 0 {
+            bail!("slide.tables must be >= 1");
+        }
+        if sl.bits == 0 || sl.bits > 31 {
+            bail!("slide.bits must be in 1..=31 (got {})", sl.bits);
+        }
+        if sl.random_negatives == 0 {
+            bail!("slide.random_negatives must be >= 1 (a lone label has zero gradient)");
+        }
+        if sl.rebuild_every == 0 {
+            bail!("slide.rebuild_every must be >= 1");
+        }
+        if !(sl.min_ratio > 0.0 && sl.min_ratio <= 1.0) {
+            bail!("slide.min_ratio must be in (0, 1]");
+        }
+        if !(sl.ratio_step > 0.0 && sl.ratio_step < 1.0) {
+            bail!("slide.ratio_step must be in (0, 1)");
+        }
+        if sl.quality_discount < 0.0 {
+            bail!("slide.quality_discount must be >= 0");
+        }
+        if !(sl.serve_ratio > 0.0 && sl.serve_ratio <= 1.0) {
+            bail!("slide.serve_ratio must be in (0, 1]");
+        }
+        if sl.serve_slo_ms < 0.0 {
+            bail!("slide.serve_slo_ms must be >= 0 (0 = always exact)");
         }
         Ok(())
     }
@@ -1397,6 +1529,60 @@ mod tests {
             ("calibration.events".into(), "[\"at_mb=1 device=4 factor=2\"]".into()),
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn slide_section_parses_and_validates() {
+        let cfg = Config::from_overrides(&[
+            ("slide.threads".into(), "2".into()),
+            ("slide.lr".into(), "0.2".into()),
+            ("slide.tables".into(), "4".into()),
+            ("slide.bits".into(), "7".into()),
+            ("slide.random_negatives".into(), "8".into()),
+            ("slide.rebuild_every".into(), "64".into()),
+            ("slide.seed".into(), "17".into()),
+            ("slide.adaptive".into(), "true".into()),
+            ("slide.min_ratio".into(), "0.1".into()),
+            ("slide.ratio_step".into(), "0.3".into()),
+            ("slide.quality_discount".into(), "1.0".into()),
+            ("slide.serve_ratio".into(), "0.5".into()),
+            ("slide.serve_slo_ms".into(), "40".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.slide.threads, 2);
+        assert_eq!(cfg.slide.bits, 7);
+        assert_eq!(cfg.slide.rebuild_every, 64);
+        assert!(cfg.slide.adaptive);
+        assert_eq!(cfg.slide.serve_slo_ms, 40.0);
+        // Defaults: the lever is inert (exact dense everywhere).
+        let d = Config::default();
+        assert!(!d.slide.adaptive);
+        assert_eq!(d.slide.serve_slo_ms, 0.0);
+        assert_eq!(d.slide.lr, 0.0, "0 = derive from sgd.lr_bmax");
+
+        // Ladder: strictly decreasing from 1.0 to exactly min_ratio.
+        let ladder = cfg.slide.ratio_ladder();
+        assert_eq!(ladder.first(), Some(&1.0));
+        assert_eq!(ladder.last(), Some(&0.1));
+        assert!(ladder.windows(2).all(|w| w[0] > w[1]), "{ladder:?}");
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("slide.threads", "0");
+        reject("slide.lr", "-0.1");
+        reject("slide.tables", "0");
+        reject("slide.bits", "0");
+        reject("slide.bits", "32");
+        reject("slide.random_negatives", "0");
+        reject("slide.rebuild_every", "0");
+        reject("slide.min_ratio", "0");
+        reject("slide.min_ratio", "1.5");
+        reject("slide.ratio_step", "0");
+        reject("slide.ratio_step", "1.0");
+        reject("slide.quality_discount", "-1");
+        reject("slide.serve_ratio", "0");
+        reject("slide.serve_slo_ms", "-5");
     }
 
     #[test]

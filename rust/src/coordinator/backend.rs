@@ -15,9 +15,38 @@ use crate::Result;
 
 /// One SGD step / one eval pass. `step` returns (loss, real execution
 /// seconds) — engines combine the latter with the heterogeneity model.
+///
+/// The `_scratch` variants let callers that step in a loop (both engines,
+/// the serve replay) reuse one [`reference::StepScratch`] across calls
+/// instead of allocating per step. Backends whose buffers live elsewhere
+/// (PJRT holds device memory) ignore the scratch and delegate to the
+/// plain methods — the defaults here — so the variants are always safe to
+/// call and bit-identical to the originals.
 pub trait StepBackend {
     fn step(&self, model: &mut ModelState, batch: &PaddedBatch, lr: f32) -> Result<(f32, f64)>;
     fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>>;
+
+    /// [`step`](StepBackend::step) with caller-pooled buffers.
+    fn step_scratch(
+        &self,
+        model: &mut ModelState,
+        batch: &PaddedBatch,
+        lr: f32,
+        _scratch: &mut reference::StepScratch,
+    ) -> Result<(f32, f64)> {
+        self.step(model, batch, lr)
+    }
+
+    /// [`eval`](StepBackend::eval) with caller-pooled buffers.
+    fn eval_scratch(
+        &self,
+        model: &ModelState,
+        batch: &PaddedBatch,
+        _scratch: &mut reference::StepScratch,
+    ) -> Result<Vec<i32>> {
+        self.eval(model, batch)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -59,6 +88,27 @@ impl StepBackend for RefBackend {
 
     fn eval(&self, model: &ModelState, batch: &PaddedBatch) -> Result<Vec<i32>> {
         Ok(reference::eval_ref(model, batch))
+    }
+
+    fn step_scratch(
+        &self,
+        model: &mut ModelState,
+        batch: &PaddedBatch,
+        lr: f32,
+        scratch: &mut reference::StepScratch,
+    ) -> Result<(f32, f64)> {
+        let t0 = Instant::now();
+        let loss = reference::sgd_step_scratch(model, batch, lr, scratch);
+        Ok((loss, t0.elapsed().as_secs_f64()))
+    }
+
+    fn eval_scratch(
+        &self,
+        model: &ModelState,
+        batch: &PaddedBatch,
+        scratch: &mut reference::StepScratch,
+    ) -> Result<Vec<i32>> {
+        Ok(reference::eval_scratch(model, batch, scratch))
     }
 
     fn name(&self) -> &'static str {

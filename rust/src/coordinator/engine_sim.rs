@@ -12,8 +12,10 @@
 //! mega-batches without touching engine state.
 
 use crate::data::pipeline::DataPlane;
+use crate::model::reference::StepScratch;
 use crate::model::ModelState;
 use crate::runtime::{CostModel, SimDevice};
+use crate::slide::SparseStepper;
 use crate::Result;
 
 use super::backend::StepBackend;
@@ -24,12 +26,38 @@ pub struct SimEngine<'b> {
     backend: &'b dyn StepBackend,
     pub devices: Vec<SimDevice>,
     pub cost: CostModel,
+    /// `[slide]` section driving the sparse kernels (defaults are inert:
+    /// plans carry no ratios unless `[slide] adaptive` is on).
+    slide: crate::config::SlideConfig,
+    /// Lazily-built per-roster-device LSH steppers (sparse slots only; a
+    /// device that always runs dense never builds tables).
+    steppers: Vec<Option<SparseStepper>>,
+    /// One pooled step scratch shared across every step this engine runs
+    /// (the engine is single-threaded; numerics are bit-identical to fresh
+    /// buffers — pinned by `model::reference` tests).
+    scratch: StepScratch,
 }
 
 impl<'b> SimEngine<'b> {
     pub fn new(backend: &'b dyn StepBackend, devices: Vec<SimDevice>, cost: CostModel) -> Self {
         assert!(!devices.is_empty());
-        SimEngine { backend, devices, cost }
+        let n = devices.len();
+        SimEngine {
+            backend,
+            devices,
+            cost,
+            slide: crate::config::SlideConfig::default(),
+            steppers: (0..n).map(|_| None).collect(),
+            scratch: StepScratch::new(),
+        }
+    }
+
+    /// Use this `[slide]` section for the sparse active-class kernels
+    /// (table/bit counts, negatives, rebuild cadence, seed). Without it a
+    /// sparse plan still runs, on default SLIDE hyperparameters.
+    pub fn with_slide(mut self, sec: &crate::config::SlideConfig) -> Self {
+        self.slide = sec.clone();
+        self
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -47,14 +75,29 @@ impl<'b> SimEngine<'b> {
     ) -> Result<()> {
         let dev = plan.device_ids[slot];
         let batch = plane.next_batch_for(slot, bucket, valid);
-        let (loss, _real) = self.backend.step(&mut replicas[dev], &batch, plan.lrs[slot])?;
-        let dur = self.devices[dev].step_duration(&self.cost, &batch);
+        let ratio = plan.sparsity_ratio(slot);
+        let (loss, active_classes) = if ratio >= 1.0 {
+            // Dense path: the backend's exact kernel, through the pooled
+            // scratch (bit-identical to per-step allocation).
+            let (loss, _real) =
+                self.backend.step_scratch(&mut replicas[dev], &batch, plan.lrs[slot], &mut self.scratch)?;
+            (loss, replicas[dev].dims.classes)
+        } else {
+            // Sparse path: the LSH active-class kernel on the reference
+            // numerics (the CPU compute lever; PJRT artifacts stay dense).
+            let stepper = self.steppers[dev]
+                .get_or_insert_with(|| SparseStepper::new(&self.slide, dev as u64));
+            stepper.set_ratio(ratio);
+            stepper.step(&mut replicas[dev], &batch, plan.lrs[slot], &mut self.scratch)
+        };
+        let dur = self.devices[dev].step_duration_at(&self.cost, &batch, ratio);
         free_time[slot] += dur;
         let s = &mut stats[dev];
         s.updates += 1;
         s.samples += valid as u64;
         s.loss_sum += loss as f64;
         s.nnz += batch.nnz as u64;
+        s.active_classes += active_classes as u64;
         batch_nnz.push(batch.nnz as u64);
         plane.recycle(batch);
 
@@ -228,6 +271,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         }
     }
 
@@ -285,6 +329,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 320);
@@ -316,6 +361,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 10));
@@ -368,6 +414,73 @@ mod tests {
         assert_eq!(report.total_samples(), 3200, "budget conserved under calibration");
         let u = report.updates();
         assert!(u[0] > u[3], "calibrated dispatch still favors the fast device: {u:?}");
+    }
+
+    #[test]
+    fn sparse_plan_cuts_virtual_step_cost_and_tracks_active_classes() {
+        let (cfg, ds) = setup(); // classes = 32, jitter = 0
+        let backend = RefBackend;
+        let mut engine = SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default())
+            .with_slide(&cfg.slide);
+        let classes = cfg.model.classes as u64;
+
+        let plane = sync_plane(&cfg, &ds, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let dense = engine
+            .run_mega_batch(&mut replicas, &plane, &plan_dynamic(4, 16, 640))
+            .unwrap();
+        for d in dense.per_device.iter().filter(|d| d.updates > 0) {
+            assert_eq!(d.active_classes, d.updates * classes, "dense rows count every class");
+        }
+
+        let plane = sync_plane(&cfg, &ds, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let plan = plan_dynamic(4, 16, 640).with_sparsity_ratios(vec![0.25; 4]);
+        let sparse = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        assert_eq!(sparse.total_samples(), 640, "budget conserved under sparsity");
+        assert!(
+            sparse.wall < dense.wall,
+            "active-class truncation must cut virtual time: {} vs {}",
+            sparse.wall,
+            dense.wall
+        );
+        for d in sparse.per_device.iter().filter(|d| d.updates > 0) {
+            assert!(
+                d.active_classes < d.updates * classes,
+                "sparse rows must truncate the class set"
+            );
+            assert!(d.active_classes > 0);
+        }
+        // The sparse mega-batch still trains (loss is finite and sane).
+        assert!(sparse.mean_loss().is_finite() && sparse.mean_loss() > 0.0);
+    }
+
+    #[test]
+    fn ratio_one_plan_matches_a_dense_plan_bitwise() {
+        // A plan carrying all-1.0 ratios must leave models and virtual
+        // time exactly where the ratio-free plan does.
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let run = |ratios: Option<Vec<f64>>| {
+            let mut engine =
+                SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default())
+                    .with_slide(&cfg.slide);
+            let plane = sync_plane(&cfg, &ds, 7);
+            let mut replicas = vec![ModelState::init(&cfg.model, 3); 4];
+            let mut plan = plan_dynamic(4, 16, 640);
+            if let Some(r) = ratios {
+                plan = plan.with_sparsity_ratios(r);
+            }
+            let rep = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+            (rep.wall, rep.updates(), replicas)
+        };
+        let (wall_a, updates_a, reps_a) = run(None);
+        let (wall_b, updates_b, reps_b) = run(Some(vec![1.0; 4]));
+        assert_eq!(wall_a, wall_b);
+        assert_eq!(updates_a, updates_b);
+        for (a, b) in reps_a.iter().zip(&reps_b) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "ratio 1.0 must be the dense kernel bit-for-bit");
+        }
     }
 
     #[test]

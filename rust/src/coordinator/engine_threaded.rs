@@ -29,8 +29,10 @@ use anyhow::{anyhow, bail};
 
 use crate::data::pipeline::DataPlane;
 use crate::data::PaddedBatch;
+use crate::model::reference::StepScratch;
 use crate::model::ModelState;
 use crate::runtime::SimDevice;
+use crate::slide::SparseStepper;
 use crate::Result;
 
 use super::backend::StepBackend;
@@ -40,7 +42,7 @@ use super::plan::{DevStats, DispatchMode, DispatchPlan, ExecutionEngine, MegaBat
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn StepBackend>> + Send + Sync>;
 
 enum Cmd {
-    Step { batch: PaddedBatch, lr: f32, crossbow_rate: Option<f64> },
+    Step { batch: PaddedBatch, lr: f32, crossbow_rate: Option<f64>, ratio: f64 },
     SetReplica(Box<ModelState>),
     TakeReplica,
     Shutdown,
@@ -50,7 +52,7 @@ enum Reply {
     Ready { dev: usize },
     /// The consumed batch rides back with the completion event so the
     /// scheduler can recycle its buffers through the data plane.
-    StepDone { dev: usize, loss: f32, busy: f64, batch: PaddedBatch },
+    StepDone { dev: usize, loss: f32, busy: f64, active: usize, batch: PaddedBatch },
     Replica { dev: usize, model: Box<ModelState> },
     Fatal { dev: usize, error: String },
 }
@@ -77,6 +79,8 @@ pub struct ThreadedEngine {
     replies: mpsc::Receiver<Reply>,
     crossbow: Arc<CrossbowShared>,
     template: ModelState,
+    /// `[slide]` section the workers build their sparse steppers from.
+    slide: crate::config::SlideConfig,
 }
 
 impl ThreadedEngine {
@@ -87,6 +91,18 @@ impl ThreadedEngine {
         factory: BackendFactory,
         devices: Vec<SimDevice>,
         template: &ModelState,
+    ) -> Result<ThreadedEngine> {
+        Self::spawn_with_slide(factory, devices, template, crate::config::SlideConfig::default())
+    }
+
+    /// [`spawn`](ThreadedEngine::spawn) with an explicit `[slide]` section
+    /// — plans carrying sparsity ratios step through LSH active-class
+    /// kernels built from it.
+    pub fn spawn_with_slide(
+        factory: BackendFactory,
+        devices: Vec<SimDevice>,
+        template: &ModelState,
+        slide: crate::config::SlideConfig,
     ) -> Result<ThreadedEngine> {
         assert!(!devices.is_empty());
         let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
@@ -103,6 +119,7 @@ impl ThreadedEngine {
             replies: reply_rx,
             crossbow,
             template: template.clone(),
+            slide,
         })
     }
 
@@ -132,9 +149,12 @@ impl ThreadedEngine {
             let factory = self.factory.clone();
             let shared = self.crossbow.clone();
             let template = self.template.clone();
+            let slide = self.slide.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("gpu-manager-{dev}"))
-                .spawn(move || worker_main(dev, device, factory, cmd_rx, replies, shared, template))
+                .spawn(move || {
+                    worker_main(dev, device, factory, cmd_rx, replies, shared, template, slide)
+                })
                 .expect("spawning worker thread");
             self.workers[dev] = Some(Worker { cmd: cmd_tx, handle: Some(handle) });
             pending.push(dev);
@@ -178,10 +198,13 @@ impl ThreadedEngine {
                 let valid = bucket.min(*remaining);
                 *remaining -= valid;
                 let batch = plane.next_batch_for(slot, bucket, valid);
-                self.worker(dev)
-                    .cmd
-                    .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
-                    .map_err(|_| anyhow!("worker died"))?;
+                let cmd = Cmd::Step {
+                    batch,
+                    lr: plan.lrs[slot],
+                    crossbow_rate: plan.crossbow_rate,
+                    ratio: plan.sparsity_ratio(slot),
+                };
+                self.worker(dev).cmd.send(cmd).map_err(|_| anyhow!("worker died"))?;
                 Ok(true)
             }
             DispatchMode::StaticQuota { .. } => {
@@ -191,10 +214,13 @@ impl ThreadedEngine {
                 quota[slot] -= 1;
                 let bucket = plan.batch_sizes[slot];
                 let batch = plane.next_batch_for(slot, bucket, bucket);
-                self.worker(dev)
-                    .cmd
-                    .send(Cmd::Step { batch, lr: plan.lrs[slot], crossbow_rate: plan.crossbow_rate })
-                    .map_err(|_| anyhow!("worker died"))?;
+                let cmd = Cmd::Step {
+                    batch,
+                    lr: plan.lrs[slot],
+                    crossbow_rate: plan.crossbow_rate,
+                    ratio: plan.sparsity_ratio(slot),
+                };
+                self.worker(dev).cmd.send(cmd).map_err(|_| anyhow!("worker died"))?;
                 Ok(true)
             }
         }
@@ -267,7 +293,7 @@ impl ExecutionEngine for ThreadedEngine {
 
         while inflight > 0 {
             match self.replies.recv().map_err(|_| anyhow!("worker channel closed"))? {
-                Reply::StepDone { dev, loss, busy, batch } => {
+                Reply::StepDone { dev, loss, busy, active, batch } => {
                     let slot = slot_of[dev];
                     anyhow::ensure!(slot != usize::MAX, "step reply from inactive device {dev}");
                     let s = &mut stats[dev];
@@ -275,6 +301,7 @@ impl ExecutionEngine for ThreadedEngine {
                     s.samples += batch.valid as u64;
                     s.loss_sum += loss as f64;
                     s.nnz += batch.nnz as u64;
+                    s.active_classes += active as u64;
                     s.busy += busy;
                     batch_nnz.push(batch.nnz as u64);
                     plane.recycle(batch);
@@ -331,6 +358,7 @@ impl Drop for ThreadedEngine {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     dev: usize,
     mut device: SimDevice,
@@ -339,6 +367,7 @@ fn worker_main(
     replies: mpsc::Sender<Reply>,
     shared: Arc<CrossbowShared>,
     template: ModelState,
+    slide: crate::config::SlideConfig,
 ) {
     let backend = match factory(dev) {
         Ok(b) => {
@@ -353,6 +382,9 @@ fn worker_main(
     let mut replica = template;
     // Last version of this replica folded into the shared crossbow sum.
     let mut published: Option<Box<ModelState>> = None;
+    // Pooled step buffers + a lazily-built LSH stepper (sparse plans only).
+    let mut scratch = StepScratch::new();
+    let mut stepper: Option<SparseStepper> = None;
     loop {
         // A worker whose device is out of the pool parks right here — the
         // blocking recv *is* the park; re-admission unparks it with the next
@@ -368,10 +400,20 @@ fn worker_main(
                     return;
                 }
             }
-            Ok(Cmd::Step { batch, lr, crossbow_rate }) => {
+            Ok(Cmd::Step { batch, lr, crossbow_rate, ratio }) => {
                 let t0 = Instant::now();
-                match backend.step(&mut replica, &batch, lr) {
-                    Ok((loss, _)) => {
+                let outcome = if ratio >= 1.0 {
+                    backend
+                        .step_scratch(&mut replica, &batch, lr, &mut scratch)
+                        .map(|(loss, _)| (loss, replica.dims.classes))
+                } else {
+                    let st =
+                        stepper.get_or_insert_with(|| SparseStepper::new(&slide, dev as u64));
+                    st.set_ratio(ratio);
+                    Ok(st.step(&mut replica, &batch, lr, &mut scratch))
+                };
+                match outcome {
+                    Ok((loss, active)) => {
                         let real = t0.elapsed().as_secs_f64();
                         let target = device.stretch(real);
                         if target > real {
@@ -385,7 +427,7 @@ fn worker_main(
                         // The batch rides back so the scheduler can recycle
                         // its buffers through the data plane's pool.
                         let reply =
-                            Reply::StepDone { dev, loss, busy: target.max(real), batch };
+                            Reply::StepDone { dev, loss, busy: target.max(real), active, batch };
                         if replies.send(reply).is_err() {
                             return;
                         }
@@ -493,6 +535,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(report.total_samples(), 250);
@@ -519,6 +562,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert!(report.updates().iter().all(|&u| u == 4), "{:?}", report.updates());
@@ -545,6 +589,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 2);
@@ -560,6 +605,7 @@ mod tests {
             crossbow_rate: None,
             nnz_estimate: 5.0,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         };
         let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
         assert_eq!(engine.spawned_workers(), 3);
@@ -585,6 +631,7 @@ mod tests {
                 crossbow_rate: None,
                 nnz_estimate: 5.0,
                 predicted_step_secs: None,
+                sparsity_ratios: None,
             };
             let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
             assert_eq!(report.total_samples(), 96);
@@ -594,6 +641,41 @@ mod tests {
         let s = plane.stats();
         assert_eq!(s.prefetched + s.synchronous, 18, "{s:?}"); // 3 mega-batches x 96/16
         assert!(s.pool.hits > 0, "recycled buffers must be reused: {s:?}");
+    }
+
+    #[test]
+    fn sparse_plan_runs_and_reports_truncated_class_sets() {
+        let (cfg, ds) = setup(); // classes = 32
+        let template = ModelState::init(&cfg.model, 5);
+        let mut engine = ThreadedEngine::spawn_with_slide(
+            ref_factory(),
+            SimDevice::fleet(&cfg.devices),
+            &template,
+            cfg.slide.clone(),
+        )
+        .unwrap();
+        let plane = async_plane(&cfg, &ds, 11);
+        let mut replicas = vec![template.clone(); 3];
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: all_active(3),
+            batch_sizes: vec![16; 3],
+            lrs: vec![0.05; 3],
+            sample_budget: 240,
+            crossbow_rate: None,
+            nnz_estimate: 5.0,
+            predicted_step_secs: None,
+            sparsity_ratios: Some(vec![0.25; 3]),
+        };
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        assert_eq!(report.total_samples(), 240);
+        let classes = cfg.model.classes as u64;
+        for d in report.per_device.iter().filter(|d| d.updates > 0) {
+            assert!(d.active_classes > 0);
+            assert!(d.active_classes < d.updates * classes, "workers must run the sparse kernel");
+        }
+        // Sparse steps still move the replicas.
+        assert!(replicas[0].max_abs_diff(&template) > 0.0);
     }
 
     #[test]
@@ -615,6 +697,7 @@ mod tests {
                 crossbow_rate: rate,
                 nnz_estimate: 5.0,
                 predicted_step_secs: None,
+                sparsity_ratios: None,
             };
             engine.run_mega_batch(&mut replicas, plane, &plan).unwrap();
             let spread = replicas[0]

@@ -49,6 +49,12 @@ pub struct DispatchPlan {
     /// `None` (the default everywhere) keeps the historical behavior
     /// bit-for-bit.
     pub predicted_step_secs: Option<Vec<f64>>,
+    /// Per-device active-class sparsity ratios, parallel to `device_ids`
+    /// (`[slide] adaptive`). A slot at `1.0` runs the exact dense kernel;
+    /// below `1.0` the engine steps through the LSH active-class kernel at
+    /// that ratio. `None` (the default everywhere) is dense on every slot
+    /// and keeps the historical behavior bit-for-bit.
+    pub sparsity_ratios: Option<Vec<f64>>,
 }
 
 impl DispatchPlan {
@@ -64,6 +70,20 @@ impl DispatchPlan {
         assert_eq!(secs.len(), self.device_ids.len(), "predictions must parallel the slots");
         self.predicted_step_secs = Some(secs);
         self
+    }
+
+    /// Attach per-slot active-class sparsity ratios (parallel to
+    /// `device_ids`) — the trainer does this when `[slide] adaptive` is on.
+    pub fn with_sparsity_ratios(mut self, ratios: Vec<f64>) -> DispatchPlan {
+        assert_eq!(ratios.len(), self.device_ids.len(), "ratios must parallel the slots");
+        assert!(ratios.iter().all(|&r| r > 0.0), "sparsity ratios must be positive");
+        self.sparsity_ratios = Some(ratios);
+        self
+    }
+
+    /// Effective sparsity ratio of active slot `slot` (1.0 = dense).
+    pub fn sparsity_ratio(&self, slot: usize) -> f64 {
+        self.sparsity_ratios.as_ref().map(|r| r[slot]).unwrap_or(1.0)
     }
 
     /// Expected total nnz of one full batch on active slot `slot`.
@@ -100,6 +120,7 @@ pub fn plan_for_strategy(
             crossbow_rate: None,
             nnz_estimate,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         },
         Strategy::Elastic => {
             let b = cfg.sgd.b_max;
@@ -114,6 +135,7 @@ pub fn plan_for_strategy(
                 crossbow_rate: None,
                 nnz_estimate,
                 predicted_step_secs: None,
+                sparsity_ratios: None,
             }
         }
         Strategy::Crossbow => DispatchPlan {
@@ -125,6 +147,7 @@ pub fn plan_for_strategy(
             crossbow_rate: Some(cfg.strategy.crossbow_rate),
             nnz_estimate,
             predicted_step_secs: None,
+            sparsity_ratios: None,
         },
         Strategy::SyncGradAgg => {
             // One synchronous round: per-device batch b_max/G, one batch each.
@@ -141,6 +164,7 @@ pub fn plan_for_strategy(
                 crossbow_rate: None,
                 nnz_estimate,
                 predicted_step_secs: None,
+                sparsity_ratios: None,
             }
         }
     }
@@ -159,6 +183,9 @@ pub struct DevStats {
     pub loss_sum: f64,
     /// True non-zeros processed.
     pub nnz: u64,
+    /// Sum of per-step active output-class counts (divide by `updates` for
+    /// the mean active-set size; equals `updates * classes` when dense).
+    pub active_classes: u64,
 }
 
 /// Aggregate outcome of one mega-batch. `per_device` is indexed by global

@@ -117,6 +117,97 @@ pub fn calibrated_targets(
         .collect()
 }
 
+/// Joint batch-size × sparsity re-targeting — the two-knob version of
+/// [`calibrated_targets`] the trainer uses when `[slide] adaptive` is on.
+///
+/// Batch size alone bottoms out: once a drifted device needs `b < b_min`
+/// to keep pace, [`calibrated_targets`] clamps it to `b_min` and the
+/// device stays a straggler. The sparsity ratio is the second knob —
+/// shrinking the active output-class set cuts the per-sample term by
+/// [`CostModel::sparsity_factor`](crate::runtime::CostModel::sparsity_factor)
+/// without leaving the batch grid. Per device: solve for the batch size
+/// that matches the fastest device's `b_max` step time at full sparsity;
+/// if that lands on the grid, keep `ratio = 1.0`. Otherwise walk the
+/// configured ratio ladder downward and take the first ratio whose
+/// equal-time batch size is grid-feasible; a device too slow even at
+/// `min_ratio` floors at `(b_min, min_ratio)`.
+///
+/// Returns `(batch_sizes, ratios)`, both parallel to `speeds`.
+pub fn joint_targets(
+    speeds: &[f64],
+    nnz_per_sample: f64,
+    cost: &crate::runtime::CostModel,
+    cfg: &SgdConfig,
+    slide: &crate::config::SlideConfig,
+) -> (Vec<usize>, Vec<f64>) {
+    assert!(!speeds.is_empty());
+    assert!(speeds.iter().all(|&s| s > 0.0), "speed multipliers must be positive");
+    let gather = cost.t_per_nnz * nnz_per_sample;
+    let fastest = speeds.iter().copied().fold(f64::INFINITY, f64::min);
+    // Common per-batch time target: the fastest device, dense, at b_max.
+    let target = fastest * (cost.t_fixed + (gather + cost.t_per_sample) * cfg.b_max as f64);
+    let ladder = slide.ratio_ladder();
+    let mut batches = Vec::with_capacity(speeds.len());
+    let mut ratios = Vec::with_capacity(speeds.len());
+    for &s in speeds {
+        let mut chosen = (cfg.b_min, *ladder.last().expect("ladder is never empty"));
+        for &r in &ladder {
+            let per_sample = gather + cost.t_per_sample * cost.sparsity_factor(r);
+            let b = (target / s - cost.t_fixed) / per_sample;
+            if b >= cfg.b_min as f64 {
+                chosen = (round_to_grid(b, cfg), r);
+                break;
+            }
+        }
+        batches.push(chosen.0);
+        ratios.push(chosen.1);
+    }
+    (batches, ratios)
+}
+
+/// Sparsity-only re-targeting: the batch grid is held fixed (the
+/// `batch_scaling = false` ablation) and the ratio ladder alone absorbs
+/// heterogeneity. Per device: keep `ratio = 1.0` if its dense step at its
+/// *current* batch size already matches the fastest device's dense time,
+/// otherwise take the first ladder rung whose predicted step time reaches
+/// that target; a device too slow even at `min_ratio` floors there.
+///
+/// Returns ratios parallel to `speeds`/`batch_sizes`.
+pub fn sparsity_targets(
+    speeds: &[f64],
+    batch_sizes: &[usize],
+    nnz_per_sample: f64,
+    cost: &crate::runtime::CostModel,
+    slide: &crate::config::SlideConfig,
+) -> Vec<f64> {
+    assert_eq!(speeds.len(), batch_sizes.len());
+    assert!(!speeds.is_empty());
+    assert!(speeds.iter().all(|&s| s > 0.0), "speed multipliers must be positive");
+    let gather = cost.t_per_nnz * nnz_per_sample;
+    // Target: the fastest device, dense, at its own (fixed) batch size.
+    let target = speeds
+        .iter()
+        .zip(batch_sizes)
+        .map(|(&s, &b)| s * (cost.t_fixed + (gather + cost.t_per_sample) * b as f64))
+        .fold(f64::INFINITY, f64::min);
+    let ladder = slide.ratio_ladder();
+    speeds
+        .iter()
+        .zip(batch_sizes)
+        .map(|(&s, &b)| {
+            let mut chosen = *ladder.last().expect("ladder is never empty");
+            for &r in &ladder {
+                let per_sample = gather + cost.t_per_sample * cost.sparsity_factor(r);
+                if s * (cost.t_fixed + per_sample * b as f64) <= target {
+                    chosen = r;
+                    break;
+                }
+            }
+            chosen
+        })
+        .collect()
+}
+
 /// Scaling-frequency controller (paper §3.2: "if stability is achieved or
 /// the system enters an oscillatory state, the frequency at which scaling
 /// is performed can be increased").
@@ -331,6 +422,71 @@ mod tests {
         // An extreme straggler clamps to b_min instead of leaving the grid.
         let t = calibrated_targets(&[1.0, 50.0], 12.0, &cost, &c);
         assert_eq!(t[1], c.b_min);
+    }
+
+    #[test]
+    fn joint_targets_trade_batch_against_sparsity() {
+        let c = cfg(); // grid 16..128 step 8
+        let cost = crate::runtime::CostModel::default();
+        let slide = crate::config::SlideConfig::default(); // ladder 1.0..0.05
+
+        // While batch size alone can equalize, sparsity stays at 1.0 and
+        // the batches match the single-knob path exactly.
+        let speeds = [1.0, 1.32, 2.0];
+        let (b, r) = joint_targets(&speeds, 12.0, &cost, &c, &slide);
+        assert_eq!(b, calibrated_targets(&speeds, 12.0, &cost, &c));
+        assert!(r.iter().all(|&x| x == 1.0), "{r:?}");
+
+        // A hard throttle that would need b < b_min dense drops down the
+        // ratio ladder instead of just clamping to b_min.
+        let (b, r) = joint_targets(&[1.0, 8.0], 12.0, &cost, &c, &slide);
+        assert_eq!(b[0], c.b_max);
+        assert_eq!(r[0], 1.0);
+        assert!(r[1] < 1.0, "throttled device must shed classes: {r:?}");
+        assert!(b[1] >= c.b_min && (b[1] - c.b_min) % c.beta == 0);
+        // The chosen (b, ratio) really is feasible: predicted step time at
+        // that sparsity is within a grid pitch of the fleet target.
+        let gather = cost.t_per_nnz * 12.0;
+        let target = cost.t_fixed + (gather + cost.t_per_sample) * c.b_max as f64;
+        let per_sample = gather + cost.t_per_sample * cost.sparsity_factor(r[1]);
+        let t1 = 8.0 * (cost.t_fixed + per_sample * b[1] as f64);
+        assert!(
+            t1 <= target * (1.0 + c.beta as f64 / c.b_min as f64),
+            "joint target overshoots: {t1} vs {target}"
+        );
+
+        // A hopeless straggler floors at (b_min, min_ratio) instead of
+        // leaving the grid or the ladder.
+        let (b, r) = joint_targets(&[1.0, 1000.0], 12.0, &cost, &c, &slide);
+        assert_eq!(b[1], c.b_min);
+        assert_eq!(r[1], slide.min_ratio);
+    }
+
+    #[test]
+    fn sparsity_targets_hold_batches_and_walk_the_ladder() {
+        let cost = crate::runtime::CostModel::default();
+        let slide = crate::config::SlideConfig::default();
+
+        // Homogeneous fleet at a common batch: everyone stays dense.
+        let r = sparsity_targets(&[1.0, 1.0, 1.0], &[128, 128, 128], 12.0, &cost, &slide);
+        assert!(r.iter().all(|&x| x == 1.0), "{r:?}");
+
+        // A throttled device sheds classes; the fast one stays dense, and
+        // the chosen rung's predicted step time beats the dense one.
+        let batches = [128usize, 128];
+        let r = sparsity_targets(&[1.0, 3.0], &batches, 12.0, &cost, &slide);
+        assert_eq!(r[0], 1.0);
+        assert!(r[1] < 1.0, "throttled device must shed classes: {r:?}");
+        let gather = cost.t_per_nnz * 12.0;
+        let dense = 3.0 * (cost.t_fixed + (gather + cost.t_per_sample) * 128.0);
+        let sparse = 3.0
+            * (cost.t_fixed
+                + (gather + cost.t_per_sample * cost.sparsity_factor(r[1])) * 128.0);
+        assert!(sparse < dense);
+
+        // A hopeless straggler floors at min_ratio, never off the ladder.
+        let r = sparsity_targets(&[1.0, 1000.0], &batches, 12.0, &cost, &slide);
+        assert_eq!(r[1], slide.min_ratio);
     }
 
     #[test]

@@ -124,6 +124,10 @@ pub struct TrainerSession<'b> {
     replicas: Vec<ModelState>,
     batch_sizes: Vec<usize>,
     lrs: Vec<f32>,
+    /// Roster-indexed active-class sparsity ratios (`[slide] adaptive`;
+    /// all 1.0 = dense, the default). The joint re-targeting path moves
+    /// these together with `batch_sizes` when a drift fires.
+    sparsity_ratios: Vec<f64>,
     scaling_state: scaling::ScalingState,
     /// Per-roster-device cost estimators (`[calibration] enabled`; empty
     /// when the plane is off).
@@ -246,6 +250,7 @@ impl<'b> TrainerSession<'b> {
             replicas,
             batch_sizes,
             lrs,
+            sparsity_ratios: vec![1.0; roster],
             scaling_state,
             estimators,
             costs,
@@ -309,15 +314,19 @@ impl<'b> TrainerSession<'b> {
     fn predicted_secs(&self, device_ids: &[usize], batch_sizes: &[usize]) -> Option<Vec<f64>> {
         let view = self.costs.as_ref()?.current();
         let cost = self.engine.cost_model();
+        let adaptive = self.cfg.slide.adaptive;
         Some(
             device_ids
                 .iter()
                 .zip(batch_sizes)
                 .map(|(&d, &b)| {
                     let nnz = self.nnz_estimate * b as f64;
+                    // Price the sparsity knob into dispatch predictions
+                    // (ratio 1.0 is bit-identical to the dense formula).
+                    let ratio = if adaptive { self.sparsity_ratios[d] } else { 1.0 };
                     match view.estimate(d) {
-                        Some(e) => e.step_secs(&cost, b, nnz),
-                        None => view.nominal[d] * cost.step_time_parts(b, nnz as usize),
+                        Some(e) => e.step_secs_at(&cost, b, nnz, ratio),
+                        None => view.nominal[d] * cost.step_time_parts_at(b, nnz as usize, ratio),
                     }
                 })
                 .collect(),
@@ -381,10 +390,12 @@ impl<'b> TrainerSession<'b> {
             }
         }
 
-        // Roster-indexed batch sizes each device actually ran this
-        // mega-batch (captured per plan below — calibration observations
-        // must describe the work that ran, not post-rescale state).
+        // Roster-indexed batch sizes / sparsity ratios each device actually
+        // ran this mega-batch (captured per plan below — calibration
+        // observations must describe the work that ran, not post-rescale
+        // state).
         let mut sizes_used = vec![0usize; self.roster];
+        let mut ratios_used = vec![1.0f64; self.roster];
 
         let (report, merge_secs, merge_weights, perturbed) = match strategy {
             Strategy::Adaptive | Strategy::Elastic | Strategy::Crossbow => {
@@ -399,11 +410,17 @@ impl<'b> TrainerSession<'b> {
                 for lr in plan.lrs.iter_mut() {
                     *lr *= warmup;
                 }
+                if cfg.slide.adaptive {
+                    let ratios: Vec<f64> =
+                        plan.device_ids.iter().map(|&d| self.sparsity_ratios[d]).collect();
+                    plan = plan.with_sparsity_ratios(ratios);
+                }
                 if let Some(secs) = self.predicted_secs(&plan.device_ids, &plan.batch_sizes) {
                     plan = plan.with_predicted_step_secs(secs);
                 }
                 for (i, &d) in plan.device_ids.iter().enumerate() {
                     sizes_used[d] = plan.batch_sizes[i];
+                    ratios_used[d] = plan.sparsity_ratio(i);
                 }
                 let report = self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
                 self.clock += report.wall;
@@ -414,7 +431,7 @@ impl<'b> TrainerSession<'b> {
                     active.iter().map(|&d| report.per_device[d].updates).collect();
                 let active_batches: Vec<usize> =
                     active.iter().map(|&d| self.batch_sizes[d]).collect();
-                let outcome = match strategy {
+                let mut outcome = match strategy {
                     Strategy::Adaptive => {
                         let l2s: Vec<f64> =
                             active.iter().map(|&d| self.replicas[d].l2_per_param()).collect();
@@ -426,6 +443,25 @@ impl<'b> TrainerSession<'b> {
                         by_updates: false,
                     },
                 };
+                // Gradient-quality discount: a replica trained on a
+                // truncated class set carries proportionally less weight
+                // into the merge (`ratio^discount`, renormalized). Only
+                // touched when some active device actually ran sparse, so
+                // dense runs keep the historical weights bit-for-bit.
+                if cfg.slide.adaptive
+                    && cfg.slide.quality_discount > 0.0
+                    && active.iter().any(|&d| ratios_used[d] < 1.0)
+                {
+                    for (w, &d) in outcome.weights.iter_mut().zip(active) {
+                        *w *= ratios_used[d].powf(cfg.slide.quality_discount);
+                    }
+                    let sum: f64 = outcome.weights.iter().sum();
+                    if sum > 0.0 {
+                        for w in outcome.weights.iter_mut() {
+                            *w /= sum;
+                        }
+                    }
+                }
                 let (merged, merge_secs) = self.merge_active(active, &outcome.weights, &dims);
                 // Momentum global update for the HeteroGPU strategies.
                 let momentum = match strategy {
@@ -539,6 +575,7 @@ impl<'b> TrainerSession<'b> {
                     bucket: sizes_used[d],
                     nnz_per_batch: s.nnz as f64 / s.updates as f64,
                     secs_per_batch: s.busy / s.updates as f64,
+                    ratio: ratios_used[d],
                 };
                 if self.estimators[d].observe(obs) {
                     drifted = true;
@@ -550,23 +587,52 @@ impl<'b> TrainerSession<'b> {
             if !fresh.is_empty() {
                 costs.update_devices(&fresh, self.clock);
             }
-            if drifted && strategy == Strategy::Adaptive && cfg.strategy.batch_scaling {
+            if drifted
+                && strategy == Strategy::Adaptive
+                && (cfg.strategy.batch_scaling || cfg.slide.adaptive)
+            {
                 let view = costs.current();
                 let speeds: Vec<f64> = active.iter().map(|&d| view.speed(d)).collect();
-                let targets = scaling::calibrated_targets(
-                    &speeds,
-                    self.nnz_estimate,
-                    &nominal_cost,
-                    &cfg.sgd,
-                );
+                // Two-knob re-targeting when the sparsity lever is armed;
+                // ratio-only when batch scaling is ablated away with the
+                // lever still on; the historical batch-only path otherwise.
+                let (targets, ratios) = if cfg.slide.adaptive && !cfg.strategy.batch_scaling {
+                    let held: Vec<usize> = active.iter().map(|&d| self.batch_sizes[d]).collect();
+                    let r = scaling::sparsity_targets(
+                        &speeds,
+                        &held,
+                        self.nnz_estimate,
+                        &nominal_cost,
+                        &cfg.slide,
+                    );
+                    (held, r)
+                } else if cfg.slide.adaptive {
+                    scaling::joint_targets(
+                        &speeds,
+                        self.nnz_estimate,
+                        &nominal_cost,
+                        &cfg.sgd,
+                        &cfg.slide,
+                    )
+                } else {
+                    let t = scaling::calibrated_targets(
+                        &speeds,
+                        self.nnz_estimate,
+                        &nominal_cost,
+                        &cfg.sgd,
+                    );
+                    let ones = vec![1.0; t.len()];
+                    (t, ones)
+                };
                 if self.opts.verbose {
                     println!(
                         "[{}] mb={:<3} calibration: step drift detected; re-seeding batch \
-                         grid {:?} -> {:?} on {:?}",
+                         grid {:?} -> {:?} (ratios {:?}) on {:?}",
                         self.log.name,
                         mb,
                         active.iter().map(|&d| self.batch_sizes[d]).collect::<Vec<_>>(),
                         targets,
+                        ratios,
                         active
                     );
                 }
@@ -574,6 +640,9 @@ impl<'b> TrainerSession<'b> {
                     if targets[i] != self.batch_sizes[d] {
                         self.lrs[d] *= targets[i] as f32 / self.batch_sizes[d] as f32;
                         self.batch_sizes[d] = targets[i];
+                    }
+                    if cfg.slide.adaptive {
+                        self.sparsity_ratios[d] = ratios[i];
                     }
                 }
             }
@@ -629,6 +698,13 @@ impl<'b> TrainerSession<'b> {
             }
             None => (vec![0.0; self.roster], vec![0.0; self.roster]),
         };
+        // Sparsity telemetry: the ratio each device ran and its mean
+        // active-set size per step (classes for dense rows).
+        let active_classes: Vec<f64> = report
+            .per_device
+            .iter()
+            .map(|d| if d.updates > 0 { d.active_classes as f64 / d.updates as f64 } else { 0.0 })
+            .collect();
         let row = MegaBatchRow {
             mega_batch: mb,
             clock: self.clock,
@@ -649,6 +725,8 @@ impl<'b> TrainerSession<'b> {
             pipeline: pipeline_row(&self.plane.stats()),
             cost_speed,
             cost_residual,
+            sparsity_ratio: ratios_used,
+            active_classes,
         };
         self.log.pool_events.extend(events);
         if let Some(path) = &self.opts.checkpoint {

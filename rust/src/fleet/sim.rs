@@ -270,7 +270,10 @@ pub fn co_schedule(
     let mut tenants: Vec<TrainTenant<'_>> = Vec::with_capacity(jobs.len());
     for (i, job) in jobs.iter().enumerate() {
         let engine =
-            Box::new(SimEngine::new(&backend, DevicePool::roster(&job.cfg), CostModel::default()));
+            Box::new(
+            SimEngine::new(&backend, DevicePool::roster(&job.cfg), CostModel::default())
+                .with_slide(&job.cfg.slide),
+        );
         let opts = TrainerOptions {
             // The first tenant always feeds the snapshot registry — the
             // serve lane reads it live, and a lane-less (exclusive) run

@@ -11,7 +11,7 @@ use crate::data::synthetic::Generator;
 use crate::metrics::RunLog;
 use crate::model::ModelState;
 use crate::runtime::{CostModel, SimDevice};
-use crate::slide::{SlideConfig, SlideTrainer};
+use crate::slide::{SlideTrainer, SlideTrainerConfig};
 use crate::util::bench::Table;
 use crate::Result;
 
@@ -56,6 +56,10 @@ pub const EXPERIMENTS: &[ExperimentSpec] = &[
     ExperimentSpec {
         name: "calibration",
         about: "static vs calibrated scheduling under a scripted throttle trace",
+    },
+    ExperimentSpec {
+        name: "slide",
+        about: "adaptive-sparsity lever: static vs batch-only vs sparsity-only vs joint",
     },
 ];
 
@@ -263,10 +267,13 @@ pub fn fig8(profile: DataProfile, backend: Backend) -> Result<Fig8Outcome> {
     let (train, test) = make_data(&cfg);
     let budget = budget.clamp(0.2, 30.0);
     let init = ModelState::init(&cfg.model, cfg.sgd.seed);
+    // The baseline reads the same `[slide]` block the adaptive-sparsity
+    // compute path uses (threads, tables, bits, negatives, rebuild cadence)
+    // — one knob set, no drift between the two SLIDE consumers.
     let trainer = SlideTrainer::new(
         &cfg.model,
         &init,
-        SlideConfig { threads: 4, lr: cfg.sgd.lr_bmax / 4.0, ..Default::default() },
+        SlideTrainerConfig::from_section(&cfg.slide, cfg.sgd.lr_bmax),
     );
     let (_samples, updates, seconds) = trainer.train(&train, budget, u64::MAX)?;
     let snapshot = trainer.snapshot();
@@ -1107,6 +1114,180 @@ pub fn calibration(profile: DataProfile, backend: Backend) -> Result<Calibration
         throttled_balance: (b_static, b_cal),
         whatif: (score_nom, score_est),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Slide — beyond the paper: the adaptive-sparsity compute lever. A hard
+// throttle hits the nominally fastest device — too hard for batch scaling
+// alone to absorb (its equal-time batch lands below b_min) — and the same
+// scenario runs under four policies: no reaction, batch-only re-targeting,
+// sparsity-only re-targeting, and the joint two-knob trade.
+// ---------------------------------------------------------------------------
+
+pub struct SlideOutcome {
+    /// One (policy, log) per scheduling policy, registry order:
+    /// static, batch-only, sparsity-only, joint.
+    pub logs: Vec<(String, RunLog)>,
+    /// `(ratio, predicted step seconds)` down the configured ratio ladder
+    /// on the throttled device — the lever's cost curve.
+    pub ladder: Vec<(f64, f64)>,
+    /// Throttled-window update balance per policy (parallel to `logs`;
+    /// 1.0 = the paper's equal-update-rate goal).
+    pub throttled_balance: Vec<f64>,
+    /// Serve-side p99 (ms): exact-only replay vs the same trace with the
+    /// latency SLO armed (approximate LSH top-k under pressure).
+    pub serve_p99: (f64, f64),
+}
+
+/// `experiment slide`. Pass `base` (e.g. from `--config`) to run the
+/// scenario under an explicit config; `None` uses the bench-scale setup.
+pub fn slide(
+    profile: DataProfile,
+    backend: Backend,
+    base_override: Option<&Config>,
+) -> Result<SlideOutcome> {
+    use crate::coordinator::backend::RefBackend;
+    use crate::data::pipeline::ShardedDataset;
+    use crate::serve::{replay, ReplayOptions, SnapshotRegistry};
+    use std::sync::Arc;
+
+    let mut cfg = match base_override {
+        Some(c) => c.clone(),
+        None => {
+            let mut c = bench_config(profile, 4, Strategy::Adaptive);
+            apply_full_scale(&mut c);
+            c
+        }
+    };
+    // Zero jitter keeps the drift signal sharp; 10x is past what the batch
+    // grid can absorb (the equal-time batch falls below b_min), so the
+    // ratio ladder is the only knob that can restore update balance.
+    cfg.devices.jitter = 0.0;
+    let n = cfg.sgd.num_mega_batches;
+    let throttle_at = (n / 4).max(1);
+    let recover_at = (3 * n / 4).max(throttle_at + 2);
+    cfg.calibration.events = vec![
+        format!("at_mb={throttle_at} device=0 factor=10.0 ramp=1"),
+        format!("at_mb={recover_at} device=0 factor=1.0 ramp=1"),
+    ];
+    cfg.calibration.step_obs = 1;
+    cfg.validate()?;
+
+    // ---- the lever's cost curve on the throttled device --------------------
+    let cost = CostModel::default();
+    let nnz_estimate = cfg.data.avg_nnz.min(cfg.model.max_nnz as f64);
+    let b = cfg.sgd.b_max;
+    let ladder: Vec<(f64, f64)> = cfg
+        .slide
+        .ratio_ladder()
+        .iter()
+        .map(|&r| {
+            (r, 10.0 * cost.step_time_parts_at(b, (nnz_estimate * b as f64) as usize, r))
+        })
+        .collect();
+
+    // ---- four policies over the identical throttle trace -------------------
+    // (name, calibration, batch_scaling, slide.adaptive)
+    let policies: [(&str, bool, bool, bool); 4] = [
+        ("static", false, true, false),
+        ("batch-only", true, true, false),
+        ("sparsity-only", true, false, true),
+        ("joint", true, true, true),
+    ];
+    let registry = Arc::new(SnapshotRegistry::new());
+    let mut logs: Vec<(String, RunLog)> = Vec::new();
+    for (name, cal, batch_scaling, adaptive) in policies {
+        let mut c = cfg.clone();
+        c.calibration.enabled = cal;
+        c.strategy.batch_scaling = batch_scaling;
+        c.slide.adaptive = adaptive;
+        c.validate()?;
+        // The joint run also feeds the serve-side comparison below.
+        let opts = if name == "joint" {
+            TrainerOptions { publish: Some(registry.clone()), ..Default::default() }
+        } else {
+            TrainerOptions::default()
+        };
+        let log = run_single(&c, backend, opts)?;
+        logs.push((name.to_string(), log));
+    }
+
+    // ---- serve: exact-only vs the SLO-armed approximate mode ---------------
+    let (train, _) = make_data(&cfg);
+    let data = Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples));
+    let mut exact_cfg = cfg.clone();
+    exact_cfg.slide.serve_slo_ms = 0.0;
+    let serve_opts = |name: &str| ReplayOptions {
+        pattern: cfg.serve.pattern,
+        duration: cfg.serve.duration,
+        follow_clock: false,
+        train_log: None,
+        name: name.to_string(),
+    };
+    let exact =
+        replay(&exact_cfg, data.clone(), &registry, &RefBackend, &serve_opts("slide-exact"))?;
+    let mut slo_cfg = cfg.clone();
+    if slo_cfg.slide.serve_slo_ms <= 0.0 {
+        // No SLO configured: arm it at the exact replay's median so the
+        // same trace exerts pressure (windowed p95 crosses 0.9·SLO).
+        let p50 = exact.latency_percentile_ms(50.0);
+        slo_cfg.slide.serve_slo_ms = if p50.is_finite() && p50 > 0.0 { p50 } else { 1.0 };
+    }
+    let approx = replay(&slo_cfg, data.clone(), &registry, &RefBackend, &serve_opts("slide-slo"))?;
+    let serve_p99 = (exact.latency_percentile_ms(99.0), approx.latency_percentile_ms(99.0));
+
+    // ---- report ------------------------------------------------------------
+    let mut t = Table::new(&["ratio", "step (ms, throttled)", "vs dense"]);
+    let dense = ladder.first().map(|&(_, s)| s).unwrap_or(1.0);
+    for &(r, s) in &ladder {
+        t.row(&[
+            format!("{r:.2}"),
+            format!("{:.3}", s * 1e3),
+            format!("{:.0}%", 100.0 * s / dense),
+        ]);
+    }
+    t.print("Slide — per-step cost down the ratio ladder (device 0 at 10x throttle)");
+
+    let throttled_balance: Vec<f64> =
+        logs.iter().map(|(_, l)| l.window_balance(throttle_at + 1, recover_at)).collect();
+    let target = common_target(&logs);
+    let mut t = Table::new(&[
+        "policy", "throttled balance", "best P@1", "final P@1",
+        &format!("TTA@{target:.3} (s)"), "clock (s)", "mean ratio d0",
+    ]);
+    for ((name, log), tb) in logs.iter().zip(&throttled_balance) {
+        // Device 0's mean commanded ratio across the throttled window.
+        let window: Vec<&crate::metrics::MegaBatchRow> = log
+            .rows
+            .iter()
+            .filter(|r| r.mega_batch > throttle_at && r.mega_batch < recover_at)
+            .collect();
+        let mean_ratio = if window.is_empty() {
+            1.0
+        } else {
+            window.iter().map(|r| r.sparsity_ratio[0]).sum::<f64>() / window.len() as f64
+        };
+        t.row(&[
+            name.clone(),
+            format!("{tb:.2}"),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.4}", log.final_accuracy()),
+            fmt_opt(log.time_to_accuracy(target)),
+            format!("{:.2}", log.rows.last().map(|r| r.clock).unwrap_or(0.0)),
+            format!("{mean_ratio:.2}"),
+        ]);
+    }
+    t.print(&format!(
+        "Slide — scheduling policies under a 10x throttle at mb {throttle_at}, recovery at \
+         mb {recover_at} ({})",
+        profile.name()
+    ));
+    println!(
+        "serve p99: exact {:.3} ms vs SLO-armed {:.3} ms (slo {:.3} ms, serve_ratio {:.2})",
+        serve_p99.0, serve_p99.1, slo_cfg.slide.serve_slo_ms, slo_cfg.slide.serve_ratio
+    );
+
+    Ok(SlideOutcome { logs, ladder, throttled_balance, serve_p99 })
 }
 
 /// Config helper shared with `Config::from_overrides` users.

@@ -82,12 +82,16 @@ pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> R
             runtime.manifest.check_config(cfg)?;
             opts.eval_bucket = Some(runtime.manifest.eval_batch);
             let be = PjrtBackend::new(runtime);
-            let engine = Box::new(SimEngine::new(&be, devices, CostModel::default()));
+            let engine = Box::new(
+                SimEngine::new(&be, devices, CostModel::default()).with_slide(&cfg.slide),
+            );
             Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
         }
         (ExecMode::Virtual, _) => {
             let be = RefBackend;
-            let engine = Box::new(SimEngine::new(&be, devices, CostModel::default()));
+            let engine = Box::new(
+                SimEngine::new(&be, devices, CostModel::default()).with_slide(&cfg.slide),
+            );
             Trainer::new(cfg.clone(), engine, &be, opts).run(&train, &test)
         }
         (ExecMode::Real, Backend::Pjrt) => {
@@ -97,7 +101,12 @@ pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> R
                 Ok(Box::new(PjrtBackend::new(rt)) as Box<dyn StepBackend>)
             });
             let template = ModelState::init(&cfg.model, cfg.sgd.seed);
-            let engine = Box::new(ThreadedEngine::spawn(factory, devices, &template)?);
+            let engine = Box::new(ThreadedEngine::spawn_with_slide(
+                factory,
+                devices,
+                &template,
+                cfg.slide.clone(),
+            )?);
             // Eval through its own runtime on the coordinator thread.
             let eval_rt = Runtime::load(std::path::Path::new(&cfg.runtime.artifacts_dir))?;
             eval_rt.manifest.check_config(cfg)?;
@@ -109,7 +118,12 @@ pub fn run_single(cfg: &Config, backend: Backend, mut opts: TrainerOptions) -> R
             let factory: BackendFactory =
                 Arc::new(|_dev| Ok(Box::new(RefBackend) as Box<dyn StepBackend>));
             let template = ModelState::init(&cfg.model, cfg.sgd.seed);
-            let engine = Box::new(ThreadedEngine::spawn(factory, devices, &template)?);
+            let engine = Box::new(ThreadedEngine::spawn_with_slide(
+                factory,
+                devices,
+                &template,
+                cfg.slide.clone(),
+            )?);
             let eval_be = RefBackend;
             Trainer::new(cfg.clone(), engine, &eval_be, opts).run(&train, &test)
         }

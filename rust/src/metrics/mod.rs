@@ -54,6 +54,12 @@ pub struct MegaBatchRow {
     /// Calibration plane: median relative residual of each device's
     /// estimate — the estimate's own trust signal (0 when none).
     pub cost_residual: Vec<f64>,
+    /// Sparsity lever (`[slide]`): effective active-class ratio each roster
+    /// device ran this mega-batch (1.0 = dense, including inactive slots).
+    pub sparsity_ratio: Vec<f64>,
+    /// Sparsity lever: mean active output-class count per step, per roster
+    /// device (equals the class count when dense; 0 for inactive slots).
+    pub active_classes: Vec<f64>,
 }
 
 /// Data-plane counters as logged per row (cumulative since run start).
@@ -251,6 +257,12 @@ impl RunLog {
         for i in 0..dev {
             header.push_str(&format!(",est{i}"));
         }
+        for i in 0..dev {
+            header.push_str(&format!(",ratio{i}"));
+        }
+        for i in 0..dev {
+            header.push_str(&format!(",act{i}"));
+        }
         writeln!(f, "{header}")?;
         for r in &self.rows {
             let mut line = format!(
@@ -280,6 +292,12 @@ impl RunLog {
             }
             for s in &r.cost_speed {
                 line.push_str(&format!(",{s:.4}"));
+            }
+            for s in &r.sparsity_ratio {
+                line.push_str(&format!(",{s:.4}"));
+            }
+            for a in &r.active_classes {
+                line.push_str(&format!(",{a:.1}"));
             }
             writeln!(f, "{line}")?;
         }
@@ -325,6 +343,14 @@ impl RunLog {
                         (
                             "cost_residual",
                             Json::arr(r.cost_residual.iter().map(|&s| Json::num(s))),
+                        ),
+                        (
+                            "sparsity_ratio",
+                            Json::arr(r.sparsity_ratio.iter().map(|&s| Json::num(s))),
+                        ),
+                        (
+                            "active_classes",
+                            Json::arr(r.active_classes.iter().map(|&s| Json::num(s))),
                         ),
                         (
                             "pipeline",
@@ -402,6 +428,8 @@ mod tests {
             },
             cost_speed: vec![1.02, 1.34],
             cost_residual: vec![0.01, 0.02],
+            sparsity_ratio: vec![1.0, 0.5],
+            active_classes: vec![1024.0, 560.0],
         }
     }
 
@@ -447,7 +475,8 @@ mod tests {
         assert!(lines[0].starts_with("mega_batch,clock"));
         assert!(lines[0].contains(",active,"));
         assert!(lines[0].contains(",nnz_mean,nnz_cv,starved,truncated,"));
-        assert!(lines[0].ends_with("b0,b1,u0,u1,util0,util1,est0,est1"));
+        assert!(lines[0]
+            .ends_with("b0,b1,u0,u1,util0,util1,est0,est1,ratio0,ratio1,act0,act1"));
         assert_eq!(lines[1].split(',').count(), lines[0].split(',').count());
     }
 
@@ -494,5 +523,8 @@ mod tests {
         assert_eq!(pipeline.get("pool_hits").as_i64(), Some(16));
         assert_eq!(row0.get("cost_speed").as_arr().unwrap().len(), 2);
         assert_eq!(row0.get("cost_residual").as_arr().unwrap().len(), 2);
+        assert_eq!(row0.get("sparsity_ratio").as_arr().unwrap().len(), 2);
+        assert_eq!(row0.get("sparsity_ratio").as_arr().unwrap()[1].as_f64(), Some(0.5));
+        assert_eq!(row0.get("active_classes").as_arr().unwrap().len(), 2);
     }
 }

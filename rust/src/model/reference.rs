@@ -5,29 +5,114 @@
 //!    through the PJRT step executable and this code and demand agreement
 //!    to f32 tolerance.
 //! 2. Compute core for the SLIDE CPU baseline (`slide/`), which reuses the
-//!    dense layers with an active-class set.
+//!    dense layers with an active-class set — [`sgd_step_active`] is the
+//!    batch-level kernel behind the adaptive-sparsity compute lever.
 //! 3. Fallback when artifacts are absent (unit tests of the coordinator
 //!    run entirely on this path, keeping them hermetic).
 //!
 //! The math mirrors model.py line by line: sparse gather-SpMM input layer,
 //! ReLU hidden, dense output, normalized multi-hot softmax cross-entropy,
 //! masked mean over valid samples, manual backprop, sparse W1 scatter update.
+//!
+//! # Scratch reuse
+//!
+//! Every step needs six working buffers (`a`, `h`, `logits`, `lse`,
+//! `dlogits`, `da`). [`StepScratch`] owns them across steps (the
+//! `BufferPool` recycling idea applied to kernel temporaries): callers on
+//! the hot path — both execution engines, the serve replay loop — hold one
+//! scratch per device/worker and pass it down, so steady-state stepping
+//! performs no per-step allocation. [`sgd_step_ref`] keeps the historical
+//! allocate-per-call signature by constructing a fresh scratch, and a
+//! recycled scratch is bit-identical to a fresh one: every buffer is either
+//! fully overwritten or zero-filled before use.
+//!
+//! # Invariants
+//!
+//! * `sgd_step_scratch` with any (fresh or reused) scratch computes
+//!   bit-identically to the historical `sgd_step_ref`.
+//! * `sgd_step_active` with the full class set (`active = 0..classes`)
+//!   performs the exact floating-point operations of the dense path in the
+//!   same order — bit-identical, not merely close.
+//! * `sgd_step_active` never reads or writes `w2`/`b2` entries of classes
+//!   outside `active`.
 
 use crate::data::PaddedBatch;
 
 use super::ModelState;
 
-/// Forward + backward + in-place SGD update. Returns the batch loss.
-pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
-    let d = &m.dims;
-    let (h_dim, c_dim, k, l) = (d.hidden, d.classes, d.max_nnz, d.max_labels);
-    let b = batch.bucket;
+/// Reusable working buffers for [`sgd_step_scratch`] / [`sgd_step_active`]
+/// / [`eval_scratch`]. One per device/worker; buffers grow to the largest
+/// shape seen and are recycled across steps.
+#[derive(Default)]
+pub struct StepScratch {
+    /// Pre-activation `[b, hidden]`.
+    a: Vec<f32>,
+    /// ReLU activation `[b, hidden]`.
+    h: Vec<f32>,
+    /// Output logits `[b, classes]` (dense) or `[b, |active|]` (sparse).
+    logits: Vec<f32>,
+    /// Per-row log-sum-exp `[b]`.
+    lse: Vec<f32>,
+    /// Logit gradients, same shape as `logits`.
+    dlogits: Vec<f32>,
+    /// Activation gradients `[b, hidden]`.
+    da: Vec<f32>,
+    /// Class id → position in the active set (`u32::MAX` = inactive);
+    /// sized `[classes]`, rebuilt per active-set step.
+    class_pos: Vec<u32>,
+    /// Eval-only row buffers `[hidden]` / `[classes]`.
+    arow: Vec<f32>,
+    lrow: Vec<f32>,
+}
 
-    // ---- forward ----------------------------------------------------------
-    // a = sparse_embed(idx, val, w1) + b1 ; h = relu(a)
-    let mut a = vec![0.0f32; b * h_dim];
+impl StepScratch {
+    /// An empty scratch; buffers are sized lazily by the first step.
+    pub fn new() -> StepScratch {
+        StepScratch::default()
+    }
+
+    /// Size (and zero) the hidden-layer buffers. `clear` + `resize`
+    /// zero-fills, which is exactly what fresh `vec!` allocation gave the
+    /// kernels — recycling cannot change the math.
+    fn prepare_hidden(&mut self, b: usize, h_dim: usize) {
+        self.a.clear();
+        self.a.resize(b * h_dim, 0.0);
+        self.h.clear();
+        self.h.resize(b * h_dim, 0.0);
+        self.da.clear();
+        self.da.resize(b * h_dim, 0.0);
+    }
+
+    /// Size (and zero) the output-layer buffers for `c_cols` participating
+    /// classes (all of them on the dense path, `|active|` on the sparse).
+    fn prepare_output(&mut self, b: usize, c_cols: usize) {
+        self.logits.clear();
+        self.logits.resize(b * c_cols, 0.0);
+        self.lse.clear();
+        self.lse.resize(b, 0.0);
+        self.dlogits.clear();
+        self.dlogits.resize(b * c_cols, 0.0);
+    }
+
+    /// Row `r` of the ReLU hidden activation — valid after
+    /// [`forward_hidden`] until the next step on this scratch. The
+    /// sparsity stepper queries LSH tables with these rows, reusing the
+    /// forward pass the step itself needs.
+    pub fn hidden_row(&self, r: usize, h_dim: usize) -> &[f32] {
+        &self.h[r * h_dim..(r + 1) * h_dim]
+    }
+}
+
+/// Sparse-gather input layer + ReLU into `scratch.a` / `scratch.h` —
+/// the (exact, every-hidden-unit) forward shared by the dense path and the
+/// active-set path. Sizes the hidden buffers itself.
+pub fn forward_hidden(m: &ModelState, batch: &PaddedBatch, scratch: &mut StepScratch) {
+    let d = &m.dims;
+    let (h_dim, k) = (d.hidden, d.max_nnz);
+    let b = batch.bucket;
+    scratch.prepare_hidden(b, h_dim);
     for r in 0..b {
-        let arow = &mut a[r * h_dim..(r + 1) * h_dim];
+        let arow = &mut scratch.a[r * h_dim..(r + 1) * h_dim];
         arow.copy_from_slice(&m.b1);
         for j in 0..k {
             let v = batch.val[r * k + j];
@@ -40,14 +125,70 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
             }
         }
     }
-    let h: Vec<f32> = a.iter().map(|&x| x.max(0.0)).collect();
+    for (hv, &av) in scratch.h.iter_mut().zip(&scratch.a) {
+        *hv = av.max(0.0);
+    }
+}
+
+/// Input-layer backward + update (shared tail of both paths): ReLU-gated
+/// `da` is already in `scratch.da`; apply `b1 -= lr Σ da` and the sparse
+/// `w1` scatter.
+fn update_input_layer(m: &mut ModelState, batch: &PaddedBatch, lr: f32, scratch: &StepScratch) {
+    let d = &m.dims;
+    let (h_dim, k) = (d.hidden, d.max_nnz);
+    let b = batch.bucket;
+    for r in 0..b {
+        let darow = &scratch.da[r * h_dim..(r + 1) * h_dim];
+        for (bb, &dv) in m.b1.iter_mut().zip(darow) {
+            *bb -= lr * dv;
+        }
+    }
+    for r in 0..b {
+        let darow = &scratch.da[r * h_dim..(r + 1) * h_dim];
+        for j in 0..k {
+            let v = batch.val[r * k + j];
+            if v != 0.0 {
+                let fi = batch.idx[r * k + j] as usize;
+                let wrow = &mut m.w1[fi * h_dim..(fi + 1) * h_dim];
+                let s = lr * v;
+                for (w, &dv) in wrow.iter_mut().zip(darow) {
+                    *w -= s * dv;
+                }
+            }
+        }
+    }
+}
+
+/// Forward + backward + in-place SGD update. Returns the batch loss.
+///
+/// Allocates a fresh scratch per call (the historical contract); hot paths
+/// should hold a [`StepScratch`] and call [`sgd_step_scratch`] instead.
+pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
+    sgd_step_scratch(m, batch, lr, &mut StepScratch::new())
+}
+
+/// [`sgd_step_ref`] with caller-owned working buffers — bit-identical
+/// output, no per-step allocation once the scratch has warmed up.
+pub fn sgd_step_scratch(
+    m: &mut ModelState,
+    batch: &PaddedBatch,
+    lr: f32,
+    scratch: &mut StepScratch,
+) -> f32 {
+    let d = &m.dims;
+    let (h_dim, c_dim, l) = (d.hidden, d.classes, d.max_labels);
+    let b = batch.bucket;
+
+    // ---- forward ----------------------------------------------------------
+    // a = sparse_embed(idx, val, w1) + b1 ; h = relu(a)
+    forward_hidden(m, batch, scratch);
+    scratch.prepare_output(b, c_dim);
 
     // logits = h @ w2 + b2
-    let mut logits = vec![0.0f32; b * c_dim];
     for r in 0..b {
-        let lrow = &mut logits[r * c_dim..(r + 1) * c_dim];
+        let lrow = &mut scratch.logits[r * c_dim..(r + 1) * c_dim];
         lrow.copy_from_slice(&m.b2);
-        let hrow = &h[r * h_dim..(r + 1) * h_dim];
+        let hrow = &scratch.h[r * h_dim..(r + 1) * h_dim];
         for (hi, &hv) in hrow.iter().enumerate() {
             if hv != 0.0 {
                 let wrow = &m.w2[hi * c_dim..(hi + 1) * c_dim];
@@ -60,13 +201,12 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
 
     // loss_i = logsumexp(logits_i) - sum_l lab_w * logits[lab]
     let valid: f32 = batch.smask.iter().sum::<f32>().max(1.0);
-    let mut lse = vec![0.0f32; b];
     let mut loss = 0.0f64;
     for r in 0..b {
-        let lrow = &logits[r * c_dim..(r + 1) * c_dim];
+        let lrow = &scratch.logits[r * c_dim..(r + 1) * c_dim];
         let mx = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let sum: f32 = lrow.iter().map(|&x| (x - mx).exp()).sum();
-        lse[r] = mx + sum.ln();
+        scratch.lse[r] = mx + sum.ln();
         let mut pos = 0.0f32;
         for j in 0..l {
             let w = batch.lab_w[r * l + j];
@@ -74,22 +214,21 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
                 pos += w * lrow[batch.lab[r * l + j] as usize];
             }
         }
-        loss += (batch.smask[r] * (lse[r] - pos)) as f64;
+        loss += (batch.smask[r] * (scratch.lse[r] - pos)) as f64;
     }
     let loss = (loss / valid as f64) as f32;
 
     // ---- backward ---------------------------------------------------------
     // dlogits = (softmax - y) * smask / n
-    let mut dlogits = vec![0.0f32; b * c_dim];
     for r in 0..b {
         let scale = batch.smask[r] / valid;
         if scale == 0.0 {
             continue;
         }
-        let lrow = &logits[r * c_dim..(r + 1) * c_dim];
-        let drow = &mut dlogits[r * c_dim..(r + 1) * c_dim];
+        let lrow = &scratch.logits[r * c_dim..(r + 1) * c_dim];
+        let drow = &mut scratch.dlogits[r * c_dim..(r + 1) * c_dim];
         for (dl, &lo) in drow.iter_mut().zip(lrow) {
-            *dl = (lo - lse[r]).exp() * scale;
+            *dl = (lo - scratch.lse[r]).exp() * scale;
         }
         for j in 0..l {
             let w = batch.lab_w[r * l + j];
@@ -101,12 +240,11 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
 
     // dh = dlogits @ w2^T ; dw2 = h^T @ dlogits ; db2 = sum dlogits
     // da = dh * (a > 0) ; db1 = sum da
-    let mut da = vec![0.0f32; b * h_dim];
     for r in 0..b {
-        let drow = &dlogits[r * c_dim..(r + 1) * c_dim];
-        let darow = &mut da[r * h_dim..(r + 1) * h_dim];
+        let drow = &scratch.dlogits[r * c_dim..(r + 1) * c_dim];
+        let darow = &mut scratch.da[r * h_dim..(r + 1) * h_dim];
         for hi in 0..h_dim {
-            if a[r * h_dim + hi] > 0.0 {
+            if scratch.a[r * h_dim + hi] > 0.0 {
                 let wrow = &m.w2[hi * c_dim..(hi + 1) * c_dim];
                 let mut acc = 0.0f32;
                 for (&dl, &w) in drow.iter().zip(wrow) {
@@ -120,8 +258,8 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
     // ---- updates (order matters: read h/da before mutating weights) ------
     // w2 -= lr * h^T dlogits ; b2 -= lr * sum dlogits
     for r in 0..b {
-        let hrow = &h[r * h_dim..(r + 1) * h_dim];
-        let drow = &dlogits[r * c_dim..(r + 1) * c_dim];
+        let hrow = &scratch.h[r * h_dim..(r + 1) * h_dim];
+        let drow = &scratch.dlogits[r * c_dim..(r + 1) * c_dim];
         for (hi, &hv) in hrow.iter().enumerate() {
             if hv != 0.0 {
                 let wrow = &mut m.w2[hi * c_dim..(hi + 1) * c_dim];
@@ -133,45 +271,190 @@ pub fn sgd_step_ref(m: &mut ModelState, batch: &PaddedBatch, lr: f32) -> f32 {
         }
     }
     for r in 0..b {
-        let drow = &dlogits[r * c_dim..(r + 1) * c_dim];
+        let drow = &scratch.dlogits[r * c_dim..(r + 1) * c_dim];
         for (bb, &dl) in m.b2.iter_mut().zip(drow) {
             *bb -= lr * dl;
         }
     }
 
     // b1 -= lr * sum da ; w1[idx] -= lr * val * da  (sparse scatter)
-    for r in 0..b {
-        let darow = &da[r * h_dim..(r + 1) * h_dim];
-        for (bb, &dv) in m.b1.iter_mut().zip(darow) {
-            *bb -= lr * dv;
-        }
+    update_input_layer(m, batch, lr, scratch);
+
+    loss
+}
+
+/// One batch-level **active-class** SGD step: the softmax, loss, and
+/// output-layer backward/update are restricted to the classes in `active`
+/// (SLIDE's trick, lifted from the per-sample Hogwild path in
+/// `slide/network.rs` onto a plain [`ModelState`] so the execution engines
+/// can schedule it). The input layer stays exact.
+///
+/// `active` must be sorted ascending, deduplicated, and contain every
+/// class that appears with nonzero label weight in the batch (labels must
+/// participate in their own softmax). Returns the batch loss over the
+/// restricted softmax.
+///
+/// With `active` = all classes this performs the dense path's exact
+/// floating-point operations in the same order — bit-identical to
+/// [`sgd_step_scratch`] — and classes outside `active` have their `w2`
+/// columns and `b2` entries neither read nor written.
+pub fn sgd_step_active(
+    m: &mut ModelState,
+    batch: &PaddedBatch,
+    lr: f32,
+    active: &[u32],
+    scratch: &mut StepScratch,
+) -> f32 {
+    forward_hidden(m, batch, scratch);
+    sgd_step_active_prepared(m, batch, lr, active, scratch)
+}
+
+/// [`sgd_step_active`] continuing from a forward pass already in
+/// `scratch` (via [`forward_hidden`] on the same `m`/`batch`) — the
+/// sparsity stepper runs the forward once, queries its LSH tables with the
+/// hidden rows, then finishes the step here without recomputing them.
+pub fn sgd_step_active_prepared(
+    m: &mut ModelState,
+    batch: &PaddedBatch,
+    lr: f32,
+    active: &[u32],
+    scratch: &mut StepScratch,
+) -> f32 {
+    let d = &m.dims;
+    let (h_dim, c_dim, l) = (d.hidden, d.classes, d.max_labels);
+    let b = batch.bucket;
+    let n_act = active.len();
+    debug_assert!(n_act > 0, "active set must be non-empty");
+    debug_assert!(active.windows(2).all(|w| w[0] < w[1]), "active must be sorted + deduped");
+    debug_assert!(active.last().map(|&c| (c as usize) < c_dim).unwrap_or(true));
+    debug_assert_eq!(scratch.h.len(), b * h_dim, "forward_hidden must run first");
+    scratch.prepare_output(b, n_act);
+
+    // class id -> active position (u32::MAX = inactive).
+    scratch.class_pos.clear();
+    scratch.class_pos.resize(c_dim, u32::MAX);
+    for (j, &c) in active.iter().enumerate() {
+        scratch.class_pos[c as usize] = j as u32;
     }
+
+    // logits[:, j] = h @ w2[:, active[j]] + b2[active[j]]
     for r in 0..b {
-        let darow = &da[r * h_dim..(r + 1) * h_dim];
-        for j in 0..k {
-            let v = batch.val[r * k + j];
-            if v != 0.0 {
-                let fi = batch.idx[r * k + j] as usize;
-                let wrow = &mut m.w1[fi * h_dim..(fi + 1) * h_dim];
-                let s = lr * v;
-                for (w, &dv) in wrow.iter_mut().zip(darow) {
-                    *w -= s * dv;
+        let lrow = &mut scratch.logits[r * n_act..(r + 1) * n_act];
+        for (lo, &c) in lrow.iter_mut().zip(active) {
+            *lo = m.b2[c as usize];
+        }
+        let hrow = &scratch.h[r * h_dim..(r + 1) * h_dim];
+        for (hi, &hv) in hrow.iter().enumerate() {
+            if hv != 0.0 {
+                let wrow = &m.w2[hi * c_dim..(hi + 1) * c_dim];
+                for (lo, &c) in lrow.iter_mut().zip(active) {
+                    *lo += hv * wrow[c as usize];
                 }
             }
         }
     }
 
+    // Restricted-softmax loss over the active set.
+    let valid: f32 = batch.smask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f64;
+    for r in 0..b {
+        let lrow = &scratch.logits[r * n_act..(r + 1) * n_act];
+        let mx = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = lrow.iter().map(|&x| (x - mx).exp()).sum();
+        scratch.lse[r] = mx + sum.ln();
+        let mut pos = 0.0f32;
+        for j in 0..l {
+            let w = batch.lab_w[r * l + j];
+            if w != 0.0 {
+                let p = scratch.class_pos[batch.lab[r * l + j] as usize];
+                debug_assert!(p != u32::MAX, "label class missing from the active set");
+                pos += w * lrow[p as usize];
+            }
+        }
+        loss += (batch.smask[r] * (scratch.lse[r] - pos)) as f64;
+    }
+    let loss = (loss / valid as f64) as f32;
+
+    // ---- backward over active classes -------------------------------------
+    for r in 0..b {
+        let scale = batch.smask[r] / valid;
+        if scale == 0.0 {
+            continue;
+        }
+        let lrow = &scratch.logits[r * n_act..(r + 1) * n_act];
+        let drow = &mut scratch.dlogits[r * n_act..(r + 1) * n_act];
+        for (dl, &lo) in drow.iter_mut().zip(lrow) {
+            *dl = (lo - scratch.lse[r]).exp() * scale;
+        }
+        for j in 0..l {
+            let w = batch.lab_w[r * l + j];
+            if w != 0.0 {
+                let p = scratch.class_pos[batch.lab[r * l + j] as usize];
+                drow[p as usize] -= w * scale;
+            }
+        }
+    }
+
+    for r in 0..b {
+        let drow = &scratch.dlogits[r * n_act..(r + 1) * n_act];
+        let darow = &mut scratch.da[r * h_dim..(r + 1) * h_dim];
+        for hi in 0..h_dim {
+            if scratch.a[r * h_dim + hi] > 0.0 {
+                let wrow = &m.w2[hi * c_dim..(hi + 1) * c_dim];
+                let mut acc = 0.0f32;
+                for (&dl, &c) in drow.iter().zip(active) {
+                    acc += dl * wrow[c as usize];
+                }
+                darow[hi] = acc;
+            }
+        }
+    }
+
+    // ---- updates: active columns of w2/b2, then the exact input layer ----
+    for r in 0..b {
+        let hrow = &scratch.h[r * h_dim..(r + 1) * h_dim];
+        let drow = &scratch.dlogits[r * n_act..(r + 1) * n_act];
+        for (hi, &hv) in hrow.iter().enumerate() {
+            if hv != 0.0 {
+                let wrow = &mut m.w2[hi * c_dim..(hi + 1) * c_dim];
+                let s = lr * hv;
+                for (&dl, &c) in drow.iter().zip(active) {
+                    wrow[c as usize] -= s * dl;
+                }
+            }
+        }
+    }
+    for r in 0..b {
+        let drow = &scratch.dlogits[r * n_act..(r + 1) * n_act];
+        for (&dl, &c) in drow.iter().zip(active) {
+            m.b2[c as usize] -= lr * dl;
+        }
+    }
+
+    update_input_layer(m, batch, lr, scratch);
+
     loss
 }
 
 /// Forward-only top-1 prediction (mirrors model.py `eval_batch`).
+/// Allocates its row buffers per call; hot paths should use
+/// [`eval_scratch`].
 pub fn eval_ref(m: &ModelState, batch: &PaddedBatch) -> Vec<i32> {
+    eval_scratch(m, batch, &mut StepScratch::new())
+}
+
+/// [`eval_ref`] with caller-owned row buffers — identical predictions, no
+/// per-call allocation beyond the returned vector.
+pub fn eval_scratch(m: &ModelState, batch: &PaddedBatch, scratch: &mut StepScratch) -> Vec<i32> {
     let d = &m.dims;
     let (h_dim, c_dim, k) = (d.hidden, d.classes, d.max_nnz);
     let b = batch.bucket;
     let mut preds = vec![0i32; b];
-    let mut arow = vec![0.0f32; h_dim];
-    let mut lrow = vec![0.0f32; c_dim];
+    scratch.arow.clear();
+    scratch.arow.resize(h_dim, 0.0);
+    scratch.lrow.clear();
+    scratch.lrow.resize(c_dim, 0.0);
+    let (arow, lrow) = (&mut scratch.arow, &mut scratch.lrow);
     for r in 0..b {
         arow.copy_from_slice(&m.b1);
         for j in 0..k {
@@ -202,6 +485,61 @@ pub fn eval_ref(m: &ModelState, batch: &PaddedBatch) -> Vec<i32> {
             }
         }
         preds[r] = best as i32;
+    }
+    preds
+}
+
+/// Approximate forward-only top-1 restricted to `active` (sorted class
+/// ids): the serving plane's cheap inference mode — only the active
+/// columns of the output layer are read. Predictions are the argmax over
+/// the active set (lowest class id on ties).
+pub fn eval_active(
+    m: &ModelState,
+    batch: &PaddedBatch,
+    active: &[u32],
+    scratch: &mut StepScratch,
+) -> Vec<i32> {
+    let d = &m.dims;
+    let (h_dim, c_dim, kk) = (d.hidden, d.classes, d.max_nnz);
+    let b = batch.bucket;
+    debug_assert!(!active.is_empty());
+    let mut preds = vec![0i32; b];
+    scratch.arow.clear();
+    scratch.arow.resize(h_dim, 0.0);
+    scratch.lrow.clear();
+    scratch.lrow.resize(active.len(), 0.0);
+    let (arow, lrow) = (&mut scratch.arow, &mut scratch.lrow);
+    for r in 0..b {
+        arow.copy_from_slice(&m.b1);
+        for j in 0..kk {
+            let v = batch.val[r * kk + j];
+            if v != 0.0 {
+                let fi = batch.idx[r * kk + j] as usize;
+                let wrow = &m.w1[fi * h_dim..(fi + 1) * h_dim];
+                for (acc, &w) in arow.iter_mut().zip(wrow) {
+                    *acc += v * w;
+                }
+            }
+        }
+        for (lo, &c) in lrow.iter_mut().zip(active) {
+            *lo = m.b2[c as usize];
+        }
+        for (hi, &av) in arow.iter().enumerate() {
+            let hv = av.max(0.0);
+            if hv != 0.0 {
+                let wrow = &m.w2[hi * c_dim..(hi + 1) * c_dim];
+                for (lo, &c) in lrow.iter_mut().zip(active) {
+                    *lo += hv * wrow[c as usize];
+                }
+            }
+        }
+        let mut best = 0usize;
+        for (j, &v) in lrow.iter().enumerate() {
+            if v > lrow[best] {
+                best = j;
+            }
+        }
+        preds[r] = active[best] as i32;
     }
     preds
 }
@@ -255,6 +593,114 @@ mod tests {
         let l2 = sgd_step_ref(&mut m2, &tight, 0.05);
         assert!((l1 - l2).abs() < 1e-6);
         assert!(m1.max_abs_diff(&m2) < 1e-6);
+    }
+
+    #[test]
+    fn recycled_scratch_is_bit_identical_to_fresh() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 13);
+        // Warm the scratch on a different (larger) shape first so reuse
+        // actually exercises the resize-and-zero path.
+        let warm = batcher.next_batch(32, 32);
+        let b1 = batcher.next_batch(16, 16);
+        let b2 = batcher.next_batch(16, 16);
+
+        let mut scratch = StepScratch::new();
+        let mut warm_model = ModelState::init(&dims, 3);
+        sgd_step_scratch(&mut warm_model, &warm, 0.1, &mut scratch);
+
+        let mut fresh_m = ModelState::init(&dims, 4);
+        let mut pooled_m = fresh_m.clone();
+        for batch in [&b1, &b2] {
+            let lf = sgd_step_ref(&mut fresh_m, batch, 0.07);
+            let lp = sgd_step_scratch(&mut pooled_m, batch, 0.07, &mut scratch);
+            assert_eq!(lf.to_bits(), lp.to_bits(), "loss must be bit-identical");
+        }
+        assert_eq!(fresh_m, pooled_m, "recycled scratch changed the step");
+        // Eval path too.
+        let ef = eval_ref(&fresh_m, &b1);
+        let ep = eval_scratch(&pooled_m, &b1, &mut scratch);
+        assert_eq!(ef, ep);
+    }
+
+    #[test]
+    fn full_active_set_is_bit_identical_to_dense() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 17);
+        let batch = batcher.next_batch(16, 16);
+        let all: Vec<u32> = (0..dims.classes as u32).collect();
+
+        let mut dense = ModelState::init(&dims, 8);
+        let mut sparse = dense.clone();
+        let mut scratch = StepScratch::new();
+        let ld = sgd_step_ref(&mut dense, &batch, 0.05);
+        let ls = sgd_step_active(&mut sparse, &batch, 0.05, &all, &mut scratch);
+        assert_eq!(ld.to_bits(), ls.to_bits(), "loss bits {ld} vs {ls}");
+        assert_eq!(dense, sparse, "ratio=1.0 must reproduce the dense path exactly");
+    }
+
+    #[test]
+    fn inactive_classes_are_never_touched() {
+        // Property: for random active subsets (labels always included),
+        // w2 columns and b2 entries outside the active set keep their
+        // exact bits, while active-class parameters move.
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 23);
+        let mut rng = crate::util::rng::Rng::new(77);
+        for trial in 0..10 {
+            let batch = batcher.next_batch(8, 8);
+            // Labels present in the batch must participate.
+            let mut active: Vec<u32> = Vec::new();
+            for r in 0..batch.bucket {
+                for j in 0..dims.max_labels {
+                    if batch.lab_w[r * dims.max_labels + j] != 0.0 {
+                        active.push(batch.lab[r * dims.max_labels + j]);
+                    }
+                }
+            }
+            // Plus a random handful of extra classes.
+            for _ in 0..rng.range(1, 8) {
+                active.push(rng.range(0, dims.classes) as u32);
+            }
+            active.sort_unstable();
+            active.dedup();
+
+            let before = ModelState::init(&dims, 100 + trial);
+            let mut after = before.clone();
+            let mut scratch = StepScratch::new();
+            sgd_step_active(&mut after, &batch, 0.1, &active, &mut scratch);
+
+            let is_active = |c: usize| active.binary_search(&(c as u32)).is_ok();
+            let mut active_moved = false;
+            for c in 0..dims.classes {
+                let b2_same = before.b2[c].to_bits() == after.b2[c].to_bits();
+                let col_same = (0..dims.hidden).all(|hi| {
+                    let i = hi * dims.classes + c;
+                    before.w2[i].to_bits() == after.w2[i].to_bits()
+                });
+                if is_active(c) {
+                    active_moved |= !b2_same || !col_same;
+                } else {
+                    assert!(b2_same && col_same, "trial {trial}: inactive class {c} was touched");
+                }
+            }
+            assert!(active_moved, "trial {trial}: the active set must actually train");
+        }
+    }
+
+    #[test]
+    fn eval_active_full_set_matches_dense_eval() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 29);
+        let batch = batcher.next_batch(16, 16);
+        let m = ModelState::init(&dims, 31);
+        let all: Vec<u32> = (0..dims.classes as u32).collect();
+        let mut scratch = StepScratch::new();
+        assert_eq!(eval_ref(&m, &batch), eval_active(&m, &batch, &all, &mut scratch));
+        // A restricted set still predicts within that set.
+        let subset: Vec<u32> = (0..dims.classes as u32).step_by(3).collect();
+        let preds = eval_active(&m, &batch, &subset, &mut scratch);
+        assert!(preds.iter().all(|&p| subset.contains(&(p as u32))));
     }
 
     #[test]

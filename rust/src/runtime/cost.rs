@@ -51,6 +51,12 @@ pub struct CostModel {
     /// serving plane charges `t_fixed + infer_fraction × (nnz + sample)`
     /// per micro-batch.
     pub infer_fraction: f64,
+    /// Share of the per-sample dense cost that does *not* shrink with the
+    /// active-class sparsity ratio (hidden-layer work, LSH queries,
+    /// selection bookkeeping). The remaining `1 - sparsity_floor` is
+    /// output-layer work and scales linearly with the ratio — see
+    /// [`CostModel::sparsity_factor`].
+    pub sparsity_floor: f64,
 }
 
 impl Default for CostModel {
@@ -63,6 +69,7 @@ impl Default for CostModel {
             t_per_param_xfer: 0.15e-9,
             t_merge_fixed: 4e-3,
             infer_fraction: 0.35,
+            sparsity_floor: 0.1,
         }
     }
 }
@@ -75,7 +82,27 @@ impl CostModel {
 
     /// [`step_time`](CostModel::step_time) from raw (bucket, nnz) parts.
     pub fn step_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
-        self.t_fixed + self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64
+        self.step_time_parts_at(bucket, nnz, 1.0)
+    }
+
+    /// Multiplier the active-class ratio applies to the dense per-sample
+    /// term: `sparsity_floor + (1 - sparsity_floor) · ratio`. Returns the
+    /// literal `1.0` at `ratio >= 1.0` so the exact path's predicted cost
+    /// is bit-identical to the pre-sparsity model (no float round-trip).
+    pub fn sparsity_factor(&self, ratio: f64) -> f64 {
+        if ratio >= 1.0 {
+            1.0
+        } else {
+            self.sparsity_floor + (1.0 - self.sparsity_floor) * ratio.max(0.0)
+        }
+    }
+
+    /// Step time at a given active-class sparsity ratio: only the dense
+    /// per-sample term shrinks; gather and fixed costs are ratio-blind.
+    pub fn step_time_parts_at(&self, bucket: usize, nnz: usize, ratio: f64) -> f64 {
+        self.t_fixed
+            + self.t_per_nnz * nnz as f64
+            + self.t_per_sample * bucket as f64 * self.sparsity_factor(ratio)
     }
 
     /// Nominal forward-only (inference) time for a padded batch.
@@ -85,9 +112,16 @@ impl CostModel {
 
     /// [`infer_time`](CostModel::infer_time) from raw (bucket, nnz) parts.
     pub fn infer_time_parts(&self, bucket: usize, nnz: usize) -> f64 {
+        self.infer_time_parts_at(bucket, nnz, 1.0)
+    }
+
+    /// Inference time at a given active-class sparsity ratio (approximate
+    /// LSH top-k serving).
+    pub fn infer_time_parts_at(&self, bucket: usize, nnz: usize, ratio: f64) -> f64 {
         self.t_fixed
             + self.infer_fraction
-                * (self.t_per_nnz * nnz as f64 + self.t_per_sample * bucket as f64)
+                * (self.t_per_nnz * nnz as f64
+                    + self.t_per_sample * bucket as f64 * self.sparsity_factor(ratio))
     }
 
     /// One ring/tree hop transferring `params` parameters.
@@ -127,6 +161,7 @@ impl CostModel {
             t_per_param_xfer: base.t_per_param_xfer,
             t_merge_fixed: base.t_merge_fixed,
             infer_fraction: base.infer_fraction,
+            sparsity_floor: base.sparsity_floor,
         })
     }
 }
@@ -249,5 +284,32 @@ mod tests {
     fn transfer_scales_with_params() {
         let m = CostModel::default();
         assert!(m.transfer_time(2_000_000) > m.transfer_time(1_000_000));
+    }
+
+    #[test]
+    fn sparsity_ladder_is_monotone_and_exact_at_one() {
+        let m = CostModel::default();
+        // ratio >= 1.0 is the literal identity — the exact path's cost is
+        // bit-identical to the pre-sparsity model.
+        assert_eq!(m.sparsity_factor(1.0), 1.0);
+        assert_eq!(m.sparsity_factor(1.5), 1.0);
+        assert_eq!(
+            m.step_time_parts_at(64, 1000, 1.0).to_bits(),
+            m.step_time_parts(64, 1000).to_bits()
+        );
+        // Strictly cheaper as the ratio falls, never below the ratio-blind
+        // floor (fixed + gather + sparsity_floor share of dense).
+        let ladder = [1.0, 0.75, 0.5, 0.25, 0.05];
+        for w in ladder.windows(2) {
+            assert!(
+                m.step_time_parts_at(64, 1000, w[0]) > m.step_time_parts_at(64, 1000, w[1]),
+                "step cost must fall from ratio {} to {}",
+                w[0],
+                w[1]
+            );
+            assert!(m.infer_time_parts_at(64, 1000, w[0]) > m.infer_time_parts_at(64, 1000, w[1]));
+        }
+        let floor = m.t_fixed + m.t_per_nnz * 1000.0;
+        assert!(m.step_time_parts_at(64, 1000, 0.0) > floor);
     }
 }

@@ -107,9 +107,19 @@ impl SimDevice {
 
     /// Virtual-time engine: full simulated duration (seconds) of one step.
     pub fn step_duration(&mut self, cost: &CostModel, batch: &PaddedBatch) -> f64 {
+        self.step_duration_at(cost, batch, 1.0)
+    }
+
+    /// Step duration at an active-class sparsity ratio — the dense
+    /// per-sample term shrinks by [`CostModel::sparsity_factor`], gather
+    /// and fixed costs do not. `ratio = 1.0` multiplies by the literal
+    /// `1.0`, so the exact path's clock is bit-identical to
+    /// [`step_duration`](SimDevice::step_duration) (and the jitter RNG
+    /// advances once either way).
+    pub fn step_duration_at(&mut self, cost: &CostModel, batch: &PaddedBatch, ratio: f64) -> f64 {
         let nominal = cost.t_fixed
             + cost.t_per_nnz * batch.nnz as f64 * self.nnz_sensitivity
-            + cost.t_per_sample * batch.bucket as f64;
+            + cost.t_per_sample * batch.bucket as f64 * cost.sparsity_factor(ratio);
         nominal * self.next_multiplier()
     }
 
@@ -124,10 +134,17 @@ impl SimDevice {
     /// pass — same heterogeneity model as training steps, forward-fraction
     /// cost (see [`CostModel::infer_time_parts`]).
     pub fn infer_duration(&mut self, cost: &CostModel, batch: &PaddedBatch) -> f64 {
+        self.infer_duration_at(cost, batch, 1.0)
+    }
+
+    /// Inference duration at an active-class sparsity ratio (approximate
+    /// LSH top-k serving; `1.0` = exact, bit-identical to
+    /// [`infer_duration`](SimDevice::infer_duration)).
+    pub fn infer_duration_at(&mut self, cost: &CostModel, batch: &PaddedBatch, ratio: f64) -> f64 {
         let nominal = cost.t_fixed
             + cost.infer_fraction
                 * (cost.t_per_nnz * batch.nnz as f64 * self.nnz_sensitivity
-                    + cost.t_per_sample * batch.bucket as f64);
+                    + cost.t_per_sample * batch.bucket as f64 * cost.sparsity_factor(ratio));
         nominal * self.next_multiplier()
     }
 }
@@ -232,6 +249,25 @@ mod tests {
         assert!((throttled - 1.8 * nominal).abs() < 1e-12, "{throttled} vs {nominal}");
         d.set_drift(1.0);
         assert_eq!(d.step_duration(&cost, &b), nominal, "recover restores nominal exactly");
+    }
+
+    #[test]
+    fn sparsity_lowers_step_duration_monotonically() {
+        let cfg = DeviceConfig { jitter: 0.0, ..Default::default() };
+        let cost = CostModel::default();
+        let mut d = SimDevice::new(0, &cfg);
+        let b = batch(64, 64 * 12);
+        // ratio = 1.0 is exactly the dense clock.
+        assert_eq!(d.step_duration_at(&cost, &b, 1.0), d.step_duration(&cost, &b));
+        let ladder = [1.0, 0.75, 0.5, 0.25, 0.05];
+        let ts: Vec<f64> = ladder.iter().map(|&r| d.step_duration_at(&cost, &b, r)).collect();
+        for w in ts.windows(2) {
+            assert!(w[0] > w[1], "cost must fall down the ladder: {ts:?}");
+        }
+        let is: Vec<f64> = ladder.iter().map(|&r| d.infer_duration_at(&cost, &b, r)).collect();
+        for w in is.windows(2) {
+            assert!(w[0] > w[1], "infer cost must fall down the ladder: {is:?}");
+        }
     }
 
     #[test]

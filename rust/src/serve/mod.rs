@@ -86,6 +86,14 @@ pub fn replay(
     let mut pool = DevicePool::with_trace(cfg, &cfg.serve.events)?;
     let mut router =
         Router::new(DevicePool::roster(cfg), pool.active_ids(), CostModel::default());
+    // Sparsity lever: with `[slide] serve_slo_ms > 0` the router watches the
+    // windowed p95 and flips replicas to approximate LSH top-k inference at
+    // `serve_ratio` under SLO pressure. Disarmed (the default) this whole
+    // block is inert and the replay is bit-identical to the exact path.
+    router.configure_slo(&cfg.slide);
+    let mut stepper = crate::slide::SparseStepper::new(&cfg.slide, 0x5E4E);
+    stepper.set_ratio(cfg.slide.serve_ratio);
+    let mut scratch = crate::model::reference::StepScratch::new();
 
     let window = cfg.serve.window;
     let mut requests: Vec<RequestRecord> = Vec::with_capacity(arrivals.len());
@@ -121,6 +129,8 @@ pub fn replay(
     let dispatch = |ab: AdmittedBatch,
                         admission: &Admission,
                         router: &mut Router,
+                        stepper: &mut crate::slide::SparseStepper,
+                        scratch: &mut crate::model::reference::StepScratch,
                         requests: &mut Vec<RequestRecord>,
                         batches: &mut Vec<BatchRecord>|
      -> Result<()> {
@@ -132,7 +142,11 @@ pub fn replay(
         }
         .expect("registry checked non-empty");
         let routed = router.route(t, &ab.batch);
-        let preds = eval_backend.eval(&snap.model, &ab.batch)?;
+        let preds = if router.approx_mode() {
+            stepper.eval(&snap.model, &ab.batch, scratch)
+        } else {
+            eval_backend.eval_scratch(&snap.model, &ab.batch, scratch)?
+        };
         // Staleness in mega-batches: how far training had moved past the
         // served snapshot. Timeline replays measure against the training
         // clock at formation time; steady-state (post-training) serving
@@ -151,6 +165,7 @@ pub fn replay(
         for (row, (&rid, &arrival)) in ab.request_ids.iter().zip(&ab.arrivals).enumerate() {
             let sample_id = ab.batch.sample_ids[row] as usize;
             let hit = data.sample(sample_id).labels.contains(&(preds[row].max(0) as u32));
+            router.observe_latency(routed.completion - arrival);
             requests.push(RequestRecord {
                 id: rid,
                 arrival,
@@ -187,12 +202,28 @@ pub fn replay(
             i += 1;
             depth_samples.push((t_arr, admission.queue_depth()));
             while let Some(ab) = admission.pop_full(t_arr) {
-                dispatch(ab, &admission, &mut router, &mut requests, &mut batches)?;
+                dispatch(
+                    ab,
+                    &admission,
+                    &mut router,
+                    &mut stepper,
+                    &mut scratch,
+                    &mut requests,
+                    &mut batches,
+                )?;
             }
         } else {
             churn_until(t_dead, &mut pool, &mut router, &mut pool_events);
             if let Some(ab) = admission.flush(t_dead) {
-                dispatch(ab, &admission, &mut router, &mut requests, &mut batches)?;
+                dispatch(
+                    ab,
+                    &admission,
+                    &mut router,
+                    &mut stepper,
+                    &mut scratch,
+                    &mut requests,
+                    &mut batches,
+                )?;
             }
         }
     }

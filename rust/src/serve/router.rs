@@ -56,7 +56,24 @@ pub struct Router {
     /// micro-batch).
     pred_secs: Vec<f64>,
     routed: Vec<u64>,
+    /// Latency SLO in seconds (0 = the sparsity lever is off and routing
+    /// is bit-identical to the historical exact-only path).
+    slo: f64,
+    /// Active-class ratio replicas run while in approximate mode.
+    serve_ratio: f64,
+    /// Whether replicas currently serve approximate (LSH top-k) inference.
+    approx: bool,
+    /// Sliding window of observed request latencies (ring buffer).
+    lat_window: Vec<f64>,
+    lat_pos: usize,
+    mode_switches: u64,
 }
+
+/// Latency samples the router keeps for its windowed p95.
+const LAT_WINDOW_CAP: usize = 64;
+/// Don't flip modes off fewer samples than this — one stray tail latency
+/// at cold start shouldn't degrade accuracy fleet-wide.
+const LAT_MIN_SAMPLES: usize = 16;
 
 impl Router {
     /// `devices` is the full roster ([`DevicePool::roster`]); `active` the
@@ -73,6 +90,12 @@ impl Router {
             view: None,
             pred_secs: Vec::with_capacity(n),
             routed: vec![0; n],
+            slo: 0.0,
+            serve_ratio: 1.0,
+            approx: false,
+            lat_window: Vec::with_capacity(LAT_WINDOW_CAP),
+            lat_pos: 0,
+            mode_switches: 0,
         };
         r.set_active(&active);
         r
@@ -114,9 +137,10 @@ impl Router {
     /// `coordinator::dispatch`), then its virtual clock advances by the
     /// heterogeneity-modeled inference duration.
     pub fn route(&mut self, now: f64, batch: &PaddedBatch) -> Routed {
+        let ratio = if self.approx { self.serve_ratio } else { 1.0 };
         let device = match &self.view {
             Some(view) => {
-                let nominal = self.cost.infer_time_parts(batch.bucket, batch.nnz);
+                let nominal = self.cost.infer_time_parts_at(batch.bucket, batch.nnz, ratio);
                 self.pred_secs.clear();
                 self.pred_secs.extend((0..self.devices.len()).map(|d| view.speed(d) * nominal));
                 next_completion_device(&self.free_time, now, &self.pred_secs, |d| {
@@ -127,10 +151,67 @@ impl Router {
         }
         .expect("router has an active device");
         let start = self.free_time[device].max(now);
-        let completion = start + self.devices[device].infer_duration(&self.cost, batch);
+        let completion = start + self.devices[device].infer_duration_at(&self.cost, batch, ratio);
         self.free_time[device] = completion;
         self.routed[device] += 1;
         Routed { device, start, completion }
+    }
+
+    /// Arm the sparsity lever (`[slide] serve_slo_ms` / `serve_ratio`):
+    /// when the windowed p95 of observed latencies nears `slo` the router
+    /// flips replicas to approximate LSH top-k inference at `serve_ratio`,
+    /// and flips back to exact once load subsides. `serve_slo_ms = 0`
+    /// (the default) leaves every route bit-identical to the exact path.
+    pub fn configure_slo(&mut self, sec: &crate::config::SlideConfig) {
+        self.slo = sec.serve_slo_ms / 1_000.0;
+        self.serve_ratio = sec.serve_ratio;
+    }
+
+    /// Feed one completed request's latency (seconds, virtual clock) into
+    /// the SLO window. Hysteresis keeps the mode from flapping: engage
+    /// approximate at p95 ≥ 0.9·SLO, return to exact at p95 ≤ 0.6·SLO.
+    pub fn observe_latency(&mut self, latency: f64) {
+        if self.slo <= 0.0 {
+            return;
+        }
+        if self.lat_window.len() < LAT_WINDOW_CAP {
+            self.lat_window.push(latency);
+        } else {
+            self.lat_window[self.lat_pos] = latency;
+            self.lat_pos = (self.lat_pos + 1) % LAT_WINDOW_CAP;
+        }
+        if self.lat_window.len() < LAT_MIN_SAMPLES {
+            return;
+        }
+        let p95 = self.windowed_p95();
+        if !self.approx && p95 >= 0.9 * self.slo {
+            self.approx = true;
+            self.mode_switches += 1;
+        } else if self.approx && p95 <= 0.6 * self.slo {
+            self.approx = false;
+            self.mode_switches += 1;
+        }
+    }
+
+    /// Windowed p95 of observed latencies (0 before any observation).
+    pub fn windowed_p95(&self) -> f64 {
+        if self.lat_window.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.lat_window.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() as f64 * 0.95).ceil() as usize).max(1) - 1;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Whether replicas are currently serving approximate inference.
+    pub fn approx_mode(&self) -> bool {
+        self.approx
+    }
+
+    /// How many exact↔approximate transitions have happened.
+    pub fn mode_switches(&self) -> u64 {
+        self.mode_switches
     }
 
     /// Batches routed per roster device so far.
@@ -244,6 +325,7 @@ mod tests {
                     residual_rel: 0.01,
                     observations: 6,
                     drift_events: 1,
+                    sparsity_floor: 0.1,
                 },
             )],
             0.0,
@@ -264,6 +346,79 @@ mod tests {
         let routed_before = r.routed()[0];
         r.route(1e9, &b);
         assert_eq!(r.routed()[0], routed_before + 1, "idle lowest id wins again");
+    }
+
+    #[test]
+    fn slo_pressure_engages_approx_mode_with_hysteresis() {
+        let slide = crate::config::SlideConfig {
+            serve_slo_ms: 10.0,
+            serve_ratio: 0.25,
+            ..Default::default()
+        };
+        let mut r = router(0.0);
+        r.configure_slo(&slide);
+        assert!(!r.approx_mode());
+        // Healthy latencies: stays exact.
+        for _ in 0..32 {
+            r.observe_latency(2e-3);
+        }
+        assert!(!r.approx_mode());
+        assert_eq!(r.mode_switches(), 0);
+        // Load spike pushes p95 past 0.9·SLO → approximate engages.
+        for _ in 0..32 {
+            r.observe_latency(9.5e-3);
+        }
+        assert!(r.approx_mode(), "p95 {} should engage approx", r.windowed_p95());
+        assert_eq!(r.mode_switches(), 1);
+        // Approximate routes are cheaper than exact ones on the same device.
+        let b = batch(32, 32 * 12);
+        let approx_cost = {
+            let routed = r.route(1e6, &b);
+            routed.completion - routed.start
+        };
+        // Mild recovery (between the two thresholds) must NOT flap back.
+        for _ in 0..40 {
+            r.observe_latency(7.5e-3);
+        }
+        assert!(r.approx_mode(), "hysteresis band holds the approximate mode");
+        // Full recovery drops p95 under 0.6·SLO → exact resumes.
+        for _ in 0..64 {
+            r.observe_latency(1e-3);
+        }
+        assert!(!r.approx_mode());
+        assert_eq!(r.mode_switches(), 2);
+        let exact_cost = {
+            let routed = r.route(2e6, &b);
+            routed.completion - routed.start
+        };
+        assert!(
+            approx_cost < exact_cost,
+            "approx service {approx_cost} should beat exact {exact_cost}"
+        );
+    }
+
+    #[test]
+    fn zero_slo_keeps_routing_bit_identical() {
+        let run = |configure: bool| {
+            let mut r = router(0.0);
+            if configure {
+                // serve_slo_ms defaults to 0 — the lever stays disarmed.
+                r.configure_slo(&crate::config::SlideConfig::default());
+                for _ in 0..100 {
+                    r.observe_latency(123.0);
+                }
+            }
+            let b = batch(32, 32 * 12);
+            (0..50).map(|i| r.route(i as f64 * 1e-3, &b)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
+        let mut r = router(0.0);
+        r.configure_slo(&crate::config::SlideConfig::default());
+        for _ in 0..100 {
+            r.observe_latency(123.0);
+        }
+        assert!(!r.approx_mode());
+        assert_eq!(r.mode_switches(), 0);
     }
 
     #[test]

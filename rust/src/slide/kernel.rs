@@ -1,0 +1,421 @@
+//! The adaptive-sparsity compute lever: batch-level LSH active-class
+//! stepping on a plain [`ModelState`].
+//!
+//! [`SparseStepper`] wraps the reusable active-set kernels from
+//! `model::reference` with everything a scheduled compute path needs:
+//! per-device LSH tables rebuilt on a staleness budget, active-set
+//! selection (labels ∪ LSH candidates ∪ random negatives) sized toward a
+//! target **sparsity ratio**, and an approximate inference mode for the
+//! serving plane. The ratio is the schedulable knob: `scaling.rs` lowers
+//! it on slow or throttled devices so their per-step cost shrinks roughly
+//! in proportion to the output-layer work skipped, instead of only
+//! shrinking their batches.
+//!
+//! # Invariants
+//!
+//! * `ratio >= 1.0` delegates to the dense `sgd_step_scratch` /
+//!   `eval_scratch` paths — bit-identical to `sgd_step_ref`, no RNG
+//!   advance, no table builds. A stepper pinned at 1.0 is free.
+//! * Every label with nonzero weight in the batch is in the active set.
+//! * Staleness bound: the tables used by a sparse step were rebuilt at
+//!   most `rebuild_every` sparse steps ago (`steps_since_rebuild()` never
+//!   exceeds `rebuild_every` when a step runs).
+
+use crate::config::SlideConfig;
+use crate::data::PaddedBatch;
+use crate::model::reference::{self, StepScratch};
+use crate::model::ModelState;
+use crate::util::rng::Rng;
+
+use super::lsh::LshTables;
+
+/// Per-device driver of the active-class kernels. Owns the LSH tables and
+/// the selection buffers; callers own the model and the [`StepScratch`].
+pub struct SparseStepper {
+    /// Fraction of output classes participating (1.0 = exact dense path).
+    ratio: f64,
+    n_tables: usize,
+    bits: usize,
+    random_negatives: usize,
+    rebuild_every: u64,
+    seed: u64,
+    tables: Option<LshTables>,
+    steps_since_rebuild: u64,
+    rebuilds: u64,
+    rng: Rng,
+    /// Selection state, reused across steps.
+    active: Vec<u32>,
+    candidates: Vec<u32>,
+    mark: Vec<bool>,
+}
+
+impl SparseStepper {
+    /// Build from the `[slide]` config block. `salt` decorrelates the
+    /// random-negative streams of different devices sharing one config.
+    pub fn new(sec: &SlideConfig, salt: u64) -> SparseStepper {
+        SparseStepper {
+            ratio: 1.0,
+            n_tables: sec.tables,
+            bits: sec.bits,
+            random_negatives: sec.random_negatives,
+            rebuild_every: sec.rebuild_every.max(1),
+            seed: sec.seed ^ salt.wrapping_mul(0x9E37_79B9),
+            tables: None,
+            steps_since_rebuild: 0,
+            rebuilds: 0,
+            rng: Rng::new(sec.seed ^ salt.wrapping_mul(0x85EB_CA6B) ^ 0x5DE3),
+            active: Vec::new(),
+            candidates: Vec::new(),
+            mark: Vec::new(),
+        }
+    }
+
+    /// Current sparsity ratio.
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    /// Set the sparsity ratio (clamped to `[0.01, 1.0]`). Takes effect on
+    /// the next step; existing tables are kept (they do not depend on the
+    /// ratio).
+    pub fn set_ratio(&mut self, ratio: f64) {
+        self.ratio = ratio.clamp(0.01, 1.0);
+    }
+
+    /// Total LSH table rebuilds so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Sparse steps taken since the last rebuild.
+    pub fn steps_since_rebuild(&self) -> u64 {
+        self.steps_since_rebuild
+    }
+
+    /// The active set used by the most recent sparse step (sorted class
+    /// ids; empty if the stepper has only run dense so far).
+    pub fn active(&self) -> &[u32] {
+        &self.active
+    }
+
+    fn maybe_rebuild(&mut self, m: &ModelState) {
+        if self.tables.is_none() || self.steps_since_rebuild >= self.rebuild_every {
+            let seed = self.seed ^ self.rebuilds.wrapping_mul(0xC2B2_AE35);
+            self.tables = Some(LshTables::build(m, self.n_tables, self.bits, seed));
+            self.steps_since_rebuild = 0;
+            self.rebuilds += 1;
+        }
+    }
+
+    /// Number of classes a ratio targets (at least 1).
+    fn target(&self, classes: usize) -> usize {
+        ((self.ratio * classes as f64).ceil() as usize).clamp(1, classes)
+    }
+
+    /// Query the tables with every valid row's hidden activation and merge
+    /// the hits into `active` (stops once `goal` classes are collected).
+    fn collect_lsh_hits(
+        &mut self,
+        batch: &PaddedBatch,
+        scratch: &StepScratch,
+        h_dim: usize,
+        goal: usize,
+    ) {
+        self.candidates.clear();
+        if let Some(t) = &self.tables {
+            for r in 0..batch.bucket {
+                if batch.smask[r] != 0.0 {
+                    t.query_into(scratch.hidden_row(r, h_dim), &mut self.candidates);
+                }
+            }
+        }
+        for i in 0..self.candidates.len() {
+            if self.active.len() >= goal {
+                break;
+            }
+            let cand = self.candidates[i] as usize;
+            if !self.mark[cand] {
+                self.mark[cand] = true;
+                self.active.push(cand as u32);
+            }
+        }
+    }
+
+    /// Training selection: labels ∪ LSH candidates ∪ random negatives,
+    /// sized toward `ratio * classes` (labels always kept; at least
+    /// `random_negatives` non-label classes so a lone label never gets
+    /// softmax probability 1 and a zero gradient).
+    fn select_train(&mut self, batch: &PaddedBatch, scratch: &StepScratch, h_dim: usize, c: usize, l: usize) {
+        self.mark.clear();
+        self.mark.resize(c, false);
+        self.active.clear();
+        for r in 0..batch.bucket {
+            if batch.smask[r] == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                if batch.lab_w[r * l + j] != 0.0 {
+                    let lab = batch.lab[r * l + j] as usize;
+                    if !self.mark[lab] {
+                        self.mark[lab] = true;
+                        self.active.push(lab as u32);
+                    }
+                }
+            }
+        }
+        let n_labels = self.active.len();
+        let goal = self.target(c).max(n_labels + self.random_negatives).min(c);
+        self.collect_lsh_hits(batch, scratch, h_dim, goal);
+        let mut attempts = 0usize;
+        while self.active.len() < goal && attempts < 16 * goal {
+            let cand = self.rng.range(0, c);
+            attempts += 1;
+            if !self.mark[cand] {
+                self.mark[cand] = true;
+                self.active.push(cand as u32);
+            }
+        }
+        // Rejection sampling can stall when goal ≈ classes; finish by scan.
+        if self.active.len() < goal {
+            for cand in 0..c {
+                if self.active.len() >= goal {
+                    break;
+                }
+                if !self.mark[cand] {
+                    self.mark[cand] = true;
+                    self.active.push(cand as u32);
+                }
+            }
+        }
+        self.active.sort_unstable();
+    }
+
+    /// Serving selection: no labels, no randomness — LSH candidates plus a
+    /// deterministic evenly-spaced fill so repeated identical requests get
+    /// identical predictions.
+    fn select_eval(&mut self, batch: &PaddedBatch, scratch: &StepScratch, h_dim: usize, c: usize) {
+        self.mark.clear();
+        self.mark.resize(c, false);
+        self.active.clear();
+        let goal = self.target(c);
+        self.collect_lsh_hits(batch, scratch, h_dim, goal);
+        if self.active.len() < goal {
+            let stride = (c / goal).max(1);
+            for cand in (0..c).step_by(stride) {
+                if self.active.len() >= goal {
+                    break;
+                }
+                if !self.mark[cand] {
+                    self.mark[cand] = true;
+                    self.active.push(cand as u32);
+                }
+            }
+        }
+        if self.active.len() < goal {
+            for cand in 0..c {
+                if self.active.len() >= goal {
+                    break;
+                }
+                if !self.mark[cand] {
+                    self.mark[cand] = true;
+                    self.active.push(cand as u32);
+                }
+            }
+        }
+        self.active.sort_unstable();
+    }
+
+    /// One SGD step at the current ratio. Returns `(loss, active classes)`
+    /// — the dense path reports every class active.
+    pub fn step(
+        &mut self,
+        m: &mut ModelState,
+        batch: &PaddedBatch,
+        lr: f32,
+        scratch: &mut StepScratch,
+    ) -> (f32, usize) {
+        let c = m.dims.classes;
+        if self.ratio >= 1.0 {
+            return (reference::sgd_step_scratch(m, batch, lr, scratch), c);
+        }
+        self.maybe_rebuild(m);
+        reference::forward_hidden(m, batch, scratch);
+        let (h_dim, l) = (m.dims.hidden, m.dims.max_labels);
+        self.select_train(batch, scratch, h_dim, c, l);
+        let loss = reference::sgd_step_active_prepared(m, batch, lr, &self.active, scratch);
+        self.steps_since_rebuild += 1;
+        (loss, self.active.len())
+    }
+
+    /// Forward-only top-1 at the current ratio: exact dense argmax at 1.0,
+    /// an argmax restricted to the LSH-selected active set otherwise.
+    pub fn eval(
+        &mut self,
+        m: &ModelState,
+        batch: &PaddedBatch,
+        scratch: &mut StepScratch,
+    ) -> Vec<i32> {
+        if self.ratio >= 1.0 {
+            return reference::eval_scratch(m, batch, scratch);
+        }
+        self.maybe_rebuild(m);
+        reference::forward_hidden(m, batch, scratch);
+        let (h_dim, c) = (m.dims.hidden, m.dims.classes);
+        self.select_eval(batch, scratch, h_dim, c);
+        self.steps_since_rebuild += 1;
+        let mut preds = vec![0i32; batch.bucket];
+        for (r, pred) in preds.iter_mut().enumerate() {
+            let hrow = scratch.hidden_row(r, h_dim);
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (j, &cls) in self.active.iter().enumerate() {
+                let cls = cls as usize;
+                let mut acc = m.b2[cls];
+                for (hi, &hv) in hrow.iter().enumerate() {
+                    if hv != 0.0 {
+                        acc += hv * m.w2[hi * c + cls];
+                    }
+                }
+                if acc > best_v {
+                    best_v = acc;
+                    best = j;
+                }
+            }
+            *pred = self.active[best] as i32;
+        }
+        preds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelDims};
+    use crate::data::batcher::Batcher;
+    use crate::data::synthetic::Generator;
+    use crate::model::reference::sgd_step_ref;
+
+    fn setup() -> (ModelDims, crate::data::SparseDataset) {
+        let dims = ModelDims { features: 128, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+        let cfg = DataConfig { train_samples: 400, avg_nnz: 6.0, ..Default::default() };
+        let ds = Generator::new(&dims, &cfg).generate(400, 1);
+        (dims, ds)
+    }
+
+    fn section() -> SlideConfig {
+        SlideConfig::default()
+    }
+
+    #[test]
+    fn ratio_one_is_bit_identical_to_dense_and_builds_nothing() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 2);
+        let mut dense = ModelState::init(&dims, 7);
+        let mut stepped = dense.clone();
+        let mut stepper = SparseStepper::new(&section(), 0);
+        let mut scratch = StepScratch::new();
+        for _ in 0..5 {
+            let b = batcher.next_batch(16, 16);
+            let ld = sgd_step_ref(&mut dense, &b, 0.05);
+            let (ls, act) = stepper.step(&mut stepped, &b, 0.05, &mut scratch);
+            assert_eq!(ld.to_bits(), ls.to_bits());
+            assert_eq!(act, dims.classes);
+        }
+        assert_eq!(dense, stepped, "ratio=1.0 must be the dense path exactly");
+        assert_eq!(stepper.rebuilds(), 0, "the dense path must not build tables");
+    }
+
+    #[test]
+    fn sparse_steps_hit_the_target_size_and_keep_labels() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 3);
+        let mut m = ModelState::init(&dims, 8);
+        let mut stepper = SparseStepper::new(&section(), 1);
+        stepper.set_ratio(0.5);
+        let mut scratch = StepScratch::new();
+        for _ in 0..10 {
+            let b = batcher.next_batch(8, 8);
+            let (_, act) = stepper.step(&mut m, &b, 0.05, &mut scratch);
+            assert!(act < dims.classes, "active set must actually be sparse");
+            assert!(act >= (0.5 * dims.classes as f64) as usize);
+            for r in 0..b.bucket {
+                for j in 0..dims.max_labels {
+                    if b.lab_w[r * dims.max_labels + j] != 0.0 {
+                        let lab = b.lab[r * dims.max_labels + j];
+                        assert!(
+                            stepper.active().binary_search(&lab).is_ok(),
+                            "label {lab} missing from the active set"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_staleness_is_bounded() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 5);
+        let mut m = ModelState::init(&dims, 9);
+        let mut sec = section();
+        sec.rebuild_every = 8;
+        let mut stepper = SparseStepper::new(&sec, 2);
+        stepper.set_ratio(0.25);
+        let mut scratch = StepScratch::new();
+        let n = 30u64;
+        for _ in 0..n {
+            let b = batcher.next_batch(8, 8);
+            stepper.step(&mut m, &b, 0.05, &mut scratch);
+            assert!(
+                stepper.steps_since_rebuild() <= sec.rebuild_every,
+                "staleness bound violated: {} > {}",
+                stepper.steps_since_rebuild(),
+                sec.rebuild_every
+            );
+        }
+        // First step builds; thereafter one rebuild per rebuild_every steps.
+        assert_eq!(stepper.rebuilds(), 1 + (n - 1) / sec.rebuild_every);
+        assert_eq!(stepper.steps_since_rebuild(), (n - 1) % sec.rebuild_every + 1);
+    }
+
+    #[test]
+    fn training_at_low_ratio_still_learns() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 11);
+        let mut m = ModelState::init(&dims, 13);
+        let mut sec = section();
+        sec.rebuild_every = 50;
+        let mut stepper = SparseStepper::new(&sec, 3);
+        stepper.set_ratio(0.25);
+        let mut scratch = StepScratch::new();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..120 {
+            let b = batcher.next_batch(32, 32);
+            let (loss, _) = stepper.step(&mut m, &b, 0.1, &mut scratch);
+            last = loss;
+            first.get_or_insert(loss);
+        }
+        assert!(last < first.unwrap(), "sparse loss {} -> {last}", first.unwrap());
+    }
+
+    #[test]
+    fn eval_is_deterministic_and_restricted() {
+        let (dims, ds) = setup();
+        let mut batcher = Batcher::new(&ds, &dims, 17);
+        let b = batcher.next_batch(16, 16);
+        let m = ModelState::init(&dims, 19);
+        let mut scratch = StepScratch::new();
+        let mut s1 = SparseStepper::new(&section(), 4);
+        s1.set_ratio(0.2);
+        let p1 = s1.eval(&m, &b, &mut scratch);
+        let mut s2 = SparseStepper::new(&section(), 4);
+        s2.set_ratio(0.2);
+        let p2 = s2.eval(&m, &b, &mut scratch);
+        assert_eq!(p1, p2, "approximate eval must be deterministic");
+        assert!(p1.iter().all(|&p| s1.active().binary_search(&(p as u32)).is_ok()));
+        // Exact mode matches the reference.
+        let mut sx = SparseStepper::new(&section(), 5);
+        assert_eq!(sx.eval(&m, &b, &mut scratch), reference::eval_ref(&m, &b));
+    }
+}

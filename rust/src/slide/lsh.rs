@@ -5,10 +5,49 @@
 //! hidden activation are retrieved as active-set candidates — SLIDE's core
 //! trick for sampling the softmax.
 
+use crate::model::ModelState;
 use crate::slide::network::SlideModel;
 use crate::util::rng::Rng;
 
 use std::collections::HashMap;
+
+/// Anything exposing output-layer weight columns — the atomic Hogwild store
+/// and the plain coordinator `ModelState` both qualify, so one table
+/// implementation serves the standalone baseline and the adaptive-sparsity
+/// compute path.
+pub trait W2Columns {
+    fn hidden_dim(&self) -> usize;
+    fn class_count(&self) -> usize;
+    /// Copy W2[:, class] into `out` (`out.len() == hidden_dim()`).
+    fn read_w2_column(&self, class: usize, out: &mut [f32]);
+}
+
+impl W2Columns for SlideModel {
+    fn hidden_dim(&self) -> usize {
+        self.hidden
+    }
+    fn class_count(&self) -> usize {
+        self.classes
+    }
+    fn read_w2_column(&self, class: usize, out: &mut [f32]) {
+        SlideModel::read_w2_column(self, class, out)
+    }
+}
+
+impl W2Columns for ModelState {
+    fn hidden_dim(&self) -> usize {
+        self.dims.hidden
+    }
+    fn class_count(&self) -> usize {
+        self.dims.classes
+    }
+    fn read_w2_column(&self, class: usize, out: &mut [f32]) {
+        let c = self.dims.classes;
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.w2[i * c + class];
+        }
+    }
+}
 
 pub struct LshTables {
     /// `projections[t]` holds `bits` random H-dim hyperplanes.
@@ -20,10 +59,15 @@ pub struct LshTables {
 
 impl LshTables {
     /// Hash every class's output-weight column into every table.
-    pub fn build(model: &SlideModel, tables: usize, bits: usize, seed: u64) -> LshTables {
+    pub fn build<M: W2Columns + ?Sized>(
+        model: &M,
+        tables: usize,
+        bits: usize,
+        seed: u64,
+    ) -> LshTables {
         assert!(bits <= 31);
-        let h = model.hidden;
-        let c = model.classes;
+        let h = model.hidden_dim();
+        let c = model.class_count();
         let mut rng = Rng::new(seed);
         let projections: Vec<Vec<Vec<f32>>> = (0..tables)
             .map(|_| {

@@ -14,6 +14,7 @@
 //!   without UB; lost updates are part of the algorithm's contract).
 //! * [`SlideTrainer`] — multi-threaded driver with periodic table rebuilds.
 
+pub mod kernel;
 pub mod lsh;
 pub mod network;
 
@@ -26,10 +27,15 @@ use crate::model::ModelState;
 use crate::util::rng::Rng;
 use crate::Result;
 
+pub use kernel::SparseStepper;
 pub use network::SlideModel;
 
+/// Runtime knobs of the multi-threaded Hogwild trainer. Built from the
+/// unified `[slide]` config block via [`SlideTrainerConfig::from_section`]
+/// so the Fig. 8 baseline and the adaptive-sparsity compute path cannot
+/// drift apart.
 #[derive(Clone, Debug)]
-pub struct SlideConfig {
+pub struct SlideTrainerConfig {
     pub threads: usize,
     pub lr: f32,
     /// LSH tables and bits per table.
@@ -42,9 +48,9 @@ pub struct SlideConfig {
     pub seed: u64,
 }
 
-impl Default for SlideConfig {
+impl Default for SlideTrainerConfig {
     fn default() -> Self {
-        SlideConfig {
+        SlideTrainerConfig {
             threads: 4,
             lr: 0.05,
             tables: 8,
@@ -56,16 +62,33 @@ impl Default for SlideConfig {
     }
 }
 
+impl SlideTrainerConfig {
+    /// Resolve the `[slide]` config block into trainer knobs. `lr = 0`
+    /// in the section means "derive from the SGD plane" — the historical
+    /// Fig. 8 choice of `lr_bmax / 4`.
+    pub fn from_section(sec: &crate::config::SlideConfig, lr_bmax: f32) -> SlideTrainerConfig {
+        SlideTrainerConfig {
+            threads: sec.threads,
+            lr: if sec.lr > 0.0 { sec.lr as f32 } else { lr_bmax / 4.0 },
+            tables: sec.tables,
+            bits: sec.bits,
+            random_negatives: sec.random_negatives,
+            rebuild_every: sec.rebuild_every,
+            seed: sec.seed,
+        }
+    }
+}
+
 /// Multi-threaded SLIDE trainer over a shared atomic model.
 pub struct SlideTrainer {
-    pub cfg: SlideConfig,
+    pub cfg: SlideTrainerConfig,
     pub model: Arc<SlideModel>,
     dims: ModelDims,
     updates: Arc<AtomicU64>,
 }
 
 impl SlideTrainer {
-    pub fn new(dims: &ModelDims, init: &ModelState, cfg: SlideConfig) -> Self {
+    pub fn new(dims: &ModelDims, init: &ModelState, cfg: SlideTrainerConfig) -> Self {
         SlideTrainer {
             model: Arc::new(SlideModel::from_state(init)),
             dims: dims.clone(),
@@ -88,7 +111,7 @@ impl SlideTrainer {
 
         // Initial LSH tables over the output layer.
         let tables = Arc::new(std::sync::RwLock::new(lsh::LshTables::build(
-            &self.model,
+            &*self.model,
             self.cfg.tables,
             self.cfg.bits,
             self.cfg.seed,
@@ -124,7 +147,7 @@ impl SlideTrainer {
                         if t == 0 && since_rebuild >= cfg.rebuild_every {
                             since_rebuild = 0;
                             let rebuilt = lsh::LshTables::build(
-                                &model,
+                                &*model,
                                 cfg.tables,
                                 cfg.bits,
                                 cfg.seed ^ n,
@@ -168,7 +191,7 @@ mod tests {
         let trainer = SlideTrainer::new(
             &dims,
             &init,
-            SlideConfig { threads: 2, lr: 0.25, ..Default::default() },
+            SlideTrainerConfig { threads: 2, lr: 0.25, ..Default::default() },
         );
 
         let eval = EvalBatches::new(&test, &dims, 64);
@@ -201,7 +224,7 @@ mod tests {
         let train = Generator::new(&dims, &dcfg).generate(200, 1);
         let init = ModelState::init(&dims, 1);
         let trainer =
-            SlideTrainer::new(&dims, &init, SlideConfig { threads: 3, ..Default::default() });
+            SlideTrainer::new(&dims, &init, SlideTrainerConfig { threads: 3, ..Default::default() });
         let (samples, _, _) = trainer.train(&train, 30.0, 500).unwrap();
         // Threads may overshoot by at most ~threads samples.
         assert!(samples >= 500 && samples < 600, "samples={samples}");

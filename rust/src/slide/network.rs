@@ -20,7 +20,7 @@ use crate::model::ModelState;
 use crate::util::rng::Rng;
 
 use super::lsh::LshTables;
-use super::SlideConfig;
+use super::SlideTrainerConfig;
 
 const ORD: Ordering = Ordering::Relaxed;
 
@@ -93,7 +93,7 @@ pub fn train_sample(
     dims: &ModelDims,
     sample: &SampleView<'_>,
     tables: &LshTables,
-    cfg: &SlideConfig,
+    cfg: &SlideTrainerConfig,
     rng: &mut Rng,
 ) -> f32 {
     let h_dim = dims.hidden;
@@ -210,7 +210,7 @@ mod tests {
         let dcfg = DataConfig { train_samples: 400, avg_nnz: 5.0, ..Default::default() };
         let ds = Generator::new(&dims, &dcfg).generate(400, 1);
         let model = SlideModel::from_state(&ModelState::init(&dims, 3));
-        let cfg = SlideConfig { lr: 0.2, ..Default::default() };
+        let cfg = SlideTrainerConfig { lr: 0.2, ..Default::default() };
         let tables = LshTables::build(&model, cfg.tables, cfg.bits, 1);
         let mut rng = Rng::new(9);
         let mut first_window = 0.0;
@@ -240,7 +240,7 @@ mod tests {
         let model = SlideModel::from_state(&ModelState::init(&dims, 1));
         // Enough random negatives that the active set is never just the
         // label itself (a lone label gets softmax prob 1 ⇒ zero gradient).
-        let cfg = SlideConfig { random_negatives: 8, ..Default::default() };
+        let cfg = SlideTrainerConfig { random_negatives: 8, ..Default::default() };
         let tables = LshTables::build(&model, 2, 3, 2);
         let mut rng = Rng::new(5);
         let indices = [1u32, 3];

@@ -68,6 +68,10 @@ pub struct Observation {
     pub nnz_per_batch: f64,
     /// Mean observed seconds per batch (simulated or stretched wall).
     pub secs_per_batch: f64,
+    /// Active-class sparsity ratio the device stepped at (1.0 = exact
+    /// dense). The fit scales its nominal workload term accordingly, so
+    /// cheap approximate steps don't read as the device speeding up.
+    pub ratio: f64,
 }
 
 /// The current calibrated estimate for one device.
@@ -88,13 +92,32 @@ pub struct DeviceEstimate {
     pub observations: u64,
     /// Step-drift re-estimates fired so far.
     pub drift_events: u64,
+    /// This device's fitted cost-vs-sparsity floor: the share of its
+    /// per-sample cost that did *not* shrink when it stepped at reduced
+    /// ratios. Seeds from the nominal model's `sparsity_floor` and is
+    /// EWMA-refined from sparse-step observations.
+    pub sparsity_floor: f64,
 }
 
 impl DeviceEstimate {
     /// Predicted seconds for one step of a `bucket`-sized batch carrying
     /// `nnz` non-zeros, under this estimate of the device.
     pub fn step_secs(&self, nominal: &CostModel, bucket: usize, nnz: f64) -> f64 {
-        self.t_fixed + self.slope * variable_cost(nominal, bucket, nnz)
+        self.step_secs_at(nominal, bucket, nnz, 1.0)
+    }
+
+    /// [`step_secs`](DeviceEstimate::step_secs) at an active-class
+    /// sparsity ratio, using this device's *fitted* cost-vs-sparsity
+    /// curve — the scaling plane inverts this to pick (batch, ratio)
+    /// pairs.
+    pub fn step_secs_at(&self, nominal: &CostModel, bucket: usize, nnz: f64, ratio: f64) -> f64 {
+        let factor = if ratio >= 1.0 {
+            1.0
+        } else {
+            self.sparsity_floor + (1.0 - self.sparsity_floor) * ratio.max(0.0)
+        };
+        self.t_fixed
+            + self.slope * (nominal.t_per_nnz * nnz + nominal.t_per_sample * bucket as f64 * factor)
     }
 }
 
@@ -116,6 +139,9 @@ pub struct DeviceEstimator {
     outlier_streak: usize,
     observations: u64,
     drift_events: u64,
+    /// EWMA-fitted device sparsity floor (None until a sparse step has
+    /// been observed; falls back to the nominal model's floor).
+    sparsity_floor: Option<f64>,
 }
 
 impl DeviceEstimator {
@@ -134,6 +160,7 @@ impl DeviceEstimator {
             outlier_streak: 0,
             observations: 0,
             drift_events: 0,
+            sparsity_floor: None,
         }
     }
 
@@ -153,6 +180,27 @@ impl DeviceEstimator {
                 self.outlier_streak += 1;
             } else {
                 self.outlier_streak = 0;
+            }
+        }
+
+        // Sparse steps also refine the device's cost-vs-sparsity floor:
+        // given the current fit, the observation implies an effective
+        // per-sample factor; invert `factor = floor + (1 - floor)·ratio`
+        // and EWMA the result.
+        if obs.ratio < 1.0 {
+            if let Some(f) = self.smoothed {
+                let dense_var = self.nominal.t_per_sample * obs.bucket as f64;
+                let gather = self.nominal.t_per_nnz * obs.nnz_per_batch;
+                let denom = f.slope * dense_var;
+                if denom > 1e-15 {
+                    let factor = ((obs.secs_per_batch - f.t_fixed - f.slope * gather) / denom)
+                        .clamp(0.0, 1.0);
+                    let floor = ((factor - obs.ratio) / (1.0 - obs.ratio)).clamp(0.0, 1.0);
+                    self.sparsity_floor = Some(match self.sparsity_floor {
+                        None => floor,
+                        Some(prev) => self.cfg.alpha * floor + (1.0 - self.cfg.alpha) * prev,
+                    });
+                }
             }
         }
 
@@ -206,6 +254,7 @@ impl DeviceEstimator {
             residual_rel: median(&mut residuals),
             observations: self.observations,
             drift_events: self.drift_events,
+            sparsity_floor: self.effective_floor(),
         })
     }
 
@@ -219,9 +268,24 @@ impl DeviceEstimator {
         self.drift_events
     }
 
-    /// Nominal variable cost of an observation's workload.
+    /// The device's cost-vs-sparsity floor: fitted when sparse steps have
+    /// been observed, the nominal model's otherwise.
+    fn effective_floor(&self) -> f64 {
+        self.sparsity_floor.unwrap_or(self.nominal.sparsity_floor)
+    }
+
+    /// Variable cost of an observation's workload at its sparsity ratio
+    /// (device-floor-aware, so sparse steps fit the same line as dense
+    /// ones instead of reading as the device speeding up).
     fn x(&self, o: &Observation) -> f64 {
-        variable_cost(&self.nominal, o.bucket, o.nnz_per_batch)
+        let factor = if o.ratio >= 1.0 {
+            1.0
+        } else {
+            let fl = self.effective_floor();
+            fl + (1.0 - fl) * o.ratio.max(0.0)
+        };
+        self.nominal.t_per_nnz * o.nnz_per_batch
+            + self.nominal.t_per_sample * o.bucket as f64 * factor
     }
 
     /// Theil–Sen fit of `y = t_fixed + slope·x` over the window. When the
@@ -258,11 +322,6 @@ impl DeviceEstimator {
     }
 }
 
-/// Nominal variable (workload-dependent) cost of one step.
-fn variable_cost(nominal: &CostModel, bucket: usize, nnz: f64) -> f64 {
-    nominal.t_per_nnz * nnz + nominal.t_per_sample * bucket as f64
-}
-
 /// Median of a non-empty slice (sorts in place; lower-of-two for even
 /// lengths, matching the robust-statistics convention used elsewhere).
 fn median(v: &mut [f64]) -> f64 {
@@ -276,7 +335,7 @@ mod tests {
     use super::*;
 
     fn obs(bucket: usize, nnz: f64, secs: f64) -> Observation {
-        Observation { bucket, nnz_per_batch: nnz, secs_per_batch: secs }
+        Observation { bucket, nnz_per_batch: nnz, secs_per_batch: secs, ratio: 1.0 }
     }
 
     /// Feed `k` noiseless observations of a `speed ×` nominal device over
@@ -395,6 +454,44 @@ mod tests {
             est.estimate().unwrap()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sparse_steps_fit_the_device_floor_not_a_speedup() {
+        // A device whose true sparsity floor (0.3) is steeper than the
+        // nominal model's (0.1): the estimator must learn the device
+        // curve from sparse observations, keep the speed estimate at 1.0
+        // (cheap approximate steps are not the device getting faster),
+        // and predict sparse step times with the fitted curve.
+        let n = CostModel::default();
+        let true_floor = 0.3;
+        let cfg = EstimatorConfig { alpha: 1.0, step_threshold: 0.6, ..Default::default() };
+        let mut est = DeviceEstimator::new(cfg, n);
+        feed_true(&mut est, 1.0, 6);
+        assert_eq!(est.estimate().unwrap().sparsity_floor, n.sparsity_floor, "nominal until observed");
+        let ratio = 0.25;
+        let factor = true_floor + (1.0 - true_floor) * ratio;
+        for _ in 0..4 {
+            let secs =
+                n.t_fixed + n.t_per_nnz * 768.0 + n.t_per_sample * 64.0 * factor;
+            est.observe(Observation {
+                bucket: 64,
+                nnz_per_batch: 768.0,
+                secs_per_batch: secs,
+                ratio,
+            });
+        }
+        let e = est.estimate().unwrap();
+        assert!((e.sparsity_floor - true_floor).abs() < 0.05, "floor {}", e.sparsity_floor);
+        assert!((e.speed - 1.0).abs() < 0.12, "sparse steps read as speedup: {}", e.speed);
+        assert_eq!(e.drift_events, 0, "sparse steps must not fire the drift detector");
+        // The fitted curve predicts the sparse step time.
+        let pred = e.step_secs_at(&n, 64, 768.0, ratio);
+        let truth = n.t_fixed + n.t_per_nnz * 768.0 + n.t_per_sample * 64.0 * factor;
+        assert!((pred - truth).abs() / truth < 0.06, "pred {pred} vs {truth}");
+        // And the dense prediction is untouched by the sparse evidence.
+        let dense = e.step_secs(&n, 64, 768.0);
+        assert!((dense - n.step_time_parts(64, 768)).abs() / dense < 0.12);
     }
 
     #[test]

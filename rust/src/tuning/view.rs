@@ -141,6 +141,7 @@ mod tests {
             residual_rel: 0.01,
             observations: 5,
             drift_events: 0,
+            sparsity_floor: 0.1,
         }
     }
 

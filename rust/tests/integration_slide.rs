@@ -1,0 +1,194 @@
+//! Integration tests for the adaptive-sparsity compute lever: the ratio
+//! ladder's monotone cost curve, the bit-for-bit guarantee that a dormant
+//! `[slide]` block changes nothing, the joint-vs-batch-only rebalancing
+//! claim under a hard throttle, and the serve-side SLO fallback.
+
+use std::sync::Arc;
+
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
+use heterosparse::data::pipeline::ShardedDataset;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::metrics::RunLog;
+use heterosparse::model::ModelState;
+use heterosparse::runtime::CostModel;
+use heterosparse::serve::{replay, ReplayOptions, SnapshotRegistry};
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 10,
+        initial_batch: 32,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: 4,
+        speed_factors: vec![1.0; 4],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1500, test_samples: 300, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// The scripted throttle every scheduling comparison below runs under:
+/// 10x on device 0 — past what the batch grid alone can absorb (the
+/// equal-time batch falls below `b_min`).
+fn throttled_cfg() -> (Config, usize, usize) {
+    let mut cfg = small_cfg();
+    let throttle_at = 3;
+    let recover_at = 8;
+    cfg.calibration.events = vec![
+        format!("at_mb={throttle_at} device=0 factor=10.0 ramp=1"),
+        format!("at_mb={recover_at} device=0 factor=1.0 ramp=1"),
+    ];
+    cfg.calibration.step_obs = 1;
+    cfg.validate().unwrap();
+    (cfg, throttle_at, recover_at)
+}
+
+fn run(cfg: &Config) -> RunLog {
+    let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+    let backend = RefBackend;
+    let engine = Box::new(
+        SimEngine::new(&backend, DevicePool::roster(cfg), CostModel::default())
+            .with_slide(&cfg.slide),
+    );
+    let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+    trainer.run(&train, &test).unwrap()
+}
+
+#[test]
+fn ladder_cost_is_strictly_monotone_on_a_throttled_device() {
+    let cfg = small_cfg();
+    let cost = CostModel::default();
+    let b = cfg.sgd.b_max;
+    let nnz = (cfg.data.avg_nnz * b as f64) as usize;
+    let ladder = cfg.slide.ratio_ladder();
+    assert!(ladder.len() >= 3, "default ladder has real rungs: {ladder:?}");
+    let mut prev = f64::INFINITY;
+    for r in ladder {
+        let t = 10.0 * cost.step_time_parts_at(b, nnz, r);
+        assert!(
+            t < prev,
+            "per-step cost must strictly decrease down the ladder (ratio {r}: {t} vs {prev})"
+        );
+        prev = t;
+    }
+}
+
+/// A `[slide]` block with `adaptive = true` but no drift (and no
+/// calibration plane) pins every ratio at 1.0, and ratio-1.0 plans are
+/// bit-identical to plans that never heard of sparsity.
+#[test]
+fn dormant_lever_is_bit_identical() {
+    let cfg = run(&small_cfg());
+    let mut armed = small_cfg();
+    armed.slide.adaptive = true;
+    armed.validate().unwrap();
+    let armed = run(&armed);
+    assert_eq!(cfg.rows.len(), armed.rows.len());
+    for (a, b) in cfg.rows.iter().zip(&armed.rows) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "mb {} loss diverged", a.mega_batch);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.batch_sizes, b.batch_sizes);
+        assert!(b.sparsity_ratio.iter().all(|&r| r == 1.0), "no drift -> no shed classes");
+    }
+}
+
+/// The acceptance claim: under a throttle too hard for the batch grid,
+/// joint batch+sparsity re-targeting achieves update balance at least as
+/// good as batch-only — and it really does run reduced active sets on the
+/// throttled device.
+#[test]
+fn joint_retargeting_rebalances_at_least_as_well_as_batch_only() {
+    let (base, throttle_at, recover_at) = throttled_cfg();
+
+    let mut batch_only = base.clone();
+    batch_only.calibration.enabled = true;
+    batch_only.validate().unwrap();
+    let batch_only = run(&batch_only);
+
+    let mut joint = base.clone();
+    joint.calibration.enabled = true;
+    joint.slide.adaptive = true;
+    joint.validate().unwrap();
+    let joint = run(&joint);
+
+    let bal_batch = batch_only.window_balance(throttle_at + 1, recover_at);
+    let bal_joint = joint.window_balance(throttle_at + 1, recover_at);
+    assert!(
+        bal_joint <= bal_batch + 1e-9,
+        "joint balance {bal_joint:.3} must not lose to batch-only {bal_batch:.3}"
+    );
+
+    // The lever really engaged: some throttled-window row ran device 0
+    // sparse, with a truncated per-step active-class count to show for it.
+    let classes = base.model.classes as f64;
+    let engaged = joint.rows.iter().any(|r| {
+        r.mega_batch > throttle_at
+            && r.mega_batch < recover_at
+            && r.sparsity_ratio[0] < 1.0
+            && r.updates[0] > 0
+            && r.active_classes[0] > 0.0
+            && r.active_classes[0] < classes
+    });
+    assert!(engaged, "throttled device never shed classes");
+    // And batch-only never touches the ratio column.
+    assert!(batch_only
+        .rows
+        .iter()
+        .all(|r| r.sparsity_ratio.iter().all(|&x| x == 1.0)));
+    // The run still learns: well clear of chance (1/classes ~ 0.016).
+    assert!(joint.best_accuracy() > 0.05, "joint run collapsed: {}", joint.best_accuracy());
+}
+
+/// Serve-side SLO fallback: with the lever armed at a deliberately tight
+/// SLO, the same trace is served with approximate LSH top-k inference and
+/// its p99 does not regress past the exact replay's.
+#[test]
+fn slo_armed_replay_does_not_regress_p99() {
+    let cfg = small_cfg();
+    let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    let data = Arc::new(ShardedDataset::from_dataset(&train, cfg.data.pipeline.shard_samples));
+    let registry = SnapshotRegistry::new();
+    registry.publish(ModelState::init(&cfg.model, 5), Some(0), 0.0);
+
+    let opts = |name: &str| ReplayOptions {
+        pattern: cfg.serve.pattern,
+        duration: 0.5,
+        follow_clock: false,
+        train_log: None,
+        name: name.to_string(),
+    };
+    let exact = replay(&cfg, data.clone(), &registry, &RefBackend, &opts("exact")).unwrap();
+
+    let mut armed_cfg = cfg.clone();
+    armed_cfg.slide.serve_slo_ms = 1e-3; // everything breaches -> approx mode
+    armed_cfg.validate().unwrap();
+    let armed = replay(&armed_cfg, data, &registry, &RefBackend, &opts("armed")).unwrap();
+
+    assert_eq!(exact.total_requests(), armed.total_requests(), "every request answered once");
+    let (p99_exact, p99_armed) =
+        (exact.latency_percentile_ms(99.0), armed.latency_percentile_ms(99.0));
+    assert!(
+        p99_armed <= p99_exact * 1.001,
+        "approximate serving must not regress latency: {p99_armed} vs {p99_exact}"
+    );
+}
