@@ -17,11 +17,19 @@
 //!   * adaptive-sparsity lever: LSH build/query throughput, active-set
 //!     step cost down the ratio ladder, pooled-vs-fresh step scratch —
 //!     recorded to `BENCH_slide.json` (`HS_BENCH_SLIDE_OUT` overrides
-//!     the path).
+//!     the path),
+//!   * cluster plane: segment-agnostic all-reduce arithmetic, tier-2
+//!     staleness-weighted merge, fabric link-cost scoring, and a full
+//!     micro-cluster sim round loop — recorded to `BENCH_cluster.json`
+//!     (`HS_BENCH_CLUSTER_OUT` overrides the path).
 
 use std::sync::Arc;
 
-use heterosparse::config::{CompositionPolicy, Config, MergeConfig, Strategy};
+use heterosparse::cluster::{run_cluster, ClusterPolicy, Fabric, ServerContribution};
+use heterosparse::config::{
+    CompositionPolicy, Config, DataConfig, DeviceConfig, MergeConfig, ModelDims, SgdConfig,
+    Strategy,
+};
 use heterosparse::coordinator::{merge, plan_for_strategy, scaling, DevicePool};
 use heterosparse::fleet::{
     fair_allocation, Arbiter, ArbiterConfig, LeaseBook, PriorityClass, TenantSpec,
@@ -287,6 +295,112 @@ fn main() {
     println!("{r}  ({:.1} ksamples/s)", per_sec / 1e3);
     slide_results.push(("step_scratch_fresh".to_string(), r, per_sec));
     append_baseline("BENCH_slide.json", "HS_BENCH_SLIDE_OUT", "perf_hotpath/slide", &slide_results);
+
+    // ---- cluster plane: all-reduce arithmetic, fabric scoring, sim rounds --
+    // The tier-2 merge and link-cost scoring run once per sync round;
+    // both must stay far below the training work a round coordinates.
+    let mut cluster_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let server_models: Vec<ModelState> =
+        (0..3).map(|i| ModelState::init(&cfg.model, 40 + i)).collect();
+    let params = server_models[0].param_count();
+
+    // The partitioned weighted sum shared by intra-server all-reduce and
+    // the inter-server fabric (segment-count agnostic by construction).
+    let sum_weights = [0.5, 0.3, 0.2];
+    let mut sum_out = ModelState::zeros(&cfg.model);
+    let r = bench_fn("cluster/partitioned_weighted_sum(3 models)", 3, 50, || {
+        let replica_segs: Vec<Vec<&[f32]>> =
+            server_models.iter().map(|m| m.segments().to_vec()).collect();
+        let mut out_segs = sum_out.segments_mut();
+        heterosparse::allreduce::partitioned_weighted_sum(
+            &mut out_segs,
+            &replica_segs,
+            &sum_weights,
+            4,
+        )
+    });
+    let per_sec = r.throughput(params as f64);
+    println!("{r}  ({:.1} Mparam/s)", per_sec / 1e6);
+    cluster_results.push(("partitioned_weighted_sum".to_string(), r, per_sec));
+
+    let r = bench_fn("cluster/merge_servers(3 servers)", 3, 50, || {
+        let contribs: Vec<ServerContribution> = server_models
+            .iter()
+            .enumerate()
+            .map(|(s, m)| ServerContribution {
+                model: m,
+                weight: 1.0 + s as f64,
+                staleness_mb: s,
+            })
+            .collect();
+        heterosparse::cluster::merge_servers(&contribs)
+    });
+    let per_sec = r.throughput(params as f64);
+    println!("{r}  ({:.1} Mparam/s)", per_sec / 1e6);
+    cluster_results.push(("merge_servers".to_string(), r, per_sec));
+
+    let throttle =
+        vec![heterosparse::tuning::DriftEvent { at_mb: 4, device: 3, factor: 6.0, ramp: 2 }];
+    let fabric =
+        Fabric::new(8, 2e-3, 1e9, heterosparse::allreduce::Algo::Ring, 4, throttle);
+    let participants: Vec<usize> = (0..8).collect();
+    let sync_bytes = (params * 4) as f64;
+    let mut w = 0usize;
+    let r = bench_fn("cluster/fabric_sync_time(8 links)", 10, 2000, || {
+        w += 1;
+        fabric.sync_time(&participants, sync_bytes, w % 12)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} scorings/s)");
+    cluster_results.push(("fabric_sync_time".to_string(), r, per_sec));
+
+    // One full micro-cluster run (2 servers x 3 mega-batches on a tiny
+    // model): the sim round loop end to end, dominated by the per-server
+    // sessions it coordinates.
+    let mut ccfg = Config::default();
+    ccfg.model =
+        ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 2 };
+    ccfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 16,
+        beta: 8,
+        lr_bmax: 0.4,
+        mega_batches: 6,
+        num_mega_batches: 3,
+        initial_batch: 16,
+        seed: 7,
+        ..Default::default()
+    };
+    ccfg.devices = DeviceConfig {
+        count: 2,
+        speed_factors: vec![1.0, 1.2],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    ccfg.data = DataConfig {
+        train_samples: 400,
+        test_samples: 100,
+        avg_nnz: 4.0,
+        ..Default::default()
+    };
+    ccfg.cluster.servers = 2;
+    ccfg.cluster.sync_every = 1;
+    ccfg.cluster.link_gbytes_per_sec = 0.1;
+    ccfg.validate().unwrap();
+    let rounds = ccfg.sgd.num_mega_batches as f64; // sync_every = 1
+    let r = bench_fn("cluster/sim(2 servers x 3 mb)", 3, 3, || {
+        run_cluster(&ccfg, ClusterPolicy { flat: false, adaptive: true }, "bench").unwrap()
+    });
+    let per_sec = r.throughput(rounds);
+    println!("{r}  ({per_sec:.1} rounds/s)");
+    cluster_results.push(("sim_round".to_string(), r, per_sec));
+    append_baseline(
+        "BENCH_cluster.json",
+        "HS_BENCH_CLUSTER_OUT",
+        "perf_hotpath/cluster",
+        &cluster_results,
+    );
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

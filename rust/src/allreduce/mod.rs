@@ -48,16 +48,46 @@ pub fn allreduce_merge(
 ) -> MergeStats {
     assert_eq!(replicas.len(), weights.len());
     assert!(!replicas.is_empty());
-    let devices = replicas.len();
     let streams = streams.max(1);
 
     // ---- arithmetic: partitioned weighted average -------------------------
-    // Partition the flat parameter space into `streams` chunks per segment;
-    // each chunk accumulates its weighted partial in ring order starting
-    // from a different device (order does not change the result, but we
-    // mirror the schedule to keep the code honest to the design).
-    for seg in 0..4 {
-        let seg_len = out.segments()[seg].len();
+    {
+        let replica_segs: Vec<Vec<&[f32]>> =
+            replicas.iter().map(|r| r.segments().to_vec()).collect();
+        let mut out_segs = out.segments_mut();
+        partitioned_weighted_sum(&mut out_segs, &replica_segs, weights, streams);
+    }
+
+    // ---- transfer-time model ----------------------------------------------
+    let params = out.param_count();
+    let seconds = simulated_time(algo, replicas.len(), streams, params, cost);
+    MergeStats { seconds, streams, algo }
+}
+
+/// The partitioned weighted-average core shared by [`allreduce_merge`] and
+/// the cluster fabric's inter-server reduce.
+///
+/// Each segment's flat parameter space is split into `streams` chunks; each
+/// chunk accumulates its weighted partial in ring order starting from a
+/// different device (order does not change the result, but we mirror the
+/// schedule to keep the code honest to the design). The segment count is
+/// whatever the caller hands in — nothing here assumes the 4-segment MLP
+/// layout, so the arithmetic survives model-shape changes.
+///
+/// Panics if any replica's segment list does not match `out_segs` in count
+/// or per-segment length.
+pub fn partitioned_weighted_sum(
+    out_segs: &mut [&mut [f32]],
+    replica_segs: &[Vec<&[f32]>],
+    weights: &[f64],
+    streams: usize,
+) {
+    assert_eq!(replica_segs.len(), weights.len());
+    assert!(!replica_segs.is_empty());
+    let devices = replica_segs.len();
+    let streams = streams.max(1);
+    for (seg, dst_seg) in out_segs.iter_mut().enumerate() {
+        let seg_len = dst_seg.len();
         let chunk = seg_len.div_ceil(streams);
         for s in 0..streams {
             let lo = s * chunk;
@@ -67,16 +97,11 @@ pub fn allreduce_merge(
             let hi = (lo + chunk).min(seg_len);
             // Stream s starts its ring at device (s % devices).
             let start = s % devices;
-            let dst = match seg {
-                0 => &mut out.w1[lo..hi],
-                1 => &mut out.b1[lo..hi],
-                2 => &mut out.w2[lo..hi],
-                _ => &mut out.b2[lo..hi],
-            };
+            let dst = &mut dst_seg[lo..hi];
             dst.fill(0.0);
             for d in 0..devices {
                 let dev = (start + d) % devices;
-                let src = &replicas[dev].segments()[seg][lo..hi];
+                let src = &replica_segs[dev][seg][lo..hi];
                 let w = weights[dev] as f32;
                 for (o, &x) in dst.iter_mut().zip(src) {
                     *o += w * x;
@@ -84,11 +109,6 @@ pub fn allreduce_merge(
             }
         }
     }
-
-    // ---- transfer-time model ----------------------------------------------
-    let params = out.param_count();
-    let seconds = simulated_time(algo, devices, streams, params, cost);
-    MergeStats { seconds, streams, algo }
 }
 
 /// Simulated all-reduce time.
@@ -197,6 +217,50 @@ mod tests {
     fn single_device_is_free() {
         let cost = CostModel::default();
         assert_eq!(simulated_time(Algo::Ring, 1, 4, 1_000_000, &cost), 0.0);
+    }
+
+    #[test]
+    fn arithmetic_survives_non_four_segment_states() {
+        // The merge core must not assume the MLP's 4-segment layout: run it
+        // over 2-, 3- and 6-segment parameter lists (ragged lengths, one
+        // empty) and check against a direct weighted sum.
+        for seg_lens in [vec![5usize, 17], vec![8, 0, 3], vec![1, 2, 3, 4, 5, 33]] {
+            let devices = 3usize;
+            let weights = [0.5, 0.3, 0.2];
+            let replicas: Vec<Vec<Vec<f32>>> = (0..devices)
+                .map(|d| {
+                    seg_lens
+                        .iter()
+                        .enumerate()
+                        .map(|(s, &n)| {
+                            (0..n).map(|i| (d * 131 + s * 17 + i) as f32 * 0.01).collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let replica_segs: Vec<Vec<&[f32]>> = replicas
+                .iter()
+                .map(|r| r.iter().map(|s| s.as_slice()).collect())
+                .collect();
+            let mut out: Vec<Vec<f32>> =
+                seg_lens.iter().map(|&n| vec![0.0; n]).collect();
+            {
+                let mut out_segs: Vec<&mut [f32]> =
+                    out.iter_mut().map(|s| s.as_mut_slice()).collect();
+                partitioned_weighted_sum(&mut out_segs, &replica_segs, &weights, 3);
+            }
+            for (seg, &n) in seg_lens.iter().enumerate() {
+                for i in 0..n {
+                    let direct: f32 = (0..devices)
+                        .map(|d| weights[d] as f32 * replicas[d][seg][i])
+                        .sum();
+                    assert!(
+                        (out[seg][i] - direct).abs() < 1e-6,
+                        "segments {seg_lens:?}: seg {seg} idx {i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

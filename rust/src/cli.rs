@@ -285,6 +285,13 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             let base = p.had_config.then_some(&p.cfg);
             experiments::slide(p.profile, p.backend, base)?;
         }
+        "cluster" => {
+            // Same convention as fleet: explicit config input drives the
+            // scenario; bare invocations get the bench-scale three-server
+            // fabric with a scripted throttle + rack loss.
+            let base = p.had_config.then_some(&p.cfg);
+            experiments::cluster(p.profile, base)?;
+        }
         other => bail!(
             "experiment '{other}' is registered but has no dispatch arm — update \
              cli::cmd_experiment alongside harness::experiments::EXPERIMENTS"

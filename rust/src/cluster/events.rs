@@ -1,0 +1,243 @@
+//! Scripted cluster scenarios — reproducible link-throttle and rack-loss
+//! traces for the cluster experiments (`[cluster] events`).
+//!
+//! Two event kinds share one trace, distinguished by their key:
+//!
+//! * **Link throttle** — `"at_mb=N link=L factor=F [ramp=R]"`: uplink `L`
+//!   slows to `F`× its configured transfer time starting at sync window
+//!   `N`, optionally ramping over `R` windows. Exactly the
+//!   [`DriftEvent`] grammar with `link` in place of `device`; link
+//!   throttles are in fact *stored* as [`DriftEvent`]s (the link id in the
+//!   device slot) so [`multiplier_at`](crate::tuning::multiplier_at)'s
+//!   ramp-chaining semantics carry over verbatim.
+//! * **Rack event** — `"at_mb=N server=S down"` / `"at_mb=N server=S up"`:
+//!   whole-rack loss and recovery. A down server steps no mega-batches
+//!   and joins no syncs (every device lease on that rack is gone at
+//!   once); on `up` it resynchronizes from the cluster consensus and
+//!   resumes, behind, with its staleness priced into the merge weights.
+//!
+//! Like drift traces, cluster traces describe the *physical* scenario —
+//! they apply whether the sync cadence is fixed or adaptive, which is what
+//! lets `experiment cluster` compare the two under identical fabric
+//! behavior.
+
+use anyhow::{bail, Context};
+
+use crate::tuning::DriftEvent;
+use crate::Result;
+
+/// One scripted cluster event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClusterEvent {
+    /// A link throttle/recover ramp; the [`DriftEvent::device`] field
+    /// holds the uplink (server) id.
+    Link(DriftEvent),
+    /// A whole-rack loss or recovery.
+    Rack {
+        /// Mega-batch at which the rack changes state.
+        at_mb: usize,
+        /// Cluster server id.
+        server: usize,
+        /// `true` = the rack comes (back) up, `false` = it goes down.
+        up: bool,
+    },
+}
+
+impl ClusterEvent {
+    /// Mega-batch at which the event lands.
+    pub fn at_mb(&self) -> usize {
+        match self {
+            ClusterEvent::Link(e) => e.at_mb,
+            ClusterEvent::Rack { at_mb, .. } => *at_mb,
+        }
+    }
+
+    /// Parse one event string (see the module docs for the grammar).
+    pub fn parse(s: &str) -> Result<ClusterEvent> {
+        let mut at_mb: Option<usize> = None;
+        let mut link: Option<usize> = None;
+        let mut server: Option<usize> = None;
+        let mut factor: Option<f64> = None;
+        let mut ramp: usize = 0;
+        let mut state: Option<bool> = None;
+        for tok in s.split_whitespace() {
+            // Rack state is a bare token, everything else is key=value.
+            match tok {
+                "down" | "up" => {
+                    if state.replace(tok == "up").is_some() {
+                        bail!("cluster event '{s}' has more than one up/down");
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+            let (key, value) = tok
+                .split_once('=')
+                .with_context(|| format!("cluster event token '{tok}' is not key=value"))?;
+            match key {
+                "at_mb" => {
+                    let n = value.parse().with_context(|| {
+                        format!("cluster event at_mb '{value}' is not an integer")
+                    })?;
+                    if at_mb.replace(n).is_some() {
+                        bail!("cluster event '{s}' has more than one at_mb");
+                    }
+                }
+                "link" => {
+                    let n = value.parse().with_context(|| {
+                        format!("cluster event link '{value}' is not an integer")
+                    })?;
+                    if link.replace(n).is_some() {
+                        bail!("cluster event '{s}' has more than one link");
+                    }
+                }
+                "server" => {
+                    let n = value.parse().with_context(|| {
+                        format!("cluster event server '{value}' is not an integer")
+                    })?;
+                    if server.replace(n).is_some() {
+                        bail!("cluster event '{s}' has more than one server");
+                    }
+                }
+                "factor" => {
+                    let f: f64 = value.parse().with_context(|| {
+                        format!("cluster event factor '{value}' is not a number")
+                    })?;
+                    if factor.replace(f).is_some() {
+                        bail!("cluster event '{s}' has more than one factor");
+                    }
+                }
+                "ramp" => {
+                    ramp = value.parse().with_context(|| {
+                        format!("cluster event ramp '{value}' is not an integer")
+                    })?;
+                }
+                other => {
+                    bail!("unknown cluster event key '{other}' (at_mb|link|server|factor|ramp)")
+                }
+            }
+        }
+        let at_mb = at_mb.with_context(|| format!("cluster event '{s}' missing at_mb=N"))?;
+        match (link, server) {
+            (Some(link), None) => {
+                if state.is_some() {
+                    bail!("cluster event '{s}': up/down applies to server=, not link=");
+                }
+                let factor =
+                    factor.with_context(|| format!("cluster event '{s}' missing factor=F"))?;
+                if factor <= 0.0 {
+                    bail!("cluster event '{s}' factor must be positive");
+                }
+                Ok(ClusterEvent::Link(DriftEvent { at_mb, device: link, factor, ramp }))
+            }
+            (None, Some(server)) => {
+                if factor.is_some() || ramp != 0 {
+                    bail!("cluster event '{s}': factor/ramp apply to link=, not server=");
+                }
+                let up = state
+                    .with_context(|| format!("cluster event '{s}' missing down or up"))?;
+                Ok(ClusterEvent::Rack { at_mb, server, up })
+            }
+            (Some(_), Some(_)) => {
+                bail!("cluster event '{s}' names both link= and server= (pick one)")
+            }
+            (None, None) => bail!("cluster event '{s}' missing link=L or server=S"),
+        }
+    }
+}
+
+/// Parse a whole `[cluster] events` trace, sorted by `at_mb` (stable for
+/// ties).
+pub fn parse_trace(events: &[String]) -> Result<Vec<ClusterEvent>> {
+    let mut trace =
+        events.iter().map(|s| ClusterEvent::parse(s)).collect::<Result<Vec<_>>>()?;
+    trace.sort_by_key(|e| e.at_mb());
+    Ok(trace)
+}
+
+/// The link-throttle subset of a trace, as [`DriftEvent`]s (link id in the
+/// device slot) ready for [`multiplier_at`](crate::tuning::multiplier_at).
+pub fn link_trace(trace: &[ClusterEvent]) -> Vec<DriftEvent> {
+    trace
+        .iter()
+        .filter_map(|e| match e {
+            ClusterEvent::Link(d) => Some(*d),
+            ClusterEvent::Rack { .. } => None,
+        })
+        .collect()
+}
+
+/// Whether `server` is up at mega-batch `mb`: the latest rack event at or
+/// before `mb` decides; servers start up.
+pub fn rack_up(trace: &[ClusterEvent], server: usize, mb: usize) -> bool {
+    let mut up = true;
+    for e in trace {
+        if let ClusterEvent::Rack { at_mb, server: s, up: u } = e {
+            if *s == server && *at_mb <= mb {
+                up = *u;
+            }
+        }
+    }
+    up
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_link_throttles_into_drift_events() {
+        let e = ClusterEvent::parse("at_mb=6 link=0 factor=4.0 ramp=2").unwrap();
+        assert_eq!(
+            e,
+            ClusterEvent::Link(DriftEvent { at_mb: 6, device: 0, factor: 4.0, ramp: 2 })
+        );
+        assert!(ClusterEvent::parse("at_mb=6 link=0").is_err(), "missing factor");
+        assert!(ClusterEvent::parse("at_mb=6 link=0 factor=0").is_err());
+        assert!(ClusterEvent::parse("at_mb=6 link=0 factor=2 down").is_err());
+    }
+
+    #[test]
+    fn parses_rack_events() {
+        let e = ClusterEvent::parse("at_mb=4 server=2 down").unwrap();
+        assert_eq!(e, ClusterEvent::Rack { at_mb: 4, server: 2, up: false });
+        let e = ClusterEvent::parse("at_mb=9 server=2 up").unwrap();
+        assert_eq!(e, ClusterEvent::Rack { at_mb: 9, server: 2, up: true });
+        assert!(ClusterEvent::parse("at_mb=4 server=2").is_err(), "missing state");
+        assert!(ClusterEvent::parse("at_mb=4 server=2 factor=2 down").is_err());
+        assert!(ClusterEvent::parse("at_mb=4 link=0 server=2 down").is_err());
+        assert!(ClusterEvent::parse("at_mb=4 down").is_err(), "missing target");
+        assert!(ClusterEvent::parse("server=2 down").is_err(), "missing at_mb");
+        assert!(ClusterEvent::parse("at_mb=4 server=2 down up").is_err());
+        assert!(ClusterEvent::parse("at_mb=4 explode=1").is_err());
+    }
+
+    #[test]
+    fn rack_state_follows_the_latest_event() {
+        let trace = parse_trace(&[
+            "at_mb=8 server=1 up".to_string(),
+            "at_mb=3 server=1 down".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(trace[0].at_mb(), 3, "trace sorts by at_mb");
+        assert!(rack_up(&trace, 1, 0));
+        assert!(rack_up(&trace, 1, 2));
+        assert!(!rack_up(&trace, 1, 3));
+        assert!(!rack_up(&trace, 1, 7));
+        assert!(rack_up(&trace, 1, 8));
+        assert!(rack_up(&trace, 0, 5), "other servers untouched");
+    }
+
+    #[test]
+    fn link_trace_extracts_throttles_only() {
+        let trace = parse_trace(&[
+            "at_mb=3 server=1 down".to_string(),
+            "at_mb=5 link=0 factor=3.0".to_string(),
+        ])
+        .unwrap();
+        let links = link_trace(&trace);
+        assert_eq!(links.len(), 1);
+        assert_eq!(links[0].device, 0);
+        assert_eq!(crate::tuning::multiplier_at(&links, 0, 6), 3.0);
+    }
+}

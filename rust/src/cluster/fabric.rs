@@ -1,0 +1,262 @@
+//! The inter-server fabric — a network cost model for cross-server
+//! all-reduce, with scripted degradation and online link calibration.
+//!
+//! Each server owns one uplink into the fabric, described by a nominal
+//! per-hop latency and bandwidth (`[cluster] link_latency_s` /
+//! `link_gbytes_per_sec`). An inter-server sync runs the same staged
+//! schedule as the intra-server [`crate::allreduce`] module — ring
+//! `2(G-1)` stages or tree `2·ceil(log2 G)` stages with fan-in-2
+//! contention, `streams` partitions pipelined with a `streams - 1` fill —
+//! but each stage's hop is priced at the **bottleneck link** among the
+//! participants (a synchronous stage moves at the slowest hop), which is
+//! what makes one throttled uplink drag the whole barrier.
+//!
+//! Scripted link throttles (`[cluster] events`, window-indexed by sync
+//! round) multiply a link's effective latency and per-byte time through
+//! [`multiplier_at`]'s ramp semantics. Every sync also feeds one
+//! [`LinkEstimator`] observation per participating link, so the cadence
+//! controller reads *measured* link speed, not the script.
+
+use crate::allreduce::Algo;
+use crate::metrics::LinkStatRow;
+use crate::tuning::{multiplier_at, DriftEvent, EstimatorConfig, LinkEstimate, LinkEstimator};
+
+/// Effective cost of one fabric hop over one link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Per-hop propagation latency (seconds).
+    pub latency: f64,
+    /// Transfer time per byte (seconds; 1 / bandwidth).
+    pub secs_per_byte: f64,
+}
+
+impl LinkSpec {
+    /// Seconds for one hop moving `bytes` over this link.
+    pub fn hop_secs(&self, bytes: f64) -> f64 {
+        self.latency + self.secs_per_byte * bytes
+    }
+}
+
+/// Per-link running telemetry (exported as [`LinkStatRow`]s).
+#[derive(Clone, Copy, Debug, Default)]
+struct LinkTally {
+    bytes: f64,
+    secs: f64,
+    staleness_sum: f64,
+    syncs: u64,
+}
+
+/// The simulated multi-server fabric: one uplink per server.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    nominal: LinkSpec,
+    throttle: Vec<DriftEvent>,
+    estimators: Vec<LinkEstimator>,
+    tallies: Vec<LinkTally>,
+    algo: Algo,
+    streams: usize,
+}
+
+impl Fabric {
+    /// A fabric of `servers` identical uplinks (`latency` seconds/hop,
+    /// `bytes_per_sec` bandwidth) degraded by the scripted `throttle`
+    /// trace (link id in the [`DriftEvent::device`] slot).
+    pub fn new(
+        servers: usize,
+        latency: f64,
+        bytes_per_sec: f64,
+        algo: Algo,
+        streams: usize,
+        throttle: Vec<DriftEvent>,
+    ) -> Fabric {
+        assert!(servers >= 1, "a fabric needs at least one server");
+        assert!(bytes_per_sec > 0.0, "link bandwidth must be positive");
+        let cfg = EstimatorConfig { step_obs: 1, ..EstimatorConfig::default() };
+        Fabric {
+            nominal: LinkSpec { latency, secs_per_byte: 1.0 / bytes_per_sec },
+            throttle,
+            estimators: (0..servers)
+                .map(|_| LinkEstimator::new(cfg, latency, bytes_per_sec))
+                .collect(),
+            tallies: vec![LinkTally::default(); servers],
+            algo,
+            streams: streams.max(1),
+        }
+    }
+
+    /// Number of uplinks (= servers).
+    pub fn links(&self) -> usize {
+        self.estimators.len()
+    }
+
+    /// The effective cost of `link` at sync window `window`: the nominal
+    /// spec times the scripted throttle multiplier (both the latency and
+    /// the per-byte term slow down — "the link is F× slower").
+    pub fn effective(&self, link: usize, window: usize) -> LinkSpec {
+        let f = multiplier_at(&self.throttle, link, window);
+        LinkSpec {
+            latency: self.nominal.latency * f,
+            secs_per_byte: self.nominal.secs_per_byte * f,
+        }
+    }
+
+    /// Simulated wall time of one inter-server all-reduce among
+    /// `participants` moving `bytes` of model state, at sync window
+    /// `window`. Mirrors [`crate::allreduce::simulated_time`]'s stage
+    /// math, with every stage priced at the bottleneck participant link.
+    pub fn sync_time(&self, participants: &[usize], bytes: f64, window: usize) -> f64 {
+        let g = participants.len();
+        if g <= 1 {
+            return 0.0;
+        }
+        let part = bytes / self.streams as f64;
+        let hop = participants
+            .iter()
+            .map(|&l| self.effective(l, window).hop_secs(part))
+            .fold(0.0, f64::max);
+        let stages = match self.algo {
+            Algo::Ring => 2 * (g - 1),
+            Algo::Tree => {
+                let levels = (g as f64).log2().ceil() as usize;
+                2 * levels * 2 // fan-in-2 contention doubles per-stage traffic
+            }
+        };
+        (stages + self.streams - 1) as f64 * hop
+    }
+
+    /// Record one completed sync: accumulate per-link telemetry and feed
+    /// each participating link's estimator with its measured hop (the
+    /// link's own effective cost — links see their local speed, the
+    /// barrier sees the bottleneck). `staleness[i]` is participant `i`'s
+    /// mega-batch lag at the merge.
+    pub fn record_sync(
+        &mut self,
+        participants: &[usize],
+        staleness: &[usize],
+        bytes: f64,
+        window: usize,
+    ) {
+        debug_assert_eq!(participants.len(), staleness.len());
+        let g = participants.len();
+        if g <= 1 {
+            return;
+        }
+        let part = bytes / self.streams as f64;
+        // Ring traffic per member: each of the 2(G-1) stages moves one
+        // partition per stream; per-link bytes ≈ 2·(G-1)/G · total.
+        let link_bytes = 2.0 * (g - 1) as f64 / g as f64 * bytes;
+        let sync_secs = self.sync_time(participants, bytes, window);
+        for (&l, &lag) in participants.iter().zip(staleness) {
+            let hop = self.effective(l, window).hop_secs(part);
+            let t = &mut self.tallies[l];
+            t.bytes += link_bytes;
+            t.secs += sync_secs;
+            t.staleness_sum += lag as f64;
+            t.syncs += 1;
+            self.estimators[l].observe(part, hop);
+        }
+    }
+
+    /// The measured slowdown of `link` (1.0 until calibrated) — what the
+    /// adaptive cadence reads instead of the scripted trace.
+    pub fn link_slowdown(&self, link: usize) -> f64 {
+        self.estimators[link].slowdown()
+    }
+
+    /// The worst measured slowdown across a participant set (1.0 when
+    /// empty) — the cadence controller's summary of fabric health.
+    pub fn bottleneck_slowdown(&self, participants: &[usize]) -> f64 {
+        participants.iter().map(|&l| self.link_slowdown(l)).fold(1.0, f64::max)
+    }
+
+    /// The current calibrated estimate for `link` (None until it has
+    /// carried a sync).
+    pub fn link_estimate(&self, link: usize) -> Option<LinkEstimate> {
+        self.estimators[link].estimate()
+    }
+
+    /// Per-link telemetry rows for the run log.
+    pub fn stats(&self) -> Vec<LinkStatRow> {
+        self.tallies
+            .iter()
+            .enumerate()
+            .map(|(link, t)| LinkStatRow {
+                link,
+                bytes_transferred: t.bytes,
+                sync_seconds: t.secs,
+                staleness_mb: if t.syncs == 0 {
+                    0.0
+                } else {
+                    t.staleness_sum / t.syncs as f64
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(servers: usize, throttle: Vec<DriftEvent>) -> Fabric {
+        // 1 ms hops, 1 GB/s, ring, 4 streams.
+        Fabric::new(servers, 1e-3, 1e9, Algo::Ring, 4, throttle)
+    }
+
+    #[test]
+    fn single_server_sync_is_free() {
+        let f = fabric(1, Vec::new());
+        assert_eq!(f.sync_time(&[0], 1e6, 0), 0.0);
+    }
+
+    #[test]
+    fn ring_stage_math_matches_the_allreduce_model() {
+        let f = fabric(3, Vec::new());
+        let bytes = 4e6;
+        let hop = 1e-3 + bytes / 4.0 / 1e9;
+        let expect = (2.0 * 2.0 + 3.0) * hop; // 2(G-1) stages + (streams-1) fill
+        assert!((f.sync_time(&[0, 1, 2], bytes, 0) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_throttled_link_drags_the_whole_barrier() {
+        let throttle =
+            vec![DriftEvent { at_mb: 2, device: 1, factor: 5.0, ramp: 0 }];
+        let f = fabric(3, throttle);
+        let before = f.sync_time(&[0, 1, 2], 1e6, 1);
+        let during = f.sync_time(&[0, 1, 2], 1e6, 2);
+        assert!((during / before - 5.0).abs() < 1e-9, "bottleneck pricing");
+        // Excluding the throttled link restores the nominal time.
+        assert!((f.sync_time(&[0, 2], 1e6, 2) - f.sync_time(&[0, 2], 1e6, 1)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn calibration_reads_the_throttle_from_measurements() {
+        let throttle =
+            vec![DriftEvent { at_mb: 3, device: 0, factor: 4.0, ramp: 0 }];
+        let mut f = fabric(2, throttle);
+        for w in 0..3 {
+            f.record_sync(&[0, 1], &[0, 0], 1e6, w);
+        }
+        assert!((f.link_slowdown(0) - 1.0).abs() < 0.05);
+        for w in 3..6 {
+            f.record_sync(&[0, 1], &[0, 0], 1e6, w);
+        }
+        assert!((f.link_slowdown(0) - 4.0).abs() < 0.4, "got {}", f.link_slowdown(0));
+        assert!((f.link_slowdown(1) - 1.0).abs() < 0.05, "link 1 is untouched");
+        assert!((f.bottleneck_slowdown(&[0, 1]) - 4.0).abs() < 0.4);
+    }
+
+    #[test]
+    fn telemetry_accumulates_per_link() {
+        let mut f = fabric(3, Vec::new());
+        f.record_sync(&[0, 1], &[0, 2], 1e6, 0);
+        f.record_sync(&[0, 1, 2], &[0, 0, 1], 1e6, 1);
+        let stats = f.stats();
+        assert_eq!(stats.len(), 3);
+        assert!(stats[0].bytes_transferred > stats[2].bytes_transferred);
+        assert!(stats[0].sync_seconds > 0.0);
+        assert!((stats[1].staleness_mb - 1.0).abs() < 1e-12, "mean of 2 and 0");
+        assert_eq!(stats[2].staleness_mb, 1.0);
+    }
+}

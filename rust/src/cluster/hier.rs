@@ -1,0 +1,228 @@
+//! Two-tier hierarchical merging — the paper's §4 normalized weighted
+//! average composed one level up, with staleness-weighted server scales.
+//!
+//! Tier 1 is the intra-server merge the [`TrainerSession`] already
+//! performs (per-device weights normalized within the server); tier 2
+//! averages the per-server consensus models with weights
+//!
+//! ```text
+//! S_s  =  W_s · scale(staleness_s)        W_s = Σ_i w_si  (device mass)
+//! S'_s =  S_s / Σ_t S_t                   scale(k) = 1 / (1 + k)
+//! ```
+//!
+//! so a server that merged more device-updates counts for more, and a
+//! stale (demoted or catching-up) server's contribution is discounted by
+//! how many mega-batches it lags — the same normalization idea that
+//! weights devices by update count within a server, applied across
+//! servers.
+//!
+//! **Exact composition.** With all scales equal, the two-tier average is
+//! algebraically the flat weighted average over every device:
+//! `Σ_s (W_s/ΣW) Σ_i (w_si/W_s) m_si = Σ_si (w_si/ΣW) m_si`. To keep that
+//! identity *numerically* (the property test pins it at 1e-10), every
+//! accumulation in this module runs in f64 — f32 two-tier round-trips
+//! would reintroduce ~1e-7 error.
+//!
+//! [`TrainerSession`]: crate::coordinator::trainer::TrainerSession
+
+use crate::model::ModelState;
+
+/// Staleness discount for a server lagging `staleness_mb` mega-batches
+/// behind the sync target: `1 / (1 + k)`. Fresh servers are undiscounted.
+pub fn staleness_scale(staleness_mb: usize) -> f64 {
+    1.0 / (1.0 + staleness_mb as f64)
+}
+
+/// One server's contribution to a tier-2 merge.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerContribution<'a> {
+    /// The server's intra-merged consensus model (tier 1 output).
+    pub model: &'a ModelState,
+    /// The server's device mass `W_s` (> 0) — e.g. its summed merge
+    /// weights or active-device count.
+    pub weight: f64,
+    /// Mega-batches this server lags behind the sync target.
+    pub staleness_mb: usize,
+}
+
+/// Tier-2 merge: staleness-weighted f64 average of the per-server
+/// consensus models, written back as a (f32) [`ModelState`]. Panics on an
+/// empty contribution list or a non-positive weight.
+pub fn merge_servers(contribs: &[ServerContribution]) -> ModelState {
+    assert!(!contribs.is_empty(), "tier-2 merge needs at least one server");
+    let weights: Vec<f64> = contribs
+        .iter()
+        .map(|c| {
+            assert!(c.weight > 0.0, "server weight must be positive");
+            c.weight * staleness_scale(c.staleness_mb)
+        })
+        .collect();
+    let models: Vec<&ModelState> = contribs.iter().map(|c| c.model).collect();
+    let segs = weighted_sum_f64(&models, &normalized(&weights));
+    to_model(&contribs[0].model.dims, &segs)
+}
+
+/// Normalize weights to sum 1 (in f64).
+pub fn normalized(weights: &[f64]) -> Vec<f64> {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive total");
+    weights.iter().map(|w| w / total).collect()
+}
+
+/// Per-segment f64 weighted sum `Σ_i weights[i] · models[i]` — the
+/// reference arithmetic both tiers and the flat baseline share.
+pub fn weighted_sum_f64(models: &[&ModelState], weights: &[f64]) -> Vec<Vec<f64>> {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty());
+    let n_seg = models[0].segments().len();
+    let mut out: Vec<Vec<f64>> = models[0]
+        .segments()
+        .iter()
+        .map(|s| vec![0.0f64; s.len()])
+        .collect();
+    for (m, &w) in models.iter().zip(weights) {
+        let segs = m.segments();
+        assert_eq!(segs.len(), n_seg);
+        for (acc, src) in out.iter_mut().zip(segs.iter()) {
+            for (a, &x) in acc.iter_mut().zip(src.iter()) {
+                *a += w * x as f64;
+            }
+        }
+    }
+    out
+}
+
+/// The flat (single-tier) normalized weighted average over every device —
+/// the property-test reference the hierarchical path must match.
+pub fn flat_average_f64(models: &[&ModelState], weights: &[f64]) -> Vec<Vec<f64>> {
+    weighted_sum_f64(models, &normalized(weights))
+}
+
+/// The hierarchical (two-tier) average in f64: per-server normalized
+/// intra-merge, then a server-mass (× staleness-scale) weighted tier-2
+/// average. `servers[s]` lists server `s`'s device models,
+/// `device_weights[s]` their (unnormalized) merge weights, `scales[s]`
+/// the server's staleness discount (1.0 = fresh).
+pub fn hierarchical_average_f64(
+    servers: &[Vec<&ModelState>],
+    device_weights: &[Vec<f64>],
+    scales: &[f64],
+) -> Vec<Vec<f64>> {
+    assert_eq!(servers.len(), device_weights.len());
+    assert_eq!(servers.len(), scales.len());
+    assert!(!servers.is_empty());
+    // Tier 1: per-server normalized merges (f64).
+    let tier1: Vec<Vec<Vec<f64>>> = servers
+        .iter()
+        .zip(device_weights)
+        .map(|(models, w)| weighted_sum_f64(models, &normalized(w)))
+        .collect();
+    // Tier 2: server mass × staleness scale, normalized.
+    let masses: Vec<f64> = device_weights
+        .iter()
+        .zip(scales)
+        .map(|(w, &sc)| w.iter().sum::<f64>() * sc)
+        .collect();
+    let sw = normalized(&masses);
+    let mut out: Vec<Vec<f64>> =
+        tier1[0].iter().map(|seg| vec![0.0f64; seg.len()]).collect();
+    for (server, &w) in tier1.iter().zip(&sw) {
+        for (acc, seg) in out.iter_mut().zip(server.iter()) {
+            for (a, &x) in acc.iter_mut().zip(seg.iter()) {
+                *a += w * x;
+            }
+        }
+    }
+    out
+}
+
+/// Largest absolute difference between two per-segment f64 buffers.
+pub fn max_abs_diff_f64(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .flat_map(|(x, y)| x.iter().zip(y.iter()))
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Cast per-segment f64 buffers back into a (f32) [`ModelState`].
+pub fn to_model(dims: &crate::config::ModelDims, segs: &[Vec<f64>]) -> ModelState {
+    let mut m = ModelState::zeros(dims);
+    {
+        let out = m.segments_mut();
+        assert_eq!(out.len(), segs.len());
+        for (dst, src) in out.into_iter().zip(segs.iter()) {
+            assert_eq!(dst.len(), src.len());
+            for (d, &x) in dst.iter_mut().zip(src.iter()) {
+                *d = x as f32;
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { features: 48, hidden: 8, classes: 12, max_nnz: 6, max_labels: 3 }
+    }
+
+    #[test]
+    fn two_tier_equals_flat_when_fresh() {
+        let d = dims();
+        let models: Vec<ModelState> =
+            (0..5).map(|i| ModelState::init(&d, i as u64 + 1)).collect();
+        let weights = [3.0, 1.0, 2.0, 5.0, 4.0];
+        let refs: Vec<&ModelState> = models.iter().collect();
+        let flat = flat_average_f64(&refs, &weights);
+        // Partition {0,1} | {2} | {3,4}.
+        let servers = vec![
+            vec![&models[0], &models[1]],
+            vec![&models[2]],
+            vec![&models[3], &models[4]],
+        ];
+        let dw = vec![vec![3.0, 1.0], vec![2.0], vec![5.0, 4.0]];
+        let hier = hierarchical_average_f64(&servers, &dw, &[1.0, 1.0, 1.0]);
+        assert!(max_abs_diff_f64(&flat, &hier) < 1e-10);
+    }
+
+    #[test]
+    fn staleness_discounts_a_lagging_server() {
+        let d = dims();
+        let a = ModelState::init(&d, 1);
+        let b = ModelState::init(&d, 2);
+        let fresh = merge_servers(&[
+            ServerContribution { model: &a, weight: 1.0, staleness_mb: 0 },
+            ServerContribution { model: &b, weight: 1.0, staleness_mb: 0 },
+        ]);
+        let stale_b = merge_servers(&[
+            ServerContribution { model: &a, weight: 1.0, staleness_mb: 0 },
+            ServerContribution { model: &b, weight: 1.0, staleness_mb: 3 },
+        ]);
+        // With b discounted 4×, the merge sits closer to a.
+        let closer =
+            stale_b.max_abs_diff(&a) < fresh.max_abs_diff(&a);
+        assert!(closer, "staleness discount must pull the merge toward fresh servers");
+        // scale(0) = 1, scale(3) = 1/4.
+        assert_eq!(staleness_scale(0), 1.0);
+        assert_eq!(staleness_scale(3), 0.25);
+    }
+
+    #[test]
+    fn merge_servers_matches_the_f64_reference() {
+        let d = dims();
+        let a = ModelState::init(&d, 7);
+        let b = ModelState::init(&d, 8);
+        let merged = merge_servers(&[
+            ServerContribution { model: &a, weight: 2.0, staleness_mb: 0 },
+            ServerContribution { model: &b, weight: 1.0, staleness_mb: 1 },
+        ]);
+        // Effective weights 2 and 0.5, normalized 0.8 / 0.2.
+        let expect = flat_average_f64(&[&a, &b], &[0.8, 0.2]);
+        let got = weighted_sum_f64(&[&merged], &[1.0]);
+        assert!(max_abs_diff_f64(&expect, &got) < 1e-7, "f32 storage rounds once");
+    }
+}

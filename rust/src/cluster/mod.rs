@@ -1,0 +1,50 @@
+//! The cluster scale-out plane — two-tier hierarchical merging over a
+//! simulated multi-server fabric.
+//!
+//! Everything below the server boundary is the existing single-server
+//! stack, unchanged: each server runs a [`TrainerSession`] over its own
+//! heterogeneous [`DevicePool`] with the paper's normalized intra-server
+//! merge. This module adds the tier above it:
+//!
+//! ```text
+//!   server 0 ─┐                       ┌─ server 0
+//!   server 1 ─┼─ inter-server fabric ─┼─ server 1     tier 2: staleness-
+//!   server 2 ─┘   (bottleneck-priced  └─ server 2     weighted consensus
+//!      │            all-reduce)                        every sync_every mb
+//!      └ tier 1: per-server normalized device merge
+//! ```
+//!
+//! * [`hier`] — the tier-2 merge arithmetic: f64 staleness-weighted
+//!   averaging that composes *exactly* (1e-10) to the flat per-device
+//!   average when every server is fresh.
+//! * [`fabric`] — the network cost model: per-link latency + bandwidth,
+//!   scripted degradation, bottleneck-priced sync time, and online
+//!   [`LinkEstimator`](crate::tuning::LinkEstimator) calibration feeding
+//!   the adaptive cadence.
+//! * [`events`] — the scripted scenario grammar: link throttles
+//!   (`at_mb=N link=L factor=F [ramp=R]`) and whole-rack loss/recovery
+//!   (`at_mb=N server=S down|up`).
+//! * [`sim`] — [`ClusterSim`]: the deterministic round-based
+//!   discrete-event loop tying it together (barrier sync, straggler
+//!   demotion to asynchronous catch-up, rack failures, measured-cost
+//!   adaptive cadence).
+//!
+//! Configured by the `[cluster]` block; with it absent (or
+//! `servers = 1`) nothing in this module runs and every existing
+//! experiment is bit-identical to the single-server build.
+//!
+//! [`TrainerSession`]: crate::coordinator::trainer::TrainerSession
+//! [`DevicePool`]: crate::coordinator::DevicePool
+
+// Same bar as `tuning`: a new subsystem documents every public item.
+#![warn(missing_docs)]
+
+pub mod events;
+pub mod fabric;
+pub mod hier;
+pub mod sim;
+
+pub use events::{link_trace, parse_trace, rack_up, ClusterEvent};
+pub use fabric::{Fabric, LinkSpec};
+pub use hier::{merge_servers, staleness_scale, ServerContribution};
+pub use sim::{run_cluster, ClusterOutcome, ClusterPolicy, ClusterSim, RoundRow};

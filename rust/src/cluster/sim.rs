@@ -1,0 +1,577 @@
+//! `ClusterSim` — deterministic discrete-event training over a simulated
+//! multi-server fabric.
+//!
+//! Each server runs the full single-server stack — its own
+//! [`TrainerSession`] stepping a heterogeneous [`DevicePool`] roster with
+//! Algorithm 2's normalized intra-server merge — over its own shard of
+//! the corpus. Time advances in **sync rounds**: every `sync_every`
+//! mega-batches the servers meet at a fabric barrier, exchange their
+//! consensus models through the inter-server all-reduce
+//! ([`Fabric::sync_time`] prices it at the bottleneck link), and install
+//! the staleness-weighted tier-2 average ([`merge_servers`]) back into
+//! every participant. The whole schedule is a pure function of the config
+//! — same inputs, bit-identical outcome.
+//!
+//! Per round, in order:
+//!
+//! 1. **Rack events** land at the round's starting mega-batch: a down
+//!    server steps nothing and joins no sync (whole-rack loss — every
+//!    device lease on that server is gone at once); a recovering server
+//!    resynchronizes from the last cluster consensus and resumes, behind.
+//! 2. **Full-speed servers** step to the round's target mega-batch; the
+//!    barrier time is the slowest participant's clock.
+//! 3. **Demoted stragglers** catch up asynchronously: they step only
+//!    while their clock stays below the barrier, so they never stretch
+//!    it. Whatever they reach, their lag is priced into the merge as
+//!    staleness.
+//! 4. **Sync**: tier-2 merge + fabric charge; every participant's next
+//!    step starts at `barrier + sync_secs`.
+//! 5. **Straggler policy**: each server's measured mega-batch rate over
+//!    the round (its calibrated aggregate speed — rates come from
+//!    observed step timings, not config constants) is compared against
+//!    `straggler_floor ×` the fastest server's; below the floor demotes,
+//!    at or above it promotes back.
+//! 6. **Adaptive cadence** (when enabled): the next round's `sync_every`
+//!    is chosen so the *measured* sync cost stays near `comm_target` of
+//!    wall time — a throttled link inflates the measured cost and
+//!    stretches the interval; recovery tightens it again.
+//!
+//! [`TrainerSession`]: crate::coordinator::trainer::TrainerSession
+//! [`DevicePool`]: crate::coordinator::DevicePool
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure};
+
+use crate::allreduce::Algo;
+use crate::config::Config;
+use crate::coordinator::backend::RefBackend;
+use crate::coordinator::engine_sim::SimEngine;
+use crate::coordinator::trainer::{TrainerOptions, TrainerSession};
+use crate::coordinator::DevicePool;
+use crate::data::pipeline::ShardedDataset;
+use crate::data::synthetic::Generator;
+use crate::metrics::{LinkStatRow, RunLog, SyncEventRow};
+use crate::model::ModelState;
+use crate::runtime::CostModel;
+use crate::Result;
+
+use super::events::{link_trace, parse_trace, rack_up, ClusterEvent};
+use super::fabric::Fabric;
+use super::hier::{merge_servers, ServerContribution};
+
+/// Which merge/cadence policy a cluster run uses — the experiment's arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterPolicy {
+    /// Tier-2 merge with equal server weights and no staleness discount
+    /// (the flat-average baseline) instead of the hierarchical
+    /// update-mass × staleness weighting.
+    pub flat: bool,
+    /// Adapt `sync_every` to the measured link speed (else the configured
+    /// cadence is fixed for the whole run).
+    pub adaptive: bool,
+}
+
+impl ClusterPolicy {
+    /// The policy the config asks for (hierarchical weighting; cadence
+    /// adaptivity per `[cluster] adaptive`).
+    pub fn from_config(cfg: &Config) -> ClusterPolicy {
+        ClusterPolicy { flat: false, adaptive: cfg.cluster.adaptive }
+    }
+}
+
+/// One sync round's summary.
+#[derive(Clone, Debug)]
+pub struct RoundRow {
+    /// Round index (also the fabric's throttle window).
+    pub round: usize,
+    /// Mega-batch target the round stepped toward.
+    pub target_mb: usize,
+    /// Cadence in effect during the round.
+    pub sync_every: usize,
+    /// Cluster clock after the round's sync.
+    pub clock: f64,
+    /// Fabric time the sync cost (0 when it degenerated to one server).
+    pub sync_secs: f64,
+    /// Servers that joined the sync.
+    pub participants: Vec<usize>,
+    /// Per-server completed mega-batches after the round.
+    pub completed: Vec<usize>,
+    /// Per-server demotion state after the round.
+    pub demoted: Vec<bool>,
+    /// Per-server rack state during the round.
+    pub up: Vec<bool>,
+}
+
+/// Everything a cluster run produced.
+pub struct ClusterOutcome {
+    /// Run name.
+    pub name: String,
+    /// One training log per server (cluster-clock aligned), each carrying
+    /// its own sync events and its uplink's telemetry row.
+    pub logs: Vec<RunLog>,
+    /// Per-round summaries.
+    pub rounds: Vec<RoundRow>,
+    /// The full cross-server sync event log, time-ordered.
+    pub sync_events: Vec<SyncEventRow>,
+    /// Per-link fabric telemetry.
+    pub link_stats: Vec<LinkStatRow>,
+    /// Total seconds spent in inter-server syncs.
+    pub total_sync_secs: f64,
+    /// Inter-server syncs performed.
+    pub syncs: usize,
+    /// Final cluster clock.
+    pub clock: f64,
+}
+
+impl ClusterOutcome {
+    /// Mean final accuracy across servers that finished at least one row.
+    pub fn mean_final_accuracy(&self) -> f64 {
+        let accs: Vec<f64> = self
+            .logs
+            .iter()
+            .filter(|l| !l.rows.is_empty())
+            .map(|l| l.final_accuracy())
+            .collect();
+        if accs.is_empty() {
+            0.0
+        } else {
+            accs.iter().sum::<f64>() / accs.len() as f64
+        }
+    }
+
+    /// Earliest cluster-clock time at which any server's log reached the
+    /// target accuracy (the cluster's time-to-accuracy).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.logs
+            .iter()
+            .filter_map(|l| l.time_to_accuracy(target))
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Mean max/min ratio of per-server mega-batch progress over rounds
+    /// whose index lies in `[from, to)`, counting only up servers — the
+    /// cluster-level analog of [`RunLog::window_balance`]. 1.0 when every
+    /// up server advanced equally (or the range is empty).
+    pub fn round_balance(&self, from: usize, to: usize) -> f64 {
+        let mut prev: Vec<usize> = vec![0; self.logs.len()];
+        let mut ratios = Vec::new();
+        for r in &self.rounds {
+            let delta: Vec<usize> = r
+                .completed
+                .iter()
+                .zip(&prev)
+                .zip(&r.up)
+                .filter(|(_, &up)| up)
+                .map(|((&c, &p), _)| c - p)
+                .collect();
+            if (from..to).contains(&r.round) {
+                let worked: Vec<usize> = delta.iter().copied().filter(|&d| d > 0).collect();
+                if worked.len() >= 2 {
+                    let hi = *worked.iter().max().unwrap() as f64;
+                    let lo = *worked.iter().min().unwrap() as f64;
+                    ratios.push(hi / lo);
+                } else {
+                    ratios.push(1.0);
+                }
+            }
+            prev = r.completed.clone();
+        }
+        if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        }
+    }
+}
+
+struct ServerState<'b> {
+    session: TrainerSession<'b>,
+    active: Vec<usize>,
+    demoted: bool,
+    up: bool,
+}
+
+/// The multi-server discrete-event simulation (see the module docs for
+/// the round schedule). Holds every server's live [`TrainerSession`];
+/// consumed by [`ClusterSim::run`].
+pub struct ClusterSim<'b> {
+    cfg: Config,
+    policy: ClusterPolicy,
+    name: String,
+    servers: Vec<ServerState<'b>>,
+    fabric: Fabric,
+    trace: Vec<ClusterEvent>,
+}
+
+impl<'b> ClusterSim<'b> {
+    /// Build the per-server sessions (reference backend, virtual clocks).
+    /// Server `s` trains on its own deterministic shard of the synthetic
+    /// corpus; all servers share one test split.
+    pub fn new(
+        cfg: &Config,
+        policy: ClusterPolicy,
+        backend: &'b RefBackend,
+        name: &str,
+    ) -> Result<ClusterSim<'b>> {
+        cfg.validate()?;
+        let c = &cfg.cluster;
+        ensure!(c.servers >= 1, "cluster.servers must be at least 1");
+        let trace = parse_trace(&c.events)?;
+        let algo = match c.algo.as_str() {
+            "ring" => Algo::Ring,
+            "tree" => Algo::Tree,
+            other => bail!("cluster.algo '{other}' must be \"ring\" or \"tree\""),
+        };
+        let fabric = Fabric::new(
+            c.servers,
+            c.link_latency_s,
+            c.link_gbytes_per_sec * 1e9,
+            algo,
+            c.streams,
+            link_trace(&trace),
+        );
+
+        let gen = Generator::new(&cfg.model, &cfg.data);
+        let test = Arc::new(gen.generate(cfg.data.test_samples, 2));
+        let mut servers = Vec::with_capacity(c.servers);
+        for s in 0..c.servers {
+            // Server 0 trains the same shard a single-server run would
+            // (seed 1); later servers get disjointly-seeded shards.
+            let seed = 1 + 9973 * s as u64;
+            let train_ds = gen.generate(cfg.data.train_samples, seed);
+            let train = Arc::new(ShardedDataset::from_dataset(
+                &train_ds,
+                cfg.data.pipeline.shard_samples,
+            ));
+            // A heterogeneous cluster: the server's relative speed scales
+            // every device on it (multiplying by 1.0 is bit-exact, so a
+            // homogeneous cluster is unchanged).
+            let mut scfg = cfg.clone();
+            if let Some(&f) = c.server_speed_factors.get(s) {
+                for sf in &mut scfg.devices.speed_factors {
+                    *sf *= f;
+                }
+                for sf in &mut scfg.elastic.spare_devices {
+                    *sf *= f;
+                }
+            }
+            let engine = Box::new(
+                SimEngine::new(backend, DevicePool::roster(&scfg), CostModel::default())
+                    .with_slide(&scfg.slide),
+            );
+            let active = DevicePool::new(&scfg)?.active_ids();
+            let session = TrainerSession::new(
+                scfg,
+                engine,
+                backend,
+                TrainerOptions::default(),
+                train,
+                test.clone(),
+                format!("{name}/server{s}"),
+            )?;
+            servers.push(ServerState { session, active, demoted: false, up: true });
+        }
+        Ok(ClusterSim {
+            cfg: cfg.clone(),
+            policy,
+            name: name.to_string(),
+            servers,
+            fabric,
+            trace,
+        })
+    }
+
+    /// Run the simulation to completion.
+    pub fn run(mut self) -> Result<ClusterOutcome> {
+        let total = self.cfg.sgd.num_mega_batches;
+        let c = self.cfg.cluster.clone();
+        let mut sync_every = c.sync_every;
+        let mut cluster_clock = 0.0f64;
+        let mut target = 0usize;
+        let mut consensus: Option<ModelState> = None;
+        let mut rounds: Vec<RoundRow> = Vec::new();
+        let mut sync_events: Vec<SyncEventRow> = Vec::new();
+        let mut total_sync_secs = 0.0f64;
+        let mut syncs = 0usize;
+        // Rounds are bounded: the target advances every round, and a
+        // full-down round still advances it, so this only guards against
+        // a future scheduling bug, not a reachable state.
+        const MAX_ROUNDS: usize = 100_000;
+
+        for round in 0..MAX_ROUNDS {
+            if self.servers.iter().all(|s| s.session.done()) {
+                break;
+            }
+            let start_mb = target;
+            target = (target + sync_every).min(total);
+
+            // ---- rack events at the round boundary -------------------------
+            for s in 0..self.servers.len() {
+                let up = rack_up(&self.trace, s, start_mb);
+                if up != self.servers[s].up {
+                    let mb = self.servers[s].session.completed_mega_batches();
+                    if up {
+                        // Recover: resync from the cluster consensus
+                        // before stepping again.
+                        if let Some(m) = &consensus {
+                            self.servers[s].session.install_global(m.clone());
+                        }
+                        sync_events.push(SyncEventRow {
+                            at: cluster_clock,
+                            mega_batch: mb,
+                            server: s,
+                            action: "rack-up".to_string(),
+                            reason: "resynced from cluster consensus".to_string(),
+                        });
+                    } else {
+                        sync_events.push(SyncEventRow {
+                            at: cluster_clock,
+                            mega_batch: mb,
+                            server: s,
+                            action: "rack-down".to_string(),
+                            reason: "whole-rack loss: every device lease released"
+                                .to_string(),
+                        });
+                    }
+                    self.servers[s].up = up;
+                }
+            }
+
+            // ---- step full-speed servers to the target ---------------------
+            let mut mb_before = Vec::with_capacity(self.servers.len());
+            let mut clock_before = Vec::with_capacity(self.servers.len());
+            for s in self.servers.iter() {
+                mb_before.push(s.session.completed_mega_batches());
+                clock_before.push(s.session.clock());
+            }
+            let mut barrier = cluster_clock;
+            let mut any_full_speed = false;
+            for s in self.servers.iter_mut() {
+                if !s.up || s.demoted || s.session.done() {
+                    continue;
+                }
+                any_full_speed = true;
+                while !s.session.done() && s.session.completed_mega_batches() < target {
+                    let active = s.active.clone();
+                    s.session.step(&active, cluster_clock, Vec::new())?;
+                }
+                barrier = barrier.max(s.session.clock());
+            }
+
+            // ---- demoted stragglers catch up off the barrier ---------------
+            // While full-speed servers set a barrier, a demoted server only
+            // steps inside it (it never stretches the sync). Once *only*
+            // demoted servers remain unfinished there is no barrier left to
+            // protect, so they run to the target like anyone else — which
+            // is also what guarantees the loop terminates.
+            for s in self.servers.iter_mut() {
+                if !s.up || !s.demoted || s.session.done() {
+                    continue;
+                }
+                while !s.session.done()
+                    && s.session.completed_mega_batches() < target
+                    && (!any_full_speed || s.session.clock() < barrier)
+                {
+                    let active = s.active.clone();
+                    s.session.step(&active, cluster_clock, Vec::new())?;
+                }
+                if !any_full_speed {
+                    barrier = barrier.max(s.session.clock());
+                }
+            }
+
+            // ---- tier-2 sync ----------------------------------------------
+            let participants: Vec<usize> = (0..self.servers.len())
+                .filter(|&s| self.servers[s].up)
+                .collect();
+            let stepped = self
+                .servers
+                .iter()
+                .enumerate()
+                .any(|(i, s)| s.session.completed_mega_batches() > mb_before[i]);
+            let mut sync_secs = 0.0;
+            if participants.len() >= 2 && stepped {
+                let staleness: Vec<usize> = participants
+                    .iter()
+                    .map(|&s| target - self.servers[s].session.completed_mega_batches().min(target))
+                    .collect();
+                let bytes =
+                    (self.servers[0].session.global_model().param_count() * 4) as f64;
+                sync_secs = self.fabric.sync_time(&participants, bytes, round);
+                let merged = {
+                    let contribs: Vec<ServerContribution<'_>> = participants
+                        .iter()
+                        .zip(&staleness)
+                        .map(|(&s, &lag)| {
+                            let sess = &self.servers[s].session;
+                            let (weight, lag) = if self.policy.flat {
+                                (1.0, 0)
+                            } else {
+                                (update_mass(sess, mb_before[s]).max(1.0), lag)
+                            };
+                            ServerContribution {
+                                model: sess.global_model(),
+                                weight,
+                                staleness_mb: lag,
+                            }
+                        })
+                        .collect();
+                    merge_servers(&contribs)
+                };
+                self.fabric.record_sync(&participants, &staleness, bytes, round);
+                for (&s, &lag) in participants.iter().zip(&staleness) {
+                    self.servers[s].session.install_global(merged.clone());
+                    sync_events.push(SyncEventRow {
+                        at: barrier + sync_secs,
+                        mega_batch: self.servers[s].session.completed_mega_batches(),
+                        server: s,
+                        action: "sync".to_string(),
+                        reason: format!("window={round} cadence={sync_every} stale={lag}"),
+                    });
+                }
+                consensus = Some(merged);
+                total_sync_secs += sync_secs;
+                syncs += 1;
+            }
+            let round_start_clock = cluster_clock;
+            cluster_clock = barrier + sync_secs;
+
+            // ---- straggler policy: measured aggregate speed vs floor -------
+            if c.straggler_floor > 0.0 {
+                let rates: Vec<Option<f64>> = self
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let dmb = s.session.completed_mega_batches() - mb_before[i];
+                        let dt = s.session.clock() - clock_before[i];
+                        (s.up && dmb > 0 && dt > 0.0).then(|| dmb as f64 / dt)
+                    })
+                    .collect();
+                let max_rate = rates.iter().flatten().fold(0.0f64, |a, &b| a.max(b));
+                if max_rate > 0.0 {
+                    for (i, rate) in rates.iter().enumerate() {
+                        let Some(rate) = rate else { continue };
+                        let floor = c.straggler_floor * max_rate;
+                        let srv = &mut self.servers[i];
+                        if !srv.demoted && *rate < floor {
+                            srv.demoted = true;
+                            sync_events.push(SyncEventRow {
+                                at: cluster_clock,
+                                mega_batch: srv.session.completed_mega_batches(),
+                                server: i,
+                                action: "demote".to_string(),
+                                reason: format!(
+                                    "measured {rate:.3} mb/s < floor {floor:.3}: async catch-up"
+                                ),
+                            });
+                        } else if srv.demoted && *rate >= floor {
+                            srv.demoted = false;
+                            sync_events.push(SyncEventRow {
+                                at: cluster_clock,
+                                mega_batch: srv.session.completed_mega_batches(),
+                                server: i,
+                                action: "promote".to_string(),
+                                reason: format!(
+                                    "measured {rate:.3} mb/s >= floor {floor:.3}: rejoins barrier"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+
+            // ---- adaptive cadence ------------------------------------------
+            if self.policy.adaptive && sync_secs > 0.0 && target > start_mb {
+                let per_mb =
+                    (barrier - round_start_clock).max(1e-12) / (target - start_mb) as f64;
+                // sync/(sync + n·per_mb) = comm_target  =>  n.
+                let n = sync_secs * (1.0 - c.comm_target) / (c.comm_target * per_mb);
+                let new_every =
+                    (n.ceil() as usize).clamp(c.min_sync_every, c.max_sync_every);
+                if new_every != sync_every {
+                    sync_events.push(SyncEventRow {
+                        at: cluster_clock,
+                        mega_batch: target,
+                        server: participants[0],
+                        action: "cadence".to_string(),
+                        reason: format!(
+                            "sync {sync_secs:.4}s vs {per_mb:.4}s/mb: cadence {sync_every} -> \
+                             {new_every} (bottleneck x{:.2})",
+                            self.fabric.bottleneck_slowdown(&participants)
+                        ),
+                    });
+                    sync_every = new_every;
+                }
+            }
+
+            rounds.push(RoundRow {
+                round,
+                target_mb: target,
+                sync_every,
+                clock: cluster_clock,
+                sync_secs,
+                participants,
+                completed: self
+                    .servers
+                    .iter()
+                    .map(|s| s.session.completed_mega_batches())
+                    .collect(),
+                demoted: self.servers.iter().map(|s| s.demoted).collect(),
+                up: self.servers.iter().map(|s| s.up).collect(),
+            });
+
+            // A fully-down, unfinished cluster with no future rack
+            // recovery would spin; rack traces are finite, so once the
+            // target passes the last event with nobody up, stop.
+            if self.servers.iter().all(|s| !s.up || s.session.done())
+                && self.servers.iter().any(|s| !s.session.done())
+                && target >= total
+                && self.trace.iter().all(|e| e.at_mb() <= start_mb)
+            {
+                break;
+            }
+        }
+
+        let link_stats = self.fabric.stats();
+        let mut logs = Vec::with_capacity(self.servers.len());
+        for (s, srv) in self.servers.into_iter().enumerate() {
+            let mut log = srv.session.into_log();
+            log.sync_events =
+                sync_events.iter().filter(|e| e.server == s).cloned().collect();
+            log.link_stats = vec![link_stats[s].clone()];
+            logs.push(log);
+        }
+        Ok(ClusterOutcome {
+            name: self.name,
+            logs,
+            rounds,
+            sync_events,
+            link_stats,
+            total_sync_secs,
+            syncs,
+            clock: cluster_clock,
+        })
+    }
+}
+
+/// A server's update mass since `from_mb` — the sum of its per-device
+/// update counts over the rows it merged this round (the tier-2 analog of
+/// Algorithm 2's update-count weighting).
+fn update_mass(session: &TrainerSession<'_>, from_mb: usize) -> f64 {
+    session
+        .log()
+        .rows
+        .iter()
+        .filter(|r| r.mega_batch >= from_mb)
+        .map(|r| r.updates.iter().sum::<u64>() as f64)
+        .sum()
+}
+
+/// Run one cluster simulation under `cfg` with the given policy
+/// (hermetic reference backend, virtual clocks).
+pub fn run_cluster(cfg: &Config, policy: ClusterPolicy, name: &str) -> Result<ClusterOutcome> {
+    let backend = RefBackend;
+    ClusterSim::new(cfg, policy, &backend, name)?.run()
+}

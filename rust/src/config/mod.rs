@@ -389,6 +389,7 @@ pub struct Config {
     pub fleet: FleetConfig,
     pub calibration: CalibrationConfig,
     pub slide: SlideConfig,
+    pub cluster: ClusterConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -796,6 +797,77 @@ impl SlideConfig {
     }
 }
 
+/// The `[cluster]` block: multi-server scale-out over a simulated
+/// inter-server fabric (`crate::cluster`).
+///
+/// With the block absent — or `servers = 1` — the cluster plane is fully
+/// inert and every run is bit-identical to the single-server build; only
+/// `experiment cluster` and `cluster::run_cluster` read these keys.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Servers in the simulated cluster (>= 1; 1 = the plane is inert).
+    pub servers: usize,
+    /// Initial inter-server sync cadence in mega-batches (>= 1).
+    pub sync_every: usize,
+    /// Adapt the cadence to the measured link speed (else fixed).
+    pub adaptive: bool,
+    /// Adaptive-cadence floor in mega-batches (>= 1).
+    pub min_sync_every: usize,
+    /// Adaptive-cadence ceiling in mega-batches (>= `min_sync_every`).
+    pub max_sync_every: usize,
+    /// Target fraction of wall time spent in inter-server syncs, in
+    /// (0, 1) — the adaptive controller's setpoint.
+    pub comm_target: f64,
+    /// Nominal per-hop link latency in seconds (>= 0).
+    pub link_latency_s: f64,
+    /// Nominal per-link bandwidth in gigabytes per second (> 0).
+    pub link_gbytes_per_sec: f64,
+    /// Inter-server all-reduce schedule: `"ring"` or `"tree"`.
+    pub algo: String,
+    /// Pipelined fabric partitions per sync (>= 1).
+    pub streams: usize,
+    /// Per-server relative speed multipliers applied to every device on
+    /// that server (all > 0; empty = homogeneous servers, exactly 1.0
+    /// everywhere). Length must equal `servers` when non-empty — this is
+    /// what makes a whole server a straggler.
+    pub server_speed_factors: Vec<f64>,
+    /// Scripted fabric scenario: link throttles
+    /// (`"at_mb=N link=L factor=F [ramp=R]"`, window-indexed by sync
+    /// round) and rack loss/recovery (`"at_mb=N server=S down|up"`).
+    pub events: Vec<String>,
+    /// Demote a server to asynchronous catch-up when its measured
+    /// mega-batch rate falls below this fraction of the fastest server's,
+    /// in [0, 1); 0 disables the straggler policy.
+    pub straggler_floor: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            servers: 1,
+            sync_every: 4,
+            adaptive: true,
+            min_sync_every: 1,
+            max_sync_every: 16,
+            comm_target: 0.1,
+            link_latency_s: 5e-3,
+            link_gbytes_per_sec: 1.0,
+            algo: "ring".to_string(),
+            streams: 4,
+            server_speed_factors: Vec::new(),
+            events: Vec::new(),
+            straggler_floor: 0.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Parse the scripted cluster trace, sorted by mega-batch.
+    pub fn parsed_events(&self) -> Result<Vec<crate::cluster::ClusterEvent>> {
+        crate::cluster::parse_trace(&self.events)
+    }
+}
+
 impl Config {
     /// Load from a TOML file then apply `--section.key=value` overrides.
     pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
@@ -1014,6 +1086,32 @@ impl Config {
         f64_of(map, "slide.quality_discount", &mut cfg.slide.quality_discount)?;
         f64_of(map, "slide.serve_ratio", &mut cfg.slide.serve_ratio)?;
         f64_of(map, "slide.serve_slo_ms", &mut cfg.slide.serve_slo_ms)?;
+
+        usize_of(map, "cluster.servers", &mut cfg.cluster.servers)?;
+        usize_of(map, "cluster.sync_every", &mut cfg.cluster.sync_every)?;
+        if let Some(v) = map.get("cluster.adaptive") {
+            cfg.cluster.adaptive = v.as_bool().context("cluster.adaptive must be a bool")?;
+        }
+        usize_of(map, "cluster.min_sync_every", &mut cfg.cluster.min_sync_every)?;
+        usize_of(map, "cluster.max_sync_every", &mut cfg.cluster.max_sync_every)?;
+        f64_of(map, "cluster.comm_target", &mut cfg.cluster.comm_target)?;
+        f64_of(map, "cluster.link_latency_s", &mut cfg.cluster.link_latency_s)?;
+        f64_of(map, "cluster.link_gbytes_per_sec", &mut cfg.cluster.link_gbytes_per_sec)?;
+        if let Some(v) = map.get("cluster.algo") {
+            cfg.cluster.algo =
+                v.as_str().context("cluster.algo must be a string (ring|tree)")?.to_string();
+        }
+        usize_of(map, "cluster.streams", &mut cfg.cluster.streams)?;
+        if let Some(v) = map.get("cluster.server_speed_factors") {
+            cfg.cluster.server_speed_factors = v
+                .as_f64_arr()
+                .context("cluster.server_speed_factors must be a number array")?;
+        }
+        if let Some(v) = map.get("cluster.events") {
+            cfg.cluster.events =
+                v.as_str_arr().context("cluster.events must be a string array")?;
+        }
+        f64_of(map, "cluster.straggler_floor", &mut cfg.cluster.straggler_floor)?;
 
         cfg.validate()?;
         Ok(cfg)
@@ -1235,6 +1333,69 @@ impl Config {
         }
         if sl.serve_slo_ms < 0.0 {
             bail!("slide.serve_slo_ms must be >= 0 (0 = always exact)");
+        }
+        let cl = &self.cluster;
+        if cl.servers == 0 {
+            bail!("cluster.servers must be >= 1 (1 = the cluster plane is inert)");
+        }
+        if cl.sync_every == 0 {
+            bail!("cluster.sync_every must be >= 1 mega-batch");
+        }
+        if cl.min_sync_every == 0 {
+            bail!("cluster.min_sync_every must be >= 1");
+        }
+        if cl.max_sync_every < cl.min_sync_every {
+            bail!(
+                "cluster.max_sync_every ({}) must be >= cluster.min_sync_every ({})",
+                cl.max_sync_every,
+                cl.min_sync_every
+            );
+        }
+        if !(cl.comm_target > 0.0 && cl.comm_target < 1.0) {
+            bail!("cluster.comm_target must be in (0, 1)");
+        }
+        if cl.link_latency_s < 0.0 {
+            bail!("cluster.link_latency_s must be >= 0");
+        }
+        if cl.link_gbytes_per_sec <= 0.0 {
+            bail!("cluster.link_gbytes_per_sec must be positive");
+        }
+        if cl.algo != "ring" && cl.algo != "tree" {
+            bail!("cluster.algo '{}' must be \"ring\" or \"tree\"", cl.algo);
+        }
+        if cl.streams == 0 {
+            bail!("cluster.streams must be >= 1");
+        }
+        if !cl.server_speed_factors.is_empty() {
+            if cl.server_speed_factors.len() != cl.servers {
+                bail!(
+                    "cluster.server_speed_factors has {} entries for {} servers",
+                    cl.server_speed_factors.len(),
+                    cl.servers
+                );
+            }
+            if cl.server_speed_factors.iter().any(|&f| f <= 0.0) {
+                bail!("cluster.server_speed_factors entries must be positive");
+            }
+        }
+        if !(0.0..1.0).contains(&cl.straggler_floor) {
+            bail!("cluster.straggler_floor must be in [0, 1) (0 disables demotion)");
+        }
+        for ev in cl.parsed_events()? {
+            match ev {
+                crate::cluster::ClusterEvent::Link(d) if d.device >= cl.servers => bail!(
+                    "cluster event throttles link {} but cluster.servers is {}",
+                    d.device,
+                    cl.servers
+                ),
+                crate::cluster::ClusterEvent::Rack { server, .. } if server >= cl.servers => {
+                    bail!(
+                        "cluster event targets server {server} but cluster.servers is {}",
+                        cl.servers
+                    )
+                }
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -1590,5 +1751,68 @@ mod tests {
         let cfg = Config::from_overrides(&[("devices.count".into(), "2".into())]).unwrap();
         assert_eq!(cfg.devices.speed_factors.len(), 2);
         assert!((cfg.devices.speed_factors[1] - 1.32).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let d = Config::default();
+        assert_eq!(d.cluster.servers, 1, "default is the inert single-server plane");
+        assert!(d.cluster.events.is_empty());
+
+        let cfg = Config::from_overrides(&[
+            ("cluster.servers".into(), "3".into()),
+            ("cluster.sync_every".into(), "2".into()),
+            ("cluster.adaptive".into(), "false".into()),
+            ("cluster.min_sync_every".into(), "2".into()),
+            ("cluster.max_sync_every".into(), "8".into()),
+            ("cluster.comm_target".into(), "0.2".into()),
+            ("cluster.link_latency_s".into(), "0.002".into()),
+            ("cluster.link_gbytes_per_sec".into(), "2.5".into()),
+            ("cluster.algo".into(), "tree".into()),
+            ("cluster.streams".into(), "2".into()),
+            ("cluster.straggler_floor".into(), "0.5".into()),
+            (
+                "cluster.events".into(),
+                "[\"at_mb=6 link=1 factor=4 ramp=2\", \"at_mb=4 server=2 down\"]".into(),
+            ),
+        ])
+        .unwrap();
+        assert_eq!(cfg.cluster.servers, 3);
+        assert!(!cfg.cluster.adaptive);
+        assert_eq!(cfg.cluster.algo, "tree");
+        let trace = cfg.cluster.parsed_events().unwrap();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].at_mb(), 4, "trace sorts by mega-batch");
+
+        let reject = |key: &str, value: &str| {
+            assert!(Config::from_overrides(&[(key.into(), value.into())]).is_err(), "{key}={value}");
+        };
+        reject("cluster.servers", "0");
+        reject("cluster.sync_every", "0");
+        reject("cluster.min_sync_every", "0");
+        reject("cluster.max_sync_every", "0"); // < min_sync_every
+        reject("cluster.comm_target", "0");
+        reject("cluster.comm_target", "1.0");
+        reject("cluster.link_latency_s", "-1");
+        reject("cluster.link_gbytes_per_sec", "0");
+        reject("cluster.algo", "butterfly");
+        reject("cluster.streams", "0");
+        reject("cluster.straggler_floor", "1.0");
+        // Factors must match the server count and stay positive.
+        reject("cluster.server_speed_factors", "[1.0, 2.0]"); // servers = 1
+        assert!(Config::from_overrides(&[
+            ("cluster.servers".into(), "2".into()),
+            ("cluster.server_speed_factors".into(), "[1.0, 0.0]".into()),
+        ])
+        .is_err());
+        assert!(Config::from_overrides(&[
+            ("cluster.servers".into(), "2".into()),
+            ("cluster.server_speed_factors".into(), "[1.0, 2.5]".into()),
+        ])
+        .is_ok());
+        reject("cluster.events", "[\"garbage\"]");
+        // Event ids must fit the cluster: servers defaults to 1.
+        reject("cluster.events", "[\"at_mb=1 link=1 factor=2\"]");
+        reject("cluster.events", "[\"at_mb=1 server=1 down\"]");
     }
 }

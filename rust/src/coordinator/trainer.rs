@@ -308,6 +308,36 @@ impl<'b> TrainerSession<'b> {
         self.costs.as_ref()
     }
 
+    /// The current intra-server consensus model (Algorithm 2's merged
+    /// state). The cluster plane reads this between steps as the server's
+    /// contribution to the inter-server merge.
+    pub fn global_model(&self) -> &ModelState {
+        &self.global
+    }
+
+    /// Replace the consensus model with an externally merged one (the
+    /// cluster plane's inter-server sync writing the tier-2 average back).
+    ///
+    /// Two invariants are preserved:
+    ///
+    /// * **Momentum velocity.** `global_prev` is shifted by the same delta
+    ///   as `global`, so the next merge's momentum term
+    ///   `momentum * (global - global_prev)` still measures local progress,
+    ///   not the cross-server correction we just applied.
+    /// * **Replica coherence.** [`Self::step`] leaves every previously
+    ///   active device's replica equal to the old consensus; those replicas
+    ///   are refreshed so the next mega-batch starts from the installed
+    ///   model (devices rejoining later are resynced by `step` itself).
+    pub fn install_global(&mut self, model: ModelState) {
+        // global_prev += (model - global): velocity (global - global_prev)
+        // is unchanged by the installation.
+        let old = std::mem::replace(&mut self.global, model);
+        self.global_prev.add_scaled_diff(&self.global, &old, 1.0);
+        for &d in &self.prev_active {
+            self.replicas[d] = self.global.clone();
+        }
+    }
+
     /// Calibrated per-slot step predictions for a plan's active slots
     /// (None when calibration is off): the device's current estimate when
     /// one exists, its nominal speed factor otherwise.

@@ -61,6 +61,10 @@ pub const EXPERIMENTS: &[ExperimentSpec] = &[
         name: "slide",
         about: "adaptive-sparsity lever: static vs batch-only vs sparsity-only vs joint",
     },
+    ExperimentSpec {
+        name: "cluster",
+        about: "multi-server scale-out: flat vs hierarchical vs adaptive sync cadence",
+    },
 ];
 
 /// Every registered experiment name, in registry order.
@@ -1288,6 +1292,178 @@ pub fn slide(
     );
 
     Ok(SlideOutcome { logs, ladder, throttled_balance, serve_p99 })
+}
+
+// ---------------------------------------------------------------------------
+// Cluster — beyond the paper (ROADMAP north-star): multi-server scale-out.
+// Three servers train over a simulated inter-server fabric while the
+// scripted scenario throttles one uplink mid-run and takes a whole rack
+// down and back up. The same physical scenario runs under three sync
+// policies: flat averaging at a fixed cadence, hierarchical
+// (staleness-weighted) merging at a fixed cadence, and hierarchical
+// merging with the cadence adapting to the measured link speed.
+// ---------------------------------------------------------------------------
+
+pub struct ClusterExperimentOutcome {
+    /// Flat tier-2 average (equal server weights, staleness ignored),
+    /// fixed cadence.
+    pub flat: crate::cluster::ClusterOutcome,
+    /// Hierarchical staleness-weighted merge, fixed cadence.
+    pub fixed: crate::cluster::ClusterOutcome,
+    /// Hierarchical merge with link-calibrated adaptive cadence.
+    pub adaptive: crate::cluster::ClusterOutcome,
+}
+
+/// `experiment cluster`. Pass `base` (e.g. from `--config`) to run under
+/// an explicit config; `None` uses a bench-scale three-server scenario.
+/// When the supplied config has no multi-server `[cluster]` block
+/// (`servers < 2`), the default scenario block is applied on top — the
+/// experiment always has a fabric to degrade. Numerics run the hermetic
+/// reference backend on the virtual clock; every arm is deterministic.
+pub fn cluster(
+    profile: DataProfile,
+    base_override: Option<&Config>,
+) -> Result<ClusterExperimentOutcome> {
+    use crate::cluster::{run_cluster, ClusterEvent, ClusterPolicy};
+
+    let mut base = match base_override {
+        Some(cfg) => cfg.clone(),
+        None => {
+            let mut cfg = bench_config(profile, 4, Strategy::Adaptive);
+            apply_full_scale(&mut cfg);
+            cfg.devices.jitter = 0.0;
+            cfg
+        }
+    };
+    if base.cluster.servers < 2 {
+        // The default scenario: three servers, a mid-run 6x throttle on
+        // server 1's uplink (window-indexed by sync round), and a
+        // whole-rack loss + recovery on server 2. Bandwidth is set low
+        // enough that a sync costs real time against the virtual clock —
+        // otherwise there is nothing for the cadence to adapt to.
+        let n = base.sgd.num_mega_batches;
+        base.cluster.servers = 3;
+        base.cluster.sync_every = 2;
+        base.cluster.min_sync_every = 1;
+        base.cluster.max_sync_every = 8;
+        base.cluster.link_latency_s = 2e-3;
+        base.cluster.link_gbytes_per_sec = 0.05;
+        base.cluster.straggler_floor = 0.5;
+        // Server 2 is 1.6x slower across the board *and* the one that
+        // loses its rack — the staleness-weighted merge has something to
+        // discount, without tripping the 0.5 demotion floor.
+        base.cluster.server_speed_factors = vec![1.0, 1.0, 1.6];
+        base.cluster.events = vec![
+            "at_mb=2 link=1 factor=6.0".to_string(),
+            "at_mb=5 link=1 factor=1.0".to_string(),
+            format!("at_mb={} server=2 down", (n / 2).max(1)),
+            format!("at_mb={} server=2 up", (3 * n / 4).max(n / 2 + 1)),
+        ];
+    }
+    base.runtime.mode = crate::config::ExecMode::Virtual;
+    base.validate()?;
+
+    let flat = run_cluster(&base, ClusterPolicy { flat: true, adaptive: false }, "flat")?;
+    let fixed =
+        run_cluster(&base, ClusterPolicy { flat: false, adaptive: false }, "hier-fixed")?;
+    let adaptive =
+        run_cluster(&base, ClusterPolicy { flat: false, adaptive: true }, "hier-adaptive")?;
+
+    // The throttled window, in sync rounds, straight from the scripted
+    // trace (balance is judged where the fabric was actually degraded).
+    let trace = base.cluster.parsed_events()?;
+    let link_windows: Vec<usize> = trace
+        .iter()
+        .filter_map(|e| match e {
+            ClusterEvent::Link(d) => Some(d.at_mb),
+            ClusterEvent::Rack { .. } => None,
+        })
+        .collect();
+    let rounds_run = adaptive.rounds.len().max(fixed.rounds.len());
+    let (w_lo, w_hi) = match (link_windows.iter().min(), link_windows.iter().max()) {
+        (Some(&lo), Some(&hi)) if hi > lo => (lo, hi),
+        (Some(&lo), _) => (lo, rounds_run),
+        _ => (0, rounds_run),
+    };
+
+    // ---- the adaptive arm's per-round trace --------------------------------
+    let mut t = Table::new(&[
+        "round", "target mb", "cadence", "sync (s)", "clock (s)", "up", "demoted",
+        "completed",
+    ]);
+    for r in &adaptive.rounds {
+        let mark = |v: &[bool]| -> String {
+            v.iter().map(|&b| if b { '1' } else { '0' }).collect()
+        };
+        t.row(&[
+            r.round.to_string(),
+            r.target_mb.to_string(),
+            r.sync_every.to_string(),
+            format!("{:.4}", r.sync_secs),
+            format!("{:.2}", r.clock),
+            mark(&r.up),
+            mark(&r.demoted),
+            format!("{:?}", r.completed),
+        ]);
+    }
+    t.print(&format!(
+        "Cluster — adaptive arm round trace: {} servers, link 1 throttled over sync \
+         windows [{w_lo}, {w_hi}) ({})",
+        base.cluster.servers,
+        profile.name()
+    ));
+
+    // ---- policy comparison --------------------------------------------------
+    let arms: [(&str, &crate::cluster::ClusterOutcome); 3] =
+        [("flat", &flat), ("hier-fixed", &fixed), ("hier-adaptive", &adaptive)];
+    let target = 0.85
+        * arms
+            .iter()
+            .flat_map(|(_, o)| o.logs.iter().map(|l| l.best_accuracy()))
+            .fold(0.0, f64::max);
+    let mut t = Table::new(&[
+        "policy", "syncs", "sync total (s)", "throttled balance", "mean final P@1",
+        &format!("TTA@{target:.3} (s)"), "clock (s)",
+    ]);
+    for (name, out) in &arms {
+        t.row(&[
+            name.to_string(),
+            out.syncs.to_string(),
+            format!("{:.3}", out.total_sync_secs),
+            format!("{:.2}", out.round_balance(w_lo, w_hi)),
+            format!("{:.4}", out.mean_final_accuracy()),
+            fmt_opt(out.time_to_accuracy(target)),
+            format!("{:.2}", out.clock),
+        ]);
+    }
+    t.print("Cluster — flat vs hierarchical vs adaptive-cadence time-to-accuracy");
+
+    // ---- fabric telemetry (adaptive arm) -----------------------------------
+    let mut t = Table::new(&["link", "MB moved", "sync (s)", "mean staleness (mb)"]);
+    for row in &adaptive.link_stats {
+        t.row(&[
+            row.link.to_string(),
+            format!("{:.2}", row.bytes_transferred / 1e6),
+            format!("{:.3}", row.sync_seconds),
+            format!("{:.2}", row.staleness_mb),
+        ]);
+    }
+    t.print("Cluster — per-link fabric telemetry (adaptive arm)");
+
+    let racks = adaptive
+        .sync_events
+        .iter()
+        .filter(|e| e.action == "rack-down" || e.action == "rack-up")
+        .count();
+    let cadence_moves =
+        adaptive.sync_events.iter().filter(|e| e.action == "cadence").count();
+    println!(
+        "adaptive cadence moved {cadence_moves} time(s); {racks} rack transition(s) rode \
+         through; cross-server sync log has {} events",
+        adaptive.sync_events.len()
+    );
+
+    Ok(ClusterExperimentOutcome { flat, fixed, adaptive })
 }
 
 /// Config helper shared with `Config::from_overrides` users.

@@ -18,7 +18,11 @@
 //!   cost-model calibration plane ([`tuning`]) that estimates per-device
 //!   costs from live timings and feeds dispatch, batch scaling, fleet
 //!   fair share, and serve routing — so scheduling follows measured
-//!   speeds, not config constants, even as devices throttle and recover.
+//!   speeds, not config constants, even as devices throttle and recover —
+//!   and a cluster scale-out plane ([`cluster`]) running many such
+//!   servers over a simulated inter-server fabric with two-tier
+//!   staleness-weighted merging, link-calibrated adaptive sync cadence,
+//!   cross-server straggler demotion, and correlated rack failures.
 //! * **Layer 2** — a JAX 3-layer sparse MLP (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per batch-size bucket.
 //! * **Layer 1** — Pallas kernels for the sparse gather-SpMM input layer and
@@ -33,6 +37,7 @@
 
 pub mod allreduce;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

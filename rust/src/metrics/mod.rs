@@ -120,6 +120,60 @@ impl LeaseEventRow {
     }
 }
 
+/// One cross-server synchronization event from the cluster plane — the
+/// inter-server analog of [`PoolEventRow`], stamped with the cluster clock
+/// *and* the server's mega-batch index at the event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SyncEventRow {
+    /// Cluster virtual clock (seconds) when the event landed.
+    pub at: f64,
+    /// The server's completed mega-batches at the event.
+    pub mega_batch: usize,
+    /// Cluster server id the event applies to.
+    pub server: usize,
+    /// "sync" | "demote" | "promote" | "rack-down" | "rack-up" | "cadence".
+    pub action: String,
+    pub reason: String,
+}
+
+impl SyncEventRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at", Json::num(self.at)),
+            ("mega_batch", Json::int(self.mega_batch as i64)),
+            ("server", Json::int(self.server as i64)),
+            ("action", Json::str(self.action.clone())),
+            ("reason", Json::str(self.reason.clone())),
+        ])
+    }
+}
+
+/// Per-link fabric telemetry accumulated over a cluster run (one row per
+/// server uplink): exported in both the CSV and the JSON log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkStatRow {
+    /// Uplink (server) id.
+    pub link: usize,
+    /// Total bytes this link carried across inter-server syncs.
+    pub bytes_transferred: f64,
+    /// Total seconds this link spent in inter-server syncs.
+    pub sync_seconds: f64,
+    /// Mean staleness (mega-batches behind the sync target) the server
+    /// carried into the merges it joined over this link.
+    pub staleness_mb: f64,
+}
+
+impl LinkStatRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("link", Json::int(self.link as i64)),
+            ("bytes_transferred", Json::num(self.bytes_transferred)),
+            ("sync_seconds", Json::num(self.sync_seconds)),
+            ("staleness_mb", Json::num(self.staleness_mb)),
+        ])
+    }
+}
+
 /// Full run log.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -127,11 +181,23 @@ pub struct RunLog {
     pub rows: Vec<MegaBatchRow>,
     /// Every pool membership change over the run, in order.
     pub pool_events: Vec<PoolEventRow>,
+    /// Cross-server sync events this run participated in (cluster plane;
+    /// empty for single-server runs).
+    pub sync_events: Vec<SyncEventRow>,
+    /// Per-link fabric telemetry (cluster plane; empty for single-server
+    /// runs).
+    pub link_stats: Vec<LinkStatRow>,
 }
 
 impl RunLog {
     pub fn new(name: impl Into<String>) -> Self {
-        RunLog { name: name.into(), rows: Vec::new(), pool_events: Vec::new() }
+        RunLog {
+            name: name.into(),
+            rows: Vec::new(),
+            pool_events: Vec::new(),
+            sync_events: Vec::new(),
+            link_stats: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, row: MegaBatchRow) {
@@ -301,11 +367,33 @@ impl RunLog {
             }
             writeln!(f, "{line}")?;
         }
+        // Cluster-plane sections (only when the run actually crossed
+        // servers, so single-server CSVs stay byte-identical).
+        if !self.link_stats.is_empty() {
+            writeln!(f, "link,bytes_transferred,sync_seconds,staleness_mb")?;
+            for l in &self.link_stats {
+                writeln!(
+                    f,
+                    "{},{:.0},{:.6},{:.4}",
+                    l.link, l.bytes_transferred, l.sync_seconds, l.staleness_mb
+                )?;
+            }
+        }
+        if !self.sync_events.is_empty() {
+            writeln!(f, "at,mega_batch,server,action,reason")?;
+            for e in &self.sync_events {
+                writeln!(
+                    f,
+                    "{:.6},{},{},{},{}",
+                    e.at, e.mega_batch, e.server, e.action, e.reason
+                )?;
+            }
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
             (
                 "rows",
@@ -374,7 +462,22 @@ impl RunLog {
                 "pool_events",
                 Json::arr(self.pool_events.iter().map(pool_event_json)),
             ),
-        ])
+        ];
+        // Cluster-plane keys only appear when populated, so single-server
+        // JSON exports stay byte-identical to the pre-cluster format.
+        if !self.sync_events.is_empty() {
+            pairs.push((
+                "sync_events",
+                Json::arr(self.sync_events.iter().map(|e| e.to_json())),
+            ));
+        }
+        if !self.link_stats.is_empty() {
+            pairs.push((
+                "link_stats",
+                Json::arr(self.link_stats.iter().map(|l| l.to_json())),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     pub fn write_json(&self, path: &Path) -> Result<()> {
@@ -491,6 +594,46 @@ mod tests {
         r.updates = vec![10, 0]; // inactive device doesn't skew the ratio
         log.push(r);
         assert!((log.update_balance() - (2.0 + 1.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_rows_export_and_stay_absent_when_empty() {
+        let mut log = RunLog::new("c");
+        log.push(row(0, 1.0, 0.1, false));
+        // Single-server: no cluster keys/sections in either format.
+        let j = Json::parse(&log.to_json().to_string()).unwrap();
+        assert!(j.as_obj().unwrap().get("sync_events").is_none());
+        assert!(j.as_obj().unwrap().get("link_stats").is_none());
+        let path = std::env::temp_dir().join("hs-metrics-cluster-empty.csv");
+        log.write_csv(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 2);
+
+        log.sync_events.push(SyncEventRow {
+            at: 3.5,
+            mega_batch: 4,
+            server: 1,
+            action: "sync".to_string(),
+            reason: "cadence=4".to_string(),
+        });
+        log.link_stats.push(LinkStatRow {
+            link: 1,
+            bytes_transferred: 2.3e6,
+            sync_seconds: 0.04,
+            staleness_mb: 0.5,
+        });
+        let j = Json::parse(&log.to_json().to_string()).unwrap();
+        let evs = j.get("sync_events").as_arr().unwrap();
+        assert_eq!(evs[0].get("server").as_i64(), Some(1));
+        assert_eq!(evs[0].get("action").as_str(), Some("sync"));
+        let links = j.get("link_stats").as_arr().unwrap();
+        assert_eq!(links[0].get("link").as_i64(), Some(1));
+        assert!(links[0].get("bytes_transferred").as_f64().unwrap() > 1e6);
+        let path = std::env::temp_dir().join("hs-metrics-cluster.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("link,bytes_transferred,sync_seconds,staleness_mb"));
+        assert!(text.contains("at,mega_batch,server,action,reason"));
+        assert!(text.contains(",sync,cadence=4"));
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Online inter-server link calibration — [`DeviceEstimator`]'s Theil–Sen
+//! machinery pointed at the network instead of a GPU.
+//!
+//! A link's transfer cost has exactly the shape the device estimator
+//! already fits: a fixed term (propagation latency) plus a variable term
+//! linear in the workload (bytes / bandwidth). So rather than writing a
+//! second robust regressor, [`LinkEstimator`] wraps a [`DeviceEstimator`]
+//! around a *synthetic* nominal [`CostModel`] in which
+//!
+//! * `t_fixed` is the link's nominal latency (seconds per hop),
+//! * `t_per_nnz` is the nominal seconds-per-byte (1 / bandwidth), and
+//! * `t_per_sample` is zero (links carry no per-sample work).
+//!
+//! Each observed sync hop feeds one [`Observation`] with the bytes moved
+//! in the `nnz_per_batch` slot; the fit then recovers the link's
+//! effective latency and bandwidth multiplier, and the estimate's `speed`
+//! is the link slowdown the cluster plane's adaptive sync cadence reads
+//! (2.0 = the link is twice as slow as configured). All of the device
+//! estimator's behavior — windowed robust fit, EWMA tracking, step-drift
+//! fast path — carries over unchanged, so scripted link throttles are
+//! detected exactly like scripted device throttles.
+
+use crate::runtime::CostModel;
+
+use super::estimator::{DeviceEstimator, EstimatorConfig, Observation};
+
+/// The current calibrated estimate for one inter-server link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkEstimate {
+    /// Effective slowdown multiplier vs the configured link (always > 0;
+    /// 1.0 = nominal, 2.0 = half the configured speed).
+    pub slowdown: f64,
+    /// Estimated per-hop latency in seconds (>= 0).
+    pub latency: f64,
+    /// Estimated effective seconds per byte (>= 0).
+    pub secs_per_byte: f64,
+    /// Median relative residual of the fit window — the estimate's own
+    /// quality signal (small = trustworthy).
+    pub residual_rel: f64,
+    /// Observations consumed so far.
+    pub observations: u64,
+    /// Step-drift re-estimates fired so far (a scripted throttle landing
+    /// shows up here within `step_obs` syncs).
+    pub drift_events: u64,
+}
+
+impl LinkEstimate {
+    /// Predicted seconds for one hop moving `bytes` over this link.
+    pub fn hop_secs(&self, bytes: f64) -> f64 {
+        self.latency + self.secs_per_byte * bytes
+    }
+}
+
+/// Online cost estimator for a single inter-server uplink.
+#[derive(Clone, Debug)]
+pub struct LinkEstimator {
+    inner: DeviceEstimator,
+    nominal_secs_per_byte: f64,
+}
+
+impl LinkEstimator {
+    /// Estimator for a link with nominal per-hop `latency` (seconds) and
+    /// `bytes_per_sec` bandwidth (> 0).
+    pub fn new(cfg: EstimatorConfig, latency: f64, bytes_per_sec: f64) -> LinkEstimator {
+        assert!(bytes_per_sec > 0.0, "link bandwidth must be positive");
+        assert!(latency >= 0.0, "link latency cannot be negative");
+        let secs_per_byte = 1.0 / bytes_per_sec;
+        // The synthetic nominal: latency in the fixed slot, seconds-per-
+        // byte in the per-nnz slot, nothing per sample. The remaining
+        // fields are irrelevant to the fit but kept sane.
+        let nominal = CostModel {
+            t_fixed: latency.max(1e-12),
+            t_per_nnz: secs_per_byte,
+            t_per_sample: 0.0,
+            ..CostModel::default()
+        };
+        LinkEstimator {
+            inner: DeviceEstimator::new(cfg, nominal),
+            nominal_secs_per_byte: secs_per_byte,
+        }
+    }
+
+    /// Feed one measured hop: `bytes` moved in `secs` seconds. Returns
+    /// `true` when the step-drift detector fired (the link's behavior just
+    /// step-changed — consumers may want to re-plan the sync cadence
+    /// immediately).
+    pub fn observe(&mut self, bytes: f64, secs: f64) -> bool {
+        self.inner.observe(Observation {
+            bucket: 0,
+            nnz_per_batch: bytes,
+            secs_per_batch: secs,
+            ratio: 1.0,
+        })
+    }
+
+    /// The current estimate (None until the first observation).
+    pub fn estimate(&self) -> Option<LinkEstimate> {
+        let e = self.inner.estimate()?;
+        Some(LinkEstimate {
+            slowdown: e.speed,
+            latency: e.t_fixed,
+            secs_per_byte: e.slope * self.nominal_secs_per_byte,
+            residual_rel: e.residual_rel,
+            observations: e.observations,
+            drift_events: e.drift_events,
+        })
+    }
+
+    /// The link slowdown the cadence controller reads: the estimate's
+    /// multiplier when one exists, 1.0 (nominal) before any observation.
+    pub fn slowdown(&self) -> f64 {
+        self.estimate().map(|e| e.slowdown).unwrap_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> LinkEstimator {
+        // 1 ms latency, 1 GB/s.
+        LinkEstimator::new(EstimatorConfig::default(), 1e-3, 1e9)
+    }
+
+    fn hop_secs(bytes: f64, factor: f64) -> f64 {
+        factor * (1e-3 + bytes / 1e9)
+    }
+
+    #[test]
+    fn recovers_a_nominal_link() {
+        let mut e = est();
+        for i in 0..8 {
+            let bytes = 1e6 + 2e5 * i as f64; // spread, so the fit separates terms
+            e.observe(bytes, hop_secs(bytes, 1.0));
+        }
+        let got = e.estimate().unwrap();
+        assert!((got.slowdown - 1.0).abs() < 0.05, "slowdown {}", got.slowdown);
+        assert!((got.hop_secs(2e6) - hop_secs(2e6, 1.0)).abs() / hop_secs(2e6, 1.0) < 0.05);
+    }
+
+    #[test]
+    fn detects_a_throttled_link() {
+        let mut e = est();
+        for i in 0..8 {
+            let bytes = 1e6 + 2e5 * i as f64;
+            e.observe(bytes, hop_secs(bytes, 1.0));
+        }
+        // The link degrades to a third of its speed: the step detector
+        // must fire within `step_obs` hops and the slowdown re-seed fast.
+        let mut fired = false;
+        for i in 0..6 {
+            let bytes = 1e6 + 2e5 * i as f64;
+            fired |= e.observe(bytes, hop_secs(bytes, 3.0));
+        }
+        assert!(fired, "step detector never fired");
+        let got = e.estimate().unwrap();
+        assert!((got.slowdown - 3.0).abs() < 0.3, "slowdown {}", got.slowdown);
+        assert!(got.drift_events >= 1);
+    }
+
+    #[test]
+    fn slowdown_defaults_to_nominal() {
+        assert_eq!(est().slowdown(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth")]
+    fn zero_bandwidth_is_rejected() {
+        LinkEstimator::new(EstimatorConfig::default(), 1e-3, 0.0);
+    }
+}

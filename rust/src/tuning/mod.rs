@@ -18,6 +18,9 @@
 //!   windowed Theil–Sen robust regression with EWMA smoothing and a
 //!   step-drift detector (step change → fast re-estimate; gradual drift →
 //!   slow tracking).
+//! * [`link`] — [`LinkEstimator`]: the same Theil–Sen machinery pointed
+//!   at inter-server links (latency + bytes/bandwidth), feeding the
+//!   cluster plane's adaptive sync cadence ([`crate::cluster`]).
 //! * [`view`] — [`CalibratedCosts`]: the versioned, `Arc`-swapped shared
 //!   view of every device's current estimate (the snapshot-registry
 //!   pattern applied to costs), read lock-free-ish by dispatch, scaling,
@@ -44,10 +47,12 @@
 
 pub mod drift;
 pub mod estimator;
+pub mod link;
 pub mod view;
 pub mod whatif;
 
 pub use drift::{multiplier_at, parse_trace, DriftEvent};
 pub use estimator::{DeviceEstimate, DeviceEstimator, EstimatorConfig, Observation};
+pub use link::{LinkEstimate, LinkEstimator};
 pub use view::{CalibratedCosts, CostsView};
 pub use whatif::{compare, score_plan, PlanScore};

@@ -1,0 +1,288 @@
+//! Integration tests for the cluster scale-out plane: the
+//! hierarchical-equals-flat merge identity over random partitions,
+//! weights, and churn; bit-determinism of `ClusterSim`; the inert-block
+//! guarantee; the adaptive-cadence acceptance scenario; rack loss and
+//! recovery; and straggler demotion.
+
+use heterosparse::cluster::{self, hier, ClusterPolicy};
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::metrics::RunLog;
+use heterosparse::model::ModelState;
+use heterosparse::runtime::CostModel;
+
+fn small_cfg(g: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 10,
+        initial_batch: 32,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: g,
+        speed_factors: vec![1.0; g],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1500, test_samples: 300, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn cluster_cfg(servers: usize) -> Config {
+    let mut cfg = small_cfg(2);
+    cfg.cluster.servers = servers;
+    cfg.cluster.sync_every = 2;
+    cfg.cluster.link_latency_s = 1e-3;
+    cfg.cluster.link_gbytes_per_sec = 0.01; // syncs cost visible time
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// xorshift64* — deterministic randomness without a rand dependency.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+#[test]
+fn hierarchical_merge_equals_flat_average_over_random_partitions() {
+    // The 1e-10 identity: for any partition of devices into servers, any
+    // positive weights, and any per-server scales, the two-tier average
+    // equals the flat weighted average with device weights w_si * scale_s.
+    let dims =
+        ModelDims { features: 64, hidden: 8, classes: 16, max_nnz: 6, max_labels: 2 };
+    let mut rng = Rng(0x5eed_cafe);
+    for trial in 0..40 {
+        let devices = 2 + rng.below(10);
+        let models: Vec<ModelState> =
+            (0..devices).map(|i| ModelState::init(&dims, (trial * 100 + i) as u64 + 1)).collect();
+        let weights: Vec<f64> = (0..devices).map(|_| 0.1 + 4.0 * rng.f64()).collect();
+        // Random partition with every server non-empty (device i seeds
+        // server i % k; the rest land anywhere — churn between trials).
+        let k = 1 + rng.below(devices.min(5));
+        let mut assign: Vec<usize> = (0..devices).map(|i| i % k).collect();
+        for a in assign.iter_mut().skip(k) {
+            *a = rng.below(k);
+        }
+        let scales: Vec<f64> = if trial % 2 == 0 {
+            vec![1.0; k] // fresh servers: the exact composition case
+        } else {
+            (0..k).map(|_| 0.2 + rng.f64()).collect() // stale servers
+        };
+        let mut servers: Vec<Vec<&ModelState>> = vec![Vec::new(); k];
+        let mut dw: Vec<Vec<f64>> = vec![Vec::new(); k];
+        let mut flat_w = Vec::new();
+        for (i, &s) in assign.iter().enumerate() {
+            servers[s].push(&models[i]);
+            dw[s].push(weights[i]);
+            flat_w.push(weights[i] * scales[s]);
+        }
+        let refs: Vec<&ModelState> = models.iter().collect();
+        let flat = hier::flat_average_f64(&refs, &flat_w);
+        let two_tier = hier::hierarchical_average_f64(&servers, &dw, &scales);
+        let diff = hier::max_abs_diff_f64(&flat, &two_tier);
+        assert!(diff < 1e-10, "trial {trial}: two-tier differs from flat by {diff}");
+    }
+}
+
+#[test]
+fn cluster_sim_is_bit_deterministic() {
+    let mut cfg = cluster_cfg(3);
+    cfg.cluster.straggler_floor = 0.5;
+    cfg.cluster.server_speed_factors = vec![1.0, 1.3, 2.6];
+    cfg.cluster.events = vec![
+        "at_mb=1 link=1 factor=5.0".to_string(),
+        "at_mb=4 server=2 down".to_string(),
+        "at_mb=7 server=2 up".to_string(),
+    ];
+    cfg.validate().unwrap();
+    let policy = ClusterPolicy { flat: false, adaptive: true };
+    let a = cluster::run_cluster(&cfg, policy, "det").unwrap();
+    let b = cluster::run_cluster(&cfg, policy, "det").unwrap();
+    assert_eq!(a.logs.len(), b.logs.len());
+    for (la, lb) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(la.rows.len(), lb.rows.len());
+        for (x, y) in la.rows.iter().zip(&lb.rows) {
+            assert_eq!(x.clock, y.clock);
+            assert_eq!(x.loss, y.loss);
+            assert_eq!(x.accuracy, y.accuracy);
+            assert_eq!(x.updates, y.updates);
+            assert_eq!(x.batch_sizes, y.batch_sizes);
+        }
+        assert_eq!(la.sync_events, lb.sync_events);
+        assert_eq!(la.link_stats, lb.link_stats);
+    }
+    assert_eq!(a.sync_events, b.sync_events);
+    assert_eq!(a.link_stats, b.link_stats);
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.clock, rb.clock);
+        assert_eq!(ra.sync_secs, rb.sync_secs);
+        assert_eq!(ra.completed, rb.completed);
+    }
+}
+
+#[test]
+fn inert_cluster_block_changes_nothing() {
+    // The acceptance gate: with [cluster] absent — or present with
+    // servers = 1 — single-server runs are bit-identical.
+    let run = |cfg: &Config| -> RunLog {
+        let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+        let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+        let backend = RefBackend;
+        let engine =
+            Box::new(SimEngine::new(&backend, DevicePool::roster(cfg), CostModel::default()));
+        let mut trainer = Trainer::new(cfg.clone(), engine, &backend, TrainerOptions::default());
+        trainer.run(&train, &test).unwrap()
+    };
+    let base = small_cfg(2);
+    let plain = run(&base);
+
+    let mut knobs = base.clone();
+    knobs.cluster.sync_every = 1;
+    knobs.cluster.adaptive = false;
+    knobs.cluster.link_gbytes_per_sec = 0.001;
+    knobs.cluster.straggler_floor = 0.9;
+    knobs.validate().unwrap();
+    assert_eq!(knobs.cluster.servers, 1, "the default plane is inert");
+    let inert = run(&knobs);
+
+    assert_eq!(plain.rows.len(), inert.rows.len());
+    for (x, y) in plain.rows.iter().zip(&inert.rows) {
+        assert_eq!(x.clock, y.clock);
+        assert_eq!(x.loss, y.loss);
+        assert_eq!(x.accuracy, y.accuracy);
+        assert_eq!(x.updates, y.updates);
+    }
+    assert!(plain.sync_events.is_empty() && plain.link_stats.is_empty());
+    assert!(inert.sync_events.is_empty() && inert.link_stats.is_empty());
+}
+
+#[test]
+fn adaptive_cadence_stretches_under_a_throttle_and_loses_no_accuracy() {
+    let mut cfg = cluster_cfg(2);
+    cfg.cluster.min_sync_every = 1;
+    cfg.cluster.max_sync_every = 8;
+    cfg.cluster.comm_target = 0.05;
+    // A brutal 20x throttle on link 1 from the second sync window on.
+    cfg.cluster.events = vec!["at_mb=1 link=1 factor=20.0".to_string()];
+    cfg.validate().unwrap();
+
+    let fixed =
+        cluster::run_cluster(&cfg, ClusterPolicy { flat: false, adaptive: false }, "fixed")
+            .unwrap();
+    let adaptive =
+        cluster::run_cluster(&cfg, ClusterPolicy { flat: false, adaptive: true }, "adaptive")
+            .unwrap();
+
+    // The controller must have reacted: cadence grows past the configured
+    // sync_every once the measured sync cost explodes.
+    let max_cadence = adaptive.rounds.iter().map(|r| r.sync_every).max().unwrap();
+    assert!(
+        max_cadence > cfg.cluster.sync_every,
+        "adaptive cadence never stretched (max {max_cadence})"
+    );
+    assert!(
+        adaptive.sync_events.iter().any(|e| e.action == "cadence"),
+        "cadence moves are logged"
+    );
+    // Both arms finish all work; adaptive pays for fewer throttled syncs.
+    let total = cfg.sgd.num_mega_batches;
+    assert!(adaptive.rounds.last().unwrap().completed.iter().all(|&c| c == total));
+    assert!(adaptive.syncs < fixed.syncs, "stretching means fewer syncs");
+    // And accuracy does not regress relative to the fixed cadence.
+    assert!(
+        adaptive.mean_final_accuracy() >= fixed.mean_final_accuracy() - 0.02,
+        "adaptive {} vs fixed {}",
+        adaptive.mean_final_accuracy(),
+        fixed.mean_final_accuracy()
+    );
+}
+
+#[test]
+fn rack_loss_stalls_a_server_and_recovery_resyncs_it() {
+    let mut cfg = cluster_cfg(2);
+    cfg.cluster.events =
+        vec!["at_mb=4 server=1 down".to_string(), "at_mb=8 server=1 up".to_string()];
+    cfg.validate().unwrap();
+    let out = cluster::run_cluster(&cfg, ClusterPolicy { flat: false, adaptive: false }, "rack")
+        .unwrap();
+
+    let down =
+        out.sync_events.iter().find(|e| e.action == "rack-down").expect("rack went down");
+    assert_eq!(down.server, 1);
+    let up = out.sync_events.iter().find(|e| e.action == "rack-up").expect("rack came back");
+    assert_eq!(up.server, 1);
+    assert!(up.at >= down.at);
+    // While down, server 1 steps nothing and joins no syncs.
+    let stalled: Vec<_> = out.rounds.iter().filter(|r| !r.up[1]).collect();
+    assert!(!stalled.is_empty(), "some rounds ran with the rack down");
+    for r in &stalled {
+        assert!(!r.participants.contains(&1));
+    }
+    let frozen = stalled[0].completed[1];
+    assert!(stalled.iter().all(|r| r.completed[1] == frozen), "no progress while down");
+    // Afterwards it catches up and the whole cluster finishes.
+    let total = cfg.sgd.num_mega_batches;
+    assert!(out.rounds.last().unwrap().completed.iter().all(|&c| c == total));
+    assert!(out.logs[1].final_accuracy() > 0.0);
+}
+
+#[test]
+fn straggler_demotion_fires_below_the_floor_and_only_there() {
+    let mut slow = cluster_cfg(2);
+    slow.cluster.straggler_floor = 0.5;
+    slow.cluster.server_speed_factors = vec![1.0, 3.0]; // rate ratio 1/3 < 0.5
+    slow.validate().unwrap();
+    let out = cluster::run_cluster(&slow, ClusterPolicy { flat: false, adaptive: false }, "slow")
+        .unwrap();
+    let demote =
+        out.sync_events.iter().find(|e| e.action == "demote").expect("slow server demoted");
+    assert_eq!(demote.server, 1);
+    // The demoted server lags at least one sync, and its lag is priced
+    // into the fabric telemetry as staleness.
+    assert!(out.rounds.iter().any(|r| r.completed[1] < r.completed[0]));
+    assert!(out.link_stats[1].staleness_mb > 0.0);
+    // Everyone still finishes.
+    let total = slow.sgd.num_mega_batches;
+    assert!(out.rounds.last().unwrap().completed.iter().all(|&c| c == total));
+
+    // With the floor disabled the same cluster never demotes.
+    let mut off = slow.clone();
+    off.cluster.straggler_floor = 0.0;
+    off.validate().unwrap();
+    let out =
+        cluster::run_cluster(&off, ClusterPolicy { flat: false, adaptive: false }, "off").unwrap();
+    assert!(out.sync_events.iter().all(|e| e.action != "demote"));
+}
