@@ -21,7 +21,11 @@
 //!   * cluster plane: segment-agnostic all-reduce arithmetic, tier-2
 //!     staleness-weighted merge, fabric link-cost scoring, and a full
 //!     micro-cluster sim round loop — recorded to `BENCH_cluster.json`
-//!     (`HS_BENCH_CLUSTER_OUT` overrides the path).
+//!     (`HS_BENCH_CLUSTER_OUT` overrides the path),
+//!   * observability plane: enabled span emit, registry counter
+//!     increment + by-name lookup, and the disabled-sink no-op that
+//!     rides every call site — recorded to `BENCH_obs.json`
+//!     (`HS_BENCH_OBS_OUT` overrides the path).
 
 use std::sync::Arc;
 
@@ -39,6 +43,7 @@ use heterosparse::data::pipeline::{BufferPool, DataPlane, ShardedDataset};
 use heterosparse::data::synthetic::Generator;
 use heterosparse::model::reference::{sgd_step_ref, sgd_step_scratch, StepScratch};
 use heterosparse::model::ModelState;
+use heterosparse::obs::{ObsHandle, Subsystem};
 use heterosparse::runtime::{CostModel, Runtime};
 use heterosparse::slide::lsh::LshTables;
 use heterosparse::slide::SparseStepper;
@@ -401,6 +406,52 @@ fn main() {
         "perf_hotpath/cluster",
         &cluster_results,
     );
+
+    // ---- observability plane: span emit, registry, disabled no-op ----------
+    // Spans ride every scheduling decision and the disabled branch rides
+    // *every* call site, so all of these must stay nanosecond-scale.
+    let mut obs_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let enabled_obs = ObsHandle::from_config(
+        &heterosparse::config::ObsConfig { enabled: true, ..Default::default() },
+        false,
+    );
+    let mut t = 0u64;
+    let r = bench_fn("obs/span_emit(enabled)", 10, 2000, || {
+        t += 1;
+        enabled_obs.span(
+            Subsystem::Train,
+            "train.megabatch",
+            0,
+            t as f64 * 1e-3,
+            1e-3,
+            vec![("mb", heterosparse::obs::ArgVal::U(t))],
+        )
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({:.2} Mspans/s)", per_sec / 1e6);
+    obs_results.push(("span_emit_enabled".to_string(), r, per_sec));
+
+    let counter = enabled_obs.counter("bench.counter");
+    let r = bench_fn("obs/counter_inc(cached handle)", 100, 5000, || counter.inc());
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({:.1} Mincs/s)", per_sec / 1e6);
+    obs_results.push(("counter_inc".to_string(), r, per_sec));
+
+    let r = bench_fn("obs/counter_by_name(lookup + inc)", 10, 2000, || {
+        enabled_obs.counter("bench.lookup").inc()
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} lookups/s)");
+    obs_results.push(("counter_by_name".to_string(), r, per_sec));
+
+    let disabled_obs = ObsHandle::disabled();
+    let r = bench_fn("obs/span_emit(disabled no-op)", 100, 5000, || {
+        disabled_obs.span(Subsystem::Train, "train.megabatch", 0, 0.0, 1e-3, Vec::new())
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({:.1} Mcalls/s)", per_sec / 1e6);
+    obs_results.push(("span_emit_disabled".to_string(), r, per_sec));
+    append_baseline("BENCH_obs.json", "HS_BENCH_OBS_OUT", "perf_hotpath/obs", &obs_results);
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
             follow_clock: false,
             train_log: None,
             name: "bursty".to_string(),
+            obs: heterosparse::obs::ambient(),
         },
     )?;
 

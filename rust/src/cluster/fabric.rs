@@ -19,6 +19,7 @@
 
 use crate::allreduce::Algo;
 use crate::metrics::LinkStatRow;
+use crate::obs::ObsHandle;
 use crate::tuning::{multiplier_at, DriftEvent, EstimatorConfig, LinkEstimate, LinkEstimator};
 
 /// Effective cost of one fabric hop over one link.
@@ -55,6 +56,9 @@ pub struct Fabric {
     tallies: Vec<LinkTally>,
     algo: Algo,
     streams: usize,
+    /// Mirrors each completed sync's per-link tallies into the registry
+    /// under `cluster.link{l}.*` dotted names.
+    obs: ObsHandle,
 }
 
 impl Fabric {
@@ -69,6 +73,21 @@ impl Fabric {
         streams: usize,
         throttle: Vec<DriftEvent>,
     ) -> Fabric {
+        Fabric::new_obs(servers, latency, bytes_per_sec, algo, streams, throttle, &ObsHandle::disabled())
+    }
+
+    /// [`Fabric::new`] with per-link telemetry mirrored into `obs`'s
+    /// registry (the cluster simulator passes its handle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_obs(
+        servers: usize,
+        latency: f64,
+        bytes_per_sec: f64,
+        algo: Algo,
+        streams: usize,
+        throttle: Vec<DriftEvent>,
+        obs: &ObsHandle,
+    ) -> Fabric {
         assert!(servers >= 1, "a fabric needs at least one server");
         assert!(bytes_per_sec > 0.0, "link bandwidth must be positive");
         let cfg = EstimatorConfig { step_obs: 1, ..EstimatorConfig::default() };
@@ -81,6 +100,7 @@ impl Fabric {
             tallies: vec![LinkTally::default(); servers],
             algo,
             streams: streams.max(1),
+            obs: obs.clone(),
         }
     }
 
@@ -154,6 +174,11 @@ impl Fabric {
             t.staleness_sum += lag as f64;
             t.syncs += 1;
             self.estimators[l].observe(part, hop);
+            // Mirror into the registry (sync-rate path, not per-step hot).
+            self.obs.gauge(&format!("cluster.link{l}.bytes")).add(link_bytes);
+            self.obs.gauge(&format!("cluster.link{l}.secs")).add(sync_secs);
+            self.obs.gauge(&format!("cluster.link{l}.staleness")).add(lag as f64);
+            self.obs.counter(&format!("cluster.link{l}.syncs")).inc();
         }
     }
 
@@ -245,6 +270,19 @@ mod tests {
         assert!((f.link_slowdown(0) - 4.0).abs() < 0.4, "got {}", f.link_slowdown(0));
         assert!((f.link_slowdown(1) - 1.0).abs() < 0.05, "link 1 is untouched");
         assert!((f.bottleneck_slowdown(&[0, 1]) - 4.0).abs() < 0.4);
+    }
+
+    #[test]
+    fn sync_telemetry_mirrors_into_the_registry() {
+        let obs = ObsHandle::disabled(); // registry counts even when tracing is off
+        let mut f = Fabric::new_obs(2, 1e-3, 1e9, Algo::Ring, 4, Vec::new(), &obs);
+        f.record_sync(&[0, 1], &[1, 0], 1e6, 0);
+        let rows = obs.registry().snapshot();
+        let syncs = rows.iter().find(|r| r.name == "cluster.link0.syncs").unwrap();
+        assert_eq!((syncs.kind, syncs.value), ("counter", 1.0));
+        let stale = rows.iter().find(|r| r.name == "cluster.link0.staleness").unwrap();
+        assert_eq!((stale.kind, stale.value), ("gauge", 1.0));
+        assert!(rows.iter().any(|r| r.name == "cluster.link1.bytes"));
     }
 
     #[test]

@@ -47,4 +47,4 @@ pub mod sim;
 pub use events::{link_trace, parse_trace, rack_up, ClusterEvent};
 pub use fabric::{Fabric, LinkSpec};
 pub use hier::{merge_servers, staleness_scale, ServerContribution};
-pub use sim::{run_cluster, ClusterOutcome, ClusterPolicy, ClusterSim, RoundRow};
+pub use sim::{run_cluster, run_cluster_with, ClusterOutcome, ClusterPolicy, ClusterSim, RoundRow};

@@ -202,6 +202,7 @@ pub struct ClusterSim<'b> {
     servers: Vec<ServerState<'b>>,
     fabric: Fabric,
     trace: Vec<ClusterEvent>,
+    obs: crate::obs::ObsHandle,
 }
 
 impl<'b> ClusterSim<'b> {
@@ -214,6 +215,21 @@ impl<'b> ClusterSim<'b> {
         backend: &'b RefBackend,
         name: &str,
     ) -> Result<ClusterSim<'b>> {
+        ClusterSim::new_with(cfg, policy, backend, name, crate::obs::ambient())
+    }
+
+    /// [`ClusterSim::new`] with an explicit observability handle: server
+    /// `s`'s spans group under trace pid `s` (one process lane per
+    /// server), tier-2 syncs land as `cluster.sync` spans with the
+    /// decision reason, and fabric link telemetry mirrors into the
+    /// shared registry.
+    pub fn new_with(
+        cfg: &Config,
+        policy: ClusterPolicy,
+        backend: &'b RefBackend,
+        name: &str,
+        obs: crate::obs::ObsHandle,
+    ) -> Result<ClusterSim<'b>> {
         cfg.validate()?;
         let c = &cfg.cluster;
         ensure!(c.servers >= 1, "cluster.servers must be at least 1");
@@ -223,13 +239,14 @@ impl<'b> ClusterSim<'b> {
             "tree" => Algo::Tree,
             other => bail!("cluster.algo '{other}' must be \"ring\" or \"tree\""),
         };
-        let fabric = Fabric::new(
+        let fabric = Fabric::new_obs(
             c.servers,
             c.link_latency_s,
             c.link_gbytes_per_sec * 1e9,
             algo,
             c.streams,
             link_trace(&trace),
+            &obs,
         );
 
         let gen = Generator::new(&cfg.model, &cfg.data);
@@ -265,7 +282,11 @@ impl<'b> ClusterSim<'b> {
                 scfg,
                 engine,
                 backend,
-                TrainerOptions::default(),
+                TrainerOptions {
+                    // One trace process lane per server.
+                    obs: obs.for_pid(s as u32),
+                    ..TrainerOptions::default()
+                },
                 train,
                 test.clone(),
                 format!("{name}/server{s}"),
@@ -279,6 +300,7 @@ impl<'b> ClusterSim<'b> {
             servers,
             fabric,
             trace,
+            obs,
         })
     }
 
@@ -334,6 +356,13 @@ impl<'b> ClusterSim<'b> {
                                 .to_string(),
                         });
                     }
+                    self.obs.for_pid(s as u32).instant(
+                        crate::obs::Subsystem::Cluster,
+                        if up { "cluster.rack_up" } else { "cluster.rack_down" },
+                        0,
+                        cluster_clock,
+                        vec![("server", s.into()), ("mega_batch", mb.into())],
+                    );
                     self.servers[s].up = up;
                 }
             }
@@ -429,7 +458,23 @@ impl<'b> ClusterSim<'b> {
                         action: "sync".to_string(),
                         reason: format!("window={round} cadence={sync_every} stale={lag}"),
                     });
+                    // Tier-2 barrier span on each participant's coordinator
+                    // lane: [barrier, barrier + sync_secs], reason attached.
+                    self.obs.for_pid(s as u32).span(
+                        crate::obs::Subsystem::Cluster,
+                        "cluster.sync",
+                        0,
+                        barrier,
+                        sync_secs,
+                        vec![
+                            ("window", round.into()),
+                            ("cadence", sync_every.into()),
+                            ("stale", lag.into()),
+                            ("participants", participants.len().into()),
+                        ],
+                    );
                 }
+                self.obs.counter("cluster.syncs").inc();
                 consensus = Some(merged);
                 total_sync_secs += sync_secs;
                 syncs += 1;
@@ -466,6 +511,13 @@ impl<'b> ClusterSim<'b> {
                                     "measured {rate:.3} mb/s < floor {floor:.3}: async catch-up"
                                 ),
                             });
+                            self.obs.for_pid(i as u32).instant(
+                                crate::obs::Subsystem::Cluster,
+                                "cluster.demote",
+                                0,
+                                cluster_clock,
+                                vec![("rate", (*rate).into()), ("floor", floor.into())],
+                            );
                         } else if srv.demoted && *rate >= floor {
                             srv.demoted = false;
                             sync_events.push(SyncEventRow {
@@ -477,6 +529,13 @@ impl<'b> ClusterSim<'b> {
                                     "measured {rate:.3} mb/s >= floor {floor:.3}: rejoins barrier"
                                 ),
                             });
+                            self.obs.for_pid(i as u32).instant(
+                                crate::obs::Subsystem::Cluster,
+                                "cluster.promote",
+                                0,
+                                cluster_clock,
+                                vec![("rate", (*rate).into()), ("floor", floor.into())],
+                            );
                         }
                     }
                 }
@@ -502,6 +561,17 @@ impl<'b> ClusterSim<'b> {
                             self.fabric.bottleneck_slowdown(&participants)
                         ),
                     });
+                    self.obs.for_pid(participants[0] as u32).instant(
+                        crate::obs::Subsystem::Cluster,
+                        "cluster.cadence",
+                        0,
+                        cluster_clock,
+                        vec![
+                            ("from", sync_every.into()),
+                            ("to", new_every.into()),
+                            ("sync_secs", sync_secs.into()),
+                        ],
+                    );
                     sync_every = new_every;
                 }
             }
@@ -574,4 +644,18 @@ fn update_mass(session: &TrainerSession<'_>, from_mb: usize) -> f64 {
 pub fn run_cluster(cfg: &Config, policy: ClusterPolicy, name: &str) -> Result<ClusterOutcome> {
     let backend = RefBackend;
     ClusterSim::new(cfg, policy, &backend, name)?.run()
+}
+
+/// [`run_cluster`] with an explicit observability handle (see
+/// [`ClusterSim::new_with`]) — what the trace-determinism tests drive so
+/// they can inspect the sink without touching the process-wide ambient
+/// handle.
+pub fn run_cluster_with(
+    cfg: &Config,
+    policy: ClusterPolicy,
+    name: &str,
+    obs: crate::obs::ObsHandle,
+) -> Result<ClusterOutcome> {
+    let backend = RefBackend;
+    ClusterSim::new_with(cfg, policy, &backend, name, obs)?.run()
 }

@@ -374,6 +374,42 @@ impl Default for RuntimeConfig {
     }
 }
 
+/// `[obs]` — the unified observability plane (PR 8): structured spans,
+/// Chrome-trace export, and the counter registry. Inert by default: with
+/// `enabled = false` and no `--trace` flag the sink is a no-op and every
+/// output is byte-identical to a config that never mentions this section
+/// (the registry itself is always on — migrated subsystem counters keep
+/// their RunLog values regardless).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Collect spans/events. Also armed implicitly by the CLI `--trace`
+    /// flag, so a trace can be captured without editing the config.
+    pub enabled: bool,
+    /// Event verbosity: `"info"` (decision-level timeline, the default)
+    /// or `"debug"` (adds high-volume per-request detail).
+    pub level: String,
+    /// Subsystems to record (empty = all of them): any of `train`,
+    /// `engine`, `data`, `serve`, `fleet`, `cluster`.
+    pub subsystems: Vec<String>,
+    /// Ring-buffer capacity in events; the oldest events are evicted
+    /// beyond this (the eviction tally is exported in the trace).
+    pub buffer_events: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            level: "info".to_string(),
+            subsystems: Vec::new(),
+            buffer_events: 65536,
+        }
+    }
+}
+
+/// The subsystem names accepted by `obs.subsystems`.
+pub const OBS_SUBSYSTEMS: [&str; 6] = ["train", "engine", "data", "serve", "fleet", "cluster"];
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
@@ -390,6 +426,7 @@ pub struct Config {
     pub calibration: CalibrationConfig,
     pub slide: SlideConfig,
     pub cluster: ClusterConfig,
+    pub obs: ObsConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -1113,6 +1150,19 @@ impl Config {
         }
         f64_of(map, "cluster.straggler_floor", &mut cfg.cluster.straggler_floor)?;
 
+        if let Some(v) = map.get("obs.enabled") {
+            cfg.obs.enabled = v.as_bool().context("obs.enabled must be a bool")?;
+        }
+        if let Some(v) = map.get("obs.level") {
+            cfg.obs.level =
+                v.as_str().context("obs.level must be a string (info|debug)")?.to_string();
+        }
+        if let Some(v) = map.get("obs.subsystems") {
+            cfg.obs.subsystems =
+                v.as_str_arr().context("obs.subsystems must be a string array")?;
+        }
+        usize_of(map, "obs.buffer_events", &mut cfg.obs.buffer_events)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -1397,6 +1447,18 @@ impl Config {
                 _ => {}
             }
         }
+        let ob = &self.obs;
+        if ob.level != "info" && ob.level != "debug" {
+            bail!("obs.level '{}' must be \"info\" or \"debug\"", ob.level);
+        }
+        for s in &ob.subsystems {
+            if !OBS_SUBSYSTEMS.contains(&s.as_str()) {
+                bail!("obs.subsystems entry '{s}' not one of {OBS_SUBSYSTEMS:?}");
+            }
+        }
+        if ob.buffer_events == 0 {
+            bail!("obs.buffer_events must be >= 1");
+        }
         Ok(())
     }
 
@@ -1475,6 +1537,30 @@ mod tests {
             ("devices.speed_factors".into(), "[1.0, 1.1]".into()),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn obs_config_parses_and_validates() {
+        let cfg = Config::default();
+        assert!(!cfg.obs.enabled, "obs is inert by default");
+        assert_eq!(cfg.obs.level, "info");
+        assert_eq!(cfg.obs.buffer_events, 65536);
+        let cfg = Config::from_overrides(&[
+            ("obs.enabled".into(), "true".into()),
+            ("obs.level".into(), "debug".into()),
+            ("obs.subsystems".into(), "[\"train\", \"cluster\"]".into()),
+            ("obs.buffer_events".into(), "128".into()),
+        ])
+        .unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.level, "debug");
+        assert_eq!(cfg.obs.subsystems, vec!["train".to_string(), "cluster".to_string()]);
+        assert_eq!(cfg.obs.buffer_events, 128);
+        assert!(Config::from_overrides(&[("obs.level".into(), "verbose".into())]).is_err());
+        assert!(
+            Config::from_overrides(&[("obs.subsystems".into(), "[\"disk\"]".into())]).is_err()
+        );
+        assert!(Config::from_overrides(&[("obs.buffer_events".into(), "0".into())]).is_err());
     }
 
     #[test]

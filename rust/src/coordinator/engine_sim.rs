@@ -14,6 +14,7 @@
 use crate::data::pipeline::DataPlane;
 use crate::model::reference::StepScratch;
 use crate::model::ModelState;
+use crate::obs::{ArgVal, ObsHandle, Subsystem};
 use crate::runtime::{CostModel, SimDevice};
 use crate::slide::SparseStepper;
 use crate::Result;
@@ -36,6 +37,9 @@ pub struct SimEngine<'b> {
     /// (the engine is single-threaded; numerics are bit-identical to fresh
     /// buffers — pinned by `model::reference` tests).
     scratch: StepScratch,
+    /// Trace sink for per-device `engine.step` spans, stamped on the
+    /// virtual clock (sink time base + this window's free-time offset).
+    obs: ObsHandle,
 }
 
 impl<'b> SimEngine<'b> {
@@ -49,6 +53,7 @@ impl<'b> SimEngine<'b> {
             slide: crate::config::SlideConfig::default(),
             steppers: (0..n).map(|_| None).collect(),
             scratch: StepScratch::new(),
+            obs: ObsHandle::disabled(),
         }
     }
 
@@ -91,6 +96,22 @@ impl<'b> SimEngine<'b> {
             stepper.step(&mut replicas[dev], &batch, plan.lrs[slot], &mut self.scratch)
         };
         let dur = self.devices[dev].step_duration_at(&self.cost, &batch, ratio);
+        if self.obs.enabled() {
+            // Virtual-clock stamp: the trainer parked its clock in the sink
+            // before dispatch; this window's offset is the slot's free-time.
+            self.obs.span(
+                Subsystem::Engine,
+                "engine.step",
+                1 + dev as u32,
+                self.obs.time_base() + free_time[slot],
+                dur,
+                vec![
+                    ("batch", ArgVal::U(valid as u64)),
+                    ("nnz", ArgVal::U(batch.nnz as u64)),
+                    ("ratio", ArgVal::F(ratio)),
+                ],
+            );
+        }
         free_time[slot] += dur;
         let s = &mut stats[dev];
         s.updates += 1;
@@ -200,6 +221,10 @@ impl<'b> ExecutionEngine for SimEngine<'b> {
         if let Some(d) = self.devices.get_mut(device) {
             d.set_drift(multiplier);
         }
+    }
+
+    fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
     }
 
     fn name(&self) -> &'static str {
@@ -502,6 +527,31 @@ mod tests {
             after.updates()
         );
         engine.set_drift(99, 2.0); // out-of-roster drift is ignored, not a panic
+    }
+
+    #[test]
+    fn engine_step_spans_land_on_device_lanes() {
+        let (cfg, ds) = setup();
+        let backend = RefBackend;
+        let mut engine =
+            SimEngine::new(&backend, SimDevice::fleet(&cfg.devices), CostModel::default());
+        let obs = ObsHandle::from_config(
+            &crate::config::ObsConfig { enabled: true, ..Default::default() },
+            false,
+        );
+        engine.set_obs(obs.clone());
+        obs.set_time_base(5.0);
+        let plane = sync_plane(&cfg, &ds, 1);
+        let mut replicas = vec![ModelState::init(&cfg.model, 2); 4];
+        let report = engine
+            .run_mega_batch(&mut replicas, &plane, &plan_dynamic(4, 32, 320))
+            .unwrap();
+        let evs = obs.sink().events();
+        assert_eq!(evs.len() as u64, report.total_updates(), "one span per step");
+        assert!(evs.iter().all(|e| e.name == "engine.step"));
+        assert!(evs.iter().all(|e| e.tid >= 1), "device lanes start at tid 1");
+        assert!(evs.iter().all(|e| e.ts >= 5.0 && e.dur > 0.0), "base + offset stamps");
+        assert_eq!(obs.sink().balance(), (evs.len() as u64, evs.len() as u64));
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::data::pipeline::DataPlane;
 use crate::data::PaddedBatch;
 use crate::model::reference::StepScratch;
 use crate::model::ModelState;
+use crate::obs::{ArgVal, ObsHandle, Subsystem};
 use crate::runtime::SimDevice;
 use crate::slide::SparseStepper;
 use crate::Result;
@@ -81,6 +82,10 @@ pub struct ThreadedEngine {
     template: ModelState,
     /// `[slide]` section the workers build their sparse steppers from.
     slide: crate::config::SlideConfig,
+    /// Trace sink for per-device step spans. Workers stay obs-free: the
+    /// coordinator stamps each span on the wall clock when the completion
+    /// event arrives (`ts = now - busy`), so no handle crosses a thread.
+    obs: ObsHandle,
 }
 
 impl ThreadedEngine {
@@ -120,6 +125,7 @@ impl ThreadedEngine {
             crossbow,
             template: template.clone(),
             slide,
+            obs: ObsHandle::disabled(),
         })
     }
 
@@ -272,6 +278,8 @@ impl ExecutionEngine for ThreadedEngine {
         let mut stats = vec![DevStats::default(); roster];
         let mut batch_nnz = Vec::new();
         let t0 = Instant::now();
+        // Wall-clock scoped span covering the whole dispatch window.
+        let window_span = self.obs.begin(Subsystem::Engine, "engine.megabatch.wall", 0);
 
         // Per-slot outstanding work accounting.
         let mut inflight = 0usize;
@@ -303,6 +311,21 @@ impl ExecutionEngine for ThreadedEngine {
                     s.nnz += batch.nnz as u64;
                     s.active_classes += active as u64;
                     s.busy += busy;
+                    if self.obs.enabled() {
+                        // Wall-clock stamp reconstructed from the completion
+                        // event: the step ended now and ran for `busy`.
+                        self.obs.span(
+                            Subsystem::Engine,
+                            "engine.step",
+                            1 + dev as u32,
+                            self.obs.now() - busy,
+                            busy,
+                            vec![
+                                ("batch", ArgVal::U(batch.valid as u64)),
+                                ("nnz", ArgVal::U(batch.nnz as u64)),
+                            ],
+                        );
+                    }
                     batch_nnz.push(batch.nnz as u64);
                     plane.recycle(batch);
                     if self.try_dispatch(slot, plan, plane, &mut remaining, &mut quota)? {
@@ -316,6 +339,9 @@ impl ExecutionEngine for ThreadedEngine {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
+        if let Some(g) = window_span {
+            self.obs.end(g, vec![("devices", ArgVal::U(plan.devices() as u64))]);
+        }
 
         // Barrier: pull the active replicas back.
         for &dev in &plan.device_ids {
@@ -338,6 +364,10 @@ impl ExecutionEngine for ThreadedEngine {
 
     fn roster_len(&self) -> usize {
         self.roster.len()
+    }
+
+    fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
     }
 
     fn name(&self) -> &'static str {
@@ -676,6 +706,43 @@ mod tests {
         }
         // Sparse steps still move the replicas.
         assert!(replicas[0].max_abs_diff(&template) > 0.0);
+    }
+
+    #[test]
+    fn threaded_steps_emit_wall_clock_spans() {
+        let (cfg, ds) = setup();
+        let template = ModelState::init(&cfg.model, 1);
+        let mut engine =
+            ThreadedEngine::spawn(ref_factory(), SimDevice::fleet(&cfg.devices), &template).unwrap();
+        let obs = ObsHandle::from_config(
+            &crate::config::ObsConfig { enabled: true, ..Default::default() },
+            false,
+        );
+        engine.set_obs(obs.clone());
+        let plane = async_plane(&cfg, &ds, 5);
+        let mut replicas = vec![template.clone(); 3];
+        let plan = DispatchPlan {
+            mode: DispatchMode::Dynamic,
+            device_ids: all_active(3),
+            batch_sizes: vec![16, 16, 16],
+            lrs: vec![0.05; 3],
+            sample_budget: 160,
+            crossbow_rate: None,
+            nnz_estimate: 5.0,
+            predicted_step_secs: None,
+            sparsity_ratios: None,
+        };
+        let report = engine.run_mega_batch(&mut replicas, &plane, &plan).unwrap();
+        let evs = obs.sink().events();
+        let steps = evs.iter().filter(|e| e.name == "engine.step").count();
+        assert_eq!(steps as u64, report.total_updates(), "one span per completed step");
+        assert!(
+            evs.iter().any(|e| e.name == "engine.megabatch.wall" && e.tid == 0),
+            "window guard span on the coordinator lane"
+        );
+        assert!(evs.iter().all(|e| e.ts >= 0.0 && e.dur >= 0.0));
+        let (opened, closed) = obs.sink().balance();
+        assert_eq!(opened, closed, "guard spans all closed");
     }
 
     #[test]

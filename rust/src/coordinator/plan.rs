@@ -299,6 +299,12 @@ pub trait ExecutionEngine {
     /// (or with workers owning their devices) simply ignore drift traces.
     fn set_drift(&mut self, _device: usize, _multiplier: f64) {}
 
+    /// Hand the engine an observability handle so it can emit per-device
+    /// step spans (`engine.step`) onto the trace. The default is a no-op:
+    /// engines without per-device timing (e.g. the null engine) simply
+    /// never appear in the engine lanes.
+    fn set_obs(&mut self, _obs: crate::obs::ObsHandle) {}
+
     fn name(&self) -> &'static str;
 }
 

@@ -82,6 +82,13 @@ pub struct TrainerOptions {
     pub costs: Option<Arc<CalibratedCosts>>,
     /// Print progress lines.
     pub verbose: bool,
+    /// Observability handle: trace sink + metric registry + process lane.
+    /// Defaults to the process-wide ambient handle (installed by the CLI
+    /// from `[obs]` / `--trace`; disabled otherwise), so library callers
+    /// that never mention obs keep byte-identical behavior. The fleet and
+    /// cluster planes re-lane this per tenant/server via
+    /// [`crate::obs::ObsHandle::for_pid`].
+    pub obs: crate::obs::ObsHandle,
 }
 
 impl Default for TrainerOptions {
@@ -96,6 +103,7 @@ impl Default for TrainerOptions {
             publish: None,
             costs: None,
             verbose: false,
+            obs: crate::obs::ambient(),
         }
     }
 }
@@ -155,7 +163,7 @@ impl<'b> TrainerSession<'b> {
     /// run log (tenant name under the fleet scheduler).
     pub fn new(
         cfg: Config,
-        engine: Box<dyn ExecutionEngine + 'b>,
+        mut engine: Box<dyn ExecutionEngine + 'b>,
         eval_backend: &'b dyn StepBackend,
         mut opts: TrainerOptions,
         train: Arc<ShardedDataset>,
@@ -164,6 +172,8 @@ impl<'b> TrainerSession<'b> {
     ) -> Result<TrainerSession<'b>> {
         let dims = cfg.model.clone();
         let roster = engine.roster_len();
+        // The engine emits per-device step spans onto the same sink/lane.
+        engine.set_obs(opts.obs.clone());
 
         // The data plane: sharded corpus + composition policy + (for the
         // threaded engine) async prefetch. Virtual-time runs force
@@ -173,8 +183,14 @@ impl<'b> TrainerSession<'b> {
             ExecMode::Virtual => 0,
             ExecMode::Real => cfg.data.pipeline.producer_threads,
         };
-        let plane =
-            DataPlane::new(train, &dims, &cfg.data.pipeline, producer_threads, cfg.sgd.seed);
+        let plane = DataPlane::new_obs(
+            train,
+            &dims,
+            &cfg.data.pipeline,
+            producer_threads,
+            cfg.sgd.seed,
+            &opts.obs,
+        );
         let nnz_estimate = plane.nnz_estimate();
 
         let eval_bucket = opts
@@ -286,13 +302,16 @@ impl<'b> TrainerSession<'b> {
         &self.log
     }
 
-    pub fn into_log(self) -> RunLog {
+    pub fn into_log(mut self) -> RunLog {
+        self.log.metrics = self.opts.obs.metrics_rows();
         self.log
     }
 
     /// Tear the session down, returning the run log and the engine it
-    /// borrowed (so a [`Trainer`] can reclaim it).
-    pub fn finish(self) -> (RunLog, Box<dyn ExecutionEngine + 'b>) {
+    /// borrowed (so a [`Trainer`] can reclaim it). With `[obs]` enabled
+    /// the registry snapshot rides out in the log's `metrics` section.
+    pub fn finish(mut self) -> (RunLog, Box<dyn ExecutionEngine + 'b>) {
+        self.log.metrics = self.opts.obs.metrics_rows();
         (self.log, self.engine)
     }
 
@@ -389,6 +408,24 @@ impl<'b> TrainerSession<'b> {
         let strategy = cfg.strategy.kind;
         let mb = self.mb;
         self.clock = self.clock.max(now);
+        let t_step_start = self.clock;
+        let sizes_before = self.batch_sizes.clone();
+        let obs = self.opts.obs.clone();
+        if obs.enabled() {
+            for ev in &events {
+                obs.instant(
+                    crate::obs::Subsystem::Train,
+                    "train.pool",
+                    0,
+                    t_step_start,
+                    vec![
+                        ("device", crate::obs::ArgVal::U(ev.device as u64)),
+                        ("action", crate::obs::ArgVal::S(ev.action.clone())),
+                        ("reason", crate::obs::ArgVal::S(ev.reason.clone())),
+                    ],
+                );
+            }
+        }
 
         // A device (re-)joining resumes from the current global model; the
         // momentum history lives on the global model and is unaffected by
@@ -452,6 +489,9 @@ impl<'b> TrainerSession<'b> {
                     sizes_used[d] = plan.batch_sizes[i];
                     ratios_used[d] = plan.sparsity_ratio(i);
                 }
+                // Park the virtual clock in the sink so the engine's step
+                // spans land at absolute run time, not window offsets.
+                obs.set_time_base(self.clock);
                 let report = self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
                 self.clock += report.wall;
 
@@ -553,6 +593,7 @@ impl<'b> TrainerSession<'b> {
                     for lr in plan.lrs.iter_mut() {
                         *lr *= warmup;
                     }
+                    obs.set_time_base(self.clock);
                     let report =
                         self.engine.run_mega_batch(&mut self.replicas, &self.plane, &plan)?;
                     self.clock += report.wall * cfg.strategy.sync_overhead;
@@ -585,6 +626,34 @@ impl<'b> TrainerSession<'b> {
                 (agg.unwrap(), merge_total, weights, false)
             }
         };
+
+        if obs.enabled() {
+            // The mega-batch window (dispatch + merge) on the coordinator
+            // lane, and the merge tail as its own span with the decision
+            // detail (perturbation fired or not).
+            obs.span(
+                crate::obs::Subsystem::Train,
+                "train.megabatch",
+                0,
+                t_step_start,
+                self.clock - t_step_start,
+                vec![
+                    ("mb", crate::obs::ArgVal::U(mb as u64)),
+                    ("strategy", crate::obs::ArgVal::S(format!("{strategy:?}"))),
+                    ("devices", crate::obs::ArgVal::U(active.len() as u64)),
+                    ("updates", crate::obs::ArgVal::U(report.total_updates())),
+                    ("samples", crate::obs::ArgVal::U(report.total_samples())),
+                ],
+            );
+            obs.span(
+                crate::obs::Subsystem::Train,
+                "train.merge",
+                0,
+                self.clock - merge_secs,
+                merge_secs,
+                vec![("perturbed", crate::obs::ArgVal::B(perturbed))],
+            );
+        }
 
         // ---- calibration plane: observe, publish, fast re-target ----------
         // Every active device's mean per-batch time feeds its estimator;
@@ -654,6 +723,16 @@ impl<'b> TrainerSession<'b> {
                     let ones = vec![1.0; t.len()];
                     (t, ones)
                 };
+                obs.instant(
+                    crate::obs::Subsystem::Train,
+                    "train.retarget",
+                    0,
+                    self.clock,
+                    vec![
+                        ("reason", crate::obs::ArgVal::S("step-drift".to_string())),
+                        ("devices", crate::obs::ArgVal::U(active.len() as u64)),
+                    ],
+                );
                 if self.opts.verbose {
                     println!(
                         "[{}] mb={:<3} calibration: step drift detected; re-seeding batch \
@@ -687,9 +766,36 @@ impl<'b> TrainerSession<'b> {
 
         self.samples += report.total_samples();
 
+        if obs.enabled() && self.batch_sizes != sizes_before {
+            // Either Algorithm 1 rescaled or the drift re-target re-seeded;
+            // one instant marks the new grid landing.
+            obs.instant(
+                crate::obs::Subsystem::Train,
+                "train.scale",
+                0,
+                self.clock,
+                vec![("mb", crate::obs::ArgVal::U(mb as u64))],
+            );
+        }
+
         // ---- evaluate (excluded from the training clock) ------------------
         let accuracy = if (mb + 1) % self.opts.eval_every == 0 {
-            crate::eval::p_at_1(self.eval_backend, &self.global, &self.eval_batches, &self.test)?
+            let acc = crate::eval::p_at_1(
+                self.eval_backend,
+                &self.global,
+                &self.eval_batches,
+                &self.test,
+            )?;
+            if obs.enabled() {
+                obs.instant(
+                    crate::obs::Subsystem::Train,
+                    "train.eval",
+                    0,
+                    self.clock,
+                    vec![("p_at_1", crate::obs::ArgVal::F(acc))],
+                );
+            }
+            acc
         } else {
             self.log.rows.last().map(|r| r.accuracy).unwrap_or(0.0)
         };

@@ -20,11 +20,12 @@
 //! correctness dependency.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::{CompositionPolicy, ModelDims, PipelineConfig};
 use crate::data::batcher::{pad_sample_into, PaddedBatch};
+use crate::obs::{CounterHandle, ObsHandle};
 
 use super::buffer_pool::{BufferPool, PoolStats};
 use super::compose::SampleStream;
@@ -75,11 +76,14 @@ struct Shared {
     /// Producers park here when every queue is full (or none configured).
     work: Condvar,
     shutdown: AtomicBool,
-    prefetched: AtomicU64,
-    synchronous: AtomicU64,
-    starved: AtomicU64,
-    flushed: AtomicU64,
-    truncated: AtomicU64,
+    // Registry-backed counters (`data.*` dotted names) — the same atomics
+    // behind [`DataPlane::stats`] and the RunLog metrics snapshot, so the
+    // legacy columns and the obs export can never disagree.
+    prefetched: CounterHandle,
+    synchronous: CounterHandle,
+    starved: CounterHandle,
+    flushed: CounterHandle,
+    truncated: CounterHandle,
     truncation_warned: AtomicBool,
 }
 
@@ -101,7 +105,7 @@ impl Shared {
         }
         batch.valid = valid;
         if truncated > 0 {
-            self.truncated.fetch_add(truncated as u64, Ordering::Relaxed);
+            self.truncated.add(truncated as u64);
             if !self.truncation_warned.swap(true, Ordering::Relaxed) {
                 eprintln!(
                     "[data-plane] warning: samples exceed model.max_nnz={k}; feature tails are \
@@ -117,7 +121,7 @@ impl Shared {
     /// the pool. Call WITHOUT holding the slots lock (lock order: slots
     /// before stream never both).
     fn abandon(&self, batch: PaddedBatch, runs: EpochRuns) {
-        self.flushed.fetch_add(1, Ordering::Relaxed);
+        self.flushed.inc();
         self.stream.lock().unwrap().unget(&batch.sample_ids, &runs);
         self.pool.put(batch);
     }
@@ -144,6 +148,21 @@ impl DataPlane {
         producer_threads: usize,
         seed: u64,
     ) -> DataPlane {
+        DataPlane::new_obs(data, dims, pcfg, producer_threads, seed, &ObsHandle::disabled())
+    }
+
+    /// [`DataPlane::new`] with the plane's counters registered in `obs`'s
+    /// registry under `data.*` dotted names — the trainer passes its
+    /// session handle so pipeline counters land in the RunLog metrics
+    /// snapshot alongside every other subsystem's.
+    pub fn new_obs(
+        data: Arc<ShardedDataset>,
+        dims: &ModelDims,
+        pcfg: &PipelineConfig,
+        producer_threads: usize,
+        seed: u64,
+        obs: &ObsHandle,
+    ) -> DataPlane {
         let stream = SampleStream::new(data.clone(), pcfg.policy, seed);
         // Initial retention guess; `begin_window` grows it to the real
         // working set once the slot count is known.
@@ -157,11 +176,11 @@ impl DataPlane {
             slots: Mutex::new(Vec::new()),
             work: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            prefetched: AtomicU64::new(0),
-            synchronous: AtomicU64::new(0),
-            starved: AtomicU64::new(0),
-            flushed: AtomicU64::new(0),
-            truncated: AtomicU64::new(0),
+            prefetched: obs.counter("data.prefetched"),
+            synchronous: obs.counter("data.synchronous"),
+            starved: obs.counter("data.starved"),
+            flushed: obs.counter("data.flushed"),
+            truncated: obs.counter("data.truncated_features"),
             truncation_warned: AtomicBool::new(false),
         });
         let producers = (0..producer_threads)
@@ -239,7 +258,7 @@ impl DataPlane {
                     Some(q) if q.bucket == bucket => match q.ready.pop_front() {
                         Some((batch, _runs)) => Some(batch),
                         None => {
-                            self.shared.starved.fetch_add(1, Ordering::Relaxed);
+                            self.shared.starved.inc();
                             None
                         }
                     },
@@ -247,19 +266,19 @@ impl DataPlane {
                 }
             };
             if let Some(batch) = popped {
-                self.shared.prefetched.fetch_add(1, Ordering::Relaxed);
+                self.shared.prefetched.inc();
                 self.shared.work.notify_one();
                 return batch;
             }
         }
-        self.shared.synchronous.fetch_add(1, Ordering::Relaxed);
+        self.shared.synchronous.inc();
         self.shared.assemble(bucket, valid).0
     }
 
     /// Slot-less synchronous pull (eval tooling, benches).
     pub fn next_batch(&self, bucket: usize, valid: usize) -> PaddedBatch {
         assert!(valid >= 1 && valid <= bucket, "need 1 <= valid({valid}) <= bucket({bucket})");
-        self.shared.synchronous.fetch_add(1, Ordering::Relaxed);
+        self.shared.synchronous.inc();
         self.shared.assemble(bucket, valid).0
     }
 
@@ -300,11 +319,11 @@ impl DataPlane {
 
     pub fn stats(&self) -> PipelineStats {
         PipelineStats {
-            prefetched: self.shared.prefetched.load(Ordering::Relaxed),
-            synchronous: self.shared.synchronous.load(Ordering::Relaxed),
-            starved: self.shared.starved.load(Ordering::Relaxed),
-            flushed: self.shared.flushed.load(Ordering::Relaxed),
-            truncated_features: self.shared.truncated.load(Ordering::Relaxed),
+            prefetched: self.shared.prefetched.get(),
+            synchronous: self.shared.synchronous.get(),
+            starved: self.shared.starved.get(),
+            flushed: self.shared.flushed.get(),
+            truncated_features: self.shared.truncated.get(),
             pool: self.shared.pool.stats(),
         }
     }
@@ -554,6 +573,22 @@ mod tests {
         let est = plane.nnz_estimate();
         assert!(est > 0.0);
         assert!((est - data.mean_nnz_clamped(16)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_counters_land_in_the_obs_registry() {
+        let obs = ObsHandle::disabled(); // registry counts even when tracing is off
+        let pcfg =
+            PipelineConfig { policy: CompositionPolicy::Shuffled, ..PipelineConfig::default() };
+        let plane = DataPlane::new_obs(sharded(64), &dims(), &pcfg, 0, 1, &obs);
+        let b = plane.next_batch(16, 16);
+        plane.recycle(b);
+        let rows = obs.registry().snapshot();
+        let sync = rows.iter().find(|r| r.name == "data.synchronous").unwrap();
+        assert_eq!(sync.kind, "counter");
+        assert_eq!(sync.value, 1.0);
+        assert_eq!(plane.stats().synchronous, 1, "stats() reads the same atomics");
+        assert!(rows.iter().any(|r| r.name == "data.starved"));
     }
 
     #[test]

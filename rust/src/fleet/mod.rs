@@ -34,5 +34,5 @@ pub mod tenant;
 
 pub use arbiter::{Arbiter, ArbiterConfig};
 pub use lease::{Lease, LeaseBook, LeaseId, LeaseState, PriorityClass, TenantId};
-pub use sim::{co_schedule, FleetOutcome, TenantJob};
+pub use sim::{co_schedule, co_schedule_with, FleetOutcome, TenantJob};
 pub use tenant::{fair_allocation, TenantKind, TenantSpec};

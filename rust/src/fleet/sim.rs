@@ -188,6 +188,23 @@ pub fn co_schedule(
     registry: Arc<SnapshotRegistry>,
     name: &str,
 ) -> Result<FleetOutcome> {
+    co_schedule_with(base, jobs, serve_corpus, registry, name, crate::obs::ambient())
+}
+
+/// [`co_schedule`] with an explicit observability handle: arbiter lease
+/// decisions land as `fleet.lease` instants (device lanes, reason
+/// attached), each tenant's session re-lanes its spans under its own
+/// trace pid via [`ObsHandle::for_pid`](crate::obs::ObsHandle::for_pid),
+/// and the serve lane's admission/router counters register in the shared
+/// registry.
+pub fn co_schedule_with(
+    base: &Config,
+    jobs: &[TenantJob],
+    serve_corpus: Option<Arc<ShardedDataset>>,
+    registry: Arc<SnapshotRegistry>,
+    name: &str,
+    obs: crate::obs::ObsHandle,
+) -> Result<FleetOutcome> {
     let roster = DevicePool::roster(base);
     let speed_factors: Vec<f64> = roster.iter().map(|d| d.speed_factor).collect();
     let dw = base.fleet.decision_window;
@@ -282,6 +299,9 @@ pub fn co_schedule(
             publish: (i == 0).then(|| registry.clone()),
             // Every tenant publishes into the one shared costs view.
             costs: calibration.clone(),
+            // Each tenant gets its own trace pid so its spans group as a
+            // separate process lane in the exported timeline.
+            obs: obs.for_pid(i as u32),
             ..Default::default()
         };
         let session = TrainerSession::new(
@@ -305,8 +325,13 @@ pub fn co_schedule(
 
     // ---- serve lane -------------------------------------------------------
     let mut serve = serve_corpus.map(|data| ServeLane {
-        admission: Admission::new(data.clone(), &base.model, base),
-        router: Router::new(DevicePool::roster(base), pool.active_ids(), CostModel::default()),
+        admission: Admission::new_obs(data.clone(), &base.model, base, &obs),
+        router: Router::new_obs(
+            DevicePool::roster(base),
+            pool.active_ids(),
+            CostModel::default(),
+            &obs,
+        ),
         stream: ArrivalStream::new(base),
         data,
         has_capacity: false,
@@ -317,6 +342,7 @@ pub fn co_schedule(
         next_id: 0,
     });
 
+    let lease_counter = obs.counter("fleet.lease_events");
     let mut events: Vec<LeaseEventRow> = Vec::new();
     let mut churn: Vec<PoolEventRow> = Vec::new();
     let mut slo_series: Vec<(f64, f64)> = Vec::new();
@@ -492,7 +518,24 @@ pub fn co_schedule(
             // will re-grant (t_tick was the minimum; unreachable).
             unreachable!("no schedulable event");
         }
-        events.extend(arbiter.take_events());
+        let fresh = arbiter.take_events();
+        lease_counter.add(fresh.len() as u64);
+        for e in &fresh {
+            // One instant per arbiter decision, on the device's lane, with
+            // the decision reason attached.
+            obs.instant(
+                crate::obs::Subsystem::Fleet,
+                "fleet.lease",
+                1 + e.device as u32,
+                e.at,
+                vec![
+                    ("tenant", e.tenant.into()),
+                    ("action", e.action.as_str().into()),
+                    ("reason", e.reason.as_str().into()),
+                ],
+            );
+        }
+        events.extend(fresh);
     }
 
     let horizon = if serve_only {

@@ -623,6 +623,7 @@ pub fn serve(
                 follow_clock: false,
                 train_log: Some(&train_log),
                 name: format!("{}-steady", pattern.name()),
+                obs: crate::obs::ambient(),
             },
         )?;
         steady.push((pattern.name().to_string(), log));
@@ -643,6 +644,7 @@ pub fn serve(
             follow_clock: true,
             train_log: Some(&train_log),
             name: "train-while-serve".to_string(),
+            obs: crate::obs::ambient(),
         },
     )?;
 
@@ -1227,6 +1229,7 @@ pub fn slide(
         follow_clock: false,
         train_log: None,
         name: name.to_string(),
+        obs: crate::obs::ambient(),
     };
     let exact =
         replay(&exact_cfg, data.clone(), &registry, &RefBackend, &serve_opts("slide-exact"))?;

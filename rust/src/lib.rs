@@ -46,6 +46,7 @@ pub mod fleet;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod slide;

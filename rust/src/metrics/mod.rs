@@ -187,6 +187,10 @@ pub struct RunLog {
     /// Per-link fabric telemetry (cluster plane; empty for single-server
     /// runs).
     pub link_stats: Vec<LinkStatRow>,
+    /// Counter-registry snapshot at the end of the run (`[obs]` plane;
+    /// empty — and absent from both export formats — when obs is
+    /// disabled, so pre-obs outputs stay byte-identical).
+    pub metrics: Vec<crate::obs::MetricRow>,
 }
 
 impl RunLog {
@@ -197,6 +201,7 @@ impl RunLog {
             pool_events: Vec::new(),
             sync_events: Vec::new(),
             link_stats: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -308,86 +313,108 @@ impl RunLog {
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         let dev = self.rows.first().map(|r| r.batch_sizes.len()).unwrap_or(0);
-        let mut header = "mega_batch,clock,samples,loss,accuracy,perturbed,merge_time,\
-                          l2_per_param,nnz_mean,nnz_cv,starved,truncated,active"
-            .to_string();
-        for i in 0..dev {
-            header.push_str(&format!(",b{i}"));
-        }
-        for i in 0..dev {
-            header.push_str(&format!(",u{i}"));
-        }
-        for i in 0..dev {
-            header.push_str(&format!(",util{i}"));
-        }
-        for i in 0..dev {
-            header.push_str(&format!(",est{i}"));
-        }
-        for i in 0..dev {
-            header.push_str(&format!(",ratio{i}"));
-        }
-        for i in 0..dev {
-            header.push_str(&format!(",act{i}"));
-        }
-        writeln!(f, "{header}")?;
-        for r in &self.rows {
-            let mut line = format!(
-                "{},{:.6},{},{:.6},{:.6},{},{:.6},{:.8},{:.2},{:.6},{},{},{}",
-                r.mega_batch,
-                r.clock,
-                r.samples,
-                r.loss,
-                r.accuracy,
-                r.perturbed as u8,
-                r.merge_time,
-                r.l2_per_param,
-                r.nnz_mean,
-                r.nnz_cv,
-                r.pipeline.starved,
-                r.pipeline.truncated_features,
-                r.active_devices.len()
-            );
-            for b in &r.batch_sizes {
-                line.push_str(&format!(",{b}"));
+        let mut header: Vec<String> = [
+            "mega_batch",
+            "clock",
+            "samples",
+            "loss",
+            "accuracy",
+            "perturbed",
+            "merge_time",
+            "l2_per_param",
+            "nnz_mean",
+            "nnz_cv",
+            "starved",
+            "truncated",
+            "active",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for tag in ["b", "u", "util", "est", "ratio", "act"] {
+            for i in 0..dev {
+                header.push(format!("{tag}{i}"));
             }
-            for u in &r.updates {
-                line.push_str(&format!(",{u}"));
-            }
-            for u in &r.utilization {
-                line.push_str(&format!(",{u:.4}"));
-            }
-            for s in &r.cost_speed {
-                line.push_str(&format!(",{s:.4}"));
-            }
-            for s in &r.sparsity_ratio {
-                line.push_str(&format!(",{s:.4}"));
-            }
-            for a in &r.active_classes {
-                line.push_str(&format!(",{a:.1}"));
-            }
-            writeln!(f, "{line}")?;
         }
+        write_section(
+            &mut f,
+            &header,
+            self.rows.iter().map(|r| {
+                let mut cells = vec![
+                    r.mega_batch.to_string(),
+                    format!("{:.6}", r.clock),
+                    r.samples.to_string(),
+                    format!("{:.6}", r.loss),
+                    format!("{:.6}", r.accuracy),
+                    (r.perturbed as u8).to_string(),
+                    format!("{:.6}", r.merge_time),
+                    format!("{:.8}", r.l2_per_param),
+                    format!("{:.2}", r.nnz_mean),
+                    format!("{:.6}", r.nnz_cv),
+                    r.pipeline.starved.to_string(),
+                    r.pipeline.truncated_features.to_string(),
+                    r.active_devices.len().to_string(),
+                ];
+                cells.extend(r.batch_sizes.iter().map(|b| b.to_string()));
+                cells.extend(r.updates.iter().map(|u| u.to_string()));
+                cells.extend(r.utilization.iter().map(|u| format!("{u:.4}")));
+                cells.extend(r.cost_speed.iter().map(|s| format!("{s:.4}")));
+                cells.extend(r.sparsity_ratio.iter().map(|s| format!("{s:.4}")));
+                cells.extend(r.active_classes.iter().map(|a| format!("{a:.1}")));
+                cells
+            }),
+        )?;
         // Cluster-plane sections (only when the run actually crossed
         // servers, so single-server CSVs stay byte-identical).
         if !self.link_stats.is_empty() {
-            writeln!(f, "link,bytes_transferred,sync_seconds,staleness_mb")?;
-            for l in &self.link_stats {
-                writeln!(
-                    f,
-                    "{},{:.0},{:.6},{:.4}",
-                    l.link, l.bytes_transferred, l.sync_seconds, l.staleness_mb
-                )?;
-            }
+            let header: Vec<String> = ["link", "bytes_transferred", "sync_seconds", "staleness_mb"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            write_section(
+                &mut f,
+                &header,
+                self.link_stats.iter().map(|l| {
+                    vec![
+                        l.link.to_string(),
+                        format!("{:.0}", l.bytes_transferred),
+                        format!("{:.6}", l.sync_seconds),
+                        format!("{:.4}", l.staleness_mb),
+                    ]
+                }),
+            )?;
         }
         if !self.sync_events.is_empty() {
-            writeln!(f, "at,mega_batch,server,action,reason")?;
-            for e in &self.sync_events {
-                writeln!(
-                    f,
-                    "{:.6},{},{},{},{}",
-                    e.at, e.mega_batch, e.server, e.action, e.reason
-                )?;
-            }
+            let header: Vec<String> = ["at", "mega_batch", "server", "action", "reason"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            write_section(
+                &mut f,
+                &header,
+                self.sync_events.iter().map(|e| {
+                    vec![
+                        format!("{:.6}", e.at),
+                        e.mega_batch.to_string(),
+                        e.server.to_string(),
+                        e.action.clone(),
+                        e.reason.clone(),
+                    ]
+                }),
+            )?;
+        }
+        // Observability section (only when the obs plane exported a
+        // registry snapshot, so pre-obs CSVs stay byte-identical).
+        if !self.metrics.is_empty() {
+            let header: Vec<String> =
+                ["metric", "kind", "value"].iter().map(|s| s.to_string()).collect();
+            write_section(
+                &mut f,
+                &header,
+                self.metrics.iter().map(|m| {
+                    vec![m.name.clone(), m.kind.to_string(), fmt_metric_value(m.value)]
+                }),
+            )?;
         }
         Ok(())
     }
@@ -477,6 +504,20 @@ impl RunLog {
                 Json::arr(self.link_stats.iter().map(|l| l.to_json())),
             ));
         }
+        // Obs-plane key only appears when the registry snapshot is
+        // populated, so disabled-obs JSON exports keep the pre-obs bytes.
+        if !self.metrics.is_empty() {
+            pairs.push((
+                "metrics",
+                Json::arr(self.metrics.iter().map(|m| {
+                    Json::obj(vec![
+                        ("name", Json::str(m.name.clone())),
+                        ("kind", Json::str(m.kind)),
+                        ("value", Json::num(m.value)),
+                    ])
+                })),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -496,6 +537,86 @@ fn pool_event_json(ev: &PoolEventRow) -> Json {
         ("action", Json::str(ev.action.clone())),
         ("reason", Json::str(ev.reason.clone())),
     ])
+}
+
+/// Write one CSV section: a header line followed by data rows, every row
+/// asserted to match the header's arity and every cell escaped. All
+/// current exports contain no comma/quote/newline cells, so escaping is
+/// a no-op on them and the bytes stay identical to the pre-section
+/// writer; it only kicks in for free-form reason strings.
+fn write_section<W: Write>(
+    f: &mut W,
+    header: &[String],
+    rows: impl Iterator<Item = Vec<String>>,
+) -> Result<()> {
+    let join = |cells: &[String]| {
+        cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
+    };
+    writeln!(f, "{}", join(header))?;
+    for cells in rows {
+        assert_eq!(
+            cells.len(),
+            header.len(),
+            "CSV row arity mismatch in section starting {:?}",
+            header.first()
+        );
+        writeln!(f, "{}", join(&cells))?;
+    }
+    Ok(())
+}
+
+/// RFC-4180-style field escape: quote (doubling inner quotes) only when
+/// the field contains a comma, quote, or newline; all other fields pass
+/// through unchanged so existing numeric exports keep their exact bytes.
+pub fn csv_escape(field: &str) -> String {
+    if field.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Parse one CSV line produced by [`csv_escape`]-joined cells back into
+/// fields (handles quoted fields and doubled inner quotes). The inverse
+/// half of the export round-trip test.
+pub fn parse_csv_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => fields.push(std::mem::take(&mut cur)),
+                _ => cur.push(c),
+            }
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+/// Metric values print as integers when whole (counters, histogram
+/// counts) and with six decimals otherwise (sums, gauges) — compact and
+/// deterministic.
+fn fmt_metric_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.6}")
+    }
 }
 
 #[cfg(test)]
@@ -634,6 +755,99 @@ mod tests {
         assert!(text.contains("link,bytes_transferred,sync_seconds,staleness_mb"));
         assert!(text.contains("at,mega_batch,server,action,reason"));
         assert!(text.contains(",sync,cadence=4"));
+    }
+
+    #[test]
+    fn csv_escape_quotes_only_when_needed() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("3.14"), "3.14");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("two\nlines"), "\"two\nlines\"");
+    }
+
+    #[test]
+    fn csv_line_round_trips_through_escape_and_parse() {
+        let fields = vec![
+            "plain".to_string(),
+            "with,comma".to_string(),
+            "with \"quotes\"".to_string(),
+            "both, \"of\" them".to_string(),
+            "".to_string(),
+        ];
+        let line = fields.iter().map(|f| csv_escape(f)).collect::<Vec<_>>().join(",");
+        assert_eq!(parse_csv_line(&line), fields);
+        // Unescaped numeric lines parse too (the common case).
+        assert_eq!(
+            parse_csv_line("0,1.000000,1000"),
+            vec!["0".to_string(), "1.000000".to_string(), "1000".to_string()]
+        );
+    }
+
+    #[test]
+    fn sync_event_reasons_with_commas_survive_the_csv() {
+        let mut log = RunLog::new("c");
+        log.push(row(0, 1.0, 0.1, false));
+        log.sync_events.push(SyncEventRow {
+            at: 2.0,
+            mega_batch: 3,
+            server: 0,
+            action: "cadence".to_string(),
+            reason: "stale=2, budget=0.5".to_string(),
+        });
+        let path = std::env::temp_dir().join("hs-metrics-escape.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().last().unwrap();
+        assert!(line.ends_with("\"stale=2, budget=0.5\""));
+        let fields = parse_csv_line(line);
+        assert_eq!(fields.len(), 5);
+        assert_eq!(fields[4], "stale=2, budget=0.5");
+    }
+
+    #[test]
+    fn metrics_section_exports_and_stays_absent_when_empty() {
+        let mut log = RunLog::new("m");
+        log.push(row(0, 1.0, 0.1, false));
+        let path = std::env::temp_dir().join("hs-metrics-obs.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("metric,kind,value"));
+        let j = Json::parse(&log.to_json().to_string()).unwrap();
+        assert!(j.as_obj().unwrap().get("metrics").is_none());
+
+        log.metrics.push(crate::obs::MetricRow {
+            name: "train.mega_batches".to_string(),
+            kind: "counter",
+            value: 14.0,
+        });
+        log.metrics.push(crate::obs::MetricRow {
+            name: "serve.latency.sum".to_string(),
+            kind: "histogram",
+            value: 0.25,
+        });
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("metric,kind,value\n"));
+        assert!(text.contains("train.mega_batches,counter,14\n"));
+        assert!(text.contains("serve.latency.sum,histogram,0.250000\n"));
+        let j = Json::parse(&log.to_json().to_string()).unwrap();
+        let rows = j.get("metrics").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").as_str(), Some("train.mega_batches"));
+        assert_eq!(rows[0].get("value").as_f64(), Some(14.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn csv_sections_assert_header_row_arity() {
+        let mut log = RunLog::new("bad");
+        log.push(row(0, 1.0, 0.1, false));
+        let mut bad = row(1, 2.0, 0.2, false);
+        bad.batch_sizes.push(64); // wider than the header derived from row 0
+        log.push(bad);
+        let path = std::env::temp_dir().join("hs-metrics-arity.csv");
+        let _ = log.write_csv(&path);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Chrome-trace (Catapult / Perfetto `trace_event`) export and a minimal
+//! schema checker for CI.
+//!
+//! Spans render as complete events (`ph: "X"`, microsecond `ts`/`dur`),
+//! instants as `ph: "i"`. Lane layout: one Perfetto *process* per
+//! server/tenant (`pid`), one *thread* per device lane (`tid` 0 =
+//! coordinator, `1 + d` = GPU `d`, `101 + d` = serve replica on device
+//! `d`) — metadata events carry the human-readable lane names. Rendering
+//! uses the in-tree [`crate::util::json::Json`] writer (BTreeMap objects),
+//! so identical event streams serialize to identical bytes: in virtual
+//! mode the exported file is bit-deterministic.
+
+use std::collections::BTreeSet;
+
+use crate::obs::sink::{ArgVal, EventKind, TraceEvent, TraceSink};
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+
+/// Offset of serve-replica thread lanes (`tid = SERVE_TID_BASE + device`).
+pub const SERVE_TID_BASE: u32 = 101;
+
+/// Human-readable name of a thread lane.
+pub fn thread_label(tid: u32) -> String {
+    if tid == 0 {
+        "coordinator".to_string()
+    } else if tid < SERVE_TID_BASE {
+        format!("gpu{}", tid - 1)
+    } else {
+        format!("serve-gpu{}", tid - SERVE_TID_BASE)
+    }
+}
+
+/// Human-readable name of a process lane (server in cluster runs, tenant
+/// in fleet runs, `server0` for single-node runs).
+pub fn process_label(pid: u32) -> String {
+    format!("server{pid}")
+}
+
+fn arg_json(v: &ArgVal) -> Json {
+    match v {
+        ArgVal::U(n) => Json::num(*n as f64),
+        ArgVal::I(n) => Json::int(*n),
+        ArgVal::F(x) => Json::num(*x),
+        ArgVal::B(b) => Json::Bool(*b),
+        ArgVal::S(s) => Json::str(s.clone()),
+    }
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.subsystem.name())),
+        ("pid", Json::num(e.pid as f64)),
+        ("tid", Json::num(e.tid as f64)),
+        ("ts", Json::num(e.ts * 1e6)),
+    ];
+    match e.kind {
+        EventKind::Span => {
+            pairs.push(("ph", Json::str("X")));
+            pairs.push(("dur", Json::num(e.dur * 1e6)));
+        }
+        EventKind::Instant => {
+            pairs.push(("ph", Json::str("i")));
+            pairs.push(("s", Json::str("t")));
+        }
+    }
+    if !e.args.is_empty() {
+        pairs.push(("args", Json::obj(e.args.iter().map(|(k, v)| (*k, arg_json(v))).collect())));
+    }
+    Json::obj(pairs)
+}
+
+fn metadata_json(pid: u32, name: &str, label: &str, tid: u32) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(label))])),
+    ])
+}
+
+/// Render an event stream to trace_event JSON. Metadata (lane names) is
+/// derived from the `(pid, tid)` pairs actually seen, in sorted order;
+/// the ring's eviction tally is surfaced as a top-level `droppedEvents`
+/// key so truncation is never silent.
+pub fn render_events(events: &[TraceEvent], dropped: u64) -> String {
+    let pids: BTreeSet<u32> = events.iter().map(|e| e.pid).collect();
+    let lanes: BTreeSet<(u32, u32)> = events.iter().map(|e| (e.pid, e.tid)).collect();
+    let mut out = Vec::new();
+    for &pid in &pids {
+        out.push(metadata_json(pid, "process_name", &process_label(pid), 0));
+    }
+    for &(pid, tid) in &lanes {
+        out.push(metadata_json(pid, "thread_name", &thread_label(tid), tid));
+    }
+    out.extend(events.iter().map(event_json));
+    let root = Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("droppedEvents", Json::num(dropped as f64)),
+    ]);
+    root.to_string()
+}
+
+/// Render a sink's current contents (see [`render_events`]).
+pub fn render(sink: &TraceSink) -> String {
+    render_events(&sink.events(), sink.dropped())
+}
+
+/// Render a sink's contents to `path`.
+pub fn write_trace(sink: &TraceSink, path: &str) -> crate::Result<()> {
+    std::fs::write(path, render(sink)).with_context(|| format!("writing trace to {path}"))
+}
+
+/// Minimal trace_event schema checker (used by the `trace-check` CLI
+/// subcommand in CI). Validates the top-level shape and the per-event
+/// required fields for the phases we emit (`X`, `i`, `M`); returns the
+/// number of events checked.
+pub fn validate(text: &str) -> crate::Result<usize> {
+    let root = Json::parse(text).map_err(|e| anyhow::anyhow!("trace is not valid JSON: {e}"))?;
+    let events = match root.get("traceEvents").as_arr() {
+        Some(a) => a,
+        None => bail!("trace missing top-level \"traceEvents\" array"),
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let obj = ev.as_obj().with_context(|| format!("event {i}: not an object"))?;
+        let ph = obj
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .with_context(|| format!("event {i}: missing \"ph\""))?;
+        let need_num = |key: &str| -> crate::Result<()> {
+            match obj.get(key).and_then(|v| v.as_f64()) {
+                Some(_) => Ok(()),
+                None => bail!("event {i} (ph {ph:?}): missing numeric \"{key}\""),
+            }
+        };
+        let need_str = |key: &str| -> crate::Result<()> {
+            match obj.get(key).and_then(|v| v.as_str()) {
+                Some(_) => Ok(()),
+                None => bail!("event {i} (ph {ph:?}): missing string \"{key}\""),
+            }
+        };
+        match ph {
+            "X" => {
+                need_str("name")?;
+                need_num("pid")?;
+                need_num("tid")?;
+                need_num("ts")?;
+                need_num("dur")?;
+            }
+            "i" => {
+                need_str("name")?;
+                need_num("pid")?;
+                need_num("tid")?;
+                need_num("ts")?;
+                need_str("s")?;
+            }
+            "M" => {
+                need_str("name")?;
+                need_num("pid")?;
+                if obj.get("args").and_then(|a| a.as_obj()).is_none() {
+                    bail!("event {i}: metadata event missing \"args\" object");
+                }
+            }
+            other => bail!("event {i}: unsupported phase {other:?}"),
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::{Level, Subsystem};
+
+    fn sink_with_events() -> TraceSink {
+        let s = TraceSink::new(true, u16::MAX, Level::Info, 64);
+        s.span_at(
+            Subsystem::Train,
+            Level::Info,
+            "train.megabatch",
+            0,
+            0,
+            0.5,
+            0.25,
+            vec![("updates", ArgVal::U(8)), ("reason", ArgVal::S("drift".into()))],
+        );
+        s.span_at(Subsystem::Engine, Level::Info, "engine.step", 0, 1, 0.5, 0.1, Vec::new());
+        s.instant_at(
+            Subsystem::Cluster,
+            Level::Info,
+            "cluster.rack_down",
+            1,
+            0,
+            0.75,
+            vec![("rack", ArgVal::U(1))],
+        );
+        s
+    }
+
+    #[test]
+    fn render_passes_validation_and_counts_events() {
+        let s = sink_with_events();
+        let text = render(&s);
+        // 3 events + process metadata (pids 0, 1) + thread metadata (3 lanes).
+        let n = validate(&text).unwrap();
+        assert_eq!(n, 3 + 2 + 3);
+    }
+
+    #[test]
+    fn render_is_deterministic_for_equal_streams() {
+        let a = render(&sink_with_events());
+        let b = render(&sink_with_events());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let text = render(&sink_with_events());
+        let root = Json::parse(&text).unwrap();
+        let evs = root.get("traceEvents").as_arr().unwrap();
+        let span = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("train.megabatch"))
+            .unwrap();
+        assert_eq!(span.get("ts").as_f64(), Some(500000.0));
+        assert_eq!(span.get("dur").as_f64(), Some(250000.0));
+        assert_eq!(span.get("args").get("reason").as_str(), Some("drift"));
+    }
+
+    #[test]
+    fn lane_labels() {
+        assert_eq!(thread_label(0), "coordinator");
+        assert_eq!(thread_label(3), "gpu2");
+        assert_eq!(thread_label(SERVE_TID_BASE + 2), "serve-gpu2");
+        assert_eq!(process_label(4), "server4");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        assert!(validate("not json").is_err());
+        assert!(validate("{}").is_err());
+        assert!(validate(r#"{"traceEvents":[{"ph":"X","name":"a"}]}"#).is_err());
+        assert!(validate(r#"{"traceEvents":[{"ph":"q","name":"a"}]}"#).is_err());
+        assert!(
+            validate(r#"{"traceEvents":[{"ph":"i","name":"a","pid":0,"tid":0,"ts":1,"s":"t"}]}"#)
+                .is_ok()
+        );
+    }
+}

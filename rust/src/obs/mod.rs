@@ -1,0 +1,286 @@
+//! Unified observability plane: structured spans, Chrome-trace export,
+//! and one counter registry across train/serve/fleet/cluster.
+//!
+//! Every scheduling decision in Adaptive SGD is driven by measured time;
+//! this module is where that time becomes visible. Three layers:
+//!
+//! 1. **Spans/events** ([`sink`]): a bounded ring buffer of
+//!    subsystem-tagged spans and instants, stamped on the virtual clock
+//!    by the discrete-event paths and on the wall clock by the threaded
+//!    engine. Zero-cost no-op when `[obs]` is disabled.
+//! 2. **Chrome-trace export** ([`chrome`]): Catapult/Perfetto
+//!    `trace_event` JSON — one lane per device/server/serve-replica —
+//!    written by the `--trace out.json` CLI flag. Bit-deterministic in
+//!    virtual mode.
+//! 3. **Counter registry** ([`registry`]): typed monotonic counters,
+//!    gauges and log-bucket histograms behind stable dotted names,
+//!    always on (the migrated subsystem tallies live here), snapshot
+//!    into the RunLog `metrics` section when `[obs]` is enabled.
+//!
+//! The plane is threaded through the tree as an [`ObsHandle`] — a cheap
+//! cloneable bundle of `(sink, registry, pid)`. The CLI installs the
+//! configured handle as the process-wide *ambient* handle
+//! ([`install_ambient`]); `TrainerOptions::default()` and the
+//! experiment entry points pick it up from there, so library callers
+//! that never mention obs keep byte-identical behavior. Tests inject
+//! explicit handles through the `*_with` entry-point variants instead.
+
+pub mod chrome;
+pub mod registry;
+pub mod sink;
+
+pub use registry::{diff, CounterHandle, GaugeHandle, HistogramHandle, MetricRow, Registry};
+pub use sink::{ArgVal, EventKind, Level, SpanGuard, Subsystem, TraceEvent, TraceSink};
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::ObsConfig;
+
+/// A cheap, cloneable handle onto the observability plane: the trace
+/// sink, the metric registry, and the process lane (`pid`) this clone
+/// stamps on its events. All clones share the same sink and registry;
+/// [`ObsHandle::for_pid`] re-lanes a clone for a cluster server or fleet
+/// tenant.
+#[derive(Clone, Debug)]
+pub struct ObsHandle {
+    sink: Arc<TraceSink>,
+    registry: Arc<Registry>,
+    pid: u32,
+}
+
+impl Default for ObsHandle {
+    /// The ambient handle (disabled unless the CLI installed one).
+    fn default() -> Self {
+        ambient()
+    }
+}
+
+impl ObsHandle {
+    /// A handle whose sink drops everything (the registry still works —
+    /// it is always on).
+    pub fn disabled() -> ObsHandle {
+        ObsHandle {
+            sink: Arc::new(TraceSink::disabled()),
+            registry: Arc::new(Registry::new()),
+            pid: 0,
+        }
+    }
+
+    /// Build a handle from the `[obs]` config section. `force_trace`
+    /// arms the sink even when `enabled = false` (the `--trace` flag
+    /// implies collection). The config is assumed validated: unknown
+    /// level/subsystem strings fall back to `info` / all.
+    pub fn from_config(cfg: &ObsConfig, force_trace: bool) -> ObsHandle {
+        let enabled = cfg.enabled || force_trace;
+        let level = Level::parse(&cfg.level).unwrap_or(Level::Info);
+        let subs: Vec<Subsystem> =
+            cfg.subsystems.iter().filter_map(|s| Subsystem::parse(s)).collect();
+        ObsHandle {
+            sink: Arc::new(TraceSink::new(
+                enabled,
+                TraceSink::mask_of(&subs),
+                level,
+                cfg.buffer_events,
+            )),
+            registry: Arc::new(Registry::new()),
+            pid: 0,
+        }
+    }
+
+    /// A clone stamping `pid` as its process lane (shares sink and
+    /// registry with `self`).
+    pub fn for_pid(&self, pid: u32) -> ObsHandle {
+        ObsHandle { sink: self.sink.clone(), registry: self.registry.clone(), pid }
+    }
+
+    /// This handle's process lane.
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// Whether the sink records anything (the registry is always on).
+    pub fn enabled(&self) -> bool {
+        self.sink.enabled()
+    }
+
+    /// The shared trace sink.
+    pub fn sink(&self) -> &TraceSink {
+        &self.sink
+    }
+
+    /// The shared metric registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Registry snapshot if the plane is enabled, else empty (keeps the
+    /// RunLog `metrics` section absent for disabled runs).
+    pub fn metrics_rows(&self) -> Vec<MetricRow> {
+        if self.enabled() {
+            self.registry.snapshot()
+        } else {
+            Vec::new()
+        }
+    }
+
+    // -- emission helpers ---------------------------------------------------
+
+    /// Record an info-level span at an explicit timestamp (virtual-clock
+    /// emitters).
+    #[inline]
+    pub fn span(
+        &self,
+        sub: Subsystem,
+        name: &'static str,
+        tid: u32,
+        ts: f64,
+        dur: f64,
+        args: Vec<(&'static str, ArgVal)>,
+    ) {
+        self.sink.span_at(sub, Level::Info, name, self.pid, tid, ts, dur, args);
+    }
+
+    /// Record an info-level instant event at an explicit timestamp.
+    #[inline]
+    pub fn instant(
+        &self,
+        sub: Subsystem,
+        name: &'static str,
+        tid: u32,
+        ts: f64,
+        args: Vec<(&'static str, ArgVal)>,
+    ) {
+        self.sink.instant_at(sub, Level::Info, name, self.pid, tid, ts, args);
+    }
+
+    /// Record a debug-level instant event (high-volume detail).
+    #[inline]
+    pub fn instant_debug(
+        &self,
+        sub: Subsystem,
+        name: &'static str,
+        tid: u32,
+        ts: f64,
+        args: Vec<(&'static str, ArgVal)>,
+    ) {
+        self.sink.instant_at(sub, Level::Debug, name, self.pid, tid, ts, args);
+    }
+
+    /// Open an info-level wall-clock span (threaded-engine emitters).
+    #[inline]
+    pub fn begin(&self, sub: Subsystem, name: &'static str, tid: u32) -> Option<SpanGuard> {
+        self.sink.begin(sub, Level::Info, name, self.pid, tid)
+    }
+
+    /// Close a span from [`ObsHandle::begin`].
+    #[inline]
+    pub fn end(&self, guard: SpanGuard, args: Vec<(&'static str, ArgVal)>) {
+        self.sink.end(guard, args);
+    }
+
+    /// Wall seconds since the sink's epoch.
+    pub fn now(&self) -> f64 {
+        self.sink.now()
+    }
+
+    /// Set the virtual-clock base for engine-emitted spans (called by
+    /// the trainer before each mega-batch dispatch).
+    pub fn set_time_base(&self, base: f64) {
+        self.sink.set_time_base(base);
+    }
+
+    /// The current virtual-clock base.
+    pub fn time_base(&self) -> f64 {
+        self.sink.time_base()
+    }
+
+    // -- registry shorthands ------------------------------------------------
+
+    /// Get or register a counter (see [`Registry::counter`]).
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        self.registry.counter(name)
+    }
+
+    /// Get or register a gauge (see [`Registry::gauge`]).
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        self.registry.gauge(name)
+    }
+
+    /// Get or register a histogram (see [`Registry::histogram`]).
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        self.registry.histogram(name)
+    }
+}
+
+static AMBIENT: OnceLock<Mutex<ObsHandle>> = OnceLock::new();
+
+fn ambient_cell() -> &'static Mutex<ObsHandle> {
+    AMBIENT.get_or_init(|| Mutex::new(ObsHandle::disabled()))
+}
+
+/// The process-wide ambient handle (disabled unless [`install_ambient`]
+/// was called). `TrainerOptions::default()` and the experiment wrappers
+/// read this, so obs reaches every subsystem with zero signature churn.
+pub fn ambient() -> ObsHandle {
+    ambient_cell().lock().unwrap().clone()
+}
+
+/// Install `handle` as the process-wide ambient handle. Called once by
+/// the CLI after parsing config + flags; tests prefer passing explicit
+/// handles through the `*_with` entry points instead of mutating
+/// process-global state.
+pub fn install_ambient(handle: ObsHandle) {
+    *ambient_cell().lock().unwrap() = handle;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert_but_registry_counts() {
+        let h = ObsHandle::disabled();
+        assert!(!h.enabled());
+        h.span(Subsystem::Train, "x", 0, 0.0, 1.0, Vec::new());
+        assert!(h.sink().is_empty());
+        let c = h.counter("n");
+        c.inc();
+        assert_eq!(c.get(), 1);
+        assert!(h.metrics_rows().is_empty(), "metrics export gated on enabled");
+    }
+
+    #[test]
+    fn for_pid_shares_sink_and_registry() {
+        let cfg = ObsConfig { enabled: true, ..ObsConfig::default() };
+        let h = ObsHandle::from_config(&cfg, false);
+        let h1 = h.for_pid(3);
+        h1.instant(Subsystem::Cluster, "sync", 0, 1.0, Vec::new());
+        let evs = h.sink().events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].pid, 3);
+        h1.counter("c").inc();
+        assert_eq!(h.counter("c").get(), 1);
+    }
+
+    #[test]
+    fn force_trace_arms_a_disabled_config() {
+        let cfg = ObsConfig::default();
+        assert!(!ObsHandle::from_config(&cfg, false).enabled());
+        assert!(ObsHandle::from_config(&cfg, true).enabled());
+    }
+
+    #[test]
+    fn subsystem_filter_from_config() {
+        let cfg = ObsConfig {
+            enabled: true,
+            subsystems: vec!["serve".to_string()],
+            ..ObsConfig::default()
+        };
+        let h = ObsHandle::from_config(&cfg, false);
+        h.instant(Subsystem::Train, "t", 0, 0.0, Vec::new());
+        h.instant(Subsystem::Serve, "s", 0, 0.0, Vec::new());
+        let evs = h.sink().events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "s");
+    }
+}

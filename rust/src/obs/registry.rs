@@ -1,0 +1,364 @@
+//! The counter registry: typed monotonic counters, gauges, and
+//! fixed-log-bucket histograms behind stable dotted names.
+//!
+//! Unlike the trace sink, the registry is *always on*: handles are plain
+//! `Arc<AtomicU64>` increments, cheap enough that the subsystems that
+//! migrated their ad-hoc tallies here (pipeline starvation/flush,
+//! serve truncation, cluster link stats) keep their RunLog values
+//! bit-for-bit whether or not `[obs]` is enabled. Only trace collection
+//! and the RunLog `metrics` export section are gated.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log₂ buckets per histogram; bucket `i` counts observations
+/// in `[2^(i - BUCKET_BIAS), 2^(i + 1 - BUCKET_BIAS))`.
+pub const HIST_BUCKETS: usize = 32;
+/// Bias applied to the log₂ exponent so sub-unit values (milliseconds
+/// expressed in seconds) land in distinct buckets: bucket 0 holds
+/// everything below `2^-BUCKET_BIAS`.
+pub const BUCKET_BIAS: i32 = 20;
+
+/// A monotonic counter. Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A floating-point gauge (also used as an accumulating float tally,
+/// e.g. bytes or seconds per cluster link). Cloning shares the cell;
+/// the value is stored as `f64` bits in an atomic.
+#[derive(Clone, Debug, Default)]
+pub struct GaugeHandle(Arc<AtomicU64>);
+
+impl GaugeHandle {
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Accumulate `v` (CAS loop over the f64 bit pattern).
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct Histo {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// A fixed-log-bucket histogram (32 log₂ buckets). Used for serve batch
+/// latencies; exports `count`, `sum`, and each non-empty bucket.
+#[derive(Clone, Debug)]
+pub struct HistogramHandle(Arc<Histo>);
+
+impl Default for HistogramHandle {
+    fn default() -> Self {
+        HistogramHandle(Arc::new(Histo {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl HistogramHandle {
+    /// Bucket index for a value: floored log₂ plus [`BUCKET_BIAS`],
+    /// clamped to the fixed range. Non-positive values land in bucket 0.
+    pub fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 || !v.is_finite() {
+            return 0;
+        }
+        let idx = v.log2().floor() as i64 + BUCKET_BIAS as i64;
+        idx.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Upper bound (exclusive) of bucket `i`.
+    pub fn bucket_bound(i: usize) -> f64 {
+        2f64.powi(i as i32 + 1 - BUCKET_BIAS)
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        self.0.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        // Accumulate the sum via the same CAS-over-bits scheme as GaugeHandle.
+        let cell = &self.0.sum_bits;
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(bucket_index, count)` for every non-empty bucket.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.0
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(CounterHandle),
+    Gauge(GaugeHandle),
+    Histogram(HistogramHandle),
+}
+
+/// One row of a registry snapshot, as exported into RunLog CSV/JSON.
+/// Histograms expand into `<name>.count`, `<name>.sum`, and one
+/// `<name>.le_<bound>` row per non-empty bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricRow {
+    /// Stable dotted metric name.
+    pub name: String,
+    /// `counter`, `gauge`, or `histogram`.
+    pub kind: &'static str,
+    /// Current value (counters cast to `f64`; counts are small enough
+    /// that the cast is exact).
+    pub value: f64,
+}
+
+/// The metric registry: dotted names → typed handles. Get-or-register
+/// semantics; snapshots iterate in name order (BTreeMap) so exports are
+/// deterministic.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// Fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the counter called `name`. Panics if `name` is
+    /// already registered with a different kind (a naming bug).
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(CounterHandle::default()))
+        {
+            Metric::Counter(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get or register the gauge called `name`. Panics on kind mismatch.
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(GaugeHandle::default()))
+        {
+            Metric::Gauge(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get or register the histogram called `name`. Panics on kind
+    /// mismatch.
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(HistogramHandle::default()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Deterministic snapshot: one [`MetricRow`] per counter/gauge, and
+    /// an expansion per histogram, in name order.
+    pub fn snapshot(&self) -> Vec<MetricRow> {
+        let m = self.metrics.lock().unwrap();
+        let mut rows = Vec::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(h) => rows.push(MetricRow {
+                    name: name.clone(),
+                    kind: "counter",
+                    value: h.get() as f64,
+                }),
+                Metric::Gauge(h) => rows.push(MetricRow {
+                    name: name.clone(),
+                    kind: "gauge",
+                    value: h.get(),
+                }),
+                Metric::Histogram(h) => {
+                    rows.push(MetricRow {
+                        name: format!("{name}.count"),
+                        kind: "histogram",
+                        value: h.count() as f64,
+                    });
+                    rows.push(MetricRow {
+                        name: format!("{name}.sum"),
+                        kind: "histogram",
+                        value: h.sum(),
+                    });
+                    for (i, n) in h.nonzero_buckets() {
+                        rows.push(MetricRow {
+                            name: format!("{name}.le_{:e}", HistogramHandle::bucket_bound(i)),
+                            kind: "histogram",
+                            value: n as f64,
+                        });
+                    }
+                }
+            }
+        }
+        rows
+    }
+}
+
+/// Per-name difference `after - before` of two snapshots, keeping only
+/// names whose value changed (names present only in `after` count from
+/// zero). Used to attribute counter deltas to a window of work.
+pub fn diff(before: &[MetricRow], after: &[MetricRow]) -> Vec<MetricRow> {
+    let base: BTreeMap<&str, f64> = before.iter().map(|r| (r.name.as_str(), r.value)).collect();
+    after
+        .iter()
+        .filter_map(|r| {
+            let d = r.value - base.get(r.name.as_str()).copied().unwrap_or(0.0);
+            (d != 0.0).then(|| MetricRow { name: r.name.clone(), kind: r.kind, value: d })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_one_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("x.hits");
+        let b = reg.counter("x.hits");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5);
+        assert_eq!(b.get(), 5);
+    }
+
+    #[test]
+    fn gauge_add_accumulates() {
+        let reg = Registry::new();
+        let g = reg.gauge("x.bytes");
+        g.add(1.5);
+        g.add(2.5);
+        assert_eq!(g.get(), 4.0);
+        g.set(7.0);
+        assert_eq!(g.get(), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        let _ = reg.counter("x");
+        let _ = reg.gauge("x");
+    }
+
+    #[test]
+    fn histogram_buckets_cover_range() {
+        assert_eq!(HistogramHandle::bucket_of(0.0), 0);
+        assert_eq!(HistogramHandle::bucket_of(-1.0), 0);
+        assert_eq!(HistogramHandle::bucket_of(f64::NAN), 0);
+        // 1e-3 s ≈ 2^-9.97 → exponent -10 → bucket 10 with bias 20.
+        assert_eq!(HistogramHandle::bucket_of(1e-3), 10);
+        // Huge values clamp to the top bucket.
+        assert_eq!(HistogramHandle::bucket_of(1e30), HIST_BUCKETS - 1);
+        // Bounds are exclusive upper edges: a value just below the bound
+        // stays in its bucket.
+        let b = HistogramHandle::bucket_of(1e-3);
+        assert!(1e-3 < HistogramHandle::bucket_bound(b));
+    }
+
+    #[test]
+    fn histogram_snapshot_expands_nonzero_buckets() {
+        let reg = Registry::new();
+        let h = reg.histogram("serve.batch_secs");
+        h.observe(1e-3);
+        h.observe(1e-3);
+        h.observe(2.0);
+        let rows = reg.snapshot();
+        assert_eq!(rows[0].name, "serve.batch_secs.count");
+        assert_eq!(rows[0].value, 3.0);
+        assert_eq!(rows[1].name, "serve.batch_secs.sum");
+        assert!((rows[1].value - 2.002).abs() < 1e-12);
+        // Two non-empty buckets follow.
+        assert_eq!(rows.len(), 4);
+    }
+
+    #[test]
+    fn snapshot_is_name_ordered_and_diff_filters_unchanged() {
+        let reg = Registry::new();
+        let b = reg.counter("b.n");
+        let a = reg.counter("a.n");
+        a.inc();
+        let s1 = reg.snapshot();
+        assert_eq!(s1[0].name, "a.n");
+        assert_eq!(s1[1].name, "b.n");
+        b.add(3);
+        let s2 = reg.snapshot();
+        let d = diff(&s1, &s2);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].name, "b.n");
+        assert_eq!(d[0].value, 3.0);
+    }
+}

@@ -1,0 +1,495 @@
+//! The structured trace sink: a bounded ring buffer of spans and instant
+//! events with subsystem + level filtering.
+//!
+//! The sink is built once, from the `[obs]` section (or armed by the CLI's
+//! `--trace` flag), and never mutates its filter state afterwards — the
+//! hot-path check is one immutable bool and a bitmask test, so a disabled
+//! sink costs a branch per call site (benched in `perf_hotpath`).
+//!
+//! Timestamps are plain `f64` seconds on whatever clock the emitter runs:
+//! the discrete-event engines stamp virtual time (making traces
+//! bit-deterministic), the threaded engine stamps wall seconds since the
+//! sink's epoch via [`TraceSink::now`] / the [`SpanGuard`] scoped API.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which plane of the system an event came from. Used for filtering
+/// (`[obs] subsystems`) and as the Chrome-trace category.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Subsystem {
+    /// Coordinator / `TrainerSession`: plan, mega-batch, merge, eval,
+    /// scaling and calibration decisions.
+    Train,
+    /// Execution engines: per-device step phases.
+    Engine,
+    /// Data plane: pipeline and buffer-pool counters.
+    Data,
+    /// Serving plane: admit → route → eval → respond lifecycle.
+    Serve,
+    /// Fleet arbiter: lease decisions with their reason.
+    Fleet,
+    /// Cluster plane: tier-2 syncs, cadence moves, rack churn.
+    Cluster,
+}
+
+impl Subsystem {
+    /// Stable lowercase name (config grammar + trace category).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Subsystem::Train => "train",
+            Subsystem::Engine => "engine",
+            Subsystem::Data => "data",
+            Subsystem::Serve => "serve",
+            Subsystem::Fleet => "fleet",
+            Subsystem::Cluster => "cluster",
+        }
+    }
+
+    /// Every subsystem, in bitmask order.
+    pub fn all() -> [Subsystem; 6] {
+        [
+            Subsystem::Train,
+            Subsystem::Engine,
+            Subsystem::Data,
+            Subsystem::Serve,
+            Subsystem::Fleet,
+            Subsystem::Cluster,
+        ]
+    }
+
+    /// Parse a `[obs] subsystems` entry.
+    pub fn parse(s: &str) -> Option<Subsystem> {
+        Subsystem::all().into_iter().find(|sub| sub.name() == s)
+    }
+
+    fn bit(&self) -> u16 {
+        match self {
+            Subsystem::Train => 1 << 0,
+            Subsystem::Engine => 1 << 1,
+            Subsystem::Data => 1 << 2,
+            Subsystem::Serve => 1 << 3,
+            Subsystem::Fleet => 1 << 4,
+            Subsystem::Cluster => 1 << 5,
+        }
+    }
+}
+
+/// Event verbosity. `Info` is the decision-level timeline (the default);
+/// `Debug` adds high-volume per-request detail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Decision-level spans and instants.
+    Info,
+    /// High-volume detail (per-admission queue depths and the like).
+    Debug,
+}
+
+impl Level {
+    /// Parse a `[obs] level` value.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// A typed event argument (rendered into the Chrome trace's `args` object).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgVal {
+    /// Unsigned counter-like value.
+    U(u64),
+    /// Signed integer.
+    I(i64),
+    /// Floating-point value (seconds, ratios, …).
+    F(f64),
+    /// Boolean flag.
+    B(bool),
+    /// Free-form string (decision reasons).
+    S(String),
+}
+
+impl From<u64> for ArgVal {
+    fn from(v: u64) -> Self {
+        ArgVal::U(v)
+    }
+}
+impl From<usize> for ArgVal {
+    fn from(v: usize) -> Self {
+        ArgVal::U(v as u64)
+    }
+}
+impl From<i64> for ArgVal {
+    fn from(v: i64) -> Self {
+        ArgVal::I(v)
+    }
+}
+impl From<f64> for ArgVal {
+    fn from(v: f64) -> Self {
+        ArgVal::F(v)
+    }
+}
+impl From<bool> for ArgVal {
+    fn from(v: bool) -> Self {
+        ArgVal::B(v)
+    }
+}
+impl From<String> for ArgVal {
+    fn from(v: String) -> Self {
+        ArgVal::S(v)
+    }
+}
+impl From<&str> for ArgVal {
+    fn from(v: &str) -> Self {
+        ArgVal::S(v.to_string())
+    }
+}
+
+/// Whether an event is a duration span or a point-in-time instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Complete span (`ph: "X"` in the Chrome trace).
+    Span,
+    /// Instant event (`ph: "i"`).
+    Instant,
+}
+
+/// One recorded event. `pid`/`tid` select the trace lane (process = server
+/// or tenant, thread = device / coordinator / serve replica).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Emission order (the ring buffer's monotone sequence number).
+    pub seq: u64,
+    /// Originating plane (trace category).
+    pub subsystem: Subsystem,
+    /// Span taxonomy name (`train.megabatch`, `cluster.sync`, …).
+    pub name: &'static str,
+    /// Process lane: server index (cluster) or tenant index (fleet).
+    pub pid: u32,
+    /// Thread lane: 0 = coordinator, `1 + d` = device `d`,
+    /// `101 + d` = serve replica on device `d`.
+    pub tid: u32,
+    /// Start time, seconds (virtual or wall, per emitter).
+    pub ts: f64,
+    /// Duration, seconds (0 for instants).
+    pub dur: f64,
+    /// Span vs instant.
+    pub kind: EventKind,
+    /// Typed arguments (decision reasons ride here).
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+struct SinkState {
+    events: VecDeque<TraceEvent>,
+    seq: u64,
+    dropped: u64,
+    opened: u64,
+    closed: u64,
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s with subsystem/level filtering.
+///
+/// Disabled sinks (the default) drop every event on an immutable-bool
+/// check; enabled sinks keep at most `cap` events, discarding the oldest
+/// (the `dropped` tally is exported as trace metadata so truncation is
+/// never silent).
+pub struct TraceSink {
+    enabled: bool,
+    mask: u16,
+    level: Level,
+    cap: usize,
+    epoch: Instant,
+    /// Virtual-clock base (f64 bits) the engines add their window-local
+    /// offsets to — set by the trainer before each mega-batch dispatch.
+    base_bits: AtomicU64,
+    state: Mutex<SinkState>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("enabled", &self.enabled)
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+/// An open wall-clock span from [`TraceSink::begin`]. Close it with
+/// [`TraceSink::end`]; an unclosed guard shows up as an open/close
+/// imbalance in [`TraceSink::balance`] (which the property tests assert
+/// against).
+#[derive(Debug)]
+#[must_use = "close the span with TraceSink::end"]
+pub struct SpanGuard {
+    subsystem: Subsystem,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    start: f64,
+}
+
+impl TraceSink {
+    /// A sink that drops everything (the ambient default).
+    pub fn disabled() -> TraceSink {
+        TraceSink::new(false, u16::MAX, Level::Info, 1)
+    }
+
+    /// Build a sink. `mask` is the subsystem bitmask (see
+    /// [`TraceSink::mask_of`]), `cap` the ring capacity in events.
+    pub fn new(enabled: bool, mask: u16, level: Level, cap: usize) -> TraceSink {
+        TraceSink {
+            enabled,
+            mask,
+            level,
+            cap: cap.max(1),
+            epoch: Instant::now(),
+            base_bits: AtomicU64::new(0),
+            state: Mutex::new(SinkState {
+                events: VecDeque::new(),
+                seq: 0,
+                dropped: 0,
+                opened: 0,
+                closed: 0,
+            }),
+        }
+    }
+
+    /// Bitmask selecting `subsystems` (empty = all).
+    pub fn mask_of(subsystems: &[Subsystem]) -> u16 {
+        if subsystems.is_empty() {
+            u16::MAX
+        } else {
+            subsystems.iter().fold(0, |m, s| m | s.bit())
+        }
+    }
+
+    /// Whether the sink records anything at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The hot-path filter: records from `sub` at `level`?
+    #[inline]
+    pub fn on(&self, sub: Subsystem, level: Level) -> bool {
+        self.enabled && level <= self.level && self.mask & sub.bit() != 0
+    }
+
+    /// Wall seconds since the sink's epoch (the threaded engine's clock).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Set the virtual-clock base the engines stamp their window-local
+    /// step offsets onto (called by the trainer before each dispatch).
+    pub fn set_time_base(&self, base: f64) {
+        self.base_bits.store(base.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The current virtual-clock base (see [`TraceSink::set_time_base`]).
+    pub fn time_base(&self) -> f64 {
+        f64::from_bits(self.base_bits.load(Ordering::Relaxed))
+    }
+
+    /// Record a complete span at an explicit timestamp (virtual-clock
+    /// emitters). No-op when filtered out.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_at(
+        &self,
+        sub: Subsystem,
+        level: Level,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        ts: f64,
+        dur: f64,
+        args: Vec<(&'static str, ArgVal)>,
+    ) {
+        if !self.on(sub, level) {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.opened += 1;
+        st.closed += 1;
+        push(&mut st, self.cap, sub, name, pid, tid, ts, dur, EventKind::Span, args);
+    }
+
+    /// Record an instant event at an explicit timestamp. No-op when
+    /// filtered out.
+    pub fn instant_at(
+        &self,
+        sub: Subsystem,
+        level: Level,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        ts: f64,
+        args: Vec<(&'static str, ArgVal)>,
+    ) {
+        if !self.on(sub, level) {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        push(&mut st, self.cap, sub, name, pid, tid, ts, 0.0, EventKind::Instant, args);
+    }
+
+    /// Open a wall-clock scoped span (threaded-engine emitters). Returns
+    /// `None` when filtered out so the fast path stays branch-only.
+    pub fn begin(
+        &self,
+        sub: Subsystem,
+        level: Level,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+    ) -> Option<SpanGuard> {
+        if !self.on(sub, level) {
+            return None;
+        }
+        self.state.lock().unwrap().opened += 1;
+        Some(SpanGuard { subsystem: sub, name, pid, tid, start: self.now() })
+    }
+
+    /// Close a span from [`TraceSink::begin`], stamping its wall duration.
+    pub fn end(&self, guard: SpanGuard, args: Vec<(&'static str, ArgVal)>) {
+        let dur = self.now() - guard.start;
+        let mut st = self.state.lock().unwrap();
+        st.closed += 1;
+        push(
+            &mut st,
+            self.cap,
+            guard.subsystem,
+            guard.name,
+            guard.pid,
+            guard.tid,
+            guard.start,
+            dur,
+            EventKind::Span,
+            args,
+        );
+    }
+
+    /// Snapshot of the recorded events, in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.state.lock().unwrap().events.iter().cloned().collect()
+    }
+
+    /// `(opened, closed)` span tallies — equal after a clean run (the
+    /// open/close balance property).
+    pub fn balance(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.opened, st.closed)
+    }
+
+    /// Events evicted by the ring cap (exported as trace metadata).
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Total events recorded so far (after eviction).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().events.len()
+    }
+
+    /// No events recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push(
+    st: &mut SinkState,
+    cap: usize,
+    sub: Subsystem,
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    ts: f64,
+    dur: f64,
+    kind: EventKind,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if st.events.len() >= cap {
+        st.events.pop_front();
+        st.dropped += 1;
+    }
+    let seq = st.seq;
+    st.seq += 1;
+    st.events.push_back(TraceEvent { seq, subsystem: sub, name, pid, tid, ts, dur, kind, args });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_sink(cap: usize) -> TraceSink {
+        TraceSink::new(true, u16::MAX, Level::Info, cap)
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let s = TraceSink::disabled();
+        s.span_at(Subsystem::Train, Level::Info, "x", 0, 0, 0.0, 1.0, Vec::new());
+        s.instant_at(Subsystem::Train, Level::Info, "y", 0, 0, 0.0, Vec::new());
+        assert!(s.begin(Subsystem::Train, Level::Info, "z", 0, 0).is_none());
+        assert!(s.is_empty());
+        assert_eq!(s.balance(), (0, 0));
+    }
+
+    #[test]
+    fn level_and_subsystem_filters_apply() {
+        let s = TraceSink::new(
+            true,
+            TraceSink::mask_of(&[Subsystem::Serve]),
+            Level::Info,
+            64,
+        );
+        s.span_at(Subsystem::Train, Level::Info, "t", 0, 0, 0.0, 1.0, Vec::new());
+        s.span_at(Subsystem::Serve, Level::Debug, "d", 0, 0, 0.0, 1.0, Vec::new());
+        s.span_at(Subsystem::Serve, Level::Info, "s", 0, 0, 0.0, 1.0, Vec::new());
+        let evs = s.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "s");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_them() {
+        let s = enabled_sink(3);
+        for i in 0..5u64 {
+            s.instant_at(Subsystem::Train, Level::Info, "i", 0, 0, i as f64, Vec::new());
+        }
+        let evs = s.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(s.dropped(), 2);
+        assert_eq!(evs[0].seq, 2, "oldest two evicted");
+        assert_eq!(evs[2].seq, 4);
+    }
+
+    #[test]
+    fn guard_spans_balance_and_measure_wall_time() {
+        let s = enabled_sink(16);
+        let g = s.begin(Subsystem::Engine, Level::Info, "step", 0, 1).unwrap();
+        assert_eq!(s.balance(), (1, 0), "open until ended");
+        s.end(g, vec![("dev", ArgVal::U(0))]);
+        assert_eq!(s.balance(), (1, 1));
+        let evs = s.events();
+        assert_eq!(evs.len(), 1);
+        assert!(evs[0].dur >= 0.0);
+        assert_eq!(evs[0].kind, EventKind::Span);
+    }
+
+    #[test]
+    fn subsystem_names_round_trip() {
+        for sub in Subsystem::all() {
+            assert_eq!(Subsystem::parse(sub.name()), Some(sub));
+        }
+        assert_eq!(Subsystem::parse("nope"), None);
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("trace"), None);
+    }
+}

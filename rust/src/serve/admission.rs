@@ -20,6 +20,7 @@ use std::sync::Arc;
 use crate::config::{Config, ModelDims};
 use crate::data::batcher::{pad_sample_into, PaddedBatch};
 use crate::data::pipeline::{BufferPool, PoolStats, ShardedDataset};
+use crate::obs::{CounterHandle, ObsHandle};
 
 /// A request waiting for batch formation.
 #[derive(Clone, Copy, Debug)]
@@ -50,15 +51,28 @@ pub struct Admission {
     max_delay: f64,
     pool: BufferPool,
     pending: VecDeque<PendingRequest>,
-    /// Cumulative counters (telemetry).
-    pub admitted: u64,
-    pub formed_batches: u64,
-    pub deadline_flushes: u64,
-    pub truncated_features: u64,
+    /// Cumulative counters (telemetry) — registry-backed under `serve.*`
+    /// dotted names so the obs plane exports the same atomics.
+    pub admitted: CounterHandle,
+    pub formed_batches: CounterHandle,
+    pub deadline_flushes: CounterHandle,
+    pub truncated_features: CounterHandle,
 }
 
 impl Admission {
     pub fn new(data: Arc<ShardedDataset>, dims: &ModelDims, cfg: &Config) -> Admission {
+        Admission::new_obs(data, dims, cfg, &ObsHandle::disabled())
+    }
+
+    /// [`Admission::new`] with the counters registered in `obs`'s registry
+    /// (the replay loop passes its handle so admission telemetry lands in
+    /// the shared metrics snapshot).
+    pub fn new_obs(
+        data: Arc<ShardedDataset>,
+        dims: &ModelDims,
+        cfg: &Config,
+        obs: &ObsHandle,
+    ) -> Admission {
         let max_batch = cfg.serve_max_batch();
         let grid: Vec<usize> =
             cfg.bucket_grid().into_iter().filter(|&b| b <= max_batch).collect();
@@ -75,17 +89,17 @@ impl Admission {
             max_delay: cfg.serve.max_delay,
             pool: BufferPool::new(8),
             pending: VecDeque::new(),
-            admitted: 0,
-            formed_batches: 0,
-            deadline_flushes: 0,
-            truncated_features: 0,
+            admitted: obs.counter("serve.admitted"),
+            formed_batches: obs.counter("serve.formed_batches"),
+            deadline_flushes: obs.counter("serve.deadline_flushes"),
+            truncated_features: obs.counter("serve.truncated_features"),
         }
     }
 
     /// Enqueue one request.
     pub fn push(&mut self, id: u64, sample_id: u32, arrival: f64) {
         debug_assert!((sample_id as usize) < self.data.len());
-        self.admitted += 1;
+        self.admitted.inc();
         self.pending.push_back(PendingRequest { id, sample_id, arrival });
     }
 
@@ -110,7 +124,7 @@ impl Admission {
         if self.pending.is_empty() {
             return None;
         }
-        self.deadline_flushes += 1;
+        self.deadline_flushes.inc();
         let count = self.pending.len().min(self.max_batch);
         Some(self.form(count, now))
     }
@@ -131,8 +145,8 @@ impl Admission {
             arrivals.push(req.arrival);
         }
         batch.valid = count;
-        self.truncated_features += truncated as u64;
-        self.formed_batches += 1;
+        self.truncated_features.add(truncated as u64);
+        self.formed_batches.inc();
         AdmittedBatch { batch, request_ids, arrivals, formed_at: now }
     }
 
@@ -181,8 +195,8 @@ mod tests {
         assert_eq!(b.batch.sample_ids.len(), 32);
         assert_eq!(b.formed_at, 0.01);
         assert_eq!(adm.queue_depth(), 0);
-        assert_eq!(adm.formed_batches, 1);
-        assert_eq!(adm.deadline_flushes, 0);
+        assert_eq!(adm.formed_batches.get(), 1);
+        assert_eq!(adm.deadline_flushes.get(), 0);
     }
 
     #[test]
@@ -197,7 +211,7 @@ mod tests {
         assert_eq!(b.batch.valid, 11);
         assert_eq!(b.batch.bucket, 16, "11 requests pad to the 16 bucket");
         assert_eq!(adm.deadline(), None, "queue drained");
-        assert_eq!(adm.deadline_flushes, 1);
+        assert_eq!(adm.deadline_flushes.get(), 1);
         assert!(adm.flush(0.01).is_none(), "empty queue has nothing to flush");
         // A 3-request flush lands on the smallest bucket.
         for i in 0..3 {
@@ -245,6 +259,6 @@ mod tests {
             .map(|&id| data.nnz(id as usize).saturating_sub(4) as u64)
             .sum();
         assert!(expected > 0, "corpus should overflow max_nnz=4");
-        assert_eq!(adm.truncated_features, expected);
+        assert_eq!(adm.truncated_features.get(), expected);
     }
 }

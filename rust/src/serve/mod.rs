@@ -62,6 +62,11 @@ pub struct ReplayOptions<'a> {
     /// time, steady-state replays against the end of the run.
     pub train_log: Option<&'a RunLog>,
     pub name: String,
+    /// Observability handle: serve spans land on `serve-gpu*` lanes of
+    /// this handle's sink and admission/router counters register in its
+    /// registry. `crate::obs::ambient()` picks up whatever the CLI
+    /// installed (a disabled handle when `[obs]` is off).
+    pub obs: crate::obs::ObsHandle,
 }
 
 /// Replay a synthetic trace against the registry on a virtual clock:
@@ -82,10 +87,12 @@ pub fn replay(
     let arrivals =
         traffic::generate(opts.pattern, &cfg.serve, &data, opts.duration, cfg.serve.seed);
 
-    let mut admission = Admission::new(data.clone(), &cfg.model, cfg);
+    let obs = opts.obs.clone();
+    let latency_hist = obs.histogram("serve.latency_s");
+    let mut admission = Admission::new_obs(data.clone(), &cfg.model, cfg, &obs);
     let mut pool = DevicePool::with_trace(cfg, &cfg.serve.events)?;
     let mut router =
-        Router::new(DevicePool::roster(cfg), pool.active_ids(), CostModel::default());
+        Router::new_obs(DevicePool::roster(cfg), pool.active_ids(), CostModel::default(), &obs);
     // Sparsity lever: with `[slide] serve_slo_ms > 0` the router watches the
     // windowed p95 and flips replicas to approximate LSH top-k inference at
     // `serve_ratio` under SLO pressure. Disarmed (the default) this whole
@@ -115,6 +122,17 @@ pub fn replay(
                 router.set_active(&pool.active_ids());
             }
             for ev in events {
+                obs.instant(
+                    crate::obs::Subsystem::Serve,
+                    "serve.churn",
+                    crate::obs::chrome::SERVE_TID_BASE + ev.device as u32,
+                    (next_window as f64) * window,
+                    vec![
+                        ("device", ev.device.into()),
+                        ("action", ev.action.name().into()),
+                        ("reason", ev.reason.as_str().into()),
+                    ],
+                );
                 pool_events.push(crate::metrics::PoolEventRow {
                     mega_batch: ev.mega_batch,
                     device: ev.device,
@@ -166,6 +184,7 @@ pub fn replay(
             let sample_id = ab.batch.sample_ids[row] as usize;
             let hit = data.sample(sample_id).labels.contains(&(preds[row].max(0) as u32));
             router.observe_latency(routed.completion - arrival);
+            latency_hist.observe(routed.completion - arrival);
             requests.push(RequestRecord {
                 id: rid,
                 arrival,
@@ -173,6 +192,22 @@ pub fn replay(
                 hit,
             });
         }
+        // One span per served micro-batch on the device's serve lane:
+        // admit (formed_at) → route (start) → eval → respond (completion).
+        obs.span(
+            crate::obs::Subsystem::Serve,
+            "serve.batch",
+            crate::obs::chrome::SERVE_TID_BASE + routed.device as u32,
+            routed.start,
+            routed.completion - routed.start,
+            vec![
+                ("valid", ab.batch.valid.into()),
+                ("bucket", ab.batch.bucket.into()),
+                ("version", snap.version.into()),
+                ("queued_s", (routed.start - t).into()),
+                ("approx", router.approx_mode().into()),
+            ],
+        );
         batches.push(BatchRecord {
             formed_at: t,
             start: routed.start,

@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use crate::coordinator::dispatch::{next_completion_device, next_free_device};
 use crate::data::PaddedBatch;
+use crate::obs::{CounterHandle, ObsHandle};
 use crate::runtime::{CostModel, SimDevice};
 use crate::tuning::CostsView;
 
@@ -66,7 +67,9 @@ pub struct Router {
     /// Sliding window of observed request latencies (ring buffer).
     lat_window: Vec<f64>,
     lat_pos: usize,
-    mode_switches: u64,
+    /// Exact↔approximate transitions, registry-backed as
+    /// `serve.mode_switches`.
+    mode_switches: CounterHandle,
 }
 
 /// Latency samples the router keeps for its windowed p95.
@@ -79,6 +82,17 @@ impl Router {
     /// `devices` is the full roster ([`DevicePool::roster`]); `active` the
     /// initially-active subset.
     pub fn new(devices: Vec<SimDevice>, active: Vec<usize>, cost: CostModel) -> Router {
+        Router::new_obs(devices, active, cost, &ObsHandle::disabled())
+    }
+
+    /// [`Router::new`] with the mode-switch counter registered in `obs`'s
+    /// registry (the replay loop passes its handle).
+    pub fn new_obs(
+        devices: Vec<SimDevice>,
+        active: Vec<usize>,
+        cost: CostModel,
+        obs: &ObsHandle,
+    ) -> Router {
         assert!(!devices.is_empty());
         let n = devices.len();
         let mut r = Router {
@@ -95,7 +109,7 @@ impl Router {
             approx: false,
             lat_window: Vec::with_capacity(LAT_WINDOW_CAP),
             lat_pos: 0,
-            mode_switches: 0,
+            mode_switches: obs.counter("serve.mode_switches"),
         };
         r.set_active(&active);
         r
@@ -186,10 +200,10 @@ impl Router {
         let p95 = self.windowed_p95();
         if !self.approx && p95 >= 0.9 * self.slo {
             self.approx = true;
-            self.mode_switches += 1;
+            self.mode_switches.inc();
         } else if self.approx && p95 <= 0.6 * self.slo {
             self.approx = false;
-            self.mode_switches += 1;
+            self.mode_switches.inc();
         }
     }
 
@@ -211,7 +225,7 @@ impl Router {
 
     /// How many exact↔approximate transitions have happened.
     pub fn mode_switches(&self) -> u64 {
-        self.mode_switches
+        self.mode_switches.get()
     }
 
     /// Batches routed per roster device so far.

@@ -1,0 +1,202 @@
+//! Integration tests for the unified observability plane: bit-determinism
+//! of the Chrome-trace export in virtual mode, the span open/close balance
+//! and per-lane timestamp monotonicity under scripted churn, and the
+//! acceptance gate that a disabled `[obs]` block changes no output byte.
+
+use std::collections::BTreeMap;
+
+use heterosparse::cluster::{self, ClusterPolicy};
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, ObsConfig, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::metrics::RunLog;
+use heterosparse::obs::{chrome, ObsHandle, TraceEvent};
+use heterosparse::runtime::CostModel;
+
+fn small_cfg(g: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 8,
+        initial_batch: 32,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: g,
+        speed_factors: vec![1.0; g],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1200, test_samples: 240, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn cluster_cfg() -> Config {
+    let mut cfg = small_cfg(2);
+    cfg.cluster.servers = 2;
+    cfg.cluster.sync_every = 2;
+    cfg.cluster.link_latency_s = 1e-3;
+    cfg.cluster.link_gbytes_per_sec = 0.01;
+    cfg.cluster.events = vec![
+        "at_mb=1 link=1 factor=5.0".to_string(),
+        "at_mb=3 server=1 down".to_string(),
+        "at_mb=6 server=1 up".to_string(),
+    ];
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn enabled_handle() -> ObsHandle {
+    ObsHandle::from_config(&ObsConfig { enabled: true, ..ObsConfig::default() }, false)
+}
+
+fn run_single(cfg: &Config, opts: TrainerOptions) -> RunLog {
+    let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+    let backend = RefBackend;
+    let engine =
+        Box::new(SimEngine::new(&backend, DevicePool::roster(cfg), CostModel::default()));
+    let mut trainer = Trainer::new(cfg.clone(), engine, &backend, opts);
+    trainer.run(&train, &test).unwrap()
+}
+
+#[test]
+fn cluster_trace_export_is_bit_deterministic() {
+    // Two runs of the same virtual-clock cluster scenario — link throttle
+    // plus a rack loss/recovery — must export byte-identical traces.
+    let cfg = cluster_cfg();
+    let policy = ClusterPolicy { flat: false, adaptive: true };
+
+    let obs_a = enabled_handle();
+    cluster::run_cluster_with(&cfg, policy, "det", obs_a.clone()).unwrap();
+    let trace_a = chrome::render(obs_a.sink());
+
+    let obs_b = enabled_handle();
+    cluster::run_cluster_with(&cfg, policy, "det", obs_b.clone()).unwrap();
+    let trace_b = chrome::render(obs_b.sink());
+
+    assert_eq!(trace_a, trace_b, "virtual-mode trace export is not bit-deterministic");
+    assert!(chrome::validate(&trace_a).unwrap() > 0);
+
+    // The timeline carries the cluster story: tier-2 sync spans with the
+    // cadence context, the rack churn instants, and one process lane per
+    // server.
+    let events = obs_a.sink().events();
+    assert!(events.iter().any(|e| e.name == "cluster.sync"));
+    assert!(events.iter().any(|e| e.name == "cluster.rack_down"));
+    assert!(events.iter().any(|e| e.name == "cluster.rack_up"));
+    assert!(events.iter().any(|e| e.name == "engine.step"));
+    let pids: std::collections::BTreeSet<u32> = events.iter().map(|e| e.pid).collect();
+    assert!(
+        pids.contains(&0) && pids.contains(&1),
+        "expected one process lane per server, saw {pids:?}"
+    );
+    assert_eq!(obs_a.sink().dropped(), 0, "default ring must hold this scenario");
+}
+
+#[test]
+fn spans_balance_and_lanes_stay_monotonic_under_churn() {
+    // A single-server run with scripted pool churn: every opened span is
+    // closed, and within each (pid, tid) lane virtual timestamps never go
+    // backwards (Perfetto renders exactly this ordering).
+    let mut cfg = small_cfg(3);
+    cfg.elastic.events = vec!["at_mb=2 remove=1".to_string(), "at_mb=5 add=1".to_string()];
+    cfg.validate().unwrap();
+
+    let obs = enabled_handle();
+    let opts = TrainerOptions { obs: obs.clone(), ..TrainerOptions::default() };
+    let log = run_single(&cfg, opts);
+    assert!(!log.rows.is_empty());
+
+    let (opened, closed) = obs.sink().balance();
+    assert!(opened > 0, "an instrumented run must record spans");
+    assert_eq!(opened, closed, "span open/close imbalance");
+
+    let events = obs.sink().events();
+    assert!(events.iter().any(|e| e.name == "train.pool"), "churn instants missing");
+    assert!(events.iter().any(|e| e.name == "train.megabatch"));
+    assert!(events.iter().any(|e| e.name == "train.merge"));
+    assert!(events.iter().any(|e| e.name == "engine.step" && e.tid >= 1));
+
+    let mut lanes: BTreeMap<(u32, u32), Vec<&TraceEvent>> = BTreeMap::new();
+    for e in &events {
+        assert!(e.dur >= 0.0, "negative duration on {}", e.name);
+        assert!(e.ts.is_finite() && e.ts >= 0.0, "bad timestamp on {}", e.name);
+        lanes.entry((e.pid, e.tid)).or_default().push(e);
+    }
+    for ((pid, tid), lane) in &lanes {
+        for pair in lane.windows(2) {
+            assert!(
+                pair[1].ts >= pair[0].ts,
+                "lane ({pid},{tid}): {} at {} precedes {} at {}",
+                pair[1].name,
+                pair[1].ts,
+                pair[0].name,
+                pair[0].ts
+            );
+        }
+    }
+}
+
+#[test]
+fn disabled_obs_block_changes_no_output_byte() {
+    // The acceptance gate: a config that spells out a disabled [obs]
+    // block must produce CSV and JSON byte-identical to a config that
+    // never mentions it — and neither may contain a metrics section.
+    let cfg_plain = small_cfg(2);
+    let mut cfg_obs = cfg_plain.clone();
+    cfg_obs.obs.enabled = false;
+    cfg_obs.obs.level = "debug".to_string();
+    cfg_obs.obs.buffer_events = 128;
+    cfg_obs.validate().unwrap();
+
+    let log_plain = run_single(&cfg_plain, TrainerOptions::default());
+    let log_obs = run_single(&cfg_obs, TrainerOptions::default());
+
+    let dir = std::env::temp_dir().join("hs_integration_obs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let render = |log: &RunLog, tag: &str| -> (String, String) {
+        let csv = dir.join(format!("{tag}.csv"));
+        let json = dir.join(format!("{tag}.json"));
+        log.write_csv(&csv).unwrap();
+        log.write_json(&json).unwrap();
+        (std::fs::read_to_string(csv).unwrap(), std::fs::read_to_string(json).unwrap())
+    };
+    let (csv_plain, json_plain) = render(&log_plain, "plain");
+    let (csv_obs, json_obs) = render(&log_obs, "obs_off");
+    assert_eq!(csv_plain, csv_obs, "disabled [obs] perturbed the CSV");
+    assert_eq!(json_plain, json_obs, "disabled [obs] perturbed the JSON");
+    assert!(!csv_plain.contains("metric,kind,value"));
+    assert!(!json_plain.contains("\"metrics\""));
+
+    // Flipping collection on must not perturb the training trajectory —
+    // it only adds the metrics section on top.
+    let enabled = enabled_handle();
+    let log_on =
+        run_single(&cfg_plain, TrainerOptions { obs: enabled, ..TrainerOptions::default() });
+    assert_eq!(log_plain.rows.len(), log_on.rows.len());
+    for (a, b) in log_plain.rows.iter().zip(&log_on.rows) {
+        assert_eq!(a.clock, b.clock);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.updates, b.updates);
+    }
+    assert!(!log_on.metrics.is_empty(), "enabled run must snapshot the registry");
+    let (csv_on, json_on) = render(&log_on, "obs_on");
+    assert!(csv_on.contains("metric,kind,value"));
+    assert!(csv_on.contains("data."), "migrated pipeline counters missing from the export");
+    assert!(json_on.contains("\"metrics\""));
+}

@@ -82,6 +82,7 @@ fn virtual_time_serving_is_bit_deterministic() {
                 follow_clock: false,
                 train_log: None,
                 name: "det".to_string(),
+                obs: heterosparse::obs::ObsHandle::disabled(),
             },
         )
         .unwrap()
@@ -139,6 +140,7 @@ fn hot_swap_under_churn_conserves_requests_and_serves_whole_versions() {
             follow_clock: true,
             train_log: None,
             name: "churn".to_string(),
+            obs: heterosparse::obs::ObsHandle::disabled(),
         },
     )
     .unwrap();
@@ -216,6 +218,7 @@ fn train_while_serve_tracks_the_training_curve_with_bounded_staleness() {
             follow_clock: true,
             train_log: Some(&train_log),
             name: "tws".to_string(),
+            obs: heterosparse::obs::ObsHandle::disabled(),
         },
     )
     .unwrap();

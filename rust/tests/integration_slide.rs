@@ -176,6 +176,7 @@ fn slo_armed_replay_does_not_regress_p99() {
         follow_clock: false,
         train_log: None,
         name: name.to_string(),
+        obs: heterosparse::obs::ObsHandle::disabled(),
     };
     let exact = replay(&cfg, data.clone(), &registry, &RefBackend, &opts("exact")).unwrap();
 
