@@ -25,7 +25,11 @@
 //!   * observability plane: enabled span emit, registry counter
 //!     increment + by-name lookup, and the disabled-sink no-op that
 //!     rides every call site — recorded to `BENCH_obs.json`
-//!     (`HS_BENCH_OBS_OUT` overrides the path).
+//!     (`HS_BENCH_OBS_OUT` overrides the path),
+//!   * trace analysis plane: per-lane attribution, critical-path
+//!     extraction, and report diff over a synthetic ~5k-event stream —
+//!     recorded to `BENCH_analyze.json` (`HS_BENCH_ANALYZE_OUT`
+//!     overrides the path).
 
 use std::sync::Arc;
 
@@ -452,6 +456,124 @@ fn main() {
     println!("{r}  ({:.1} Mcalls/s)", per_sec / 1e6);
     obs_results.push(("span_emit_disabled".to_string(), r, per_sec));
     append_baseline("BENCH_obs.json", "HS_BENCH_OBS_OUT", "perf_hotpath/obs", &obs_results);
+
+    // ---- trace analysis plane: attribution, critical path, diff ------------
+    // `report` runs post-hoc, but CI runs it after every smoke and the
+    // --diff gate sits on the PR path, so a realistic trace (~5k events:
+    // 200 mega-batches x 4 devices with merges, tier-2 syncs, serve
+    // batches, and decision instants) must analyze in milliseconds.
+    let mut analyze_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let analyze_obs = ObsHandle::from_config(
+        &heterosparse::config::ObsConfig {
+            enabled: true,
+            buffer_events: 1 << 16,
+            ..Default::default()
+        },
+        false,
+    );
+    {
+        let devs = 4u32;
+        let mut t = 0.0f64;
+        for mb in 0..200u64 {
+            let mut end = t;
+            for d in 0..devs {
+                let mut cursor = t;
+                for s in 0..5u64 {
+                    let dur = 1e-3 * (1.0 + 0.1 * d as f64 + 0.01 * ((mb + s) % 7) as f64);
+                    analyze_obs.span(
+                        Subsystem::Engine,
+                        "engine.step",
+                        1 + d,
+                        cursor,
+                        dur,
+                        vec![("batch", heterosparse::obs::ArgVal::U(128))],
+                    );
+                    cursor += dur;
+                }
+                end = end.max(cursor);
+            }
+            analyze_obs.span(
+                Subsystem::Train,
+                "train.merge",
+                0,
+                end,
+                2e-4,
+                Vec::new(),
+            );
+            analyze_obs.span(
+                Subsystem::Train,
+                "train.megabatch",
+                0,
+                t,
+                end + 2e-4 - t,
+                vec![("mb", heterosparse::obs::ArgVal::U(mb))],
+            );
+            if mb % 4 == 0 {
+                analyze_obs.span(
+                    Subsystem::Cluster,
+                    "cluster.sync",
+                    0,
+                    end + 2e-4,
+                    3e-4,
+                    vec![("window", heterosparse::obs::ArgVal::U(mb / 4))],
+                );
+            }
+            analyze_obs.span(
+                Subsystem::Serve,
+                "serve.batch",
+                heterosparse::obs::chrome::SERVE_TID_BASE + (mb % devs as u64) as u32,
+                t,
+                8e-4,
+                vec![("queued_s", heterosparse::obs::ArgVal::F(1e-4))],
+            );
+            if mb % 10 == 0 {
+                analyze_obs.instant(
+                    Subsystem::Train,
+                    "train.pool",
+                    0,
+                    end,
+                    vec![
+                        ("device", heterosparse::obs::ArgVal::U(mb % devs as u64)),
+                        ("action", heterosparse::obs::ArgVal::S("remove".into())),
+                        ("reason", heterosparse::obs::ArgVal::S("bench".into())),
+                    ],
+                );
+            }
+            t = end + 2e-4 + 3e-4;
+        }
+    }
+    let td = heterosparse::obs::analyze::TraceData::from_handle("bench", &analyze_obs);
+    assert_eq!(td.dropped, 0, "bench ring must hold the synthetic stream");
+    let n_events = td.events.len() as f64;
+
+    let r = bench_fn("analyze/attribution(~5k events)", 3, 50, || {
+        heterosparse::obs::analyze::attribute(&td.events)
+    });
+    let per_sec = r.throughput(n_events);
+    println!("{r}  ({:.1} Mevents/s)", per_sec / 1e6);
+    analyze_results.push(("attribution".to_string(), r, per_sec));
+
+    let r = bench_fn("analyze/critical_path(~5k events)", 3, 50, || {
+        heterosparse::obs::analyze::critical_path(&td.events)
+    });
+    let per_sec = r.throughput(n_events);
+    println!("{r}  ({:.1} Mevents/s)", per_sec / 1e6);
+    analyze_results.push(("critical_path".to_string(), r, per_sec));
+
+    let report = heterosparse::obs::analyze::Report::from_trace(&td);
+    let th = heterosparse::obs::analyze::DiffThresholds::default();
+    let r = bench_fn("analyze/report_diff(self)", 10, 500, || {
+        heterosparse::obs::analyze::diff(&report, &report, &th)
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} diffs/s)");
+    analyze_results.push(("report_diff".to_string(), r, per_sec));
+    append_baseline(
+        "BENCH_analyze.json",
+        "HS_BENCH_ANALYZE_OUT",
+        "perf_hotpath/analyze",
+        &analyze_results,
+    );
 
     // ---- coordinator algorithms -------------------------------------------
     let mut b = vec![128usize, 96, 72, 48];

@@ -8,11 +8,17 @@
 //! heterosparse calibrate   [--set k=v]...
 //! heterosparse info        [--set k=v]...
 //! heterosparse trace-check FILE
+//! heterosparse report      FILE [--strict] [--top K] [--explain PAT] [--out FILE]
+//! heterosparse report      --diff BASELINE CANDIDATE [--strict]
 //! ```
 //!
 //! `train` and `experiment` accept `--trace out.json` to export a
 //! Chrome-trace (Perfetto) timeline of the run; `trace-check` validates
 //! such a file against the minimal trace_event schema (used by CI).
+//! `report` analyzes a trace (or RunLog JSON) into a deterministic
+//! markdown run report — lane attribution, critical path, decision
+//! audit — and `report --diff` compares two such inputs against fixed
+//! regression thresholds, exiting non-zero on regression (the CI gate).
 
 use std::path::{Path, PathBuf};
 
@@ -36,6 +42,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "calibrate" => cmd_calibrate(rest),
         "info" => cmd_info(rest),
         "trace-check" => cmd_trace_check(rest),
+        "report" => cmd_report(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -63,7 +70,10 @@ fn print_usage() {
          {experiment_lines}\
          \x20 calibrate    fit the cost model against live PJRT measurements\n\
          \x20 info         print resolved config + artifact status\n\
-         \x20 trace-check  validate a --trace export against the trace_event schema\n\n\
+         \x20 trace-check  validate a --trace export against the trace_event schema\n\
+         \x20 report       analyze a trace/RunLog JSON into a markdown run report\n\
+         \x20              (lane attribution, critical path, decision audit);\n\
+         \x20              report --diff A B gates on regressions (non-zero exit)\n\n\
          OPTIONS:\n\
          \x20 --config FILE      TOML config file\n\
          \x20 --set key=value    override any config key (repeatable)\n\
@@ -79,6 +89,10 @@ fn print_usage() {
          \x20 --trace PATH       export a Chrome-trace (Perfetto) timeline of the\n\
          \x20                    run (implies [obs] collection; load in\n\
          \x20                    ui.perfetto.dev)\n\
+         \x20 --strict           report: fail (exit 1) on truncation warnings\n\
+         \x20 --top K            report: critical-path table size (default 8)\n\
+         \x20 --explain PAT      report: print only decisions matching PAT\n\
+         \x20 --diff             report: compare two inputs (baseline candidate)\n\
          \x20 --verbose          progress output"
     );
 }
@@ -98,6 +112,14 @@ struct Parsed {
     resume: Option<PathBuf>,
     /// `--trace PATH`: export a Chrome-trace timeline after the run.
     trace: Option<PathBuf>,
+    /// `report --strict`: truncation warnings become errors.
+    strict: bool,
+    /// `report --top K`: critical-path table size.
+    top: Option<usize>,
+    /// `report --explain PAT`: filter the decision audit.
+    explain: Option<String>,
+    /// `report --diff`: compare two inputs.
+    diff: bool,
     positional: Vec<String>,
 }
 
@@ -112,12 +134,23 @@ impl Parsed {
         handle
     }
 
-    /// Write the collected trace if `--trace` was given.
+    /// Write the collected trace (spans + registry counter tracks) if
+    /// `--trace` was given, warning loudly when the ring truncated.
     fn export_trace(&self, obs: &crate::obs::ObsHandle) -> Result<()> {
         let Some(path) = &self.trace else { return Ok(()) };
         let path = path.to_string_lossy();
-        crate::obs::chrome::write_trace(obs.sink(), &path)?;
+        crate::obs::chrome::write_trace_with_registry(obs.sink(), obs.registry(), &path)?;
         println!("wrote trace: {path} ({} events)", obs.sink().events().len());
+        if obs.sink().dropped() > 0 {
+            eprintln!(
+                "warning: trace ring dropped {} events — raise [obs] buffer_events",
+                obs.sink().dropped()
+            );
+        }
+        let (opened, closed) = obs.sink().balance();
+        if opened != closed {
+            eprintln!("warning: span imbalance — {opened} opened vs {closed} closed");
+        }
         Ok(())
     }
 }
@@ -134,6 +167,10 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     let mut elastic_events: Vec<String> = Vec::new();
     let mut data_policy: Option<CompositionPolicy> = None;
     let mut trace = None;
+    let mut strict = false;
+    let mut top = None;
+    let mut explain = None;
+    let mut diff = false;
     let mut positional = Vec::new();
 
     let mut it = args.iter().peekable();
@@ -176,6 +213,19 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
             "--trace" => {
                 trace = Some(PathBuf::from(it.next().context("--trace needs a value")?))
             }
+            "--strict" => strict = true,
+            "--top" => {
+                top = Some(
+                    it.next()
+                        .context("--top needs a value")?
+                        .parse::<usize>()
+                        .context("--top expects an integer")?,
+                )
+            }
+            "--explain" => {
+                explain = Some(it.next().context("--explain needs a pattern")?.clone())
+            }
+            "--diff" => diff = true,
             "--verbose" | "-v" => verbose = true,
             other if other.starts_with("--") => bail!("unknown flag '{other}'"),
             other => positional.push(other.to_string()),
@@ -206,6 +256,10 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
         checkpoint,
         resume,
         trace,
+        strict,
+        top,
+        explain,
+        diff,
         positional,
     })
 }
@@ -358,7 +412,83 @@ fn cmd_trace_check(args: &[String]) -> Result<()> {
         std::fs::read_to_string(file).with_context(|| format!("reading trace {file}"))?;
     let n = crate::obs::chrome::validate(&text)?;
     println!("{file}: OK ({n} trace events)");
+    if let Ok(root) = crate::util::json::Json::parse(&text) {
+        let dropped = root.get("droppedEvents").as_f64().unwrap_or(0.0);
+        if dropped > 0.0 {
+            eprintln!(
+                "warning: {file} records {dropped} dropped events — the timeline is \
+                 truncated (raise [obs] buffer_events)"
+            );
+        }
+    }
     Ok(())
+}
+
+/// Load a `report` input: a `--trace` export (has `traceEvents`) or a
+/// RunLog JSON (has `rows`).
+fn load_report(file: &str) -> Result<crate::obs::analyze::Report> {
+    use crate::obs::analyze::{Report, TraceData};
+    let text = std::fs::read_to_string(file).with_context(|| format!("reading {file}"))?;
+    let root = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{file}: not valid JSON: {e}"))?;
+    if root.get("traceEvents").as_arr().is_some() {
+        Ok(Report::from_trace(&TraceData::parse_chrome(file, &root)?))
+    } else {
+        Report::from_run_json(file, &root)
+    }
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let p = parse_flags(args)?;
+    let strict_gate = |r: &crate::obs::analyze::Report| -> Result<()> {
+        let warnings = r.warnings();
+        if p.strict && !warnings.is_empty() {
+            bail!("--strict: {} ({})", warnings.join("; "), r.label);
+        }
+        for w in &warnings {
+            eprintln!("warning: {w}");
+        }
+        Ok(())
+    };
+    if p.diff {
+        let [a, b] = p.positional.as_slice() else {
+            bail!("report --diff needs exactly two files: BASELINE CANDIDATE");
+        };
+        let before = load_report(a)?;
+        let after = load_report(b)?;
+        strict_gate(&before)?;
+        strict_gate(&after)?;
+        let th = crate::obs::analyze::DiffThresholds::default();
+        let regs = crate::obs::analyze::diff(&before, &after, &th);
+        print!("{}", crate::obs::analyze::render_diff(&before, &after, &regs, &th));
+        if !regs.is_empty() {
+            bail!("{} regression(s) over thresholds — see the diff above", regs.len());
+        }
+        return Ok(());
+    }
+    let file = p.positional.first().context("report requires a trace or RunLog JSON file")?;
+    let report = load_report(file)?;
+    if let Some(pattern) = &p.explain {
+        let hits =
+            crate::obs::analyze::explain_query(&report.decisions, pattern);
+        if hits.is_empty() {
+            println!("no decisions match {pattern:?} ({} in the log)", report.decisions.len());
+        } else {
+            for line in hits {
+                println!("{line}");
+            }
+        }
+        return strict_gate(&report);
+    }
+    let md = report.to_markdown(p.top.unwrap_or(8));
+    match &p.out {
+        Some(out) => {
+            std::fs::write(out, &md).with_context(|| format!("writing {}", out.display()))?;
+            println!("wrote report: {}", out.display());
+        }
+        None => print!("{md}"),
+    }
+    strict_gate(&report)
 }
 
 fn cmd_calibrate(args: &[String]) -> Result<()> {
@@ -486,6 +616,76 @@ mod tests {
         std::fs::write(&bad, "{}").unwrap();
         assert!(main_with_args(&s(&["trace-check", bad.to_str().unwrap()])).is_err());
         assert!(main_with_args(&s(&["trace-check"])).is_err());
+    }
+
+    #[test]
+    fn report_runs_and_self_diff_exits_zero() {
+        // A small but real trace: one mega-batch window with two device
+        // chains, a merge, and a decision instant.
+        let h = crate::obs::ObsHandle::from_config(&crate::config::ObsConfig::default(), true);
+        let emit = |h: &crate::obs::ObsHandle| {
+            use crate::obs::Subsystem;
+            h.span(Subsystem::Train, "train.megabatch", 0, 0.0, 1.0, Vec::new());
+            h.span(Subsystem::Engine, "engine.step", 1, 0.0, 0.4, Vec::new());
+            h.span(Subsystem::Engine, "engine.step", 2, 0.0, 0.9, Vec::new());
+            h.span(Subsystem::Train, "train.merge", 0, 0.9, 0.1, Vec::new());
+            h.instant(
+                Subsystem::Train,
+                "train.scale",
+                0,
+                1.0,
+                vec![("mb", 0u64.into()), ("from", "64,64".into()), ("to", "96,32".into())],
+            );
+        };
+        emit(&h);
+        let dir = std::env::temp_dir().join("hs_cli_report");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        crate::obs::chrome::write_trace_with_registry(
+            h.sink(),
+            h.registry(),
+            trace.to_str().unwrap(),
+        )
+        .unwrap();
+        let t = trace.to_str().unwrap();
+        main_with_args(&s(&["report", t])).unwrap();
+        main_with_args(&s(&["report", t, "--strict", "--top", "3"])).unwrap();
+        main_with_args(&s(&["report", t, "--explain", "scale"])).unwrap();
+        // Self-diff: zero regressions, exit 0. Markdown lands via --out.
+        main_with_args(&s(&["report", "--diff", t, t])).unwrap();
+        let out = dir.join("report.md");
+        main_with_args(&s(&["report", t, "--out", out.to_str().unwrap()])).unwrap();
+        let md = std::fs::read_to_string(&out).unwrap();
+        assert!(md.contains("## Critical path"));
+        assert!(md.contains("server0/gpu1"), "slow chain gates: {md}");
+        // Bad inputs fail loudly.
+        assert!(main_with_args(&s(&["report"])).is_err());
+        assert!(main_with_args(&s(&["report", "--diff", t])).is_err());
+        assert!(main_with_args(&s(&["report", "/nonexistent.json"])).is_err());
+    }
+
+    #[test]
+    fn strict_report_fails_on_a_truncated_ring() {
+        use crate::config::ObsConfig;
+        // A 4-slot ring overflows immediately; the export then carries
+        // droppedEvents > 0 and --strict must gate on it.
+        let cfg = ObsConfig { enabled: true, buffer_events: 4, ..Default::default() };
+        let h = crate::obs::ObsHandle::from_config(&cfg, false);
+        for i in 0..16 {
+            h.span(crate::obs::Subsystem::Engine, "engine.step", 1, i as f64, 0.5, Vec::new());
+        }
+        assert!(h.sink().dropped() > 0);
+        let dir = std::env::temp_dir().join("hs_cli_report_strict");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("truncated.json");
+        crate::obs::chrome::write_trace(h.sink(), trace.to_str().unwrap()).unwrap();
+        let t = trace.to_str().unwrap();
+        // Plain report succeeds (warning only); --strict fails.
+        main_with_args(&s(&["report", t])).unwrap();
+        let err = main_with_args(&s(&["report", t, "--strict"])).unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+        // trace-check still validates the truncated file.
+        main_with_args(&s(&["trace-check", t])).unwrap();
     }
 
     #[test]

@@ -550,6 +550,7 @@ impl<'b> ClusterSim<'b> {
                 let new_every =
                     (n.ceil() as usize).clamp(c.min_sync_every, c.max_sync_every);
                 if new_every != sync_every {
+                    let bottleneck = self.fabric.bottleneck_slowdown(&participants);
                     sync_events.push(SyncEventRow {
                         at: cluster_clock,
                         mega_batch: target,
@@ -557,8 +558,7 @@ impl<'b> ClusterSim<'b> {
                         action: "cadence".to_string(),
                         reason: format!(
                             "sync {sync_secs:.4}s vs {per_mb:.4}s/mb: cadence {sync_every} -> \
-                             {new_every} (bottleneck x{:.2})",
-                            self.fabric.bottleneck_slowdown(&participants)
+                             {new_every} (bottleneck x{bottleneck:.2})"
                         ),
                     });
                     self.obs.for_pid(participants[0] as u32).instant(
@@ -570,6 +570,9 @@ impl<'b> ClusterSim<'b> {
                             ("from", sync_every.into()),
                             ("to", new_every.into()),
                             ("sync_secs", sync_secs.into()),
+                            ("per_mb", per_mb.into()),
+                            ("comm_target", c.comm_target.into()),
+                            ("bottleneck", bottleneck.into()),
                         ],
                     );
                     sync_every = new_every;

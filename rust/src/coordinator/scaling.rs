@@ -292,11 +292,73 @@ impl ScalingState {
     }
 }
 
+// ---- decision-record formatting ------------------------------------------
+//
+// The trainer's `train.retarget` / `train.scale` instants carry their
+// inputs and outputs as stable comma-joined strings, so the analyze
+// plane (and a human in Perfetto) can read the decision without the
+// RunLog. Fixed formats keep the trace bit-deterministic.
+
+/// `"128,96,72"` — a batch grid as a stable argument string.
+pub fn fmt_grid(sizes: &[usize]) -> String {
+    sizes.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// `"1.00,1.82"` — speed multipliers (or sparsity ratios) as a stable
+/// argument string.
+pub fn fmt_speeds(speeds: &[f64]) -> String {
+    speeds.iter().map(|s| format!("{s:.2}")).collect::<Vec<_>>().join(",")
+}
+
+/// Human-readable "why" for a drift re-target: per device whose batch
+/// size changed, the calibrated slowdown that drove the move. `active`
+/// carries the global device ids matching `speeds`/`from`/`to`.
+pub fn describe_retarget(
+    active: &[usize],
+    speeds: &[f64],
+    from: &[usize],
+    to: &[usize],
+) -> String {
+    assert_eq!(active.len(), speeds.len());
+    assert_eq!(from.len(), to.len());
+    assert_eq!(active.len(), from.len());
+    let fastest = speeds.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+    let moves: Vec<String> = active
+        .iter()
+        .zip(speeds)
+        .zip(from.iter().zip(to))
+        .filter(|&((_, _), (f, t))| f != t)
+        .map(|((&d, &s), (&f, &t))| {
+            format!("device {d}: b {f} -> {t} (calibrated slope {:.2}x nominal)", s / fastest)
+        })
+        .collect();
+    if moves.is_empty() {
+        "no grid change (targets already met)".to_string()
+    } else {
+        moves.join("; ")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::{self, Gen};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn decision_formatting_is_stable() {
+        assert_eq!(fmt_grid(&[128, 96, 72]), "128,96,72");
+        assert_eq!(fmt_speeds(&[1.0, 1.82]), "1.00,1.82");
+        assert_eq!(fmt_grid(&[]), "");
+    }
+
+    #[test]
+    fn describe_retarget_names_changed_devices_and_slopes() {
+        let why = describe_retarget(&[0, 2], &[1.0, 1.8], &[128, 128], &[128, 72]);
+        assert_eq!(why, "device 2: b 128 -> 72 (calibrated slope 1.80x nominal)");
+        let none = describe_retarget(&[0], &[1.0], &[128], &[128]);
+        assert!(none.contains("no grid change"), "{none}");
+    }
 
     fn cfg() -> SgdConfig {
         SgdConfig { b_min: 16, b_max: 128, beta: 8, ..Default::default() }

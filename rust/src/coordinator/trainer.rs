@@ -723,16 +723,33 @@ impl<'b> TrainerSession<'b> {
                     let ones = vec![1.0; t.len()];
                     (t, ones)
                 };
-                obs.instant(
-                    crate::obs::Subsystem::Train,
-                    "train.retarget",
-                    0,
-                    self.clock,
-                    vec![
-                        ("reason", crate::obs::ArgVal::S("step-drift".to_string())),
-                        ("devices", crate::obs::ArgVal::U(active.len() as u64)),
-                    ],
-                );
+                if obs.enabled() {
+                    // Decision record: the inputs (calibrated speeds, old
+                    // grid) and the chosen action (new grid + ratios), so
+                    // `report --explain` can reconstruct the why post-hoc.
+                    let from: Vec<usize> =
+                        active.iter().map(|&d| self.batch_sizes[d]).collect();
+                    obs.instant(
+                        crate::obs::Subsystem::Train,
+                        "train.retarget",
+                        0,
+                        self.clock,
+                        vec![
+                            ("reason", crate::obs::ArgVal::S("step-drift".to_string())),
+                            ("devices", crate::obs::ArgVal::U(active.len() as u64)),
+                            ("mb", crate::obs::ArgVal::U(mb as u64)),
+                            ("speeds", scaling::fmt_speeds(&speeds).into()),
+                            ("from", scaling::fmt_grid(&from).into()),
+                            ("to", scaling::fmt_grid(&targets).into()),
+                            ("ratios", scaling::fmt_speeds(&ratios).into()),
+                            (
+                                "why",
+                                scaling::describe_retarget(active, &speeds, &from, &targets)
+                                    .into(),
+                            ),
+                        ],
+                    );
+                }
                 if self.opts.verbose {
                     println!(
                         "[{}] mb={:<3} calibration: step drift detected; re-seeding batch \
@@ -774,7 +791,11 @@ impl<'b> TrainerSession<'b> {
                 "train.scale",
                 0,
                 self.clock,
-                vec![("mb", crate::obs::ArgVal::U(mb as u64))],
+                vec![
+                    ("mb", crate::obs::ArgVal::U(mb as u64)),
+                    ("from", scaling::fmt_grid(&sizes_before).into()),
+                    ("to", scaling::fmt_grid(&self.batch_sizes).into()),
+                ],
             );
         }
 

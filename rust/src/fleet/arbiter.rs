@@ -102,6 +102,10 @@ pub struct Arbiter {
     /// Preemptions / returns fired so far (experiment headline counters).
     pub preemptions: usize,
     pub returns: usize,
+    /// Per-tenant device-count targets from the last `rebalance`
+    /// (post-preemption-overlay) — the decision input the fleet loop
+    /// attaches to its `fleet.lease` audit instants.
+    last_targets: Vec<usize>,
 }
 
 impl Arbiter {
@@ -128,6 +132,7 @@ impl Arbiter {
             events: Vec::new(),
             preemptions: 0,
             returns: 0,
+            last_targets: vec![0; n],
         }
     }
 
@@ -442,6 +447,13 @@ impl Arbiter {
                 }
             }
         }
+        self.last_targets = target.iter().map(|v| v.len()).collect();
+    }
+
+    /// Device-count target the last `rebalance` computed for `tenant`
+    /// (0 before the first tick or for late arrivals).
+    pub fn target_share(&self, tenant: TenantId) -> usize {
+        self.last_targets.get(tenant).copied().unwrap_or(0)
     }
 }
 

@@ -521,15 +521,21 @@ pub fn co_schedule_with(
         let fresh = arbiter.take_events();
         lease_counter.add(fresh.len() as u64);
         for e in &fresh {
-            // One instant per arbiter decision, on the device's lane, with
-            // the decision reason attached.
+            // One instant per arbiter decision, on the device's lane
+            // (deviceless "return" annotations land on the coordinator
+            // lane), carrying the reason plus the fair-share target that
+            // drove the move — a full decision record for `report`.
+            let tid = if e.device == usize::MAX { 0 } else { 1 + e.device as u32 };
+            let device: i64 = if e.device == usize::MAX { -1 } else { e.device as i64 };
             obs.instant(
                 crate::obs::Subsystem::Fleet,
                 "fleet.lease",
-                1 + e.device as u32,
+                tid,
                 e.at,
                 vec![
                     ("tenant", e.tenant.into()),
+                    ("device", device.into()),
+                    ("target", arbiter.target_share(e.tenant).into()),
                     ("action", e.action.as_str().into()),
                     ("reason", e.reason.as_str().into()),
                 ],

@@ -1,0 +1,288 @@
+//! Per-lane time attribution: carve each lane's run window into
+//! compute / serve / merge-wait / cluster-sync / idle.
+//!
+//! The partition invariant is structural, not arithmetic: every lane
+//! starts from one free-interval list spanning its process's run window
+//! `[min ts, max end]`, and each category *subtracts* its intervals from
+//! whatever is still free, in a fixed priority order:
+//!
+//! 1. own `engine.*` spans → **compute**
+//! 2. own `serve.*` spans → **serve**
+//! 3. own `train.merge` spans → **merge-wait** (the coordinator's merge
+//!    work is part of the barrier every device waits on)
+//! 4. `cluster.sync` windows (own lane, plus the process coordinator's
+//!    for device lanes) → **cluster-sync**
+//! 5. the process's `train.megabatch` windows → **merge-wait** on device
+//!    lanes (inside a mega-batch window, a device that isn't stepping is
+//!    stalled on the barrier, not idle)
+//! 6. whatever remains → **idle**
+//!
+//! Because each second of the window is claimed exactly once, the five
+//! categories sum to the window length to float precision — the property
+//! test random-churn scenarios pin this. `train.megabatch` on the
+//! coordinator's *own* lane is structural (it brackets the window), so
+//! step 5 applies only to device lanes; the coordinator's in-window
+//! remainder counts as idle (it is bookkeeping, not busy time).
+
+use std::collections::BTreeMap;
+
+use super::{Ev, EvKind};
+use crate::obs::chrome::{process_label, thread_label, SERVE_TID_BASE};
+
+/// One lane's attributed time, all in seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneAttribution {
+    /// Process lane (server / tenant).
+    pub pid: u32,
+    /// Thread lane within the process.
+    pub tid: u32,
+    /// Length of the process's run window (shared by all its lanes).
+    pub total: f64,
+    /// Time inside own `engine.*` spans.
+    pub compute: f64,
+    /// Time inside own `serve.*` spans.
+    pub serve: f64,
+    /// Barrier stall: own merge spans plus mega-batch window time this
+    /// lane spent neither computing nor syncing.
+    pub merge_wait: f64,
+    /// Tier-2 fabric synchronization windows.
+    pub cluster_sync: f64,
+    /// Window time outside every category above.
+    pub idle: f64,
+    /// Number of spans observed on this lane.
+    pub spans: usize,
+}
+
+impl LaneAttribution {
+    /// `server0/gpu2`-style label.
+    pub fn label(&self) -> String {
+        format!("{}/{}", process_label(self.pid), thread_label(self.tid))
+    }
+
+    /// Sum of the five categories — equals `total` up to float error
+    /// (the partition invariant).
+    pub fn category_sum(&self) -> f64 {
+        self.compute + self.serve + self.merge_wait + self.cluster_sync + self.idle
+    }
+}
+
+/// Sort, clamp to positive length, and merge overlapping or touching
+/// intervals.
+fn normalize(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    v.retain(|(s, e)| e > s);
+    v.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Subtract `cuts` (normalized) from the free list in place; returns the
+/// total length removed. Both lists stay sorted and disjoint.
+fn subtract(free: &mut Vec<(f64, f64)>, cuts: &[(f64, f64)]) -> f64 {
+    if cuts.is_empty() || free.is_empty() {
+        return 0.0;
+    }
+    let mut removed = 0.0;
+    let mut next: Vec<(f64, f64)> = Vec::with_capacity(free.len() + cuts.len());
+    for &(fs, fe) in free.iter() {
+        let mut cursor = fs;
+        for &(cs, ce) in cuts {
+            if ce <= cursor {
+                continue;
+            }
+            if cs >= fe {
+                break;
+            }
+            let lo = cs.max(cursor);
+            let hi = ce.min(fe);
+            if hi > lo {
+                removed += hi - lo;
+                if lo > cursor {
+                    next.push((cursor, lo));
+                }
+                cursor = hi;
+            }
+        }
+        if cursor < fe {
+            next.push((cursor, fe));
+        }
+    }
+    *free = next;
+    removed
+}
+
+fn free_len(free: &[(f64, f64)]) -> f64 {
+    free.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Attribute every lane in the event stream. Lanes are grouped per
+/// process: all lanes of a `pid` share the window `[min ts, max end]`
+/// over that process's events, so their totals are comparable
+/// denominators. Returns lanes sorted by `(pid, tid)`.
+pub fn attribute(events: &[Ev]) -> Vec<LaneAttribution> {
+    // Per-process windows and structural span sets.
+    let mut window: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+    let mut mb_windows: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut sync_windows: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut lanes: BTreeMap<(u32, u32), Vec<&Ev>> = BTreeMap::new();
+    for e in events {
+        let w = window.entry(e.pid).or_insert((f64::INFINITY, f64::NEG_INFINITY));
+        w.0 = w.0.min(e.ts);
+        w.1 = w.1.max(e.end());
+        lanes.entry((e.pid, e.tid)).or_default().push(e);
+        if e.kind == EvKind::Span && e.tid == 0 {
+            if e.name == "train.megabatch" {
+                mb_windows.entry(e.pid).or_default().push((e.ts, e.end()));
+            } else if e.name == "cluster.sync" {
+                sync_windows.entry(e.pid).or_default().push((e.ts, e.end()));
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(lanes.len());
+    for ((pid, tid), evs) in &lanes {
+        let (t0, t1) = window[pid];
+        if t1 <= t0 {
+            continue;
+        }
+        let spans: Vec<&&Ev> = evs.iter().filter(|e| e.kind == EvKind::Span).collect();
+        let mut free = vec![(t0, t1)];
+        let own = |prefix: &str| -> Vec<(f64, f64)> {
+            normalize(
+                spans
+                    .iter()
+                    .filter(|e| e.name.starts_with(prefix))
+                    .map(|e| (e.ts, e.end()))
+                    .collect(),
+            )
+        };
+        let compute = subtract(&mut free, &own("engine."));
+        let serve = subtract(&mut free, &own("serve."));
+        let mut merge_wait = subtract(&mut free, &own("train.merge"));
+        // Sync windows cover the whole process: devices hold at the
+        // barrier while their coordinator runs the tier-2 exchange.
+        let mut syncs = sync_windows.get(pid).cloned().unwrap_or_default();
+        if *tid != 0 {
+            syncs.extend(
+                spans
+                    .iter()
+                    .filter(|e| e.name == "cluster.sync")
+                    .map(|e| (e.ts, e.end())),
+            );
+        }
+        let cluster_sync = subtract(&mut free, &normalize(syncs));
+        if *tid != 0 && *tid < SERVE_TID_BASE {
+            // Device lane inside a mega-batch window but not stepping:
+            // stalled on the barrier.
+            let mbs = normalize(mb_windows.get(pid).cloned().unwrap_or_default());
+            merge_wait += subtract(&mut free, &mbs);
+        }
+        out.push(LaneAttribution {
+            pid: *pid,
+            tid: *tid,
+            total: t1 - t0,
+            compute,
+            serve,
+            merge_wait,
+            cluster_sync,
+            idle: free_len(&free),
+            spans: spans.len(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, pid: u32, tid: u32, ts: f64, dur: f64) -> Ev {
+        Ev {
+            name: name.to_string(),
+            cat: String::new(),
+            pid,
+            tid,
+            ts,
+            dur,
+            kind: EvKind::Span,
+            args: Vec::new(),
+        }
+    }
+
+    fn instant(name: &str, pid: u32, tid: u32, ts: f64) -> Ev {
+        Ev { kind: EvKind::Instant, ..span(name, pid, tid, ts, 0.0) }
+    }
+
+    #[test]
+    fn interval_subtraction_is_exact() {
+        let mut free = vec![(0.0, 10.0)];
+        let removed = subtract(&mut free, &normalize(vec![(2.0, 4.0), (3.0, 5.0), (8.0, 12.0)]));
+        assert!((removed - 5.0).abs() < 1e-12, "removed {removed}");
+        assert_eq!(free, vec![(0.0, 2.0), (5.0, 8.0)]);
+        // Subtracting the same cuts again removes nothing.
+        let again = subtract(&mut free, &normalize(vec![(2.0, 5.0)]));
+        assert_eq!(again, 0.0);
+    }
+
+    #[test]
+    fn device_lane_partitions_into_compute_stall_sync_idle() {
+        // Coordinator: one mega-batch window [0,6], a sync [6,7].
+        // Device (tid 1): two steps [0,2] and [3,5] inside the window.
+        let events = vec![
+            span("train.megabatch", 0, 0, 0.0, 6.0),
+            span("cluster.sync", 0, 0, 6.0, 1.0),
+            span("engine.step", 0, 1, 0.0, 2.0),
+            span("engine.step", 0, 1, 3.0, 2.0),
+            instant("train.pool", 0, 0, 0.0),
+        ];
+        let lanes = attribute(&events);
+        assert_eq!(lanes.len(), 2);
+        let dev = lanes.iter().find(|l| l.tid == 1).unwrap();
+        assert!((dev.total - 7.0).abs() < 1e-12);
+        assert!((dev.compute - 4.0).abs() < 1e-12);
+        // Gaps [2,3] and [5,6] sit inside the mega-batch window → stall.
+        assert!((dev.merge_wait - 2.0).abs() < 1e-12, "stall {}", dev.merge_wait);
+        assert!((dev.cluster_sync - 1.0).abs() < 1e-12);
+        assert_eq!(dev.idle, 0.0);
+        assert!((dev.category_sum() - dev.total).abs() < 1e-9);
+        // Coordinator: megabatch on its own lane is structural → idle,
+        // sync span is cluster-sync.
+        let coord = lanes.iter().find(|l| l.tid == 0).unwrap();
+        assert!((coord.cluster_sync - 1.0).abs() < 1e-12);
+        assert!((coord.idle - 6.0).abs() < 1e-12);
+        assert!((coord.category_sum() - coord.total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_lane_and_overlapping_spans() {
+        // Overlapping serve spans must not double-count.
+        let events = vec![
+            span("serve.batch", 0, 101, 0.0, 2.0),
+            span("serve.batch", 0, 101, 1.0, 2.0),
+            span("engine.step", 0, 1, 0.0, 4.0),
+        ];
+        let lanes = attribute(&events);
+        let srv = lanes.iter().find(|l| l.tid == 101).unwrap();
+        assert!((srv.serve - 3.0).abs() < 1e-12, "merged overlap: {}", srv.serve);
+        assert!((srv.idle - 1.0).abs() < 1e-12);
+        assert!((srv.category_sum() - srv.total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn processes_get_independent_windows() {
+        let events = vec![
+            span("engine.step", 0, 1, 0.0, 1.0),
+            span("engine.step", 3, 1, 10.0, 2.0),
+        ];
+        let lanes = attribute(&events);
+        assert_eq!(lanes.len(), 2);
+        assert!((lanes[0].total - 1.0).abs() < 1e-12);
+        assert!((lanes[1].total - 2.0).abs() < 1e-12);
+        assert_eq!(lanes[1].pid, 3);
+    }
+}

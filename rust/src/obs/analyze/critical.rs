@@ -1,0 +1,248 @@
+//! Critical-path extraction: per mega-batch, which device lane's
+//! `engine.step` chain determined barrier time.
+//!
+//! Each `train.megabatch` span on a coordinator lane is a barrier
+//! window: every device's update chain must finish inside it, and the
+//! window closes (after the coordinator's merge) when the *last* chain
+//! does. The gating lane is therefore the device lane whose final
+//! in-window step ends latest — ties break toward the lower tid, the
+//! same direction dispatch breaks them. Aggregating gate counts over
+//! the run yields the top-K "who gated the run" table: the paper's
+//! straggler story, measured instead of asserted.
+
+use std::collections::BTreeMap;
+
+use super::{Ev, EvKind};
+use crate::obs::chrome::{process_label, thread_label, SERVE_TID_BASE};
+
+/// Slack for window-membership comparisons (float timestamps round-trip
+/// through microsecond JSON).
+const EPS: f64 = 1e-7;
+
+/// One mega-batch barrier window and the chain that closed it.
+#[derive(Clone, Debug)]
+pub struct CritSegment {
+    /// Process lane the window belongs to.
+    pub pid: u32,
+    /// Mega-batch index (`mb` arg), when the span carried one.
+    pub mb: Option<u64>,
+    /// Window start (seconds).
+    pub start: f64,
+    /// Window length (seconds).
+    pub dur: f64,
+    /// Gating device lane (tid), when any step landed in the window.
+    pub gate_tid: Option<u32>,
+    /// Sum of the gating lane's step durations inside the window.
+    pub gate_busy: f64,
+    /// When the gating lane's last step ended (absolute seconds).
+    pub gate_end: f64,
+    /// Coordinator merge time inside the window.
+    pub merge: f64,
+    /// Tier-2 sync charged to this window (a `cluster.sync` span
+    /// starting at the window's end).
+    pub sync: f64,
+}
+
+/// One row of the aggregated "who gated the run" table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateRow {
+    /// Process lane.
+    pub pid: u32,
+    /// Device lane.
+    pub tid: u32,
+    /// Windows this lane gated.
+    pub gated: usize,
+    /// Step time the lane burned inside the windows it gated.
+    pub busy: f64,
+    /// `busy` as a share of the total windowed time it gated (1.0 =
+    /// the lane computed wall-to-wall; lower means even the gater
+    /// stalled).
+    pub share: f64,
+}
+
+impl GateRow {
+    /// `server0/gpu2`-style label.
+    pub fn label(&self) -> String {
+        format!("{}/{}", process_label(self.pid), thread_label(self.tid))
+    }
+}
+
+/// Extract one [`CritSegment`] per `train.megabatch` window, in
+/// `(pid, start)` order.
+pub fn critical_path(events: &[Ev]) -> Vec<CritSegment> {
+    let mut segs = Vec::new();
+    for w in events
+        .iter()
+        .filter(|e| e.kind == EvKind::Span && e.tid == 0 && e.name == "train.megabatch")
+    {
+        let (ws, we) = (w.ts, w.end());
+        // Per device lane: (last step end, busy sum) inside the window.
+        let mut chains: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+        let mut merge = 0.0;
+        let mut sync = 0.0;
+        for e in events.iter().filter(|e| e.kind == EvKind::Span && e.pid == w.pid) {
+            if e.tid == 0 {
+                if e.name == "train.merge" && e.ts >= ws - EPS && e.end() <= we + EPS {
+                    merge += e.dur;
+                } else if e.name == "cluster.sync" && (e.ts - we).abs() < EPS {
+                    sync += e.dur;
+                }
+                continue;
+            }
+            if e.tid >= SERVE_TID_BASE || !e.name.starts_with("engine.") {
+                continue;
+            }
+            if e.ts >= ws - EPS && e.end() <= we + EPS {
+                let c = chains.entry(e.tid).or_insert((f64::NEG_INFINITY, 0.0));
+                c.0 = c.0.max(e.end());
+                c.1 += e.dur;
+            }
+        }
+        // Latest last-step end gates; ties toward the lower tid (BTreeMap
+        // iteration order makes `>` keep the first/lowest).
+        let mut gate: Option<(u32, f64, f64)> = None;
+        for (&tid, &(last_end, busy)) in &chains {
+            let better = match gate {
+                None => true,
+                Some((_, end, _)) => last_end > end + EPS,
+            };
+            if better {
+                gate = Some((tid, last_end, busy));
+            }
+        }
+        segs.push(CritSegment {
+            pid: w.pid,
+            mb: w.arg_num("mb").map(|x| x as u64),
+            start: ws,
+            dur: w.dur,
+            gate_tid: gate.map(|(tid, _, _)| tid),
+            gate_busy: gate.map_or(0.0, |(_, _, busy)| busy),
+            gate_end: gate.map_or(ws, |(_, end, _)| end),
+            merge,
+            sync,
+        });
+    }
+    segs.sort_by(|a, b| a.pid.cmp(&b.pid).then(a.start.total_cmp(&b.start)));
+    segs
+}
+
+/// Aggregate segments into the top-K gaters table: lanes ranked by
+/// windows gated (then gated-window busy time), `share` = busy / gated
+/// windowed time.
+pub fn top_gaters(segs: &[CritSegment], k: usize) -> Vec<GateRow> {
+    let mut agg: BTreeMap<(u32, u32), (usize, f64, f64)> = BTreeMap::new();
+    for s in segs {
+        if let Some(tid) = s.gate_tid {
+            let e = agg.entry((s.pid, tid)).or_insert((0, 0.0, 0.0));
+            e.0 += 1;
+            e.1 += s.gate_busy;
+            e.2 += s.dur;
+        }
+    }
+    let mut rows: Vec<GateRow> = agg
+        .into_iter()
+        .map(|((pid, tid), (gated, busy, windowed))| GateRow {
+            pid,
+            tid,
+            gated,
+            busy,
+            share: if windowed > 0.0 { busy / windowed } else { 0.0 },
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.gated
+            .cmp(&a.gated)
+            .then(b.busy.total_cmp(&a.busy))
+            .then(a.pid.cmp(&b.pid))
+            .then(a.tid.cmp(&b.tid))
+    });
+    rows.truncate(k);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::analyze::AVal;
+
+    fn span(name: &str, pid: u32, tid: u32, ts: f64, dur: f64) -> Ev {
+        Ev {
+            name: name.to_string(),
+            cat: String::new(),
+            pid,
+            tid,
+            ts,
+            dur,
+            kind: EvKind::Span,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn slowest_chain_gates_the_window() {
+        let mut mb = span("train.megabatch", 0, 0, 0.0, 5.0);
+        mb.args.push(("mb".to_string(), AVal::Num(3.0)));
+        let events = vec![
+            mb,
+            // Device 0 (tid 1): done at 2.0.
+            span("engine.step", 0, 1, 0.0, 2.0),
+            // Device 2 (tid 3): done at 4.5 — the gater.
+            span("engine.step", 0, 3, 0.0, 2.5),
+            span("engine.step", 0, 3, 2.5, 2.0),
+            span("train.merge", 0, 0, 4.5, 0.5),
+            span("cluster.sync", 0, 0, 5.0, 0.25),
+        ];
+        let segs = critical_path(&events);
+        assert_eq!(segs.len(), 1);
+        let s = &segs[0];
+        assert_eq!(s.mb, Some(3));
+        assert_eq!(s.gate_tid, Some(3));
+        assert!((s.gate_busy - 4.5).abs() < 1e-12);
+        assert!((s.gate_end - 4.5).abs() < 1e-12);
+        assert!((s.merge - 0.5).abs() < 1e-12);
+        assert!((s.sync - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_break_toward_the_lower_tid() {
+        let events = vec![
+            span("train.megabatch", 0, 0, 0.0, 2.0),
+            span("engine.step", 0, 2, 0.0, 2.0),
+            span("engine.step", 0, 1, 0.0, 2.0),
+        ];
+        let segs = critical_path(&events);
+        assert_eq!(segs[0].gate_tid, Some(1));
+    }
+
+    #[test]
+    fn top_gaters_ranks_by_windows_then_busy() {
+        let events = vec![
+            span("train.megabatch", 0, 0, 0.0, 2.0),
+            span("engine.step", 0, 1, 0.0, 2.0),
+            span("train.megabatch", 0, 0, 2.0, 3.0),
+            span("engine.step", 0, 2, 2.0, 3.0),
+            span("train.megabatch", 0, 0, 5.0, 3.0),
+            span("engine.step", 0, 2, 5.0, 3.0),
+        ];
+        let rows = top_gaters(&critical_path(&events), 8);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].tid, rows[0].gated), (2, 2));
+        assert_eq!((rows[1].tid, rows[1].gated), (1, 1));
+        assert!((rows[0].share - 1.0).abs() < 1e-12, "wall-to-wall gater");
+        let truncated = top_gaters(&critical_path(&events), 1);
+        assert_eq!(truncated.len(), 1);
+    }
+
+    #[test]
+    fn serve_lanes_and_other_processes_never_gate() {
+        let events = vec![
+            span("train.megabatch", 0, 0, 0.0, 2.0),
+            span("serve.batch", 0, 101, 0.0, 5.0),
+            span("engine.step", 1, 1, 0.0, 2.0),
+        ];
+        let segs = critical_path(&events);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].gate_tid, None, "no in-window device steps");
+        assert!(top_gaters(&segs, 4).is_empty());
+    }
+}

@@ -1,0 +1,270 @@
+//! Decision audit: read scheduler instants back as structured decision
+//! records and reconstruct *why* each action was taken.
+//!
+//! Every adaptive move in the tree already announces itself as an
+//! instant event — pool churn, drift re-targets, Algorithm-1 rescales,
+//! serve-mode flips, lease grants/preempts, cadence changes,
+//! demote/promote, rack churn. The emitters attach their inputs
+//! (calibrated speeds, old/new grids, p95 vs SLO, fair-share targets),
+//! so [`explain`] can render a one-line "why" per decision without the
+//! RunLog, and [`explain_query`] filters the audit log by substring —
+//! the `report --explain` CLI path.
+
+use super::{Ev, EvKind};
+use crate::obs::chrome::process_label;
+
+/// Instant names that are decisions (as opposed to samples like
+/// `train.eval` or markers like `serve.churn`'s request-drop cousins).
+const DECISION_NAMES: &[&str] = &[
+    "cluster.cadence",
+    "cluster.demote",
+    "cluster.promote",
+    "cluster.rack_down",
+    "cluster.rack_up",
+    "fleet.lease",
+    "serve.churn",
+    "serve.mode",
+    "train.pool",
+    "train.retarget",
+    "train.scale",
+];
+
+/// One scheduler decision, lifted from its instant event.
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    /// Virtual time of the decision (seconds).
+    pub at: f64,
+    /// Process lane it applies to.
+    pub pid: u32,
+    /// Thread lane it was stamped on.
+    pub tid: u32,
+    /// Decision kind — the instant's event name.
+    pub kind: String,
+    /// The inputs and chosen action, as emitted.
+    pub args: Vec<(String, super::AVal)>,
+}
+
+impl DecisionRecord {
+    fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_str())
+    }
+
+    fn arg_num(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_num())
+    }
+}
+
+/// Extract the decision records from an event stream, in `(at, pid,
+/// kind)` order.
+pub fn decisions(events: &[Ev]) -> Vec<DecisionRecord> {
+    let mut out: Vec<DecisionRecord> = events
+        .iter()
+        .filter(|e| e.kind == EvKind::Instant && DECISION_NAMES.contains(&e.name.as_str()))
+        .map(|e| DecisionRecord {
+            at: e.ts,
+            pid: e.pid,
+            tid: e.tid,
+            kind: e.name.clone(),
+            args: e.args.clone(),
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        a.at.total_cmp(&b.at).then(a.pid.cmp(&b.pid)).then(a.kind.cmp(&b.kind))
+    });
+    out
+}
+
+/// One-line reconstruction of why the decision was taken, from the
+/// inputs its emitter attached. Falls back to the raw args when a
+/// record predates the structured emitters.
+pub fn explain(d: &DecisionRecord) -> String {
+    // An explicit "why" from the emitter wins outright.
+    if let Some(why) = d.arg_str("why") {
+        return why.to_string();
+    }
+    let reason = d.arg_str("reason").unwrap_or("");
+    match d.kind.as_str() {
+        "train.retarget" => {
+            let (from, to) = (d.arg_str("from").unwrap_or("?"), d.arg_str("to").unwrap_or("?"));
+            format!("{reason}: re-seeded batch grid {from} -> {to}")
+        }
+        "train.scale" => format!(
+            "Algorithm 1 rescaled the grid {} -> {} at mb {}",
+            d.arg_str("from").unwrap_or("?"),
+            d.arg_str("to").unwrap_or("?"),
+            d.arg_num("mb").map_or("?".to_string(), |x| format!("{}", x as u64)),
+        ),
+        "train.pool" | "serve.churn" => format!(
+            "device {} {}: {reason}",
+            d.arg_num("device").map_or("?".to_string(), |x| format!("{}", x as i64)),
+            d.arg_str("action").unwrap_or("?"),
+        ),
+        "serve.mode" => format!(
+            "flipped to {} inference: windowed p95 {:.4}s vs SLO {:.4}s (ratio {:.2})",
+            d.arg_str("action").unwrap_or("?"),
+            d.arg_num("p95_s").unwrap_or(f64::NAN),
+            d.arg_num("slo_s").unwrap_or(f64::NAN),
+            d.arg_num("ratio").unwrap_or(f64::NAN),
+        ),
+        "fleet.lease" => format!(
+            "tenant {} {} device {} (fair-share target {}): {reason}",
+            d.arg_num("tenant").map_or("?".to_string(), |x| format!("{}", x as u64)),
+            d.arg_str("action").unwrap_or("?"),
+            d.arg_num("device").map_or("?".to_string(), |x| format!("{}", x as i64)),
+            d.arg_num("target").map_or("?".to_string(), |x| format!("{}", x as u64)),
+        ),
+        "cluster.cadence" => format!(
+            "sync cadence {} -> {}: sync cost {:.4}s vs {:.4}s/mb compute, comm target {:.2} \
+             (bottleneck x{:.2})",
+            d.arg_num("from").map_or("?".to_string(), |x| format!("{}", x as u64)),
+            d.arg_num("to").map_or("?".to_string(), |x| format!("{}", x as u64)),
+            d.arg_num("sync_secs").unwrap_or(f64::NAN),
+            d.arg_num("per_mb").unwrap_or(f64::NAN),
+            d.arg_num("comm_target").unwrap_or(f64::NAN),
+            d.arg_num("bottleneck").unwrap_or(f64::NAN),
+        ),
+        "cluster.demote" => format!(
+            "{} demoted to async catch-up: measured {:.3} mb/s under floor {:.3}",
+            process_label(d.pid),
+            d.arg_num("rate").unwrap_or(f64::NAN),
+            d.arg_num("floor").unwrap_or(f64::NAN),
+        ),
+        "cluster.promote" => format!(
+            "{} rejoins the barrier: measured {:.3} mb/s over floor {:.3}",
+            process_label(d.pid),
+            d.arg_num("rate").unwrap_or(f64::NAN),
+            d.arg_num("floor").unwrap_or(f64::NAN),
+        ),
+        "cluster.rack_down" | "cluster.rack_up" => {
+            let dir = if d.kind.ends_with("down") { "lost" } else { "recovered" };
+            format!("{} {dir} at mega-batch {}", process_label(d.pid), {
+                d.arg_num("mega_batch")
+                    .or_else(|| d.arg_num("mb"))
+                    .map_or("?".to_string(), |x| format!("{}", x as u64))
+            })
+        }
+        _ => {
+            let args: Vec<String> =
+                d.args.iter().map(|(k, v)| format!("{k}={}", v.display())).collect();
+            args.join(" ")
+        }
+    }
+}
+
+/// Filter the audit log: records whose kind or explanation contains
+/// `pattern` (case-insensitive), rendered one per line as
+/// `t=<at> <server>: <kind>: <why>`. Empty pattern matches everything.
+pub fn explain_query(records: &[DecisionRecord], pattern: &str) -> Vec<String> {
+    let needle = pattern.to_lowercase();
+    records
+        .iter()
+        .filter_map(|d| {
+            let why = explain(d);
+            let hay = format!("{} {}", d.kind, why).to_lowercase();
+            hay.contains(&needle).then(|| {
+                format!("t={:.6} {}: {}: {}", d.at, process_label(d.pid), d.kind, why)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::analyze::AVal;
+
+    fn rec(kind: &str, args: Vec<(&str, AVal)>) -> DecisionRecord {
+        DecisionRecord {
+            at: 1.5,
+            pid: 0,
+            tid: 0,
+            kind: kind.to_string(),
+            args: args.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn why_arg_wins_outright() {
+        let d = rec(
+            "train.retarget",
+            vec![
+                ("reason", AVal::Str("step-drift".into())),
+                ("why", AVal::Str("device 2: b 128 -> 72".into())),
+            ],
+        );
+        assert_eq!(explain(&d), "device 2: b 128 -> 72");
+    }
+
+    #[test]
+    fn kind_specific_explanations() {
+        let lease = rec(
+            "fleet.lease",
+            vec![
+                ("tenant", AVal::Num(1.0)),
+                ("device", AVal::Num(3.0)),
+                ("target", AVal::Num(2.0)),
+                ("action", AVal::Str("preempt".into())),
+                ("reason", AVal::Str("p95 12.00ms > SLO 8.00ms for 3 windows".into())),
+            ],
+        );
+        assert_eq!(
+            explain(&lease),
+            "tenant 1 preempt device 3 (fair-share target 2): p95 12.00ms > SLO 8.00ms for 3 \
+             windows"
+        );
+        let mode = rec(
+            "serve.mode",
+            vec![
+                ("action", AVal::Str("approx".into())),
+                ("p95_s", AVal::Num(0.0095)),
+                ("slo_s", AVal::Num(0.01)),
+                ("ratio", AVal::Num(0.25)),
+            ],
+        );
+        assert_eq!(
+            explain(&mode),
+            "flipped to approx inference: windowed p95 0.0095s vs SLO 0.0100s (ratio 0.25)"
+        );
+        let unknown = rec("train.pool", vec![]);
+        assert_eq!(explain(&unknown), "device ? ?: ");
+    }
+
+    #[test]
+    fn decisions_filter_and_sort() {
+        use crate::obs::analyze::{Ev, EvKind};
+        let instant = |name: &str, pid: u32, ts: f64| Ev {
+            name: name.to_string(),
+            cat: String::new(),
+            pid,
+            tid: 0,
+            ts,
+            dur: 0.0,
+            kind: EvKind::Instant,
+            args: Vec::new(),
+        };
+        let span = Ev { kind: EvKind::Span, dur: 1.0, ..instant("train.megabatch", 0, 0.0) };
+        let events = vec![
+            instant("train.eval", 0, 0.5), // sample, not a decision
+            instant("train.scale", 1, 2.0),
+            instant("train.pool", 0, 2.0),
+            span,
+        ];
+        let recs = decisions(&events);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].kind, "train.pool", "(at, pid) order");
+        assert_eq!(recs[1].kind, "train.scale");
+    }
+
+    #[test]
+    fn explain_query_filters_case_insensitively() {
+        let recs = vec![
+            rec("serve.mode", vec![("action", AVal::Str("approx".into()))]),
+            rec("cluster.demote", vec![("rate", AVal::Num(0.5)), ("floor", AVal::Num(0.8))]),
+        ];
+        let hits = explain_query(&recs, "DEMOTE");
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].starts_with("t=1.500000 server0: cluster.demote:"), "{}", hits[0]);
+        assert_eq!(explain_query(&recs, "").len(), 2, "empty pattern matches all");
+        assert!(explain_query(&recs, "zzz").is_empty());
+    }
+}

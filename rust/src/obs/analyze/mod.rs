@@ -1,0 +1,394 @@
+//! Post-hoc trace analysis: turn the PR 8 telemetry (span stream +
+//! registry snapshot) into answers.
+//!
+//! Three analyses, surfaced through the `report` CLI subcommand:
+//!
+//! 1. **Per-lane time attribution** ([`attribution`]): each lane's run
+//!    window decomposed into compute / merge-wait (barrier stall) /
+//!    cluster-sync / serve / idle. The categories are carved out of one
+//!    shared free-interval list, so by construction they *partition* the
+//!    lane's window — the invariant the property tests pin.
+//! 2. **Critical-path extraction** ([`critical`]): per mega-batch, the
+//!    device lane whose last `engine.step` determined barrier time,
+//!    aggregated into a top-K "who gated the run" table — the paper's
+//!    straggler story, quantified from the trace alone.
+//! 3. **Decision audit** ([`decision`]): scheduler instants (dispatch
+//!    pool churn, batch/sparsity re-targets, cadence changes, lease
+//!    preemptions, serve-mode flips) read back as structured decision
+//!    records, with an `explain` query reconstructing *why* each action
+//!    was taken from the inputs the emitters now attach.
+//!
+//! The engine consumes either a live [`ObsHandle`] (the `--trace` path)
+//! or an exported Chrome-trace JSON file ([`TraceData::parse_chrome`]),
+//! so `report` works post-hoc on any trace a previous run wrote. All
+//! outputs are deterministic: events are re-sorted on stable keys and
+//! every float renders with a fixed format.
+
+pub mod attribution;
+pub mod critical;
+pub mod decision;
+pub mod report;
+
+pub use attribution::{attribute, LaneAttribution};
+pub use critical::{critical_path, top_gaters, CritSegment, GateRow};
+pub use decision::{decisions, explain, explain_query, DecisionRecord};
+pub use report::{diff, render_diff, DiffThresholds, Regression, Report};
+
+use crate::obs::sink::{ArgVal, EventKind, TraceEvent};
+use crate::obs::ObsHandle;
+use crate::util::json::Json;
+use anyhow::bail;
+
+/// Analysis-side argument value: an owned mirror of
+/// [`ArgVal`] with all numeric variants collapsed to `f64` (Chrome-trace
+/// JSON cannot distinguish them anyway).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AVal {
+    /// Any numeric argument (`U`/`I`/`F` on the emit side).
+    Num(f64),
+    /// Boolean argument.
+    Bool(bool),
+    /// String argument.
+    Str(String),
+}
+
+impl AVal {
+    /// Numeric value, if this argument is one.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            AVal::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this argument is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            AVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Render for report tables: whole numbers without a fraction,
+    /// everything else with six decimals (matches the report's fixed
+    /// float format).
+    pub fn display(&self) -> String {
+        match self {
+            AVal::Num(x) if x.fract() == 0.0 && x.abs() < 1e15 => format!("{}", *x as i64),
+            AVal::Num(x) => format!("{x:.6}"),
+            AVal::Bool(b) => b.to_string(),
+            AVal::Str(s) => s.clone(),
+        }
+    }
+}
+
+fn aval_of(v: &ArgVal) -> AVal {
+    match v {
+        ArgVal::U(n) => AVal::Num(*n as f64),
+        ArgVal::I(n) => AVal::Num(*n as f64),
+        ArgVal::F(x) => AVal::Num(*x),
+        ArgVal::B(b) => AVal::Bool(*b),
+        ArgVal::S(s) => AVal::Str(s.clone()),
+    }
+}
+
+/// Whether an event is a span or an instant (analysis-side mirror of
+/// [`EventKind`], decoupled so parsed traces and live sinks share one
+/// type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// Complete event (`ph: "X"`): has a duration.
+    Span,
+    /// Instant event (`ph: "i"`): a point in time.
+    Instant,
+}
+
+/// One analysis-side event: owned strings so it can come from a live
+/// sink or a parsed trace file alike. Times are in seconds.
+#[derive(Clone, Debug)]
+pub struct Ev {
+    /// Event name (`train.megabatch`, `engine.step`, ...).
+    pub name: String,
+    /// Subsystem category (`train`, `engine`, `serve`, ...).
+    pub cat: String,
+    /// Process lane (server / tenant).
+    pub pid: u32,
+    /// Thread lane (0 = coordinator, `1 + d` = GPU d, `101 + d` = serve
+    /// replica).
+    pub tid: u32,
+    /// Start time, seconds.
+    pub ts: f64,
+    /// Duration, seconds (0 for instants).
+    pub dur: f64,
+    /// Span or instant.
+    pub kind: EvKind,
+    /// Arguments, in emit order.
+    pub args: Vec<(String, AVal)>,
+}
+
+impl Ev {
+    /// End time (`ts + dur`).
+    pub fn end(&self) -> f64 {
+        self.ts + self.dur
+    }
+
+    /// Look up an argument by key.
+    pub fn arg(&self, key: &str) -> Option<&AVal> {
+        self.args.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Numeric argument by key.
+    pub fn arg_num(&self, key: &str) -> Option<f64> {
+        self.arg(key).and_then(|v| v.as_num())
+    }
+
+    /// String argument by key.
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.arg(key).and_then(|v| v.as_str())
+    }
+}
+
+fn ev_of(e: &TraceEvent) -> Ev {
+    Ev {
+        name: e.name.to_string(),
+        cat: e.subsystem.name().to_string(),
+        pid: e.pid,
+        tid: e.tid,
+        ts: e.ts,
+        dur: e.dur,
+        kind: match e.kind {
+            EventKind::Span => EvKind::Span,
+            EventKind::Instant => EvKind::Instant,
+        },
+        args: e.args.iter().map(|(k, v)| (k.to_string(), aval_of(v))).collect(),
+    }
+}
+
+/// A full analysis input: the event stream plus the truncation and
+/// registry context the analyses need to stay honest about what they
+/// saw.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    /// Where this trace came from (file path or "live sink") — shown in
+    /// report headers.
+    pub label: String,
+    /// Events sorted by `(ts, pid, tid, name)` for deterministic
+    /// analysis regardless of emit interleaving.
+    pub events: Vec<Ev>,
+    /// Ring-buffer evictions: > 0 means the analyses below run over a
+    /// truncated window.
+    pub dropped: u64,
+    /// `(opened, closed)` span balance, when known (live sinks only —
+    /// exported traces don't carry it).
+    pub balance: Option<(u64, u64)>,
+    /// Registry counters/gauges at capture time, name-ordered.
+    pub counters: Vec<(String, f64)>,
+}
+
+fn sort_events(events: &mut [Ev]) {
+    events.sort_by(|a, b| {
+        a.ts.total_cmp(&b.ts)
+            .then(a.pid.cmp(&b.pid))
+            .then(a.tid.cmp(&b.tid))
+            .then(a.name.cmp(&b.name))
+    });
+}
+
+impl TraceData {
+    /// Capture a live handle: sink events + drop tally + span balance +
+    /// counter/gauge registry rows (histogram expansions are series, not
+    /// point samples — they stay in the RunLog metrics section).
+    pub fn from_handle(label: &str, obs: &ObsHandle) -> TraceData {
+        let mut events: Vec<Ev> = obs.sink().events().iter().map(ev_of).collect();
+        sort_events(&mut events);
+        let counters = obs
+            .registry()
+            .snapshot()
+            .into_iter()
+            .filter(|r| r.kind == "counter" || r.kind == "gauge")
+            .map(|r| (r.name, r.value))
+            .collect();
+        TraceData {
+            label: label.to_string(),
+            events,
+            dropped: obs.sink().dropped(),
+            balance: Some(obs.sink().balance()),
+            counters,
+        }
+    }
+
+    /// Parse an exported Chrome-trace file (the output of `--trace` /
+    /// [`crate::obs::chrome::render_events`]). `X` rows become spans,
+    /// `i` rows instants, `C` rows counter samples (last sample per name
+    /// wins), `M` metadata is skipped. Times convert back from
+    /// microseconds to seconds.
+    pub fn parse_chrome(label: &str, root: &Json) -> crate::Result<TraceData> {
+        let rows = match root.get("traceEvents").as_arr() {
+            Some(a) => a,
+            None => bail!("trace missing top-level \"traceEvents\" array"),
+        };
+        let mut events = Vec::new();
+        let mut counters: Vec<(String, f64)> = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            let ph = match row.get("ph").as_str() {
+                Some(p) => p,
+                None => bail!("event {i}: missing \"ph\""),
+            };
+            let name = row.get("name").as_str().unwrap_or("").to_string();
+            let pid = row.get("pid").as_f64().unwrap_or(0.0) as u32;
+            let tid = row.get("tid").as_f64().unwrap_or(0.0) as u32;
+            let ts = row.get("ts").as_f64().unwrap_or(0.0) / 1e6;
+            match ph {
+                "X" | "i" => {
+                    let mut args = Vec::new();
+                    if let Some(obj) = row.get("args").as_obj() {
+                        for (k, v) in obj {
+                            let val = if let Some(x) = v.as_f64() {
+                                AVal::Num(x)
+                            } else if let Some(b) = v.as_bool() {
+                                AVal::Bool(b)
+                            } else if let Some(s) = v.as_str() {
+                                AVal::Str(s.to_string())
+                            } else {
+                                continue;
+                            };
+                            args.push((k.clone(), val));
+                        }
+                    }
+                    events.push(Ev {
+                        name,
+                        cat: row.get("cat").as_str().unwrap_or("").to_string(),
+                        pid,
+                        tid,
+                        ts,
+                        dur: if ph == "X" {
+                            row.get("dur").as_f64().unwrap_or(0.0) / 1e6
+                        } else {
+                            0.0
+                        },
+                        kind: if ph == "X" { EvKind::Span } else { EvKind::Instant },
+                        args,
+                    });
+                }
+                "C" => {
+                    let value = row
+                        .get("args")
+                        .as_obj()
+                        .and_then(|o| o.values().find_map(|v| v.as_f64()))
+                        .unwrap_or(0.0);
+                    match counters.iter_mut().find(|(n, _)| *n == name) {
+                        Some(slot) => slot.1 = value,
+                        None => counters.push((name, value)),
+                    }
+                }
+                "M" => {}
+                other => bail!("event {i}: unsupported phase {other:?}"),
+            }
+        }
+        sort_events(&mut events);
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(TraceData {
+            label: label.to_string(),
+            events,
+            dropped: root.get("droppedEvents").as_f64().unwrap_or(0.0) as u64,
+            balance: None,
+            counters,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::{Level, Subsystem, TraceSink};
+    use crate::obs::Registry;
+    use std::sync::Arc;
+
+    fn handle_with_events() -> ObsHandle {
+        let cfg = crate::config::ObsConfig { enabled: true, ..Default::default() };
+        let h = ObsHandle::from_config(&cfg, false);
+        h.sink().span_at(
+            Subsystem::Engine,
+            Level::Info,
+            "engine.step",
+            0,
+            1,
+            1.0,
+            0.5,
+            vec![("batch", ArgVal::U(64)), ("why", ArgVal::S("x".into()))],
+        );
+        h.sink().instant_at(
+            Subsystem::Train,
+            Level::Info,
+            "train.retarget",
+            0,
+            0,
+            1.5,
+            vec![("reason", ArgVal::S("step-drift".into()))],
+        );
+        h.counter("train.updates").add(7);
+        h
+    }
+
+    #[test]
+    fn from_handle_captures_events_balance_and_counters() {
+        let h = handle_with_events();
+        let td = TraceData::from_handle("live", &h);
+        assert_eq!(td.events.len(), 2);
+        assert_eq!(td.events[0].name, "engine.step");
+        assert_eq!(td.events[0].kind, EvKind::Span);
+        assert_eq!(td.events[0].arg_num("batch"), Some(64.0));
+        assert_eq!(td.events[1].kind, EvKind::Instant);
+        assert_eq!(td.balance, Some((1, 1)));
+        assert_eq!(td.counters, vec![("train.updates".to_string(), 7.0)]);
+    }
+
+    #[test]
+    fn parse_chrome_round_trips_a_rendered_sink() {
+        let h = handle_with_events();
+        let counters = vec![("train.updates".to_string(), 7.0)];
+        let text = crate::obs::chrome::render_events_with_counters(
+            &h.sink().events(),
+            h.sink().dropped(),
+            &counters,
+        );
+        let root = Json::parse(&text).unwrap();
+        let td = TraceData::parse_chrome("file", &root).unwrap();
+        assert_eq!(td.events.len(), 2);
+        let step = &td.events[0];
+        assert_eq!(step.name, "engine.step");
+        assert_eq!(step.cat, "engine");
+        assert!((step.ts - 1.0).abs() < 1e-9, "µs→s round trip: {}", step.ts);
+        assert!((step.dur - 0.5).abs() < 1e-9);
+        assert_eq!(step.arg_str("why"), Some("x"));
+        assert_eq!(td.counters, counters);
+        assert_eq!(td.dropped, 0);
+        assert_eq!(td.balance, None, "exported traces don't carry balance");
+    }
+
+    #[test]
+    fn parse_chrome_rejects_garbage() {
+        assert!(TraceData::parse_chrome("f", &Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"traceEvents":[{"ph":"q"}]}"#).unwrap();
+        assert!(TraceData::parse_chrome("f", &bad).is_err());
+    }
+
+    #[test]
+    fn parse_chrome_reads_dropped_events() {
+        let root =
+            Json::parse(r#"{"traceEvents":[],"droppedEvents":12}"#).unwrap();
+        let td = TraceData::parse_chrome("f", &root).unwrap();
+        assert_eq!(td.dropped, 12);
+    }
+
+    #[test]
+    fn events_sort_on_stable_keys() {
+        let s = TraceSink::new(true, u16::MAX, Level::Info, 64);
+        s.instant_at(Subsystem::Train, Level::Info, "b", 1, 0, 1.0, Vec::new());
+        s.instant_at(Subsystem::Train, Level::Info, "a", 0, 0, 1.0, Vec::new());
+        let obs = ObsHandle::from_parts_for_tests(Arc::new(s), Arc::new(Registry::new()));
+        let td = TraceData::from_handle("live", &obs);
+        assert_eq!(td.events[0].pid, 0, "ties on ts sort by pid");
+        assert_eq!(td.events[1].pid, 1);
+    }
+}

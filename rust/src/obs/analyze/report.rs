@@ -1,0 +1,559 @@
+//! Deterministic run reports and the `report --diff` regression gate.
+//!
+//! A [`Report`] condenses one run's trace (or RunLog JSON) into the
+//! headline numbers the paper argues about — makespan, update balance,
+//! serve p99 — plus the three analyses (attribution, critical path,
+//! decision audit). [`Report::to_markdown`] renders it with fixed float
+//! formats over pre-sorted data, so virtual-mode reports are
+//! bit-deterministic; [`diff`] compares two reports against fixed
+//! thresholds and returns the regressions, the CLI's non-zero-exit CI
+//! gate.
+
+use super::attribution::{attribute, LaneAttribution};
+use super::critical::{critical_path, top_gaters, CritSegment};
+use super::decision::{decisions, explain, DecisionRecord};
+use super::TraceData;
+use crate::obs::chrome::{process_label, SERVE_TID_BASE};
+use crate::util::json::Json;
+use anyhow::Context;
+use std::collections::BTreeMap;
+
+/// Decisions shown inline in the markdown audit table; the rest is
+/// summarized (use `--explain` to filter the full log).
+const MAX_DECISION_ROWS: usize = 40;
+
+/// One run, analyzed.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Where the data came from (file path or "live sink").
+    pub label: String,
+    /// Events analyzed (0 for RunLog-sourced reports).
+    pub events: usize,
+    /// Ring evictions at capture time.
+    pub dropped: u64,
+    /// `(opened, closed)` span balance, when known.
+    pub balance: Option<(u64, u64)>,
+    /// `max end − min ts` over the trace (or the last row's clock).
+    pub makespan: f64,
+    /// Per-lane attribution, `(pid, tid)`-sorted.
+    pub lanes: Vec<LaneAttribution>,
+    /// Per-mega-batch critical-path segments.
+    pub crit: Vec<CritSegment>,
+    /// Decision audit log, time-ordered.
+    pub decisions: Vec<DecisionRecord>,
+    /// Registry counters/gauges at capture time, name-ordered.
+    pub counters: Vec<(String, f64)>,
+    /// `max/min` update count across device lanes that stepped.
+    pub update_balance: Option<f64>,
+    /// p99 request latency over `serve.batch` spans (queueing included).
+    pub p99: Option<f64>,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 * p).ceil() as usize).max(1) - 1;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl Report {
+    /// Analyze a trace (live or parsed).
+    pub fn from_trace(td: &TraceData) -> Report {
+        let (mut t0, mut t1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut updates: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+        let mut latencies: Vec<f64> = Vec::new();
+        for e in &td.events {
+            t0 = t0.min(e.ts);
+            t1 = t1.max(e.end());
+            if e.name.starts_with("engine.")
+                && e.tid >= 1
+                && e.tid < SERVE_TID_BASE
+                && e.kind == super::EvKind::Span
+            {
+                *updates.entry((e.pid, e.tid)).or_insert(0) += 1;
+            }
+            if e.name == "serve.batch" && e.kind == super::EvKind::Span {
+                latencies.push(e.arg_num("queued_s").unwrap_or(0.0) + e.dur);
+            }
+        }
+        let update_balance = (!updates.is_empty()).then(|| {
+            let max = updates.values().copied().max().unwrap_or(1).max(1) as f64;
+            let min = updates.values().copied().min().unwrap_or(1).max(1) as f64;
+            max / min
+        });
+        latencies.sort_by(|a, b| a.total_cmp(b));
+        Report {
+            label: td.label.clone(),
+            events: td.events.len(),
+            dropped: td.dropped,
+            balance: td.balance,
+            makespan: if t1 > t0 { t1 - t0 } else { 0.0 },
+            lanes: attribute(&td.events),
+            crit: critical_path(&td.events),
+            decisions: decisions(&td.events),
+            counters: td.counters.clone(),
+            update_balance,
+            p99: (!latencies.is_empty()).then(|| percentile(&latencies, 0.99)),
+        }
+    }
+
+    /// Reduced report from a RunLog JSON export (no spans → no
+    /// attribution or critical path, but the headline numbers and the
+    /// exported metrics still diff).
+    pub fn from_run_json(label: &str, root: &Json) -> crate::Result<Report> {
+        let rows = root
+            .get("rows")
+            .as_arr()
+            .with_context(|| format!("{label}: not a RunLog export (no \"rows\")"))?;
+        let makespan = rows.last().map(|r| r.get("clock").as_f64().unwrap_or(0.0)).unwrap_or(0.0);
+        let mut per_device: Vec<u64> = Vec::new();
+        for r in rows {
+            if let Some(us) = r.get("updates").as_arr() {
+                per_device.resize(per_device.len().max(us.len()), 0);
+                for (d, u) in us.iter().enumerate() {
+                    per_device[d] += u.as_f64().unwrap_or(0.0) as u64;
+                }
+            }
+        }
+        let stepped: Vec<u64> = per_device.into_iter().filter(|&u| u > 0).collect();
+        let update_balance = (!stepped.is_empty()).then(|| {
+            let max = *stepped.iter().max().unwrap() as f64;
+            let min = *stepped.iter().min().unwrap() as f64;
+            max / min
+        });
+        let mut counters: Vec<(String, f64)> = Vec::new();
+        let mut dropped = 0u64;
+        if let Some(metrics) = root.get("metrics").as_arr() {
+            for m in metrics {
+                let name = m.get("name").as_str().unwrap_or("").to_string();
+                let value = m.get("value").as_f64().unwrap_or(0.0);
+                if name == "obs.dropped_events" {
+                    dropped = value as u64;
+                }
+                let kind = m.get("kind").as_str().unwrap_or("");
+                if kind == "counter" || kind == "gauge" {
+                    counters.push((name, value));
+                }
+            }
+        }
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(Report {
+            label: label.to_string(),
+            makespan,
+            dropped,
+            counters,
+            update_balance,
+            ..Report::default()
+        })
+    }
+
+    /// Truncation-honesty warnings: non-empty means the analyses above
+    /// ran over an incomplete window (`report --strict` fails on these).
+    pub fn warnings(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.dropped > 0 {
+            out.push(format!(
+                "trace ring dropped {} events — this report covers a truncated window \
+                 (raise [obs] buffer_events)",
+                self.dropped
+            ));
+        }
+        if let Some((opened, closed)) = self.balance {
+            if opened != closed {
+                out.push(format!(
+                    "span imbalance: {opened} opened vs {closed} closed — a span guard \
+                     never closed"
+                ));
+            }
+        }
+        out
+    }
+
+    /// Render the deterministic markdown run report. `top_k` bounds the
+    /// critical-path table.
+    pub fn to_markdown(&self, top_k: usize) -> String {
+        let mut s = String::new();
+        let pct = |part: f64, total: f64| {
+            if total > 0.0 {
+                format!("{:.1}%", 100.0 * part / total)
+            } else {
+                "-".to_string()
+            }
+        };
+        s.push_str(&format!("# heterosparse run report — {}\n\n", self.label));
+        s.push_str(&format!("- events analyzed: {} (dropped: {})\n", self.events, self.dropped));
+        if let Some((opened, closed)) = self.balance {
+            s.push_str(&format!("- span balance: {opened} opened / {closed} closed\n"));
+        }
+        s.push_str(&format!("- makespan: {:.6} s\n", self.makespan));
+        if let Some(b) = self.update_balance {
+            s.push_str(&format!("- update balance (max/min per device lane): {b:.3}\n"));
+        }
+        if let Some(p) = self.p99 {
+            s.push_str(&format!("- serve p99 latency: {p:.6} s\n"));
+        }
+        let warnings = self.warnings();
+        if !warnings.is_empty() {
+            s.push_str("\n## Warnings\n\n");
+            for w in &warnings {
+                s.push_str(&format!("- {w}\n"));
+            }
+        }
+        if !self.lanes.is_empty() {
+            s.push_str("\n## Lane time attribution\n\n");
+            s.push_str("| lane | total s | compute | serve | merge-wait | cluster-sync | idle |\n");
+            s.push_str("|---|---|---|---|---|---|---|\n");
+            for l in &self.lanes {
+                s.push_str(&format!(
+                    "| {} | {:.6} | {} | {} | {} | {} | {} |\n",
+                    l.label(),
+                    l.total,
+                    pct(l.compute, l.total),
+                    pct(l.serve, l.total),
+                    pct(l.merge_wait, l.total),
+                    pct(l.cluster_sync, l.total),
+                    pct(l.idle, l.total),
+                ));
+            }
+        }
+        s.push_str("\n## Critical path — who gated the run\n\n");
+        let top = top_gaters(&self.crit, top_k);
+        if top.is_empty() {
+            s.push_str("(no mega-batch windows with device steps in this trace)\n");
+        } else {
+            s.push_str("| lane | windows gated | gating busy s | busy share of gated time |\n");
+            s.push_str("|---|---|---|---|\n");
+            for g in &top {
+                s.push_str(&format!(
+                    "| {} | {} | {:.6} | {} |\n",
+                    g.label(),
+                    g.gated,
+                    g.busy,
+                    pct(g.share, 1.0),
+                ));
+            }
+        }
+        s.push_str("\n## Decision audit\n\n");
+        if self.decisions.is_empty() {
+            s.push_str("(no decision instants in this trace)\n");
+        } else {
+            let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+            for d in &self.decisions {
+                *counts.entry(d.kind.as_str()).or_insert(0) += 1;
+            }
+            let summary: Vec<String> =
+                counts.iter().map(|(k, n)| format!("{k}={n}")).collect();
+            s.push_str(&format!(
+                "{} decisions: {}\n\n",
+                self.decisions.len(),
+                summary.join(" ")
+            ));
+            s.push_str("| t (s) | lane | kind | why |\n|---|---|---|---|\n");
+            for d in self.decisions.iter().take(MAX_DECISION_ROWS) {
+                s.push_str(&format!(
+                    "| {:.6} | {} | {} | {} |\n",
+                    d.at,
+                    process_label(d.pid),
+                    d.kind,
+                    explain(d).replace('|', "\\|"),
+                ));
+            }
+            if self.decisions.len() > MAX_DECISION_ROWS {
+                s.push_str(&format!(
+                    "\n… and {} more (filter with `report --explain PATTERN`)\n",
+                    self.decisions.len() - MAX_DECISION_ROWS
+                ));
+            }
+        }
+        if !self.counters.is_empty() {
+            s.push_str("\n## Counters\n\n| metric | value |\n|---|---|\n");
+            for (name, value) in &self.counters {
+                let v = if value.fract() == 0.0 && value.abs() < 1e15 {
+                    format!("{}", *value as i64)
+                } else {
+                    format!("{value:.6}")
+                };
+                s.push_str(&format!("| {name} | {v} |\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Regression thresholds for [`diff`]. Percentages are relative
+/// increases; `attribution_pp` is an absolute percentage-point shift per
+/// lane category.
+#[derive(Clone, Copy, Debug)]
+pub struct DiffThresholds {
+    /// Makespan may grow this % before flagging.
+    pub makespan_pct: f64,
+    /// Update-balance ratio may grow this %.
+    pub balance_pct: f64,
+    /// Serve p99 may grow this %.
+    pub p99_pct: f64,
+    /// A lane's compute share may drop (or its stall+idle share rise) by
+    /// this many percentage points.
+    pub attribution_pp: f64,
+}
+
+impl Default for DiffThresholds {
+    fn default() -> Self {
+        DiffThresholds { makespan_pct: 5.0, balance_pct: 5.0, p99_pct: 10.0, attribution_pp: 5.0 }
+    }
+}
+
+/// One flagged regression from [`diff`].
+#[derive(Clone, Debug)]
+pub struct Regression {
+    /// What regressed (`makespan`, `serve p99`, `server0/gpu2 compute
+    /// share`, ...).
+    pub metric: String,
+    /// Value in the baseline report.
+    pub before: f64,
+    /// Value in the candidate report.
+    pub after: f64,
+    /// The flagged delta, in `unit`.
+    pub delta: f64,
+    /// `%` for relative deltas, `pp` for share shifts.
+    pub unit: &'static str,
+}
+
+fn rel_pct(before: f64, after: f64) -> f64 {
+    if before > 0.0 {
+        100.0 * (after - before) / before
+    } else {
+        0.0
+    }
+}
+
+/// Compare `after` against the `before` baseline: makespan, update
+/// balance, p99, and per-lane attribution shifts, each against its
+/// threshold. Identical reports return no regressions.
+pub fn diff(before: &Report, after: &Report, th: &DiffThresholds) -> Vec<Regression> {
+    let mut out = Vec::new();
+    let mut rel = |metric: &str, b: f64, a: f64, limit: f64| {
+        let d = rel_pct(b, a);
+        if d > limit {
+            out.push(Regression {
+                metric: metric.to_string(),
+                before: b,
+                after: a,
+                delta: d,
+                unit: "%",
+            });
+        }
+    };
+    rel("makespan", before.makespan, after.makespan, th.makespan_pct);
+    if let (Some(b), Some(a)) = (before.update_balance, after.update_balance) {
+        rel("update balance", b, a, th.balance_pct);
+    }
+    if let (Some(b), Some(a)) = (before.p99, after.p99) {
+        rel("serve p99", b, a, th.p99_pct);
+    }
+    // Attribution shifts: matched lanes only (churn can legitimately
+    // add/remove lanes between runs).
+    for la in &after.lanes {
+        let Some(lb) = before.lanes.iter().find(|l| l.pid == la.pid && l.tid == la.tid) else {
+            continue;
+        };
+        if lb.total <= 0.0 || la.total <= 0.0 {
+            continue;
+        }
+        let share = |x: f64, l: &LaneAttribution| 100.0 * x / l.total;
+        let compute_drop = share(lb.compute, lb) - share(la.compute, la);
+        if compute_drop > th.attribution_pp {
+            out.push(Regression {
+                metric: format!("{} compute share", la.label()),
+                before: share(lb.compute, lb),
+                after: share(la.compute, la),
+                delta: -compute_drop,
+                unit: "pp",
+            });
+        }
+        let stall_b = share(lb.merge_wait + lb.idle, lb);
+        let stall_a = share(la.merge_wait + la.idle, la);
+        if stall_a - stall_b > th.attribution_pp {
+            out.push(Regression {
+                metric: format!("{} stall+idle share", la.label()),
+                before: stall_b,
+                after: stall_a,
+                delta: stall_a - stall_b,
+                unit: "pp",
+            });
+        }
+    }
+    out
+}
+
+/// Render the diff as deterministic markdown: the headline comparison,
+/// then each flagged regression.
+pub fn render_diff(
+    before: &Report,
+    after: &Report,
+    regs: &[Regression],
+    th: &DiffThresholds,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("# report diff — {} -> {}\n\n", before.label, after.label));
+    let opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.6}"));
+    s.push_str("| metric | before | after | delta |\n|---|---|---|---|\n");
+    s.push_str(&format!(
+        "| makespan (s) | {:.6} | {:.6} | {:+.2}% |\n",
+        before.makespan,
+        after.makespan,
+        rel_pct(before.makespan, after.makespan)
+    ));
+    s.push_str(&format!(
+        "| update balance | {} | {} | |\n",
+        opt(before.update_balance),
+        opt(after.update_balance)
+    ));
+    s.push_str(&format!("| serve p99 (s) | {} | {} | |\n", opt(before.p99), opt(after.p99)));
+    s.push_str(&format!(
+        "| lanes compared | {} | {} | |\n",
+        before.lanes.len(),
+        after.lanes.len()
+    ));
+    s.push('\n');
+    if regs.is_empty() {
+        s.push_str(&format!(
+            "No regressions over thresholds (makespan +{:.0}%, balance +{:.0}%, p99 \
+             +{:.0}%, attribution ±{:.0}pp).\n",
+            th.makespan_pct, th.balance_pct, th.p99_pct, th.attribution_pp
+        ));
+    } else {
+        s.push_str(&format!("## {} regression(s)\n\n", regs.len()));
+        for r in regs {
+            s.push_str(&format!(
+                "- **{}**: {:.6} -> {:.6} ({:+.2}{})\n",
+                r.metric, r.before, r.after, r.delta, r.unit
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::analyze::{AVal, Ev, EvKind};
+
+    fn span(name: &str, pid: u32, tid: u32, ts: f64, dur: f64) -> Ev {
+        Ev {
+            name: name.to_string(),
+            cat: String::new(),
+            pid,
+            tid,
+            ts,
+            dur,
+            kind: EvKind::Span,
+            args: Vec::new(),
+        }
+    }
+
+    fn sample_trace() -> TraceData {
+        let mut serve = span("serve.batch", 0, 101, 0.0, 0.004);
+        serve.args.push(("queued_s".to_string(), AVal::Num(0.001)));
+        TraceData {
+            label: "test".to_string(),
+            events: vec![
+                span("train.megabatch", 0, 0, 0.0, 4.0),
+                span("engine.step", 0, 1, 0.0, 2.0),
+                span("engine.step", 0, 1, 2.0, 2.0),
+                span("engine.step", 0, 2, 0.0, 3.0),
+                span("train.merge", 0, 0, 3.8, 0.2),
+                serve,
+                Ev {
+                    kind: EvKind::Instant,
+                    args: vec![("reason".to_string(), AVal::Str("step-drift".into()))],
+                    ..span("train.retarget", 0, 0, 4.0, 0.0)
+                },
+            ],
+            dropped: 0,
+            balance: Some((6, 6)),
+            counters: vec![("train.updates".to_string(), 3.0)],
+        }
+    }
+
+    #[test]
+    fn report_computes_headline_numbers() {
+        let r = Report::from_trace(&sample_trace());
+        assert_eq!(r.events, 7);
+        assert!((r.makespan - 4.0).abs() < 1e-12);
+        assert_eq!(r.update_balance, Some(2.0), "2 steps vs 1 step");
+        assert!((r.p99.unwrap() - 0.005).abs() < 1e-12, "queued + service");
+        assert_eq!(r.decisions.len(), 1);
+        assert_eq!(r.lanes.len(), 4);
+        assert!(r.warnings().is_empty());
+    }
+
+    #[test]
+    fn markdown_is_deterministic_and_complete() {
+        let a = Report::from_trace(&sample_trace()).to_markdown(8);
+        let b = Report::from_trace(&sample_trace()).to_markdown(8);
+        assert_eq!(a, b);
+        assert!(a.contains("## Lane time attribution"));
+        assert!(a.contains("## Critical path"));
+        assert!(a.contains("server0/gpu0"));
+        assert!(a.contains("## Decision audit"));
+        assert!(a.contains("train.retarget"));
+        assert!(a.contains("| train.updates | 3 |"));
+        assert!(!a.contains("## Warnings"));
+    }
+
+    #[test]
+    fn truncated_traces_warn() {
+        let mut td = sample_trace();
+        td.dropped = 9;
+        td.balance = Some((6, 5));
+        let r = Report::from_trace(&td);
+        let w = r.warnings();
+        assert_eq!(w.len(), 2);
+        assert!(w[0].contains("dropped 9 events"));
+        assert!(w[1].contains("6 opened vs 5 closed"));
+        assert!(r.to_markdown(8).contains("## Warnings"));
+    }
+
+    #[test]
+    fn self_diff_is_clean() {
+        let r = Report::from_trace(&sample_trace());
+        let regs = diff(&r, &r, &DiffThresholds::default());
+        assert!(regs.is_empty(), "{regs:?}");
+        let text = render_diff(&r, &r, &regs, &DiffThresholds::default());
+        assert!(text.contains("No regressions"));
+    }
+
+    #[test]
+    fn diff_flags_makespan_and_attribution_shifts() {
+        let base = Report::from_trace(&sample_trace());
+        let mut slow = sample_trace();
+        // Stretch the mega-batch window without more compute: makespan
+        // grows and gpu0's compute share collapses.
+        slow.events[0].dur = 8.0;
+        slow.events[4].ts = 7.8;
+        let after = Report::from_trace(&slow);
+        let regs = diff(&base, &after, &DiffThresholds::default());
+        assert!(regs.iter().any(|r| r.metric == "makespan"), "{regs:?}");
+        assert!(
+            regs.iter().any(|r| r.metric.contains("compute share")),
+            "{regs:?}"
+        );
+        let text = render_diff(&base, &after, &regs, &DiffThresholds::default());
+        assert!(text.contains("regression(s)"));
+    }
+
+    #[test]
+    fn run_json_reports_diff_on_headline_numbers() {
+        let json = Json::parse(
+            r#"{"rows":[{"clock":1.5,"updates":[4,2]},{"clock":3.0,"updates":[4,2]}],
+                "metrics":[{"name":"obs.dropped_events","kind":"counter","value":0},
+                           {"name":"train.updates","kind":"counter","value":12}]}"#,
+        )
+        .unwrap();
+        let r = Report::from_run_json("run.json", &json).unwrap();
+        assert!((r.makespan - 3.0).abs() < 1e-12);
+        assert_eq!(r.update_balance, Some(2.0));
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.counters.len(), 2);
+        assert!(diff(&r, &r, &DiffThresholds::default()).is_empty());
+        assert!(Report::from_run_json("x", &Json::parse("{}").unwrap()).is_err());
+    }
+}

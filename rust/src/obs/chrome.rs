@@ -13,6 +13,7 @@
 use std::collections::BTreeSet;
 
 use crate::obs::sink::{ArgVal, EventKind, TraceEvent, TraceSink};
+use crate::obs::Registry;
 use crate::util::json::Json;
 use anyhow::{bail, Context};
 
@@ -80,11 +81,35 @@ fn metadata_json(pid: u32, name: &str, label: &str, tid: u32) -> Json {
     ])
 }
 
+/// Perfetto counter event (`ph: "C"`): one sample of a registry
+/// counter/gauge, rendered as a counter track on process 0.
+fn counter_json(name: &str, ts_us: f64, value: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("C")),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(ts_us)),
+        ("args", Json::obj(vec![("value", Json::num(value))])),
+    ])
+}
+
 /// Render an event stream to trace_event JSON. Metadata (lane names) is
 /// derived from the `(pid, tid)` pairs actually seen, in sorted order;
 /// the ring's eviction tally is surfaced as a top-level `droppedEvents`
 /// key so truncation is never silent.
 pub fn render_events(events: &[TraceEvent], dropped: u64) -> String {
+    render_events_with_counters(events, dropped, &[])
+}
+
+/// [`render_events`] plus registry counter/gauge samples as Perfetto
+/// counter ("C") tracks, stamped at the end of the trace (they are
+/// end-of-run totals, not time series).
+pub fn render_events_with_counters(
+    events: &[TraceEvent],
+    dropped: u64,
+    counters: &[(String, f64)],
+) -> String {
     let pids: BTreeSet<u32> = events.iter().map(|e| e.pid).collect();
     let lanes: BTreeSet<(u32, u32)> = events.iter().map(|e| (e.pid, e.tid)).collect();
     let mut out = Vec::new();
@@ -95,6 +120,8 @@ pub fn render_events(events: &[TraceEvent], dropped: u64) -> String {
         out.push(metadata_json(pid, "thread_name", &thread_label(tid), tid));
     }
     out.extend(events.iter().map(event_json));
+    let end_us = events.iter().map(|e| (e.ts + e.dur) * 1e6).fold(0.0, f64::max);
+    out.extend(counters.iter().map(|(name, value)| counter_json(name, end_us, *value)));
     let root = Json::obj(vec![
         ("traceEvents", Json::Arr(out)),
         ("displayTimeUnit", Json::str("ms")),
@@ -108,15 +135,38 @@ pub fn render(sink: &TraceSink) -> String {
     render_events(&sink.events(), sink.dropped())
 }
 
+/// Render a sink plus its registry's counters/gauges (histogram
+/// expansions are series, not point samples — they stay in the RunLog).
+pub fn render_with_registry(sink: &TraceSink, registry: &Registry) -> String {
+    let counters: Vec<(String, f64)> = registry
+        .snapshot()
+        .into_iter()
+        .filter(|r| r.kind == "counter" || r.kind == "gauge")
+        .map(|r| (r.name, r.value))
+        .collect();
+    render_events_with_counters(&sink.events(), sink.dropped(), &counters)
+}
+
 /// Render a sink's contents to `path`.
 pub fn write_trace(sink: &TraceSink, path: &str) -> crate::Result<()> {
     std::fs::write(path, render(sink)).with_context(|| format!("writing trace to {path}"))
 }
 
+/// Render a sink plus registry counters to `path` (the `--trace` CLI
+/// path).
+pub fn write_trace_with_registry(
+    sink: &TraceSink,
+    registry: &Registry,
+    path: &str,
+) -> crate::Result<()> {
+    std::fs::write(path, render_with_registry(sink, registry))
+        .with_context(|| format!("writing trace to {path}"))
+}
+
 /// Minimal trace_event schema checker (used by the `trace-check` CLI
 /// subcommand in CI). Validates the top-level shape and the per-event
-/// required fields for the phases we emit (`X`, `i`, `M`); returns the
-/// number of events checked.
+/// required fields for the phases we emit (`X`, `i`, `M`, `C`); returns
+/// the number of events checked.
 pub fn validate(text: &str) -> crate::Result<usize> {
     let root = Json::parse(text).map_err(|e| anyhow::anyhow!("trace is not valid JSON: {e}"))?;
     let events = match root.get("traceEvents").as_arr() {
@@ -161,6 +211,18 @@ pub fn validate(text: &str) -> crate::Result<usize> {
                 need_num("pid")?;
                 if obj.get("args").and_then(|a| a.as_obj()).is_none() {
                     bail!("event {i}: metadata event missing \"args\" object");
+                }
+            }
+            "C" => {
+                need_str("name")?;
+                need_num("pid")?;
+                need_num("ts")?;
+                let has_series = obj
+                    .get("args")
+                    .and_then(|a| a.as_obj())
+                    .is_some_and(|o| o.values().any(|v| v.as_f64().is_some()));
+                if !has_series {
+                    bail!("event {i}: counter event needs an args object with a numeric series");
                 }
             }
             other => bail!("event {i}: unsupported phase {other:?}"),
@@ -238,7 +300,34 @@ mod tests {
     }
 
     #[test]
+    fn counters_render_as_validated_counter_tracks() {
+        let s = sink_with_events();
+        let registry = Registry::new();
+        registry.counter("train.updates").add(5);
+        registry.gauge("serve.depth").set(3.0);
+        registry.histogram("serve.latency_s").observe(0.01);
+        let text = render_with_registry(&s, &registry);
+        // Histograms don't become counter tracks; counter + gauge do.
+        let n = validate(&text).unwrap();
+        assert_eq!(n, 3 + 2 + 3 + 2);
+        let root = Json::parse(&text).unwrap();
+        let evs = root.get("traceEvents").as_arr().unwrap();
+        let c = evs.iter().find(|e| e.get("ph").as_str() == Some("C")).unwrap();
+        assert_eq!(c.get("name").as_str(), Some("serve.depth"));
+        assert_eq!(c.get("args").get("value").as_f64(), Some(3.0));
+        // Stamped at the end of the trace (0.75 s → 750000 µs).
+        assert_eq!(c.get("ts").as_f64(), Some(750000.0));
+        // Deterministic like everything else the writer emits.
+        assert_eq!(text, render_with_registry(&sink_with_events(), &registry));
+    }
+
+    #[test]
     fn validate_rejects_malformed_traces() {
+        assert!(validate(
+            r#"{"traceEvents":[{"ph":"C","name":"c","pid":0,"ts":1,"args":{"value":2}}]}"#
+        )
+        .is_ok());
+        assert!(validate(r#"{"traceEvents":[{"ph":"C","name":"c","pid":0,"ts":1}]}"#).is_err());
         assert!(validate("not json").is_err());
         assert!(validate("{}").is_err());
         assert!(validate(r#"{"traceEvents":[{"ph":"X","name":"a"}]}"#).is_err());

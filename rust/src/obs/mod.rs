@@ -25,6 +25,7 @@
 //! that never mention obs keep byte-identical behavior. Tests inject
 //! explicit handles through the `*_with` entry-point variants instead.
 
+pub mod analyze;
 pub mod chrome;
 pub mod registry;
 pub mod sink;
@@ -87,6 +88,16 @@ impl ObsHandle {
         }
     }
 
+    /// Assemble a handle from explicit parts (test-only seam for the
+    /// analyze module).
+    #[cfg(test)]
+    pub(crate) fn from_parts_for_tests(
+        sink: Arc<TraceSink>,
+        registry: Arc<Registry>,
+    ) -> ObsHandle {
+        ObsHandle { sink, registry, pid: 0 }
+    }
+
     /// A clone stamping `pid` as its process lane (shares sink and
     /// registry with `self`).
     pub fn for_pid(&self, pid: u32) -> ObsHandle {
@@ -114,13 +125,33 @@ impl ObsHandle {
     }
 
     /// Registry snapshot if the plane is enabled, else empty (keeps the
-    /// RunLog `metrics` section absent for disabled runs).
+    /// RunLog `metrics` section absent for disabled runs). The sink's
+    /// own truncation state rides along as `obs.dropped_events` /
+    /// `obs.spans_opened` / `obs.spans_closed` rows, so a truncated ring
+    /// is visible even when no trace file was exported.
     pub fn metrics_rows(&self) -> Vec<MetricRow> {
-        if self.enabled() {
-            self.registry.snapshot()
-        } else {
-            Vec::new()
+        if !self.enabled() {
+            return Vec::new();
         }
+        let mut rows = self.registry.snapshot();
+        let (opened, closed) = self.sink.balance();
+        rows.push(MetricRow {
+            name: "obs.dropped_events".to_string(),
+            kind: "counter",
+            value: self.sink.dropped() as f64,
+        });
+        rows.push(MetricRow {
+            name: "obs.spans_closed".to_string(),
+            kind: "counter",
+            value: closed as f64,
+        });
+        rows.push(MetricRow {
+            name: "obs.spans_opened".to_string(),
+            kind: "counter",
+            value: opened as f64,
+        });
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
     }
 
     // -- emission helpers ---------------------------------------------------

@@ -183,7 +183,7 @@ pub fn replay(
         for (row, (&rid, &arrival)) in ab.request_ids.iter().zip(&ab.arrivals).enumerate() {
             let sample_id = ab.batch.sample_ids[row] as usize;
             let hit = data.sample(sample_id).labels.contains(&(preds[row].max(0) as u32));
-            router.observe_latency(routed.completion - arrival);
+            router.observe_latency_at(routed.completion, routed.completion - arrival);
             latency_hist.observe(routed.completion - arrival);
             requests.push(RequestRecord {
                 id: rid,

@@ -70,6 +70,9 @@ pub struct Router {
     /// Exact↔approximate transitions, registry-backed as
     /// `serve.mode_switches`.
     mode_switches: CounterHandle,
+    /// Obs plane for `serve.mode` decision instants (mode flips carry
+    /// the p95/SLO inputs that drove them).
+    obs: ObsHandle,
 }
 
 /// Latency samples the router keeps for its windowed p95.
@@ -110,6 +113,7 @@ impl Router {
             lat_window: Vec::with_capacity(LAT_WINDOW_CAP),
             lat_pos: 0,
             mode_switches: obs.counter("serve.mode_switches"),
+            obs: obs.clone(),
         };
         r.set_active(&active);
         r
@@ -184,7 +188,18 @@ impl Router {
     /// Feed one completed request's latency (seconds, virtual clock) into
     /// the SLO window. Hysteresis keeps the mode from flapping: engage
     /// approximate at p95 ≥ 0.9·SLO, return to exact at p95 ≤ 0.6·SLO.
+    /// Callers with a clock should prefer
+    /// [`Router::observe_latency_at`], which timestamps the mode-flip
+    /// decision record.
     pub fn observe_latency(&mut self, latency: f64) {
+        self.observe_latency_at(f64::NAN, latency);
+    }
+
+    /// [`Router::observe_latency`] at virtual time `now`: a mode flip
+    /// emits a `serve.mode` decision instant carrying the windowed p95
+    /// and the SLO thresholds that drove it (skipped when `now` is NaN —
+    /// clock-less callers keep the tally but not the audit row).
+    pub fn observe_latency_at(&mut self, now: f64, latency: f64) {
         if self.slo <= 0.0 {
             return;
         }
@@ -198,12 +213,30 @@ impl Router {
             return;
         }
         let p95 = self.windowed_p95();
-        if !self.approx && p95 >= 0.9 * self.slo {
+        let flipped_to = if !self.approx && p95 >= 0.9 * self.slo {
             self.approx = true;
             self.mode_switches.inc();
+            Some("approx")
         } else if self.approx && p95 <= 0.6 * self.slo {
             self.approx = false;
             self.mode_switches.inc();
+            Some("exact")
+        } else {
+            None
+        };
+        if let (Some(mode), true) = (flipped_to, now.is_finite()) {
+            self.obs.instant(
+                crate::obs::Subsystem::Serve,
+                "serve.mode",
+                0,
+                now,
+                vec![
+                    ("action", mode.into()),
+                    ("p95_s", p95.into()),
+                    ("slo_s", self.slo.into()),
+                    ("ratio", self.serve_ratio.into()),
+                ],
+            );
         }
     }
 

@@ -1,0 +1,201 @@
+//! Integration tests for the trace analysis plane: the attribution
+//! partition invariant across random churn/drift scenarios, bit-exact
+//! `report` output across two virtual-mode runs, a self-diff that flags
+//! nothing, and the acceptance scenario — a scripted 2x throttle whose
+//! victim dominates the critical-path top-K.
+
+use heterosparse::cluster::{self, ClusterPolicy};
+use heterosparse::config::{Config, DataConfig, DeviceConfig, ModelDims, ObsConfig, SgdConfig, Strategy};
+use heterosparse::coordinator::backend::RefBackend;
+use heterosparse::coordinator::engine_sim::SimEngine;
+use heterosparse::coordinator::trainer::{Trainer, TrainerOptions};
+use heterosparse::coordinator::DevicePool;
+use heterosparse::data::synthetic::Generator;
+use heterosparse::metrics::RunLog;
+use heterosparse::obs::analyze::{attribute, critical_path, diff, top_gaters, DiffThresholds, Report, TraceData};
+use heterosparse::obs::ObsHandle;
+use heterosparse::runtime::CostModel;
+
+fn small_cfg(g: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = ModelDims { features: 256, hidden: 16, classes: 64, max_nnz: 12, max_labels: 4 };
+    cfg.sgd = SgdConfig {
+        b_min: 8,
+        b_max: 32,
+        beta: 4,
+        lr_bmax: 0.4,
+        mega_batches: 24,
+        num_mega_batches: 8,
+        initial_batch: 32,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.devices = DeviceConfig {
+        count: g,
+        speed_factors: vec![1.0; g],
+        jitter: 0.0,
+        nnz_sensitivity: 1.0,
+        seed: 17,
+    };
+    cfg.data =
+        DataConfig { train_samples: 1200, test_samples: 240, avg_nnz: 6.0, ..Default::default() };
+    cfg.strategy.kind = Strategy::Adaptive;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn enabled_handle() -> ObsHandle {
+    ObsHandle::from_config(&ObsConfig { enabled: true, ..ObsConfig::default() }, false)
+}
+
+fn run_single(cfg: &Config, opts: TrainerOptions) -> RunLog {
+    let train = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.train_samples, 1);
+    let test = Generator::new(&cfg.model, &cfg.data).generate(cfg.data.test_samples, 2);
+    let backend = RefBackend;
+    let engine =
+        Box::new(SimEngine::new(&backend, DevicePool::roster(cfg), CostModel::default()));
+    let mut trainer = Trainer::new(cfg.clone(), engine, &backend, opts);
+    trainer.run(&train, &test).unwrap()
+}
+
+#[test]
+fn attribution_partitions_every_lane_across_churn_and_drift() {
+    // Property: whatever the scenario throws at the scheduler — pool
+    // churn, scripted drift, both — each lane's window decomposes into
+    // compute/serve/merge-wait/cluster-sync/idle with no gap and no
+    // overlap. The scenarios below vary the churn/drift script; within
+    // each, every lane must satisfy |total - sum(categories)| < eps.
+    let scenarios: Vec<(&str, Vec<String>, Vec<String>)> = vec![
+        ("plain", vec![], vec![]),
+        (
+            "churn",
+            vec!["at_mb=2 remove=1".to_string(), "at_mb=5 add=1".to_string()],
+            vec![],
+        ),
+        (
+            "drift",
+            vec![],
+            vec![
+                "at_mb=1 device=0 factor=2.5 ramp=2".to_string(),
+                "at_mb=5 device=0 factor=1.0".to_string(),
+            ],
+        ),
+        (
+            "churn+drift",
+            vec!["at_mb=3 remove=1".to_string(), "at_mb=6 add=1".to_string()],
+            vec!["at_mb=2 device=1 factor=3.0".to_string()],
+        ),
+    ];
+    for (name, elastic, drift) in scenarios {
+        let mut cfg = small_cfg(3);
+        cfg.elastic.events = elastic;
+        cfg.calibration.events = drift;
+        cfg.validate().unwrap();
+
+        let obs = enabled_handle();
+        let opts = TrainerOptions { obs: obs.clone(), ..TrainerOptions::default() };
+        run_single(&cfg, opts);
+
+        let td = TraceData::from_handle(name, &obs);
+        let lanes = attribute(&td.events);
+        assert!(lanes.len() >= 4, "[{name}] expected coordinator + device lanes");
+        for lane in &lanes {
+            let parts =
+                [lane.compute, lane.serve, lane.merge_wait, lane.cluster_sync, lane.idle];
+            assert!(
+                parts.iter().all(|&x| x >= -1e-12),
+                "[{name}] {}: negative category {parts:?}",
+                lane.label()
+            );
+            let gap = (lane.total - lane.category_sum()).abs();
+            assert!(
+                gap < 1e-6,
+                "[{name}] {}: categories do not partition the window (total {}, sum {}, gap {gap})",
+                lane.label(),
+                lane.total,
+                lane.category_sum()
+            );
+        }
+        // Device lanes actually computed something.
+        assert!(
+            lanes.iter().any(|l| l.tid >= 1 && l.compute > 0.0),
+            "[{name}] no compute attributed to any device lane"
+        );
+    }
+}
+
+#[test]
+fn report_is_bit_deterministic_across_two_virtual_runs() {
+    // The full markdown report — attribution tables, critical path,
+    // decision audit, counters — must come out byte-identical for two
+    // runs of the same virtual-clock cluster scenario.
+    let mut cfg = small_cfg(2);
+    cfg.cluster.servers = 2;
+    cfg.cluster.sync_every = 2;
+    cfg.cluster.link_latency_s = 1e-3;
+    cfg.cluster.link_gbytes_per_sec = 0.01;
+    cfg.cluster.events = vec![
+        "at_mb=1 link=1 factor=5.0".to_string(),
+        "at_mb=3 server=1 down".to_string(),
+        "at_mb=6 server=1 up".to_string(),
+    ];
+    cfg.validate().unwrap();
+    let policy = ClusterPolicy { flat: false, adaptive: true };
+
+    let render = |tag: &str| -> String {
+        let obs = enabled_handle();
+        cluster::run_cluster_with(&cfg, policy, tag, obs.clone()).unwrap();
+        Report::from_trace(&TraceData::from_handle("virtual", &obs)).to_markdown(8)
+    };
+    let a = render("det");
+    let b = render("det");
+    assert_eq!(a, b, "report output is not bit-deterministic in virtual mode");
+    assert!(a.contains("## Lane time attribution"));
+    assert!(a.contains("## Critical path"));
+    assert!(a.contains("## Decision audit"));
+    assert!(a.contains("cluster.sync") || a.contains("cluster-sync"));
+}
+
+#[test]
+fn self_diff_flags_no_regressions() {
+    let cfg = small_cfg(3);
+    let obs = enabled_handle();
+    let opts = TrainerOptions { obs: obs.clone(), ..TrainerOptions::default() };
+    run_single(&cfg, opts);
+
+    let report = Report::from_trace(&TraceData::from_handle("self", &obs));
+    let regs = diff(&report, &report, &DiffThresholds::default());
+    assert!(regs.is_empty(), "a report diffed against itself flagged: {regs:?}");
+}
+
+#[test]
+fn throttled_device_dominates_the_critical_path() {
+    // The acceptance scenario: device 2 throttles to 2x its nominal cost
+    // from mega-batch 1 on, while the planner (no calibration feedback)
+    // keeps dealing it the same batch share. Its lane must gate the
+    // majority of mega-batch windows and sit on top of the gater table.
+    let mut cfg = small_cfg(3);
+    cfg.calibration.events = vec!["at_mb=1 device=2 factor=2.0".to_string()];
+    cfg.validate().unwrap();
+
+    let obs = enabled_handle();
+    let opts = TrainerOptions { obs: obs.clone(), ..TrainerOptions::default() };
+    run_single(&cfg, opts);
+
+    let td = TraceData::from_handle("throttle", &obs);
+    let segs = critical_path(&td.events);
+    assert!(!segs.is_empty(), "no mega-batch windows extracted");
+    let top = top_gaters(&segs, 3);
+    assert!(!top.is_empty());
+    // tid 3 is device 2's lane.
+    assert_eq!(
+        top[0].tid, 3,
+        "expected the throttled device to top the gater table, got {top:?}"
+    );
+    let gated_by_victim = segs.iter().filter(|s| s.gate_tid == Some(3)).count();
+    assert!(
+        gated_by_victim * 2 > segs.len(),
+        "throttled device gated only {gated_by_victim}/{} windows",
+        segs.len()
+    );
+}
