@@ -29,7 +29,11 @@
 //!   * trace analysis plane: per-lane attribution, critical-path
 //!     extraction, and report diff over a synthetic ~5k-event stream —
 //!     recorded to `BENCH_analyze.json` (`HS_BENCH_ANALYZE_OUT`
-//!     overrides the path).
+//!     overrides the path),
+//!   * scenario DSL: unified-grammar event parsing, compound-line
+//!     routing, and fuzz-case generation — recorded to
+//!     `BENCH_scenario.json` (`HS_BENCH_SCENARIO_OUT` overrides the
+//!     path).
 
 use std::sync::Arc;
 
@@ -573,6 +577,65 @@ fn main() {
         "HS_BENCH_ANALYZE_OUT",
         "perf_hotpath/analyze",
         &analyze_results,
+    );
+
+    // ---- scenario DSL: grammar parse, compound routing, fuzz gen -----------
+    // Every Config load/validate re-parses its event lists through the
+    // unified grammar and `experiment fuzz` regenerates a full timeline
+    // per case, so the tokenizer and the case generator must both stay
+    // microseconds-scale.
+    let mut scenario_results: Vec<(String, BenchResult, f64)> = Vec::new();
+    let event_lines: Vec<String> = (0..64)
+        .map(|i| match i % 4 {
+            0 => format!("at_mb={} remove={}", i + 1, 1 + i % 3),
+            1 => format!(
+                "at_mb={} device={} factor={} ramp={}",
+                i + 1,
+                i % 4,
+                2 + i % 5,
+                i % 3
+            ),
+            2 => format!("at_mb={} link={} factor=4.0", i + 1, i % 2),
+            _ => format!("at_mb={} server={} down", i + 1, 1 + i % 2),
+        })
+        .collect();
+    let r = bench_fn("scenario/parse_event(64 mixed)", 10, 500, || {
+        event_lines
+            .iter()
+            .map(|l| {
+                heterosparse::scenario::parse_event(l, heterosparse::scenario::Mask::ALL).unwrap()
+            })
+            .count()
+    });
+    let per_sec = r.throughput(64.0);
+    println!("{r}  ({:.1} klines/s)", per_sec / 1e3);
+    scenario_results.push(("parse_event_mixed".to_string(), r, per_sec));
+
+    let compound = "at_mb=2 remove=1; serve: add=1; \
+                    calibration: at_mb=3 device=0 factor=2; \
+                    cluster: at_mb=4 server=1 down";
+    let r = bench_fn("scenario/route_line(4 clauses)", 10, 2000, || {
+        heterosparse::scenario::route_line(compound).unwrap().len()
+    });
+    let per_sec = r.throughput(4.0);
+    println!("{r}  ({:.1} kclauses/s)", per_sec / 1e3);
+    scenario_results.push(("route_line_compound".to_string(), r, per_sec));
+
+    let mut fuzz_index = 0usize;
+    let r = bench_fn("scenario/fuzz_gen_case", 10, 2000, || {
+        fuzz_index += 1;
+        heterosparse::scenario::fuzz::gen_case(heterosparse::scenario::fuzz::case_seed(
+            7, fuzz_index,
+        ))
+    });
+    let per_sec = r.throughput(1.0);
+    println!("{r}  ({per_sec:.0} cases/s)");
+    scenario_results.push(("fuzz_gen_case".to_string(), r, per_sec));
+    append_baseline(
+        "BENCH_scenario.json",
+        "HS_BENCH_SCENARIO_OUT",
+        "perf_hotpath/scenario",
+        &scenario_results,
     );
 
     // ---- coordinator algorithms -------------------------------------------

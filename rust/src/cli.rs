@@ -76,7 +76,13 @@ fn print_usage() {
          \x20              report --diff A B gates on regressions (non-zero exit)\n\n\
          OPTIONS:\n\
          \x20 --config FILE      TOML config file\n\
-         \x20 --set key=value    override any config key (repeatable)\n\
+         \x20 -c key=value       dotted-path config override layered over the\n\
+         \x20                    TOML, e.g. -c sgd.b_max=256 (repeatable; typed\n\
+         \x20                    values, unknown keys rejected; --set is an alias)\n\
+         \x20 --seed S           fuzz: run seed (default 7)\n\
+         \x20 --runs N           fuzz: generated cases (default 100)\n\
+         \x20 --subsystems LIST  fuzz: comma list of invariant groups —\n\
+         \x20                    train|data|serve|fleet|cluster|all (default all)\n\
          \x20 --out PATH         output file/directory\n\
          \x20 --backend KIND     auto | pjrt | ref\n\
          \x20 --profile NAME     amazon | delicious\n\
@@ -120,6 +126,12 @@ struct Parsed {
     explain: Option<String>,
     /// `report --diff`: compare two inputs.
     diff: bool,
+    /// `experiment fuzz --seed S`: fuzzer run seed.
+    seed: Option<u64>,
+    /// `experiment fuzz --runs N`: fuzzer case count.
+    runs: Option<usize>,
+    /// `experiment fuzz --subsystems LIST`: invariant groups to drive.
+    subsystems: Option<crate::scenario::fuzz::Subsystems>,
     positional: Vec<String>,
 }
 
@@ -171,6 +183,9 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
     let mut top = None;
     let mut explain = None;
     let mut diff = false;
+    let mut seed = None;
+    let mut runs = None;
+    let mut subsystems = None;
     let mut positional = Vec::new();
 
     let mut it = args.iter().peekable();
@@ -180,9 +195,11 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
                 config_path =
                     Some(PathBuf::from(it.next().context("--config needs a value")?))
             }
-            "--set" => {
-                let kv = it.next().context("--set needs key=value")?;
-                let (k, v) = kv.split_once('=').context("--set expects key=value")?;
+            "-c" | "--set" => {
+                let kv = it.next().with_context(|| format!("{arg} needs key=value"))?;
+                let (k, v) = kv.split_once('=').with_context(|| {
+                    format!("{arg} expects key=value (dotted path, like sgd.b_max=256)")
+                })?;
                 overrides.push((k.to_string(), v.to_string()));
             }
             "--out" => out = Some(PathBuf::from(it.next().context("--out needs a value")?)),
@@ -212,6 +229,29 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
             }
             "--trace" => {
                 trace = Some(PathBuf::from(it.next().context("--trace needs a value")?))
+            }
+            "--seed" => {
+                seed = Some(
+                    it.next()
+                        .context("--seed needs a value")?
+                        .parse::<u64>()
+                        .context("--seed expects an integer")?,
+                )
+            }
+            "--runs" => {
+                runs = Some(
+                    it.next()
+                        .context("--runs needs a value")?
+                        .parse::<usize>()
+                        .context("--runs expects an integer")?,
+                )
+            }
+            "--subsystems" => {
+                subsystems = Some(
+                    crate::scenario::fuzz::Subsystems::parse(
+                        it.next().context("--subsystems needs a comma list")?,
+                    )?,
+                )
             }
             "--strict" => strict = true,
             "--top" => {
@@ -260,6 +300,9 @@ fn parse_flags(args: &[String]) -> Result<Parsed> {
         top,
         explain,
         diff,
+        seed,
+        runs,
+        subsystems,
         positional,
     })
 }
@@ -396,6 +439,17 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             // fabric with a scripted throttle + rack loss.
             let base = p.had_config.then_some(&p.cfg);
             experiments::cluster(p.profile, base)?;
+        }
+        "fuzz" => {
+            let opts = crate::scenario::fuzz::FuzzOptions {
+                seed: p.seed.unwrap_or(7),
+                runs: p.runs.unwrap_or(100),
+                subsystems: p
+                    .subsystems
+                    .unwrap_or_else(crate::scenario::fuzz::Subsystems::all),
+                verbose: p.verbose,
+            };
+            experiments::fuzz(&opts, p.out.as_deref())?;
         }
         other => bail!(
             "experiment '{other}' is registered but has no dispatch arm — update \
@@ -706,5 +760,81 @@ mod tests {
         assert!(err.to_string().contains("calibration"), "{err}");
         let err = main_with_args(&s(&["experiment"])).unwrap_err();
         assert!(err.to_string().contains("fleet"), "{err}");
+    }
+
+    #[test]
+    fn dashc_overrides_layer_typed_values() {
+        // -c and --set are the same flag; -c is the documented spelling.
+        let p = parse_flags(&s(&["-c", "devices.count=3", "--set", "sgd.b_max=256"])).unwrap();
+        assert_eq!(p.cfg.devices.count, 3);
+        assert_eq!(p.cfg.sgd.b_max, 256);
+        assert!(p.had_config, "-c counts as explicit config input");
+        // Later overrides win over earlier ones for the same key.
+        let p = parse_flags(&s(&["-c", "sgd.b_max=128", "-c", "sgd.b_max=512"])).unwrap();
+        assert_eq!(p.cfg.sgd.b_max, 512);
+        assert!(parse_flags(&s(&["-c"])).is_err(), "-c needs key=value");
+        assert!(parse_flags(&s(&["-c", "novalue"])).is_err());
+    }
+
+    #[test]
+    fn dashc_rejects_unknown_keys_with_vocabulary() {
+        let err = parse_flags(&s(&["-c", "sgd.b_maxx=1"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown config key 'sgd.b_maxx'"), "{msg}");
+        assert!(msg.contains("sgd.b_max"), "suggests section vocabulary: {msg}");
+        let err = parse_flags(&s(&["-c", "sgd.b_min=soon"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sgd.b_min must be a non-negative integer"), "{msg}");
+    }
+
+    #[test]
+    fn dashc_routes_scenario_lines_to_their_subsystems() {
+        let p = parse_flags(&s(&[
+            "-c",
+            "scenario.events=[\"at_mb=2 remove=1; serve: add=1; cluster: server=1 down\"]",
+        ]))
+        .unwrap();
+        assert_eq!(p.cfg.elastic.events, vec!["at_mb=2 remove=1".to_string()]);
+        assert_eq!(p.cfg.serve.events, vec!["at_mb=2 add=1".to_string()]);
+        assert_eq!(p.cfg.cluster.events, vec!["at_mb=2 server=1 down".to_string()]);
+    }
+
+    #[test]
+    fn fuzz_flags_parse_and_validate() {
+        let p = parse_flags(&s(&[
+            "--seed", "99", "--runs", "3", "--subsystems", "data,cluster", "fuzz",
+        ]))
+        .unwrap();
+        assert_eq!(p.seed, Some(99));
+        assert_eq!(p.runs, Some(3));
+        let subs = p.subsystems.unwrap();
+        assert!(subs.data && subs.cluster && !subs.train && !subs.serve && !subs.fleet);
+        assert!(parse_flags(&s(&["--seed", "soon"])).is_err());
+        assert!(parse_flags(&s(&["--runs"])).is_err());
+        assert!(parse_flags(&s(&["--subsystems", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn experiment_fuzz_smoke_runs_clean_and_writes_empty_counterexamples() {
+        let dir = std::env::temp_dir().join("hs_cli_fuzz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("counterexamples.json");
+        main_with_args(&s(&[
+            "experiment",
+            "fuzz",
+            "--seed",
+            "7",
+            "--runs",
+            "2",
+            "--subsystems",
+            "data",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = crate::util::json::Json::parse(&std::fs::read_to_string(&out).unwrap())
+            .unwrap();
+        assert_eq!(doc.get("cases_checked").as_usize(), Some(2));
+        assert_eq!(doc.get("failures").as_arr().map(|a| a.len()), Some(0));
     }
 }

@@ -21,7 +21,7 @@
 //! lets `experiment cluster` compare the two under identical fabric
 //! behavior.
 
-use anyhow::{bail, Context};
+use anyhow::bail;
 
 use crate::tuning::DriftEvent;
 use crate::Result;
@@ -53,104 +53,28 @@ impl ClusterEvent {
     }
 
     /// Parse one event string (see the module docs for the grammar).
+    ///
+    /// Thin view over the unified scenario grammar
+    /// ([`crate::scenario::parse_event`]) under the link+rack mask; the
+    /// accepted language — including the cross-verb exclusions (`up`/
+    /// `down` only with `server=`, `factor`/`ramp` only with `link=`,
+    /// never both `link=` and `server=`) — is the legacy one, unchanged.
     pub fn parse(s: &str) -> Result<ClusterEvent> {
-        let mut at_mb: Option<usize> = None;
-        let mut link: Option<usize> = None;
-        let mut server: Option<usize> = None;
-        let mut factor: Option<f64> = None;
-        let mut ramp: usize = 0;
-        let mut state: Option<bool> = None;
-        for tok in s.split_whitespace() {
-            // Rack state is a bare token, everything else is key=value.
-            match tok {
-                "down" | "up" => {
-                    if state.replace(tok == "up").is_some() {
-                        bail!("cluster event '{s}' has more than one up/down");
-                    }
-                    continue;
-                }
-                _ => {}
-            }
-            let (key, value) = tok
-                .split_once('=')
-                .with_context(|| format!("cluster event token '{tok}' is not key=value"))?;
-            match key {
-                "at_mb" => {
-                    let n = value.parse().with_context(|| {
-                        format!("cluster event at_mb '{value}' is not an integer")
-                    })?;
-                    if at_mb.replace(n).is_some() {
-                        bail!("cluster event '{s}' has more than one at_mb");
-                    }
-                }
-                "link" => {
-                    let n = value.parse().with_context(|| {
-                        format!("cluster event link '{value}' is not an integer")
-                    })?;
-                    if link.replace(n).is_some() {
-                        bail!("cluster event '{s}' has more than one link");
-                    }
-                }
-                "server" => {
-                    let n = value.parse().with_context(|| {
-                        format!("cluster event server '{value}' is not an integer")
-                    })?;
-                    if server.replace(n).is_some() {
-                        bail!("cluster event '{s}' has more than one server");
-                    }
-                }
-                "factor" => {
-                    let f: f64 = value.parse().with_context(|| {
-                        format!("cluster event factor '{value}' is not a number")
-                    })?;
-                    if factor.replace(f).is_some() {
-                        bail!("cluster event '{s}' has more than one factor");
-                    }
-                }
-                "ramp" => {
-                    ramp = value.parse().with_context(|| {
-                        format!("cluster event ramp '{value}' is not an integer")
-                    })?;
-                }
-                other => {
-                    bail!("unknown cluster event key '{other}' (at_mb|link|server|factor|ramp)")
-                }
-            }
-        }
-        let at_mb = at_mb.with_context(|| format!("cluster event '{s}' missing at_mb=N"))?;
-        match (link, server) {
-            (Some(link), None) => {
-                if state.is_some() {
-                    bail!("cluster event '{s}': up/down applies to server=, not link=");
-                }
-                let factor =
-                    factor.with_context(|| format!("cluster event '{s}' missing factor=F"))?;
-                if factor <= 0.0 {
-                    bail!("cluster event '{s}' factor must be positive");
-                }
-                Ok(ClusterEvent::Link(DriftEvent { at_mb, device: link, factor, ramp }))
-            }
-            (None, Some(server)) => {
-                if factor.is_some() || ramp != 0 {
-                    bail!("cluster event '{s}': factor/ramp apply to link=, not server=");
-                }
-                let up = state
-                    .with_context(|| format!("cluster event '{s}' missing down or up"))?;
+        match crate::scenario::parse_event(s, crate::scenario::Mask::CLUSTER)? {
+            crate::scenario::ScenarioEvent::Link(ev) => Ok(ClusterEvent::Link(ev)),
+            crate::scenario::ScenarioEvent::Rack { at_mb, server, up } => {
                 Ok(ClusterEvent::Rack { at_mb, server, up })
             }
-            (Some(_), Some(_)) => {
-                bail!("cluster event '{s}' names both link= and server= (pick one)")
-            }
-            (None, None) => bail!("cluster event '{s}' missing link=L or server=S"),
+            other => bail!("event '{s}' parsed as a non-cluster event ({other:?})"),
         }
     }
 }
 
 /// Parse a whole `[cluster] events` trace, sorted by `at_mb` (stable for
-/// ties).
+/// ties). Errors name the offending array index and full line.
 pub fn parse_trace(events: &[String]) -> Result<Vec<ClusterEvent>> {
     let mut trace =
-        events.iter().map(|s| ClusterEvent::parse(s)).collect::<Result<Vec<_>>>()?;
+        crate::scenario::parse_trace_indexed("events", events, ClusterEvent::parse)?;
     trace.sort_by_key(|e| e.at_mb());
     Ok(trace)
 }

@@ -1,7 +1,9 @@
 //! Configuration system: typed config structs parsed from a TOML-subset
-//! file ([`toml_mini`]) with CLI `--key=value` overrides, validation, and
-//! defaults that match `python/compile/aot.py`.
+//! file ([`toml_mini`]) with dotted-path `-c key=value` CLI overrides
+//! ([`overrides`]), validation, and defaults that match
+//! `python/compile/aot.py`.
 
+pub mod overrides;
 pub mod toml_mini;
 
 use std::collections::BTreeMap;
@@ -427,6 +429,17 @@ pub struct Config {
     pub slide: SlideConfig,
     pub cluster: ClusterConfig,
     pub obs: ObsConfig,
+    pub scenario: ScenarioConfig,
+}
+
+/// The cross-subsystem `[scenario]` block: compound event lines in the
+/// unified grammar, routed into the per-subsystem event lists at load
+/// time by [`Config::apply_scenario`]. Clauses chain with `;` (inheriting
+/// `at_mb`) and may carry a `target:` prefix, e.g.
+/// `"at_mb=4 server=1 down; link=0 factor=6.0; serve: add=1"`.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioConfig {
+    pub events: Vec<String>,
 }
 
 #[derive(Clone, Debug)]
@@ -476,44 +489,15 @@ pub struct ElasticEvent {
 }
 
 impl ElasticEvent {
+    /// Thin view over the unified scenario grammar
+    /// ([`crate::scenario::parse_event`]) under the pool-family mask: the
+    /// accepted language — including the legacy rejection quirks
+    /// (duplicate keys, two operations, `remove=0` no-ops) — is unchanged.
     pub fn parse(s: &str) -> Result<ElasticEvent> {
-        let mut at_mb: Option<usize> = None;
-        let mut op: Option<ElasticOp> = None;
-        for tok in s.split_whitespace() {
-            let (key, value) = tok
-                .split_once('=')
-                .with_context(|| format!("elastic event token '{tok}' is not key=value"))?;
-            let n: usize = value
-                .parse()
-                .with_context(|| format!("elastic event value '{value}' is not an integer"))?;
-            let parsed_op = match key {
-                "at_mb" => {
-                    if at_mb.replace(n).is_some() {
-                        bail!("elastic event '{s}' has more than one at_mb");
-                    }
-                    continue;
-                }
-                "remove" => ElasticOp::Remove(n),
-                "add" => ElasticOp::Add(n),
-                "remove_id" => ElasticOp::RemoveId(n),
-                "add_id" => ElasticOp::AddId(n),
-                other => bail!(
-                    "unknown elastic event key '{other}' (at_mb|remove|add|remove_id|add_id)"
-                ),
-            };
-            if op.replace(parsed_op).is_some() {
-                bail!(
-                    "elastic event '{s}' has more than one operation; \
-                     use one event string per operation"
-                );
-            }
+        match crate::scenario::parse_event(s, crate::scenario::Mask::POOL)? {
+            crate::scenario::ScenarioEvent::Pool(ev) => Ok(ev),
+            other => bail!("event '{s}' parsed as a non-pool event ({other:?})"),
         }
-        let at_mb = at_mb.with_context(|| format!("elastic event '{s}' missing at_mb=N"))?;
-        let op = op.with_context(|| format!("elastic event '{s}' missing an operation"))?;
-        if let ElasticOp::Remove(0) | ElasticOp::Add(0) = op {
-            bail!("elastic event '{s}' is a no-op (count 0)");
-        }
-        Ok(ElasticEvent { at_mb, op })
     }
 }
 
@@ -552,12 +536,13 @@ impl Default for ElasticConfig {
 
 impl ElasticConfig {
     /// Parse the scripted trace, sorted by mega-batch (stable for ties).
+    /// Errors name the offending array index and full line.
     pub fn parsed_events(&self) -> Result<Vec<ElasticEvent>> {
-        let mut events = self
-            .events
-            .iter()
-            .map(|s| ElasticEvent::parse(s))
-            .collect::<Result<Vec<_>>>()?;
+        let mut events = crate::scenario::parse_trace_indexed(
+            "elastic.events",
+            &self.events,
+            ElasticEvent::parse,
+        )?;
         events.sort_by_key(|e| e.at_mb);
         Ok(events)
     }
@@ -747,9 +732,16 @@ impl Default for CalibrationConfig {
 }
 
 impl CalibrationConfig {
-    /// Parse the scripted drift trace, sorted by mega-batch.
+    /// Parse the scripted drift trace, sorted by mega-batch. Errors name
+    /// the offending array index and full line.
     pub fn parsed_events(&self) -> Result<Vec<crate::tuning::DriftEvent>> {
-        crate::tuning::parse_trace(&self.events)
+        let mut trace = crate::scenario::parse_trace_indexed(
+            "calibration.events",
+            &self.events,
+            crate::tuning::DriftEvent::parse,
+        )?;
+        trace.sort_by_key(|e| e.at_mb);
+        Ok(trace)
     }
 }
 
@@ -899,33 +891,38 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
-    /// Parse the scripted cluster trace, sorted by mega-batch.
+    /// Parse the scripted cluster trace, sorted by mega-batch. Errors
+    /// name the offending array index and full line.
     pub fn parsed_events(&self) -> Result<Vec<crate::cluster::ClusterEvent>> {
-        crate::cluster::parse_trace(&self.events)
+        let mut trace = crate::scenario::parse_trace_indexed(
+            "cluster.events",
+            &self.events,
+            crate::cluster::ClusterEvent::parse,
+        )?;
+        trace.sort_by_key(|e| e.at_mb());
+        Ok(trace)
     }
 }
 
 impl Config {
-    /// Load from a TOML file then apply `--section.key=value` overrides.
+    /// Load from a TOML file then layer dotted-path `-c key=value`
+    /// overrides over it ([`overrides::apply`]: typed TOML fragments with
+    /// bare-word string fallback, unknown keys rejected).
     pub fn load(path: &Path, overrides: &[(String, String)]) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
         let mut map = toml_mini::parse(&text)?;
         for (k, v) in overrides {
-            let parsed = toml_mini::parse(&format!("{k} = {v}"))
-                .or_else(|_| toml_mini::parse(&format!("{k} = \"{v}\"")))?;
-            map.extend(parsed);
+            overrides::apply(&mut map, k, v)?;
         }
         Config::from_map(&map)
     }
 
-    /// Build purely from `--key=value` overrides on top of defaults.
+    /// Build purely from `-c key=value` overrides on top of defaults.
     pub fn from_overrides(overrides: &[(String, String)]) -> Result<Config> {
         let mut map = BTreeMap::new();
         for (k, v) in overrides {
-            let parsed = toml_mini::parse(&format!("{k} = {v}"))
-                .or_else(|_| toml_mini::parse(&format!("{k} = \"{v}\"")))?;
-            map.extend(parsed);
+            overrides::apply(&mut map, k, v)?;
         }
         Config::from_map(&map)
     }
@@ -1163,8 +1160,38 @@ impl Config {
         }
         usize_of(map, "obs.buffer_events", &mut cfg.obs.buffer_events)?;
 
+        if let Some(v) = map.get("scenario.events") {
+            cfg.scenario.events =
+                v.as_str_arr().context("scenario.events must be a string array")?;
+        }
+        cfg.apply_scenario()?;
+
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Route the `[scenario]` block's compound lines into the
+    /// per-subsystem event lists (canonical grammar form appended after
+    /// any directly-configured events). `from_map` calls this once; call
+    /// it yourself exactly once when populating `scenario.events` on a
+    /// hand-built config.
+    pub fn apply_scenario(&mut self) -> Result<()> {
+        use crate::scenario::Target;
+        for (i, line) in self.scenario.events.clone().iter().enumerate() {
+            let routed = crate::scenario::route_line(line)
+                .with_context(|| format!("scenario.events[{i}]: '{line}'"))?;
+            for (target, ev) in routed {
+                let list = match target {
+                    Target::Elastic => &mut self.elastic.events,
+                    Target::Calibration => &mut self.calibration.events,
+                    Target::Serve => &mut self.serve.events,
+                    Target::Fleet => &mut self.fleet.events,
+                    Target::Cluster => &mut self.cluster.events,
+                };
+                list.push(ev.to_string());
+            }
+        }
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -1290,12 +1317,13 @@ impl Config {
         if sv.publish_every == 0 {
             bail!("serve.publish_every must be positive");
         }
-        for s in &sv.events {
-            let ev = ElasticEvent::parse(s)?;
+        for (i, s) in sv.events.iter().enumerate() {
+            let ev = ElasticEvent::parse(s)
+                .with_context(|| format!("serve.events[{i}]: '{s}'"))?;
             if let ElasticOp::RemoveId(id) | ElasticOp::AddId(id) = ev.op {
                 if id >= roster {
                     bail!(
-                        "serve event targets device {id} but the roster has {roster} devices"
+                        "serve.events[{i}] targets device {id} but the roster has {roster} devices"
                     );
                 }
             }
@@ -1319,12 +1347,13 @@ impl Config {
         if fl.train_weights.is_empty() || fl.train_weights.iter().any(|&w| w <= 0.0) {
             bail!("fleet.train_weights must be a non-empty array of positive weights");
         }
-        for s in &fl.events {
-            let ev = ElasticEvent::parse(s)?;
+        for (i, s) in fl.events.iter().enumerate() {
+            let ev = ElasticEvent::parse(s)
+                .with_context(|| format!("fleet.events[{i}]: '{s}'"))?;
             if let ElasticOp::RemoveId(id) | ElasticOp::AddId(id) = ev.op {
                 if id >= roster {
                     bail!(
-                        "fleet event targets device {id} but the roster has {roster} devices"
+                        "fleet.events[{i}] targets device {id} but the roster has {roster} devices"
                     );
                 }
             }

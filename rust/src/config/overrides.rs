@@ -1,0 +1,284 @@
+//! Dotted-path `-c key=value` CLI overrides layered over the TOML file
+//! (the codex `config_override.rs` pattern): the value is parsed as a
+//! typed TOML fragment with a bare-word string fallback, and — unlike the
+//! lenient config-file path, which ignores keys it does not know — an
+//! override naming an unknown key is rejected with the section's
+//! vocabulary, because a typo'd `-c` silently doing nothing is the worst
+//! possible failure mode for an experiment sweep.
+
+use std::collections::BTreeMap;
+
+use anyhow::bail;
+
+use super::toml_mini::{self, TomlValue};
+use crate::Result;
+
+/// Every dotted key `Config::from_map` reads, grouped by section. This is
+/// the unknown-key gate for `-c`; keep it in sync when adding a key to
+/// `from_map` (the `-c` end-to-end tests exercise one key per section).
+pub const KNOWN_KEYS: &[&str] = &[
+    "model.features",
+    "model.hidden",
+    "model.classes",
+    "model.max_nnz",
+    "model.max_labels",
+    "data.profile",
+    "data.train_samples",
+    "data.test_samples",
+    "data.avg_nnz",
+    "data.nnz_sigma",
+    "data.avg_labels",
+    "data.zipf_s",
+    "data.seed",
+    "data.pipeline.queue_depth",
+    "data.pipeline.producer_threads",
+    "data.pipeline.policy",
+    "data.pipeline.shard_samples",
+    "sgd.b_min",
+    "sgd.b_max",
+    "sgd.beta",
+    "sgd.lr_bmax",
+    "sgd.mega_batches",
+    "sgd.num_mega_batches",
+    "sgd.initial_batch",
+    "sgd.warmup_mega_batches",
+    "sgd.scaling_window",
+    "sgd.scaling_cooldown",
+    "sgd.seed",
+    "merge.pert_thr",
+    "merge.delta",
+    "merge.momentum",
+    "merge.perturbation",
+    "merge.normalization",
+    "devices.count",
+    "devices.speed_factors",
+    "devices.jitter",
+    "devices.nnz_sensitivity",
+    "devices.seed",
+    "runtime.artifacts_dir",
+    "runtime.mode",
+    "strategy.kind",
+    "strategy.batch_scaling",
+    "strategy.crossbow_rate",
+    "strategy.sync_overhead",
+    "elastic.events",
+    "elastic.spare_devices",
+    "elastic.straggler_factor",
+    "elastic.straggler_window",
+    "elastic.quarantine_mega_batches",
+    "elastic.min_devices",
+    "serve.max_batch",
+    "serve.max_delay",
+    "serve.rate",
+    "serve.duration",
+    "serve.window",
+    "serve.pattern",
+    "serve.burst_factor",
+    "serve.burst_period",
+    "serve.burst_fraction",
+    "serve.nnz_bias",
+    "serve.publish_every",
+    "serve.events",
+    "serve.seed",
+    "fleet.decision_window",
+    "fleet.grace",
+    "fleet.slo_p95_ms",
+    "fleet.breach_windows",
+    "fleet.clear_windows",
+    "fleet.preemption",
+    "fleet.serve_weight",
+    "fleet.train_weights",
+    "fleet.events",
+    "calibration.enabled",
+    "calibration.window",
+    "calibration.alpha",
+    "calibration.step_threshold",
+    "calibration.step_obs",
+    "calibration.events",
+    "slide.threads",
+    "slide.lr",
+    "slide.tables",
+    "slide.bits",
+    "slide.random_negatives",
+    "slide.rebuild_every",
+    "slide.seed",
+    "slide.adaptive",
+    "slide.min_ratio",
+    "slide.ratio_step",
+    "slide.quality_discount",
+    "slide.serve_ratio",
+    "slide.serve_slo_ms",
+    "cluster.servers",
+    "cluster.sync_every",
+    "cluster.adaptive",
+    "cluster.min_sync_every",
+    "cluster.max_sync_every",
+    "cluster.comm_target",
+    "cluster.link_latency_s",
+    "cluster.link_gbytes_per_sec",
+    "cluster.algo",
+    "cluster.streams",
+    "cluster.server_speed_factors",
+    "cluster.events",
+    "cluster.straggler_floor",
+    "obs.enabled",
+    "obs.level",
+    "obs.subsystems",
+    "obs.buffer_events",
+    "scenario.events",
+];
+
+pub fn is_known(path: &str) -> bool {
+    KNOWN_KEYS.contains(&path)
+}
+
+/// Validate a dotted config path: non-empty `[a-z0-9_]` segments.
+fn check_path(raw: &str, path: &str) -> Result<()> {
+    let valid = !path.is_empty()
+        && path.split('.').all(|seg| {
+            !seg.is_empty()
+                && seg.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        });
+    if !valid {
+        bail!("override '{raw}': '{path}' is not a dotted config path (like sgd.b_max)");
+    }
+    Ok(())
+}
+
+/// Parse an override value as a TOML fragment — so `-c sgd.b_max=256`,
+/// `-c devices.jitter=0.05`, `-c merge.perturbation=true`, and
+/// `-c 'fleet.train_weights=[1.0, 2.0]'` all arrive typed — falling back
+/// to a plain string for bare words (`-c strategy.kind=elastic` needs no
+/// quoting).
+fn parse_value(value: &str) -> Result<TomlValue> {
+    if value.contains('\n') {
+        bail!("override values cannot span lines");
+    }
+    match toml_mini::parse(&format!("__override__ = {value}")) {
+        Ok(map) if map.len() == 1 => {
+            Ok(map.into_iter().next().expect("len checked").1)
+        }
+        _ => Ok(TomlValue::Str(value.to_string())),
+    }
+}
+
+/// Closest-match hint for an unknown key: the section's vocabulary when
+/// the section exists, the section list otherwise.
+fn suggest(path: &str) -> String {
+    let section = path.split('.').next().unwrap_or(path);
+    let in_section: Vec<&str> = KNOWN_KEYS
+        .iter()
+        .copied()
+        .filter(|k| k.split('.').next() == Some(section))
+        .collect();
+    if in_section.is_empty() {
+        let mut sections: Vec<&str> =
+            KNOWN_KEYS.iter().map(|k| k.split('.').next().unwrap_or(k)).collect();
+        sections.dedup();
+        format!("unknown section '{section}' (sections: {})", sections.join(", "))
+    } else {
+        format!("known [{section}] keys: {}", in_section.join(", "))
+    }
+}
+
+/// Apply one `-c key=value` override onto the flat config map. The map
+/// then flows through `Config::from_map` exactly like file-sourced keys,
+/// so type errors carry the same messages either way.
+pub fn apply(map: &mut BTreeMap<String, TomlValue>, key: &str, value: &str) -> Result<()> {
+    let raw = format!("{key}={value}");
+    let key = key.trim();
+    check_path(&raw, key)?;
+    if !is_known(key) {
+        bail!("unknown config key '{key}' — {}", suggest(key));
+    }
+    map.insert(key.to_string(), parse_value(value.trim())?);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn apply_one(key: &str, value: &str) -> Result<BTreeMap<String, TomlValue>> {
+        let mut map = BTreeMap::new();
+        apply(&mut map, key, value)?;
+        Ok(map)
+    }
+
+    #[test]
+    fn values_arrive_typed_with_bare_word_fallback() {
+        assert_eq!(apply_one("sgd.b_max", "256").unwrap()["sgd.b_max"], TomlValue::Int(256));
+        assert_eq!(
+            apply_one("devices.jitter", "0.05").unwrap()["devices.jitter"],
+            TomlValue::Float(0.05)
+        );
+        assert_eq!(
+            apply_one("merge.perturbation", "true").unwrap()["merge.perturbation"],
+            TomlValue::Bool(true)
+        );
+        // Bare words need no quoting; explicit quotes also work.
+        assert_eq!(
+            apply_one("strategy.kind", "elastic").unwrap()["strategy.kind"],
+            TomlValue::Str("elastic".to_string())
+        );
+        assert_eq!(
+            apply_one("strategy.kind", "\"elastic\"").unwrap()["strategy.kind"],
+            TomlValue::Str("elastic".to_string())
+        );
+        match &apply_one("fleet.train_weights", "[1.0, 2.0]").unwrap()["fleet.train_weights"] {
+            TomlValue::Arr(items) => assert_eq!(items.len(), 2),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_vocabulary() {
+        let err = format!("{:#}", apply_one("sgd.b_maxx", "1").unwrap_err());
+        assert!(err.contains("unknown config key 'sgd.b_maxx'"), "{err}");
+        assert!(err.contains("sgd.b_max"), "suggests the section vocabulary: {err}");
+        let err = format!("{:#}", apply_one("sdg.b_max", "1").unwrap_err());
+        assert!(err.contains("unknown section 'sdg'"), "{err}");
+        assert!(err.contains("sgd"), "lists sections: {err}");
+        let err = format!("{:#}", apply_one("sgd..b_max", "1").unwrap_err());
+        assert!(err.contains("not a dotted config path"), "{err}");
+    }
+
+    #[test]
+    fn type_errors_surface_through_from_map() {
+        let o = |k: &str, v: &str| vec![(k.to_string(), v.to_string())];
+        let err = format!("{:#}", Config::from_overrides(&o("sgd.b_min", "soon")).unwrap_err());
+        assert!(err.contains("sgd.b_min must be a non-negative integer"), "{err}");
+        let err =
+            format!("{:#}", Config::from_overrides(&o("devices.jitter", "fast")).unwrap_err());
+        assert!(err.contains("devices.jitter must be a number"), "{err}");
+    }
+
+    #[test]
+    fn overrides_take_precedence_and_build_valid_configs() {
+        let overrides = vec![
+            ("sgd.b_max".to_string(), "256".to_string()),
+            ("sgd.beta".to_string(), "8".to_string()),
+            ("devices.count".to_string(), "3".to_string()),
+        ];
+        let cfg = Config::from_overrides(&overrides).unwrap();
+        assert_eq!(cfg.sgd.b_max, 256);
+        assert_eq!(cfg.devices.count, 3);
+        // Scenario lines route through the override path too.
+        let cfg = Config::from_overrides(&[(
+            "scenario.events".to_string(),
+            "[\"at_mb=2 remove=1; serve: add=1\"]".to_string(),
+        )])
+        .unwrap();
+        assert_eq!(cfg.elastic.events, vec!["at_mb=2 remove=1".to_string()]);
+        assert_eq!(cfg.serve.events, vec!["at_mb=2 add=1".to_string()]);
+    }
+
+    #[test]
+    fn every_registered_key_is_accepted() {
+        for key in KNOWN_KEYS {
+            let mut map = BTreeMap::new();
+            apply(&mut map, key, "1").unwrap_or_else(|e| panic!("{key}: {e:#}"));
+        }
+    }
+}

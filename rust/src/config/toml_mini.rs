@@ -104,12 +104,17 @@ pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
             section = name.to_string();
             continue;
         }
-        let eq = line.find('=').ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, &format!("expected 'key = value' (in '{line}')")))?;
         let key = line[..eq].trim();
         if key.is_empty() {
-            return Err(err(lineno, "empty key"));
+            return Err(err(lineno, &format!("empty key (in '{line}')")));
         }
-        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        // Value errors repeat the full line: configs are long arrays of
+        // event strings, and "line 12" alone sends you counting.
+        let value = parse_value(line[eq + 1..].trim(), lineno)
+            .map_err(|e| err(lineno, &format!("{} (in '{line}')", e.msg)))?;
         let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
         map.insert(full, value);
     }
@@ -149,7 +154,11 @@ fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
         }
         let items = split_top_level(inner)
             .into_iter()
-            .map(|item| parse_value(item.trim(), lineno))
+            .enumerate()
+            .map(|(idx, item)| {
+                parse_value(item.trim(), lineno)
+                    .map_err(|e| err(lineno, &format!("array item {idx}: {}", e.msg)))
+            })
             .collect::<Result<Vec<_>, _>>()?;
         return Ok(TomlValue::Arr(items));
     }
@@ -262,5 +271,22 @@ names = ["a", "b"]
         assert!(parse("[unterminated").is_err());
         assert!(parse("x = ").is_err());
         assert!(parse("x = [1, ").is_err());
+    }
+
+    #[test]
+    fn errors_repeat_the_offending_line_and_array_index() {
+        let e = parse("ok = 1\nbad line").unwrap_err();
+        assert!(e.msg.contains("in 'bad line'"), "{}", e.msg);
+        let e = parse("x = !!").unwrap_err();
+        assert!(e.msg.contains("cannot parse value '!!'"), "{}", e.msg);
+        assert!(e.msg.contains("in 'x = !!'"), "{}", e.msg);
+        // Bad array items name their index, then the whole line.
+        let e = parse("xs = [1, !!, 3]").unwrap_err();
+        assert!(e.msg.contains("array item 1"), "{}", e.msg);
+        assert!(e.msg.contains("cannot parse value '!!'"), "{}", e.msg);
+        assert!(e.msg.contains("in 'xs = [1, !!, 3]'"), "{}", e.msg);
+        // Nested arrays chain their indices outermost-first.
+        let e = parse("xs = [[1], [2, !!]]").unwrap_err();
+        assert!(e.msg.contains("array item 1: array item 1"), "{}", e.msg);
     }
 }

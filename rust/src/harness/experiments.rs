@@ -65,6 +65,10 @@ pub const EXPERIMENTS: &[ExperimentSpec] = &[
         name: "cluster",
         about: "multi-server scale-out: flat vs hierarchical vs adaptive sync cadence",
     },
+    ExperimentSpec {
+        name: "fuzz",
+        about: "seeded cross-subsystem scenario fuzzer: property-check global invariants",
+    },
 ];
 
 /// Every registered experiment name, in registry order.
@@ -1467,6 +1471,76 @@ pub fn cluster(
     );
 
     Ok(ClusterExperimentOutcome { flat, fixed, adaptive })
+}
+
+/// `experiment fuzz` — drive the seeded cross-subsystem scenario fuzzer
+/// ([`crate::scenario::fuzz`]) and report every invariant violation with
+/// a shrunk counterexample plus the exact replay command. When `out` is
+/// given the counterexamples are also written as JSON (an empty array on
+/// a clean run, so CI can always upload the artifact). Fails — returns
+/// `Err` after printing — if any case violated an invariant, so the
+/// process exits non-zero under CI.
+pub fn fuzz(
+    opts: &crate::scenario::fuzz::FuzzOptions,
+    out: Option<&std::path::Path>,
+) -> Result<crate::scenario::fuzz::FuzzReport> {
+    use crate::util::json::Json;
+    use anyhow::Context as _;
+
+    println!(
+        "fuzz: seed={} runs={} subsystems={}",
+        opts.seed,
+        opts.runs,
+        opts.subsystems.label()
+    );
+    let report = crate::scenario::fuzz::run(opts);
+    println!(
+        "fuzz: {} case(s) checked, {} violation(s)",
+        report.cases_checked,
+        report.failures.len()
+    );
+    for f in &report.failures {
+        println!();
+        println!("FAIL case #{} (case seed 0x{:016x})", f.case_index, f.case_seed);
+        println!("  invariant: {}", f.message);
+        println!("  case: {}", f.case.describe());
+        println!(
+            "  replay: experiment fuzz --seed {} --runs 1 --subsystems {}",
+            f.case_seed,
+            opts.subsystems.label()
+        );
+    }
+    if let Some(path) = out {
+        let failures = Json::arr(report.failures.iter().map(|f| {
+            Json::obj(vec![
+                ("case_index", Json::int(f.case_index as i64)),
+                // Seeds travel as hex strings: u64 does not survive the
+                // f64 round-trip a JSON number would force on it.
+                ("case_seed_hex", Json::str(format!("{:016x}", f.case_seed))),
+                ("message", Json::str(f.message.clone())),
+                ("case", Json::str(f.case.describe())),
+            ])
+        }));
+        let doc = Json::obj(vec![
+            ("bench", Json::str("experiment/fuzz")),
+            ("seed_hex", Json::str(format!("{:016x}", report.seed))),
+            ("runs", Json::int(report.runs as i64)),
+            ("subsystems", Json::str(opts.subsystems.label())),
+            ("cases_checked", Json::int(report.cases_checked as i64)),
+            ("failures", failures),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing fuzz counterexamples to {}", path.display()))?;
+        println!("fuzz: wrote {} counterexample(s) to {}", report.failures.len(), path.display());
+    }
+    if !report.failures.is_empty() {
+        anyhow::bail!(
+            "{} of {} fuzz cases violated invariants",
+            report.failures.len(),
+            report.cases_checked
+        );
+    }
+    Ok(report)
 }
 
 /// Config helper shared with `Config::from_overrides` users.

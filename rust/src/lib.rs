@@ -48,6 +48,7 @@ pub mod metrics;
 pub mod model;
 pub mod obs;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod slide;
 pub mod tuning;

@@ -1,0 +1,751 @@
+//! Seeded cross-subsystem scenario fuzzer (`experiment fuzz`).
+//!
+//! Generates random-but-valid scenario timelines over a subsystem mask,
+//! drives the virtual-mode sims, and property-checks the global invariants
+//! after every run:
+//!
+//! * **epoch-exact emission** — over two full epochs the data pipeline
+//!   serves every sample exactly twice, through arbitrary chunk sizes and
+//!   `unget` flushes;
+//! * **merge-weight sum-to-1** — every recorded mega-batch's merge weights
+//!   sum to 1 with inactive roster slots at exactly 0, under scripted pool
+//!   churn and cost drift;
+//! * **attribution partition** — per-lane span categories
+//!   (compute/serve/merge-wait/cluster-sync/idle) partition the lane's
+//!   wall-clock exactly;
+//! * **request conservation** — every admitted serving request is answered
+//!   exactly once (dense unique ids), through serving-pool churn;
+//! * **lease conservation** — `co_schedule` completes with its every-tick
+//!   ledger audit clean under fleet churn + preemption;
+//! * **bit-determinism** — replaying the same case seed reproduces losses,
+//!   clocks, active sets, and latency percentiles bit-exactly.
+//!
+//! Cases are valid by construction (`gen_case` bounds every id by the
+//! roster / server count it also generates), so a failure is a real
+//! invariant violation, not a config error. Failures shrink greedily —
+//! drop event lists, drop trailing events, shorten the horizon — until no
+//! smaller case still fails, in the style of
+//! [`util::prop`](crate::util::prop).
+
+use std::sync::Arc;
+
+use crate::config::{Config, DataConfig, DeviceConfig, ModelDims, SgdConfig};
+use crate::coordinator::backend::RefBackend;
+use crate::coordinator::trainer::TrainerOptions;
+use crate::data::pipeline::{SampleStream, ShardedDataset};
+use crate::data::synthetic::Generator;
+use crate::fleet::{co_schedule, TenantJob};
+use crate::harness::{run_single, Backend};
+use crate::model::ModelState;
+use crate::obs::analyze::{attribute, TraceData};
+use crate::obs::ObsHandle;
+use crate::serve::{replay, ReplayOptions, SnapshotRegistry};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::ScenarioEvent;
+
+/// Which invariant groups a fuzz run drives (`--subsystems`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Subsystems {
+    /// Training runs: merge weights, attribution partition, determinism.
+    pub train: bool,
+    /// Data pipeline: epoch-exact emission through random chunking/unget.
+    pub data: bool,
+    /// Serving replay: request conservation + latency determinism.
+    pub serve: bool,
+    /// Fleet co-scheduling: lease conservation audits.
+    pub fleet: bool,
+    /// Cluster scale-out: hierarchical-merge determinism.
+    pub cluster: bool,
+}
+
+impl Subsystems {
+    pub fn all() -> Subsystems {
+        Subsystems { train: true, data: true, serve: true, fleet: true, cluster: true }
+    }
+
+    /// Parse a comma list: `train,serve`, `cluster`, `all`. The event
+    /// aliases `elastic`, `calibration`, and `slide` map to `train` (their
+    /// invariants are checked on the training run).
+    pub fn parse(s: &str) -> Result<Subsystems> {
+        let mut subs =
+            Subsystems { train: false, data: false, serve: false, fleet: false, cluster: false };
+        for tok in s.split(',') {
+            match tok.trim() {
+                "all" => subs = Subsystems::all(),
+                "train" | "elastic" | "calibration" | "slide" => subs.train = true,
+                "data" => subs.data = true,
+                "serve" => subs.serve = true,
+                "fleet" => subs.fleet = true,
+                "cluster" => subs.cluster = true,
+                other => anyhow::bail!(
+                    "unknown subsystem '{other}' (train|data|serve|fleet|cluster|all)"
+                ),
+            }
+        }
+        if subs == (Subsystems { train: false, data: false, serve: false, fleet: false, cluster: false })
+        {
+            anyhow::bail!("--subsystems selected nothing (train|data|serve|fleet|cluster|all)");
+        }
+        Ok(subs)
+    }
+
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.train {
+            parts.push("train");
+        }
+        if self.data {
+            parts.push("data");
+        }
+        if self.serve {
+            parts.push("serve");
+        }
+        if self.fleet {
+            parts.push("fleet");
+        }
+        if self.cluster {
+            parts.push("cluster");
+        }
+        parts.join(",")
+    }
+}
+
+/// One generated scenario: topology knobs plus a canonical event timeline
+/// per subsystem. Regenerable from `seed` alone (see [`gen_case`]);
+/// shrinking produces smaller cases that are no longer seed-derivable,
+/// which is why counterexample reports carry the full case.
+#[derive(Clone, Debug)]
+pub struct FuzzCase {
+    pub seed: u64,
+    pub devices: usize,
+    pub spares: usize,
+    pub servers: usize,
+    pub mega_batches: usize,
+    pub elastic: Vec<ScenarioEvent>,
+    pub calibration: Vec<ScenarioEvent>,
+    pub serve: Vec<ScenarioEvent>,
+    pub fleet: Vec<ScenarioEvent>,
+    pub cluster: Vec<ScenarioEvent>,
+}
+
+impl FuzzCase {
+    /// One-line rendering of the whole timeline for counterexample reports.
+    pub fn describe(&self) -> String {
+        let fmt = |name: &str, evs: &[ScenarioEvent]| -> Option<String> {
+            if evs.is_empty() {
+                return None;
+            }
+            let lines: Vec<String> = evs.iter().map(|e| format!("\"{e}\"")).collect();
+            Some(format!("{name}=[{}]", lines.join(", ")))
+        };
+        let mut parts = vec![format!(
+            "devices={} spares={} servers={} mega_batches={}",
+            self.devices, self.spares, self.servers, self.mega_batches
+        )];
+        parts.extend(fmt("elastic", &self.elastic));
+        parts.extend(fmt("calibration", &self.calibration));
+        parts.extend(fmt("serve", &self.serve));
+        parts.extend(fmt("fleet", &self.fleet));
+        parts.extend(fmt("cluster", &self.cluster));
+        parts.join(" ")
+    }
+
+    /// Materialize the case as a tiny virtual-mode [`Config`]: micro model,
+    /// zero jitter (determinism checks compare bits), event lists in
+    /// canonical grammar form. Valid by construction — `validate()` is
+    /// still called and a failure here is itself a fuzzer bug.
+    pub fn config(&self) -> Result<Config> {
+        let mut cfg = Config::default();
+        cfg.model = ModelDims { features: 128, hidden: 8, classes: 32, max_nnz: 8, max_labels: 2 };
+        cfg.sgd = SgdConfig {
+            b_min: 8,
+            b_max: 16,
+            beta: 8,
+            lr_bmax: 0.4,
+            mega_batches: 6,
+            num_mega_batches: self.mega_batches,
+            initial_batch: 16,
+            warmup_mega_batches: 0,
+            seed: self.seed ^ 0x5EED,
+            ..Default::default()
+        };
+        cfg.devices = DeviceConfig {
+            count: self.devices,
+            speed_factors: (0..self.devices).map(|i| 1.0 + 0.1 * i as f64).collect(),
+            jitter: 0.0,
+            nnz_sensitivity: 1.0,
+            seed: 17,
+        };
+        cfg.data = DataConfig {
+            train_samples: 600,
+            test_samples: 120,
+            avg_nnz: 4.0,
+            seed: self.seed | 1,
+            ..Default::default()
+        };
+        cfg.elastic.spare_devices = (0..self.spares).map(|i| 0.9 + 0.05 * i as f64).collect();
+        cfg.elastic.events = self.elastic.iter().map(|e| e.to_string()).collect();
+        cfg.calibration.events = self.calibration.iter().map(|e| e.to_string()).collect();
+        cfg.serve.events = self.serve.iter().map(|e| e.to_string()).collect();
+        cfg.serve.rate = 1_500.0;
+        cfg.serve.duration = 0.5;
+        cfg.serve.window = 0.1;
+        cfg.serve.max_delay = 0.002;
+        cfg.serve.max_batch = 16;
+        cfg.serve.seed = self.seed ^ 0x7A11;
+        cfg.fleet.events = self.fleet.iter().map(|e| e.to_string()).collect();
+        cfg.fleet.decision_window = 0.02;
+        cfg.fleet.grace = 0.1;
+        cfg.fleet.train_weights = vec![1.0, 1.0];
+        cfg.cluster.servers = self.servers;
+        cfg.cluster.sync_every = 2;
+        cfg.cluster.events = self.cluster.iter().map(|e| e.to_string()).collect();
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("fuzz case {:#x} built an invalid config: {e:#}", self.seed))?;
+        Ok(cfg)
+    }
+}
+
+/// SplitMix64-style mix of (run seed, case index) → per-case seed, so
+/// adjacent cases decorrelate. Index 0 is the identity: that is what
+/// makes the reported `--seed <case_seed> --runs 1` replay regenerate
+/// the failing case exactly rather than case 0 of a fresh sweep.
+pub fn case_seed(seed: u64, index: usize) -> u64 {
+    if index == 0 {
+        return seed;
+    }
+    let mut z = seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn gen_pool(rng: &mut Rng, horizon: usize, roster: usize) -> ScenarioEvent {
+    use crate::config::{ElasticEvent, ElasticOp};
+    let at_mb = 1 + rng.below(horizon.max(2) as u64 - 1) as usize;
+    let op = match rng.below(4) {
+        0 => ElasticOp::Remove(1 + rng.below(2) as usize),
+        1 => ElasticOp::Add(1 + rng.below(2) as usize),
+        2 => ElasticOp::RemoveId(rng.below(roster as u64) as usize),
+        _ => ElasticOp::AddId(rng.below(roster as u64) as usize),
+    };
+    ScenarioEvent::Pool(ElasticEvent { at_mb, op })
+}
+
+fn gen_drift(rng: &mut Rng, horizon: usize, roster: usize) -> ScenarioEvent {
+    ScenarioEvent::Drift(crate::tuning::DriftEvent {
+        at_mb: 1 + rng.below(horizon.max(2) as u64 - 1) as usize,
+        device: rng.below(roster as u64) as usize,
+        factor: 0.5 + rng.f64() * 3.5,
+        ramp: rng.below(3) as usize,
+    })
+}
+
+fn gen_cluster(rng: &mut Rng, horizon: usize, servers: usize) -> Vec<ScenarioEvent> {
+    if rng.below(2) == 0 {
+        vec![ScenarioEvent::Link(crate::tuning::DriftEvent {
+            at_mb: 1 + rng.below(horizon.max(2) as u64 - 1) as usize,
+            device: rng.below(servers as u64) as usize,
+            factor: 1.0 + rng.f64() * 7.0,
+            ramp: rng.below(3) as usize,
+        })]
+    } else {
+        // Rack outage + recovery; server 0 always stays up so the cluster
+        // is never fully dark.
+        let server = 1 + rng.below(servers as u64 - 1) as usize;
+        let down_at = 1 + rng.below(horizon.max(2) as u64 - 1) as usize;
+        let up_at = down_at + 1 + rng.below(3) as usize;
+        vec![
+            ScenarioEvent::Rack { at_mb: down_at, server, up: false },
+            ScenarioEvent::Rack { at_mb: up_at, server, up: true },
+        ]
+    }
+}
+
+/// Generate one random-but-valid case from its seed. Draw order is fixed
+/// and independent of the subsystem mask so a counterexample seed replays
+/// identically whatever `--subsystems` selected.
+pub fn gen_case(case_seed: u64) -> FuzzCase {
+    let mut rng = Rng::new(case_seed);
+    let devices = 2 + rng.below(3) as usize;
+    let spares = rng.below(3) as usize;
+    let servers = 2 + rng.below(2) as usize;
+    let mega_batches = 3 + rng.below(4) as usize;
+    let roster = devices + spares;
+    let mut case = FuzzCase {
+        seed: case_seed,
+        devices,
+        spares,
+        servers,
+        mega_batches,
+        elastic: Vec::new(),
+        calibration: Vec::new(),
+        serve: Vec::new(),
+        fleet: Vec::new(),
+        cluster: Vec::new(),
+    };
+    for _ in 0..rng.below(3) {
+        case.elastic.push(gen_pool(&mut rng, mega_batches, roster));
+    }
+    for _ in 0..rng.below(3) {
+        case.calibration.push(gen_drift(&mut rng, mega_batches, roster));
+    }
+    // Serve events index telemetry windows (duration 0.5 / window 0.1 → 5),
+    // fleet events index decision windows (a longer horizon).
+    for _ in 0..rng.below(3) {
+        case.serve.push(gen_pool(&mut rng, 5, roster));
+    }
+    for _ in 0..rng.below(3) {
+        case.fleet.push(gen_pool(&mut rng, 10, roster));
+    }
+    for _ in 0..rng.below(3) {
+        case.cluster.extend(gen_cluster(&mut rng, mega_batches, servers));
+    }
+    case
+}
+
+fn corpus(cfg: &Config, seed: u64) -> Arc<ShardedDataset> {
+    let gen = Generator::new(&cfg.model, &cfg.data);
+    let train = gen.generate(cfg.data.train_samples, seed);
+    Arc::new(ShardedDataset::from_dataset(&train, 128))
+}
+
+/// Epoch-exact emission: stream two full epochs in random-sized chunks
+/// (occasionally flushing a chunk back through `unget`) and require every
+/// sample served exactly twice.
+fn check_data(case: &FuzzCase, cfg: &Config) -> std::result::Result<(), String> {
+    for policy in crate::config::CompositionPolicy::all() {
+        let data = corpus(cfg, case.seed ^ 0xDA7A);
+        let len = data.len();
+        let mut stream = SampleStream::new(data, policy, case.seed ^ 0x57EE);
+        let mut rng = Rng::new(case.seed ^ 0xC4A7);
+        let mut counts = vec![0u64; len];
+        let target = 2 * len as u64;
+        let mut served = 0u64;
+        let (mut ids, mut runs) = (Vec::new(), Vec::new());
+        let (mut ids2, mut runs2) = (Vec::new(), Vec::new());
+        while served < target {
+            let want = (1 + rng.below(48) as usize).min((target - served) as usize);
+            stream.next_ids(want, &mut ids, &mut runs);
+            if ids.len() != want {
+                return Err(format!("{policy:?}: stream returned {} of {want} ids", ids.len()));
+            }
+            // Exercise the flush path: a single-run (current-epoch) draw
+            // pushed back must re-emit the same multiset.
+            if runs.len() == 1 && rng.below(8) == 0 {
+                stream.unget(&ids, &runs);
+                stream.next_ids(want, &mut ids2, &mut runs2);
+                let mut before = ids.clone();
+                let mut after = ids2.clone();
+                before.sort_unstable();
+                after.sort_unstable();
+                if before != after {
+                    return Err(format!("{policy:?}: unget changed the emitted multiset"));
+                }
+                std::mem::swap(&mut ids, &mut ids2);
+            }
+            for &id in &ids {
+                counts[id as usize] += 1;
+            }
+            served += want as u64;
+        }
+        if stream.samples_served() != target {
+            return Err(format!(
+                "{policy:?}: samples_served {} != {target}",
+                stream.samples_served()
+            ));
+        }
+        if let Some(id) = counts.iter().position(|&c| c != 2) {
+            return Err(format!(
+                "{policy:?}: sample {id} served {} times in 2 epochs",
+                counts[id]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Training invariants: merge-weight sum-to-1 with inactive slots at 0,
+/// per-lane attribution partition, and bit-determinism across a replay.
+fn check_train(cfg: &Config) -> std::result::Result<(), String> {
+    let run = || -> std::result::Result<(crate::metrics::RunLog, ObsHandle), String> {
+        let obs = ObsHandle::from_config(
+            &crate::config::ObsConfig { enabled: true, ..Default::default() },
+            false,
+        );
+        let opts = TrainerOptions { obs: obs.clone(), ..Default::default() };
+        let log = run_single(cfg, Backend::Reference, opts)
+            .map_err(|e| format!("train run failed: {e:#}"))?;
+        Ok((log, obs))
+    };
+    let (a, obs) = run()?;
+    if a.rows.len() != cfg.sgd.num_mega_batches {
+        return Err(format!(
+            "train run recorded {} of {} mega-batches",
+            a.rows.len(),
+            cfg.sgd.num_mega_batches
+        ));
+    }
+    let mut weighted_rows = 0usize;
+    for (i, row) in a.rows.iter().enumerate() {
+        if row.merge_weights.is_empty() {
+            continue;
+        }
+        weighted_rows += 1;
+        let sum: f64 = row.merge_weights.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("mega-batch {i}: merge weights sum to {sum}, not 1"));
+        }
+        for (d, &w) in row.merge_weights.iter().enumerate() {
+            if w < -1e-12 {
+                return Err(format!("mega-batch {i}: device {d} has negative weight {w}"));
+            }
+            if !row.active_devices.contains(&d) && w != 0.0 {
+                return Err(format!(
+                    "mega-batch {i}: inactive device {d} carries weight {w}"
+                ));
+            }
+        }
+    }
+    if weighted_rows == 0 {
+        return Err("no mega-batch recorded merge weights".to_string());
+    }
+    // Attribution partition: per lane, the category times partition the
+    // lane total exactly (idle is defined as the remainder, so a violation
+    // means overlapping spans were double-counted).
+    let trace = TraceData::from_handle("fuzz", &obs);
+    for lane in attribute(&trace.events) {
+        let err = (lane.category_sum() - lane.total).abs();
+        if err > 1e-6 * lane.total.max(1.0) {
+            return Err(format!(
+                "lane pid={} tid={}: categories sum to {} but lane total is {}",
+                lane.pid,
+                lane.tid,
+                lane.category_sum(),
+                lane.total
+            ));
+        }
+    }
+    let (b, _) = run()?;
+    for (i, (ra, rb)) in a.rows.iter().zip(&b.rows).enumerate() {
+        if ra.loss.to_bits() != rb.loss.to_bits()
+            || ra.clock.to_bits() != rb.clock.to_bits()
+            || ra.active_devices != rb.active_devices
+        {
+            return Err(format!("train replay diverged at mega-batch {i}"));
+        }
+    }
+    Ok(())
+}
+
+/// Request conservation + determinism on a steady-state serving replay.
+fn check_serve(cfg: &Config) -> std::result::Result<(), String> {
+    let data = corpus(cfg, cfg.serve.seed ^ 0x5E4E);
+    let run = || -> std::result::Result<crate::serve::ServeLog, String> {
+        let registry = SnapshotRegistry::new();
+        registry.publish(ModelState::init(&cfg.model, 5), Some(0), 0.0);
+        let opts = ReplayOptions {
+            pattern: cfg.serve.pattern,
+            duration: cfg.serve.duration,
+            follow_clock: false,
+            train_log: None,
+            name: "fuzz-serve".to_string(),
+            obs: ObsHandle::disabled(),
+        };
+        replay(cfg, data.clone(), &registry, &RefBackend, &opts)
+            .map_err(|e| format!("serve replay failed: {e:#}"))
+    };
+    let a = run()?;
+    if a.requests.is_empty() {
+        return Err("serve replay answered no requests".to_string());
+    }
+    let mut ids: Vec<u64> = a.requests.iter().map(|r| r.id).collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    if ids.len() != n {
+        return Err(format!("{} requests answered more than once", n - ids.len()));
+    }
+    if ids.last().map(|&i| i as usize + 1) != Some(n) {
+        return Err(format!(
+            "request ids not dense: {} answered, max id {}",
+            n,
+            ids.last().unwrap()
+        ));
+    }
+    let b = run()?;
+    if a.requests.len() != b.requests.len()
+        || a.latency_percentile_ms(95.0).to_bits() != b.latency_percentile_ms(95.0).to_bits()
+    {
+        return Err("serve replay diverged across identical seeds".to_string());
+    }
+    Ok(())
+}
+
+/// Lease conservation: `co_schedule` audits the ledger every tick and
+/// errors on violation, so a clean completion with audits recorded IS the
+/// property; request conservation on the co-served lane rides along.
+fn check_fleet(cfg: &Config) -> std::result::Result<(), String> {
+    let jobs: Vec<TenantJob> = (0..2)
+        .map(|i| {
+            let mut tenant_cfg = cfg.clone();
+            tenant_cfg.sgd.seed = cfg.sgd.seed + i as u64;
+            tenant_cfg.data.seed = cfg.data.seed + 7 * i as u64;
+            let gen = Generator::new(&tenant_cfg.model, &tenant_cfg.data);
+            let train = gen.generate(tenant_cfg.data.train_samples, 1 + i as u64);
+            let test = gen.generate(tenant_cfg.data.test_samples, 91 + i as u64);
+            TenantJob {
+                name: format!("tenant-{i}"),
+                weight: 1.0,
+                train: Arc::new(ShardedDataset::from_dataset(&train, 128)),
+                test: Arc::new(test),
+                cfg: tenant_cfg,
+            }
+        })
+        .collect();
+    let corpus = jobs[0].train.clone();
+    let out = co_schedule(cfg, &jobs, Some(corpus), Arc::new(SnapshotRegistry::new()), "fuzz-fleet")
+        .map_err(|e| format!("lease conservation violated (co_schedule failed): {e:#}"))?;
+    if out.conservation_checks == 0 {
+        return Err("co_schedule ran no conservation audits".to_string());
+    }
+    for (name, log) in &out.tenant_logs {
+        if log.rows.len() != cfg.sgd.num_mega_batches {
+            return Err(format!(
+                "{name} finished {} of {} mega-batches",
+                log.rows.len(),
+                cfg.sgd.num_mega_batches
+            ));
+        }
+    }
+    if let Some(serve) = &out.serve {
+        let mut ids: Vec<u64> = serve.requests.iter().map(|r| r.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != n || ids.last().map(|&i| i as usize + 1) != Some(n) {
+            return Err("co-served request ids not dense/unique".to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Cluster scale-out: the hierarchical run completes under link throttles
+/// and rack outages, converges to a finite accuracy, and is bit-
+/// deterministic across a replay.
+fn check_cluster(cfg: &Config) -> std::result::Result<(), String> {
+    let run = || {
+        crate::cluster::run_cluster(
+            cfg,
+            crate::cluster::ClusterPolicy { flat: false, adaptive: true },
+            "fuzz-cluster",
+        )
+        .map_err(|e| format!("cluster run failed: {e:#}"))
+    };
+    let a = run()?;
+    let acc = a.mean_final_accuracy();
+    if !acc.is_finite() {
+        return Err(format!("cluster mean final accuracy is {acc}"));
+    }
+    let b = run()?;
+    if acc.to_bits() != b.mean_final_accuracy().to_bits() || a.syncs != b.syncs {
+        return Err("cluster replay diverged across identical seeds".to_string());
+    }
+    Ok(())
+}
+
+/// Run every enabled invariant group against one case.
+pub fn check_case(case: &FuzzCase, subs: &Subsystems) -> std::result::Result<(), String> {
+    let cfg = case.config().map_err(|e| format!("{e:#}"))?;
+    if subs.data {
+        check_data(case, &cfg)?;
+    }
+    if subs.train {
+        check_train(&cfg)?;
+    }
+    if subs.serve {
+        check_serve(&cfg)?;
+    }
+    if subs.fleet {
+        check_fleet(&cfg)?;
+    }
+    if subs.cluster {
+        check_cluster(&cfg)?;
+    }
+    Ok(())
+}
+
+/// Replay one case seed under a subsystem mask — the regression-corpus
+/// entry point (`rust/tests/fuzz_corpus.rs`).
+pub fn replay_seed(case_seed: u64, subs: &Subsystems) -> std::result::Result<(), String> {
+    check_case(&gen_case(case_seed), subs)
+}
+
+/// Shrink candidates, largest reduction first: empty a whole event list,
+/// drop a trailing event, shorten the horizon. All candidates stay valid
+/// (events past the horizon are legal; ids are untouched).
+pub fn shrink(case: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out = Vec::new();
+    let lists: [fn(&mut FuzzCase) -> &mut Vec<ScenarioEvent>; 5] = [
+        |c| &mut c.elastic,
+        |c| &mut c.calibration,
+        |c| &mut c.serve,
+        |c| &mut c.fleet,
+        |c| &mut c.cluster,
+    ];
+    for get in lists {
+        let mut cleared = case.clone();
+        if get(&mut cleared).is_empty() {
+            continue;
+        }
+        get(&mut cleared).clear();
+        out.push(cleared);
+        let mut popped = case.clone();
+        get(&mut popped).pop();
+        out.push(popped);
+    }
+    if case.mega_batches > 3 {
+        let mut shorter = case.clone();
+        shorter.mega_batches -= 1;
+        out.push(shorter);
+    }
+    out
+}
+
+#[derive(Clone, Debug)]
+pub struct FuzzOptions {
+    pub seed: u64,
+    pub runs: usize,
+    pub subsystems: Subsystems,
+    pub verbose: bool,
+}
+
+/// A shrunk failing case. `case_seed` replays the original (unshrunk)
+/// failure via `--seed <case_seed> --runs 1`; `case` is the greedy-shrink
+/// minimum with `message` its invariant violation.
+#[derive(Clone, Debug)]
+pub struct Counterexample {
+    pub case_index: usize,
+    pub case_seed: u64,
+    pub message: String,
+    pub case: FuzzCase,
+}
+
+#[derive(Clone, Debug)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub runs: usize,
+    pub subsystems: Subsystems,
+    pub failures: Vec<Counterexample>,
+    /// Total invariant checks executed, shrink re-runs included.
+    pub cases_checked: usize,
+}
+
+/// The fuzz loop: generate → check → (on failure) greedy-shrink, exactly
+/// the `util::prop::check` discipline but over scenario space.
+pub fn run(opts: &FuzzOptions) -> FuzzReport {
+    let mut failures = Vec::new();
+    let mut cases_checked = 0usize;
+    for index in 0..opts.runs {
+        let cs = case_seed(opts.seed, index);
+        let case = gen_case(cs);
+        cases_checked += 1;
+        if opts.verbose {
+            println!("  case {index} (seed {cs:#x}): {}", case.describe());
+        }
+        let Err(mut message) = check_case(&case, &opts.subsystems) else {
+            continue;
+        };
+        let mut best = case;
+        'shrinking: loop {
+            for candidate in shrink(&best) {
+                cases_checked += 1;
+                if let Err(m) = check_case(&candidate, &opts.subsystems) {
+                    best = candidate;
+                    message = m;
+                    continue 'shrinking;
+                }
+            }
+            break;
+        }
+        failures.push(Counterexample { case_index: index, case_seed: cs, message, case: best });
+    }
+    FuzzReport {
+        seed: opts.seed,
+        runs: opts.runs,
+        subsystems: opts.subsystems,
+        failures,
+        cases_checked,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_seed_mix_decorrelates_and_is_stable() {
+        // Pinned values: the regression corpus stores case seeds, so the
+        // mix function must never change.
+        assert_eq!(case_seed(7, 0), 7, "index 0 is the identity — the replay contract");
+        assert_ne!(case_seed(7, 0), case_seed(7, 1));
+        assert_ne!(case_seed(7, 0), case_seed(8, 0));
+        // Replaying a reported case seed alone regenerates that case.
+        let cs = case_seed(0xABCD, 5);
+        assert_eq!(case_seed(cs, 0), cs);
+    }
+
+    #[test]
+    fn generated_cases_build_valid_configs() {
+        for i in 0..50 {
+            let case = gen_case(case_seed(0xF00D, i));
+            let cfg = case.config().expect("fuzz cases are valid by construction");
+            assert_eq!(cfg.devices.count, case.devices);
+            assert_eq!(cfg.cluster.servers, case.servers);
+            assert_eq!(cfg.elastic.events.len(), case.elastic.len());
+            // Canonical strings re-parse through the per-subsystem views.
+            cfg.elastic.parsed_events().unwrap();
+            cfg.calibration.parsed_events().unwrap();
+            cfg.cluster.parsed_events().unwrap();
+        }
+    }
+
+    #[test]
+    fn subsystem_masks_parse() {
+        assert_eq!(Subsystems::parse("all").unwrap(), Subsystems::all());
+        let s = Subsystems::parse("train,serve").unwrap();
+        assert!(s.train && s.serve && !s.fleet && !s.cluster && !s.data);
+        assert!(Subsystems::parse("elastic").unwrap().train, "alias");
+        assert!(Subsystems::parse("warp").is_err());
+        assert_eq!(Subsystems::all().label(), "train,data,serve,fleet,cluster");
+    }
+
+    #[test]
+    fn shrink_candidates_stay_valid_and_smaller() {
+        let case = gen_case(case_seed(7, 3));
+        for cand in shrink(&case) {
+            cand.config().expect("shrunk cases stay valid");
+            let size = |c: &FuzzCase| {
+                c.elastic.len()
+                    + c.calibration.len()
+                    + c.serve.len()
+                    + c.fleet.len()
+                    + c.cluster.len()
+                    + c.mega_batches
+            };
+            assert!(size(&cand) < size(&case));
+        }
+    }
+
+    #[test]
+    fn one_full_case_passes_every_invariant() {
+        // A smoke of the real check path (the 200-run sweep lives in the
+        // CI `experiment fuzz` smoke, not the unit suite).
+        let case = gen_case(case_seed(7, 0));
+        if let Err(msg) = check_case(&case, &Subsystems::all()) {
+            panic!("case 0 of the default seed violated an invariant: {msg}");
+        }
+    }
+}

@@ -1,0 +1,669 @@
+//! The unified scenario grammar: one tokenizer/parser behind every
+//! scripted event list in the config (`[elastic]`, `[calibration]`,
+//! `[serve]`, `[fleet]`, `[cluster]`, and the cross-subsystem
+//! `[scenario]` block).
+//!
+//! Every event line is whitespace-separated `key=value` tokens (plus the
+//! bare `up` / `down` rack-state words) anchored by `at_mb=N`:
+//!
+//! ```text
+//! event   := token+                         (one subsystem verb per event)
+//! token   := "at_mb=" int | verb | "up" | "down"
+//! verb    := pool | drift | link | rack
+//! pool    := ("remove"|"add"|"remove_id"|"add_id") "=" int
+//! drift   := "device=" int | "factor=" float | "ramp=" int
+//! link    := "link="   int | "factor=" float | "ramp=" int
+//! rack    := "server=" int                  (with a bare "up"/"down")
+//! ```
+//!
+//! A [`Mask`] selects which families a call site accepts, which is how the
+//! legacy per-subsystem parsers ([`ElasticEvent::parse`],
+//! [`DriftEvent::parse`](crate::tuning::DriftEvent::parse),
+//! [`ClusterEvent::parse`](crate::cluster::ClusterEvent::parse)) became
+//! thin views over this one tokenizer: each passes its family mask and the
+//! accepted language — including every rejection quirk the tests pin
+//! (duplicate keys, mixed verbs, `remove=0` no-ops, last-wins `ramp`) — is
+//! unchanged.
+//!
+//! Compound lines (`[scenario] events` only) chain clauses with `;`; later
+//! clauses inherit `at_mb` from the previous clause and may carry an
+//! explicit `target:` prefix. See [`route_line`].
+
+use std::fmt;
+
+use anyhow::{bail, Context};
+
+use crate::config::{ElasticEvent, ElasticOp};
+use crate::tuning::DriftEvent;
+use crate::Result;
+
+/// The four event families the grammar knows about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Pool churn: `remove= | add= | remove_id= | add_id=`.
+    Pool,
+    /// Per-device cost drift: `device= factor= [ramp=]`.
+    Drift,
+    /// Inter-server link throttle: `link= factor= [ramp=]`.
+    Link,
+    /// Whole-server outage / recovery: `server=` + bare `down` / `up`.
+    Rack,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Pool => "pool",
+            Family::Drift => "drift",
+            Family::Link => "link",
+            Family::Rack => "rack",
+        }
+    }
+}
+
+/// Bitmask of event families a call site accepts. Gates which verbs the
+/// tokenizer recognises, so unknown-key errors list exactly the accepting
+/// subsystem's vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mask(u8);
+
+impl Mask {
+    pub const POOL: Mask = Mask(1);
+    pub const DRIFT: Mask = Mask(2);
+    pub const LINK: Mask = Mask(4);
+    pub const RACK: Mask = Mask(8);
+    /// `[cluster] events`: link throttles and rack outages.
+    pub const CLUSTER: Mask = Mask(4 | 8);
+    /// The `[scenario]` block: every family.
+    pub const ALL: Mask = Mask(15);
+
+    pub fn union(self, other: Mask) -> Mask {
+        Mask(self.0 | other.0)
+    }
+
+    pub fn allows(self, family: Family) -> bool {
+        match family {
+            Family::Pool => self.0 & 1 != 0,
+            Family::Drift => self.0 & 2 != 0,
+            Family::Link => self.0 & 4 != 0,
+            Family::Rack => self.0 & 8 != 0,
+        }
+    }
+
+    /// The `key=` vocabulary this mask accepts, for error messages.
+    fn vocabulary(self) -> String {
+        let mut keys = vec!["at_mb"];
+        if self.allows(Family::Pool) {
+            keys.extend(["remove", "add", "remove_id", "add_id"]);
+        }
+        if self.allows(Family::Drift) {
+            keys.push("device");
+        }
+        if self.allows(Family::Link) {
+            keys.push("link");
+        }
+        if self.allows(Family::Drift) || self.allows(Family::Link) {
+            keys.extend(["factor", "ramp"]);
+        }
+        if self.allows(Family::Rack) {
+            keys.extend(["server", "down", "up"]);
+        }
+        keys.join("|")
+    }
+
+    /// What a line with no subsystem verb was missing, per family.
+    fn wanted(self) -> String {
+        let mut parts = Vec::new();
+        if self.allows(Family::Pool) {
+            parts.push("an operation (remove|add|remove_id|add_id)");
+        }
+        if self.allows(Family::Drift) {
+            parts.push("device=D");
+        }
+        if self.allows(Family::Link) && self.allows(Family::Rack) {
+            parts.push("link=L or server=S");
+        } else if self.allows(Family::Link) {
+            parts.push("link=L");
+        } else if self.allows(Family::Rack) {
+            parts.push("server=S");
+        }
+        parts.join(" or ")
+    }
+}
+
+/// One parsed scenario event, any family. `Pool` and `Drift`/`Link` wrap
+/// the legacy structs directly so the per-subsystem views are zero-cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    /// Pool churn (elastic / serve / fleet event lists).
+    Pool(ElasticEvent),
+    /// Per-device cost drift (`[calibration] events`).
+    Drift(DriftEvent),
+    /// Link throttle (`[cluster] events`; the `device` slot holds the
+    /// link id).
+    Link(DriftEvent),
+    /// Server outage / recovery (`[cluster] events`).
+    Rack { at_mb: usize, server: usize, up: bool },
+}
+
+impl ScenarioEvent {
+    pub fn at_mb(&self) -> usize {
+        match self {
+            ScenarioEvent::Pool(e) => e.at_mb,
+            ScenarioEvent::Drift(d) | ScenarioEvent::Link(d) => d.at_mb,
+            ScenarioEvent::Rack { at_mb, .. } => *at_mb,
+        }
+    }
+
+    pub fn family(&self) -> Family {
+        match self {
+            ScenarioEvent::Pool(_) => Family::Pool,
+            ScenarioEvent::Drift(_) => Family::Drift,
+            ScenarioEvent::Link(_) => Family::Link,
+            ScenarioEvent::Rack { .. } => Family::Rack,
+        }
+    }
+}
+
+impl fmt::Display for ScenarioEvent {
+    /// Canonical form: `at_mb` first, `ramp=` omitted when 0, rack state
+    /// last. Parsing the output reproduces the event exactly (the
+    /// round-trip property in `integration_scenario.rs`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "at_mb={}", self.at_mb())?;
+        match self {
+            ScenarioEvent::Pool(e) => match e.op {
+                ElasticOp::Remove(n) => write!(f, " remove={n}"),
+                ElasticOp::Add(n) => write!(f, " add={n}"),
+                ElasticOp::RemoveId(d) => write!(f, " remove_id={d}"),
+                ElasticOp::AddId(d) => write!(f, " add_id={d}"),
+            },
+            ScenarioEvent::Drift(d) => {
+                write!(f, " device={} factor={}", d.device, d.factor)?;
+                if d.ramp > 0 {
+                    write!(f, " ramp={}", d.ramp)?;
+                }
+                Ok(())
+            }
+            ScenarioEvent::Link(d) => {
+                write!(f, " link={} factor={}", d.device, d.factor)?;
+                if d.ramp > 0 {
+                    write!(f, " ramp={}", d.ramp)?;
+                }
+                Ok(())
+            }
+            ScenarioEvent::Rack { server, up, .. } => {
+                write!(f, " server={} {}", server, if *up { "up" } else { "down" })
+            }
+        }
+    }
+}
+
+/// Raw fields scanned off one clause, before family classification.
+#[derive(Default)]
+struct Fields {
+    at_mb: Option<usize>,
+    op: Option<ElasticOp>,
+    device: Option<usize>,
+    link: Option<usize>,
+    server: Option<usize>,
+    factor: Option<f64>,
+    ramp: usize,
+    state: Option<bool>,
+}
+
+/// Tokenize one clause under `mask`. Duplicate-key and unknown-key
+/// rejection happens here; `ramp=` is deliberately last-wins (the one
+/// duplicate the legacy drift grammar allowed, pinned by its tests).
+fn scan(s: &str, mask: Mask) -> Result<Fields> {
+    let mut f = Fields::default();
+    for tok in s.split_whitespace() {
+        if mask.allows(Family::Rack) && (tok == "down" || tok == "up") {
+            if f.state.replace(tok == "up").is_some() {
+                bail!("scenario event '{s}' has more than one up/down");
+            }
+            continue;
+        }
+        let (key, value) = tok
+            .split_once('=')
+            .with_context(|| format!("scenario event token '{tok}' is not key=value"))?;
+        match key {
+            "at_mb" => {
+                let n: usize = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+                if f.at_mb.replace(n).is_some() {
+                    bail!("scenario event '{s}' has more than one at_mb");
+                }
+            }
+            "remove" | "add" | "remove_id" | "add_id" if mask.allows(Family::Pool) => {
+                let n: usize = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+                let op = match key {
+                    "remove" => ElasticOp::Remove(n),
+                    "add" => ElasticOp::Add(n),
+                    "remove_id" => ElasticOp::RemoveId(n),
+                    _ => ElasticOp::AddId(n),
+                };
+                if f.op.replace(op).is_some() {
+                    bail!(
+                        "scenario event '{s}' has more than one operation; \
+                         use one event string per operation"
+                    );
+                }
+            }
+            "device" if mask.allows(Family::Drift) => {
+                let n: usize = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+                if f.device.replace(n).is_some() {
+                    bail!("scenario event '{s}' has more than one device");
+                }
+            }
+            "link" if mask.allows(Family::Link) => {
+                let n: usize = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+                if f.link.replace(n).is_some() {
+                    bail!("scenario event '{s}' has more than one link");
+                }
+            }
+            "server" if mask.allows(Family::Rack) => {
+                let n: usize = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+                if f.server.replace(n).is_some() {
+                    bail!("scenario event '{s}' has more than one server");
+                }
+            }
+            "factor" if mask.allows(Family::Drift) || mask.allows(Family::Link) => {
+                let x: f64 = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not a number"))?;
+                if f.factor.replace(x).is_some() {
+                    bail!("scenario event '{s}' has more than one factor");
+                }
+            }
+            "ramp" if mask.allows(Family::Drift) || mask.allows(Family::Link) => {
+                // Last-wins, matching the legacy drift grammar.
+                f.ramp = value
+                    .parse()
+                    .with_context(|| format!("scenario event value '{value}' is not an integer"))?;
+            }
+            other => {
+                bail!("unknown scenario event key '{other}' ({})", mask.vocabulary())
+            }
+        }
+    }
+    Ok(f)
+}
+
+/// Classify scanned fields into exactly one family, enforcing the
+/// cross-family exclusions the legacy parsers had (`up`/`down` only with
+/// `server=`, `factor`/`ramp` never with `server=`, one verb per event).
+fn classify(s: &str, mask: Mask, f: Fields, inherit_at: Option<usize>) -> Result<ScenarioEvent> {
+    let at_mb = match f.at_mb.or(inherit_at) {
+        Some(n) => n,
+        None => bail!("scenario event '{s}' missing at_mb=N"),
+    };
+    let mut families = Vec::new();
+    if f.op.is_some() {
+        families.push(Family::Pool);
+    }
+    if f.device.is_some() {
+        families.push(Family::Drift);
+    }
+    if f.link.is_some() {
+        families.push(Family::Link);
+    }
+    if f.server.is_some() {
+        families.push(Family::Rack);
+    }
+    if families.len() > 1 {
+        bail!(
+            "scenario event '{s}' mixes {} and {} verbs (one subsystem per clause; \
+             separate clauses with ';')",
+            families[0].name(),
+            families[1].name()
+        );
+    }
+    match families.first() {
+        Some(Family::Pool) => {
+            if f.factor.is_some() || f.ramp > 0 {
+                bail!("scenario event '{s}': factor/ramp apply to device= or link=, not pool ops");
+            }
+            if f.state.is_some() {
+                bail!("scenario event '{s}': up/down applies to server=, not pool ops");
+            }
+            let op = f.op.expect("classified as pool");
+            if let ElasticOp::Remove(0) | ElasticOp::Add(0) = op {
+                bail!("scenario event '{s}' is a no-op (count 0)");
+            }
+            Ok(ScenarioEvent::Pool(ElasticEvent { at_mb, op }))
+        }
+        Some(Family::Drift) | Some(Family::Link) => {
+            if f.state.is_some() {
+                bail!("scenario event '{s}': up/down applies to server=, not device=/link=");
+            }
+            let factor = f
+                .factor
+                .with_context(|| format!("scenario event '{s}' missing factor=F"))?;
+            if factor <= 0.0 {
+                bail!("scenario event '{s}': factor must be positive");
+            }
+            let drift = DriftEvent {
+                at_mb,
+                device: f.device.or(f.link).expect("classified as drift/link"),
+                factor,
+                ramp: f.ramp,
+            };
+            if f.device.is_some() {
+                Ok(ScenarioEvent::Drift(drift))
+            } else {
+                Ok(ScenarioEvent::Link(drift))
+            }
+        }
+        Some(Family::Rack) => {
+            if f.factor.is_some() || f.ramp > 0 {
+                bail!("scenario event '{s}': factor/ramp apply to link= or device=, not server=");
+            }
+            let up = f
+                .state
+                .with_context(|| format!("scenario event '{s}' missing down or up"))?;
+            Ok(ScenarioEvent::Rack { at_mb, server: f.server.expect("classified as rack"), up })
+        }
+        None => bail!("scenario event '{s}' missing {}", mask.wanted()),
+    }
+}
+
+/// Parse one single-clause event under `mask`. This is the function the
+/// legacy per-subsystem parsers delegate to.
+pub fn parse_event(s: &str, mask: Mask) -> Result<ScenarioEvent> {
+    classify(s, mask, scan(s, mask)?, None)
+}
+
+/// Parse a compound line: `;`-separated clauses under one mask. Later
+/// clauses inherit `at_mb` from the previous clause when they omit it.
+pub fn parse_line(line: &str, mask: Mask) -> Result<Vec<ScenarioEvent>> {
+    let mut out = Vec::new();
+    let mut inherit = None;
+    for clause in line.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            bail!("scenario line '{line}' has an empty clause");
+        }
+        let ev = classify(clause, mask, scan(clause, mask)?, inherit)?;
+        inherit = Some(ev.at_mb());
+        out.push(ev);
+    }
+    if out.is_empty() {
+        bail!("scenario line '{line}' is empty");
+    }
+    Ok(out)
+}
+
+/// Which per-subsystem event list a routed clause lands in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Elastic,
+    Calibration,
+    Serve,
+    Fleet,
+    Cluster,
+}
+
+impl Target {
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Elastic => "elastic",
+            Target::Calibration => "calibration",
+            Target::Serve => "serve",
+            Target::Fleet => "fleet",
+            Target::Cluster => "cluster",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Target> {
+        match s {
+            "elastic" => Some(Target::Elastic),
+            "calibration" => Some(Target::Calibration),
+            "serve" => Some(Target::Serve),
+            "fleet" => Some(Target::Fleet),
+            "cluster" => Some(Target::Cluster),
+            _ => None,
+        }
+    }
+
+    /// The families a target's event list accepts.
+    pub fn mask(self) -> Mask {
+        match self {
+            Target::Elastic | Target::Serve | Target::Fleet => Mask::POOL,
+            Target::Calibration => Mask::DRIFT,
+            Target::Cluster => Mask::CLUSTER,
+        }
+    }
+
+    /// Default routing for an untagged clause, by family. `Pool` has three
+    /// possible homes; untagged pool clauses go to the training pool
+    /// (`[elastic]`) — tag `serve:` / `fleet:` to route elsewhere.
+    fn for_family(family: Family) -> Target {
+        match family {
+            Family::Pool => Target::Elastic,
+            Family::Drift => Target::Calibration,
+            Family::Link | Family::Rack => Target::Cluster,
+        }
+    }
+}
+
+/// Parse one `[scenario] events` line: `;`-separated clauses, each
+/// optionally prefixed with `target:` (`serve: at_mb=3 add=1`). Untagged
+/// clauses route by family ([`Target::for_family`]); tagged clauses are
+/// parsed under the target's own mask so e.g. `cluster: remove=1` is
+/// rejected with that subsystem's vocabulary. Later clauses inherit
+/// `at_mb` from the previous clause:
+///
+/// ```text
+/// "at_mb=4 server=1 down; link=0 factor=6.0 ramp=2; serve: add=1"
+/// ```
+///
+/// downs server 1, throttles link 0, and grows the serving pool — all at
+/// window 4.
+pub fn route_line(line: &str) -> Result<Vec<(Target, ScenarioEvent)>> {
+    let mut out = Vec::new();
+    let mut inherit = None;
+    for clause in line.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            bail!("scenario line '{line}' has an empty clause");
+        }
+        let (tag, body) = match clause.split_once(':') {
+            Some((head, rest)) => match Target::parse(head.trim()) {
+                Some(t) => (Some(t), rest.trim()),
+                None => bail!(
+                    "scenario clause '{clause}': unknown target '{}' \
+                     (elastic|calibration|serve|fleet|cluster)",
+                    head.trim()
+                ),
+            },
+            None => (None, clause),
+        };
+        let mask = tag.map(Target::mask).unwrap_or(Mask::ALL);
+        let ev = classify(body, mask, scan(body, mask)?, inherit)?;
+        inherit = Some(ev.at_mb());
+        out.push((tag.unwrap_or_else(|| Target::for_family(ev.family())), ev));
+    }
+    if out.is_empty() {
+        bail!("scenario line '{line}' is empty");
+    }
+    Ok(out)
+}
+
+/// Parse a whole event list, wrapping any error with the offending array
+/// index and the full line — `section[i]: '<line>': <cause>`. Every
+/// `parsed_events()` goes through here (the ISSUE-10 error-reporting fix).
+pub fn parse_trace_indexed<T>(
+    section: &str,
+    events: &[String],
+    parse: impl Fn(&str) -> Result<T>,
+) -> Result<Vec<T>> {
+    events
+        .iter()
+        .enumerate()
+        .map(|(i, s)| parse(s).with_context(|| format!("{section}[{i}]: '{s}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(s: &str) -> Result<ScenarioEvent> {
+        parse_event(s, Mask::POOL)
+    }
+
+    #[test]
+    fn pool_events_parse_and_reject_like_legacy() {
+        assert_eq!(
+            pool("at_mb=20 remove=2").unwrap(),
+            ScenarioEvent::Pool(ElasticEvent { at_mb: 20, op: ElasticOp::Remove(2) })
+        );
+        assert_eq!(
+            pool("add_id=3 at_mb=5").unwrap(),
+            ScenarioEvent::Pool(ElasticEvent { at_mb: 5, op: ElasticOp::AddId(3) })
+        );
+        // Rejection quirks pinned by the legacy tests.
+        assert!(pool("at_mb=1").is_err(), "missing op");
+        assert!(pool("remove=1").is_err(), "missing at_mb");
+        assert!(pool("at_mb=1 remove=0").is_err(), "no-op count");
+        assert!(pool("at_mb=1 remove=1 add=1").is_err(), "two ops");
+        assert!(pool("at_mb=1 at_mb=2 add=1").is_err(), "two at_mb");
+        assert!(pool("at_mb=x add=1").is_err(), "non-integer");
+        assert!(pool("at_mb=1 explode=1").is_err(), "unknown key");
+        // remove_id=0 / add_id=0 name device 0 — not no-ops.
+        assert!(pool("at_mb=1 remove_id=0").is_ok());
+        // Other families' verbs are unknown keys under the pool mask.
+        assert!(pool("at_mb=1 device=0 factor=2.0").is_err());
+        assert!(pool("at_mb=1 server=0 down").is_err());
+    }
+
+    #[test]
+    fn drift_events_parse_and_reject_like_legacy() {
+        let ev = parse_event("at_mb=10 device=1 factor=1.8 ramp=2", Mask::DRIFT).unwrap();
+        assert_eq!(
+            ev,
+            ScenarioEvent::Drift(DriftEvent { at_mb: 10, device: 1, factor: 1.8, ramp: 2 })
+        );
+        // ramp defaults to 0 and is the one last-wins duplicate.
+        let ev = parse_event("at_mb=1 device=0 factor=2.0 ramp=1 ramp=3", Mask::DRIFT).unwrap();
+        assert_eq!(
+            ev,
+            ScenarioEvent::Drift(DriftEvent { at_mb: 1, device: 0, factor: 2.0, ramp: 3 })
+        );
+        assert!(parse_event("at_mb=1 device=0", Mask::DRIFT).is_err(), "missing factor");
+        assert!(parse_event("at_mb=1 factor=2.0", Mask::DRIFT).is_err(), "missing device");
+        assert!(parse_event("device=0 factor=2.0", Mask::DRIFT).is_err(), "missing at_mb");
+        assert!(parse_event("at_mb=1 device=0 factor=0.0", Mask::DRIFT).is_err(), "factor<=0");
+        assert!(
+            parse_event("at_mb=1 device=0 device=1 factor=2.0", Mask::DRIFT).is_err(),
+            "dup device"
+        );
+        assert!(parse_event("at_mb=1 device=0 factor=2.0 up", Mask::DRIFT).is_err(), "bare word");
+    }
+
+    #[test]
+    fn cluster_events_parse_and_reject_like_legacy() {
+        assert_eq!(
+            parse_event("at_mb=8 link=1 factor=6.0 ramp=2", Mask::CLUSTER).unwrap(),
+            ScenarioEvent::Link(DriftEvent { at_mb: 8, device: 1, factor: 6.0, ramp: 2 })
+        );
+        assert_eq!(
+            parse_event("at_mb=12 server=2 down", Mask::CLUSTER).unwrap(),
+            ScenarioEvent::Rack { at_mb: 12, server: 2, up: false }
+        );
+        assert_eq!(
+            parse_event("at_mb=20 up server=2", Mask::CLUSTER).unwrap(),
+            ScenarioEvent::Rack { at_mb: 20, server: 2, up: true }
+        );
+        assert!(parse_event("at_mb=1 link=0 server=1 down", Mask::CLUSTER).is_err(), "both");
+        assert!(parse_event("at_mb=1 down", Mask::CLUSTER).is_err(), "neither");
+        assert!(parse_event("at_mb=1 server=1", Mask::CLUSTER).is_err(), "missing state");
+        assert!(parse_event("at_mb=1 server=1 down up", Mask::CLUSTER).is_err(), "dup state");
+        assert!(parse_event("at_mb=1 link=0 factor=2.0 down", Mask::CLUSTER).is_err());
+        assert!(parse_event("at_mb=1 server=1 factor=2.0 down", Mask::CLUSTER).is_err());
+        assert!(parse_event("at_mb=1 link=0 factor=0.0", Mask::CLUSTER).is_err(), "factor<=0");
+    }
+
+    #[test]
+    fn unknown_key_errors_list_the_masks_vocabulary() {
+        let e = format!("{:#}", pool("at_mb=1 zap=1").unwrap_err());
+        assert!(e.contains("at_mb|remove|add|remove_id|add_id"), "{e}");
+        let e = format!("{:#}", parse_event("at_mb=1 zap=1", Mask::DRIFT).unwrap_err());
+        assert!(e.contains("at_mb|device|factor|ramp"), "{e}");
+        let e = format!("{:#}", parse_event("at_mb=1 zap=1", Mask::CLUSTER).unwrap_err());
+        assert!(e.contains("link|factor|ramp|server|down|up"), "{e}");
+    }
+
+    #[test]
+    fn compound_lines_inherit_at_mb() {
+        let evs = parse_line("at_mb=4 server=1 down; link=0 factor=6.0; at_mb=9 server=1 up", Mask::CLUSTER)
+            .unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].at_mb(), 4);
+        assert_eq!(evs[1].at_mb(), 4, "inherits from the previous clause");
+        assert_eq!(evs[2].at_mb(), 9);
+        assert!(parse_line("at_mb=1 server=0 down;", Mask::CLUSTER).is_err(), "empty clause");
+        assert!(parse_line("server=0 down", Mask::CLUSTER).is_err(), "first clause needs at_mb");
+    }
+
+    #[test]
+    fn route_line_routes_by_family_and_honors_tags() {
+        let routed =
+            route_line("at_mb=4 server=1 down; link=0 factor=6.0 ramp=2; serve: add=1; device=0 factor=2.0")
+                .unwrap();
+        let targets: Vec<Target> = routed.iter().map(|(t, _)| *t).collect();
+        assert_eq!(
+            targets,
+            vec![Target::Cluster, Target::Cluster, Target::Serve, Target::Calibration]
+        );
+        assert!(routed.iter().all(|(_, e)| e.at_mb() == 4));
+        // Untagged pool churn goes to the training pool.
+        let routed = route_line("at_mb=3 remove=1").unwrap();
+        assert_eq!(routed, vec![(
+            Target::Elastic,
+            ScenarioEvent::Pool(ElasticEvent { at_mb: 3, op: ElasticOp::Remove(1) })
+        )]);
+        // A tag restricts the clause to that subsystem's vocabulary.
+        assert!(route_line("cluster: at_mb=1 remove=1").is_err());
+        assert!(route_line("turbo: at_mb=1 remove=1").is_err(), "unknown target");
+    }
+
+    #[test]
+    fn display_is_canonical_and_reparses() {
+        for s in [
+            "at_mb=20 remove=2",
+            "at_mb=5 add_id=3",
+            "at_mb=10 device=1 factor=1.8 ramp=2",
+            "at_mb=8 link=1 factor=6.0",
+            "at_mb=12 server=2 down",
+        ] {
+            let ev = parse_event(s, Mask::ALL).unwrap();
+            let printed = ev.to_string();
+            assert_eq!(parse_event(&printed, Mask::ALL).unwrap(), ev, "{s} -> {printed}");
+        }
+        // Canonical form normalises key order and drops ramp=0.
+        let ev = parse_event("remove=2 at_mb=20", Mask::ALL).unwrap();
+        assert_eq!(ev.to_string(), "at_mb=20 remove=2");
+        let ev = parse_event("at_mb=3 device=0 factor=2.5 ramp=0", Mask::ALL).unwrap();
+        assert_eq!(ev.to_string(), "at_mb=3 device=0 factor=2.5");
+    }
+
+    #[test]
+    fn indexed_trace_errors_name_index_and_line() {
+        let events = vec!["at_mb=1 remove=1".to_string(), "at_mb=2 explode=9".to_string()];
+        let err = parse_trace_indexed("elastic.events", &events, |s| parse_event(s, Mask::POOL))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("elastic.events[1]: 'at_mb=2 explode=9'"), "{msg}");
+    }
+}

@@ -1,0 +1,22 @@
+//! The scenario plane: one grammar for every scripted event list, the
+//! `[scenario]` cross-subsystem block, and a seeded fuzzer that explores
+//! the timeline space the hand-written configs never will.
+//!
+//! * [`grammar`] — the unified tokenizer/parser ([`parse_event`],
+//!   [`route_line`]) behind `[elastic]`, `[calibration]`, `[serve]`,
+//!   `[fleet]`, `[cluster]`, and `[scenario]`; the legacy per-subsystem
+//!   parsers are thin views over it.
+//! * [`fuzz`] — random-but-valid scenario generation + the global
+//!   invariant checks (`experiment fuzz`), with greedy
+//!   minimal-counterexample shrinking in the style of
+//!   [`util::prop`](crate::util::prop).
+//!
+//! DESIGN.md §14 documents the grammar (BNF, verb table) and the fuzzer's
+//! invariant list.
+
+pub mod fuzz;
+pub mod grammar;
+
+pub use grammar::{
+    parse_event, parse_line, parse_trace_indexed, route_line, Family, Mask, ScenarioEvent, Target,
+};

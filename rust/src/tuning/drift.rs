@@ -18,7 +18,7 @@
 //! * Multipliers are validated positive; an absent trace yields 1.0
 //!   everywhere (no drift).
 
-use anyhow::{bail, Context};
+use anyhow::bail;
 
 use crate::Result;
 
@@ -39,64 +39,25 @@ pub struct DriftEvent {
 
 impl DriftEvent {
     /// Parse one event string. Every token is `key=value`; `at_mb`,
-    /// `device`, and `factor` are required, `ramp` defaults to 0.
+    /// `device`, and `factor` are required, `ramp` defaults to 0 (and is
+    /// the one last-wins duplicate the grammar allows).
+    ///
+    /// Thin view over the unified scenario grammar
+    /// ([`crate::scenario::parse_event`]) under the drift-family mask;
+    /// the accepted language is the legacy one, unchanged.
     pub fn parse(s: &str) -> Result<DriftEvent> {
-        let mut at_mb: Option<usize> = None;
-        let mut device: Option<usize> = None;
-        let mut factor: Option<f64> = None;
-        let mut ramp: usize = 0;
-        for tok in s.split_whitespace() {
-            let (key, value) = tok
-                .split_once('=')
-                .with_context(|| format!("drift event token '{tok}' is not key=value"))?;
-            match key {
-                "at_mb" => {
-                    let n = value
-                        .parse()
-                        .with_context(|| format!("drift event at_mb '{value}' is not an integer"))?;
-                    if at_mb.replace(n).is_some() {
-                        bail!("drift event '{s}' has more than one at_mb");
-                    }
-                }
-                "device" => {
-                    let n = value
-                        .parse()
-                        .with_context(|| format!("drift event device '{value}' is not an integer"))?;
-                    if device.replace(n).is_some() {
-                        bail!("drift event '{s}' has more than one device");
-                    }
-                }
-                "factor" => {
-                    let f: f64 = value
-                        .parse()
-                        .with_context(|| format!("drift event factor '{value}' is not a number"))?;
-                    if factor.replace(f).is_some() {
-                        bail!("drift event '{s}' has more than one factor");
-                    }
-                }
-                "ramp" => {
-                    ramp = value
-                        .parse()
-                        .with_context(|| format!("drift event ramp '{value}' is not an integer"))?;
-                }
-                other => bail!("unknown drift event key '{other}' (at_mb|device|factor|ramp)"),
-            }
+        match crate::scenario::parse_event(s, crate::scenario::Mask::DRIFT)? {
+            crate::scenario::ScenarioEvent::Drift(ev) => Ok(ev),
+            other => bail!("event '{s}' parsed as a non-drift event ({other:?})"),
         }
-        let at_mb = at_mb.with_context(|| format!("drift event '{s}' missing at_mb=N"))?;
-        let device = device.with_context(|| format!("drift event '{s}' missing device=D"))?;
-        let factor = factor.with_context(|| format!("drift event '{s}' missing factor=F"))?;
-        if factor <= 0.0 {
-            bail!("drift event '{s}' factor must be positive");
-        }
-        Ok(DriftEvent { at_mb, device, factor, ramp })
     }
 }
 
-/// Parse a whole `[calibration] events` trace, sorted by `at_mb` (stable
-/// for ties).
+/// Parse a whole drift trace, sorted by `at_mb` (stable for ties).
+/// Errors name the offending array index and full line.
 pub fn parse_trace(events: &[String]) -> Result<Vec<DriftEvent>> {
     let mut trace =
-        events.iter().map(|s| DriftEvent::parse(s)).collect::<Result<Vec<_>>>()?;
+        crate::scenario::parse_trace_indexed("events", events, DriftEvent::parse)?;
     trace.sort_by_key(|e| e.at_mb);
     Ok(trace)
 }

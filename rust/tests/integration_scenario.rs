@@ -1,0 +1,388 @@
+//! Integration tests for the unified scenario DSL (DESIGN.md §14): golden
+//! fixtures pinning every legacy event string shipped in configs/*.toml
+//! and the docs to its parse through the shared grammar, a Display/parse
+//! round-trip property over fuzzer-generated timelines, the indexed error
+//! messages of every `parsed_events()` path, and `-c` overrides driving
+//! `experiment fleet` / `experiment cluster` end to end.
+
+use std::path::Path;
+
+use heterosparse::cli::main_with_args;
+use heterosparse::cluster::ClusterEvent;
+use heterosparse::config::{Config, ElasticEvent, ElasticOp};
+use heterosparse::scenario::{self, fuzz, Mask, ScenarioEvent};
+use heterosparse::tuning::DriftEvent;
+use heterosparse::util::prop::{self, U64Range};
+
+fn s(args: &[&str]) -> Vec<String> {
+    args.iter().map(|a| a.to_string()).collect()
+}
+
+fn ov(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixtures: the legacy grammars, bit-identical through the shared
+// parser
+// ---------------------------------------------------------------------------
+
+/// Every elastic event string shipped in configs/ or the docs, with the
+/// exact struct the legacy parser produced for it. These are frozen: a
+/// grammar change that shifts any of them is a compatibility break.
+#[test]
+fn golden_elastic_fixtures() {
+    let cases: &[(&str, ElasticEvent)] = &[
+        // README "[elastic]" + --elastic examples.
+        ("at_mb=20 remove=2", ElasticEvent { at_mb: 20, op: ElasticOp::Remove(2) }),
+        ("at_mb=40 add=2", ElasticEvent { at_mb: 40, op: ElasticOp::Add(2) }),
+        // configs/e2e.toml [elastic].
+        ("at_mb=3 remove=2", ElasticEvent { at_mb: 3, op: ElasticOp::Remove(2) }),
+        ("at_mb=6 add=2", ElasticEvent { at_mb: 6, op: ElasticOp::Add(2) }),
+        // configs/e2e.toml [fleet] (same pool grammar).
+        ("at_mb=4 remove=1", ElasticEvent { at_mb: 4, op: ElasticOp::Remove(1) }),
+        ("at_mb=10 add=1", ElasticEvent { at_mb: 10, op: ElasticOp::Add(1) }),
+        // Targeted id forms (README/DESIGN examples).
+        ("at_mb=5 remove_id=0", ElasticEvent { at_mb: 5, op: ElasticOp::RemoveId(0) }),
+        ("at_mb=9 add_id=3", ElasticEvent { at_mb: 9, op: ElasticOp::AddId(3) }),
+    ];
+    for (text, want) in cases {
+        assert_eq!(ElasticEvent::parse(text).unwrap(), *want, "{text}");
+        // The shared parser agrees with the thin view.
+        assert_eq!(
+            scenario::parse_event(text, Mask::POOL).unwrap(),
+            ScenarioEvent::Pool(*want),
+            "{text}"
+        );
+    }
+    // Legacy rejection quirks stay rejected.
+    for bad in [
+        "at_mb=3",                      // no op
+        "remove=1",                     // no at_mb
+        "at_mb=3 remove=0",             // no-op count
+        "at_mb=3 add=0",
+        "at_mb=3 remove=1 add=1",       // two ops
+        "at_mb=3 at_mb=4 remove=1",     // dup at_mb
+        "at_mb=3 explode=1",            // unknown key
+        "at_mb=x remove=1",             // non-integer
+    ] {
+        assert!(ElasticEvent::parse(bad).is_err(), "{bad} must stay rejected");
+    }
+    // ... but remove_id=0 names a device, not a count: stays accepted.
+    assert!(ElasticEvent::parse("at_mb=1 remove_id=0").is_ok());
+}
+
+#[test]
+fn golden_drift_fixtures() {
+    let cases: &[(&str, DriftEvent)] = &[
+        // configs/default.toml [calibration] comment + README.
+        (
+            "at_mb=10 device=0 factor=1.8 ramp=2",
+            DriftEvent { at_mb: 10, device: 0, factor: 1.8, ramp: 2 },
+        ),
+        (
+            "at_mb=30 device=0 factor=1.0 ramp=2",
+            DriftEvent { at_mb: 30, device: 0, factor: 1.0, ramp: 2 },
+        ),
+        // DESIGN.md §10 (ramp omitted = step).
+        ("at_mb=5 device=2 factor=2.5", DriftEvent { at_mb: 5, device: 2, factor: 2.5, ramp: 0 }),
+    ];
+    for (text, want) in cases {
+        assert_eq!(DriftEvent::parse(text).unwrap(), *want, "{text}");
+        assert_eq!(
+            scenario::parse_event(text, Mask::DRIFT).unwrap(),
+            ScenarioEvent::Drift(*want),
+            "{text}"
+        );
+    }
+    for bad in [
+        "at_mb=1 device=0",             // missing factor
+        "at_mb=1 factor=2",             // missing device
+        "device=0 factor=2",            // missing at_mb
+        "at_mb=1 device=0 factor=0",    // factor must be > 0
+        "at_mb=1 device=0 device=1 factor=2",
+        "at_mb=1 device=0 factor=2 explode=1",
+    ] {
+        assert!(DriftEvent::parse(bad).is_err(), "{bad} must stay rejected");
+    }
+}
+
+#[test]
+fn golden_cluster_fixtures() {
+    let cases: &[(&str, ClusterEvent)] = &[
+        // configs/default.toml [cluster] comment, README, DESIGN.md §11.
+        (
+            "at_mb=8 link=1 factor=6.0 ramp=2",
+            ClusterEvent::Link(DriftEvent { at_mb: 8, device: 1, factor: 6.0, ramp: 2 }),
+        ),
+        ("at_mb=12 server=2 down", ClusterEvent::Rack { at_mb: 12, server: 2, up: false }),
+        ("at_mb=20 server=2 up", ClusterEvent::Rack { at_mb: 20, server: 2, up: true }),
+        // configs/e2e.toml [cluster].
+        (
+            "at_mb=3 link=1 factor=8.0",
+            ClusterEvent::Link(DriftEvent { at_mb: 3, device: 1, factor: 8.0, ramp: 0 }),
+        ),
+        (
+            "at_mb=6 link=1 factor=1.0",
+            ClusterEvent::Link(DriftEvent { at_mb: 6, device: 1, factor: 1.0, ramp: 0 }),
+        ),
+    ];
+    for (text, want) in cases {
+        assert_eq!(ClusterEvent::parse(text).unwrap(), *want, "{text}");
+    }
+    for bad in [
+        "at_mb=1 link=0",                   // missing factor
+        "at_mb=1 link=0 factor=0",          // factor must be > 0
+        "at_mb=1 link=0 factor=2 down",     // state on a link
+        "at_mb=1 server=0 factor=2 down",   // factor on a rack
+        "at_mb=1 link=0 server=1 factor=2", // both targets
+        "at_mb=1 down",                     // no target
+        "at_mb=1 server=0",                 // no state
+        "at_mb=1 server=0 down up",         // two states
+    ] {
+        assert!(ClusterEvent::parse(bad).is_err(), "{bad} must stay rejected");
+    }
+}
+
+/// The shipped e2e config parses through the shared grammar into exactly
+/// the structs the legacy parsers produced (the fixture above, but read
+/// from the real file so configs and code cannot drift apart).
+#[test]
+fn shipped_configs_parse_bit_identically() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = Config::load(&root.join("configs/e2e.toml"), &[]).unwrap();
+    assert_eq!(
+        cfg.elastic.parsed_events().unwrap(),
+        vec![
+            ElasticEvent { at_mb: 3, op: ElasticOp::Remove(2) },
+            ElasticEvent { at_mb: 6, op: ElasticOp::Add(2) },
+        ]
+    );
+    assert_eq!(
+        cfg.cluster.parsed_events().unwrap(),
+        vec![
+            ClusterEvent::Link(DriftEvent { at_mb: 3, device: 1, factor: 8.0, ramp: 0 }),
+            ClusterEvent::Link(DriftEvent { at_mb: 6, device: 1, factor: 1.0, ramp: 0 }),
+        ]
+    );
+    // Fleet churn shares the pool grammar; validate() parses it.
+    cfg.validate().unwrap();
+    assert_eq!(cfg.fleet.events.len(), 2);
+
+    // default.toml ships empty traces and must stay loadable.
+    let cfg = Config::load(&root.join("configs/default.toml"), &[]).unwrap();
+    assert!(cfg.elastic.parsed_events().unwrap().is_empty());
+    assert!(cfg.calibration.parsed_events().unwrap().is_empty());
+    assert!(cfg.cluster.parsed_events().unwrap().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip property: Display is a parseable canonical form
+// ---------------------------------------------------------------------------
+
+/// For any fuzzer-generated timeline, every event's `Display` form parses
+/// back to the same event under the full mask, and re-rendering is a
+/// fixed point (canonicalization converges in one step).
+#[test]
+fn display_parse_round_trip_property() {
+    prop::check(120, 0xD15B, U64Range { lo: 0, hi: u64::MAX - 1 }, |&seed| {
+        let case = fuzz::gen_case(seed);
+        let all = case
+            .elastic
+            .iter()
+            .chain(&case.calibration)
+            .chain(&case.serve)
+            .chain(&case.fleet)
+            .chain(&case.cluster);
+        for ev in all {
+            let text = ev.to_string();
+            let back = scenario::parse_event(&text, Mask::ALL)
+                .map_err(|e| format!("'{text}' failed to re-parse: {e:#}"))?;
+            if back != *ev {
+                return Err(format!("'{text}' round-tripped to {back:?}, not {ev:?}"));
+            }
+            if back.to_string() != text {
+                return Err(format!("'{text}' re-rendered as '{back}'"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Canonicalization of key order: the same event spelled with keys in any
+/// order renders to one canonical string.
+#[test]
+fn display_canonicalizes_key_order() {
+    let a = scenario::parse_event("factor=2.0 at_mb=7 device=1", Mask::DRIFT).unwrap();
+    let b = scenario::parse_event("at_mb=7 device=1 factor=2.0", Mask::DRIFT).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.to_string(), "at_mb=7 device=1 factor=2");
+    let r = scenario::parse_event("down server=3 at_mb=2", Mask::CLUSTER).unwrap();
+    assert_eq!(r.to_string(), "at_mb=2 server=3 down");
+}
+
+// ---------------------------------------------------------------------------
+// Indexed error messages on every parsed_events() path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parsed_events_errors_name_index_and_line() {
+    let mut cfg = Config::default();
+    cfg.elastic.events = vec!["at_mb=1 remove=1".to_string(), "garbage".to_string()];
+    let err = format!("{:#}", cfg.elastic.parsed_events().unwrap_err());
+    assert!(err.contains("elastic.events[1]: 'garbage'"), "{err}");
+
+    let mut cfg = Config::default();
+    cfg.calibration.events = vec!["at_mb=1 device=0 factor=0".to_string()];
+    let err = format!("{:#}", cfg.calibration.parsed_events().unwrap_err());
+    assert!(err.contains("calibration.events[0]: 'at_mb=1 device=0 factor=0'"), "{err}");
+    assert!(err.contains("factor must be positive"), "{err}");
+
+    let mut cfg = Config::default();
+    cfg.cluster.events =
+        vec!["at_mb=1 link=0 factor=2.0".to_string(), "at_mb=2 link=0".to_string()];
+    let err = format!("{:#}", cfg.cluster.parsed_events().unwrap_err());
+    assert!(err.contains("cluster.events[1]: 'at_mb=2 link=0'"), "{err}");
+
+    // serve/fleet traces are parsed by validate(); same labeling.
+    let mut cfg = Config::default();
+    cfg.serve.events = vec!["at_mb=1 nonsense".to_string()];
+    let err = format!("{:#}", cfg.validate().unwrap_err());
+    assert!(err.contains("serve.events[0]: 'at_mb=1 nonsense'"), "{err}");
+
+    let mut cfg = Config::default();
+    cfg.fleet.events = vec!["at_mb=1 add=1".to_string(), "at_mb=2 remove=0".to_string()];
+    let err = format!("{:#}", cfg.validate().unwrap_err());
+    assert!(err.contains("fleet.events[1]: 'at_mb=2 remove=0'"), "{err}");
+
+    // Unknown keys list the family vocabulary so the fix is in the message.
+    let mut cfg = Config::default();
+    cfg.elastic.events = vec!["at_mb=1 explode=1".to_string()];
+    let err = format!("{:#}", cfg.elastic.parsed_events().unwrap_err());
+    assert!(err.contains("at_mb|remove|add|remove_id|add_id"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Compound [scenario] lines route across subsystems
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_lines_route_and_inherit_at_mb() {
+    let cfg = Config::from_overrides(&ov(&[(
+        "scenario.events",
+        r#"["at_mb=4 server=1 down; link=0 factor=6.0; serve: add=1", "at_mb=9 device=0 factor=1.5 ramp=2"]"#,
+    )]))
+    .unwrap();
+    assert_eq!(
+        cfg.cluster.events,
+        vec!["at_mb=4 server=1 down".to_string(), "at_mb=4 link=0 factor=6".to_string()]
+    );
+    assert_eq!(cfg.serve.events, vec!["at_mb=4 add=1".to_string()]);
+    assert_eq!(cfg.calibration.events, vec!["at_mb=9 device=0 factor=1.5 ramp=2".to_string()]);
+    // Routed lines land in canonical form and stay parseable downstream.
+    assert_eq!(cfg.cluster.parsed_events().unwrap().len(), 2);
+    assert_eq!(cfg.calibration.parsed_events().unwrap().len(), 1);
+
+    // A bad clause names the line index and the full line.
+    let err = format!(
+        "{:#}",
+        Config::from_overrides(&ov(&[(
+            "scenario.events",
+            r#"["at_mb=1 remove=1", "at_mb=2 bogus=1"]"#,
+        )]))
+        .unwrap_err()
+    );
+    assert!(err.contains("scenario.events[1]: 'at_mb=2 bogus=1'"), "{err}");
+
+    // Routed events flow into validation: a serve clause naming a device
+    // outside the roster fails at load time like a hand-written one.
+    let err = format!(
+        "{:#}",
+        Config::from_overrides(&ov(&[
+            ("devices.count", "2"),
+            ("devices.speed_factors", "[1.0, 1.1]"),
+            ("scenario.events", r#"["serve: at_mb=1 remove_id=9"]"#),
+        ]))
+        .unwrap_err()
+    );
+    assert!(err.contains("serve.events[0]"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// -c overrides drive the experiments end to end
+// ---------------------------------------------------------------------------
+
+/// Shared micro-scale `-c` arguments: every subsystem knob that matters
+/// for test runtime, all through the override path under test.
+fn micro_overrides() -> Vec<&'static str> {
+    vec![
+        "-c", "model.features=256",
+        "-c", "model.hidden=16",
+        "-c", "model.classes=64",
+        "-c", "model.max_nnz=12",
+        "-c", "model.max_labels=4",
+        "-c", "data.train_samples=1200",
+        "-c", "data.test_samples=240",
+        "-c", "sgd.b_min=8",
+        "-c", "sgd.b_max=32",
+        "-c", "sgd.beta=4",
+        "-c", "sgd.mega_batches=6",
+        "-c", "sgd.num_mega_batches=3",
+        "-c", "sgd.initial_batch=32",
+        "-c", "devices.count=2",
+        "-c", "devices.speed_factors=[1.0, 1.1]",
+        "-c", "devices.jitter=0.0",
+        "-c", "serve.rate=1000",
+        "-c", "serve.duration=0.3",
+    ]
+}
+
+#[test]
+fn dashc_drives_experiment_fleet_end_to_end() {
+    let mut args = vec!["experiment", "fleet"];
+    args.extend(micro_overrides());
+    main_with_args(&s(&args)).unwrap();
+}
+
+#[test]
+fn dashc_drives_experiment_cluster_end_to_end() {
+    let mut args = vec!["experiment", "cluster"];
+    args.extend(micro_overrides());
+    args.extend([
+        "-c", "cluster.servers=2",
+        "-c", "cluster.sync_every=2",
+        "-c", "cluster.link_latency_s=1e-3",
+        "-c", "cluster.link_gbytes_per_sec=0.05",
+        // The fabric scenario itself arrives via the compound DSL.
+        "-c", r#"scenario.events=["at_mb=1 link=1 factor=4.0; at_mb=2 server=1 down"]"#,
+    ]);
+    main_with_args(&s(&args)).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Fuzzer end-to-end (tiny run; the corpus test replays committed seeds)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn experiment_fuzz_acceptance_smoke() {
+    // The acceptance criterion runs 200 cases in CI; keep the in-test run
+    // small but real, spanning every subsystem.
+    main_with_args(&s(&["experiment", "fuzz", "--seed", "7", "--runs", "2"])).unwrap();
+}
+
+/// The fuzzer's generator and the prop harness shrink the same way: a
+/// seeded failing property over generated cases reports a shrunk case.
+#[test]
+fn fuzz_shrink_produces_valid_smaller_cases() {
+    let case = fuzz::gen_case(fuzz::case_seed(7, 3));
+    let total = |c: &fuzz::FuzzCase| {
+        c.elastic.len() + c.calibration.len() + c.serve.len() + c.fleet.len() + c.cluster.len()
+    };
+    for cand in fuzz::shrink(&case) {
+        assert!(
+            total(&cand) < total(&case) || cand.mega_batches < case.mega_batches,
+            "shrink candidates must strictly shrink"
+        );
+        cand.config().expect("shrunk cases stay valid configs");
+    }
+}
